@@ -1,0 +1,84 @@
+//! Bench: end-to-end collective cost sweeps (the paper's Figures 1–3 in
+//! condensed form) plus simulator-engine wall-clock throughput.
+//!
+//! `cargo bench --bench bench_collectives`
+
+use nblock_bcast::bench_support::{fmt_bytes, time_once};
+use nblock_bcast::collectives::{
+    allgather_block_count, allgatherv_circulant_cost, allgatherv_ring, bcast_binomial,
+    bcast_block_count, bcast_circulant, bcast_scatter_allgather, AllgatherInput,
+};
+use nblock_bcast::sched::ceil_log2;
+use nblock_bcast::simulator::{CostModel, Engine};
+
+fn main() {
+    // --- Figure 1 condensed: broadcast at p = 1152, hierarchical model ---
+    let p = 36 * 32u64;
+    let cost = CostModel::cluster_36(32);
+    let q = ceil_log2(p);
+    println!("broadcast p = {p} (36x32), hierarchical cost model:");
+    println!(
+        "{:>10} {:>6} {:>13} {:>13} {:>13} {:>9}",
+        "m", "n*", "binomial s", "vdG s", "circulant s", "wall ms"
+    );
+    for m in [1u64 << 16, 1 << 20, 1 << 24, 1 << 28] {
+        let n = bcast_block_count(m, q, 70.0);
+        let mut e1 = Engine::new(p, cost);
+        let t_bin = bcast_binomial(&mut e1, 0, m, None).unwrap().time_s;
+        let mut e2 = Engine::new(p, cost);
+        let t_vdg = bcast_scatter_allgather(&mut e2, 0, m, None).unwrap().time_s;
+        let mut e3 = Engine::new(p, cost);
+        let (out, wall) = time_once(|| bcast_circulant(&mut e3, 0, n, m, None).unwrap());
+        println!(
+            "{:>10} {:>6} {:>13.6} {:>13.6} {:>13.6} {:>9.1}",
+            fmt_bytes(m),
+            n,
+            t_bin,
+            t_vdg,
+            out.time_s,
+            wall * 1e3
+        );
+    }
+
+    // --- Figure 2 condensed: degenerate allgatherv blowup ----------------
+    println!("\nallgatherv p = {p}, degenerate problem (one rank has all data):");
+    println!(
+        "{:>10} {:>6} {:>13} {:>13} {:>8}",
+        "m", "n*", "ring s", "circulant s", "ratio"
+    );
+    for m in [1u64 << 20, 1 << 24, 1 << 26] {
+        let counts: Vec<u64> = (0..p).map(|i| if i == 0 { m } else { 0 }).collect();
+        let n = allgather_block_count(m, q, 40.0);
+        let input = AllgatherInput {
+            counts: &counts,
+            data: None,
+        };
+        let mut e1 = Engine::new(p, cost);
+        let ring = allgatherv_ring(&mut e1, &input).unwrap().time_s;
+        let mut e2 = Engine::new(p, cost);
+        let circ = allgatherv_circulant_cost(&mut e2, n, &counts).unwrap().time_s;
+        println!(
+            "{:>10} {:>6} {:>13.6} {:>13.6} {:>8.1}",
+            fmt_bytes(m),
+            n,
+            ring,
+            circ,
+            ring / circ
+        );
+    }
+
+    // --- Simulator engine throughput -------------------------------------
+    println!("\nsimulator engine: verified data-mode broadcast wall-clock:");
+    for (p, m, n) in [(64u64, 1u64 << 20, 64usize), (256, 1 << 20, 64), (1024, 1 << 20, 64)] {
+        let data: Vec<u8> = (0..m).map(|i| (i % 251) as u8).collect();
+        let mut e = Engine::new(p, CostModel::flat_default());
+        let (_, wall) = time_once(|| bcast_circulant(&mut e, 0, n, m, Some(&data)).unwrap());
+        let moved = (p - 1) * m;
+        println!(
+            "  p={p:>5} m={:>8}: {:.1} ms wall, {:.1} MiB/s simulated-payload throughput",
+            fmt_bytes(m),
+            wall * 1e3,
+            moved as f64 / wall / (1 << 20) as f64
+        );
+    }
+}

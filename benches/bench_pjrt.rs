@@ -1,0 +1,70 @@
+//! Bench: the PJRT payload hot path — per-call latency of the pack /
+//! merge / checksum executables and the end-to-end coordinator run.
+//!
+//! Skips gracefully when `artifacts/` is absent (run `make artifacts`).
+//!
+//! `cargo bench --bench bench_pjrt`
+
+use nblock_bcast::bench_support::{fmt_bytes, fmt_time, time_reps};
+use nblock_bcast::coordinator::{Coordinator, E2eConfig};
+use nblock_bcast::runtime::{default_artifact_dir, Runtime};
+use nblock_bcast::simulator::CostModel;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let set = match nblock_bcast::runtime::ArtifactSet::discover(&dir) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping PJRT bench: {e}");
+            return Ok(());
+        }
+    };
+    let rt = Runtime::cpu()?;
+    let (n, b, q) = (set.n, set.b, set.q);
+    println!("PJRT artifact hot-path latency (n={n}, B={b}):");
+
+    let step = rt.load_hlo_text(&set.path("bcast_step")?)?;
+    let gather = rt.load_hlo_text(&set.path("gather")?)?;
+    let checksum = rt.load_hlo_text(&set.path("checksum")?)?;
+
+    let buf = xla::Literal::vec1(&vec![1f32; n * b]).reshape(&[n as i64, b as i64])?;
+    let row = xla::Literal::vec1(&vec![2f32; b]);
+    let mut idx = vec![-1i32; q];
+    idx[0] = 1;
+    let idxv = xla::Literal::vec1(&idx);
+
+    let t = time_reps(5, 50, || {
+        gather.run(&[buf.clone(), idxv.clone()]).unwrap()
+    });
+    println!("  gather (pack one block)   : {} median", fmt_time(t.median_s));
+    let t = time_reps(5, 50, || {
+        step.run(&[
+            buf.clone(),
+            row.clone(),
+            xla::Literal::scalar(2i32),
+            xla::Literal::scalar(-1i32),
+        ])
+        .unwrap()
+    });
+    println!("  bcast_step (merge block)  : {} median", fmt_time(t.median_s));
+    let t = time_reps(5, 50, || checksum.run(&[buf.clone()]).unwrap());
+    println!("  checksum ({} blocks)       : {} median", n, fmt_time(t.median_s));
+
+    println!("\ncoordinator end-to-end (verified):");
+    let coord = Coordinator::new(&dir)?;
+    for p in [8u64, 16, 32] {
+        let rep = coord.run_bcast(&E2eConfig {
+            p,
+            root: 0,
+            cost: CostModel::flat_default(),
+        })?;
+        println!(
+            "  p={p:>3}: {} rounds, wall {}, {} PJRT calls, goodput {}/s",
+            rep.rounds,
+            fmt_time(rep.wall_s),
+            rep.pjrt_calls,
+            fmt_bytes(rep.goodput_bps as u64)
+        );
+    }
+    Ok(())
+}

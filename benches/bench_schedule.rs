@@ -1,0 +1,87 @@
+//! Bench: schedule construction (the paper's Table 3 quantity).
+//!
+//! `cargo bench --bench bench_schedule` — compares the new O(log p)
+//! construction against the old O(log²p)/O(log³p) baselines and reports
+//! per-processor times, plus the allocation-free `*_into` fast path vs the
+//! allocating convenience API.
+
+use nblock_bcast::bench_support::{time_reps, Timing};
+use nblock_bcast::sched::baseline::{
+    recv_schedule_old, send_schedule_old, send_schedule_old_improved,
+};
+use nblock_bcast::sched::{
+    recv_schedule, recv_schedule_into_fast, send_schedule, send_schedule_into, Scratch, Skips,
+};
+
+fn report(name: &str, per_proc_divisor: f64, t: Timing) {
+    println!(
+        "{name:<44} median {:>10.1} ns/proc   (min {:>10.1})",
+        t.median_s / per_proc_divisor * 1e9,
+        t.min_s / per_proc_divisor * 1e9
+    );
+}
+
+fn main() {
+    for p in [1_000u64, 17_000, 131_000, 1_048_575, 2_097_151] {
+        let skips = Skips::new(p);
+        let q = skips.q();
+        println!("— p = {p} (q = {q}) —");
+        let window = 2048u64.min(p);
+        let step = (p / window).max(1) as usize;
+        let ranks: Vec<u64> = (0..p).step_by(step).take(window as usize).collect();
+        let nr = ranks.len() as f64;
+
+        let mut scratch = Scratch::new();
+        let (mut recv, mut send, mut tmp) = (vec![0i64; q], vec![0i64; q], vec![0i64; q]);
+
+        report(
+            "new recv+send (zero-alloc _into)",
+            nr,
+            time_reps(2, 7, || {
+                for &r in &ranks {
+                    recv_schedule_into_fast(&skips, r, &mut scratch, &mut recv);
+                    send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut send);
+                    std::hint::black_box((&recv, &send));
+                }
+            }),
+        );
+        report(
+            "new recv+send (allocating API)",
+            nr,
+            time_reps(2, 7, || {
+                for &r in &ranks {
+                    std::hint::black_box(recv_schedule(&skips, r));
+                    std::hint::black_box(send_schedule(&skips, r));
+                }
+            }),
+        );
+        report(
+            "old recv O(log^2 p)",
+            nr,
+            time_reps(1, 5, || {
+                for &r in &ranks {
+                    std::hint::black_box(recv_schedule_old(&skips, r));
+                }
+            }),
+        );
+        report(
+            "old send O(log^3 p)",
+            nr,
+            time_reps(1, 3, || {
+                for &r in &ranks {
+                    std::hint::black_box(send_schedule_old(&skips, r));
+                }
+            }),
+        );
+        report(
+            "old send improved O(log^2 p)",
+            nr,
+            time_reps(1, 5, || {
+                for &r in &ranks {
+                    std::hint::black_box(send_schedule_old_improved(&skips, r));
+                }
+            }),
+        );
+        println!();
+    }
+}

@@ -1,0 +1,90 @@
+//! The workload the paper's introduction motivates: irregular allgatherv
+//! (`MPI_Allgatherv`) where per-rank contributions differ wildly —
+//! including the degenerate case that makes classical algorithms collapse.
+//!
+//! Part 1 runs data-carrying, fully verified Algorithm-2 collectives at
+//! moderate scale. Part 2 sweeps the three problem types of Figure 2 at
+//! p = 1152 under the hierarchical cost model and prints the
+//! native-vs-new comparison.
+//!
+//! ```sh
+//! cargo run --release --example allgatherv_irregular
+//! ```
+
+use nblock_bcast::bench_support::{fmt_bytes, fmt_time};
+use nblock_bcast::collectives::{
+    allgather_block_count, allgatherv_circulant, allgatherv_circulant_cost, allgatherv_ring,
+    AllgatherInput,
+};
+use nblock_bcast::sched::ceil_log2;
+use nblock_bcast::simulator::{CostModel, Engine};
+
+fn main() -> anyhow::Result<()> {
+    // ---- Part 1: verified irregular allgatherv with real payloads -------
+    let p = 48u64;
+    let counts: Vec<u64> = (0..p).map(|i| (i % 5) * 1000 + i).collect(); // jagged
+    let data: Vec<Vec<u8>> = counts
+        .iter()
+        .enumerate()
+        .map(|(j, &c)| (0..c).map(|i| ((i * 7 + j as u64) % 251) as u8).collect())
+        .collect();
+    let input = AllgatherInput {
+        counts: &counts,
+        data: Some(&data),
+    };
+    let total: u64 = counts.iter().sum();
+    println!(
+        "verified irregular allgatherv: p = {p}, total {} (contributions {}..{})",
+        fmt_bytes(total),
+        counts.iter().min().unwrap(),
+        counts.iter().max().unwrap()
+    );
+    for n in [1usize, 4, 16] {
+        let mut eng = Engine::new(p, CostModel::flat_default());
+        let out = allgatherv_circulant(&mut eng, n, &input)?;
+        println!(
+            "  Algorithm 2, n = {n:>2}: {} rounds, {} simulated, {} on the wire — all buffers verified",
+            out.rounds,
+            fmt_time(out.time_s),
+            fmt_bytes(out.bytes_on_wire)
+        );
+    }
+
+    // ---- Part 2: Figure-2 style comparison at full cluster scale --------
+    let p = 36 * 32u64;
+    let cost = CostModel::cluster_36(32);
+    let q = ceil_log2(p);
+    println!("\nnative (ring) vs new (Algorithm 2) at p = 36x32 = {p}:");
+    println!(
+        "{:>12} {:>10} {:>6} {:>12} {:>12} {:>8}",
+        "problem", "m", "n*", "ring", "circulant", "ratio"
+    );
+    let m = 1u64 << 24; // 16 MiB total
+    for (kind, counts) in [
+        ("regular", (0..p).map(|_| m / p).collect::<Vec<u64>>()),
+        ("irregular", (0..p).map(|i| (i % 3) * (m / p)).collect()),
+        ("degenerate", (0..p).map(|i| if i == 0 { m } else { 0 }).collect()),
+    ] {
+        let n = allgather_block_count(m, q, 40.0);
+        let input = AllgatherInput {
+            counts: &counts,
+            data: None,
+        };
+        let mut e1 = Engine::new(p, cost);
+        let ring = allgatherv_ring(&mut e1, &input)?.time_s;
+        let mut e2 = Engine::new(p, cost);
+        let circ = allgatherv_circulant_cost(&mut e2, n, &counts)?.time_s;
+        println!(
+            "{:>12} {:>10} {:>6} {:>12} {:>12} {:>8.1}",
+            kind,
+            fmt_bytes(m),
+            n,
+            fmt_time(ring),
+            fmt_time(circ),
+            ring / circ
+        );
+    }
+    println!("\nthe degenerate row is Figure 2's headline effect: the classical ring");
+    println!("degrades by a factor ≈ p while Algorithm 2 is problem-type oblivious.");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! A 32-rank simulated cluster broadcasts an 8-block × 4096-f32 payload
+//! (the shape the AOT artifacts were specialized for). Every per-round
+//! payload operation — packing the scheduled block, merging the received
+//! block — executes through the PJRT CPU client running HLO that was
+//! authored in JAX/Pallas and compiled by `make artifacts`. Python is not
+//! running anywhere; the artifacts are loaded from `artifacts/`.
+//!
+//! Reports rounds, wall/simulated time, per-round latency and goodput, and
+//! verifies delivery two ways (block checksums through the checksum
+//! artifact; byte-exact buffer comparison). The headline numbers are
+//! recorded in EXPERIMENTS.md §E8.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example bcast_e2e
+//! ```
+
+use nblock_bcast::bench_support::{fmt_bytes, fmt_time};
+use nblock_bcast::coordinator::{Coordinator, E2eConfig};
+use nblock_bcast::runtime::default_artifact_dir;
+use nblock_bcast::simulator::CostModel;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let coord = Coordinator::new(&dir)?;
+    let (n, b) = coord.artifact_shape();
+    println!(
+        "three-layer e2e broadcast — PJRT platform: {}, artifacts: {} (n={n}, B={b})",
+        coord.platform(),
+        dir.display()
+    );
+    println!("{:>4} {:>6} {:>8} {:>12} {:>12} {:>12} {:>14}", "p", "rounds", "PJRT", "wall", "rnd latency", "sim time", "goodput");
+    for p in [4u64, 8, 16, 32] {
+        let report = coord.run_bcast(&E2eConfig {
+            p,
+            root: p / 3,
+            cost: CostModel::cluster_36(4),
+        })?;
+        println!(
+            "{:>4} {:>6} {:>8} {:>12} {:>12} {:>12} {:>12}/s",
+            p,
+            report.rounds,
+            report.pjrt_calls,
+            fmt_time(report.wall_s),
+            fmt_time(report.round_latency_s),
+            fmt_time(report.sim_s),
+            fmt_bytes(report.goodput_bps as u64)
+        );
+    }
+    println!("\nall runs verified: checksum artifact + byte-exact buffers");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Schedule-construction scaling study: measure per-processor schedule
+//! time as `p` grows and check the `O(log p)` claim empirically — the
+//! microbenchmark behind Table 3, shown per decade instead of per range.
+//!
+//! Also demonstrates the instrumentation of the paper's §3 empirical
+//! verification: DFS recursive-call counts (Prop 1) and send-schedule
+//! violations (Prop 3) across the sweep.
+//!
+//! ```sh
+//! cargo run --release --example schedule_scaling
+//! ```
+
+use nblock_bcast::bench_support::time_reps;
+use nblock_bcast::sched::{
+    recv_schedule_into, send_schedule_into, Scratch, Skips,
+};
+
+fn main() {
+    println!(
+        "{:>10} {:>4} {:>14} {:>16} {:>12} {:>10}",
+        "p", "q", "ns/schedule", "ns/(sched·q)", "max DFS", "max viol"
+    );
+    let mut prev = 0.0f64;
+    for exp in [6u32, 8, 10, 12, 14, 16, 18, 20] {
+        let p = (1u64 << exp) + (1 << (exp - 1)) + 3; // non-power-of-two
+        let skips = Skips::new(p);
+        let q = skips.q();
+        let mut scratch = Scratch::new();
+        let mut recv = vec![0i64; q];
+        let mut send = vec![0i64; q];
+        let mut tmp = vec![0i64; q];
+        // Time both schedules across a window of ranks.
+        let window = 4096u64.min(p);
+        let t = time_reps(1, 5, || {
+            for r in (0..p).step_by((p / window).max(1) as usize).take(window as usize) {
+                recv_schedule_into(&skips, r, &mut scratch, &mut recv);
+                send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut send);
+                std::hint::black_box((&recv, &send));
+            }
+        });
+        let per = t.median_s / window as f64 * 1e9;
+        // Bound instrumentation across the same window.
+        let (mut max_calls, mut max_viol) = (0u64, 0u64);
+        for r in (0..p).step_by((p / window).max(1) as usize).take(window as usize) {
+            let (_, rs) = recv_schedule_into(&skips, r, &mut scratch, &mut recv);
+            let (_, ss) = send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut send);
+            max_calls = max_calls.max(rs.recursive_calls);
+            max_viol = max_viol.max(ss.total());
+        }
+        println!(
+            "{:>10} {:>4} {:>14.1} {:>16.2} {:>9}/{:<3} {:>8}/4",
+            p,
+            q,
+            per,
+            per / q as f64,
+            max_calls,
+            2 * q,
+            max_viol
+        );
+        if prev > 0.0 {
+            // O(log p): per-schedule time should grow ~linearly in q, i.e.
+            // far slower than p (which grows 4x per row).
+            assert!(
+                per < prev * 3.0,
+                "super-logarithmic growth detected: {per} vs {prev}"
+            );
+        }
+        prev = per;
+    }
+    println!("\nper-schedule cost grows ~linearly in q = ⌈log₂p⌉ while p grows 4x per row — O(log p) confirmed.");
+}

@@ -1,0 +1,88 @@
+"""AOT pipeline: lower the L2 functions to HLO text artifacts.
+
+HLO *text* (not serialized ``HloModuleProto``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (behind the rust ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Artifacts (written to ``artifacts/``):
+
+* ``bcast_step_n{n}_b{b}.hlo.txt``   — one Algorithm-1 round
+  (buffer, incoming, recv_idx, send_idx) → (new_buffer, outgoing)
+* ``checksum_n{n}_b{b}.hlo.txt``     — per-block checksums
+* ``gather_n{n}_b{b}_q{q}.hlo.txt``  — Algorithm-2 pack
+* ``manifest.txt``                   — shapes, one artifact per line
+
+Shapes are compile-time constants (XLA AOT is shape-specialized); the rust
+runtime picks the artifact matching its configuration. Usage::
+
+    python -m compile.aot --out ../artifacts [--n 8] [--b 4096] [--q 5]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *args) -> str:
+    """Lower a jittable function to XLA HLO text (tupled results)."""
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifacts(out_dir: str, n: int, b: int, q: int) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    f32 = jnp.float32
+    i32 = jnp.int32
+    buf = jax.ShapeDtypeStruct((n, b), f32)
+    row = jax.ShapeDtypeStruct((b,), f32)
+    scalar_idx = jax.ShapeDtypeStruct((), i32)
+    qidx = jax.ShapeDtypeStruct((q,), i32)
+
+    artifacts = []
+
+    def emit(name, text):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(name)
+        print(f"wrote {name} ({len(text)} chars)")
+
+    emit(
+        f"bcast_step_n{n}_b{b}.hlo.txt",
+        to_hlo_text(model.bcast_round, buf, row, scalar_idx, scalar_idx),
+    )
+    emit(f"checksum_n{n}_b{b}.hlo.txt", to_hlo_text(model.checksum, buf))
+    emit(f"gather_n{n}_b{b}_q{q}.hlo.txt", to_hlo_text(model.pack_rounds, buf, qidx))
+
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write(f"n={n} b={b} q={q}\n")
+        for a in artifacts:
+            f.write(a + "\n")
+    print(f"wrote manifest ({len(artifacts)} artifacts)")
+    return artifacts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--n", type=int, default=8, help="blocks per buffer")
+    ap.add_argument("--b", type=int, default=4096, help="elements per block")
+    ap.add_argument("--q", type=int, default=5, help="pack width (rounds)")
+    args = ap.parse_args()
+    build_artifacts(args.out, args.n, args.b, args.q)
+
+
+if __name__ == "__main__":
+    main()

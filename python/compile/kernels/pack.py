@@ -1,0 +1,124 @@
+"""Pallas kernels for the block data-movement hot path.
+
+The compute hot-spot of Algorithms 1 and 2 is pure block movement: packing
+scheduled blocks into a send buffer, merging a received block into the
+block buffer, and (for end-to-end verification) block checksums. These are
+written as Pallas kernels tiled per block row — the TPU-minded mapping of
+the paper's per-round inner loop (see DESIGN.md §Hardware-Adaptation):
+
+* each grid step stages one ``(1, B)`` block row through VMEM
+  (``BlockSpec((1, B), …)``), the analogue of the paper's
+  contiguous-block ``memcpy`` into the send buffer;
+* dynamic block *selection* (the schedule lookup) is a scalar prefetch:
+  the index vector is read inside the kernel and resolved per grid step
+  with ``pl.dynamic_slice``-style row loads;
+* the checksum kernel is a row-tiled VPU reduction.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT client
+cannot execute Mosaic custom-calls; on a real TPU the same kernels lower
+unchanged. Correctness is pinned to :mod:`ref` by pytest (including a
+hypothesis sweep over shapes and dtypes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(idx_ref, buf_ref, out_ref):
+    """Grid step i: out[i] = buf[idx[i]] (zeros when idx[i] < 0)."""
+    i = pl.program_id(0)
+    k = idx_ref[i]
+    safe = jnp.maximum(k, 0)
+    row = pl.load(buf_ref, (pl.dslice(safe, 1), slice(None)))
+    out_ref[...] = jnp.where(k >= 0, row, jnp.zeros_like(row))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gather_blocks(buffer, idx):
+    """Pallas pack: rows ``idx`` of ``buffer`` → ``(len(idx), B)``."""
+    n, b = buffer.shape
+    q = idx.shape[0]
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(q,),
+        in_specs=[
+            # Full index vector visible at every grid step.
+            pl.BlockSpec((q,), lambda i: (0,)),
+            # Full buffer resident; rows are selected dynamically. For the
+            # VMEM estimate see DESIGN.md (n*B elements staged once).
+            pl.BlockSpec((n, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, b), buffer.dtype),
+        interpret=True,
+    )(idx, buffer)
+
+
+def _scatter_kernel(idx_ref, packed_ref, buf_ref, out_ref):
+    """Grid step i: out = buf with row idx[i] replaced by packed[i]."""
+    i = pl.program_id(0)
+    # First grid step copies the buffer through; later steps accumulate.
+    @pl.when(i == 0)
+    def _():
+        out_ref[...] = buf_ref[...]
+
+    k = idx_ref[i]
+    row = packed_ref[i, :][None, :]
+
+    @pl.when(k >= 0)
+    def _():
+        pl.store(out_ref, (pl.dslice(jnp.maximum(k, 0), 1), slice(None)), row)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def scatter_blocks(buffer, packed, idx):
+    """Pallas unpack: write ``packed[i]`` at row ``idx[i]`` of ``buffer``."""
+    n, b = buffer.shape
+    q = packed.shape[0]
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec((q,), lambda i: (0,)),
+            pl.BlockSpec((q, b), lambda i: (0, 0)),
+            pl.BlockSpec((n, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, b), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), buffer.dtype),
+        interpret=True,
+    )(idx, packed, buffer)
+
+
+def _checksum_kernel(buf_ref, out_ref):
+    """Grid step i: out[i] = sum(buf[i, :]) with f64 accumulation."""
+    row = buf_ref[...].astype(jnp.float64)
+    out_ref[...] = jnp.sum(row, axis=1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def block_checksum(buffer):
+    """Pallas per-block checksum → ``(n_blocks,)`` float32."""
+    n, b = buffer.shape
+    return pl.pallas_call(
+        _checksum_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, b), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(buffer)
+
+
+def bcast_step(buffer, incoming, recv_idx, send_idx):
+    """One Algorithm-1 round on one processor's payload, via the Pallas
+    kernels: merge ``incoming`` at ``recv_idx``, then read ``send_idx``.
+
+    Returns ``(new_buffer, outgoing)``. Negative indices are no-ops
+    (virtual rounds / suppressed sends).
+    """
+    new_buffer = scatter_blocks(buffer, incoming[None, :], recv_idx[None])
+    outgoing = gather_blocks(new_buffer, send_idx[None])[0]
+    return new_buffer, outgoing

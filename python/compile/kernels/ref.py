@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the semantics the Pallas kernels in this package must reproduce
+bit-exactly (pytest asserts allclose with zero tolerance for the copy
+kernels; the checksum reduction allows float round-off).
+
+Conventions shared with the rust coordinator:
+
+* A *buffer* is an ``(n_blocks, block_elems)`` array: one row per block.
+* Block indices are ``int32``. A negative index means "no block" (the
+  virtual-round convention of Algorithm 1) and the corresponding operation
+  is a no-op for that slot.
+"""
+
+import jax.numpy as jnp
+
+
+def gather_blocks(buffer, idx):
+    """Pack: select rows ``idx`` of ``buffer`` → ``(len(idx), B)``.
+
+    Negative indices produce a zero row (nothing is sent for virtual
+    rounds; the coordinator also skips the send entirely).
+    """
+    take = jnp.take(buffer, jnp.maximum(idx, 0), axis=0)
+    mask = (idx >= 0)[:, None]
+    return jnp.where(mask, take, jnp.zeros_like(take))
+
+
+def scatter_blocks(buffer, packed, idx):
+    """Unpack: write row ``packed[i]`` at ``buffer[idx[i]]``.
+
+    Negative indices write nothing. Duplicate non-negative indices are not
+    used by the schedules (Condition 3 guarantees distinct blocks per
+    phase); semantics for duplicates follow ``at[].set`` (last wins).
+    """
+    safe = jnp.where(idx >= 0, idx, buffer.shape[0])  # OOB drops the write
+    return buffer.at[safe].set(packed, mode="drop")
+
+
+def bcast_step(buffer, incoming, recv_idx, send_idx):
+    """One Algorithm-1 round for one processor's payload.
+
+    Merge the received block row ``incoming`` at ``recv_idx`` (no-op if
+    negative), then read the row to forward at ``send_idx`` (zeros if
+    negative). Returns ``(new_buffer, outgoing)``.
+    """
+    new_buffer = scatter_blocks(buffer, incoming[None, :], recv_idx[None])
+    outgoing = gather_blocks(new_buffer, send_idx[None])[0]
+    return new_buffer, outgoing
+
+
+def block_checksum(buffer):
+    """Per-block float64-accumulated checksum → ``(n_blocks,)`` float32."""
+    return jnp.sum(buffer.astype(jnp.float64), axis=1).astype(jnp.float32)

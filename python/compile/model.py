@@ -1,0 +1,47 @@
+"""L2: the JAX compute graph executed per simulated processor.
+
+Composes the L1 Pallas kernels (:mod:`compile.kernels.pack`) into the
+round-level payload operations the rust coordinator drives:
+
+* :func:`bcast_round` — one Algorithm-1 round: merge the received block
+  into the processor's ``(n, B)`` buffer, produce the block to forward.
+* :func:`pack_rounds` — pack several scheduled blocks at once (the
+  Algorithm-2 pack loop for one message).
+* :func:`checksum` — per-block payload checksums for end-to-end
+  verification.
+
+Everything here is *build-time only*: :mod:`compile.aot` lowers these
+functions once to HLO text; at run time the rust coordinator loads and
+executes the artifacts through PJRT. Python is never on the request path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import pack as kernels
+
+
+def bcast_round(buffer, incoming, recv_idx, send_idx):
+    """One broadcast round: returns ``(new_buffer, outgoing_block)``."""
+    return kernels.bcast_step(buffer, incoming, recv_idx, send_idx)
+
+
+def pack_rounds(buffer, idx):
+    """Pack the blocks ``idx`` (shape ``(q,)``) out of ``buffer``."""
+    return kernels.gather_blocks(buffer, idx)
+
+
+def unpack_rounds(buffer, packed, idx):
+    """Merge packed rows into ``buffer`` at block indices ``idx``."""
+    return kernels.scatter_blocks(buffer, packed, idx)
+
+
+def checksum(buffer):
+    """Per-block checksums of the payload buffer."""
+    return kernels.block_checksum(buffer)
+
+
+def init_buffer(n, b, dtype=jnp.float32):
+    """A deterministic root payload: block i holds i + fractional lane id."""
+    rows = jnp.arange(n, dtype=dtype)[:, None]
+    lanes = jnp.arange(b, dtype=dtype)[None, :] / jnp.asarray(b, dtype)
+    return rows + lanes

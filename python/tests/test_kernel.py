@@ -1,0 +1,136 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Fixed-case tests pin the exact semantics (negative-index no-ops, capping
+interplay with the coordinator); the hypothesis sweep walks shapes, dtypes
+and index patterns.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pack, ref
+
+
+
+def mkbuf(n, b, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, b)), dtype=dtype)
+
+
+# ---------------------------------------------------------------- gather
+
+
+@pytest.mark.parametrize("n,b,q", [(1, 1, 1), (4, 8, 3), (8, 128, 5), (3, 7, 6)])
+def test_gather_matches_ref(n, b, q):
+    buf = mkbuf(n, b)
+    idx = jnp.asarray([(i * 2 + 1) % n for i in range(q)], jnp.int32)
+    got = pack.gather_blocks(buf, idx)
+    want = ref.gather_blocks(buf, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_negative_index_is_zero_row():
+    buf = mkbuf(4, 16)
+    idx = jnp.asarray([-1, 2, -5, 0], jnp.int32)
+    got = pack.gather_blocks(buf, idx)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.zeros(16, np.float32))
+    np.testing.assert_array_equal(np.asarray(got[2]), np.zeros(16, np.float32))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(buf[2]))
+
+
+# ---------------------------------------------------------------- scatter
+
+
+@pytest.mark.parametrize("n,b,q", [(1, 1, 1), (4, 8, 3), (8, 128, 5)])
+def test_scatter_matches_ref(n, b, q):
+    buf = mkbuf(n, b)
+    packed = mkbuf(q, b, seed=1)
+    # Distinct indices (schedule property): a prefix of a permutation of
+    # 0..n, padded with distinct negatives.
+    perm = list(np.random.default_rng(5).permutation(n)[: min(n, q)])
+    idx = jnp.asarray([int(v) for v in perm] + [-(i + 1) for i in range(q - len(perm))], jnp.int32)
+    got = pack.scatter_blocks(buf, packed, idx)
+    want = ref.scatter_blocks(buf, packed, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_scatter_negative_index_noop():
+    buf = mkbuf(4, 8)
+    packed = mkbuf(2, 8, seed=3)
+    idx = jnp.asarray([-1, -4], jnp.int32)
+    got = pack.scatter_blocks(buf, packed, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(buf))
+
+
+# ---------------------------------------------------------------- step
+
+
+def test_bcast_step_roundtrip():
+    buf = jnp.zeros((4, 8), jnp.float32)
+    incoming = jnp.full((8,), 7.0, jnp.float32)
+    nb, out = pack.bcast_step(buf, incoming, jnp.int32(2), jnp.int32(2))
+    np.testing.assert_array_equal(np.asarray(nb[2]), np.asarray(incoming))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(incoming))
+    # Negative recv: nothing merged; negative send: zeros out.
+    nb2, out2 = pack.bcast_step(buf, incoming, jnp.int32(-3), jnp.int32(-1))
+    np.testing.assert_array_equal(np.asarray(nb2), np.asarray(buf))
+    np.testing.assert_array_equal(np.asarray(out2), np.zeros(8, np.float32))
+
+
+def test_bcast_step_matches_ref():
+    buf = mkbuf(6, 32)
+    incoming = mkbuf(1, 32, seed=9)[0]
+    for r, s in [(0, 0), (5, 2), (-1, 3), (4, -2)]:
+        nb, out = pack.bcast_step(buf, incoming, jnp.int32(r), jnp.int32(s))
+        wb, wout = ref.bcast_step(buf, incoming, jnp.int32(r), jnp.int32(s))
+        np.testing.assert_array_equal(np.asarray(nb), np.asarray(wb))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(wout))
+
+
+# ---------------------------------------------------------------- checksum
+
+
+@pytest.mark.parametrize("n,b", [(1, 1), (4, 33), (8, 4096)])
+def test_checksum_matches_ref(n, b):
+    buf = mkbuf(n, b)
+    got = pack.block_checksum(buf)
+    want = ref.block_checksum(buf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------- hypothesis
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 12),
+    b=st.integers(1, 64),
+    q=st.integers(1, 12),
+    dtype=st.sampled_from([jnp.float32, jnp.int32]),
+    data=st.data(),
+)
+def test_gather_scatter_hypothesis(n, b, q, dtype, data):
+    rng = np.random.default_rng(42)
+    if dtype == jnp.int32:
+        buf = jnp.asarray(rng.integers(-1000, 1000, (n, b)), dtype)
+        packed = jnp.asarray(rng.integers(-1000, 1000, (q, b)), dtype)
+    else:
+        buf = jnp.asarray(rng.standard_normal((n, b)), dtype)
+        packed = jnp.asarray(rng.standard_normal((q, b)), dtype)
+    # Distinct non-negative indices (schedule Condition 3), padded with
+    # negatives (virtual rounds), in a drawn order.
+    k = data.draw(st.integers(0, min(q, n)))
+    nonneg = data.draw(st.sets(st.integers(0, n - 1), min_size=k, max_size=k))
+    idx_list = data.draw(
+        st.permutations(sorted(nonneg) + [-(i + 1) for i in range(q - k)])
+    )
+    idx = jnp.asarray(idx_list, jnp.int32)
+    got_g = pack.gather_blocks(buf, idx)
+    want_g = ref.gather_blocks(buf, idx)
+    np.testing.assert_array_equal(np.asarray(got_g), np.asarray(want_g))
+    got_s = pack.scatter_blocks(buf, packed, idx)
+    want_s = ref.scatter_blocks(buf, packed, idx)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))

@@ -1,0 +1,158 @@
+//! Minimal measurement + deterministic-randomness harness.
+//!
+//! The offline image has no `criterion`/`proptest`; this module provides the
+//! two pieces the benches and property tests need: a warmup+repetition
+//! timer with robust statistics (median/min), and a small xorshift RNG for
+//! reproducible randomized tests. The Table 3 harness intentionally mirrors
+//! the paper's methodology (total `clock()` time over all ranks per `p`,
+//! divided by `p` and averaged over the range).
+
+use std::time::Instant;
+
+/// Timing statistics over repetitions, in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Timing {
+    pub reps: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    pub fn from_samples(mut samples: Vec<f64>) -> Timing {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let reps = samples.len();
+        Timing {
+            reps,
+            min_s: samples[0],
+            median_s: samples[reps / 2],
+            mean_s: samples.iter().sum::<f64>() / reps as f64,
+            max_s: samples[reps - 1],
+        }
+    }
+}
+
+/// Time `f` with `warmup` unmeasured and `reps` measured repetitions.
+/// `f` must return something observable to keep the optimizer honest.
+pub fn time_reps<T, F: FnMut() -> T>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    Timing::from_samples(samples)
+}
+
+/// Time one invocation of `f` (for inherently long-running workloads).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// xorshift64* — deterministic RNG for property tests (no `rand` offline).
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> XorShift {
+        XorShift {
+            state: seed.max(1).wrapping_mul(0x9E3779B97F4A7C15),
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, bound)`; `bound > 0`.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        self.next_u64() % bound
+    }
+
+    /// Uniform in `[lo, hi]`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+}
+
+/// Human-readable byte count (for table output).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Seconds → human-readable (µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.3} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let t = Timing::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(t.min_s, 1.0);
+        assert_eq!(t.median_s, 2.0);
+        assert_eq!(t.max_s, 3.0);
+        assert!((t.mean_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xorshift_deterministic_and_spread() {
+        let mut a = XorShift::new(7);
+        let mut b = XorShift::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = XorShift::new(8);
+        let mut hits = [0usize; 10];
+        for _ in 0..10_000 {
+            hits[c.below(10) as usize] += 1;
+        }
+        assert!(hits.iter().all(|&h| h > 500), "{hits:?}");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(12), "12 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert!(fmt_time(1e-6).contains("µs"));
+        assert!(fmt_time(0.5).contains("ms"));
+    }
+}

@@ -1,0 +1,26 @@
+//! Profiling driver for the §Perf pass (EXPERIMENTS.md):
+//!
+//! ```sh
+//! cargo build --release --bin profme
+//! perf record -g ./target/release/profme && perf report
+//! ```
+//!
+//! Hammers the new O(log p) schedule construction at p ≈ 2²⁰ so `perf`
+//! attributes cost to `Dfs::run` / `send_schedule_into` /
+//! `recv_schedule_into` (the Table 3 hot path).
+
+use nblock_bcast::sched::{recv_schedule_into_fast, send_schedule_into, Scratch, Skips};
+
+fn main() {
+    let skips = Skips::new(1_048_575);
+    let q = skips.q();
+    let mut scratch = Scratch::new();
+    let (mut recv, mut send, mut tmp) = (vec![0i64; q], vec![0i64; q], vec![0i64; q]);
+    for rep in 0..6u64 {
+        for r in (0..1_048_575u64).step_by(7) {
+            recv_schedule_into_fast(&skips, r, &mut scratch, &mut recv);
+            send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut send);
+            std::hint::black_box((&recv, &send, rep));
+        }
+    }
+}

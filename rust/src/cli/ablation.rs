@@ -1,0 +1,186 @@
+//! Ablation studies for the design choices called out in DESIGN.md:
+//!
+//! * block-count sensitivity: broadcast time vs `n` for fixed `m`,
+//!   locating the α/β crossover the paper's `F·√(m/q)` heuristic targets;
+//! * violation-repair cost: how much of the send-schedule construction
+//!   time the ≤4 `O(log p)` repairs account for (upper-bounded by
+//!   comparing against processors with zero violations);
+//! * flat vs hierarchical (multi-lane future work) across the m sweep;
+//! * schedule cache: warm vs cold construction amortization.
+
+use crate::bench_support::{fmt_bytes, time_reps};
+use crate::collectives::{bcast_block_count, bcast_circulant, bcast_hierarchical};
+use crate::sched::{
+    ceil_log2, send_schedule_into, ScheduleCache, Scratch, Skips,
+};
+use crate::simulator::{CostModel, Engine};
+use anyhow::Result;
+
+/// Broadcast time vs block count `n` (fixed m, p): the U-shaped tradeoff
+/// behind the paper's block-size heuristic.
+pub fn block_count_sensitivity(p: u64, m: u64) -> Result<()> {
+    let q = ceil_log2(p);
+    let heuristic = bcast_block_count(m, q, 70.0);
+    println!(
+        "broadcast time vs n (p = {p}, m = {}; heuristic n* = {heuristic}):\n",
+        fmt_bytes(m)
+    );
+    println!("{:>8} {:>10} {:>14} {:>10}", "n", "rounds", "time", "vs n*");
+    let mut best = (0usize, f64::INFINITY);
+    let mut t_star = 0.0;
+    let mut ns: Vec<usize> = (0..14).map(|i| 1usize << i).collect();
+    ns.push(heuristic);
+    ns.sort_unstable();
+    ns.dedup();
+    let mut results = Vec::new();
+    for &n in &ns {
+        if n as u64 > m {
+            break;
+        }
+        let mut e = Engine::new(p, CostModel::cluster_36(32.min(p)));
+        let out = bcast_circulant(&mut e, 0, n, m, None)?;
+        if out.time_s < best.1 {
+            best = (n, out.time_s);
+        }
+        if n == heuristic {
+            t_star = out.time_s;
+        }
+        results.push((n, out.rounds, out.time_s));
+    }
+    for (n, rounds, t) in results {
+        println!(
+            "{:>8}{} {:>9} {:>14.6} {:>10.2}",
+            n,
+            if n == heuristic { "*" } else { " " },
+            rounds,
+            t,
+            t / t_star
+        );
+    }
+    println!(
+        "\nbest n = {} ({:.6}s); heuristic within {:.1}% of best",
+        best.0,
+        best.1,
+        (t_star / best.1 - 1.0) * 100.0
+    );
+    Ok(())
+}
+
+/// Violation-repair share of send-schedule construction time.
+pub fn violation_cost(p: u64) -> Result<()> {
+    let skips = Skips::new(p);
+    let q = skips.q();
+    let mut scratch = Scratch::new();
+    let (mut tmp, mut out) = (vec![0i64; q], vec![0i64; q]);
+    // Partition a rank sample by violation count.
+    let mut by_violations: Vec<Vec<u64>> = vec![Vec::new(); 5];
+    let window = 200_000u64.min(p);
+    let step = (p / window).max(1);
+    let mut r = 0;
+    while r < p {
+        let (_, st) = send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut out);
+        by_violations[(st.total() as usize).min(4)].push(r);
+        r += step;
+    }
+    println!("send-schedule construction by violation count (p = {p}, q = {q}):\n");
+    println!("{:>11} {:>12} {:>16}", "violations", "ranks", "ns/schedule");
+    for (v, ranks) in by_violations.iter().enumerate() {
+        if ranks.is_empty() {
+            continue;
+        }
+        let sample: Vec<u64> = ranks.iter().copied().take(20_000).collect();
+        let t = time_reps(1, 5, || {
+            for &r in &sample {
+                send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut out);
+                std::hint::black_box(&out);
+            }
+        });
+        println!(
+            "{:>11} {:>12} {:>16.1}",
+            v,
+            ranks.len(),
+            t.median_s / sample.len() as f64 * 1e9
+        );
+    }
+    println!("\neach violation adds one O(log p) receive-schedule computation (Prop 3).");
+    Ok(())
+}
+
+/// Flat vs hierarchical broadcast across message sizes.
+pub fn hierarchy(p: u64, rpn: u64) -> Result<()> {
+    let q = ceil_log2(p);
+    let cost = CostModel::cluster_36(rpn);
+    println!(
+        "flat circulant vs hierarchical (leader) broadcast, p = {p} ({} nodes × {rpn}):\n",
+        p / rpn
+    );
+    println!("{:>10} {:>6} {:>14} {:>14} {:>8}", "m", "n*", "flat", "hierarchical", "ratio");
+    let mut m = 1u64 << 10;
+    while m <= 1 << 26 {
+        let n = bcast_block_count(m, q, 70.0);
+        let n_nodes = bcast_block_count(m, ceil_log2(p / rpn), 70.0);
+        let n_intra = bcast_block_count(m, ceil_log2(rpn).max(1), 70.0);
+        let mut e1 = Engine::new(p, cost);
+        let flat = bcast_circulant(&mut e1, 0, n, m, None)?.time_s;
+        let mut e2 = Engine::new(p, cost);
+        let hier = bcast_hierarchical(&mut e2, 0, rpn, n_nodes, n_intra, m, None)?.time_s;
+        println!(
+            "{:>10} {:>6} {:>14.6} {:>14.6} {:>8.2}",
+            fmt_bytes(m),
+            n,
+            flat,
+            hier,
+            flat / hier
+        );
+        m *= 8;
+    }
+    println!("\nthe serialized decomposition wins in the latency regime; overlapping");
+    println!("multi-lane phases (the paper's [14]) would extend the win to bandwidth.");
+    Ok(())
+}
+
+/// Schedule-cache amortization: cold vs warm communicator.
+pub fn cache(p: u64) -> Result<()> {
+    let cache = ScheduleCache::new(4);
+    let sample: Vec<u64> = (0..p).step_by((p / 10_000).max(1) as usize).collect();
+    let cold = time_reps(0, 1, || {
+        for &r in &sample {
+            std::hint::black_box(cache.schedule(p, r));
+        }
+    });
+    let warm = time_reps(1, 5, || {
+        for &r in &sample {
+            std::hint::black_box(cache.schedule(p, r));
+        }
+    });
+    let st = cache.stats();
+    println!("schedule cache, p = {p}, {} ranks touched:", sample.len());
+    println!(
+        "  cold: {:>10.1} ns/schedule   warm: {:>10.1} ns/schedule   ({:.1}x)",
+        cold.median_s / sample.len() as f64 * 1e9,
+        warm.median_s / sample.len() as f64 * 1e9,
+        cold.median_s / warm.median_s
+    );
+    println!("  hits {} misses {} evictions {}", st.hits, st.misses, st.evictions);
+    Ok(())
+}
+
+/// Dispatch: `nblock ablation [--which n|violations|hier|cache|all]`.
+pub fn run(which: &str, p: u64, m: u64, rpn: u64) -> Result<()> {
+    match which {
+        "n" => block_count_sensitivity(p, m),
+        "violations" => violation_cost(p),
+        "hier" => hierarchy(p, rpn),
+        "cache" => cache(p),
+        "all" => {
+            block_count_sensitivity(p, m)?;
+            println!("\n{}\n", "—".repeat(60));
+            violation_cost(p)?;
+            println!("\n{}\n", "—".repeat(60));
+            hierarchy(1152, 32)?;
+            println!("\n{}\n", "—".repeat(60));
+            cache(p)
+        }
+        other => anyhow::bail!("unknown ablation `{other}` (n|violations|hier|cache|all)"),
+    }
+}

@@ -1,0 +1,193 @@
+//! Regenerators for the paper's Figures 1–3 under the cost-model
+//! substitute for the 36-node cluster (see DESIGN.md §2, Substitutions).
+//!
+//! Output: one aligned table per process configuration / problem type,
+//! plus CSV files under `bench_results/`. Message sizes sweep powers of
+//! four like the paper's log-scaled x axis. "native" stands for the
+//! OpenMPI decision-table algorithms (binomial / van-de-Geijn broadcast;
+//! ring / Bruck / gather+bcast allgatherv); "new" is the paper's
+//! Algorithm 1 / Algorithm 2 with the §3 block-count heuristics (F = 70,
+//! G = 40).
+
+use crate::bench_support::fmt_bytes;
+use crate::collectives::{
+    allgather_block_count, allgatherv_circulant_cost, allgatherv_gather_bcast, allgatherv_ring,
+    bcast_binomial, bcast_block_count, bcast_circulant, bcast_scatter_allgather, AllgatherInput,
+};
+use crate::sched::ceil_log2;
+use crate::simulator::{CostModel, Engine};
+use anyhow::Result;
+
+const F_BCAST: f64 = 70.0;
+const G_ALLGATHER: f64 = 40.0;
+
+fn sizes(quick: bool, max: u64) -> Vec<u64> {
+    // Powers of 4 from 1 KiB (the paper sweeps 1 int .. ~1 GiB).
+    let mut v = Vec::new();
+    let mut m = 1u64 << 10;
+    while m <= max {
+        v.push(m);
+        m *= 4;
+    }
+    if quick {
+        v.retain(|&m| m <= max / 16);
+    }
+    v
+}
+
+fn cluster_configs() -> Vec<(&'static str, u64, CostModel)> {
+    vec![
+        ("36x32", 36 * 32, CostModel::cluster_36(32)),
+        ("36x4", 36 * 4, CostModel::cluster_36(4)),
+        ("36x1", 36, CostModel::cluster_36(1)),
+    ]
+}
+
+/// Figure 1: MPI_Bcast, native vs new, for 36×32 / 36×4 / 36×1 ranks.
+pub fn fig1(quick: bool) -> Result<()> {
+    println!("Figure 1 — broadcast: native (binomial, scatter+allgather) vs new (Algorithm 1)\n");
+    let max = if quick { 1 << 24 } else { 1 << 30 };
+    let mut rows = Vec::new();
+    for (name, p, cost) in cluster_configs() {
+        let q = ceil_log2(p);
+        println!("p = {name} ({p} ranks):");
+        println!(
+            "{:>10} {:>6} {:>14} {:>14} {:>14} {:>8}",
+            "m", "n*", "binomial", "scat+allgath", "new circulant", "speedup"
+        );
+        for m in sizes(quick, max) {
+            let n = bcast_block_count(m, q, F_BCAST);
+            let mut e1 = Engine::new(p, cost);
+            let t_bin = bcast_binomial(&mut e1, 0, m, None)?.time_s;
+            let mut e2 = Engine::new(p, cost);
+            let t_vdg = bcast_scatter_allgather(&mut e2, 0, m, None)?.time_s;
+            let mut e3 = Engine::new(p, cost);
+            let t_new = bcast_circulant(&mut e3, 0, n, m, None)?.time_s;
+            let native = t_bin.min(t_vdg);
+            println!(
+                "{:>10} {:>6} {:>14.6} {:>14.6} {:>14.6} {:>8.2}",
+                fmt_bytes(m),
+                n,
+                t_bin,
+                t_vdg,
+                t_new,
+                native / t_new
+            );
+            rows.push(format!("{name},{m},{n},{t_bin},{t_vdg},{t_new}"));
+        }
+        println!();
+    }
+    let path = super::write_csv(
+        "fig1_bcast.csv",
+        "config,m_bytes,n_blocks,binomial_s,scatter_allgather_s,circulant_s",
+        &rows,
+    )?;
+    println!("CSV: {}", path.display());
+    Ok(())
+}
+
+fn problem_counts(kind: &str, p: u64, m: u64) -> Vec<u64> {
+    match kind {
+        // m split evenly.
+        "regular" => (0..p).map(|_| m / p).collect(),
+        // chunks of roughly (i mod 3) * m/p, as in the paper.
+        "irregular" => (0..p).map(|i| (i % 3) * (m / p)).collect(),
+        // one rank contributes everything.
+        "degenerate" => (0..p).map(|i| if i == 0 { m } else { 0 }).collect(),
+        other => panic!("unknown problem type {other}"),
+    }
+}
+
+fn allgather_row(
+    p: u64,
+    cost: CostModel,
+    kind: &str,
+    m: u64,
+) -> Result<(usize, f64, f64, f64, f64)> {
+    let q = ceil_log2(p);
+    let counts = problem_counts(kind, p, m);
+    let input = AllgatherInput {
+        counts: &counts,
+        data: None,
+    };
+    let n = allgather_block_count(m, q, G_ALLGATHER);
+    let mut e1 = Engine::new(p, cost);
+    let t_ring = allgatherv_ring(&mut e1, &input)?.time_s;
+    let mut e2 = Engine::new(p, cost);
+    let t_gb = allgatherv_gather_bcast(&mut e2, &input)?.time_s;
+    let mut e3 = Engine::new(p, cost);
+    let t_new = allgatherv_circulant_cost(&mut e3, n, &counts)?.time_s;
+    Ok((n, t_ring, t_gb, t_new, t_ring.min(t_gb)))
+}
+
+/// Figure 2: irregular allgatherv (regular / irregular / degenerate),
+/// p = 36×32.
+pub fn fig2(quick: bool) -> Result<()> {
+    println!("Figure 2 — irregular allgatherv, p = 36x32: native (ring, gather+bcast) vs new (Algorithm 2)\n");
+    let (p, cost) = (36 * 32u64, CostModel::cluster_36(32));
+    let max = if quick { 1 << 24 } else { 1 << 28 };
+    let mut rows = Vec::new();
+    for kind in ["regular", "irregular", "degenerate"] {
+        println!("problem type: {kind}");
+        println!(
+            "{:>10} {:>6} {:>14} {:>14} {:>14} {:>8}",
+            "m", "n*", "ring", "gather+bcast", "new circulant", "speedup"
+        );
+        for m in sizes(quick, max) {
+            let (n, t_ring, t_gb, t_new, native) = allgather_row(p, cost, kind, m)?;
+            println!(
+                "{:>10} {:>6} {:>14.6} {:>14.6} {:>14.6} {:>8.2}",
+                fmt_bytes(m),
+                n,
+                t_ring,
+                t_gb,
+                t_new,
+                native / t_new
+            );
+            rows.push(format!("{kind},{m},{n},{t_ring},{t_gb},{t_new}"));
+        }
+        println!();
+    }
+    let path = super::write_csv(
+        "fig2_allgatherv.csv",
+        "problem,m_bytes,n_blocks,ring_s,gather_bcast_s,circulant_s",
+        &rows,
+    )?;
+    println!("CSV: {}", path.display());
+    Ok(())
+}
+
+/// Figure 3: regular allgatherv for 36×32 / 36×4 / 36×1.
+pub fn fig3(quick: bool) -> Result<()> {
+    println!("Figure 3 — regular allgatherv: native vs new, per process configuration\n");
+    let max = if quick { 1 << 24 } else { 1 << 28 };
+    let mut rows = Vec::new();
+    for (name, p, cost) in cluster_configs() {
+        println!("p = {name} ({p} ranks):");
+        println!(
+            "{:>10} {:>6} {:>14} {:>14} {:>14} {:>8}",
+            "m", "n*", "ring", "gather+bcast", "new circulant", "speedup"
+        );
+        for m in sizes(quick, max) {
+            let (n, t_ring, t_gb, t_new, native) = allgather_row(p, cost, "regular", m)?;
+            println!(
+                "{:>10} {:>6} {:>14.6} {:>14.6} {:>14.6} {:>8.2}",
+                fmt_bytes(m),
+                n,
+                t_ring,
+                t_gb,
+                t_new,
+                native / t_new
+            );
+            rows.push(format!("{name},{m},{n},{t_ring},{t_gb},{t_new}"));
+        }
+        println!();
+    }
+    let path = super::write_csv(
+        "fig3_allgather_regular.csv",
+        "config,m_bytes,n_blocks,ring_s,gather_bcast_s,circulant_s",
+        &rows,
+    )?;
+    println!("CSV: {}", path.display());
+    Ok(())
+}

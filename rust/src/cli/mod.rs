@@ -1,0 +1,187 @@
+//! `nblock` command-line interface.
+//!
+//! One subcommand per reproducible artifact of the paper (tables, figures)
+//! plus operational tools (verify, schedule inspection, collective runs,
+//! the PJRT end-to-end driver). No external CLI crate is available in the
+//! offline image, so parsing is by hand: `nblock <cmd> [--flag value]...`.
+
+pub mod ablation;
+pub mod figures;
+pub mod tables;
+pub mod tools;
+
+use std::collections::HashMap;
+
+/// Parsed arguments: positional + `--key value` / `--flag` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(raw: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key value` when a value follows and isn't another flag;
+                // bare `--flag` otherwise.
+                if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), raw[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.options
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn pos<T: std::str::FromStr>(&self, idx: usize, default: T) -> T {
+        self.positional
+            .get(idx)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+pub const HELP: &str = "\
+nblock — round-optimal n-block broadcast schedules (Träff 2023)
+
+USAGE: nblock <command> [options]
+
+Paper artifacts:
+  table1                     Table 1: p=16 power-of-two send schedule
+  table2 [--p P]             Table 2: receive+send schedules (default p=17)
+  table3 [--full]            Table 3: old vs new schedule-construction timing
+  fig1   [--quick]           Figure 1: MPI_Bcast, native vs new (36x32/4/1)
+  fig2   [--quick]           Figure 2: irregular allgatherv, p=36x32
+  fig3   [--quick]           Figure 3: regular allgatherv, 36x32/4/1
+
+Tools:
+  verify [--max P] [--sample N] [--n N]   check the 4 correctness conditions,
+                                          Prop 1/3 bounds, Theorem 1 delivery
+  schedule --p P --r R       print one processor's schedule and skip path
+  bcast --p P --m BYTES [--n N] [--root R]       compare bcast algorithms
+  allgatherv --p P --m BYTES [--n N] [--type T]  compare allgatherv algorithms
+                                                 (T: regular|irregular|degenerate)
+  allreduce --p P --elems E  compare allreduce algorithms (circulant dual,
+                             binomial, ring reduce-scatter+allgather)
+  threaded --p P --n N --m BYTES   one-OS-thread-per-rank broadcast
+  ablation [--which n|violations|hier|cache|all] [--p P] [--m BYTES]
+  e2e [--p P] [--root R] [--artifacts DIR]       PJRT end-to-end broadcast
+  selftest                   quick smoke of every subsystem
+
+Output: aligned tables on stdout; figures also write CSV next to the
+binary's working directory under bench_results/.
+";
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    if argv.is_empty() {
+        println!("{HELP}");
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..]);
+    match cmd {
+        "table1" => tables::table1(),
+        "table2" => tables::table2(args.get("p", 17)),
+        "table3" => tables::table3(args.flag("full"), args.get("reps", 3)),
+        "fig1" => figures::fig1(args.flag("quick")),
+        "fig2" => figures::fig2(args.flag("quick")),
+        "fig3" => figures::fig3(args.flag("quick")),
+        "verify" => tools::verify(
+            args.get("max", 2048),
+            args.get("sample", 64),
+            args.get("n", 5),
+        ),
+        "schedule" => tools::schedule(args.get("p", 17), args.get("r", 3)),
+        "bcast" => tools::bcast(
+            args.get("p", 64),
+            args.get("m", 1 << 20),
+            args.get("n", 0),
+            args.get("root", 0),
+        ),
+        "allgatherv" => tools::allgatherv(
+            args.get("p", 64),
+            args.get("m", 1 << 20),
+            args.get("n", 0),
+            args.get("type", "regular".to_string()),
+        ),
+        "allreduce" => tools::allreduce(args.get("p", 64), args.get("elems", 1 << 16)),
+        "threaded" => tools::threaded(args.get("p", 16), args.get("n", 8), args.get("m", 1 << 16)),
+        "ablation" => ablation::run(
+            &args.get("which", "all".to_string()),
+            args.get("p", 100_000),
+            args.get("m", 1 << 22),
+            args.get("rpn", 32),
+        ),
+        "e2e" => tools::e2e(
+            args.get("p", 16),
+            args.get("root", 0),
+            args.get("artifacts", String::new()),
+        ),
+        "selftest" => tools::selftest(),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Write a CSV file under `bench_results/`, creating the directory.
+pub fn write_csv(name: &str, header: &str, rows: &[String]) -> anyhow::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("bench_results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse() {
+        let raw: Vec<String> = ["--p", "17", "pos1", "--quick", "--n", "5"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&raw);
+        assert_eq!(a.get::<u64>("p", 0), 17);
+        assert_eq!(a.get::<usize>("n", 0), 5);
+        assert!(a.flag("quick"));
+        assert!(!a.flag("full"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+}

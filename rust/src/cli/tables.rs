@@ -1,0 +1,242 @@
+//! Regenerators for the paper's Tables 1, 2 and 3.
+
+use crate::bench_support::time_once;
+use crate::sched::baseline::{recv_schedule_old, send_schedule_old, send_schedule_old_improved};
+use crate::sched::pow2::table1_send_block;
+use crate::sched::recv::{recv_schedule_into_fast, Scratch};
+use crate::sched::send::send_schedule_into;
+use crate::sched::{ceil_log2, Skips};
+use anyhow::Result;
+
+/// Table 1: the send schedule for `p = 16` (classical power-of-two scheme;
+/// absolute first-phase block per processor and round).
+pub fn table1() -> Result<()> {
+    let p = 16u64;
+    let q = ceil_log2(p);
+    let skips = Skips::new(p);
+    println!("Table 1 — send schedule for p = {p}, q = {q} (absolute blocks)\n");
+    print!("{:24}", "r:");
+    for r in 0..p {
+        print!("{r:>3}");
+    }
+    println!();
+    print!("{:24}", "Baseblock b before:");
+    for r in 0..p {
+        print!("{:>3}", crate::sched::baseblock(&skips, r));
+    }
+    println!();
+    for k in 0..q {
+        print!("{:24}", format!("Sent in round k = {k}:"));
+        for r in 0..p {
+            print!("{:>3}", table1_send_block(p, r, k));
+        }
+        println!();
+    }
+    println!(
+        "\nNote: the paper prints 2 at (r=14, k=1); the closed form and\n\
+         Algorithm 7 give 1 (entry unused: its destination is the root).\n\
+         See DESIGN.md §4."
+    );
+    Ok(())
+}
+
+/// Table 2: baseblock, receive and send schedules for any `p`
+/// (the paper prints `p = 17`).
+pub fn table2(p: u64) -> Result<()> {
+    let skips = Skips::new(p);
+    let q = skips.q();
+    println!(
+        "Table 2 — receive and send schedules for p = {p}, q = {q} \
+         (relative blocks)\n"
+    );
+    let width = if p > 100 { 4 } else { 3 };
+    print!("{:16}", "r:");
+    for r in 0..p {
+        print!("{r:>width$}");
+    }
+    println!();
+    print!("{:16}", "b:");
+    for r in 0..p {
+        print!("{:>width$}", crate::sched::baseblock(&skips, r));
+    }
+    println!();
+    let scheds: Vec<_> = (0..p).map(|r| crate::sched::Schedule::compute(&skips, r)).collect();
+    for k in 0..q {
+        print!("{:16}", format!("recvblock[{k}]:"));
+        for s in &scheds {
+            print!("{:>width$}", s.recv[k]);
+        }
+        println!();
+    }
+    for k in 0..q {
+        print!("{:16}", format!("sendblock[{k}]:"));
+        for s in &scheds {
+            print!("{:>width$}", s.send[k]);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// One Table 3 row: total time over all `r` for all `p` in the range, for
+/// the old (`O(log³p)` send / `O(log²p)` recv) and new (`O(log p)`)
+/// constructions, plus per-processor averages in µs.
+struct Table3Row {
+    label: String,
+    total_old_s: f64,
+    total_new_s: f64,
+    per_proc_old_us: f64,
+    /// The `O(log² p)` variant matching the improvements in the author's
+    /// actual old code (the one Table 3 of the paper measured).
+    per_proc_old_impr_us: f64,
+    per_proc_new_us: f64,
+}
+
+/// Measure one range.
+///
+/// `samples == 0` replicates the paper exactly: every `p` in the range,
+/// all ranks, both algorithms (the old algorithm then costs what it cost
+/// the paper's authors: hours for the large ranges). Otherwise `samples`
+/// evenly spaced `p` are measured; the *new* algorithm still runs over all
+/// ranks, the *old* one over a strided window of ≤ 20 000 ranks with the
+/// total extrapolated from its per-processor time (the per-processor
+/// column — the paper's rightmost columns — is always measured directly).
+fn table3_range(lo: u64, hi: u64, samples: u64) -> Table3Row {
+    let mut scratch = Scratch::new();
+    let mut total_old = 0.0f64;
+    let mut total_new = 0.0f64;
+    let mut per_old = 0.0f64;
+    let mut per_old_impr = 0.0f64;
+    let mut per_new = 0.0f64;
+    let mut count = 0usize;
+    let exact = samples == 0;
+    let step = if exact {
+        1
+    } else {
+        ((hi - lo) / samples.max(1)).max(1)
+    };
+    let mut p = lo.max(1);
+    while p <= hi {
+        let skips = Skips::new(p);
+        let q = skips.q();
+        let mut recv = vec![0i64; q];
+        let mut send = vec![0i64; q];
+        let mut tmp = vec![0i64; q];
+        // New: both schedules for all r (always exact).
+        let ((), t_new) = time_once(|| {
+            for r in 0..p {
+                recv_schedule_into_fast(&skips, r, &mut scratch, &mut recv);
+                send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut send);
+                std::hint::black_box((&recv, &send));
+            }
+        });
+        // Old: all ranks when exact, else a strided window + extrapolation.
+        let window = if exact { p } else { p.min(20_000) };
+        let rstep = (p / window).max(1);
+        let mut measured = 0u64;
+        let ((), t_old_win) = time_once(|| {
+            let mut r = 0;
+            while r < p && measured < window {
+                std::hint::black_box(recv_schedule_old(&skips, r));
+                std::hint::black_box(send_schedule_old(&skips, r));
+                measured += 1;
+                r += rstep;
+            }
+        });
+        let mut measured_i = 0u64;
+        let ((), t_impr_win) = time_once(|| {
+            let mut r = 0;
+            while r < p && measured_i < window {
+                std::hint::black_box(recv_schedule_old(&skips, r));
+                std::hint::black_box(send_schedule_old_improved(&skips, r));
+                measured_i += 1;
+                r += rstep;
+            }
+        });
+        let t_old = t_old_win / measured as f64 * p as f64;
+        total_new += t_new;
+        total_old += t_old;
+        per_new += t_new / p as f64;
+        per_old += t_old_win / measured as f64;
+        per_old_impr += t_impr_win / measured_i as f64;
+        count += 1;
+        p += step;
+    }
+    Table3Row {
+        label: format!("[{lo}, {hi}]"),
+        total_old_s: total_old,
+        total_new_s: total_new,
+        per_proc_old_us: per_old / count as f64 * 1e6,
+        per_proc_old_impr_us: per_old_impr / count as f64 * 1e6,
+        per_proc_new_us: per_new / count as f64 * 1e6,
+    }
+}
+
+/// Table 3: old vs new schedule-construction timing across `p` ranges.
+///
+/// `full` uses the paper's exact methodology (every `p`, every rank —
+/// hours of old-algorithm time on the large ranges); the default covers
+/// the same `p` magnitudes with 5 sampled `p` per range.
+pub fn table3(full: bool, _reps: usize) -> Result<()> {
+    let samples = if full { 0 } else { 5 };
+    let ranges: Vec<(u64, u64)> = vec![
+        (1, 17_000),
+        (16_000, 33_000),
+        (64_000, 73_000),
+        (131_000, 140_000),
+        (262_000, 267_000),
+        (524_000, 529_000),
+        (1_048_000, 1_050_000),
+        (2_097_000, 2_099_000),
+    ];
+    println!(
+        "Table 3 — schedule computation, all r per p ({} per range)\n\
+         (old = O(log²p) recv + O(log³p) send; new = O(log p) both{})\n",
+        if full { "every p" } else { "5 sampled p" },
+        if full {
+            ""
+        } else {
+            "; old totals extrapolated from a 20k-rank window"
+        }
+    );
+    println!(
+        "{:>28} {:>14} {:>14} {:>12} {:>13} {:>12} {:>8}",
+        "Range of processors p",
+        "old total (s)",
+        "new total (s)",
+        "old µs/proc",
+        "old-impr µs",
+        "new µs/proc",
+        "ratio"
+    );
+    let mut rows = Vec::new();
+    for (lo, hi) in ranges {
+        let row = table3_range(lo, hi, samples);
+        println!(
+            "{:>28} {:>14.3} {:>14.3} {:>12.3} {:>13.3} {:>12.3} {:>8.1}",
+            row.label,
+            row.total_old_s,
+            row.total_new_s,
+            row.per_proc_old_us,
+            row.per_proc_old_impr_us,
+            row.per_proc_new_us,
+            row.per_proc_old_impr_us / row.per_proc_new_us
+        );
+        rows.push(format!(
+            "{},{},{},{},{},{}",
+            row.label.replace(',', ";"),
+            row.total_old_s,
+            row.total_new_s,
+            row.per_proc_old_us,
+            row.per_proc_old_impr_us,
+            row.per_proc_new_us
+        ));
+    }
+    let path = super::write_csv(
+        "table3.csv",
+        "range,old_total_s,new_total_s,old_us_per_proc,old_impr_us_per_proc,new_us_per_proc",
+        &rows,
+    )?;
+    println!("\nCSV: {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,333 @@
+//! Operational subcommands: verification sweeps, schedule inspection,
+//! collective comparisons, the PJRT end-to-end driver, and a smoke
+//! selftest.
+
+use crate::bench_support::{fmt_bytes, fmt_time, XorShift};
+use crate::collectives::{
+    allgatherv_bruck, allgatherv_circulant, allgatherv_gather_bcast, allgatherv_ring,
+    bcast_binomial, bcast_block_count, bcast_circulant, bcast_scatter_allgather, AllgatherInput,
+};
+use crate::coordinator::{Coordinator, E2eConfig};
+use crate::runtime::default_artifact_dir;
+use crate::sched::{
+    baseblock, canonical_decomposition, ceil_log2, verify_p, Schedule, Skips,
+};
+use crate::simulator::{CostModel, Engine};
+use anyhow::{bail, Result};
+
+/// Exhaustive conditions check for all `p ≤ max`, plus `sample` random
+/// larger `p` up to 2²⁰; reports the §3 empirical bounds.
+pub fn verify(max: u64, sample: usize, n: usize) -> Result<()> {
+    println!("verifying the four §2.1 conditions + Prop 1/3 bounds + Theorem 1 delivery (n = {n})");
+    let mut max_calls = 0u64;
+    let mut max_viol = 0u64;
+    let t0 = std::time::Instant::now();
+    for p in 1..=max {
+        let ns: &[usize] = if p <= 512 { &[n] } else { &[] };
+        let rep = verify_p(p, ns).map_err(|e| anyhow::anyhow!("p={p}: {e}"))?;
+        max_calls = max_calls.max(rep.max_recursive_calls);
+        max_viol = max_viol.max(rep.max_violations);
+    }
+    println!(
+        "  exhaustive p ≤ {max}: OK ({:.1}s) — max DFS calls {} (bound 2q), max violations {} (bound 4)",
+        t0.elapsed().as_secs_f64(),
+        max_calls,
+        max_viol
+    );
+    let mut rng = XorShift::new(0xB10C);
+    let t1 = std::time::Instant::now();
+    for _ in 0..sample {
+        let p = rng.range(max + 1, 1 << 20);
+        let rep = verify_p(p, &[]).map_err(|e| anyhow::anyhow!("p={p}: {e}"))?;
+        max_calls = max_calls.max(rep.max_recursive_calls);
+        max_viol = max_viol.max(rep.max_violations);
+    }
+    println!(
+        "  sampled {sample} p in ({max}, 2^20]: OK ({:.1}s) — overall max calls {max_calls}, max violations {max_viol}",
+        t1.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+/// Print one processor's schedule, baseblock and canonical skip path.
+pub fn schedule(p: u64, r: u64) -> Result<()> {
+    if r >= p {
+        bail!("r must be < p");
+    }
+    let skips = Skips::new(p);
+    let s = Schedule::compute(&skips, r);
+    println!("p = {p}, q = {}, skips = {:?}", skips.q(), skips.as_slice());
+    println!("r = {r}: baseblock b = {}", baseblock(&skips, r));
+    let d = canonical_decomposition(&skips, r);
+    let path: Vec<u64> = d
+        .iter()
+        .scan(0u64, |acc, &e| {
+            *acc += skips.skip(e);
+            Some(*acc)
+        })
+        .collect();
+    println!("canonical skip indices {:?} (path from root: 0 -> {:?})", d, path);
+    println!("recvblock[] = {:?}", s.recv);
+    println!("sendblock[] = {:?}", s.send);
+    for k in 0..skips.q() {
+        println!(
+            "  round k={k}: recv block {:>3} from {:>4}   send block {:>3} to {:>4}",
+            s.recv[k],
+            skips.from_proc(r, k),
+            s.send[k],
+            skips.to_proc(r, k)
+        );
+    }
+    Ok(())
+}
+
+/// Compare the broadcast algorithms for one (p, m) under both cost models.
+pub fn bcast(p: u64, m: u64, n: usize, root: u64) -> Result<()> {
+    let q = ceil_log2(p);
+    let n = if n == 0 { bcast_block_count(m, q, 70.0) } else { n };
+    println!(
+        "broadcast of {} from root {root} over p = {p} (q = {q}), n = {n} blocks\n",
+        fmt_bytes(m)
+    );
+    println!(
+        "{:>22} {:>8} {:>14} {:>12}",
+        "algorithm", "rounds", "time", "wire bytes"
+    );
+    for (name, f) in [
+        (
+            "circulant (Alg 1)",
+            Box::new(move |e: &mut Engine| bcast_circulant(e, root, n, m, None))
+                as Box<dyn Fn(&mut Engine) -> Result<crate::collectives::Outcome, crate::simulator::SimError>>,
+        ),
+        (
+            "binomial",
+            Box::new(move |e: &mut Engine| bcast_binomial(e, root, m, None)),
+        ),
+        (
+            "scatter+allgather",
+            Box::new(move |e: &mut Engine| bcast_scatter_allgather(e, root, m, None)),
+        ),
+    ] {
+        let mut e = Engine::new(p, CostModel::flat_default());
+        let out = f(&mut e)?;
+        println!(
+            "{:>22} {:>8} {:>14} {:>12}",
+            name,
+            out.rounds,
+            fmt_time(out.time_s),
+            fmt_bytes(out.bytes_on_wire)
+        );
+    }
+    Ok(())
+}
+
+/// Compare the allgatherv algorithms for one (p, m, problem type), with
+/// payload verification on a scaled-down instance.
+pub fn allgatherv(p: u64, m: u64, n: usize, kind: String) -> Result<()> {
+    let q = ceil_log2(p);
+    let n = if n == 0 {
+        crate::collectives::allgather_block_count(m, q, 40.0)
+    } else {
+        n
+    };
+    let counts: Vec<u64> = match kind.as_str() {
+        "regular" => (0..p).map(|_| m / p).collect(),
+        "irregular" => (0..p).map(|i| (i % 3) * (m / p)).collect(),
+        "degenerate" => (0..p).map(|i| if i == 0 { m } else { 0 }).collect(),
+        other => bail!("unknown problem type {other} (regular|irregular|degenerate)"),
+    };
+    let input = AllgatherInput {
+        counts: &counts,
+        data: None,
+    };
+    println!(
+        "allgatherv ({kind}) of total {} over p = {p} (q = {q}), n = {n} blocks/root\n",
+        fmt_bytes(counts.iter().sum())
+    );
+    println!(
+        "{:>22} {:>8} {:>14} {:>12}",
+        "algorithm", "rounds", "time", "wire bytes"
+    );
+    type AgFn<'a> = Box<
+        dyn Fn(
+                &mut Engine,
+            )
+                -> Result<crate::collectives::Outcome, crate::simulator::SimError>
+            + 'a,
+    >;
+    let algos: Vec<(&str, AgFn)> = vec![
+        (
+            "circulant (Alg 2)",
+            Box::new(|e: &mut Engine| allgatherv_circulant(e, n, &input)),
+        ),
+        ("ring", Box::new(|e: &mut Engine| allgatherv_ring(e, &input))),
+        (
+            "bruck",
+            Box::new(|e: &mut Engine| allgatherv_bruck(e, &input)),
+        ),
+        (
+            "gather+bcast",
+            Box::new(|e: &mut Engine| allgatherv_gather_bcast(e, &input)),
+        ),
+    ];
+    for (name, f) in algos {
+        let mut e = Engine::new(p, CostModel::flat_default());
+        let out = f(&mut e)?;
+        println!(
+            "{:>22} {:>8} {:>14} {:>12}",
+            name,
+            out.rounds,
+            fmt_time(out.time_s),
+            fmt_bytes(out.bytes_on_wire)
+        );
+    }
+    Ok(())
+}
+
+/// Compare allreduce algorithms (sum of p f32 vectors), all verified.
+pub fn allreduce(p: u64, elems: usize) -> Result<()> {
+    use crate::collectives::{allreduce_circulant, allreduce_ring, reduce_binomial};
+    let contrib: Vec<Vec<f32>> = (0..p)
+        .map(|r| {
+            (0..elems)
+                .map(|i| ((r * 37 + i as u64 * 11) % 97) as f32 / 7.0)
+                .collect()
+        })
+        .collect();
+    let q = ceil_log2(p);
+    let n = (elems / 4096).clamp(1, 256);
+    println!(
+        "allreduce of {} f32 over p = {p} (q = {q}), circulant n = {n}:\n",
+        elems
+    );
+    println!("{:>28} {:>8} {:>14} {:>12}", "algorithm", "rounds", "time", "wire bytes");
+    let mut e = Engine::new(p, CostModel::flat_default());
+    let (_, out) = allreduce_circulant(&mut e, n, &contrib, true)?;
+    println!(
+        "{:>28} {:>8} {:>14} {:>12}",
+        "circulant reduce+bcast",
+        out.rounds,
+        fmt_time(out.time_s),
+        fmt_bytes(out.bytes_on_wire)
+    );
+    let mut e = Engine::new(p, CostModel::flat_default());
+    let (_, out) = reduce_binomial(&mut e, 0, &contrib, true)?;
+    println!(
+        "{:>28} {:>8} {:>14} {:>12}",
+        "binomial reduce (no bcast)",
+        out.rounds,
+        fmt_time(out.time_s),
+        fmt_bytes(out.bytes_on_wire)
+    );
+    let mut e = Engine::new(p, CostModel::flat_default());
+    let (_, out) = allreduce_ring(&mut e, &contrib, true)?;
+    println!(
+        "{:>28} {:>8} {:>14} {:>12}",
+        "ring RS+AG",
+        out.rounds,
+        fmt_time(out.time_s),
+        fmt_bytes(out.bytes_on_wire)
+    );
+    println!("\nall results verified against the serial sum.");
+    Ok(())
+}
+
+/// One-OS-thread-per-rank broadcast (each thread computes only its own
+/// schedule — no shared state beyond the channels).
+pub fn threaded(p: u64, n: usize, m: u64) -> Result<()> {
+    use crate::simulator::threaded_bcast;
+    let payload: Vec<u8> = (0..m).map(|i| ((i * 131) % 251) as u8).collect();
+    let rep = threaded_bcast(p, 0, n, &payload, std::time::Duration::from_secs(30))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "threaded broadcast: p = {p} OS threads, n = {n} blocks of {} — {} rounds in {} (verified per-rank)",
+        fmt_bytes(m / n as u64),
+        rep.rounds,
+        fmt_time(rep.wall_s)
+    );
+    Ok(())
+}
+
+/// PJRT end-to-end broadcast: real payload through the JAX/Pallas-authored
+/// executables on every simulated rank.
+pub fn e2e(p: u64, root: u64, artifacts: String) -> Result<()> {
+    let dir = if artifacts.is_empty() {
+        default_artifact_dir()
+    } else {
+        artifacts.into()
+    };
+    let coord = Coordinator::new(&dir)?;
+    let (n, b) = coord.artifact_shape();
+    println!(
+        "PJRT end-to-end broadcast: platform {}, p = {p}, root = {root}, n = {n} blocks × {b} f32",
+        coord.platform()
+    );
+    let report = coord.run_bcast(&E2eConfig {
+        p,
+        root,
+        cost: CostModel::flat_default(),
+    })?;
+    println!("  rounds          : {} (= n-1+⌈log₂p⌉)", report.rounds);
+    println!("  payload         : {}", fmt_bytes(report.payload_bytes));
+    println!("  wall time       : {}", fmt_time(report.wall_s));
+    println!("  simulated time  : {}", fmt_time(report.sim_s));
+    println!("  round latency   : {}", fmt_time(report.round_latency_s));
+    println!("  PJRT executions : {}", report.pjrt_calls);
+    println!(
+        "  goodput         : {}/s across {} receivers",
+        fmt_bytes(report.goodput_bps as u64),
+        p - 1
+    );
+    println!("  verification    : checksums + byte-exact buffers OK");
+    Ok(())
+}
+
+/// Quick smoke of every subsystem (used by CI-style runs).
+pub fn selftest() -> Result<()> {
+    print!("schedules (p ≤ 300 exhaustive) ... ");
+    for p in 1..=300 {
+        verify_p(p, &[3]).map_err(|e| anyhow::anyhow!("p={p}: {e}"))?;
+    }
+    println!("OK");
+    print!("broadcast collectives ... ");
+    let d: Vec<u8> = (0..4097u64).map(|i| (i % 251) as u8).collect();
+    let mut e = Engine::new(17, CostModel::flat_default());
+    bcast_circulant(&mut e, 3, 5, d.len() as u64, Some(&d))?;
+    let mut e = Engine::new(17, CostModel::cluster_36(4));
+    bcast_binomial(&mut e, 0, d.len() as u64, Some(&d))?;
+    let mut e = Engine::new(17, CostModel::flat_default());
+    bcast_scatter_allgather(&mut e, 1, d.len() as u64, Some(&d))?;
+    println!("OK");
+    print!("allgatherv collectives ... ");
+    let counts: Vec<u64> = (0..16u64).map(|i| (i % 3) * 64).collect();
+    let data: Vec<Vec<u8>> = counts
+        .iter()
+        .enumerate()
+        .map(|(j, &c)| (0..c).map(|i| (i + j as u64) as u8).collect())
+        .collect();
+    let input = AllgatherInput {
+        counts: &counts,
+        data: Some(&data),
+    };
+    let mut e = Engine::new(16, CostModel::flat_default());
+    allgatherv_circulant(&mut e, 4, &input)?;
+    let mut e = Engine::new(16, CostModel::flat_default());
+    allgatherv_ring(&mut e, &input)?;
+    let mut e = Engine::new(16, CostModel::flat_default());
+    allgatherv_bruck(&mut e, &input)?;
+    println!("OK");
+    print!("PJRT runtime + coordinator ... ");
+    match Coordinator::new(&default_artifact_dir()) {
+        Ok(coord) => {
+            coord.run_bcast(&E2eConfig {
+                p: 5,
+                root: 1,
+                cost: CostModel::flat_default(),
+            })?;
+            println!("OK");
+        }
+        Err(e) => println!("SKIPPED ({e})"),
+    }
+    println!("selftest passed");
+    Ok(())
+}

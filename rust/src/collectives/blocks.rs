@@ -1,0 +1,105 @@
+//! Block partitioning helpers.
+//!
+//! The paper's algorithms split a message of `m` (indivisible) units into
+//! `n` *roughly equal* blocks. We follow the standard MPI convention:
+//! the first `m mod n` blocks get `⌈m/n⌉` bytes, the rest `⌊m/n⌋`.
+
+/// Sizes of the `n` blocks of an `m`-byte message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockPartition {
+    pub m: u64,
+    pub n: usize,
+}
+
+impl BlockPartition {
+    pub fn new(m: u64, n: usize) -> BlockPartition {
+        assert!(n >= 1, "need at least one block");
+        BlockPartition { m, n }
+    }
+
+    /// Size in bytes of block `i`.
+    #[inline]
+    pub fn size(&self, i: usize) -> u64 {
+        debug_assert!(i < self.n);
+        let base = self.m / self.n as u64;
+        let rem = self.m % self.n as u64;
+        base + u64::from((i as u64) < rem)
+    }
+
+    /// Byte offset of block `i` within the message.
+    #[inline]
+    pub fn offset(&self, i: usize) -> u64 {
+        let base = self.m / self.n as u64;
+        let rem = self.m % self.n as u64;
+        base * i as u64 + rem.min(i as u64)
+    }
+
+    /// The byte range of block `i`.
+    #[inline]
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        let off = self.offset(i) as usize;
+        off..off + self.size(i) as usize
+    }
+
+    /// Largest block size (what a round's message size is driven by).
+    #[inline]
+    pub fn max_size(&self) -> u64 {
+        self.size(0)
+    }
+}
+
+/// The paper's block-size heuristic for `MPI_Bcast` (§3): block size
+/// `F·√(m/⌈log₂ p⌉)`, i.e. `n = max(1, m / (F·√(m/q)))`, capped to `m`.
+pub fn bcast_block_count(m: u64, q: usize, f: f64) -> usize {
+    if m == 0 || q == 0 {
+        return 1;
+    }
+    let bs = f * ((m as f64) / (q as f64)).sqrt();
+    let n = ((m as f64) / bs).round() as usize;
+    n.clamp(1, m as usize)
+}
+
+/// The paper's block-count heuristic for `MPI_Allgatherv` (§3):
+/// `n = √(m·⌈log₂ p⌉)/G` blocks per root, where `m` is the *total* size.
+pub fn allgather_block_count(m: u64, q: usize, g: f64) -> usize {
+    if m == 0 || q == 0 {
+        return 1;
+    }
+    let n = ((m as f64) * (q as f64)).sqrt() / g;
+    (n.round() as usize).clamp(1, m as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_sum_to_m() {
+        for m in [0u64, 1, 7, 100, 1017] {
+            for n in [1usize, 2, 3, 7, 32] {
+                let p = BlockPartition::new(m, n);
+                let total: u64 = (0..n).map(|i| p.size(i)).sum();
+                assert_eq!(total, m, "m={m} n={n}");
+                // Offsets consistent with sizes.
+                let mut off = 0;
+                for i in 0..n {
+                    assert_eq!(p.offset(i), off, "m={m} n={n} i={i}");
+                    off += p.size(i);
+                }
+                // Roughly equal: sizes differ by at most 1.
+                let mx = (0..n).map(|i| p.size(i)).max().unwrap();
+                let mn = (0..n).map(|i| p.size(i)).min().unwrap();
+                assert!(mx - mn <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn heuristics_sane() {
+        assert_eq!(bcast_block_count(0, 10, 70.0), 1);
+        let n = bcast_block_count(1 << 24, 11, 70.0);
+        assert!(n > 1 && n < (1 << 24));
+        let n = allgather_block_count(1 << 24, 11, 40.0);
+        assert!(n > 1 && n < (1 << 24));
+    }
+}

@@ -1,0 +1,19 @@
+//! Collective operations over the simulated machine: the paper's
+//! Algorithm 1 (broadcast) and Algorithm 2 (irregular allgatherv), plus the
+//! "native MPI" baselines the paper's figures compare against.
+
+pub mod allgather;
+pub mod hierarchical;
+pub mod reduce;
+pub mod bcast;
+pub mod blocks;
+
+pub use allgather::{
+    allgatherv_circulant_cost,
+    allgatherv_bruck, allgatherv_circulant, allgatherv_gather_bcast, allgatherv_ring,
+    AllgatherInput,
+};
+pub use bcast::{bcast_binomial, bcast_circulant, bcast_scatter_allgather, Outcome};
+pub use hierarchical::{allgatherv_hierarchical, bcast_hierarchical};
+pub use reduce::{allreduce_circulant, allreduce_ring, reduce_binomial, reduce_circulant};
+pub use blocks::{allgather_block_count, bcast_block_count, BlockPartition};

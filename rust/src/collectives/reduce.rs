@@ -1,0 +1,405 @@
+//! Reduction collectives built from the *same* schedules, by time reversal.
+//!
+//! The paper (§1) stresses that the symmetric circulant pattern serves many
+//! collectives beyond broadcast \[2,4,5,15\]. This module exploits a clean
+//! duality: running Algorithm 1 *backwards* — reverse every edge and
+//! traverse the rounds in reverse order — turns the n-block broadcast into
+//! a round-optimal n-block **reduction** to the root:
+//!
+//! * in broadcast, processor `r` *receives* block `b` exactly once (round
+//!   `t_b`) and *forwards* it in later rounds;
+//! * reversed, `r` *combines* incoming partial blocks in reverse-rounds
+//!   `R-1-s` (for each bcast send at round `s > t_b`) and *emits* its
+//!   accumulated block `b` at reverse-round `R-1-t_b` — after all
+//!   contributions have arrived. The root ends with the full reduction of
+//!   every block in the same `n-1+⌈log₂p⌉` rounds.
+//!
+//! [`allreduce_circulant`] chains reduce + broadcast (`2(n-1+q)` rounds).
+//! Baselines: binomial-tree reduce and ring reduce-scatter + ring
+//! allgather allreduce (the classical large-message algorithm).
+//!
+//! Payloads are `f32` vectors summed elementwise (the associative-
+//! commutative case; the schedule duality needs only associativity with
+//! the deterministic combine order used here).
+
+use super::bcast::Outcome;
+use super::blocks::BlockPartition;
+use crate::sched::{BcastPlan, Schedule, Skips};
+use crate::simulator::{Engine, Msg, SimError, Stats};
+
+fn outcome(before: Stats, after: Stats) -> Outcome {
+    let d = after - before;
+    Outcome {
+        rounds: d.rounds,
+        time_s: d.time_s,
+        bytes_on_wire: d.bytes_on_wire,
+    }
+}
+
+fn cerr(msg: String) -> SimError {
+    SimError::Collective(msg)
+}
+
+/// Elementwise sum of `src` into `dst`.
+fn combine(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// n-block reduction (sum) to `root` in the round-optimal `n-1+⌈log₂p⌉`
+/// rounds, by time-reversal of Algorithm 1.
+///
+/// `contrib[r]` is rank `r`'s input vector of `elems` f32; on success the
+/// returned vector is the elementwise sum (verified against a serial
+/// reference when `verify`).
+pub fn reduce_circulant(
+    eng: &mut Engine,
+    root: u64,
+    n: usize,
+    contrib: &[Vec<f32>],
+    verify: bool,
+) -> Result<(Vec<f32>, Outcome), SimError> {
+    let p = eng.p();
+    let before = eng.stats();
+    if contrib.len() as u64 != p {
+        return Err(cerr(format!("contrib length {} != p {p}", contrib.len())));
+    }
+    let elems = contrib[0].len();
+    if contrib.iter().any(|c| c.len() != elems) {
+        return Err(cerr("ragged contributions".into()));
+    }
+    if p == 1 {
+        return Ok((contrib[0].clone(), outcome(before, eng.stats())));
+    }
+    let skips = Skips::new(p);
+    let part = BlockPartition::new((elems * 4) as u64, n);
+    // Element ranges per block (4-byte elements).
+    let erange = |b: usize| {
+        let r = part.range(b);
+        r.start / 4..r.end / 4
+    };
+    let plans: Vec<BcastPlan> = (0..p)
+        .map(|r| {
+            let rel = (r + p - root) % p;
+            BcastPlan::new(Schedule::compute(&skips, rel), n)
+        })
+        .collect();
+    let rounds = plans[0].num_rounds();
+    // acc[r]: running partial sums held by rank r (all blocks; only the
+    // blocks scheduled through r are ever consulted).
+    let mut acc: Vec<Vec<f32>> = contrib.to_vec();
+    for t_rev in 0..rounds {
+        let t = rounds - 1 - t_rev; // the bcast round being reversed
+        let mut msgs = Vec::with_capacity(p as usize);
+        for r in 0..p {
+            // Reverse of "r receives block b from f" = r emits its
+            // accumulated block b to f.
+            let a = plans[r as usize].action(t);
+            if r == root {
+                continue; // the root only combines
+            }
+            if let Some(b) = a.recv_block {
+                let rel = (r + p - root) % p;
+                let from_rel = skips.from_proc(rel, a.k); // bcast source = reduce target
+                let to = (from_rel + root) % p;
+                let er = erange(b);
+                let payload = &acc[r as usize][er.clone()];
+                msgs.push(Msg {
+                    from: r,
+                    to,
+                    bytes: (er.len() * 4) as u64,
+                    tag: b as u64,
+                    data: Some(f32s_to_bytes(payload)),
+                });
+            }
+        }
+        let inbox = eng.exchange(msgs)?;
+        for r in 0..p {
+            // Reverse of "r sends block b to t" = r combines block b
+            // arriving from t.
+            if let Some(msg) = &inbox[r as usize] {
+                let a = plans[r as usize].action(t);
+                let expect = if r == root {
+                    // The root's bcast plan never sends (its sends are the
+                    // fresh injections); reversed, it combines what its
+                    // neighbors would have received from it: block =
+                    // sendblock of the root's schedule.
+                    a.send_block
+                } else {
+                    a.send_block
+                };
+                let b = msg.tag as usize;
+                if expect != Some(b) {
+                    return Err(cerr(format!(
+                        "rank {r} reverse-round {t_rev}: got block {b}, schedule says {expect:?}"
+                    )));
+                }
+                let er = erange(b);
+                let incoming = bytes_to_f32s(msg.data.as_ref().unwrap());
+                combine(&mut acc[r as usize][er], &incoming);
+            }
+        }
+    }
+    let result = acc[root as usize].clone();
+    if verify {
+        let mut want = vec![0f32; elems];
+        for c in contrib {
+            combine(&mut want, c);
+        }
+        for (i, (&g, &w)) in result.iter().zip(&want).enumerate() {
+            if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
+                return Err(cerr(format!("reduce mismatch at elem {i}: {g} vs {w}")));
+            }
+        }
+    }
+    Ok((result, outcome(before, eng.stats())))
+}
+
+/// Allreduce (sum) via reduce-to-root + n-block broadcast:
+/// `2(n-1+⌈log₂p⌉)` rounds on the circulant pattern.
+pub fn allreduce_circulant(
+    eng: &mut Engine,
+    n: usize,
+    contrib: &[Vec<f32>],
+    verify: bool,
+) -> Result<(Vec<f32>, Outcome), SimError> {
+    let before = eng.stats();
+    let (sum, _) = reduce_circulant(eng, 0, n, contrib, verify)?;
+    // Broadcast the reduced vector back out (data mode reuses the verified
+    // Algorithm 1 implementation).
+    let bytes = f32s_to_bytes(&sum);
+    super::bcast::bcast_circulant(eng, 0, n, bytes.len() as u64, Some(&bytes))?;
+    Ok((sum, outcome(before, eng.stats())))
+}
+
+/// Baseline: binomial-tree reduction (whole vector per edge, `⌈log₂p⌉`
+/// rounds).
+pub fn reduce_binomial(
+    eng: &mut Engine,
+    root: u64,
+    contrib: &[Vec<f32>],
+    verify: bool,
+) -> Result<(Vec<f32>, Outcome), SimError> {
+    let p = eng.p();
+    let before = eng.stats();
+    if contrib.len() as u64 != p {
+        return Err(cerr(format!("contrib length {} != p {p}", contrib.len())));
+    }
+    let elems = contrib[0].len();
+    if p == 1 {
+        return Ok((contrib[0].clone(), outcome(before, eng.stats())));
+    }
+    let q = crate::sched::ceil_log2(p);
+    let mut acc: Vec<Vec<f32>> = contrib.to_vec();
+    // Reverse binomial broadcast: round j = q-1..0, relative rank
+    // rel with rel >= 2^j, rel < 2^{j+1} sends to rel - 2^j.
+    for j in (0..q).rev() {
+        let step = 1u64 << j;
+        let mut msgs = Vec::new();
+        for rel in step..(2 * step).min(p) {
+            let from = (rel + root) % p;
+            let to = (rel - step + root) % p;
+            msgs.push(Msg {
+                from,
+                to,
+                bytes: (elems * 4) as u64,
+                tag: 0,
+                data: Some(f32s_to_bytes(&acc[from as usize])),
+            });
+        }
+        let inbox = eng.exchange(msgs)?;
+        for r in 0..p {
+            if let Some(msg) = &inbox[r as usize] {
+                let incoming = bytes_to_f32s(msg.data.as_ref().unwrap());
+                combine(&mut acc[r as usize], &incoming);
+            }
+        }
+    }
+    let result = acc[root as usize].clone();
+    if verify {
+        let mut want = vec![0f32; elems];
+        for c in contrib {
+            combine(&mut want, c);
+        }
+        for (i, (&g, &w)) in result.iter().zip(&want).enumerate() {
+            if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
+                return Err(cerr(format!("binomial reduce mismatch at {i}: {g} vs {w}")));
+            }
+        }
+    }
+    Ok((result, outcome(before, eng.stats())))
+}
+
+/// Baseline: ring reduce-scatter + ring allgather allreduce
+/// (`2(p-1)` rounds, bandwidth-optimal for large vectors).
+pub fn allreduce_ring(
+    eng: &mut Engine,
+    contrib: &[Vec<f32>],
+    verify: bool,
+) -> Result<(Vec<f32>, Outcome), SimError> {
+    let p = eng.p();
+    let before = eng.stats();
+    let elems = contrib[0].len();
+    if p == 1 {
+        return Ok((contrib[0].clone(), outcome(before, eng.stats())));
+    }
+    let part = BlockPartition::new((elems * 4) as u64, p as usize);
+    let erange = |c: usize| {
+        let r = part.range(c);
+        r.start / 4..r.end / 4
+    };
+    let mut acc: Vec<Vec<f32>> = contrib.to_vec();
+    // Reduce-scatter: p-1 rounds; rank r sends chunk (r - t) mod p to r+1,
+    // which combines it.
+    for t in 0..p - 1 {
+        let mut msgs = Vec::with_capacity(p as usize);
+        for r in 0..p {
+            let c = ((r + p - t % p) % p) as usize;
+            let er = erange(c);
+            msgs.push(Msg {
+                from: r,
+                to: (r + 1) % p,
+                bytes: (er.len() * 4) as u64,
+                tag: c as u64,
+                data: Some(f32s_to_bytes(&acc[r as usize][er])),
+            });
+        }
+        let inbox = eng.exchange(msgs)?;
+        for r in 0..p {
+            if let Some(msg) = &inbox[r as usize] {
+                let c = msg.tag as usize;
+                let er = erange(c);
+                let incoming = bytes_to_f32s(msg.data.as_ref().unwrap());
+                combine(&mut acc[r as usize][er], &incoming);
+            }
+        }
+    }
+    // Allgather: each chunk c is now complete at rank (c + p - 1) mod p;
+    // ring-circulate the completed chunks.
+    for t in 0..p - 1 {
+        let mut msgs = Vec::with_capacity(p as usize);
+        for r in 0..p {
+            // Completed chunk held by r at step t: (r + 1 + t)... the chunk
+            // r finished is c = (r + 1) mod p reduced fully at t = 0.
+            let c = ((r + 1 + p - t % p) % p) as usize;
+            let er = erange(c);
+            msgs.push(Msg {
+                from: r,
+                to: (r + 1) % p,
+                bytes: (er.len() * 4) as u64,
+                tag: c as u64,
+                data: Some(f32s_to_bytes(&acc[r as usize][er])),
+            });
+        }
+        let inbox = eng.exchange(msgs)?;
+        for r in 0..p {
+            if let Some(msg) = &inbox[r as usize] {
+                let c = msg.tag as usize;
+                let er = erange(c);
+                let incoming = bytes_to_f32s(msg.data.as_ref().unwrap());
+                acc[r as usize][er].copy_from_slice(&incoming);
+            }
+        }
+    }
+    if verify {
+        let mut want = vec![0f32; elems];
+        for c in contrib {
+            combine(&mut want, c);
+        }
+        for r in 0..p as usize {
+            for (i, (&g, &w)) in acc[r].iter().zip(&want).enumerate() {
+                if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
+                    return Err(cerr(format!(
+                        "ring allreduce mismatch rank {r} elem {i}: {g} vs {w}"
+                    )));
+                }
+            }
+        }
+    }
+    Ok((acc[0].clone(), outcome(before, eng.stats())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::CostModel;
+
+    fn contribs(p: u64, elems: usize) -> Vec<Vec<f32>> {
+        (0..p)
+            .map(|r| {
+                (0..elems)
+                    .map(|i| ((r * 37 + i as u64 * 11) % 97) as f32 / 7.0)
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn eng(p: u64) -> Engine {
+        Engine::new(p, CostModel::flat_default())
+    }
+
+    #[test]
+    fn reduce_circulant_round_optimal_and_correct() {
+        for p in [2u64, 3, 5, 8, 16, 17, 33] {
+            for n in [1usize, 2, 4, 7] {
+                for root in [0u64, p - 1] {
+                    let c = contribs(p, 4 * n);
+                    let mut e = eng(p);
+                    let (_, out) = reduce_circulant(&mut e, root, n, &c, true)
+                        .unwrap_or_else(|er| panic!("p={p} n={n} root={root}: {er}"));
+                    assert_eq!(
+                        out.rounds,
+                        n - 1 + crate::sched::ceil_log2(p),
+                        "p={p} n={n}: reduce must be round-optimal too"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_variants_agree() {
+        for p in [2u64, 4, 7, 16, 17] {
+            let c = contribs(p, 32);
+            let mut e = eng(p);
+            let (a, _) = allreduce_circulant(&mut e, 4, &c, true).unwrap();
+            let mut e = eng(p);
+            let (b, _) = reduce_binomial(&mut e, 0, &c, true).unwrap();
+            let mut e = eng(p);
+            let (r, _) = allreduce_ring(&mut e, &c, true).unwrap();
+            for i in 0..32 {
+                assert!((a[i] - b[i]).abs() < 1e-3, "p={p} i={i}");
+                assert!((a[i] - r[i]).abs() < 1e-3, "p={p} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn circulant_reduce_beats_binomial_for_many_blocks() {
+        let p = 64u64;
+        let elems = 1 << 18;
+        let c = contribs(p, elems);
+        let mut e1 = eng(p);
+        let (_, new) = reduce_circulant(&mut e1, 0, 64, &c, false).unwrap();
+        let mut e2 = eng(p);
+        let (_, bin) = reduce_binomial(&mut e2, 0, &c, false).unwrap();
+        assert!(
+            new.time_s < bin.time_s / 2.0,
+            "pipelined reduce {} should beat binomial {}",
+            new.time_s,
+            bin.time_s
+        );
+    }
+}

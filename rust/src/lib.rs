@@ -1,0 +1,21 @@
+//! # nblock-bcast
+//!
+//! A full reproduction of J. L. Träff, *"Round-optimal n-Block Broadcast
+//! Schedules in Logarithmic Time"* (2023): `O(log p)` construction of
+//! round-optimal broadcast receive/send schedules on circulant graphs, the
+//! broadcast (Algorithm 1) and irregular allgatherv (Algorithm 2)
+//! collectives they drive, a simulated one-ported message-passing machine
+//! with linear cost models standing in for the paper's 36×32-core cluster,
+//! baseline algorithms, and a PJRT-backed payload path (JAX/Pallas-authored
+//! HLO executed from rust).
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod bench_support;
+pub mod cli;
+pub mod collectives;
+pub mod coordinator;
+pub mod runtime;
+pub mod sched;
+pub mod simulator;

@@ -1,0 +1,9 @@
+//! `nblock` — CLI entry point. See `nblock help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = nblock_bcast::cli::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,192 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! rust hot path.
+//!
+//! Artifacts are HLO *text* produced by `python/compile/aot.py`
+//! (`jax.jit(f).lower(...)` → stablehlo → XLA computation → `as_hlo_text`).
+//! Text is the interchange format because the image's xla_extension 0.5.1
+//! rejects the 64-bit instruction ids in jax ≥ 0.5 serialized protos; the
+//! text parser reassigns ids. Python runs only at build time
+//! (`make artifacts`); this module is all that touches the artifacts at
+//! run time.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT client plus the executables loaded from the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO artifact, ready to execute.
+pub struct LoadedFn {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedFn> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(LoadedFn {
+            name: path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            exe,
+        })
+    }
+}
+
+impl LoadedFn {
+    /// Execute on literals; returns the untupled results (the AOT pipeline
+    /// lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {}: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+/// The artifact set described by `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    /// Blocks per buffer the artifacts were specialized for.
+    pub n: usize,
+    /// Elements per block.
+    pub b: usize,
+    /// Pack width (gather artifact index-vector length).
+    pub q: usize,
+    pub files: Vec<String>,
+}
+
+impl ArtifactSet {
+    /// Parse `manifest.txt` in `dir`.
+    pub fn discover(dir: &Path) -> Result<ArtifactSet> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("{} (run `make artifacts` first)", manifest.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+        let mut kv: HashMap<&str, usize> = HashMap::new();
+        for part in header.split_whitespace() {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad manifest header: {header}"))?;
+            kv.insert(k, v.parse()?);
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .copied()
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let files: Vec<String> = lines.map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect();
+        let set = ArtifactSet {
+            dir: dir.to_path_buf(),
+            n: get("n")?,
+            b: get("b")?,
+            q: get("q")?,
+            files,
+        };
+        for f in &set.files {
+            if !dir.join(f).exists() {
+                bail!("manifest lists missing artifact {f}");
+            }
+        }
+        Ok(set)
+    }
+
+    pub fn path(&self, stem: &str) -> Result<PathBuf> {
+        let name = self
+            .files
+            .iter()
+            .find(|f| f.starts_with(stem))
+            .ok_or_else(|| anyhow!("no artifact starting with {stem}"))?;
+        Ok(self.dir.join(name))
+    }
+}
+
+/// Default artifact directory (`$NBLOCK_ARTIFACTS` or `./artifacts`).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("NBLOCK_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<ArtifactSet> {
+        let dir = default_artifact_dir();
+        ArtifactSet::discover(&dir).ok()
+    }
+
+    #[test]
+    fn load_and_run_checksum_artifact() {
+        let Some(set) = artifacts() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = Runtime::cpu().expect("cpu client");
+        let f = rt
+            .load_hlo_text(&set.path("checksum").unwrap())
+            .expect("load checksum");
+        // buffer (n, b) of ones => per-block checksum = b.
+        let buf = xla::Literal::vec1(&vec![1f32; set.n * set.b])
+            .reshape(&[set.n as i64, set.b as i64])
+            .unwrap();
+        let out = f.run(&[buf]).expect("run");
+        let sums = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(sums.len(), set.n);
+        for s in sums {
+            assert!((s - set.b as f32).abs() < 1e-3, "{s} != {}", set.b);
+        }
+    }
+
+    #[test]
+    fn bcast_step_artifact_merges_and_gathers() {
+        let Some(set) = artifacts() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = Runtime::cpu().unwrap();
+        let f = rt.load_hlo_text(&set.path("bcast_step").unwrap()).unwrap();
+        let (n, b) = (set.n, set.b);
+        let buf = xla::Literal::vec1(&vec![0f32; n * b])
+            .reshape(&[n as i64, b as i64])
+            .unwrap();
+        let incoming = xla::Literal::vec1(&vec![3.5f32; b]);
+        let recv_idx = xla::Literal::scalar(2i32);
+        let send_idx = xla::Literal::scalar(2i32);
+        let out = f.run(&[buf, incoming, recv_idx, send_idx]).unwrap();
+        assert_eq!(out.len(), 2);
+        let newbuf = out[0].to_vec::<f32>().unwrap();
+        let outgoing = out[1].to_vec::<f32>().unwrap();
+        assert!(newbuf[2 * b..3 * b].iter().all(|&v| v == 3.5));
+        assert!(newbuf[..2 * b].iter().all(|&v| v == 0.0));
+        assert!(outgoing.iter().all(|&v| v == 3.5));
+    }
+}

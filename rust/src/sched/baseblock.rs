@@ -1,0 +1,140 @@
+//! Baseblock computation and canonical skip decompositions
+//! (Algorithm 4 and Lemma 1 of the paper).
+//!
+//! Every rank `r` with `0 ≤ r < p` can be written as a sum of *distinct*
+//! skips with strictly increasing indices (Lemma 1). The canonical such
+//! decomposition is produced greedily from the largest skip downwards
+//! (Algorithm 4). The *baseblock* of `r` is the smallest skip index in the
+//! canonical decomposition; it is the index of the first actual block `r`
+//! receives during a broadcast, and the root `r = 0` is assigned baseblock
+//! `q` by convention.
+
+use super::skips::Skips;
+
+/// The baseblock of rank `r` (Algorithm 4).
+///
+/// Returns the smallest skip index of the canonical skip decomposition of
+/// `r`, or `q` if `r = 0`. Runs in `O(log p)` time.
+pub fn baseblock(skips: &Skips, r: u64) -> usize {
+    debug_assert!(r < skips.p());
+    let q = skips.q();
+    let mut r = r;
+    let mut k = q;
+    while k > 0 {
+        k -= 1;
+        let s = skips.skip(k);
+        if s == r {
+            return k;
+        } else if s < r {
+            r -= s;
+        }
+    }
+    // Only r = 0 falls through (it never matches any skip).
+    debug_assert_eq!(r, 0);
+    q
+}
+
+/// The full canonical skip decomposition of `r` in increasing index order
+/// (Lemma 1): indices `e_0 < e_1 < … < e_{j-1}` with
+/// `r = Σ skip[e_i]` and `j < q`. Empty for `r = 0`.
+///
+/// The decomposition also describes the path along which the root's block
+/// `baseblock(r)` travels to reach `r`: the path visits the prefix sums of
+/// the skips, and the edge with index `e_i` is used in every round `≡ e_i
+/// (mod q)`.
+pub fn canonical_decomposition(skips: &Skips, r: u64) -> Vec<usize> {
+    debug_assert!(r < skips.p());
+    let mut out = Vec::with_capacity(skips.q());
+    let mut r = r;
+    let mut k = skips.q();
+    while k > 0 {
+        k -= 1;
+        let s = skips.skip(k);
+        if s == r {
+            out.push(k);
+            r = 0;
+            break;
+        } else if s < r {
+            out.push(k);
+            r -= s;
+        }
+    }
+    debug_assert_eq!(r, 0, "Lemma 1: every r < p decomposes into skips");
+    out.reverse();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseblock_p17_matches_table2() {
+        // Table 2, row "b": baseblocks for p = 17.
+        let s = Skips::new(17);
+        let expected = [5, 0, 1, 2, 0, 3, 0, 1, 2, 4, 0, 1, 2, 0, 3, 0, 1];
+        for (r, &b) in expected.iter().enumerate() {
+            assert_eq!(baseblock(&s, r as u64), b, "r={r}");
+        }
+    }
+
+    #[test]
+    fn baseblock_p16_matches_table1() {
+        // Table 1, row "Baseblock b before": for p = 16 the baseblock is the
+        // number of trailing zero bits (with b = q = 4 for the root).
+        let s = Skips::new(16);
+        let expected = [4, 0, 1, 0, 2, 0, 1, 0, 3, 0, 1, 0, 2, 0, 1, 0];
+        for (r, &b) in expected.iter().enumerate() {
+            assert_eq!(baseblock(&s, r as u64), b, "r={r}");
+        }
+    }
+
+    #[test]
+    fn baseblock_pow2_is_trailing_zeros() {
+        for exp in 1..12 {
+            let p = 1u64 << exp;
+            let s = Skips::new(p);
+            for r in 1..p {
+                assert_eq!(
+                    baseblock(&s, r),
+                    r.trailing_zeros() as usize,
+                    "p={p} r={r}"
+                );
+            }
+            assert_eq!(baseblock(&s, 0), exp);
+        }
+    }
+
+    #[test]
+    fn decomposition_sums_to_r_distinct_increasing() {
+        for p in 1..1024u64 {
+            let s = Skips::new(p);
+            for r in 0..p {
+                let d = canonical_decomposition(&s, r);
+                let sum: u64 = d.iter().map(|&e| s.skip(e)).sum();
+                assert_eq!(sum, r, "p={p} r={r}");
+                // Lemma 1 states j < q; for power-of-two p the all-ones rank
+                // r = p-1 uses all q skips, so the tight bound is j <= q.
+                assert!(d.len() <= s.q(), "p={p} r={r}: j <= q");
+                assert!(d.windows(2).all(|w| w[0] < w[1]), "p={p} r={r}");
+                if r > 0 {
+                    assert_eq!(d[0], baseblock(&s, r), "p={p} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn baseblock_of_skip_is_its_index() {
+        // Processor skip[k] receives its baseblock directly from the root in
+        // round k, so its baseblock must be k.
+        for p in 2..2048u64 {
+            let s = Skips::new(p);
+            for k in 0..s.q() {
+                if s.skip(k) < p {
+                    assert_eq!(baseblock(&s, s.skip(k)), k, "p={p} k={k}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Schedule precomputation and caching (the amortization strategy of
+//! Ritzdorf & Träff \[10\] that the `O(p log² p)` construction *required*,
+//! here optional: the `O(log p)` construction is cheap enough to run
+//! inline, but persistent communicators still benefit from reuse).
+//!
+//! [`ScheduleCache`] memoizes per-`(p, relative rank)` schedules behind a
+//! `RwLock`, so concurrent collective invocations on the same communicator
+//! share one computation. Eviction is size-capped FIFO over `p` groups.
+
+use super::recv::Scratch;
+use super::schedule::Schedule;
+use super::skips::Skips;
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// Cache statistics (for the ablation bench).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct Group {
+    skips: Arc<Skips>,
+    /// Lazily filled per-rank schedules.
+    schedules: HashMap<u64, Arc<Schedule>>,
+}
+
+/// A thread-safe, size-capped schedule cache.
+pub struct ScheduleCache {
+    max_groups: usize,
+    inner: RwLock<Inner>,
+}
+
+struct Inner {
+    groups: HashMap<u64, Group>,
+    insertion_order: Vec<u64>,
+    stats: CacheStats,
+}
+
+impl ScheduleCache {
+    /// `max_groups`: number of distinct communicator sizes kept.
+    pub fn new(max_groups: usize) -> ScheduleCache {
+        ScheduleCache {
+            max_groups: max_groups.max(1),
+            inner: RwLock::new(Inner {
+                groups: HashMap::new(),
+                insertion_order: Vec::new(),
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    /// The skips for `p` (cached).
+    pub fn skips(&self, p: u64) -> Arc<Skips> {
+        {
+            let inner = self.inner.read().unwrap();
+            if let Some(g) = inner.groups.get(&p) {
+                return g.skips.clone();
+            }
+        }
+        let mut inner = self.inner.write().unwrap();
+        self.ensure_group(&mut inner, p);
+        inner.groups[&p].skips.clone()
+    }
+
+    /// The schedule of relative rank `rel` in a `p`-communicator (cached).
+    pub fn schedule(&self, p: u64, rel: u64) -> Arc<Schedule> {
+        {
+            let inner = self.inner.read().unwrap();
+            if let Some(s) = inner.groups.get(&p).and_then(|g| g.schedules.get(&rel)) {
+                let s = s.clone();
+                drop(inner);
+                self.inner.write().unwrap().stats.hits += 1;
+                return s;
+            }
+        }
+        let mut inner = self.inner.write().unwrap();
+        self.ensure_group(&mut inner, p);
+        if let Some(s) = inner.groups[&p].schedules.get(&rel).cloned() {
+            inner.stats.hits += 1;
+            return s;
+        }
+        inner.stats.misses += 1;
+        let skips = inner.groups[&p].skips.clone();
+        let mut scratch = Scratch::new();
+        let (sched, _, _) = Schedule::compute_with(&skips, rel, &mut scratch);
+        let arc = Arc::new(sched);
+        inner
+            .groups
+            .get_mut(&p)
+            .unwrap()
+            .schedules
+            .insert(rel, arc.clone());
+        arc
+    }
+
+    /// Precompute every rank's schedule for a `p`-communicator (what an
+    /// `MPI_Comm_dup`-time hook would do).
+    pub fn warm(&self, p: u64) {
+        let skips = self.skips(p);
+        let mut scratch = Scratch::new();
+        let mut computed: Vec<(u64, Arc<Schedule>)> = Vec::with_capacity(p as usize);
+        for rel in 0..p {
+            let (s, _, _) = Schedule::compute_with(&skips, rel, &mut scratch);
+            computed.push((rel, Arc::new(s)));
+        }
+        let mut inner = self.inner.write().unwrap();
+        self.ensure_group(&mut inner, p);
+        let g = inner.groups.get_mut(&p).unwrap();
+        for (rel, s) in computed {
+            g.schedules.entry(rel).or_insert(s);
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.inner.read().unwrap().stats
+    }
+
+    fn ensure_group(&self, inner: &mut Inner, p: u64) {
+        if inner.groups.contains_key(&p) {
+            return;
+        }
+        while inner.groups.len() >= self.max_groups {
+            let evict = inner.insertion_order.remove(0);
+            inner.groups.remove(&evict);
+            inner.stats.evictions += 1;
+        }
+        inner.groups.insert(
+            p,
+            Group {
+                skips: Arc::new(Skips::new(p)),
+                schedules: HashMap::new(),
+            },
+        );
+        inner.insertion_order.push(p);
+    }
+}
+
+impl Default for ScheduleCache {
+    fn default() -> Self {
+        ScheduleCache::new(16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_hits_after_miss() {
+        let c = ScheduleCache::new(4);
+        let a = c.schedule(17, 8);
+        let b = c.schedule(17, 8);
+        assert_eq!(a.recv, b.recv);
+        let st = c.stats();
+        assert_eq!(st.misses, 1);
+        assert!(st.hits >= 1);
+    }
+
+    #[test]
+    fn cache_matches_direct_computation() {
+        let c = ScheduleCache::new(4);
+        for p in [5u64, 17, 64] {
+            let skips = Skips::new(p);
+            for r in 0..p {
+                let cached = c.schedule(p, r);
+                let direct = Schedule::compute(&skips, r);
+                assert_eq!(*cached, direct, "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn eviction_respects_cap() {
+        let c = ScheduleCache::new(2);
+        for p in [4u64, 8, 16, 32] {
+            c.warm(p);
+        }
+        assert!(c.stats().evictions >= 2);
+        // Still correct after eviction churn.
+        let s = c.schedule(4, 3);
+        assert_eq!(*s, Schedule::compute(&Skips::new(4), 3));
+    }
+
+    #[test]
+    fn concurrent_access() {
+        let c = std::sync::Arc::new(ScheduleCache::new(8));
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200u64 {
+                    let p = 16 + (i + t) % 32;
+                    let rel = (i * 7 + t) % p;
+                    let s = c.schedule(p, rel);
+                    assert_eq!(s.r, rel);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Round-optimal n-block broadcast schedules — the paper's core
+//! contribution.
+//!
+//! * [`skips`] — the circulant-graph communication pattern (Algorithm 3).
+//! * [`mod@baseblock`] — canonical skip decompositions (Algorithm 4, Lemma 1).
+//! * [`recv`] — `O(log p)` receive schedules (Algorithms 5 and 6).
+//! * [`send`] — `O(log p)` send schedules (Algorithms 7–9).
+//! * [`schedule`] — per-processor schedule bundle and the Algorithm 1
+//!   round plan (virtual-round shift, capping, O(1) per-round queries).
+//! * [`pow2`] — classical closed-form power-of-two schedules (Table 1).
+//! * [`baseline`] — the previous `O(log² p)`/`O(log³ p)` constructions
+//!   (Table 3 comparison).
+//! * [`verify`] — the four correctness conditions of §2.1, Theorem 1
+//!   delivery, and the §3 empirical bounds.
+
+pub mod baseblock;
+pub mod baseline;
+pub mod cache;
+pub mod pow2;
+pub mod recv;
+pub mod schedule;
+pub mod send;
+pub mod skips;
+pub mod verify;
+
+pub use cache::{CacheStats, ScheduleCache};
+pub use baseblock::{baseblock, canonical_decomposition};
+pub use recv::{recv_schedule, recv_schedule_into, recv_schedule_into_fast, RecvStats, Scratch};
+pub use schedule::{AllgatherSchedules, BcastPlan, RoundAction, Schedule};
+pub use send::{send_schedule, send_schedule_into, SendStats};
+pub use skips::{ceil_log2, Skips};
+pub use verify::{check_broadcast_delivery, check_conditions, verify_p, VerifyError, VerifyReport};

@@ -1,0 +1,177 @@
+//! Closed-form schedules for power-of-two `p` (§2.4, Table 1, and
+//! Johnsson/Ho \[7\]).
+//!
+//! For `p = 2^q` the skips are exactly the powers of two and the classical
+//! hypercube schedule has an `O(q)` closed form: processor `r` sends its own
+//! baseblock in rounds `0..=b` and afterwards the *largest block received so
+//! far*; equivalently, the (absolute, first-phase) block sent in round `k`
+//! is the position of the next set bit of `r ∨ p` at or after bit `k`
+//! (for `k = 0`: the lowest set bit).
+//!
+//! Note: this classical schedule is *not* entry-for-entry identical to the
+//! schedule produced by the paper's Algorithms 5–7 (which greedily forwards
+//! canonical-path baseblocks and may re-send a processor's baseblock in
+//! late rounds); both satisfy the four correctness conditions of §2.1.
+//! Table 1 of the paper prints the classical one — with one apparent
+//! erratum at `(r=14, k=1)`, where the closed form gives block `1` but the
+//! table prints `2`; that entry is never exercised (its destination is the
+//! root). See DESIGN.md §4.
+
+use super::skips::Skips;
+
+/// Absolute block sent by `r` in round `k` of the first phase (Table 1).
+///
+/// `p` must be a power of two. Returns values in `0..=q`, where `q` is only
+/// produced by the root (its "baseblock").
+pub fn table1_send_block(p: u64, r: u64, k: usize) -> usize {
+    debug_assert!(p.is_power_of_two() && r < p);
+    let masked = (r | p) >> k;
+    debug_assert!(masked != 0);
+    k + masked.trailing_zeros() as usize
+}
+
+/// Relative send schedule of processor `r` in the classical power-of-two
+/// scheme, in the same value convention as [`super::send_schedule`].
+///
+/// Steady-state mapping of Table 1's absolute first-phase values: the
+/// table's value `q` denotes the *fresh* block of the current phase —
+/// injected by the root in round `tz(r)`, so its relative value is the
+/// baseblock `tz(r)`; every value `v < q` denotes the copy received in the
+/// previous phase, relative value `v - q`. The root sends the fresh block
+/// `k` in round `k`.
+pub fn send_schedule_pow2(skips: &Skips, r: u64) -> Vec<i64> {
+    let p = skips.p();
+    let q = skips.q();
+    assert!(p.is_power_of_two(), "closed form requires p = 2^q");
+    if r == 0 {
+        return (0..q as i64).collect();
+    }
+    let b = r.trailing_zeros() as i64;
+    (0..q)
+        .map(|k| {
+            let v = table1_send_block(p, r, k);
+            if v == q {
+                b
+            } else {
+                v as i64 - q as i64
+            }
+        })
+        .collect()
+}
+
+/// Relative receive schedule in the classical power-of-two scheme:
+/// `recvblock[k]_r = sendblock[k]_{(r - 2^k) mod p}` (Condition 1). The
+/// single non-negative entry is the baseblock `tz(r)`, received in round
+/// `h(r)` (the highest set bit of `r`) — the same round as in the paper's
+/// canonical-path scheme.
+pub fn recv_schedule_pow2(skips: &Skips, r: u64) -> Vec<i64> {
+    let p = skips.p();
+    let q = skips.q();
+    assert!(p.is_power_of_two(), "closed form requires p = 2^q");
+    (0..q)
+        .map(|k| {
+            let f = skips.from_proc(r, k);
+            if f == 0 {
+                // Directly from the root: the fresh block k (= tz(r)).
+                k as i64
+            } else {
+                let v = table1_send_block(p, f, k);
+                if v == q {
+                    // f forwards its fresh block; since f < 2^k it shares
+                    // its low bits with r = f + 2^k, so this is also r's
+                    // fresh block tz(r) = tz(f).
+                    r.trailing_zeros() as i64
+                } else {
+                    v as i64 - q as i64
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 1 of the paper (p = 16), with the (r=14, k=1) erratum
+    /// corrected from 2 to 1 (see module docs).
+    #[test]
+    fn golden_table1_p16() {
+        #[rustfmt::skip]
+        let expected: [[usize; 16]; 4] = [
+            [4, 0, 1, 0, 2, 0, 1, 0, 3, 0, 1, 0, 2, 0, 1, 0],
+            [4, 4, 1, 1, 2, 2, 1, 1, 3, 3, 1, 1, 2, 2, /*erratum: 2*/ 1, 1],
+            [4, 4, 4, 4, 2, 2, 2, 2, 3, 3, 3, 3, 2, 2, 2, 2],
+            [4, 4, 4, 4, 4, 4, 4, 4, 3, 3, 3, 3, 3, 3, 3, 3],
+        ];
+        for k in 0..4 {
+            for r in 0..16u64 {
+                assert_eq!(
+                    table1_send_block(16, r, k),
+                    expected[k][r as usize],
+                    "r={r} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pow2_schedules_satisfy_condition_1() {
+        for exp in 1..9u32 {
+            let p = 1u64 << exp;
+            let skips = Skips::new(p);
+            let recv: Vec<Vec<i64>> = (0..p).map(|r| recv_schedule_pow2(&skips, r)).collect();
+            for r in 0..p {
+                let send = send_schedule_pow2(&skips, r);
+                for k in 0..skips.q() {
+                    let t = skips.to_proc(r, k);
+                    assert_eq!(send[k], recv[t as usize][k], "p={p} r={r} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pow2_recv_covers_condition_3_shape() {
+        // Exactly one non-negative entry (for r != 0), all entries distinct,
+        // negatives within {-q..-1}.
+        for exp in 1..9u32 {
+            let p = 1u64 << exp;
+            let skips = Skips::new(p);
+            let q = skips.q() as i64;
+            for r in 0..p {
+                let recv = recv_schedule_pow2(&skips, r);
+                let mut sorted = recv.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), q as usize, "p={p} r={r} distinct");
+                let nonneg = recv.iter().filter(|&&v| v >= 0).count();
+                assert_eq!(nonneg, usize::from(r != 0), "p={p} r={r}");
+                for &v in &recv {
+                    assert!((-q..q).contains(&v), "p={p} r={r} v={v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pow2_send_only_received_blocks() {
+        // Condition 4 for the classical scheme, with its own baseblock
+        // notion (the non-negative receive entry).
+        for exp in 1..9u32 {
+            let p = 1u64 << exp;
+            let skips = Skips::new(p);
+            let q = skips.q() as i64;
+            for r in 1..p {
+                let recv = recv_schedule_pow2(&skips, r);
+                let send = send_schedule_pow2(&skips, r);
+                let b = recv.iter().copied().find(|&v| v >= 0).unwrap();
+                assert_eq!(send[0], b - q, "p={p} r={r}");
+                for k in 1..skips.q() {
+                    let ok = send[k] == b - q || recv[..k].contains(&send[k]);
+                    assert!(ok, "p={p} r={r} k={k}: send={} recv={recv:?}", send[k]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,353 @@
+//! O(log p) receive-schedule construction
+//! (Algorithms 5 and 6 of the paper).
+//!
+//! For each processor `r`, the receive schedule `recvblock[0..q]` determines
+//! for each round-index `k` the (phase-relative) block received from
+//! processor `(r - skip[k]) mod p`. Entry values are relative block indices:
+//! exactly one entry is the non-negative baseblock `b` of `r`, the remaining
+//! `q-1` entries are the values `{-1, …, -q} \ {b - q}` denoting blocks
+//! received `q` rounds later per unit (Correctness Condition 3 in §2.1 of
+//! the paper).
+//!
+//! The construction is a greedy depth-first backtracking search over
+//! canonical skip sequences (paths from the root), made `O(log p)` overall
+//! by *removing* each accepted smallest skip index from a doubly linked
+//! list so that it is never considered again (Proposition 1: at most `2q`
+//! recursive calls).
+
+use super::baseblock::baseblock;
+use super::skips::Skips;
+
+/// Maximum supported `q+2` (list has slots for indices `-1 ..= q`); `q ≤ 64`
+/// covers every `p` representable in `u64`.
+const MAX_Q: usize = 66;
+
+/// Reusable, allocation-free scratch space for schedule computations.
+///
+/// One `Scratch` per thread suffices; computations reset the parts they
+/// use. Keeping it out of the hot path is the single biggest constant-factor
+/// win for the `O(log p)` construction (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct Scratch {
+    /// `next[e+1]`: next (smaller) live skip index after `e`; `-1` sentinel.
+    next: [i32; MAX_Q],
+    /// `prev[e+1]`: previous (larger) live skip index before `e`.
+    prev: [i32; MAX_Q],
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch {
+            next: [0; MAX_Q],
+            prev: [0; MAX_Q],
+        }
+    }
+
+    /// (Re-)initialize the doubly linked list of live skip indices
+    /// `q, q-1, …, 0` in decreasing scan order, with sentinel `-1`
+    /// (Algorithm 6 preamble).
+    #[inline]
+    fn init_list(&mut self, q: usize) {
+        for e in 0..=q as i32 {
+            self.next[(e + 1) as usize] = e - 1;
+            self.prev[(e + 1) as usize] = e + 1;
+        }
+        self.prev[q + 1] = -1;
+        self.next[0] = q as i32; // next[-1] = q
+        self.prev[0] = 0; // prev[-1] = 0
+    }
+
+    #[inline]
+    fn next_of(&self, e: i32) -> i32 {
+        self.next[(e + 1) as usize]
+    }
+
+    /// Unlink `e` from the list in O(1). The pointers *of* `e` are left
+    /// intact so an in-flight iteration positioned at `e` can continue.
+    #[inline]
+    fn unlink(&mut self, e: i32) {
+        let (pe, ne) = (self.prev[(e + 1) as usize], self.next[(e + 1) as usize]);
+        self.next[(pe + 1) as usize] = ne;
+        self.prev[(ne + 1) as usize] = pe;
+    }
+}
+
+/// Instrumentation for the empirical bound checks of the paper's §3
+/// (Proposition 1: at most `2q` recursive calls; plus total loop work).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RecvStats {
+    /// Number of recursive `DFS-BLOCKS` invocations (excluding the root call).
+    pub recursive_calls: u64,
+    /// Total while-loop iterations across all calls.
+    pub loop_iterations: u64,
+}
+
+struct Dfs<'a> {
+    /// `skip[0..=q+1]` with the `+∞` sentinel at `q+1` (hoisted out of
+    /// [`Skips`] so the hot loop indexes one flat slice — §Perf).
+    skip: &'a [u64],
+    /// Stop as soon as `k` rounds are filled (`q` = full schedule). Entries
+    /// are produced in increasing round order, so a prefix is a valid
+    /// partial schedule — the send-schedule violation repair only needs
+    /// entry `k` (§Perf iteration 3).
+    limit: usize,
+    /// Virtual target rank `p + r`.
+    r: u64,
+    /// Sum of the skips of the most recently accepted path (shared state
+    /// across the recursion; `2p` = "none yet").
+    s: u64,
+    scratch: &'a mut Scratch,
+    stats: RecvStats,
+}
+
+impl Dfs<'_> {
+    /// Algorithm 5, `DFS-BLOCKS(r, r', s, e, k, recvblock[])`.
+    ///
+    /// `COUNT` compiles the §3 instrumentation in or out — the counters
+    /// cost ~8% in the hot loop, so the plain schedule path omits them
+    /// (§Perf iteration 2).
+    ///
+    /// `rp` is the current path sum `r'`; `e` the skip index to start
+    /// scanning from; `k` the next round index to fill. Returns the updated
+    /// `k`. `out[k]` receives the accepted skip indices (later remapped to
+    /// relative block values by [`recv_schedule_into`]).
+    ///
+    /// SAFETY of the unchecked indexing: `e` only takes values that are
+    /// live linked-list nodes (`-1..=q`, and `-1` exits the loop before any
+    /// indexing), and `k ≤ q` at all times — `out[k]` is written exactly
+    /// once per accepted index and acceptance happens at most `q` times
+    /// because each acceptance removes a distinct list node. `skip` has
+    /// `q+2` entries so `skip[k+1]` is always in bounds (sentinel at `q+1`).
+    fn run<const COUNT: bool>(&mut self, rp: u64, mut e: i32, mut k: usize, out: &mut [i64]) -> usize {
+        let skip = self.skip;
+        debug_assert!(k + 1 < skip.len());
+        // Guard: r' <= r - skip[k+1]  (skip[q+1] = +inf sentinel).
+        if rp + unsafe { *skip.get_unchecked(k + 1) } <= self.r {
+            if k >= self.limit {
+                return k;
+            }
+            while e != -1 {
+                if COUNT {
+                    self.stats.loop_iterations += 1;
+                }
+                debug_assert!((e as usize) < skip.len() - 1);
+                let se = unsafe { *skip.get_unchecked(e as usize) };
+                // Admissible for k: r' + skip[e] <= r - skip[k].
+                if rp + se + unsafe { *skip.get_unchecked(k) } <= self.r {
+                    if COUNT {
+                        self.stats.recursive_calls += 1;
+                    }
+                    k = self.run::<COUNT>(rp + se, e, k, out);
+                    // Accept e if a canonical extension to r via skip[k+1]
+                    // still exists and this path is new (shorter sum than
+                    // the most recently accepted path).
+                    if rp + unsafe { *skip.get_unchecked(k + 1) } <= self.r && self.s > rp + se {
+                        self.s = rp + se;
+                        debug_assert!(k < out.len());
+                        unsafe { *out.get_unchecked_mut(k) = e as i64 };
+                        k += 1;
+                        self.scratch.unlink(e);
+                        if k >= self.limit {
+                            return k;
+                        }
+                    }
+                }
+                e = self.scratch.next_of(e);
+            }
+        }
+        k
+    }
+}
+
+/// Compute the receive schedule of processor `r` into `out[0..q]`
+/// (Algorithm 6), reusing `scratch`. Returns the baseblock of `r` together
+/// with the search statistics.
+///
+/// `out.len()` must be at least `q`; only `out[0..q]` is written.
+pub fn recv_schedule_into(
+    skips: &Skips,
+    r: u64,
+    scratch: &mut Scratch,
+    out: &mut [i64],
+) -> (usize, RecvStats) {
+    recv_schedule_into_impl::<true>(skips, r, scratch, out, usize::MAX)
+}
+
+/// Fast path without the §3 instrumentation (identical schedules).
+pub fn recv_schedule_into_fast(
+    skips: &Skips,
+    r: u64,
+    scratch: &mut Scratch,
+    out: &mut [i64],
+) -> usize {
+    recv_schedule_into_impl::<false>(skips, r, scratch, out, usize::MAX).0
+}
+
+/// Compute only `recvblock[k]` of processor `r` (prefix search with early
+/// exit — used by the send-schedule violation repair, §Perf iteration 3).
+///
+/// `out` is still scratch of length ≥ q; only entries `0..=k` are valid
+/// afterwards. Returns `recvblock[k]`.
+pub(crate) fn recv_block_at(
+    skips: &Skips,
+    r: u64,
+    k: usize,
+    scratch: &mut Scratch,
+    out: &mut [i64],
+) -> i64 {
+    recv_schedule_into_impl::<false>(skips, r, scratch, out, k + 1);
+    out[k]
+}
+
+#[inline]
+fn recv_schedule_into_impl<const COUNT: bool>(
+    skips: &Skips,
+    r: u64,
+    scratch: &mut Scratch,
+    out: &mut [i64],
+    limit: usize,
+) -> (usize, RecvStats) {
+    let q = skips.q();
+    debug_assert!(r < skips.p());
+    debug_assert!(out.len() >= q);
+    if q == 0 {
+        return (0, RecvStats::default());
+    }
+    scratch.init_list(q);
+    let b = baseblock(skips, r);
+    // Remove the baseblock index: the canonical path to r itself must not be
+    // rediscovered (its first skip is the baseblock, delivered separately).
+    scratch.unlink(b as i32);
+
+    let mut dfs = Dfs {
+        skip: skips.all_with_sentinel(),
+        limit,
+        r: skips.p() + r,
+        s: skips.p() + skips.p(),
+        scratch,
+        stats: RecvStats::default(),
+    };
+    let filled = dfs.run::<COUNT>(0, q as i32, 0, out);
+    // With an early-exit limit, ancestor recursion levels may each accept
+    // one further entry after the limit is reached (entries are still
+    // produced in round order and at most q acceptances can ever occur,
+    // since each removes a distinct list node); without a limit exactly q
+    // entries are filled.
+    debug_assert!(
+        filled >= q.min(limit) && filled <= q,
+        "DFS must fill the requested rounds (r={r}, filled={filled})"
+    );
+    let stats = dfs.stats;
+
+    // Remap skip indices to relative block values: index q (the direct edge
+    // from the root, i.e. skip[q] = p) is the baseblock; every other index
+    // e denotes the block received q rounds later, value e - q.
+    for slot in out[..q.min(limit)].iter_mut() {
+        if *slot == q as i64 {
+            *slot = b as i64;
+        } else {
+            *slot -= q as i64;
+        }
+    }
+    (b, stats)
+}
+
+/// Convenience allocating wrapper around [`recv_schedule_into`].
+pub fn recv_schedule(skips: &Skips, r: u64) -> Vec<i64> {
+    let mut out = vec![0i64; skips.q()];
+    let mut scratch = Scratch::new();
+    recv_schedule_into(skips, r, &mut scratch, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2 of the paper: the receive schedule for p = 17.
+    #[test]
+    fn golden_recv_p17() {
+        let skips = Skips::new(17);
+        #[rustfmt::skip]
+        let expected: [[i64; 17]; 5] = [
+            [-4,  0, -5, -4, -3, -5, -2, -5, -4, -3, -1, -5, -4, -3, -5, -2, -5],
+            [-5, -4,  1, -5, -4, -3, -3, -2, -5, -4, -3, -1, -5, -4, -3, -3, -2],
+            [-2, -2, -2,  2,  0, -4, -4, -3, -2, -2, -4, -3, -1, -1, -4, -4, -3],
+            [-1, -3, -3, -2, -2,  3,  0,  1,  2, -5, -2, -2, -2, -2, -1, -1, -1],
+            [-3, -1, -1, -1, -1, -1, -1, -1, -1,  4,  0,  1,  2,  0,  3,  0,  1],
+        ];
+        for r in 0..17u64 {
+            let got = recv_schedule(&skips, r);
+            for k in 0..5 {
+                assert_eq!(
+                    got[k], expected[k][r as usize],
+                    "p=17 r={r} k={k}: got {:?}",
+                    got
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recv_is_permutation_of_condition3_set() {
+        // Correctness Condition 3: the schedule contains exactly the values
+        // {-1..-q} \ {b-q} plus {b} (for the root: all of {-1..-q}).
+        for p in 2..512u64 {
+            let skips = Skips::new(p);
+            let q = skips.q() as i64;
+            let mut scratch = Scratch::new();
+            let mut out = vec![0i64; skips.q()];
+            for r in 0..p {
+                let (b, _) = recv_schedule_into(&skips, r, &mut scratch, &mut out);
+                let mut seen = out.clone();
+                seen.sort_unstable();
+                seen.dedup();
+                assert_eq!(seen.len(), skips.q(), "p={p} r={r}: distinct");
+                for &v in &out {
+                    if r == 0 {
+                        assert!((-q..0).contains(&v), "p={p} r=0 v={v}");
+                    } else {
+                        let ok = v == b as i64 || ((-q..0).contains(&v) && v != b as i64 - q);
+                        assert!(ok, "p={p} r={r} v={v} b={b}");
+                    }
+                }
+                if r != 0 {
+                    assert!(out.contains(&(b as i64)), "p={p} r={r}: baseblock present");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn proposition1_call_bound() {
+        // Proposition 1: at most 2q recursive calls per processor.
+        for p in 2..1024u64 {
+            let skips = Skips::new(p);
+            let mut scratch = Scratch::new();
+            let mut out = vec![0i64; skips.q()];
+            for r in 0..p {
+                let (_, stats) = recv_schedule_into(&skips, r, &mut scratch, &mut out);
+                assert!(
+                    stats.recursive_calls <= 2 * skips.q() as u64,
+                    "p={p} r={r}: {} calls > 2q={}",
+                    stats.recursive_calls,
+                    2 * skips.q()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p1_and_p2() {
+        assert!(recv_schedule(&Skips::new(1), 0).is_empty());
+        let skips = Skips::new(2);
+        assert_eq!(recv_schedule(&skips, 0), vec![-1]);
+        assert_eq!(recv_schedule(&skips, 1), vec![0]);
+    }
+}

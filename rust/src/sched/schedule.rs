@@ -1,0 +1,271 @@
+//! Full per-processor schedules and the round plan of Algorithm 1.
+//!
+//! [`Schedule`] bundles the receive and send schedules of one processor.
+//! [`BcastPlan`] turns a schedule plus a block count `n` into the concrete
+//! per-round actions of Algorithm 1: the `x` initial *virtual rounds* for
+//! the `x = Kq - (n-1+q)` dummy blocks are folded in, negative blocks are
+//! suppressed, and blocks beyond `n-1` are capped to `n-1`.
+//!
+//! The plan is stateless: the block for external round `t` is obtained in
+//! `O(1)` as `raw[k] + (i - k) - x` with `i = t + x`, `k = i mod q`, which
+//! is exactly the value produced by Algorithm 1's in-place `+q` increments.
+
+use super::recv::{recv_schedule_into, RecvStats, Scratch};
+use super::send::{send_schedule_into, SendStats};
+use super::skips::Skips;
+
+/// The complete (phase-relative) schedule of one processor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    /// Processor rank (relative to the root; the broadcast root is rank 0).
+    pub r: u64,
+    /// `q = ⌈log₂ p⌉`.
+    pub q: usize,
+    /// Baseblock of `r` (`q` for the root).
+    pub baseblock: usize,
+    /// Receive schedule `recvblock[0..q]` (relative block values).
+    pub recv: Vec<i64>,
+    /// Send schedule `sendblock[0..q]` (relative; absolute `k` for the root).
+    pub send: Vec<i64>,
+}
+
+impl Schedule {
+    /// Compute both schedules for processor `r` in `O(log p)` time.
+    pub fn compute(skips: &Skips, r: u64) -> Schedule {
+        let mut scratch = Scratch::new();
+        Self::compute_with(skips, r, &mut scratch).0
+    }
+
+    /// Zero-extra-allocation variant reusing `scratch`; returns statistics
+    /// for the paper's empirical bound checks (§3).
+    pub fn compute_with(
+        skips: &Skips,
+        r: u64,
+        scratch: &mut Scratch,
+    ) -> (Schedule, RecvStats, SendStats) {
+        let q = skips.q();
+        let mut recv = vec![0i64; q];
+        let mut send = vec![0i64; q];
+        let mut tmp = vec![0i64; q];
+        let (b, rs) = recv_schedule_into(skips, r, scratch, &mut recv);
+        let (_, ss) = send_schedule_into(skips, r, scratch, &mut tmp, &mut send);
+        (
+            Schedule {
+                r,
+                q,
+                baseblock: b,
+                recv,
+                send,
+            },
+            rs,
+            ss,
+        )
+    }
+}
+
+/// One communication round of Algorithm 1 for one processor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundAction {
+    /// External round number `t ∈ 0..n-1+q`.
+    pub round: usize,
+    /// Round index `k = (t + x) mod q` selecting the circulant edge.
+    pub k: usize,
+    /// Block index to send (`None`: dummy block, nothing is sent). The
+    /// collective layer additionally suppresses sends whose destination is
+    /// the root.
+    pub send_block: Option<usize>,
+    /// Block index to receive (`None`: dummy block, nothing is received).
+    pub recv_block: Option<usize>,
+}
+
+/// The concrete n-block broadcast round plan for one processor
+/// (Algorithm 1 minus the communication itself).
+#[derive(Debug, Clone)]
+pub struct BcastPlan {
+    /// Number of blocks to broadcast.
+    pub n: usize,
+    /// `q = ⌈log₂ p⌉`.
+    pub q: usize,
+    /// Virtual (skipped) rounds `x = (q - (n-1+q) mod q) mod q`.
+    pub x: usize,
+    /// Underlying schedule (unadjusted, phase-relative).
+    pub schedule: Schedule,
+}
+
+impl BcastPlan {
+    pub fn new(schedule: Schedule, n: usize) -> BcastPlan {
+        assert!(n >= 1, "need at least one block");
+        let q = schedule.q;
+        let x = if q == 0 { 0 } else { (q - (n - 1 + q) % q) % q };
+        BcastPlan { n, q, x, schedule }
+    }
+
+    /// Total number of communication rounds, `n - 1 + q` (round-optimal).
+    #[inline]
+    pub fn num_rounds(&self) -> usize {
+        if self.q == 0 {
+            0
+        } else {
+            self.n - 1 + self.q
+        }
+    }
+
+    /// Map a raw relative block value to the concrete block for internal
+    /// round `i`: Algorithm 1 increments each slot by `q` per phase, which
+    /// closed-form is `raw + (i - k) - x`; negatives are dummies, values
+    /// beyond `n-1` are capped to the last block.
+    #[inline]
+    fn concrete(&self, raw: i64, i: usize, k: usize) -> Option<usize> {
+        let v = raw + (i - k) as i64 - self.x as i64;
+        if v < 0 {
+            None
+        } else {
+            Some((v as usize).min(self.n - 1))
+        }
+    }
+
+    /// The action for external round `t ∈ 0..num_rounds()` in `O(1)`.
+    #[inline]
+    pub fn action(&self, t: usize) -> RoundAction {
+        debug_assert!(t < self.num_rounds());
+        let i = t + self.x;
+        let k = i % self.q;
+        RoundAction {
+            round: t,
+            k,
+            send_block: self.concrete(self.schedule.send[k], i, k),
+            recv_block: self.concrete(self.schedule.recv[k], i, k),
+        }
+    }
+
+    /// All actions in round order.
+    pub fn actions(&self) -> impl Iterator<Item = RoundAction> + '_ {
+        (0..self.num_rounds()).map(move |t| self.action(t))
+    }
+}
+
+/// The all-to-all broadcast schedule set of Algorithm 2: for every root `j`,
+/// the receive schedule of relative rank `(r - j) mod p` and the matching
+/// send schedule `sendblocks[j][k] = recvblocks[(j - skip[k]) mod p][k]`.
+#[derive(Debug, Clone)]
+pub struct AllgatherSchedules {
+    pub r: u64,
+    pub q: usize,
+    /// `recv[j][k]`: block received for root `j` in round-index `k`.
+    pub recv: Vec<Vec<i64>>,
+    /// `send[j][k]`: block sent for root `j` in round-index `k`.
+    pub send: Vec<Vec<i64>>,
+}
+
+impl AllgatherSchedules {
+    /// Compute the schedules of processor `r` for all `p` roots in
+    /// `O(p log p)` time — `p` independent `O(log p)` computations, no
+    /// communication (Algorithm 2 preamble).
+    pub fn compute(skips: &Skips, r: u64) -> AllgatherSchedules {
+        let p = skips.p();
+        let q = skips.q();
+        let mut scratch = Scratch::new();
+        let mut recv = vec![vec![0i64; q]; p as usize];
+        for j in 0..p {
+            let rel = if r >= j { r - j } else { r + p - j };
+            recv_schedule_into(skips, rel, &mut scratch, &mut recv[j as usize]);
+        }
+        let mut send = vec![vec![0i64; q]; p as usize];
+        for j in 0..p {
+            for k in 0..q {
+                let f = skips.from_proc(j, k);
+                send[j as usize][k] = recv[f as usize][k];
+            }
+        }
+        AllgatherSchedules { r, q, recv, send }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x_shift_values() {
+        let skips = Skips::new(17); // q = 5
+        let sched = Schedule::compute(&skips, 1);
+        // n = 1: rounds = q = 5, x = (5 - 5 % 5) % 5 = 0.
+        assert_eq!(BcastPlan::new(sched.clone(), 1).x, 0);
+        // n = 2: rounds = 6, x = (5 - 6 % 5) % 5 = 4.
+        assert_eq!(BcastPlan::new(sched.clone(), 2).x, 4);
+        // n = 6: rounds = 10, x = 0.
+        assert_eq!(BcastPlan::new(sched, 6).x, 0);
+    }
+
+    #[test]
+    fn closed_form_matches_mutating_algorithm1() {
+        // Replicate Algorithm 1's in-place adjustment + increments and check
+        // the O(1) closed form agrees on every round.
+        for p in [2u64, 5, 16, 17, 33, 100] {
+            let skips = Skips::new(p);
+            let q = skips.q();
+            for n in [1usize, 2, 3, 7, 16, 23] {
+                for r in 0..p.min(12) {
+                    let sched = Schedule::compute(&skips, r);
+                    let plan = BcastPlan::new(sched.clone(), n);
+                    let x = plan.x;
+                    // Algorithm 1 verbatim:
+                    let mut recvb = sched.recv.clone();
+                    let mut sendb = sched.send.clone();
+                    for i in 0..x {
+                        recvb[i] += q as i64 - x as i64;
+                        sendb[i] += q as i64 - x as i64;
+                    }
+                    for i in x..q {
+                        recvb[i] -= x as i64;
+                        sendb[i] -= x as i64;
+                    }
+                    let mut t = 0usize;
+                    for i in x..(n + q - 1 + x) {
+                        let k = i % q;
+                        let want_send = sendb[k];
+                        let want_recv = recvb[k];
+                        sendb[k] += q as i64;
+                        recvb[k] += q as i64;
+                        let a = plan.action(t);
+                        let cap = |v: i64| {
+                            if v < 0 {
+                                None
+                            } else {
+                                Some((v as usize).min(n - 1))
+                            }
+                        };
+                        assert_eq!(a.k, k, "p={p} n={n} r={r} t={t}");
+                        assert_eq!(a.send_block, cap(want_send), "p={p} n={n} r={r} t={t}");
+                        assert_eq!(a.recv_block, cap(want_recv), "p={p} n={n} r={r} t={t}");
+                        t += 1;
+                    }
+                    assert_eq!(t, plan.num_rounds());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_schedules_consistent() {
+        // sendblocks[j][k] of r must equal recvblocks[j][k] of the
+        // to-processor (Condition 1 lifted to every root j).
+        for p in [4u64, 7, 16, 17, 23] {
+            let skips = Skips::new(p);
+            let all: Vec<AllgatherSchedules> = (0..p)
+                .map(|r| AllgatherSchedules::compute(&skips, r))
+                .collect();
+            for r in 0..p {
+                for j in 0..p as usize {
+                    for k in 0..skips.q() {
+                        let t = skips.to_proc(r, k);
+                        assert_eq!(
+                            all[r as usize].send[j][k], all[t as usize].recv[j][k],
+                            "p={p} r={r} j={j} k={k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

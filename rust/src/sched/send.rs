@@ -1,0 +1,251 @@
+//! O(log p) send-schedule construction
+//! (Algorithms 7, 8 and 9 of the paper).
+//!
+//! The send schedule `sendblock[0..q]` of processor `r` determines the
+//! (phase-relative) block sent in round-index `k` to processor
+//! `(r + skip[k]) mod p`. Correctness requires
+//! `sendblock[k]_r = recvblock[k]_{(r+skip[k]) mod p}` (Condition 1/2).
+//!
+//! Instead of computing the neighbor's receive schedule for every round
+//! (`O(log² p)`), Algorithm 7 scans the rounds from `k = q-1` downwards,
+//! maintaining a *virtual rank* `r'` and an exclusive upper bound `e` with
+//! `0 ≤ r' < e`, halving the range like the power-of-two closed form. In a
+//! constant number of rounds — the *violations*, at most 4 (Proposition 3)
+//! — the regular pattern cannot decide the neighbor's block and one
+//! `O(log p)` receive-schedule computation for the neighbor is performed.
+//!
+//! The root's schedule is simply `sendblock[k] = k` (absolute block
+//! indices: the root injects a new block every round).
+
+use super::baseblock::baseblock;
+use super::recv::{recv_block_at, Scratch};
+use super::skips::Skips;
+
+/// Instrumentation for the empirical bound checks of the paper's §3
+/// (Proposition 3: at most 4 violations per processor).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct SendStats {
+    /// Violations of kind (1) — the special small-skip cases
+    /// `skip[2] = 3` / `skip[3] = 5` (Observations 2 and 3).
+    pub violations_1: u64,
+    /// Violations of kind (2) — lower part, `r' + skip[k] ≥ e`.
+    pub violations_2: u64,
+    /// Violations of kind (3) — upper part, `r' + skip[k] > e`.
+    pub violations_3: u64,
+}
+
+impl SendStats {
+    pub fn total(&self) -> u64 {
+        self.violations_1 + self.violations_2 + self.violations_3
+    }
+}
+
+/// Resolve a violation: the block sent by `r` in round `k` is the block the
+/// to-processor receives, obtained from one receive-schedule computation.
+#[inline]
+fn neighbor_recv_block(
+    skips: &Skips,
+    r: u64,
+    k: usize,
+    scratch: &mut Scratch,
+    tmp: &mut [i64],
+) -> i64 {
+    let t = skips.to_proc(r, k);
+    recv_block_at(skips, t, k, scratch, tmp)
+}
+
+/// Compute the send schedule of processor `r` into `out[0..q]`
+/// (Algorithm 7), reusing `scratch` and `tmp` (both at least `q` long /
+/// reusable across calls). Returns the baseblock and violation statistics.
+pub fn send_schedule_into(
+    skips: &Skips,
+    r: u64,
+    scratch: &mut Scratch,
+    tmp: &mut [i64],
+    out: &mut [i64],
+) -> (usize, SendStats) {
+    let q = skips.q();
+    debug_assert!(r < skips.p());
+    debug_assert!(out.len() >= q && tmp.len() >= q);
+    let mut stats = SendStats::default();
+    if q == 0 {
+        return (0, stats);
+    }
+    if r == 0 {
+        // The root sends block k in round k (absolute indices).
+        for (k, slot) in out[..q].iter_mut().enumerate() {
+            *slot = k as i64;
+        }
+        return (q, stats);
+    }
+
+    let b = baseblock(skips, r);
+    let mut rp = r; // virtual rank r'
+    let mut c = b as i64; // block to send while in the lower part
+    let mut e = skips.p(); // exclusive upper bound on r'
+    for k in (1..q).rev() {
+        let sk = skips.skip(k);
+        if rp < sk {
+            // ---- lower part: r' < skip[k] (Algorithm 8) ----
+            if e < skips.skip(k - 1) || (k == 1 && b > 0) {
+                // The range is so small that the receiver cannot yet have c.
+                out[k] = c;
+            } else if rp == 0 && k == 2 {
+                if e == 2 && skips.skip(2) == 3 {
+                    stats.violations_1 += 1; // Violation (1)
+                    out[k] = neighbor_recv_block(skips, r, k, scratch, tmp);
+                } else {
+                    out[k] = c;
+                }
+            } else if rp == 0 && sk == 5 {
+                // skip[k] = 5 implies k = 3.
+                if e == 3 {
+                    stats.violations_1 += 1; // Violation (1)
+                    out[k] = neighbor_recv_block(skips, r, k, scratch, tmp);
+                } else {
+                    out[k] = c;
+                }
+            } else if rp + sk >= e {
+                stats.violations_2 += 1; // Violation (2)
+                out[k] = neighbor_recv_block(skips, r, k, scratch, tmp);
+            } else {
+                out[k] = c;
+            }
+            if e > sk {
+                e = sk;
+            }
+        } else {
+            // ---- upper part: r' >= skip[k] (Algorithm 9) ----
+            c = k as i64 - q as i64;
+            if k == 1 || rp > sk || e - sk < skips.skip(k - 1) {
+                out[k] = c;
+            } else if k == 2 {
+                if skips.skip(2) == 3 && e == 5 {
+                    stats.violations_1 += 1; // Violation (1)
+                    out[k] = neighbor_recv_block(skips, r, k, scratch, tmp);
+                } else {
+                    out[k] = c;
+                }
+            } else if sk == 5 {
+                // skip[k] = 5 implies k = 3.
+                if e == 8 {
+                    stats.violations_1 += 1; // Violation (1)
+                    out[k] = neighbor_recv_block(skips, r, k, scratch, tmp);
+                } else {
+                    out[k] = c;
+                }
+            } else if rp + sk > e {
+                stats.violations_3 += 1; // Violation (3)
+                out[k] = neighbor_recv_block(skips, r, k, scratch, tmp);
+            } else {
+                out[k] = c;
+            }
+            rp -= sk;
+            e -= sk;
+        }
+    }
+    // Condition 4: the first send is always the baseblock, phase-relative.
+    out[0] = b as i64 - q as i64;
+    (b, stats)
+}
+
+/// Convenience allocating wrapper around [`send_schedule_into`].
+pub fn send_schedule(skips: &Skips, r: u64) -> Vec<i64> {
+    let q = skips.q();
+    let mut out = vec![0i64; q];
+    let mut tmp = vec![0i64; q];
+    let mut scratch = Scratch::new();
+    send_schedule_into(skips, r, &mut scratch, &mut tmp, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::recv::recv_schedule;
+
+    /// Table 2 of the paper: the send schedule for p = 17.
+    #[test]
+    fn golden_send_p17() {
+        let skips = Skips::new(17);
+        #[rustfmt::skip]
+        let expected: [[i64; 17]; 5] = [
+            [ 0, -5, -4, -3, -5, -2, -5, -4, -3, -1, -5, -4, -3, -5, -2, -5, -4],
+            [ 1, -5, -4, -3, -3, -2, -5, -4, -3, -1, -5, -4, -3, -3, -2, -5, -4],
+            [ 2,  0, -4, -4, -3, -2, -2, -4, -3, -1, -1, -4, -4, -3, -2, -2, -2],
+            [ 3,  0,  1,  2, -5, -2, -2, -2, -2, -1, -1, -1, -1, -3, -3, -2, -2],
+            [ 4,  0,  1,  2,  0,  3,  0,  1, -3, -1, -1, -1, -1, -1, -1, -1, -1],
+        ];
+        for r in 0..17u64 {
+            let got = send_schedule(&skips, r);
+            for k in 0..5 {
+                assert_eq!(
+                    got[k], expected[k][r as usize],
+                    "p=17 r={r} k={k}: got {:?}",
+                    got
+                );
+            }
+        }
+    }
+
+    /// Condition 1/2: sendblock[k]_r = recvblock[k]_{(r+skip[k]) mod p}.
+    #[test]
+    fn send_matches_neighbor_recv_small() {
+        for p in 2..400u64 {
+            let skips = Skips::new(p);
+            let recv: Vec<Vec<i64>> = (0..p).map(|r| recv_schedule(&skips, r)).collect();
+            for r in 0..p {
+                let send = send_schedule(&skips, r);
+                for k in 0..skips.q() {
+                    let t = skips.to_proc(r, k);
+                    assert_eq!(
+                        send[k], recv[t as usize][k],
+                        "p={p} r={r} k={k} t={t}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Proposition 3: at most 4 violations per processor.
+    #[test]
+    fn proposition3_violation_bound() {
+        let mut worst = 0;
+        for p in 2..2048u64 {
+            let skips = Skips::new(p);
+            let q = skips.q();
+            let mut scratch = Scratch::new();
+            let (mut tmp, mut out) = (vec![0i64; q], vec![0i64; q]);
+            for r in 0..p {
+                let (_, st) = send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut out);
+                assert!(st.total() <= 4, "p={p} r={r}: {} violations", st.total());
+                worst = worst.max(st.total());
+            }
+        }
+        assert!(worst >= 2, "violations should actually occur somewhere");
+    }
+
+    /// Paper §3 remark on Table 2: violations for p=17 occur at
+    /// (r=3, k=2) and (r=8, k=3).
+    #[test]
+    fn p17_has_documented_violations() {
+        let skips = Skips::new(17);
+        let q = skips.q();
+        let mut scratch = Scratch::new();
+        let (mut tmp, mut out) = (vec![0i64; q], vec![0i64; q]);
+        let (_, st3) = send_schedule_into(&skips, 3, &mut scratch, &mut tmp, &mut out);
+        assert!(st3.total() >= 1, "r=3 must hit a violation");
+        let (_, st8) = send_schedule_into(&skips, 8, &mut scratch, &mut tmp, &mut out);
+        assert!(st8.total() >= 1, "r=8 must hit a violation");
+    }
+
+    #[test]
+    fn root_sends_blocks_in_order() {
+        for p in [2u64, 3, 17, 64, 100] {
+            let skips = Skips::new(p);
+            let got = send_schedule(&skips, 0);
+            let want: Vec<i64> = (0..skips.q() as i64).collect();
+            assert_eq!(got, want, "p={p}");
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Circulant-graph skips (Algorithm 3 of the paper).
+//!
+//! For a `p`-processor system with `q = ⌈log₂ p⌉`, the broadcast
+//! communication pattern is the directed, `q`-regular circulant graph in
+//! which processor `r` has, for each round-index `k ∈ {0, …, q-1}`, an
+//! outgoing edge to `(r + skip[k]) mod p` and an incoming edge from
+//! `(r - skip[k]) mod p`. The skips are produced by repeated
+//! rounding-up halving of `p` (Algorithm 3): `skip[q] = p` and
+//! `skip[k] = ⌈skip[k+1] / 2⌉`, which always terminates with
+//! `skip[0] = 1` and `skip[1] = 2` (for `p ≥ 2`).
+//!
+//! The module also encodes the paper's Observations 1–5 as checked
+//! (debug-asserted and unit-tested) properties; the schedule constructions
+//! in [`crate::sched::recv`] and [`crate::sched::send`] rely on them.
+
+/// Number of rounds `q = ⌈log₂ p⌉` for `p ≥ 1`.
+///
+/// `q = 0` for `p = 1` (a single processor needs no communication).
+pub fn ceil_log2(p: u64) -> usize {
+    assert!(p >= 1, "p must be positive");
+    (64 - (p - 1).leading_zeros()) as usize
+}
+
+/// The circulant-graph skips for a `p`-processor system.
+///
+/// Holds `skip[0..=q]` with the convenience entry `skip[q] = p`
+/// (Algorithm 3), plus a sentinel `skip[q+1] = +∞` used by the
+/// receive-schedule search so that guards of the form
+/// `r' ≤ r - skip[k+1]` can be evaluated for `k = q` without branching.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Skips {
+    p: u64,
+    q: usize,
+    /// `skip[0..=q]`, with `skip[q] = p`; one extra sentinel slot at `q+1`.
+    skip: Vec<u64>,
+}
+
+/// Sentinel value standing in for `skip[q+1] = ∞`.
+///
+/// Large enough that `r' + SKIP_INF ≤ r` is false for every virtual rank
+/// `r < 2p ≤ 2⁶³`, small enough that it never overflows when added once.
+pub(crate) const SKIP_INF: u64 = 1 << 62;
+
+impl Skips {
+    /// Compute the skips for `p` processors (Algorithm 3).
+    ///
+    /// Runs in `O(log p)` time and space.
+    pub fn new(p: u64) -> Self {
+        assert!(p >= 1, "p must be positive");
+        let q = ceil_log2(p);
+        let mut skip = vec![0u64; q + 2];
+        skip[q + 1] = SKIP_INF;
+        skip[q] = p;
+        // skip[k] = skip[k+1] - skip[k+1]/2 = ceil(skip[k+1]/2)
+        for k in (0..q).rev() {
+            skip[k] = skip[k + 1] - skip[k + 1] / 2;
+        }
+        debug_assert!(q == 0 || skip[0] == 1, "q halving steps must reach 1");
+        Skips { p, q, skip }
+    }
+
+    /// The number of processors `p`.
+    #[inline]
+    pub fn p(&self) -> u64 {
+        self.p
+    }
+
+    /// The number of rounds per phase, `q = ⌈log₂ p⌉`.
+    #[inline]
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// `skip[k]` for `0 ≤ k ≤ q` (with `skip[q] = p`).
+    #[inline]
+    pub fn skip(&self, k: usize) -> u64 {
+        self.skip[k]
+    }
+
+    /// All skips including the `+∞` sentinel, `skip[0..=q+1]` (hot-path
+    /// view used by the receive-schedule DFS).
+    #[inline]
+    pub(crate) fn all_with_sentinel(&self) -> &[u64] {
+        &self.skip
+    }
+
+    /// All skips `skip[0..=q]` as a slice (excluding the sentinel).
+    #[inline]
+    pub fn as_slice(&self) -> &[u64] {
+        &self.skip[..=self.q]
+    }
+
+    /// The to-processor of `r` in round-index `k`: `(r + skip[k]) mod p`.
+    #[inline]
+    pub fn to_proc(&self, r: u64, k: usize) -> u64 {
+        debug_assert!(r < self.p);
+        let t = r + self.skip[k];
+        if t >= self.p {
+            t - self.p
+        } else {
+            t
+        }
+    }
+
+    /// The from-processor of `r` in round-index `k`: `(r - skip[k]) mod p`.
+    #[inline]
+    pub fn from_proc(&self, r: u64, k: usize) -> u64 {
+        debug_assert!(r < self.p);
+        let s = self.skip[k];
+        if r >= s {
+            r - s
+        } else {
+            r + self.p - s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_basics() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(16), 4);
+        assert_eq!(ceil_log2(17), 5);
+        assert_eq!(ceil_log2(1 << 20), 20);
+        assert_eq!(ceil_log2((1 << 20) + 1), 21);
+    }
+
+    #[test]
+    fn skips_p17() {
+        // Paper's running example (Table 2): p = 17, q = 5,
+        // skips = [1, 2, 3, 5, 9, 17].
+        let s = Skips::new(17);
+        assert_eq!(s.q(), 5);
+        assert_eq!(s.as_slice(), &[1, 2, 3, 5, 9, 17]);
+    }
+
+    #[test]
+    fn skips_p16_power_of_two() {
+        let s = Skips::new(16);
+        assert_eq!(s.q(), 4);
+        assert_eq!(s.as_slice(), &[1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn skips_p1() {
+        let s = Skips::new(1);
+        assert_eq!(s.q(), 0);
+        assert_eq!(s.as_slice(), &[1]);
+    }
+
+    #[test]
+    fn skips_small_all_start_one_two() {
+        for p in 2..2048u64 {
+            let s = Skips::new(p);
+            assert_eq!(s.skip(0), 1, "p={p}");
+            assert_eq!(s.skip(1), 2, "p={p}");
+            assert_eq!(s.skip(s.q()), p, "p={p}");
+        }
+    }
+
+    /// Observation 1: skip[k] + skip[k] >= skip[k+1].
+    #[test]
+    fn observation_1() {
+        for p in 1..4096u64 {
+            let s = Skips::new(p);
+            for k in 0..s.q() {
+                assert!(s.skip(k) * 2 >= s.skip(k + 1), "p={p} k={k}");
+            }
+        }
+    }
+
+    /// Observation 2: at most two k > 1 with skip[k-2] + skip[k-1] = skip[k],
+    /// and only for k ∈ {2, 3}.
+    #[test]
+    fn observation_2() {
+        for p in 1..4096u64 {
+            let s = Skips::new(p);
+            let mut count = 0;
+            for k in 2..=s.q() {
+                if s.skip(k - 2) + s.skip(k - 1) == s.skip(k) {
+                    count += 1;
+                    assert!(k <= 3, "p={p} k={k}");
+                }
+            }
+            assert!(count <= 2, "p={p} count={count}");
+        }
+    }
+
+    /// Observation 4: 1 + sum(skip[0..k]) >= skip[k] and
+    /// sum(skip[0..k-1]) < skip[k].
+    #[test]
+    fn observation_4() {
+        for p in 1..4096u64 {
+            let s = Skips::new(p);
+            let mut prefix = 0u64; // sum skip[0..k]
+            for k in 0..=s.q() {
+                assert!(1 + prefix >= s.skip(k), "p={p} k={k}");
+                if k >= 1 {
+                    let head = prefix - s.skip(k - 1); // sum skip[0..k-1]
+                    assert!(head < s.skip(k), "p={p} k={k}");
+                }
+                if k < s.q() {
+                    prefix += s.skip(k);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn to_from_inverse() {
+        for p in [2u64, 3, 5, 16, 17, 37, 100, 1023] {
+            let s = Skips::new(p);
+            for r in 0..p {
+                for k in 0..s.q() {
+                    let t = s.to_proc(r, k);
+                    assert_eq!(s.from_proc(t, k), r, "p={p} r={r} k={k}");
+                    assert!(t < p);
+                }
+            }
+        }
+    }
+}

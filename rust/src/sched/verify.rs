@@ -1,0 +1,301 @@
+//! Verifier for the four correctness conditions of §2.1 of the paper, plus
+//! the empirical bounds of §3 (Propositions 1 and 3) and the Theorem 1
+//! end-state.
+//!
+//! Given all `p` schedules, the conditions are checked in `O(p log p)` time
+//! (as the paper notes). Condition violations carry enough context to debug
+//! a broken construction.
+
+use super::recv::Scratch;
+use super::schedule::Schedule;
+use super::skips::Skips;
+use std::collections::HashSet;
+
+/// A violated correctness condition.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum VerifyError {
+    #[error("condition 1: p={p} r={r} k={k}: sendblock {send} != recvblock {recv} of to-processor {t}")]
+    SendRecvMismatch {
+        p: u64,
+        r: u64,
+        k: usize,
+        t: u64,
+        send: i64,
+        recv: i64,
+    },
+    #[error("condition 3: p={p} r={r}: receive blocks {blocks:?} are not {{-1..-q}}\\{{b-q}} ∪ {{b}} (b={b})")]
+    RecvBlockSet {
+        p: u64,
+        r: u64,
+        b: usize,
+        blocks: Vec<i64>,
+    },
+    #[error("condition 4: p={p} r={r} k={k}: sendblock {send} not received earlier and not baseblock-q")]
+    SendBeforeRecv { p: u64, r: u64, k: usize, send: i64 },
+    #[error("root schedule: p={p} k={k}: root must send block k, got {send}")]
+    RootSend { p: u64, k: usize, send: i64 },
+    #[error("theorem 1: p={p} r={r}: after {rounds} rounds missing blocks {missing:?}")]
+    MissingBlocks {
+        p: u64,
+        r: u64,
+        rounds: usize,
+        missing: Vec<usize>,
+    },
+    #[error("bound: p={p} r={r}: {what} = {got} exceeds {bound}")]
+    BoundExceeded {
+        p: u64,
+        r: u64,
+        what: &'static str,
+        got: u64,
+        bound: u64,
+    },
+}
+
+/// Aggregate statistics of a verification run (paper §3 reports these).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct VerifyReport {
+    pub p: u64,
+    /// Maximum DFS recursive calls over all processors (Prop 1: ≤ 2q).
+    pub max_recursive_calls: u64,
+    /// Maximum send-schedule violations over all processors (Prop 3: ≤ 4).
+    pub max_violations: u64,
+    /// Total send-schedule violations over all processors.
+    pub total_violations: u64,
+}
+
+/// Check Conditions 1, 3 and 4 for a full set of schedules.
+pub fn check_conditions(skips: &Skips, schedules: &[Schedule]) -> Result<(), VerifyError> {
+    let p = skips.p();
+    let q = skips.q();
+    assert_eq!(schedules.len(), p as usize);
+    if q == 0 {
+        return Ok(());
+    }
+    for r in 0..p {
+        let s = &schedules[r as usize];
+        // Condition 1 (== Condition 2): what r sends in round k is what the
+        // to-processor receives in round k.
+        for k in 0..q {
+            let t = skips.to_proc(r, k);
+            let send = s.send[k];
+            let recv = schedules[t as usize].recv[k];
+            if send != recv {
+                return Err(VerifyError::SendRecvMismatch {
+                    p,
+                    r,
+                    k,
+                    t,
+                    send,
+                    recv,
+                });
+            }
+        }
+        // Root send schedule: block k in round k.
+        if r == 0 {
+            for k in 0..q {
+                if s.send[k] != k as i64 {
+                    return Err(VerifyError::RootSend { p, k, send: s.send[k] });
+                }
+            }
+        }
+        // Condition 3: the receive blocks are exactly
+        // {-1..-q} \ {b-q} ∪ {b} (root: all of {-1..-q}).
+        let b = s.baseblock as i64;
+        let want: HashSet<i64> = if r == 0 {
+            (-(q as i64)..0).collect()
+        } else {
+            (-(q as i64)..0)
+                .filter(|&v| v != b - q as i64)
+                .chain(std::iter::once(b))
+                .collect()
+        };
+        let got: HashSet<i64> = s.recv.iter().copied().collect();
+        if got != want {
+            return Err(VerifyError::RecvBlockSet {
+                p,
+                r,
+                b: s.baseblock,
+                blocks: s.recv.clone(),
+            });
+        }
+        // Condition 4: a sent block was received in an earlier round of the
+        // same phase, or is the processor's baseblock from the previous
+        // phase (b - q). Implies sendblock[0] = b - q.
+        if r != 0 {
+            if s.send[0] != b - q as i64 {
+                return Err(VerifyError::SendBeforeRecv {
+                    p,
+                    r,
+                    k: 0,
+                    send: s.send[0],
+                });
+            }
+            for k in 1..q {
+                let v = s.send[k];
+                let ok = v == b - q as i64 || s.recv[..k].contains(&v);
+                if !ok {
+                    return Err(VerifyError::SendBeforeRecv { p, r, k, send: v });
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Operational check of Theorem 1: run the block-index dynamics of
+/// Algorithm 1 for `n` blocks and verify every processor ends up with all
+/// `n` blocks. `O(p (n + log p))` — intended for moderate `p`.
+pub fn check_broadcast_delivery(
+    skips: &Skips,
+    schedules: &[Schedule],
+    n: usize,
+) -> Result<(), VerifyError> {
+    use super::schedule::BcastPlan;
+    let p = skips.p();
+    let q = skips.q();
+    if q == 0 {
+        return Ok(());
+    }
+    let plans: Vec<BcastPlan> = schedules
+        .iter()
+        .map(|s| BcastPlan::new(s.clone(), n))
+        .collect();
+    let rounds = plans[0].num_rounds();
+    // have[r][blk]
+    let mut have = vec![vec![false; n]; p as usize];
+    have[0] = vec![true; n]; // root starts with everything
+    for t in 0..rounds {
+        // Simultaneous rounds: compute all receives from senders' state
+        // before applying them.
+        let mut recvs: Vec<(u64, usize)> = Vec::new();
+        for r in 0..p {
+            let a = plans[r as usize].action(t);
+            let to = skips.to_proc(r, a.k);
+            if to == 0 {
+                continue; // never send to the root
+            }
+            if let Some(sb) = a.send_block {
+                // The sender must actually hold the block (Condition 4 in
+                // operation).
+                if !have[r as usize][sb] {
+                    return Err(VerifyError::SendBeforeRecv {
+                        p,
+                        r,
+                        k: a.k,
+                        send: sb as i64,
+                    });
+                }
+                // The receiver's plan must expect exactly this block.
+                let ra = plans[to as usize].action(t);
+                if ra.recv_block != Some(sb) {
+                    return Err(VerifyError::SendRecvMismatch {
+                        p,
+                        r,
+                        k: a.k,
+                        t: to,
+                        send: sb as i64,
+                        recv: ra.recv_block.map_or(-1, |v| v as i64),
+                    });
+                }
+                recvs.push((to, sb));
+            }
+        }
+        for (to, blk) in recvs {
+            have[to as usize][blk] = true;
+        }
+    }
+    for r in 0..p {
+        let missing: Vec<usize> = (0..n).filter(|&b| !have[r as usize][b]).collect();
+        if !missing.is_empty() {
+            return Err(VerifyError::MissingBlocks {
+                p,
+                r,
+                rounds,
+                missing,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Full verification for one `p`: compute all schedules, check the §2.1
+/// conditions, the §3 empirical bounds, and (optionally) Theorem 1 delivery
+/// for each `n` in `ns`.
+pub fn verify_p(p: u64, ns: &[usize]) -> Result<VerifyReport, VerifyError> {
+    let skips = Skips::new(p);
+    let q = skips.q();
+    let mut scratch = Scratch::new();
+    let mut report = VerifyReport {
+        p,
+        ..Default::default()
+    };
+    let mut schedules = Vec::with_capacity(p as usize);
+    for r in 0..p {
+        let (s, rs, ss) = Schedule::compute_with(&skips, r, &mut scratch);
+        if rs.recursive_calls > 2 * q as u64 {
+            return Err(VerifyError::BoundExceeded {
+                p,
+                r,
+                what: "recursive calls",
+                got: rs.recursive_calls,
+                bound: 2 * q as u64,
+            });
+        }
+        if ss.total() > 4 {
+            return Err(VerifyError::BoundExceeded {
+                p,
+                r,
+                what: "send violations",
+                got: ss.total(),
+                bound: 4,
+            });
+        }
+        report.max_recursive_calls = report.max_recursive_calls.max(rs.recursive_calls);
+        report.max_violations = report.max_violations.max(ss.total());
+        report.total_violations += ss.total();
+        schedules.push(s);
+    }
+    check_conditions(&skips, &schedules)?;
+    for &n in ns {
+        check_broadcast_delivery(&skips, &schedules, n)?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conditions_hold_up_to_600() {
+        for p in 1..=600u64 {
+            verify_p(p, &[]).unwrap_or_else(|e| panic!("p={p}: {e}"));
+        }
+    }
+
+    #[test]
+    fn delivery_small() {
+        for p in [1u64, 2, 3, 4, 5, 7, 16, 17, 31, 33, 64, 100] {
+            for n in [1usize, 2, 3, 5, 8, 17] {
+                verify_p(p, &[n]).unwrap_or_else(|e| panic!("p={p} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_larger_p() {
+        for p in [1000u64, 1023, 1024, 1025, 2047, 3000, 4097] {
+            let rep = verify_p(p, &[4]).unwrap_or_else(|e| panic!("p={p}: {e}"));
+            assert!(rep.max_violations <= 4);
+        }
+    }
+
+    #[test]
+    fn condition_checker_catches_corruption() {
+        let skips = Skips::new(17);
+        let mut schedules: Vec<Schedule> = (0..17).map(|r| Schedule::compute(&skips, r)).collect();
+        // Corrupt one send entry.
+        schedules[5].send[2] = -1;
+        assert!(check_conditions(&skips, &schedules).is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! Linear (α + βm) communication cost models.
+//!
+//! The paper evaluates on a 36-node × 32-core cluster with dual 100 Gbit/s
+//! Omnipath between nodes. We do not have that machine; the substitute is a
+//! cost model assigning every message a transfer time `α + β·bytes`, with a
+//! hierarchical variant distinguishing intra-node from inter-node edges
+//! (ranks are placed round-robin-free, block-wise: rank `r` lives on node
+//! `r / ranks_per_node`, matching MPI's default dense mapping).
+//!
+//! In the one-ported, fully bidirectional model all messages of a round are
+//! concurrent, so the round time is the *maximum* edge cost and the total
+//! time is the sum over rounds — exactly the quantity the round-count lower
+//! bounds in the paper reason about.
+
+/// A linear per-message cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CostModel {
+    /// Homogeneous network: every edge costs `alpha + beta * bytes` seconds.
+    Flat { alpha: f64, beta: f64 },
+    /// Two-level cluster: ranks `r` and `s` are on the same node iff
+    /// `r / ranks_per_node == s / ranks_per_node`.
+    Hierarchical {
+        ranks_per_node: u64,
+        intra_alpha: f64,
+        intra_beta: f64,
+        inter_alpha: f64,
+        inter_beta: f64,
+    },
+}
+
+impl CostModel {
+    /// A flat model loosely calibrated to a modern HPC interconnect:
+    /// 2 µs latency, 12.5 GB/s (≈100 Gbit/s) bandwidth.
+    pub fn flat_default() -> CostModel {
+        CostModel::Flat {
+            alpha: 2.0e-6,
+            beta: 1.0 / 12.5e9,
+        }
+    }
+
+    /// A hierarchical model for the paper's 36×`ranks_per_node` cluster:
+    /// shared-memory transfers at 0.4 µs / 40 GB/s within a node, Omnipath
+    /// at 2 µs / 12.5 GB/s between nodes.
+    pub fn cluster_36(ranks_per_node: u64) -> CostModel {
+        CostModel::Hierarchical {
+            ranks_per_node,
+            intra_alpha: 0.4e-6,
+            intra_beta: 1.0 / 40.0e9,
+            inter_alpha: 2.0e-6,
+            inter_beta: 1.0 / 12.5e9,
+        }
+    }
+
+    /// Transfer time in seconds for one `bytes`-byte message `from → to`.
+    #[inline]
+    pub fn edge_cost(&self, from: u64, to: u64, bytes: u64) -> f64 {
+        match *self {
+            CostModel::Flat { alpha, beta } => alpha + beta * bytes as f64,
+            CostModel::Hierarchical {
+                ranks_per_node,
+                intra_alpha,
+                intra_beta,
+                inter_alpha,
+                inter_beta,
+            } => {
+                if from / ranks_per_node == to / ranks_per_node {
+                    intra_alpha + intra_beta * bytes as f64
+                } else {
+                    inter_alpha + inter_beta * bytes as f64
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_linear_in_bytes() {
+        let m = CostModel::Flat {
+            alpha: 1.0,
+            beta: 2.0,
+        };
+        assert_eq!(m.edge_cost(0, 1, 0), 1.0);
+        assert_eq!(m.edge_cost(0, 1, 10), 21.0);
+    }
+
+    #[test]
+    fn hierarchical_distinguishes_nodes() {
+        let m = CostModel::cluster_36(32);
+        let intra = m.edge_cost(0, 31, 1 << 20);
+        let inter = m.edge_cost(0, 32, 1 << 20);
+        assert!(intra < inter, "intra-node must be cheaper");
+        // Same node pair in both directions.
+        assert_eq!(m.edge_cost(33, 62, 123), m.edge_cost(62, 33, 123));
+    }
+
+    #[test]
+    fn monotone_in_bytes() {
+        for model in [CostModel::flat_default(), CostModel::cluster_36(4)] {
+            let mut last = 0.0;
+            for sz in [0u64, 1, 100, 10_000, 1 << 20] {
+                let c = model.edge_cost(0, 40, sz);
+                assert!(c >= last);
+                last = c;
+            }
+        }
+    }
+}

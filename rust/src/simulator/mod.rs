@@ -1,0 +1,10 @@
+//! Simulated message-passing substrate: the fully connected, one-ported,
+//! fully bidirectional machine of the paper, with linear-cost timing.
+
+pub mod cost;
+pub mod engine;
+pub mod threaded;
+
+pub use cost::CostModel;
+pub use threaded::{threaded_bcast, ThreadedReport};
+pub use engine::{Engine, Msg, SimError, Stats};

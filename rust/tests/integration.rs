@@ -1,0 +1,209 @@
+//! Cross-module integration tests: schedules → plans → collectives →
+//! simulator, end to end with real payloads.
+
+use nblock_bcast::collectives::{
+    allgatherv_bruck, allgatherv_circulant, allgatherv_circulant_cost, allgatherv_gather_bcast,
+    allgatherv_ring, bcast_binomial, bcast_circulant, bcast_scatter_allgather, AllgatherInput,
+    BlockPartition,
+};
+use nblock_bcast::sched::{ceil_log2, verify_p, Skips};
+use nblock_bcast::simulator::{CostModel, Engine};
+
+fn payload(m: u64, seed: u64) -> Vec<u8> {
+    (0..m).map(|i| ((i * 131 + seed * 29 + 7) % 251) as u8).collect()
+}
+
+#[test]
+fn exhaustive_verification_to_2048() {
+    for p in 1..=2048u64 {
+        let ns: &[usize] = if p <= 128 { &[1, 3, 9] } else { &[] };
+        verify_p(p, ns).unwrap_or_else(|e| panic!("p={p}: {e}"));
+    }
+}
+
+#[test]
+fn broadcast_all_algorithms_agree_on_delivery() {
+    for p in [5u64, 16, 17, 36, 100] {
+        let m = 7 * p + 13;
+        let d = payload(m, p);
+        for root in [0, p - 1] {
+            let mut e = Engine::new(p, CostModel::flat_default());
+            bcast_circulant(&mut e, root, 4, m, Some(&d)).unwrap();
+            let mut e = Engine::new(p, CostModel::cluster_36(4));
+            bcast_binomial(&mut e, root, m, Some(&d)).unwrap();
+            let mut e = Engine::new(p, CostModel::flat_default());
+            bcast_scatter_allgather(&mut e, root, m, Some(&d)).unwrap();
+        }
+    }
+}
+
+#[test]
+fn broadcast_round_optimality_across_n() {
+    // Algorithm 1 must take exactly n-1+q rounds, never more, for any n.
+    for p in [2u64, 9, 31, 64, 65] {
+        let q = ceil_log2(p);
+        for n in [1usize, 2, 5, 11, 40] {
+            let m = (n as u64) * 17;
+            let d = payload(m, 1);
+            let mut e = Engine::new(p, CostModel::flat_default());
+            let out = bcast_circulant(&mut e, 0, n, m, Some(&d)).unwrap();
+            assert_eq!(out.rounds, n - 1 + q, "p={p} n={n}");
+        }
+    }
+}
+
+#[test]
+fn bcast_wire_volume_near_optimal() {
+    // Each non-root rank receives m bytes (modulo last-block duplicates),
+    // so wire volume must be within the cap-padding slack of (p-1)·m.
+    let (p, n, m) = (33u64, 16usize, 32_000u64);
+    let mut e = Engine::new(p, CostModel::flat_default());
+    let out = bcast_circulant(&mut e, 0, n, m, None).unwrap();
+    let ideal = (p - 1) as f64 * m as f64;
+    let got = out.bytes_on_wire as f64;
+    assert!(got >= ideal);
+    assert!(got < 1.35 * ideal, "{got} vs ideal {ideal}");
+}
+
+#[test]
+fn allgatherv_cross_algorithm_agreement() {
+    for p in [4u64, 9, 17, 32] {
+        let counts: Vec<u64> = (0..p).map(|i| (i % 4) * 97 + (i % 7)).collect();
+        let data: Vec<Vec<u8>> = counts
+            .iter()
+            .enumerate()
+            .map(|(j, &c)| payload(c, j as u64))
+            .collect();
+        let input = AllgatherInput {
+            counts: &counts,
+            data: Some(&data),
+        };
+        for n in [1usize, 3, 8] {
+            let mut e = Engine::new(p, CostModel::flat_default());
+            allgatherv_circulant(&mut e, n, &input).unwrap_or_else(|er| panic!("p={p} n={n}: {er}"));
+        }
+        let mut e = Engine::new(p, CostModel::flat_default());
+        allgatherv_ring(&mut e, &input).unwrap();
+        let mut e = Engine::new(p, CostModel::flat_default());
+        allgatherv_bruck(&mut e, &input).unwrap();
+        let mut e = Engine::new(p, CostModel::flat_default());
+        allgatherv_gather_bcast(&mut e, &input).unwrap();
+    }
+}
+
+#[test]
+fn allgatherv_zero_contributors_everywhere() {
+    // Every rank empty except two; blocks of size zero must flow without
+    // tripping the engine or the verifier.
+    let p = 12u64;
+    let counts: Vec<u64> = (0..p).map(|i| if i == 3 || i == 7 { 100 } else { 0 }).collect();
+    let data: Vec<Vec<u8>> = counts
+        .iter()
+        .enumerate()
+        .map(|(j, &c)| payload(c, j as u64))
+        .collect();
+    let input = AllgatherInput {
+        counts: &counts,
+        data: Some(&data),
+    };
+    let mut e = Engine::new(p, CostModel::flat_default());
+    allgatherv_circulant(&mut e, 4, &input).unwrap();
+}
+
+#[test]
+fn cost_fast_path_tracks_exact_path() {
+    // Beyond the divisible case (unit-tested), the approximation must stay
+    // within the ceil-vs-split slack on ragged sizes.
+    for p in [8u64, 17, 40] {
+        let counts: Vec<u64> = (0..p).map(|i| (i % 3) * 1001 + 17).collect();
+        let n = 7usize;
+        let input = AllgatherInput {
+            counts: &counts,
+            data: None,
+        };
+        let mut e1 = Engine::new(p, CostModel::flat_default());
+        let exact = allgatherv_circulant(&mut e1, n, &input).unwrap();
+        let mut e2 = Engine::new(p, CostModel::flat_default());
+        let fast = allgatherv_circulant_cost(&mut e2, n, &counts).unwrap();
+        assert_eq!(exact.rounds, fast.rounds);
+        let ratio = fast.bytes_on_wire as f64 / exact.bytes_on_wire as f64;
+        assert!((0.99..1.10).contains(&ratio), "p={p}: ratio {ratio}");
+    }
+}
+
+#[test]
+fn hierarchical_model_orders_configs() {
+    // More ranks per node (fewer nodes used per message mix) should not
+    // slow the same total-size broadcast dramatically; mainly this pins
+    // that all three paper configs run.
+    let m = 1 << 20;
+    let mut times = Vec::new();
+    for (rpn, p) in [(32u64, 1152u64), (4, 144), (1, 36)] {
+        let mut e = Engine::new(p, CostModel::cluster_36(rpn));
+        let q = ceil_log2(p);
+        let n = nblock_bcast::collectives::bcast_block_count(m, q, 70.0);
+        times.push(bcast_circulant(&mut e, 0, n, m, None).unwrap().time_s);
+    }
+    assert!(times.iter().all(|&t| t > 0.0));
+}
+
+#[test]
+fn block_partition_matches_collective_usage() {
+    let part = BlockPartition::new(1000, 7);
+    let total: u64 = (0..7).map(|i| part.size(i)).sum();
+    assert_eq!(total, 1000);
+    assert_eq!(part.range(0).start, 0);
+    assert_eq!(part.range(6).end, 1000);
+}
+
+#[test]
+fn engine_rejects_two_ported_collective() {
+    // A deliberately broken "collective" that double-sends must be caught.
+    let mut e = Engine::new(4, CostModel::flat_default());
+    let msgs = vec![
+        nblock_bcast::simulator::Msg {
+            from: 1,
+            to: 0,
+            bytes: 1,
+            tag: 0,
+            data: None,
+        },
+        nblock_bcast::simulator::Msg {
+            from: 1,
+            to: 2,
+            bytes: 1,
+            tag: 0,
+            data: None,
+        },
+    ];
+    assert!(e.exchange(msgs).is_err());
+}
+
+#[test]
+fn skips_scale_to_u32_range() {
+    // Large p sanity (the paper verified up to ~16M ranks).
+    for p in [(1u64 << 24) - 1, 1 << 24, (1 << 24) + 1] {
+        let skips = Skips::new(p);
+        assert_eq!(skips.skip(skips.q()), p);
+        verify_single_rank(&skips, 12345);
+        verify_single_rank(&skips, p - 1);
+    }
+}
+
+fn verify_single_rank(skips: &Skips, r: u64) {
+    use nblock_bcast::sched::{recv_schedule, send_schedule};
+    let recv = recv_schedule(skips, r);
+    let q = skips.q() as i64;
+    let mut sorted = recv.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), skips.q());
+    assert!(recv.iter().all(|&v| (-q..q).contains(&v)));
+    // Condition 1 locally: send[k] == recv[k] of to-processor.
+    let send = send_schedule(skips, r);
+    for k in 0..skips.q() {
+        let t = skips.to_proc(r, k);
+        let recv_t = recv_schedule(skips, t);
+        assert_eq!(send[k], recv_t[k], "r={r} k={k}");
+    }
+}

@@ -1,0 +1,162 @@
+//! Randomized property tests (xorshift-seeded, deterministic — the offline
+//! image has no proptest). Each property runs a few hundred random cases
+//! over the coordinator invariants: schedule correctness, round plans,
+//! delivery, allgatherv consistency, cost-model sanity.
+
+use nblock_bcast::bench_support::XorShift;
+use nblock_bcast::collectives::{allgatherv_circulant, bcast_circulant, AllgatherInput};
+use nblock_bcast::sched::{
+    baseblock, canonical_decomposition, recv_schedule, send_schedule, verify_p, BcastPlan,
+    Schedule, Skips,
+};
+use nblock_bcast::simulator::{CostModel, Engine};
+
+#[test]
+fn prop_conditions_hold_for_random_p() {
+    let mut rng = XorShift::new(1);
+    for _ in 0..120 {
+        let p = rng.range(2, 1 << 17);
+        verify_p(p, &[]).unwrap_or_else(|e| panic!("p={p}: {e}"));
+    }
+}
+
+#[test]
+fn prop_decomposition_is_canonical_sum() {
+    let mut rng = XorShift::new(2);
+    for _ in 0..400 {
+        let p = rng.range(2, 1 << 20);
+        let skips = Skips::new(p);
+        let r = rng.below(p);
+        let d = canonical_decomposition(&skips, r);
+        let sum: u64 = d.iter().map(|&e| skips.skip(e)).sum();
+        assert_eq!(sum, r, "p={p} r={r}");
+        assert!(d.windows(2).all(|w| w[0] < w[1]));
+        if r > 0 {
+            assert_eq!(d[0], baseblock(&skips, r));
+        }
+    }
+}
+
+#[test]
+fn prop_plan_covers_all_blocks_exactly() {
+    // For every processor, the union of recv_block over all rounds must be
+    // {0..n-1} (the operational core of Theorem 1).
+    let mut rng = XorShift::new(3);
+    for _ in 0..60 {
+        let p = rng.range(2, 600);
+        let n = rng.range(1, 40) as usize;
+        let skips = Skips::new(p);
+        let r = rng.range(1, p - 1);
+        let plan = BcastPlan::new(Schedule::compute(&skips, r), n);
+        let mut seen = vec![0usize; n];
+        for a in plan.actions() {
+            if let Some(b) = a.recv_block {
+                seen[b] += 1;
+            }
+        }
+        // Every block exactly once, except the last which may be re-received
+        // due to capping.
+        for (b, &c) in seen.iter().enumerate() {
+            if b + 1 < n {
+                assert_eq!(c, 1, "p={p} n={n} r={r} block {b}");
+            } else {
+                assert!(c >= 1, "p={p} n={n} r={r} last block");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_send_is_previously_received_in_plan() {
+    // Operational Condition 4 on the concrete plan: every sent block was
+    // received in an earlier round (or is held from the virtual prefix —
+    // impossible for non-root, so it must have been received).
+    let mut rng = XorShift::new(4);
+    for _ in 0..60 {
+        let p = rng.range(2, 400);
+        let n = rng.range(1, 24) as usize;
+        let skips = Skips::new(p);
+        let r = rng.range(1, p - 1);
+        let plan = BcastPlan::new(Schedule::compute(&skips, r), n);
+        let mut have = vec![false; n];
+        for a in plan.actions() {
+            if let Some(s) = a.send_block {
+                assert!(have[s], "p={p} n={n} r={r} round {}: sends {s} unseen", a.round);
+            }
+            if let Some(b) = a.recv_block {
+                have[b] = true;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_broadcast_delivers_random_configs() {
+    let mut rng = XorShift::new(5);
+    for _ in 0..25 {
+        let p = rng.range(2, 80);
+        let n = rng.range(1, 12) as usize;
+        let m = rng.range(n as u64, 5000);
+        let root = rng.below(p);
+        let d: Vec<u8> = (0..m).map(|i| (i % 253) as u8).collect();
+        let mut e = Engine::new(p, CostModel::flat_default());
+        bcast_circulant(&mut e, root, n, m, Some(&d))
+            .unwrap_or_else(|er| panic!("p={p} n={n} m={m} root={root}: {er}"));
+    }
+}
+
+#[test]
+fn prop_allgatherv_random_irregular() {
+    let mut rng = XorShift::new(6);
+    for _ in 0..15 {
+        let p = rng.range(2, 28);
+        let n = rng.range(1, 6) as usize;
+        let counts: Vec<u64> = (0..p).map(|_| rng.below(400)).collect();
+        let data: Vec<Vec<u8>> = counts
+            .iter()
+            .map(|&c| (0..c).map(|i| (i % 251) as u8).collect())
+            .collect();
+        let input = AllgatherInput {
+            counts: &counts,
+            data: Some(&data),
+        };
+        let mut e = Engine::new(p, CostModel::flat_default());
+        allgatherv_circulant(&mut e, n, &input)
+            .unwrap_or_else(|er| panic!("p={p} n={n} counts={counts:?}: {er}"));
+    }
+}
+
+#[test]
+fn prop_schedules_translation_invariant_under_root() {
+    // Renumbering (r - root) mod p is how collectives use schedules; the
+    // schedule of relative rank must be independent of which absolute rank
+    // carries it. (Trivially true by construction — this pins the API.)
+    let mut rng = XorShift::new(7);
+    for _ in 0..50 {
+        let p = rng.range(2, 1 << 14);
+        let skips = Skips::new(p);
+        let rel = rng.below(p);
+        let a = recv_schedule(&skips, rel);
+        let b = recv_schedule(&skips, rel);
+        assert_eq!(a, b);
+        let sa = send_schedule(&skips, rel);
+        let sb = send_schedule(&skips, rel);
+        assert_eq!(sa, sb);
+    }
+}
+
+#[test]
+fn prop_cost_monotone_in_message_size() {
+    let mut rng = XorShift::new(8);
+    for _ in 0..20 {
+        let p = rng.range(4, 200);
+        let n = rng.range(1, 16) as usize;
+        let m1 = rng.range(n as u64, 1 << 20);
+        let m2 = m1 * 2;
+        let mut e1 = Engine::new(p, CostModel::flat_default());
+        let t1 = bcast_circulant(&mut e1, 0, n, m1, None).unwrap().time_s;
+        let mut e2 = Engine::new(p, CostModel::flat_default());
+        let t2 = bcast_circulant(&mut e2, 0, n, m2, None).unwrap().time_s;
+        assert!(t2 >= t1, "p={p} n={n}: {t2} < {t1}");
+    }
+}
