@@ -1,0 +1,69 @@
+//! Bench: broadcast wall-clock across the three transport backends for a
+//! grid of (p, n, block_size) — the *same* generic SPMD collective over
+//! the lockstep simulator, per-rank OS threads, and localhost TCP.
+//!
+//! The simulator column also reports the machine-model (simulated) time,
+//! which the other backends are trying to approach on real hardware; the
+//! thread/tcp columns are dominated by per-round rendezvous cost at small
+//! blocks and by memcpy/syscall throughput at large blocks.
+//!
+//! `cargo bench --bench bench_transport`
+
+use nblock_bcast::bench_support::{fmt_bytes, fmt_time, time_once};
+use nblock_bcast::collectives::generic::{bcast_circulant, bcast_rounds};
+use nblock_bcast::simulator::CostModel;
+use nblock_bcast::transport::sim::run_sim;
+use nblock_bcast::transport::tcp::run_tcp;
+use nblock_bcast::transport::thread::run_threads;
+use nblock_bcast::transport::Transport;
+use std::time::Duration;
+
+fn payload(m: u64) -> Vec<u8> {
+    (0..m).map(|i| ((i * 131 + 13) % 251) as u8).collect()
+}
+
+fn main() {
+    let timeout = Duration::from_secs(120);
+    println!("broadcast wall-clock by transport backend (root 0, delivery verified at every rank):");
+    println!(
+        "{:>4} {:>4} {:>10} {:>10} {:>7} | {:>12} {:>12} {:>12} {:>12}",
+        "p", "n", "block", "payload", "rounds", "sim wall", "thread wall", "tcp wall", "sim model"
+    );
+    for p in [4u64, 8, 16] {
+        for (n, bs) in [(4usize, 1024u64), (16, 1024), (16, 65536)] {
+            let m = n as u64 * bs;
+            let d = payload(m);
+            let spmd = |rank: u64, t: &mut dyn Transport| {
+                let data = if rank == 0 { Some(&d[..]) } else { None };
+                bcast_circulant(t, 0, n, m, data)
+            };
+            let check = |bufs: &[Vec<u8>]| {
+                assert!(bufs.iter().all(|b| b == &d), "delivery mismatch");
+            };
+            let (sim_out, sim_wall) = time_once(|| {
+                run_sim(p, CostModel::flat_default(), |mut t| spmd(t.rank(), &mut t)).unwrap()
+            });
+            check(&sim_out.0);
+            let (thread_out, thread_wall) =
+                time_once(|| run_threads(p, timeout, |mut t| spmd(t.rank(), &mut t)).unwrap());
+            check(&thread_out);
+            let (tcp_out, tcp_wall) =
+                time_once(|| run_tcp(p, timeout, |mut t| spmd(t.rank(), &mut t)).unwrap());
+            check(&tcp_out);
+            println!(
+                "{:>4} {:>4} {:>10} {:>10} {:>7} | {:>12} {:>12} {:>12} {:>12}",
+                p,
+                n,
+                fmt_bytes(bs),
+                fmt_bytes(m),
+                bcast_rounds(p, n),
+                fmt_time(sim_wall),
+                fmt_time(thread_wall),
+                fmt_time(tcp_wall),
+                fmt_time(sim_out.1.time_s),
+            );
+        }
+    }
+    println!("\nnote: tcp here is one thread per rank over real localhost sockets; the");
+    println!("separate-process shape (identical wire path) is examples/bcast_tcp.rs.");
+}

@@ -83,6 +83,9 @@ Tools:
   bcast --p P --m BYTES [--n N] [--root R]       compare bcast algorithms
   allgatherv --p P --m BYTES [--n N] [--type T]  compare allgatherv algorithms
                                                  (T: regular|irregular|degenerate)
+    both accept --transport {sim,thread,tcp}: run the generic SPMD
+    collective (real payload, verified) over that backend instead of the
+    cost-model comparison
   allreduce --p P --elems E  compare allreduce algorithms (circulant dual,
                              binomial, ring reduce-scatter+allgather)
   threaded --p P --n N --m BYTES   one-OS-thread-per-rank broadcast
@@ -93,6 +96,15 @@ Tools:
 Output: aligned tables on stdout; figures also write CSV next to the
 binary's working directory under bench_results/.
 ";
+
+/// The `--transport` option, rejecting a valueless `--transport` instead
+/// of silently falling back to the cost-model path.
+fn transport_arg(args: &Args) -> anyhow::Result<Option<&String>> {
+    if args.flags.iter().any(|f| f == "transport") {
+        anyhow::bail!("--transport needs a value: sim|thread|tcp");
+    }
+    Ok(args.options.get("transport"))
+}
 
 /// Entry point used by `main.rs`.
 pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
@@ -115,18 +127,36 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
             args.get("n", 5),
         ),
         "schedule" => tools::schedule(args.get("p", 17), args.get("r", 3)),
-        "bcast" => tools::bcast(
-            args.get("p", 64),
-            args.get("m", 1 << 20),
-            args.get("n", 0),
-            args.get("root", 0),
-        ),
-        "allgatherv" => tools::allgatherv(
-            args.get("p", 64),
-            args.get("m", 1 << 20),
-            args.get("n", 0),
-            args.get("type", "regular".to_string()),
-        ),
+        "bcast" => match transport_arg(&args)? {
+            Some(backend) => tools::bcast_transport(
+                args.get("p", 16),
+                args.get("m", 1 << 16),
+                args.get("n", 0),
+                args.get("root", 0),
+                backend.as_str(),
+            ),
+            None => tools::bcast(
+                args.get("p", 64),
+                args.get("m", 1 << 20),
+                args.get("n", 0),
+                args.get("root", 0),
+            ),
+        },
+        "allgatherv" => match transport_arg(&args)? {
+            Some(backend) => tools::allgatherv_transport(
+                args.get("p", 16),
+                args.get("m", 1 << 16),
+                args.get("n", 0),
+                &args.get("type", "regular".to_string()),
+                backend.as_str(),
+            ),
+            None => tools::allgatherv(
+                args.get("p", 64),
+                args.get("m", 1 << 20),
+                args.get("n", 0),
+                args.get("type", "regular".to_string()),
+            ),
+        },
         "allreduce" => tools::allreduce(args.get("p", 64), args.get("elems", 1 << 16)),
         "threaded" => tools::threaded(args.get("p", 16), args.get("n", 8), args.get("m", 1 << 16)),
         "ablation" => ablation::run(

@@ -3,17 +3,21 @@
 //! selftest.
 
 use crate::bench_support::{fmt_bytes, fmt_time, XorShift};
+use crate::collectives::generic;
 use crate::collectives::{
     allgatherv_bruck, allgatherv_circulant, allgatherv_gather_bcast, allgatherv_ring,
     bcast_binomial, bcast_block_count, bcast_circulant, bcast_scatter_allgather, AllgatherInput,
 };
+#[cfg(feature = "pjrt")]
 use crate::coordinator::{Coordinator, E2eConfig};
+#[cfg(feature = "pjrt")]
 use crate::runtime::default_artifact_dir;
 use crate::sched::{
     baseblock, canonical_decomposition, ceil_log2, verify_p, Schedule, Skips,
 };
 use crate::simulator::{CostModel, Engine};
 use anyhow::{bail, Result};
+use std::time::Duration;
 
 /// Exhaustive conditions check for all `p ≤ max`, plus `sample` random
 /// larger `p` up to 2²⁰; reports the §3 empirical bounds.
@@ -130,12 +134,7 @@ pub fn allgatherv(p: u64, m: u64, n: usize, kind: String) -> Result<()> {
     } else {
         n
     };
-    let counts: Vec<u64> = match kind.as_str() {
-        "regular" => (0..p).map(|_| m / p).collect(),
-        "irregular" => (0..p).map(|i| (i % 3) * (m / p)).collect(),
-        "degenerate" => (0..p).map(|i| if i == 0 { m } else { 0 }).collect(),
-        other => bail!("unknown problem type {other} (regular|irregular|degenerate)"),
-    };
+    let counts = problem_counts(&kind, p, m)?;
     let input = AllgatherInput {
         counts: &counts,
         data: None,
@@ -248,8 +247,136 @@ pub fn threaded(p: u64, n: usize, m: u64) -> Result<()> {
     Ok(())
 }
 
+/// Counts vector for one of the paper's three allgatherv problem types.
+fn problem_counts(kind: &str, p: u64, m: u64) -> Result<Vec<u64>> {
+    Ok(match kind {
+        "regular" => (0..p).map(|_| m / p).collect(),
+        "irregular" => (0..p).map(|i| (i % 3) * (m / p)).collect(),
+        "degenerate" => (0..p).map(|i| if i == 0 { m } else { 0 }).collect(),
+        other => bail!("unknown problem type {other} (regular|irregular|degenerate)"),
+    })
+}
+
+/// Dispatch one SPMD program to the named transport backend. Returns the
+/// per-rank results plus the engine accounting when the backend is the
+/// simulator.
+fn run_over_backend<R, F>(
+    backend: &str,
+    p: u64,
+    timeout: Duration,
+    spmd: F,
+) -> Result<(Vec<R>, Option<crate::simulator::Stats>)>
+where
+    R: Send,
+    F: Fn(
+            Box<dyn crate::transport::Transport>,
+        ) -> std::result::Result<R, crate::transport::TransportError>
+        + Sync,
+{
+    use crate::transport::{sim::run_sim, tcp::run_tcp, thread::run_threads};
+    Ok(match backend {
+        "sim" => {
+            let (res, stats) = run_sim(p, CostModel::flat_default(), |t| spmd(Box::new(t)))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            (res, Some(stats))
+        }
+        "thread" => (
+            run_threads(p, timeout, |t| spmd(Box::new(t))).map_err(|e| anyhow::anyhow!("{e}"))?,
+            None,
+        ),
+        "tcp" => (
+            run_tcp(p, timeout, |t| spmd(Box::new(t))).map_err(|e| anyhow::anyhow!("{e}"))?,
+            None,
+        ),
+        other => bail!("unknown transport `{other}` (sim|thread|tcp)"),
+    })
+}
+
+/// Run one data-mode collective over a chosen transport backend
+/// (`--transport {sim,thread,tcp}`): the *same* generic SPMD code on the
+/// lockstep simulator, per-rank OS threads, or localhost TCP sockets.
+pub fn bcast_transport(p: u64, m: u64, n: usize, root: u64, backend: &str) -> Result<()> {
+    use crate::transport::Transport;
+    if p == 0 {
+        bail!("need at least one rank");
+    }
+    let q = ceil_log2(p);
+    let n = if n == 0 { bcast_block_count(m, q, 70.0) } else { n };
+    if root >= p {
+        bail!("root must be < p");
+    }
+    let payload: Vec<u8> = (0..m).map(|i| ((i * 131) % 251) as u8).collect();
+    println!(
+        "broadcast of {} from root {root} over p = {p} (q = {q}), n = {n} blocks, transport `{backend}`",
+        fmt_bytes(m)
+    );
+    let t0 = std::time::Instant::now();
+    let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+        let data = if t.rank() == root { Some(&payload[..]) } else { None };
+        generic::bcast_circulant(t.as_mut(), root, n, m, data)
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    for (r, buf) in results.iter().enumerate() {
+        if buf != &payload {
+            bail!("rank {r}: delivery mismatch");
+        }
+    }
+    println!("  delivery   : byte-exact at all {p} ranks");
+    println!("  rounds     : {} (= n-1+q)", generic::bcast_rounds(p, n));
+    println!("  wall time  : {}", fmt_time(wall));
+    if let Some(stats) = sim_stats {
+        println!("  sim time   : {}", fmt_time(stats.time_s));
+        println!("  wire bytes : {}", fmt_bytes(stats.bytes_on_wire));
+    }
+    Ok(())
+}
+
+/// `--transport` counterpart for the irregular allgatherv.
+pub fn allgatherv_transport(p: u64, m: u64, n: usize, kind: &str, backend: &str) -> Result<()> {
+    use crate::transport::Transport;
+    if p == 0 {
+        bail!("need at least one rank");
+    }
+    let q = ceil_log2(p);
+    let n = if n == 0 {
+        crate::collectives::allgather_block_count(m, q, 40.0)
+    } else {
+        n
+    };
+    let counts = problem_counts(kind, p, m)?;
+    let datas: Vec<Vec<u8>> = counts
+        .iter()
+        .enumerate()
+        .map(|(j, &c)| (0..c).map(|i| ((i * 7 + j as u64 * 13) % 251) as u8).collect())
+        .collect();
+    println!(
+        "allgatherv ({kind}) of total {} over p = {p} (q = {q}), n = {n} blocks/root, transport `{backend}`",
+        fmt_bytes(counts.iter().sum())
+    );
+    let t0 = std::time::Instant::now();
+    let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+        let mine = &datas[t.rank() as usize];
+        generic::allgatherv_circulant(t.as_mut(), n, &counts, mine)
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    for (r, bufs) in results.iter().enumerate() {
+        if bufs != &datas {
+            bail!("rank {r}: delivery mismatch");
+        }
+    }
+    println!("  delivery   : all {p} contributions byte-exact at all {p} ranks");
+    println!("  rounds     : {} (= n-1+q)", n - 1 + q);
+    println!("  wall time  : {}", fmt_time(wall));
+    if let Some(stats) = sim_stats {
+        println!("  sim time   : {}", fmt_time(stats.time_s));
+        println!("  wire bytes : {}", fmt_bytes(stats.bytes_on_wire));
+    }
+    Ok(())
+}
+
 /// PJRT end-to-end broadcast: real payload through the JAX/Pallas-authored
 /// executables on every simulated rank.
+#[cfg(feature = "pjrt")]
 pub fn e2e(p: u64, root: u64, artifacts: String) -> Result<()> {
     let dir = if artifacts.is_empty() {
         default_artifact_dir()
@@ -280,6 +407,15 @@ pub fn e2e(p: u64, root: u64, artifacts: String) -> Result<()> {
     );
     println!("  verification    : checksums + byte-exact buffers OK");
     Ok(())
+}
+
+/// Stub when the PJRT payload path is compiled out.
+#[cfg(not(feature = "pjrt"))]
+pub fn e2e(_p: u64, _root: u64, _artifacts: String) -> Result<()> {
+    bail!(
+        "the `e2e` command needs the PJRT payload path; rebuild with \
+         `--features pjrt` on an image that provides the `xla` crate (see DESIGN.md)"
+    )
 }
 
 /// Quick smoke of every subsystem (used by CI-style runs).
@@ -316,18 +452,45 @@ pub fn selftest() -> Result<()> {
     let mut e = Engine::new(16, CostModel::flat_default());
     allgatherv_bruck(&mut e, &input)?;
     println!("OK");
-    print!("PJRT runtime + coordinator ... ");
-    match Coordinator::new(&default_artifact_dir()) {
-        Ok(coord) => {
-            coord.run_bcast(&E2eConfig {
-                p: 5,
-                root: 1,
-                cost: CostModel::flat_default(),
-            })?;
-            println!("OK");
+    print!("transport backends (sim/thread/tcp) ... ");
+    {
+        use crate::transport::{sim::run_sim, tcp::run_tcp, thread::run_threads};
+        let p = 5u64;
+        let (n, m) = (3usize, 1000u64);
+        let payload: Vec<u8> = (0..m).map(|i| ((i * 131) % 251) as u8).collect();
+        let spmd = |mut t: Box<dyn crate::transport::Transport>| {
+            use crate::transport::Transport as _;
+            let data = if t.rank() == 1 { Some(&payload[..]) } else { None };
+            generic::bcast_circulant(t.as_mut(), 1, n, m, data)
+        };
+        let (a, _) = run_sim(p, CostModel::flat_default(), |t| spmd(Box::new(t)))
+            .map_err(|e| anyhow::anyhow!("sim: {e}"))?;
+        let b = run_threads(p, Duration::from_secs(30), |t| spmd(Box::new(t)))
+            .map_err(|e| anyhow::anyhow!("thread: {e}"))?;
+        let c = run_tcp(p, Duration::from_secs(30), |t| spmd(Box::new(t)))
+            .map_err(|e| anyhow::anyhow!("tcp: {e}"))?;
+        if a != b || a != c || a.iter().any(|buf| buf != &payload) {
+            bail!("cross-backend delivery mismatch");
         }
-        Err(e) => println!("SKIPPED ({e})"),
     }
+    println!("OK");
+    #[cfg(feature = "pjrt")]
+    {
+        print!("PJRT runtime + coordinator ... ");
+        match Coordinator::new(&default_artifact_dir()) {
+            Ok(coord) => {
+                coord.run_bcast(&E2eConfig {
+                    p: 5,
+                    root: 1,
+                    cost: CostModel::flat_default(),
+                })?;
+                println!("OK");
+            }
+            Err(e) => println!("SKIPPED ({e})"),
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT runtime + coordinator ... SKIPPED (built without the pjrt feature)");
     println!("selftest passed");
     Ok(())
 }

@@ -1,0 +1,512 @@
+//! Transport-generic collectives: the paper's algorithms as true SPMD
+//! programs.
+//!
+//! Each function here is the *per-rank* side of a collective: it computes
+//! only the calling rank's `O(log p)` (or `O(p log p)` for allgatherv)
+//! schedule — exactly as Algorithms 1 and 2 prescribe, independently and
+//! with no communication — and then drives one
+//! [`crate::transport::Transport::sendrecv`] per round. The same code runs
+//! unchanged over the lockstep simulator backend, per-rank OS threads, and
+//! TCP processes; the cross-backend tests in `rust/tests/transport.rs`
+//! prove byte-identical delivery.
+//!
+//! Relation to the centralized collectives in the sibling modules: those
+//! drive all `p` ranks of the [`crate::simulator::Engine`] from one loop,
+//! which is what the large cost-model sweeps of the paper's figures need
+//! (`p = 1152` with gigabyte virtual payloads would be absurd as 1152
+//! threads). The functions here are the deployment-shaped counterparts —
+//! data always moves for real — and the simulator backend ties the two
+//! together: it enforces the identical machine model and produces the
+//! identical round/byte/time accounting.
+
+use super::blocks::BlockPartition;
+use crate::sched::{ceil_log2, AllgatherSchedules, BcastPlan, Schedule, Skips};
+use crate::transport::{SendSpec, Transport, TransportError, WireMsg};
+
+fn cerr(msg: String) -> TransportError {
+    TransportError::Collective(msg)
+}
+
+/// Rounds taken by [`bcast_circulant`] (and its reversal
+/// [`reduce_circulant`]) at `p` ranks and `n` blocks: the round-optimal
+/// `n - 1 + ⌈log₂p⌉`, or 0 for a single rank.
+pub fn bcast_rounds(p: u64, n: usize) -> usize {
+    if p <= 1 {
+        0
+    } else {
+        n - 1 + ceil_log2(p)
+    }
+}
+
+/// Check one round's delivery against the schedule: exactly the scheduled
+/// block must arrive, carrying exactly `want_bytes`.
+fn take_scheduled(
+    rank: u64,
+    round: usize,
+    got: Option<WireMsg>,
+    expect: Option<usize>,
+    want_bytes: impl FnOnce(usize) -> u64,
+) -> Result<Option<Vec<u8>>, TransportError> {
+    match (got, expect) {
+        (None, None) => Ok(None),
+        (Some(msg), Some(blk)) => {
+            // Determinacy: no metadata is exchanged — the received block
+            // must be exactly the scheduled one.
+            if msg.tag != blk as u64 {
+                return Err(cerr(format!(
+                    "rank {rank} round {round}: scheduled block {blk}, wire carried {}",
+                    msg.tag
+                )));
+            }
+            let want = want_bytes(blk);
+            if msg.data.len() as u64 != want {
+                return Err(cerr(format!(
+                    "rank {rank} round {round}: block {blk} has {} bytes, scheduled {want}",
+                    msg.data.len()
+                )));
+            }
+            Ok(Some(msg.data))
+        }
+        (Some(msg), None) => Err(cerr(format!(
+            "rank {rank} round {round}: unexpected message (block {})",
+            msg.tag
+        ))),
+        (None, Some(blk)) => Err(cerr(format!(
+            "rank {rank} round {round}: scheduled block {blk} never arrived"
+        ))),
+    }
+}
+
+/// The paper's Algorithm 1 as an SPMD program: broadcast `m` bytes from
+/// `root` as `n` blocks in the round-optimal `n - 1 + ⌈log₂p⌉` rounds.
+///
+/// The root passes `Some(payload)`; other ranks may pass `None`, or
+/// `Some(expected)` to additionally assert delivery in place. Every rank
+/// returns the reassembled `m`-byte message.
+pub fn bcast_circulant<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    m: u64,
+    data: Option<&[u8]>,
+) -> Result<Vec<u8>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if root >= p {
+        return Err(cerr(format!("root {root} out of range (p = {p})")));
+    }
+    if n == 0 {
+        return Err(cerr("need at least one block".into()));
+    }
+    if let Some(d) = data {
+        if d.len() as u64 != m {
+            return Err(cerr(format!("data length {} != m {m}", d.len())));
+        }
+    }
+    let part = BlockPartition::new(m, n);
+    if rank == root && data.is_none() {
+        return Err(cerr(format!("root {root} must supply the payload")));
+    }
+    if p == 1 {
+        return Ok(data.expect("validated above").to_vec());
+    }
+    let skips = Skips::new(p);
+    let rel = (rank + p - root) % p;
+    let plan = BcastPlan::new(Schedule::compute(&skips, rel), n);
+    let mut bufs: Vec<Option<Vec<u8>>> = if rank == root {
+        let d = data.expect("validated above");
+        (0..n).map(|i| Some(d[part.range(i)].to_vec())).collect()
+    } else {
+        vec![None; n]
+    };
+    for round in 0..plan.num_rounds() {
+        let a = plan.action(round);
+        let to_rel = skips.to_proc(rel, a.k);
+        let from_rel = skips.from_proc(rel, a.k);
+        // Never send to the root; the root never receives.
+        let send = if to_rel != 0 {
+            match a.send_block {
+                Some(sb) => {
+                    let payload = bufs[sb].clone().ok_or_else(|| {
+                        cerr(format!(
+                            "rank {rank} round {round}: sends block {sb} before receiving it"
+                        ))
+                    })?;
+                    Some(SendSpec {
+                        to: (to_rel + root) % p,
+                        tag: sb as u64,
+                        data: payload,
+                    })
+                }
+                None => None,
+            }
+        } else {
+            None
+        };
+        let expect = if rank == root { None } else { a.recv_block };
+        let recv_from = expect.map(|_| (from_rel + root) % p);
+        let got = t.sendrecv(send, recv_from)?;
+        if let Some(payload) = take_scheduled(rank, round, got, expect, |b| part.size(b))? {
+            let blk = expect.expect("take_scheduled returned a payload");
+            bufs[blk] = Some(payload);
+        }
+    }
+    let mut out = Vec::with_capacity(m as usize);
+    for (i, buf) in bufs.iter().enumerate() {
+        let b = buf
+            .as_deref()
+            .ok_or_else(|| cerr(format!("rank {rank}: missing block {i}")))?;
+        out.extend_from_slice(b);
+    }
+    if let Some(d) = data {
+        if out != d {
+            return Err(cerr(format!(
+                "rank {rank}: reassembled payload differs from the reference"
+            )));
+        }
+    }
+    Ok(out)
+}
+
+/// The paper's Algorithm 2 as an SPMD program: irregular all-to-all
+/// broadcast in the round-optimal `n - 1 + ⌈log₂p⌉` rounds, each root's
+/// `counts[j]` bytes split into `n` blocks, one block per root packed into
+/// each round's message.
+///
+/// `mine` is this rank's contribution (`counts[rank]` bytes). Returns all
+/// `p` contributions, index = root.
+pub fn allgatherv_circulant<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    counts: &[u64],
+    mine: &[u8],
+) -> Result<Vec<Vec<u8>>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if counts.len() as u64 != p {
+        return Err(cerr(format!("counts length {} != p {p}", counts.len())));
+    }
+    if n == 0 {
+        return Err(cerr("need at least one block".into()));
+    }
+    if mine.len() as u64 != counts[rank as usize] {
+        return Err(cerr(format!(
+            "rank {rank}: contribution is {} bytes, counts says {}",
+            mine.len(),
+            counts[rank as usize]
+        )));
+    }
+    if p == 1 {
+        return Ok(vec![mine.to_vec()]);
+    }
+    let skips = Skips::new(p);
+    let q = skips.q();
+    // The per-rank O(p log p) precomputation of Algorithm 2: this rank's
+    // receive and send schedules for every root.
+    let sched = AllgatherSchedules::compute(&skips, rank);
+    let parts: Vec<BlockPartition> = counts
+        .iter()
+        .map(|&mj| BlockPartition::new(mj, n))
+        .collect();
+    let x = (q - (n - 1 + q) % q) % q;
+    // Concrete block for internal round i given a raw schedule entry.
+    let concrete = |raw: i64, i: usize, k: usize| -> Option<usize> {
+        let v = raw + (i - k) as i64 - x as i64;
+        if v < 0 {
+            None
+        } else {
+            Some((v as usize).min(n - 1))
+        }
+    };
+    let mut bufs: Vec<Vec<Option<Vec<u8>>>> = (0..p as usize).map(|_| vec![None; n]).collect();
+    for b in 0..n {
+        bufs[rank as usize][b] = Some(mine[parts[rank as usize].range(b)].to_vec());
+    }
+    for i in x..(n + q - 1 + x) {
+        let k = i % q;
+        let to = skips.to_proc(rank, k);
+        let from = skips.from_proc(rank, k);
+        // Pack one block per root j != to (the to-processor is root for
+        // its own contribution).
+        let mut payload = Vec::new();
+        for j in 0..p {
+            if j == to {
+                continue;
+            }
+            if let Some(b) = concrete(sched.send[j as usize][k], i, k) {
+                let blk = bufs[j as usize][b].as_deref().ok_or_else(|| {
+                    cerr(format!(
+                        "rank {rank} round {i}: sends root {j} block {b} before receiving it"
+                    ))
+                })?;
+                payload.extend_from_slice(blk);
+            }
+        }
+        let got = t.sendrecv(
+            Some(SendSpec {
+                to,
+                tag: k as u64,
+                data: payload,
+            }),
+            Some(from),
+        )?;
+        let msg = got.ok_or_else(|| cerr(format!("rank {rank} round {i}: no message")))?;
+        if msg.tag != k as u64 {
+            return Err(cerr(format!(
+                "rank {rank} round {i}: message tagged {}, expected round-index {k}",
+                msg.tag
+            )));
+        }
+        // Unpack: one block per root j != rank, by this rank's own
+        // receive schedules (own contribution is never received).
+        let mut off = 0usize;
+        for j in 0..p {
+            if j == rank {
+                continue;
+            }
+            if let Some(b) = concrete(sched.recv[j as usize][k], i, k) {
+                let sz = parts[j as usize].size(b) as usize;
+                if off + sz > msg.data.len() {
+                    return Err(cerr(format!(
+                        "rank {rank} round {i}: pack/unpack misalignment"
+                    )));
+                }
+                bufs[j as usize][b] = Some(msg.data[off..off + sz].to_vec());
+                off += sz;
+            }
+        }
+        if off != msg.data.len() {
+            return Err(cerr(format!(
+                "rank {rank} round {i}: {} unconsumed payload bytes",
+                msg.data.len() - off
+            )));
+        }
+    }
+    let mut out = Vec::with_capacity(p as usize);
+    for j in 0..p as usize {
+        let mut v = Vec::with_capacity(counts[j] as usize);
+        for (b, buf) in bufs[j].iter().enumerate() {
+            let blk = buf
+                .as_deref()
+                .ok_or_else(|| cerr(format!("rank {rank}: missing root {j} block {b}")))?;
+            v.extend_from_slice(blk);
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+fn combine(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// n-block reduction (f32 sum) to `root` by time-reversal of Algorithm 1,
+/// in the same round-optimal `n - 1 + ⌈log₂p⌉` rounds (see
+/// [`crate::collectives::reduce`] for the duality argument).
+///
+/// `mine` is this rank's contribution; all ranks must pass equal lengths.
+/// Returns this rank's final accumulator — the full elementwise sum at
+/// `root`, partial sums elsewhere.
+pub fn reduce_circulant<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    mine: &[f32],
+) -> Result<Vec<f32>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if root >= p {
+        return Err(cerr(format!("root {root} out of range (p = {p})")));
+    }
+    if n == 0 {
+        return Err(cerr("need at least one block".into()));
+    }
+    let mut acc = mine.to_vec();
+    if p == 1 {
+        return Ok(acc);
+    }
+    let skips = Skips::new(p);
+    let rel = (rank + p - root) % p;
+    let plan = BcastPlan::new(Schedule::compute(&skips, rel), n);
+    let part = BlockPartition::new((mine.len() * 4) as u64, n);
+    let erange = |b: usize| {
+        let r = part.range(b);
+        r.start / 4..r.end / 4
+    };
+    let rounds = plan.num_rounds();
+    for t_rev in 0..rounds {
+        let tf = rounds - 1 - t_rev; // the bcast round being reversed
+        let a = plan.action(tf);
+        let to_rel = skips.to_proc(rel, a.k);
+        let from_rel = skips.from_proc(rel, a.k);
+        // Reverse of "r receives block b from f": r emits its accumulated
+        // block b to f. The root only combines.
+        let send = if rank != root {
+            a.recv_block.map(|b| SendSpec {
+                to: (from_rel + root) % p,
+                tag: b as u64,
+                data: f32s_to_bytes(&acc[erange(b)]),
+            })
+        } else {
+            None
+        };
+        // Reverse of "r sends block b to t": r combines block b arriving
+        // from t — unless the forward send was suppressed (target root).
+        let expect = if to_rel != 0 { a.send_block } else { None };
+        let recv_from = expect.map(|_| (to_rel + root) % p);
+        let got = t.sendrecv(send, recv_from)?;
+        if let Some(payload) =
+            take_scheduled(rank, t_rev, got, expect, |b| erange(b).len() as u64 * 4)?
+        {
+            let blk = expect.expect("take_scheduled returned a payload");
+            let incoming = bytes_to_f32s(&payload);
+            combine(&mut acc[erange(blk)], &incoming);
+        }
+    }
+    Ok(acc)
+}
+
+/// Allreduce (f32 sum) on the circulant pattern: reduce to rank 0, then
+/// broadcast the sum back out — `2(n - 1 + ⌈log₂p⌉)` rounds. Every rank
+/// returns the full elementwise sum.
+pub fn allreduce_circulant<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    mine: &[f32],
+) -> Result<Vec<f32>, TransportError> {
+    let reduced = reduce_circulant(t, 0, n, mine)?;
+    if t.size() == 1 {
+        return Ok(reduced);
+    }
+    let bytes = if t.rank() == 0 {
+        Some(f32s_to_bytes(&reduced))
+    } else {
+        None
+    };
+    let m = (mine.len() * 4) as u64;
+    let out = bcast_circulant(t, 0, n, m, bytes.as_deref())?;
+    Ok(bytes_to_f32s(&out))
+}
+
+/// Hierarchical (leader-decomposed) broadcast as an SPMD program: root →
+/// node leader, circulant broadcast across the leaders (`n_inter` blocks),
+/// then per-node circulant broadcasts (`n_intra` blocks) in lockstep.
+///
+/// Rank `r` lives on node `r / ranks_per_node`; the leader is the node's
+/// first rank (matching [`crate::simulator::CostModel::Hierarchical`]).
+/// The inter-node phase reuses [`bcast_circulant`] verbatim over a
+/// [`crate::transport::GroupTransport`] of the leaders while non-leaders
+/// execute matching idle rounds — round counts are deterministic, so every
+/// rank knows how many.
+pub fn bcast_hierarchical<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    ranks_per_node: u64,
+    n_inter: usize,
+    n_intra: usize,
+    m: u64,
+    data: Option<&[u8]>,
+) -> Result<Vec<u8>, TransportError> {
+    use crate::transport::{idle_round, GroupTransport};
+    let p = t.size();
+    let rank = t.rank();
+    if ranks_per_node == 0 || p % ranks_per_node != 0 {
+        return Err(cerr(format!(
+            "p = {p} not divisible by ranks_per_node = {ranks_per_node}"
+        )));
+    }
+    let nodes = p / ranks_per_node;
+    if nodes == 1 || ranks_per_node == 1 {
+        // Degenerate layouts: fall back to the flat algorithm.
+        return bcast_circulant(t, root, n_inter.max(n_intra), m, data);
+    }
+    if root >= p {
+        return Err(cerr(format!("root {root} out of range (p = {p})")));
+    }
+    if let Some(d) = data {
+        if d.len() as u64 != m {
+            return Err(cerr(format!("data length {} != m {m}", d.len())));
+        }
+    }
+    if rank == root && data.is_none() {
+        return Err(cerr(format!("root {root} must supply the payload")));
+    }
+    let root_node = root / ranks_per_node;
+    let leader = |nd: u64| nd * ranks_per_node;
+    let my_node = rank / ranks_per_node;
+
+    // --- Phase 0: root → its node leader (one round, if distinct) --------
+    let mut held: Option<Vec<u8>> = if rank == root {
+        Some(data.expect("validated above").to_vec())
+    } else {
+        None
+    };
+    if root != leader(root_node) {
+        if rank == root {
+            let payload = held.clone().expect("root holds the payload");
+            let got = t.sendrecv(
+                Some(SendSpec {
+                    to: leader(root_node),
+                    tag: 0,
+                    data: payload,
+                }),
+                None,
+            )?;
+            if got.is_some() {
+                return Err(cerr(format!("rank {rank}: unexpected message in phase 0")));
+            }
+        } else if rank == leader(root_node) {
+            let msg = t
+                .sendrecv(None, Some(root))?
+                .ok_or_else(|| cerr(format!("leader {rank}: phase-0 payload never arrived")))?;
+            if msg.data.len() as u64 != m {
+                return Err(cerr(format!(
+                    "leader {rank}: phase-0 payload has {} bytes, expected {m}",
+                    msg.data.len()
+                )));
+            }
+            held = Some(msg.data);
+        } else {
+            idle_round(t)?;
+        }
+    }
+
+    // --- Phase 1: circulant broadcast across the node leaders ------------
+    let leaders: Vec<u64> = (0..nodes).map(leader).collect();
+    if rank == leader(my_node) {
+        let mut g = GroupTransport::new(&mut *t, &leaders)?;
+        let buf = bcast_circulant(&mut g, root_node, n_inter, m, held.as_deref())?;
+        held = Some(buf);
+    } else {
+        for _ in 0..bcast_rounds(nodes, n_inter) {
+            idle_round(t)?;
+        }
+    }
+
+    // --- Phase 2: per-node circulant broadcast from each leader ----------
+    // All groups have the same size, hence the same round count: lockstep.
+    let members: Vec<u64> = (0..ranks_per_node).map(|i| leader(my_node) + i).collect();
+    let mut g = GroupTransport::new(&mut *t, &members)?;
+    let out = bcast_circulant(&mut g, 0, n_intra, m, held.as_deref())?;
+    if let Some(d) = data {
+        if out != d {
+            return Err(cerr(format!(
+                "rank {rank}: hierarchical delivery differs from the reference"
+            )));
+        }
+    }
+    Ok(out)
+}

@@ -1,8 +1,20 @@
-//! Collective operations over the simulated machine: the paper's
-//! Algorithm 1 (broadcast) and Algorithm 2 (irregular allgatherv), plus the
-//! "native MPI" baselines the paper's figures compare against.
+//! Collective operations: the paper's Algorithm 1 (broadcast) and
+//! Algorithm 2 (irregular allgatherv), plus the "native MPI" baselines the
+//! paper's figures compare against.
+//!
+//! Two execution shapes coexist:
+//!
+//! * the modules below drive all `p` ranks of the simulated machine from
+//!   one loop — the cost-model path behind the figure sweeps (virtual
+//!   payloads, `p` in the thousands);
+//! * [`generic`] holds the same algorithms as SPMD programs generic over
+//!   [`crate::transport::Transport`], where each rank computes only its
+//!   own schedule — runnable on the simulator, on per-rank OS threads,
+//!   and over TCP, with byte-identical delivery (see
+//!   `rust/tests/transport.rs`).
 
 pub mod allgather;
+pub mod generic;
 pub mod hierarchical;
 pub mod reduce;
 pub mod bcast;

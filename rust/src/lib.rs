@@ -6,8 +6,10 @@
 //! broadcast (Algorithm 1) and irregular allgatherv (Algorithm 2)
 //! collectives they drive, a simulated one-ported message-passing machine
 //! with linear cost models standing in for the paper's 36×32-core cluster,
-//! baseline algorithms, and a PJRT-backed payload path (JAX/Pallas-authored
-//! HLO executed from rust).
+//! baseline algorithms, a pluggable [`transport`] subsystem executing the
+//! identical collectives over the simulator, per-rank OS threads, or TCP
+//! processes, and a PJRT-backed payload path (JAX/Pallas-authored HLO
+//! executed from rust; `pjrt` feature).
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured results.
@@ -15,7 +17,10 @@
 pub mod bench_support;
 pub mod cli;
 pub mod collectives;
+#[cfg(feature = "pjrt")]
 pub mod coordinator;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sched;
 pub mod simulator;
+pub mod transport;

@@ -12,9 +12,8 @@ use super::skips::Skips;
 use std::collections::HashSet;
 
 /// A violated correctness condition.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum VerifyError {
-    #[error("condition 1: p={p} r={r} k={k}: sendblock {send} != recvblock {recv} of to-processor {t}")]
     SendRecvMismatch {
         p: u64,
         r: u64,
@@ -23,25 +22,20 @@ pub enum VerifyError {
         send: i64,
         recv: i64,
     },
-    #[error("condition 3: p={p} r={r}: receive blocks {blocks:?} are not {{-1..-q}}\\{{b-q}} ∪ {{b}} (b={b})")]
     RecvBlockSet {
         p: u64,
         r: u64,
         b: usize,
         blocks: Vec<i64>,
     },
-    #[error("condition 4: p={p} r={r} k={k}: sendblock {send} not received earlier and not baseblock-q")]
     SendBeforeRecv { p: u64, r: u64, k: usize, send: i64 },
-    #[error("root schedule: p={p} k={k}: root must send block k, got {send}")]
     RootSend { p: u64, k: usize, send: i64 },
-    #[error("theorem 1: p={p} r={r}: after {rounds} rounds missing blocks {missing:?}")]
     MissingBlocks {
         p: u64,
         r: u64,
         rounds: usize,
         missing: Vec<usize>,
     },
-    #[error("bound: p={p} r={r}: {what} = {got} exceeds {bound}")]
     BoundExceeded {
         p: u64,
         r: u64,
@@ -50,6 +44,39 @@ pub enum VerifyError {
         bound: u64,
     },
 }
+
+// Manual Display/Error impls: the offline image has no `thiserror`.
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VerifyError::SendRecvMismatch { p, r, k, t, send, recv } => write!(
+                f,
+                "condition 1: p={p} r={r} k={k}: sendblock {send} != recvblock {recv} of to-processor {t}"
+            ),
+            VerifyError::RecvBlockSet { p, r, b, blocks } => write!(
+                f,
+                "condition 3: p={p} r={r}: receive blocks {blocks:?} are not {{-1..-q}}\\{{b-q}} ∪ {{b}} (b={b})"
+            ),
+            VerifyError::SendBeforeRecv { p, r, k, send } => write!(
+                f,
+                "condition 4: p={p} r={r} k={k}: sendblock {send} not received earlier and not baseblock-q"
+            ),
+            VerifyError::RootSend { p, k, send } => write!(
+                f,
+                "root schedule: p={p} k={k}: root must send block k, got {send}"
+            ),
+            VerifyError::MissingBlocks { p, r, rounds, missing } => write!(
+                f,
+                "theorem 1: p={p} r={r}: after {rounds} rounds missing blocks {missing:?}"
+            ),
+            VerifyError::BoundExceeded { p, r, what, got, bound } => {
+                write!(f, "bound: p={p} r={r}: {what} = {got} exceeds {bound}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
 
 /// Aggregate statistics of a verification run (paper §3 reports these).
 #[derive(Debug, Default, Clone, Copy)]

@@ -28,26 +28,48 @@ pub struct Msg {
 }
 
 /// Machine-model violations and addressing errors.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SimError {
-    #[error("rank {0} sends more than one message in a round (one-ported)")]
     MultiSend(u64),
-    #[error("rank {0} receives more than one message in a round (one-ported)")]
     MultiRecv(u64),
-    #[error("self-message at rank {0}")]
     SelfMessage(u64),
-    #[error("rank {0} out of range (p = {1})")]
     RankOutOfRange(u64, u64),
-    #[error("payload length {len} != declared bytes {bytes} (from {from} to {to})")]
     PayloadMismatch {
         from: u64,
         to: u64,
         bytes: u64,
         len: usize,
     },
-    #[error("collective error: {0}")]
     Collective(String),
 }
+
+// Manual Display/Error impls: the offline image has no `thiserror`.
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::MultiSend(r) => {
+                write!(f, "rank {r} sends more than one message in a round (one-ported)")
+            }
+            SimError::MultiRecv(r) => {
+                write!(f, "rank {r} receives more than one message in a round (one-ported)")
+            }
+            SimError::SelfMessage(r) => write!(f, "self-message at rank {r}"),
+            SimError::RankOutOfRange(r, p) => write!(f, "rank {r} out of range (p = {p})"),
+            SimError::PayloadMismatch {
+                from,
+                to,
+                bytes,
+                len,
+            } => write!(
+                f,
+                "payload length {len} != declared bytes {bytes} (from {from} to {to})"
+            ),
+            SimError::Collective(msg) => write!(f, "collective error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
 
 /// The simulated machine.
 #[derive(Debug)]

@@ -1,31 +1,25 @@
-//! Thread-backed concurrent executor: each simulated rank is a real OS
-//! thread computing its *own* schedule (exactly as Algorithm 1 prescribes
-//! — independently, with no communication) and exchanging blocks through
-//! rendezvous channels.
+//! Thread-backed concurrent broadcast: each rank is a real OS thread
+//! computing its *own* schedule (exactly as Algorithm 1 prescribes —
+//! independently, with no communication) and exchanging blocks through
+//! per-pair FIFO channels.
 //!
-//! This substrate complements the deterministic round engine: it validates
-//! that the schedules need no global coordination — every rank acts only
-//! on its local `O(log p)` schedule and messages pair up because the
-//! schedules are correct. There is deliberately no global barrier: ranks
-//! run rounds asynchronously and the per-(sender, receiver) FIFO channels
-//! keep blocks correctly paired (block tags are asserted). Any schedule
-//! bug manifests as a mismatched or missing rendezvous (reported, not
-//! hung: receives time out and a failing rank cannot deadlock the rest).
+//! Since the transport subsystem landed this is a thin veneer: the round
+//! loop lives in [`crate::collectives::generic::bcast_circulant`] (the
+//! same code that runs on the simulator and TCP backends) and the channel
+//! mesh is [`crate::transport::thread::ThreadTransport`]. The function is
+//! kept because the `nblock threaded` subcommand and older call sites use
+//! its report shape.
 //!
-//! Used by the `threaded_bcast` example path and the concurrency tests;
-//! the figure sweeps use the cheaper round engine.
+//! There is deliberately no global barrier: ranks run rounds
+//! asynchronously and the per-(sender, receiver) FIFO channels keep blocks
+//! correctly paired because the schedules are correct. Any schedule bug
+//! manifests as a mismatched or missing rendezvous (reported, not hung:
+//! receives time out and a failing rank cannot deadlock the rest).
 
-use crate::sched::{BcastPlan, Schedule, Skips};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use crate::collectives::generic;
+use crate::transport::thread::run_threads;
+use crate::transport::Transport;
 use std::time::Duration;
-
-/// One block message between worker threads.
-#[derive(Debug)]
-struct Block {
-    tag: usize,
-    data: Vec<u8>,
-}
 
 /// Result of a threaded broadcast run.
 #[derive(Debug)]
@@ -46,123 +40,22 @@ pub fn threaded_bcast(
     timeout: Duration,
 ) -> Result<ThreadedReport, String> {
     assert!(p >= 2, "need at least two ranks");
-    let skips = Arc::new(Skips::new(p));
-    let part = crate::collectives::BlockPartition::new(payload.len() as u64, n);
-    // Rendezvous mesh: tx[to][from] — one channel per directed pair keeps
-    // the receive side deterministic (the receiver knows its from-processor
-    // each round, so it drains exactly one channel).
-    let mut txs: Vec<Vec<Sender<Block>>> = Vec::with_capacity(p as usize);
-    let mut rxs: Vec<Vec<Receiver<Block>>> = Vec::with_capacity(p as usize);
-    for _ in 0..p {
-        let (mut tv, mut rv) = (Vec::with_capacity(p as usize), Vec::with_capacity(p as usize));
-        for _ in 0..p {
-            let (tx, rx) = channel::<Block>();
-            tv.push(tx);
-            rv.push(rx);
-        }
-        txs.push(tv);
-        rxs.push(rv);
-    }
-    // Give each worker its own senders-to-everyone and its own receivers.
-    // txs_for_worker[r][to] sends to `to`'s inbox slot from `r`.
-    let mut worker_send: Vec<Vec<Sender<Block>>> = (0..p as usize).map(|_| Vec::new()).collect();
-    for (to, row) in txs.into_iter().enumerate() {
-        for (from, tx) in row.into_iter().enumerate() {
-            let _ = to;
-            worker_send[from].push(tx); // worker_send[from][to]
-        }
-    }
-    // Transpose: currently worker_send[from] is ordered by `to` because we
-    // iterated rows (to-major). Each row pushed one sender per `to` in
-    // order, so worker_send[from][to] is correct.
-    let payload_arc: Arc<Vec<u8>> = Arc::new(payload.to_vec());
+    let m = payload.len() as u64;
     let started = std::time::Instant::now();
-    let mut handles = Vec::with_capacity(p as usize);
-    let rounds = BcastPlan::new(Schedule::compute(&skips, 0), n).num_rounds();
-    for (r, (send_row, recv_row)) in worker_send.into_iter().zip(rxs.into_iter()).enumerate() {
-        let r = r as u64;
-        let skips = skips.clone();
-        let payload = payload_arc.clone();
-        let part = part.clone();
-        handles.push(std::thread::spawn(move || -> Result<(), String> {
-            // Each rank computes only ITS schedule — O(log p), local.
-            let rel = (r + p - root) % p;
-            let plan = BcastPlan::new(Schedule::compute(&skips, rel), n);
-            let mut buf: Vec<Option<Vec<u8>>> = if r == root {
-                (0..n).map(|i| Some(payload[part.range(i)].to_vec())).collect()
-            } else {
-                vec![None; n]
-            };
-            for t in 0..plan.num_rounds() {
-                let a = plan.action(t);
-                let to_rel = skips.to_proc(rel, a.k);
-                let from_rel = skips.from_proc(rel, a.k);
-                let to = (to_rel + root) % p;
-                let from = (from_rel + root) % p;
-                // Send ∥ recv: fire the send, then block on the recv.
-                if to_rel != 0 {
-                    if let Some(sb) = a.send_block {
-                        let data = buf[sb]
-                            .clone()
-                            .ok_or_else(|| format!("rank {r} round {t}: block {sb} not held"))?;
-                        send_row[to as usize]
-                            .send(Block { tag: sb, data })
-                            .map_err(|_| format!("rank {r} round {t}: peer {to} gone"))?;
-                    }
-                }
-                if r != root {
-                    if let Some(rb) = a.recv_block {
-                        let msg = recv_row[from as usize]
-                            .recv_timeout(timeout)
-                            .map_err(|e| match e {
-                                RecvTimeoutError::Timeout => format!(
-                                    "rank {r} round {t}: timeout waiting for block {rb} from {from}"
-                                ),
-                                RecvTimeoutError::Disconnected => {
-                                    format!("rank {r} round {t}: {from} disconnected")
-                                }
-                            })?;
-                        if msg.tag != rb {
-                            return Err(format!(
-                                "rank {r} round {t}: expected block {rb}, got {}",
-                                msg.tag
-                            ));
-                        }
-                        buf[rb] = Some(msg.data);
-                    }
-                }
-            }
-            // Verify locally.
-            for i in 0..n {
-                let got = buf[i]
-                    .as_deref()
-                    .ok_or_else(|| format!("rank {r}: missing block {i}"))?;
-                if got != &payload[part.range(i)] {
-                    return Err(format!("rank {r}: block {i} corrupted"));
-                }
-            }
-            Ok(())
-        }));
-    }
-    let mut first_err = None;
-    for h in handles {
-        match h.join() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => {
-                first_err.get_or_insert(e);
-            }
-            Err(_) => {
-                first_err.get_or_insert_with(|| "worker panicked".to_string());
-            }
+    let results = run_threads(p, timeout, |mut t| {
+        let data = if t.rank() == root { Some(payload) } else { None };
+        generic::bcast_circulant(&mut t, root, n, m, data)
+    })
+    .map_err(|e| e.to_string())?;
+    for (r, buf) in results.iter().enumerate() {
+        if buf != payload {
+            return Err(format!("rank {r}: reassembled payload differs"));
         }
-    }
-    if let Some(e) = first_err {
-        return Err(e);
     }
     Ok(ThreadedReport {
         p,
         n,
-        rounds,
+        rounds: generic::bcast_rounds(p, n),
         wall_s: started.elapsed().as_secs_f64(),
     })
 }

@@ -1,0 +1,324 @@
+//! Pluggable transport subsystem: the paper's one-ported, fully
+//! bidirectional round exchange as a trait, with three interchangeable
+//! backends.
+//!
+//! The schedules of the paper are computed *per processor* with no
+//! communication, precisely so that they can drive real message-passing
+//! systems. [`Transport`] captures the machine model those schedules
+//! assume — per round a rank sends at most one block and receives at most
+//! one block, send ∥ recv allowed — so that a single generic collective
+//! (see [`crate::collectives::generic`]) runs unchanged over:
+//!
+//! * [`sim::SimTransport`] — lockstep rounds through the deterministic
+//!   [`crate::simulator::Engine`]: machine-model enforcement plus
+//!   cost-model accounting, the reference backend;
+//! * [`thread::ThreadTransport`] — one OS thread per rank exchanging
+//!   blocks over per-(sender, receiver) FIFO channels, real in-process
+//!   parallelism;
+//! * [`tcp::TcpTransport`] — one socket per directed pair over localhost
+//!   (or any reachable host set), each rank typically its own process,
+//!   with a small length-prefixed wire format.
+//!
+//! The SPMD contract: every rank runs the same program and makes the same
+//! sequence of [`Transport::sendrecv`] / [`Transport::barrier`] calls, one
+//! per communication round. Point-to-point backends (thread, tcp) only
+//! need per-pair FIFO ordering; the simulator backend additionally uses
+//! the global round structure to enforce one-portedness and to price each
+//! round at its maximum edge cost.
+
+pub mod sim;
+pub mod tcp;
+pub mod thread;
+
+use std::fmt;
+
+/// One received block: the sender's tag (block index by convention of the
+/// collectives) plus the payload bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireMsg {
+    pub tag: u64,
+    pub data: Vec<u8>,
+}
+
+/// An outgoing block for one round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SendSpec {
+    /// Destination rank.
+    pub to: u64,
+    /// Collective-defined tag (block index); verified by receivers.
+    pub tag: u64,
+    /// Payload bytes (may be empty — zero-sized blocks must still flow).
+    pub data: Vec<u8>,
+}
+
+/// Failures raised by a transport backend or by the collective layer on
+/// top of it.
+#[derive(Debug)]
+pub enum TransportError {
+    /// Machine-model violation reported by the simulator backend.
+    Sim(crate::simulator::SimError),
+    /// Socket / channel failure.
+    Io(String),
+    /// A peer spoke the wrong protocol (bad magic, wrong sender, a message
+    /// where none was scheduled, ...).
+    Protocol(String),
+    /// Timed out waiting for a peer.
+    Timeout(String),
+    /// Collective-level violation (schedule mismatch, corrupt delivery).
+    Collective(String),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Sim(e) => write!(f, "simulator: {e}"),
+            TransportError::Io(msg) => write!(f, "io: {msg}"),
+            TransportError::Protocol(msg) => write!(f, "protocol: {msg}"),
+            TransportError::Timeout(msg) => write!(f, "timeout: {msg}"),
+            TransportError::Collective(msg) => write!(f, "collective: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<crate::simulator::SimError> for TransportError {
+    fn from(e: crate::simulator::SimError) -> TransportError {
+        TransportError::Sim(e)
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> TransportError {
+        TransportError::Io(e.to_string())
+    }
+}
+
+/// The paper's one-ported, fully bidirectional round exchange.
+///
+/// `sendrecv` is the single communication primitive: in one round a rank
+/// optionally sends one block and optionally receives one block, and the
+/// two directions overlap. `recv_from` names the expected source — the
+/// schedules are deterministic, so every rank knows its from-processor
+/// each round and no metadata is ever exchanged.
+pub trait Transport {
+    /// This endpoint's rank in `0..size()`.
+    fn rank(&self) -> u64;
+
+    /// Number of ranks `p`.
+    fn size(&self) -> u64;
+
+    /// Execute one communication round: send `send` (if any) while
+    /// receiving one block from `recv_from` (if any). Returns the received
+    /// block, or `None` when `recv_from` is `None`.
+    fn sendrecv(
+        &mut self,
+        send: Option<SendSpec>,
+        recv_from: Option<u64>,
+    ) -> Result<Option<WireMsg>, TransportError>;
+
+    /// Block until every rank has reached the barrier.
+    fn barrier(&mut self) -> Result<(), TransportError>;
+}
+
+/// Shared tail of the SPMD harnesses (`sim::run_sim`, `thread::run_threads`,
+/// `tcp::run_tcp`): collect per-rank results, preferring the first
+/// *substantive* error over secondary fallout (timeouts, hangups, abort
+/// notifications) that another rank's failure caused.
+fn drain_results<R>(
+    results: Vec<Option<Result<R, TransportError>>>,
+    is_secondary: impl Fn(&TransportError) -> bool,
+) -> Result<Vec<R>, TransportError> {
+    let mut out = Vec::with_capacity(results.len());
+    let mut secondary: Option<TransportError> = None;
+    for res in results {
+        match res.expect("every rank joined") {
+            Ok(v) => out.push(v),
+            Err(e) => {
+                if is_secondary(&e) {
+                    if secondary.is_none() {
+                        secondary = Some(e);
+                    }
+                } else {
+                    return Err(e);
+                }
+            }
+        }
+    }
+    if let Some(e) = secondary {
+        return Err(e);
+    }
+    Ok(out)
+}
+
+/// A round in which this rank neither sends nor receives. On the lockstep
+/// simulator backend the rank still participates in the global round; on
+/// point-to-point backends this is a no-op.
+pub fn idle_round<T: Transport + ?Sized>(t: &mut T) -> Result<(), TransportError> {
+    match t.sendrecv(None, None)? {
+        None => Ok(()),
+        Some(msg) => Err(TransportError::Protocol(format!(
+            "rank {}: received block {} in an idle round",
+            t.rank(),
+            msg.tag
+        ))),
+    }
+}
+
+/// A sub-group view over any transport: group-relative rank `i` maps to
+/// parent rank `members[i]`.
+///
+/// This is how the hierarchical collectives reuse the flat generic
+/// collectives verbatim — e.g. the inter-node phase runs the ordinary
+/// n-block broadcast over a [`GroupTransport`] whose members are the node
+/// leaders, while non-members execute matching [`idle_round`]s (the round
+/// counts are deterministic, so every rank knows how many).
+pub struct GroupTransport<'a, T: Transport + ?Sized> {
+    inner: &'a mut T,
+    members: &'a [u64],
+    index: u64,
+}
+
+impl<'a, T: Transport + ?Sized> GroupTransport<'a, T> {
+    /// View `inner` as a `members.len()`-rank transport. The calling rank
+    /// must be a member.
+    pub fn new(
+        inner: &'a mut T,
+        members: &'a [u64],
+    ) -> Result<GroupTransport<'a, T>, TransportError> {
+        let me = inner.rank();
+        let p = inner.size();
+        if members.iter().any(|&m| m >= p) {
+            return Err(TransportError::Collective(format!(
+                "group member out of range (p = {p}): {members:?}"
+            )));
+        }
+        let index = members
+            .iter()
+            .position(|&m| m == me)
+            .ok_or_else(|| {
+                TransportError::Collective(format!("rank {me} is not in group {members:?}"))
+            })? as u64;
+        Ok(GroupTransport {
+            inner,
+            members,
+            index,
+        })
+    }
+
+    fn resolve(&self, group_rank: u64) -> Result<u64, TransportError> {
+        self.members.get(group_rank as usize).copied().ok_or_else(|| {
+            TransportError::Collective(format!(
+                "group rank {group_rank} out of range (group size {})",
+                self.members.len()
+            ))
+        })
+    }
+}
+
+impl<T: Transport + ?Sized> Transport for GroupTransport<'_, T> {
+    fn rank(&self) -> u64 {
+        self.index
+    }
+
+    fn size(&self) -> u64 {
+        self.members.len() as u64
+    }
+
+    fn sendrecv(
+        &mut self,
+        send: Option<SendSpec>,
+        recv_from: Option<u64>,
+    ) -> Result<Option<WireMsg>, TransportError> {
+        let send = match send {
+            Some(s) => Some(SendSpec {
+                to: self.resolve(s.to)?,
+                tag: s.tag,
+                data: s.data,
+            }),
+            None => None,
+        };
+        let recv_from = match recv_from {
+            Some(f) => Some(self.resolve(f)?),
+            None => None,
+        };
+        self.inner.sendrecv(send, recv_from)
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        // A group barrier would have to involve non-members on the lockstep
+        // backend; the collectives never need one.
+        Err(TransportError::Protocol(
+            "barrier is not supported on a GroupTransport".into(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A loopback transport for unit-testing the group mapping: records
+    /// the parent-rank arguments of the last sendrecv.
+    struct Recorder {
+        rank: u64,
+        p: u64,
+        last: Option<(Option<u64>, Option<u64>)>,
+    }
+
+    impl Transport for Recorder {
+        fn rank(&self) -> u64 {
+            self.rank
+        }
+        fn size(&self) -> u64 {
+            self.p
+        }
+        fn sendrecv(
+            &mut self,
+            send: Option<SendSpec>,
+            recv_from: Option<u64>,
+        ) -> Result<Option<WireMsg>, TransportError> {
+            self.last = Some((send.map(|s| s.to), recv_from));
+            Ok(None)
+        }
+        fn barrier(&mut self) -> Result<(), TransportError> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn group_maps_ranks_through_members() {
+        let mut base = Recorder {
+            rank: 6,
+            p: 8,
+            last: None,
+        };
+        let members = [2u64, 6, 7];
+        let mut g = GroupTransport::new(&mut base, &members).unwrap();
+        assert_eq!(g.rank(), 1);
+        assert_eq!(g.size(), 3);
+        g.sendrecv(
+            Some(SendSpec {
+                to: 0,
+                tag: 9,
+                data: vec![1],
+            }),
+            Some(2),
+        )
+        .unwrap();
+        assert_eq!(base.last, Some((Some(2), Some(7))));
+    }
+
+    #[test]
+    fn group_rejects_non_member_and_bad_indices() {
+        let mut base = Recorder {
+            rank: 5,
+            p: 8,
+            last: None,
+        };
+        assert!(GroupTransport::new(&mut base, &[0, 1]).is_err());
+        let members = [5u64, 0];
+        let mut g = GroupTransport::new(&mut base, &members).unwrap();
+        assert!(g.sendrecv(None, Some(9)).is_err());
+    }
+}

@@ -1,0 +1,469 @@
+//! TCP-backed transport: one socket per directed pair, each rank typically
+//! its own OS process, rendezvous via a listener map.
+//!
+//! ## Wire format
+//!
+//! Everything is little-endian `u64`-prefixed:
+//!
+//! ```text
+//! hello  := [MAGIC u64][rank u64]           (once per connection, dialer → acceptor)
+//! frame  := [tag u64][len u64][len payload bytes]
+//! ```
+//!
+//! A connection carries frames in FIFO order; together with the schedule
+//! determinism of the paper that is all the collectives need — no block
+//! metadata beyond the asserted `tag` ever crosses the wire.
+//!
+//! ## Rendezvous
+//!
+//! Every rank owns a listener; the *listener map* (rank → socket address)
+//! is the only shared configuration. Rank `r` dials every rank below it
+//! (retrying until the peer's listener is up) and accepts connections from
+//! every rank above it, identified by the hello frame. Two entry points
+//! build the map:
+//!
+//! * [`run_tcp`] — in-process harness: binds `p` ephemeral-port listeners
+//!   up front (collision-free), then runs one rank per thread. Used by the
+//!   tests and benches.
+//! * [`TcpTransport::connect_base_port`] — separate-process mode: rank `r`
+//!   binds `base_port + r`, so `p` processes need only agree on
+//!   `(host, base_port, p)`. Used by `examples/bcast_tcp.rs`.
+
+use super::{SendSpec, Transport, TransportError, WireMsg};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Connection hello marker: "nblkTcp1" as little-endian bytes.
+pub const MAGIC: u64 = u64::from_le_bytes(*b"nblkTcp1");
+
+/// Upper bound on a frame payload (fail fast on desynchronized streams).
+pub const MAX_FRAME: u64 = 1 << 32;
+
+fn write_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+/// Write one `[tag][len][payload]` frame.
+pub fn write_frame(w: &mut impl Write, tag: u64, data: &[u8]) -> std::io::Result<()> {
+    write_u64(w, tag)?;
+    write_u64(w, data.len() as u64)?;
+    w.write_all(data)?;
+    w.flush()
+}
+
+/// Read one `[tag][len][payload]` frame.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<(u64, Vec<u8>)> {
+    let tag = read_u64(r)?;
+    let len = read_u64(r)?;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut data = vec![0u8; len as usize];
+    r.read_exact(&mut data)?;
+    Ok((tag, data))
+}
+
+/// One rank's endpoint of the socket mesh.
+///
+/// The mesh is eager and fully connected: `p - 1` sockets per rank. That
+/// is the simplest correct rendezvous, but it makes the *in-process*
+/// harness [`run_tcp`] hold `O(p²)` file descriptors — fine at test/bench
+/// scale (`p ≤ 16`), but watch `ulimit -n` beyond that. The circulant
+/// schedules only ever touch `2⌈log₂p⌉` neighbors per rank, so a lazy
+/// variant is a known follow-up (see ROADMAP).
+pub struct TcpTransport {
+    rank: u64,
+    p: u64,
+    /// `streams[peer]`: the connection to `peer` (`None` only at `rank`).
+    streams: Vec<Option<TcpStream>>,
+    timeout: Duration,
+}
+
+impl TcpTransport {
+    /// Establish the full mesh for `rank` out of `p`: dial every lower
+    /// rank through `addrs` (the listener map; own entry is ignored),
+    /// accept every higher rank on `listener`. Returns once all `p - 1`
+    /// connections are up, or errors at `timeout`.
+    pub fn connect(
+        rank: u64,
+        p: u64,
+        listener: TcpListener,
+        addrs: &[SocketAddr],
+        timeout: Duration,
+    ) -> Result<TcpTransport, TransportError> {
+        assert!(rank < p, "rank must be < p");
+        if addrs.len() as u64 != p {
+            return Err(TransportError::Protocol(format!(
+                "listener map has {} entries, need p = {p}",
+                addrs.len()
+            )));
+        }
+        let deadline = Instant::now() + timeout;
+        let pu = p as usize;
+        let mut streams: Vec<Option<TcpStream>> = (0..pu).map(|_| None).collect();
+        // Dial phase: lower ranks. Their listeners may not be up yet —
+        // retry until the deadline (connections land in the peer's backlog
+        // even before it calls accept).
+        for peer in 0..rank {
+            let stream = loop {
+                match TcpStream::connect_timeout(
+                    &addrs[peer as usize],
+                    Duration::from_millis(250),
+                ) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        if Instant::now() >= deadline {
+                            return Err(TransportError::Timeout(format!(
+                                "rank {rank}: dialing rank {peer} at {}: {e}",
+                                addrs[peer as usize]
+                            )));
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            };
+            stream.set_nodelay(true)?;
+            let mut s = stream;
+            write_u64(&mut s, MAGIC)?;
+            write_u64(&mut s, rank)?;
+            s.flush()?;
+            streams[peer as usize] = Some(s);
+        }
+        // Accept phase: higher ranks, identified by their hello.
+        listener.set_nonblocking(true)?;
+        let mut accepted = 0u64;
+        while accepted < p - 1 - rank {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_nodelay(true)?;
+                    stream.set_read_timeout(Some(timeout))?;
+                    stream.set_write_timeout(Some(timeout))?;
+                    let mut s = stream;
+                    let magic = read_u64(&mut s)?;
+                    if magic != MAGIC {
+                        return Err(TransportError::Protocol(format!(
+                            "rank {rank}: bad hello magic {magic:#018x}"
+                        )));
+                    }
+                    let peer = read_u64(&mut s)?;
+                    if peer <= rank || peer >= p {
+                        return Err(TransportError::Protocol(format!(
+                            "rank {rank}: hello from unexpected rank {peer}"
+                        )));
+                    }
+                    if streams[peer as usize].is_some() {
+                        return Err(TransportError::Protocol(format!(
+                            "rank {rank}: duplicate connection from rank {peer}"
+                        )));
+                    }
+                    streams[peer as usize] = Some(s);
+                    accepted += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::Timeout(format!(
+                            "rank {rank}: only {accepted} of {} higher ranks connected",
+                            p - 1 - rank
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // Bound both directions: a blocked write (peer not draining) must
+        // surface as a timeout, not hang forever.
+        for s in streams.iter().flatten() {
+            s.set_read_timeout(Some(timeout))?;
+            s.set_write_timeout(Some(timeout))?;
+        }
+        Ok(TcpTransport {
+            rank,
+            p,
+            streams,
+            timeout,
+        })
+    }
+
+    /// Separate-process rendezvous: rank `r` listens on
+    /// `host:(base_port + r)`; the listener map is implied by
+    /// `(host, base_port)`. All `p` processes call this with the same
+    /// parameters and their own `rank`.
+    pub fn connect_base_port(
+        rank: u64,
+        p: u64,
+        host: IpAddr,
+        base_port: u16,
+        timeout: Duration,
+    ) -> Result<TcpTransport, TransportError> {
+        let mut addrs = Vec::with_capacity(p as usize);
+        for r in 0..p {
+            let port = u16::try_from(r)
+                .ok()
+                .and_then(|r16| base_port.checked_add(r16))
+                .ok_or_else(|| {
+                    TransportError::Protocol(format!(
+                        "port range {base_port}..{base_port}+{p} exceeds 65535"
+                    ))
+                })?;
+            addrs.push(SocketAddr::new(host, port));
+        }
+        let listener = TcpListener::bind(addrs[rank as usize])?;
+        TcpTransport::connect(rank, p, listener, &addrs, timeout)
+    }
+
+    fn stream(&mut self, peer: u64) -> Result<&mut TcpStream, TransportError> {
+        if peer >= self.p || peer == self.rank {
+            return Err(TransportError::Collective(format!(
+                "rank {}: invalid peer {peer} (p = {})",
+                self.rank, self.p
+            )));
+        }
+        self.streams[peer as usize]
+            .as_mut()
+            .ok_or_else(|| TransportError::Protocol(format!("no link to peer {peer}")))
+    }
+
+    fn read_from(&mut self, from: u64) -> Result<WireMsg, TransportError> {
+        let rank = self.rank;
+        let timeout = self.timeout;
+        let stream = self.stream(from)?;
+        match read_frame(stream) {
+            Ok((tag, data)) => Ok(WireMsg { tag, data }),
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                Err(TransportError::Timeout(format!(
+                    "rank {rank}: waited {timeout:?} for a block from {from}"
+                )))
+            }
+            Err(e) => Err(TransportError::Io(format!(
+                "rank {rank}: reading from {from}: {e}"
+            ))),
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> u64 {
+        self.rank
+    }
+
+    fn size(&self) -> u64 {
+        self.p
+    }
+
+    fn sendrecv(
+        &mut self,
+        send: Option<SendSpec>,
+        recv_from: Option<u64>,
+    ) -> Result<Option<WireMsg>, TransportError> {
+        match (send, recv_from) {
+            (None, None) => Ok(None),
+            (Some(s), None) => {
+                let stream = self.stream(s.to)?;
+                write_frame(stream, s.tag, &s.data)?;
+                Ok(None)
+            }
+            (None, Some(from)) => self.read_from(from).map(Some),
+            (Some(s), Some(from)) => {
+                // Send ∥ recv, possibly with the same peer: write on a
+                // scoped thread (on a cloned handle) while this thread
+                // reads, so cyclic rounds with payloads larger than the
+                // socket buffers cannot deadlock.
+                let writer = self
+                    .stream(s.to)?
+                    .try_clone()
+                    .map_err(|e| TransportError::Io(format!("clone to {}: {e}", s.to)))?;
+                let tag = s.tag;
+                let data = s.data;
+                std::thread::scope(|scope| {
+                    let handle = scope.spawn(move || -> std::io::Result<()> {
+                        let mut w = writer;
+                        write_frame(&mut w, tag, &data)
+                    });
+                    let got = self.read_from(from);
+                    let wrote = handle
+                        .join()
+                        .unwrap_or_else(|_| {
+                            Err(std::io::Error::new(ErrorKind::Other, "writer panicked"))
+                        });
+                    wrote.map_err(|e| {
+                        TransportError::Io(format!("rank {}: writing: {e}", self.rank))
+                    })?;
+                    got.map(Some)
+                })
+            }
+        }
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        // Dissemination barrier over the reserved tag: q = ⌈log₂p⌉ token
+        // exchanges; FIFO per pair keeps tokens behind any in-flight data.
+        const BARRIER_TAG: u64 = u64::MAX;
+        let p = self.p;
+        if p == 1 {
+            return Ok(());
+        }
+        let q = crate::sched::ceil_log2(p);
+        for k in 0..q {
+            let step = 1u64 << k;
+            let to = (self.rank + step) % p;
+            let from = (self.rank + p - step) % p;
+            let got = self.sendrecv(
+                Some(SendSpec {
+                    to,
+                    tag: BARRIER_TAG,
+                    data: Vec::new(),
+                }),
+                Some(from),
+            )?;
+            match got {
+                Some(msg) if msg.tag == BARRIER_TAG && msg.data.is_empty() => {}
+                Some(msg) => {
+                    return Err(TransportError::Protocol(format!(
+                        "rank {}: expected barrier token from {from}, got block {}",
+                        self.rank, msg.tag
+                    )))
+                }
+                None => unreachable!("recv_from was Some"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Bind `p` ephemeral-port listeners on localhost and return them with the
+/// listener map (collision-free in-process rendezvous).
+pub fn bind_mesh(p: u64) -> Result<(Vec<TcpListener>, Vec<SocketAddr>), TransportError> {
+    let mut listeners = Vec::with_capacity(p as usize);
+    let mut addrs = Vec::with_capacity(p as usize);
+    for _ in 0..p {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(l.local_addr()?);
+        listeners.push(l);
+    }
+    Ok((listeners, addrs))
+}
+
+/// Run `f` as an SPMD program over real localhost sockets, one rank per
+/// thread (the wire path is identical to the separate-process mode; only
+/// the rendezvous differs). Returns the per-rank results (index = rank).
+pub fn run_tcp<R, F>(p: u64, timeout: Duration, f: F) -> Result<Vec<R>, TransportError>
+where
+    R: Send,
+    F: Fn(TcpTransport) -> Result<R, TransportError> + Sync,
+{
+    assert!(p >= 1, "need at least one rank");
+    let (listeners, addrs) = bind_mesh(p)?;
+    let mut results: Vec<Option<Result<R, TransportError>>> = (0..p).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(p as usize);
+        for (rank, listener) in listeners.into_iter().enumerate() {
+            let f = &f;
+            let addrs = &addrs;
+            handles.push(s.spawn(move || {
+                let t = TcpTransport::connect(rank as u64, p, listener, addrs, timeout)?;
+                f(t)
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            results[rank] = Some(h.join().unwrap_or_else(|_| {
+                Err(TransportError::Collective(format!("rank {rank} panicked")))
+            }));
+        }
+    });
+    super::drain_results(results, |e| {
+        matches!(e, TransportError::Timeout(_) | TransportError::Io(_))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 42, b"hello blocks").unwrap();
+        write_frame(&mut buf, 7, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), (42, b"hello blocks".to_vec()));
+        assert_eq!(read_frame(&mut r).unwrap(), (7, Vec::new()));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn frame_cap_rejected() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 1).unwrap();
+        write_u64(&mut buf, MAX_FRAME + 1).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(
+            read_frame(&mut r).unwrap_err().kind(),
+            ErrorKind::InvalidData
+        );
+    }
+
+    #[test]
+    fn mesh_pairwise_exchange() {
+        let results = run_tcp(4, Duration::from_secs(20), |mut t| {
+            let partner = t.rank() ^ 1;
+            let payload = vec![t.rank() as u8; 9];
+            let got = t.sendrecv(
+                Some(SendSpec {
+                    to: partner,
+                    tag: t.rank(),
+                    data: payload,
+                }),
+                Some(partner),
+            )?;
+            let msg = got.expect("scheduled receive");
+            t.barrier()?;
+            Ok(msg)
+        })
+        .unwrap();
+        for (r, msg) in results.iter().enumerate() {
+            let partner = (r as u64) ^ 1;
+            assert_eq!(msg.tag, partner);
+            assert_eq!(msg.data, vec![partner as u8; 9]);
+        }
+    }
+
+    #[test]
+    fn large_cyclic_round_does_not_deadlock() {
+        // Every rank sends 1 MiB around a ring while receiving 1 MiB —
+        // larger than default socket buffers, so this deadlocks unless
+        // send ∥ recv is genuinely concurrent.
+        let p = 3u64;
+        let m = 1 << 20;
+        let results = run_tcp(p, Duration::from_secs(30), |mut t| {
+            let r = t.rank();
+            let got = t.sendrecv(
+                Some(SendSpec {
+                    to: (r + 1) % p,
+                    tag: r,
+                    data: vec![r as u8; m],
+                }),
+                Some((r + p - 1) % p),
+            )?;
+            Ok(got.expect("scheduled receive"))
+        })
+        .unwrap();
+        for (r, msg) in results.iter().enumerate() {
+            let prev = ((r as u64 + p - 1) % p) as u8;
+            assert_eq!(msg.tag, prev as u64);
+            assert_eq!(msg.data.len(), m);
+            assert!(msg.data.iter().all(|&b| b == prev));
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Thread-backed transport: one OS thread per rank, lock-free FIFO
+//! channels per directed pair.
+//!
+//! This is real parallel execution inside one process: there is no global
+//! round structure and no shared schedule state — each rank acts only on
+//! its local `O(log p)` schedule, and messages pair up because the
+//! schedules are correct (the paper's Condition 1). The per-(sender,
+//! receiver) channels keep blocks FIFO per pair, which together with
+//! schedule determinism makes the receive side unambiguous; block tags are
+//! still asserted by the collective layer.
+//!
+//! A failing rank cannot hang the rest: receives time out (configurable)
+//! and report which peer and block they were waiting for.
+
+use super::{SendSpec, Transport, TransportError, WireMsg};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+/// One rank's endpoint of the in-process channel mesh. Create a full set
+/// with [`ThreadTransport::mesh`] or run an SPMD program directly with
+/// [`run_threads`].
+pub struct ThreadTransport {
+    rank: u64,
+    p: u64,
+    /// `senders[to]`: channel into `to`'s inbox slot for this rank.
+    senders: Vec<Sender<WireMsg>>,
+    /// `receivers[from]`: this rank's inbox slot for messages from `from`.
+    receivers: Vec<Receiver<WireMsg>>,
+    timeout: Duration,
+}
+
+impl ThreadTransport {
+    /// Build the full `p`-rank mesh; element `r` of the result is rank
+    /// `r`'s endpoint. Receives block for at most `timeout`.
+    pub fn mesh(p: u64, timeout: Duration) -> Vec<ThreadTransport> {
+        assert!(p >= 1, "need at least one rank");
+        let pu = p as usize;
+        // rxs[to][from] receives what txs[to][from] sends.
+        let mut txs: Vec<Vec<Sender<WireMsg>>> = Vec::with_capacity(pu);
+        let mut rxs: Vec<Vec<Receiver<WireMsg>>> = Vec::with_capacity(pu);
+        for _ in 0..pu {
+            let (mut tv, mut rv) = (Vec::with_capacity(pu), Vec::with_capacity(pu));
+            for _ in 0..pu {
+                let (tx, rx) = channel::<WireMsg>();
+                tv.push(tx);
+                rv.push(rx);
+            }
+            txs.push(tv);
+            rxs.push(rv);
+        }
+        // Transpose the senders: endpoint `from` needs txs[to][from] for
+        // every `to`.
+        let mut senders: Vec<Vec<Sender<WireMsg>>> = (0..pu).map(|_| Vec::new()).collect();
+        for row in txs {
+            for (from, tx) in row.into_iter().enumerate() {
+                senders[from].push(tx); // senders[from][to], to-major pushes
+            }
+        }
+        senders
+            .into_iter()
+            .zip(rxs)
+            .enumerate()
+            .map(|(rank, (senders, receivers))| ThreadTransport {
+                rank: rank as u64,
+                p,
+                senders,
+                receivers,
+                timeout,
+            })
+            .collect()
+    }
+}
+
+impl Transport for ThreadTransport {
+    fn rank(&self) -> u64 {
+        self.rank
+    }
+
+    fn size(&self) -> u64 {
+        self.p
+    }
+
+    fn sendrecv(
+        &mut self,
+        send: Option<SendSpec>,
+        recv_from: Option<u64>,
+    ) -> Result<Option<WireMsg>, TransportError> {
+        // Fire the (non-blocking, unbounded-channel) send, then block on
+        // the receive: send ∥ recv.
+        if let Some(s) = send {
+            if s.to >= self.p || s.to == self.rank {
+                return Err(TransportError::Collective(format!(
+                    "rank {}: invalid send destination {} (p = {})",
+                    self.rank, s.to, self.p
+                )));
+            }
+            self.senders[s.to as usize]
+                .send(WireMsg {
+                    tag: s.tag,
+                    data: s.data,
+                })
+                .map_err(|_| {
+                    TransportError::Io(format!(
+                        "rank {}: peer {} hung up",
+                        self.rank, s.to
+                    ))
+                })?;
+        }
+        match recv_from {
+            None => Ok(None),
+            Some(from) => {
+                if from >= self.p || from == self.rank {
+                    return Err(TransportError::Collective(format!(
+                        "rank {}: invalid receive source {from} (p = {})",
+                        self.rank, self.p
+                    )));
+                }
+                match self.receivers[from as usize].recv_timeout(self.timeout) {
+                    Ok(msg) => Ok(Some(msg)),
+                    Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout(format!(
+                        "rank {}: waited {:?} for a block from {from}",
+                        self.rank, self.timeout
+                    ))),
+                    Err(RecvTimeoutError::Disconnected) => Err(TransportError::Io(format!(
+                        "rank {}: peer {from} disconnected",
+                        self.rank
+                    ))),
+                }
+            }
+        }
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        // Dissemination barrier over a reserved tag, like the TCP backend:
+        // bounded by the receive timeout, so one failed rank cannot hang
+        // the rest (which a std::sync::Barrier would).
+        const BARRIER_TAG: u64 = u64::MAX;
+        let p = self.p;
+        if p == 1 {
+            return Ok(());
+        }
+        let q = crate::sched::ceil_log2(p);
+        for k in 0..q {
+            let step = 1u64 << k;
+            let to = (self.rank + step) % p;
+            let from = (self.rank + p - step) % p;
+            let got = self.sendrecv(
+                Some(SendSpec {
+                    to,
+                    tag: BARRIER_TAG,
+                    data: Vec::new(),
+                }),
+                Some(from),
+            )?;
+            match got {
+                Some(msg) if msg.tag == BARRIER_TAG && msg.data.is_empty() => {}
+                Some(msg) => {
+                    return Err(TransportError::Protocol(format!(
+                        "rank {}: expected barrier token from {from}, got block {}",
+                        self.rank, msg.tag
+                    )))
+                }
+                None => unreachable!("recv_from was Some"),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run `f` as an SPMD program: one OS thread per rank over a fresh channel
+/// mesh. Returns the per-rank results (index = rank); if ranks fail, the
+/// first substantive error is returned (timeouts that are mere fallout of
+/// another rank's failure are suppressed in its favor).
+pub fn run_threads<R, F>(p: u64, timeout: Duration, f: F) -> Result<Vec<R>, TransportError>
+where
+    R: Send,
+    F: Fn(ThreadTransport) -> Result<R, TransportError> + Sync,
+{
+    let endpoints = ThreadTransport::mesh(p, timeout);
+    let mut results: Vec<Option<Result<R, TransportError>>> = (0..p).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(p as usize);
+        for t in endpoints {
+            let f = &f;
+            handles.push(s.spawn(move || f(t)));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            results[rank] = Some(h.join().unwrap_or_else(|_| {
+                Err(TransportError::Collective(format!("rank {rank} panicked")))
+            }));
+        }
+    });
+    super::drain_results(results, |e| {
+        matches!(e, TransportError::Timeout(_) | TransportError::Io(_))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairwise_exchange_is_full_duplex() {
+        // Every rank sends to its partner and receives from it in the same
+        // round — the "fully bidirectional" part of the machine model.
+        let results = run_threads(4, Duration::from_secs(10), |mut t| {
+            let partner = t.rank() ^ 1;
+            let got = t.sendrecv(
+                Some(SendSpec {
+                    to: partner,
+                    tag: t.rank(),
+                    data: vec![t.rank() as u8],
+                }),
+                Some(partner),
+            )?;
+            let msg = got.expect("scheduled receive");
+            t.barrier()?;
+            Ok((msg.tag, msg.data))
+        })
+        .unwrap();
+        for (r, (tag, data)) in results.iter().enumerate() {
+            assert_eq!(*tag, r as u64 ^ 1);
+            assert_eq!(data, &vec![(r as u64 ^ 1) as u8]);
+        }
+    }
+
+    #[test]
+    fn fifo_per_pair_keeps_blocks_ordered() {
+        let results = run_threads(2, Duration::from_secs(10), |mut t| {
+            let mut tags = Vec::new();
+            if t.rank() == 0 {
+                for tag in 0..5u64 {
+                    t.sendrecv(
+                        Some(SendSpec {
+                            to: 1,
+                            tag,
+                            data: vec![tag as u8; 3],
+                        }),
+                        None,
+                    )?;
+                }
+            } else {
+                for _ in 0..5 {
+                    let msg = t.sendrecv(None, Some(0))?.expect("scheduled receive");
+                    tags.push(msg.tag);
+                }
+            }
+            Ok(tags)
+        })
+        .unwrap();
+        assert_eq!(results[1], vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn timeout_reports_instead_of_hanging() {
+        let err = run_threads(2, Duration::from_millis(50), |mut t| {
+            if t.rank() == 0 {
+                // Never sends; rank 1's receive must time out.
+                return Ok(());
+            }
+            t.sendrecv(None, Some(0))?;
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(matches!(err, TransportError::Timeout(_) | TransportError::Io(_)), "{err}");
+    }
+}

@@ -1,0 +1,259 @@
+//! Cross-backend transport tests: the *same* generic SPMD collectives
+//! must deliver byte-identical buffers on the lockstep simulator, the
+//! thread backend and the TCP backend.
+//!
+//! The simulator backend is the reference — it additionally enforces the
+//! one-ported machine model and pins the round-optimal round counts. All
+//! randomness is xorshift-seeded (deterministic; the offline image has no
+//! proptest).
+
+use nblock_bcast::bench_support::XorShift;
+use nblock_bcast::collectives::generic::{
+    allgatherv_circulant, allreduce_circulant, bcast_circulant, bcast_hierarchical, bcast_rounds,
+    reduce_circulant,
+};
+use nblock_bcast::sched::ceil_log2;
+use nblock_bcast::simulator::CostModel;
+use nblock_bcast::transport::sim::run_sim;
+use nblock_bcast::transport::tcp::run_tcp;
+use nblock_bcast::transport::thread::run_threads;
+use nblock_bcast::transport::Transport;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(60);
+
+fn payload(m: u64, seed: u64) -> Vec<u8> {
+    (0..m).map(|i| ((i * 131 + seed * 29 + 7) % 251) as u8).collect()
+}
+
+fn flat() -> CostModel {
+    CostModel::flat_default()
+}
+
+#[test]
+fn bcast_thread_matches_sim_reference_random_configs() {
+    let mut rng = XorShift::new(0xBCA5_7001);
+    for _ in 0..10 {
+        let p = rng.range(2, 17);
+        let n = rng.range(1, 9) as usize;
+        let root = rng.below(p);
+        // Include m < n so zero-sized blocks flow on every backend.
+        let m = rng.below(2048);
+        let d = payload(m, p * 31 + n as u64);
+        let spmd = |rank: u64, t: &mut dyn Transport| {
+            let data = if rank == root { Some(&d[..]) } else { None };
+            bcast_circulant(t, root, n, m, data)
+        };
+        let (sim_bufs, stats) = run_sim(p, flat(), |mut t| spmd(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("sim p={p} n={n} root={root}: {e}"));
+        assert_eq!(stats.rounds, n - 1 + ceil_log2(p), "p={p} n={n}");
+        let thread_bufs = run_threads(p, TIMEOUT, |mut t| spmd(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("thread p={p} n={n} root={root}: {e}"));
+        assert_eq!(sim_bufs, thread_bufs, "p={p} n={n} root={root}");
+        for buf in &sim_bufs {
+            assert_eq!(buf, &d, "p={p} n={n} root={root}");
+        }
+    }
+}
+
+#[test]
+fn bcast_tcp_smoke_matches_sim_reference() {
+    for (p, n, root, m) in [(2u64, 3usize, 1u64, 777u64), (3, 2, 0, 100), (5, 4, 2, 4099)] {
+        let d = payload(m, p + n as u64);
+        let spmd = |rank: u64, t: &mut dyn Transport| {
+            let data = if rank == root { Some(&d[..]) } else { None };
+            bcast_circulant(t, root, n, m, data)
+        };
+        let (sim_bufs, _) = run_sim(p, flat(), |mut t| spmd(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("sim p={p}: {e}"));
+        let tcp_bufs = run_tcp(p, TIMEOUT, |mut t| spmd(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("tcp p={p}: {e}"));
+        assert_eq!(sim_bufs, tcp_bufs, "p={p} n={n} root={root}");
+        for buf in &tcp_bufs {
+            assert_eq!(buf, &d, "p={p} n={n} root={root}");
+        }
+    }
+}
+
+#[test]
+fn allgatherv_thread_matches_sim_reference_random_configs() {
+    let mut rng = XorShift::new(0xA9A7_4002);
+    for _ in 0..8 {
+        let p = rng.range(2, 13);
+        let n = rng.range(1, 6) as usize;
+        // Irregular, including empty contributions.
+        let counts: Vec<u64> = (0..p).map(|_| rng.below(400)).collect();
+        let datas: Vec<Vec<u8>> = counts
+            .iter()
+            .enumerate()
+            .map(|(j, &c)| payload(c, j as u64))
+            .collect();
+        let spmd = |rank: u64, t: &mut dyn Transport| {
+            allgatherv_circulant(t, n, &counts, &datas[rank as usize])
+        };
+        let (sim_out, stats) = run_sim(p, flat(), |mut t| spmd(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("sim p={p} n={n} counts={counts:?}: {e}"));
+        assert_eq!(stats.rounds, n - 1 + ceil_log2(p), "p={p} n={n}");
+        let thread_out = run_threads(p, TIMEOUT, |mut t| spmd(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("thread p={p} n={n} counts={counts:?}: {e}"));
+        assert_eq!(sim_out, thread_out, "p={p} n={n}");
+        for all in &sim_out {
+            assert_eq!(all, &datas, "p={p} n={n}");
+        }
+    }
+}
+
+#[test]
+fn allgatherv_tcp_smoke_matches_sim_reference() {
+    for (p, n) in [(2u64, 2usize), (3, 1), (5, 3)] {
+        let counts: Vec<u64> = (0..p).map(|i| (i % 3) * 97 + 5).collect();
+        let datas: Vec<Vec<u8>> = counts
+            .iter()
+            .enumerate()
+            .map(|(j, &c)| payload(c, 7 * j as u64 + 1))
+            .collect();
+        let spmd = |rank: u64, t: &mut dyn Transport| {
+            allgatherv_circulant(t, n, &counts, &datas[rank as usize])
+        };
+        let (sim_out, _) = run_sim(p, flat(), |mut t| spmd(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("sim p={p}: {e}"));
+        let tcp_out = run_tcp(p, TIMEOUT, |mut t| spmd(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("tcp p={p}: {e}"));
+        assert_eq!(sim_out, tcp_out, "p={p} n={n}");
+        for all in &tcp_out {
+            assert_eq!(all, &datas, "p={p} n={n}");
+        }
+    }
+}
+
+#[test]
+fn generic_matches_centralized_simulator_accounting() {
+    // The SPMD broadcast over the lockstep simulator must reproduce the
+    // centralized collective's cost accounting exactly — same rounds, same
+    // wire bytes, same simulated time.
+    use nblock_bcast::collectives::bcast_circulant as central_bcast;
+    use nblock_bcast::simulator::Engine;
+    for (p, n, root) in [(5u64, 3usize, 2u64), (16, 8, 0), (17, 4, 16)] {
+        let m = 64 * n as u64 + 3;
+        let d = payload(m, p);
+        let mut e = Engine::new(p, flat());
+        let central = central_bcast(&mut e, root, n, m, Some(&d)).unwrap();
+        let (_, stats) = run_sim(p, flat(), |mut t| {
+            let data = if t.rank() == root { Some(&d[..]) } else { None };
+            bcast_circulant(&mut t, root, n, m, data)
+        })
+        .unwrap();
+        assert_eq!(stats.rounds, central.rounds, "p={p} n={n}");
+        assert_eq!(stats.bytes_on_wire, central.bytes_on_wire, "p={p} n={n}");
+        assert!(
+            (stats.time_s - central.time_s).abs() < 1e-12,
+            "p={p} n={n}: {} vs {}",
+            stats.time_s,
+            central.time_s
+        );
+    }
+}
+
+#[test]
+fn reduce_and_allreduce_match_serial_sum_on_all_backends() {
+    let mut rng = XorShift::new(0x5EED_4003);
+    for _ in 0..5 {
+        let p = rng.range(2, 10);
+        let n = rng.range(1, 5) as usize;
+        let elems = rng.range(n as u64, 200) as usize;
+        let root = rng.below(p);
+        let contribs: Vec<Vec<f32>> = (0..p)
+            .map(|r| {
+                (0..elems)
+                    .map(|i| ((r * 37 + i as u64 * 11) % 97) as f32 / 7.0)
+                    .collect()
+            })
+            .collect();
+        let mut want = vec![0f32; elems];
+        for c in &contribs {
+            for (w, v) in want.iter_mut().zip(c) {
+                *w += v;
+            }
+        }
+        let red = |rank: u64, t: &mut dyn Transport| {
+            reduce_circulant(t, root, n, &contribs[rank as usize])
+        };
+        let (sim_red, stats) = run_sim(p, flat(), |mut t| red(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("sim reduce p={p} n={n}: {e}"));
+        assert_eq!(stats.rounds, n - 1 + ceil_log2(p), "reduce round-optimal");
+        let thread_red = run_threads(p, TIMEOUT, |mut t| red(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("thread reduce p={p} n={n}: {e}"));
+        for (i, (&g, &w)) in sim_red[root as usize].iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-3 * w.abs().max(1.0), "elem {i}: {g} vs {w}");
+        }
+        // Identical combine order on every backend ⇒ bitwise-equal floats.
+        assert_eq!(sim_red, thread_red, "p={p} n={n} root={root}");
+
+        let ar = |rank: u64, t: &mut dyn Transport| {
+            allreduce_circulant(t, n, &contribs[rank as usize])
+        };
+        let (sim_ar, _) = run_sim(p, flat(), |mut t| ar(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("sim allreduce p={p} n={n}: {e}"));
+        let thread_ar = run_threads(p, TIMEOUT, |mut t| ar(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("thread allreduce p={p} n={n}: {e}"));
+        assert_eq!(sim_ar, thread_ar);
+        for r in 0..p as usize {
+            for (i, (&g, &w)) in sim_ar[r].iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() < 1e-3 * w.abs().max(1.0),
+                    "rank {r} elem {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hierarchical_bcast_generic_cross_backend() {
+    for (nodes, rpn, root) in [(3u64, 2u64, 1u64), (4, 4, 5), (2, 3, 0)] {
+        let p = nodes * rpn;
+        let m = 999u64;
+        let d = payload(m, p);
+        let (n_inter, n_intra) = (3usize, 2usize);
+        let spmd = |rank: u64, t: &mut dyn Transport| {
+            let data = if rank == root { Some(&d[..]) } else { None };
+            bcast_hierarchical(t, root, rpn, n_inter, n_intra, m, data)
+        };
+        let (sim_bufs, _) = run_sim(p, CostModel::cluster_36(rpn), |mut t| {
+            spmd(t.rank(), &mut t)
+        })
+        .unwrap_or_else(|e| panic!("sim nodes={nodes} rpn={rpn} root={root}: {e}"));
+        let thread_bufs = run_threads(p, TIMEOUT, |mut t| spmd(t.rank(), &mut t))
+            .unwrap_or_else(|e| panic!("thread nodes={nodes} rpn={rpn} root={root}: {e}"));
+        assert_eq!(sim_bufs, thread_bufs, "nodes={nodes} rpn={rpn}");
+        for buf in &sim_bufs {
+            assert_eq!(buf, &d, "nodes={nodes} rpn={rpn} root={root}");
+        }
+    }
+}
+
+#[test]
+fn round_count_helper_matches_plans() {
+    assert_eq!(bcast_rounds(1, 5), 0);
+    for p in [2u64, 3, 16, 17] {
+        for n in [1usize, 2, 7] {
+            assert_eq!(bcast_rounds(p, n), n - 1 + ceil_log2(p));
+        }
+    }
+}
+
+#[test]
+fn single_rank_degenerates_gracefully_everywhere() {
+    let d = payload(64, 9);
+    let (sim_bufs, stats) = run_sim(1, flat(), |mut t| {
+        bcast_circulant(&mut t, 0, 4, 64, Some(&d))
+    })
+    .unwrap();
+    assert_eq!(sim_bufs[0], d);
+    assert_eq!(stats.rounds, 0);
+    let th = run_threads(1, TIMEOUT, |mut t| {
+        allgatherv_circulant(&mut t, 2, &[64], &d)
+    })
+    .unwrap();
+    assert_eq!(th[0], vec![d.clone()]);
+}

@@ -1,0 +1,186 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this vendored shim provides
+//! exactly the subset of the `anyhow` 1.x API this repository uses:
+//! [`Error`], [`Result`], the [`anyhow!`] and [`bail!`] macros, and the
+//! [`Context`] extension trait. Error values keep their source chain (for
+//! `Debug` output) but the shim does not attempt backtraces or downcasting.
+//!
+//! Swapping in the real crate is a one-line change in the workspace
+//! manifest; no source file references shim-only API.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamically typed error with a human-readable message.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Create an error from a standard error, preserving it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Wrap with additional context, like `anyhow::Error::context`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+            source: self.source,
+        }
+    }
+
+    /// The chain of source errors, outermost first (shim: at most one).
+    pub fn source_ref(&self) -> Option<&(dyn StdError + 'static)> {
+        match &self.source {
+            Some(s) => {
+                let r: &(dyn StdError + 'static) = &**s;
+                Some(r)
+            }
+            None => None,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur: Option<&(dyn StdError + 'static)> = self.source_ref();
+        let mut first = true;
+        while let Some(err) = cur {
+            let rendered = err.to_string();
+            // The message already embeds the outermost source's text.
+            if !(first && self.msg.contains(&rendered)) {
+                write!(f, "\n\nCaused by:\n    {rendered}")?;
+            }
+            first = false;
+            cur = err.source();
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes the blanket `From` below coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_format_and_wrap() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 7;
+        let e = anyhow!("value {x} and {}", 9);
+        assert_eq!(e.to_string(), "value 7 and 9");
+        let s = String::from("already a message");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "already a message");
+
+        fn bails() -> Result<()> {
+            bail!("stop {}", 42)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop 42");
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest: disk on fire");
+        let o: Option<u32> = None;
+        let e = o.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+}
