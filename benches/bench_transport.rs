@@ -1,69 +1,282 @@
-//! Bench: broadcast wall-clock across the three transport backends for a
-//! grid of (p, n, block_size) — the *same* generic SPMD collective over
-//! the lockstep simulator, per-rank OS threads, and localhost TCP.
+//! Bench: steady-state broadcast cost across the three transport backends
+//! for a grid of (p, n, block_size) — the *same* generic SPMD collective
+//! over the lockstep simulator, per-rank OS threads, and localhost TCP.
 //!
-//! The simulator column also reports the machine-model (simulated) time,
-//! which the other backends are trying to approach on real hardware; the
-//! thread/tcp columns are dominated by per-round rendezvous cost at small
-//! blocks and by memcpy/syscall throughput at large blocks.
+//! Two things are measured per configuration and backend:
 //!
-//! `cargo bench --bench bench_transport`
+//! * **ns/round** — wall-clock of a barrier-delimited window of repeated
+//!   broadcasts through the zero-copy `bcast_circulant_into` path,
+//!   divided by `reps × rounds`;
+//! * **payload allocations/round** — a counting global allocator tallies
+//!   every allocation of `PAYLOAD_ALLOC_THRESHOLD` bytes or more inside
+//!   the same window (process-wide, so it covers every rank). On the
+//!   thread and TCP backends this must be 0 in steady state: payloads are
+//!   borrowed on send and land in pooled, recycled buffers on receive.
+//!   The lockstep simulator backend legitimately copies (messages cross
+//!   the global round structure), so its count is reported, not asserted.
+//!
+//! Results go to stdout (human table) and to `BENCH_transport.json`
+//! (machine-readable, uploaded as a CI artifact) so the perf trajectory
+//! of the transport hot path is tracked from PR 2 onward.
+//!
+//! `cargo bench --bench bench_transport`             # full grid
+//! `cargo bench --bench bench_transport -- --smoke`  # tiny p=8 grid for CI
 
-use nblock_bcast::bench_support::{fmt_bytes, fmt_time, time_once};
-use nblock_bcast::collectives::generic::{bcast_circulant, bcast_rounds};
+use nblock_bcast::bench_support::{fmt_bytes, fmt_time};
+use nblock_bcast::collectives::generic::{bcast_circulant_into, bcast_rounds};
 use nblock_bcast::simulator::CostModel;
 use nblock_bcast::transport::sim::run_sim;
 use nblock_bcast::transport::tcp::run_tcp;
 use nblock_bcast::transport::thread::run_threads;
-use nblock_bcast::transport::Transport;
-use std::time::Duration;
+use nblock_bcast::transport::{BufferPool, Transport, TransportError};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Allocations at or above this size count as payload allocations; the
+/// bench grid only uses block sizes ≥ this, and the round machinery stays
+/// below it (the largest recurring non-payload allocation is std mpsc's
+/// ~1.25 KiB 31-slot channel block; schedule vectors, block tables and
+/// pool bookkeeping are smaller still).
+const PAYLOAD_ALLOC_THRESHOLD: usize = 2048;
+
+static PAYLOAD_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// System allocator wrapper that counts payload-sized allocations.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if layout.size() >= PAYLOAD_ALLOC_THRESHOLD {
+            PAYLOAD_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if new_size >= PAYLOAD_ALLOC_THRESHOLD {
+            PAYLOAD_ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn payload(m: u64) -> Vec<u8> {
     (0..m).map(|i| ((i * 131 + 13) % 251) as u8).collect()
 }
 
+/// Per-rank SPMD body: warm up (connections, pools, buffer capacities),
+/// then time `reps` broadcasts between barriers and report the wall time
+/// plus the process-wide payload-allocation delta over that window.
+fn steady_state_bcast<T: Transport>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    m: u64,
+    d: &[u8],
+    warmup: usize,
+    reps: usize,
+) -> Result<(f64, u64), TransportError> {
+    t.warm_up()?;
+    let mut pool = BufferPool::default();
+    let mut out = Vec::new();
+    let data = if t.rank() == root { Some(d) } else { None };
+    // One barrier per broadcast: without it the root (which never
+    // receives) would free-run ahead of its peers and outrun buffer
+    // recycling; with it, warm-up puts enough buffers in circulation for
+    // the measured window to stay allocation-free.
+    for _ in 0..warmup {
+        bcast_circulant_into(t, root, n, m, data, &mut pool, &mut out)?;
+        t.barrier()?;
+    }
+    // Time only the broadcast rounds (the barrier is pacing, not the
+    // measured collective — including it would inflate ns/round by
+    // q/(n-1+q)); the allocation window keeps covering the barriers too,
+    // which must also be allocation-free.
+    let allocs0 = PAYLOAD_ALLOCS.load(Ordering::Relaxed);
+    let mut busy = 0.0f64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        bcast_circulant_into(t, root, n, m, data, &mut pool, &mut out)?;
+        busy += t0.elapsed().as_secs_f64();
+        t.barrier()?;
+    }
+    let wall = busy;
+    let allocs = PAYLOAD_ALLOCS.load(Ordering::Relaxed) - allocs0;
+    if out != d {
+        return Err(TransportError::Collective(format!(
+            "rank {}: delivery mismatch",
+            t.rank()
+        )));
+    }
+    Ok((wall, allocs))
+}
+
+struct Row {
+    backend: &'static str,
+    p: u64,
+    n: usize,
+    block_bytes: u64,
+    payload_bytes: u64,
+    rounds: usize,
+    reps: usize,
+    wall_s: f64,
+    ns_per_round: f64,
+    payload_allocs: u64,
+    allocs_per_round: f64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"backend\":\"{}\",\"p\":{},\"n\":{},\"block_bytes\":{},",
+                "\"payload_bytes\":{},\"rounds\":{},\"reps\":{},\"wall_s\":{:.6},",
+                "\"ns_per_round\":{:.1},\"payload_allocs\":{},\"allocs_per_round\":{:.3}}}"
+            ),
+            self.backend,
+            self.p,
+            self.n,
+            self.block_bytes,
+            self.payload_bytes,
+            self.rounds,
+            self.reps,
+            self.wall_s,
+            self.ns_per_round,
+            self.payload_allocs,
+            self.allocs_per_round,
+        )
+    }
+}
+
+fn summarize(
+    backend: &'static str,
+    p: u64,
+    n: usize,
+    block_bytes: u64,
+    reps: usize,
+    per_rank: Vec<(f64, u64)>,
+) -> Row {
+    let rounds = bcast_rounds(p, n);
+    // Wall: slowest rank's summed broadcast time (barrier pacing is
+    // excluded from the clock and from the denominator). Allocations: the
+    // counter is process-wide, so every rank saw (approximately) the same
+    // barrier-delimited delta; take the max to be conservative.
+    let wall_s = per_rank.iter().map(|r| r.0).fold(0.0f64, f64::max);
+    let payload_allocs = per_rank.iter().map(|r| r.1).max().unwrap_or(0);
+    let denom = (reps * rounds).max(1) as f64;
+    Row {
+        backend,
+        p,
+        n,
+        block_bytes,
+        payload_bytes: n as u64 * block_bytes,
+        rounds,
+        reps,
+        wall_s,
+        ns_per_round: wall_s * 1e9 / denom,
+        payload_allocs,
+        allocs_per_round: payload_allocs as f64 / denom,
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let timeout = Duration::from_secs(120);
-    println!("broadcast wall-clock by transport backend (root 0, delivery verified at every rank):");
+    let (ps, configs, warmup, reps): (&[u64], &[(usize, u64)], usize, usize) = if smoke {
+        (&[8], &[(4, 2048)], 2, 5)
+    } else {
+        (
+            &[4, 8, 16],
+            &[(4, 2048), (16, 2048), (16, 4096), (16, 65536)],
+            3,
+            20,
+        )
+    };
+    println!("steady-state broadcast by transport backend (root 0, zero-copy path):");
     println!(
-        "{:>4} {:>4} {:>10} {:>10} {:>7} | {:>12} {:>12} {:>12} {:>12}",
-        "p", "n", "block", "payload", "rounds", "sim wall", "thread wall", "tcp wall", "sim model"
+        "{:>4} {:>4} {:>10} {:>10} {:>7} {:>8} | {:>12} {:>14} | {:>12} {:>14}",
+        "p",
+        "n",
+        "block",
+        "payload",
+        "rounds",
+        "backend",
+        "ns/round",
+        "allocs/round",
+        "wall",
+        "payload allocs"
     );
-    for p in [4u64, 8, 16] {
-        for (n, bs) in [(4usize, 1024u64), (16, 1024), (16, 65536)] {
+    let mut rows: Vec<Row> = Vec::new();
+    for &p in ps {
+        for &(n, bs) in configs {
             let m = n as u64 * bs;
             let d = payload(m);
-            let spmd = |rank: u64, t: &mut dyn Transport| {
-                let data = if rank == 0 { Some(&d[..]) } else { None };
-                bcast_circulant(t, 0, n, m, data)
-            };
-            let check = |bufs: &[Vec<u8>]| {
-                assert!(bufs.iter().all(|b| b == &d), "delivery mismatch");
-            };
-            let (sim_out, sim_wall) = time_once(|| {
-                run_sim(p, CostModel::flat_default(), |mut t| spmd(t.rank(), &mut t)).unwrap()
-            });
-            check(&sim_out.0);
-            let (thread_out, thread_wall) =
-                time_once(|| run_threads(p, timeout, |mut t| spmd(t.rank(), &mut t)).unwrap());
-            check(&thread_out);
-            let (tcp_out, tcp_wall) =
-                time_once(|| run_tcp(p, timeout, |mut t| spmd(t.rank(), &mut t)).unwrap());
-            check(&tcp_out);
-            println!(
-                "{:>4} {:>4} {:>10} {:>10} {:>7} | {:>12} {:>12} {:>12} {:>12}",
-                p,
-                n,
-                fmt_bytes(bs),
-                fmt_bytes(m),
-                bcast_rounds(p, n),
-                fmt_time(sim_wall),
-                fmt_time(thread_wall),
-                fmt_time(tcp_wall),
-                fmt_time(sim_out.1.time_s),
-            );
+            let (sim_res, _stats) = run_sim(p, CostModel::flat_default(), |mut t| {
+                steady_state_bcast(&mut t, 0, n, m, &d, warmup, reps)
+            })
+            .expect("sim backend");
+            let thread_res = run_threads(p, timeout, |mut t| {
+                steady_state_bcast(&mut t, 0, n, m, &d, warmup, reps)
+            })
+            .expect("thread backend");
+            let tcp_res = run_tcp(p, timeout, |mut t| {
+                steady_state_bcast(&mut t, 0, n, m, &d, warmup, reps)
+            })
+            .expect("tcp backend");
+            for (backend, res) in [
+                ("sim", sim_res),
+                ("thread", thread_res),
+                ("tcp", tcp_res),
+            ] {
+                let row = summarize(backend, p, n, bs, reps, res);
+                println!(
+                    "{:>4} {:>4} {:>10} {:>10} {:>7} {:>8} | {:>12} {:>14.3} | {:>12} {:>14}",
+                    row.p,
+                    row.n,
+                    fmt_bytes(row.block_bytes),
+                    fmt_bytes(row.payload_bytes),
+                    row.rounds,
+                    row.backend,
+                    format!("{:.0}", row.ns_per_round),
+                    row.allocs_per_round,
+                    fmt_time(row.wall_s),
+                    row.payload_allocs,
+                );
+                rows.push(row);
+            }
         }
     }
-    println!("\nnote: tcp here is one thread per rank over real localhost sockets; the");
+    // Steady-state rounds on the point-to-point backends must not touch
+    // the payload allocator: borrowed sends, pooled receives.
+    for row in rows.iter().filter(|r| r.backend != "sim") {
+        assert_eq!(
+            row.payload_allocs, 0,
+            "{} p={} n={} block={}: {} steady-state payload allocations",
+            row.backend, row.p, row.n, row.block_bytes, row.payload_allocs
+        );
+    }
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"transport_bcast_steady_state\",",
+            "\"threshold_bytes\":{},\"smoke\":{},\"results\":[\n{}\n]}}\n"
+        ),
+        PAYLOAD_ALLOC_THRESHOLD,
+        smoke,
+        rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n")
+    );
+    let path = "BENCH_transport.json";
+    let mut f = std::fs::File::create(path).expect("create BENCH_transport.json");
+    f.write_all(json.as_bytes()).expect("write bench json");
+    println!("\nwrote {} rows to {path}", rows.len());
+    println!("note: tcp here is one thread per rank over real localhost sockets; the");
     println!("separate-process shape (identical wire path) is examples/bcast_tcp.rs.");
 }

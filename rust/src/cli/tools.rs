@@ -312,6 +312,9 @@ pub fn bcast_transport(p: u64, m: u64, n: usize, root: u64, backend: &str) -> Re
     );
     let t0 = std::time::Instant::now();
     let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+        // Pre-establish the circulant neighborhood (lazy-mesh TCP dials
+        // ahead of the first round; no-op on sim/thread).
+        t.warm_up()?;
         let data = if t.rank() == root { Some(&payload[..]) } else { None };
         generic::bcast_circulant(t.as_mut(), root, n, m, data)
     })?;
@@ -355,6 +358,7 @@ pub fn allgatherv_transport(p: u64, m: u64, n: usize, kind: &str, backend: &str)
     );
     let t0 = std::time::Instant::now();
     let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+        t.warm_up()?;
         let mine = &datas[t.rank() as usize];
         generic::allgatherv_circulant(t.as_mut(), n, &counts, mine)
     })?;

@@ -5,10 +5,21 @@
 //! only the calling rank's `O(log p)` (or `O(p log p)` for allgatherv)
 //! schedule — exactly as Algorithms 1 and 2 prescribe, independently and
 //! with no communication — and then drives one
-//! [`crate::transport::Transport::sendrecv`] per round. The same code runs
-//! unchanged over the lockstep simulator backend, per-rank OS threads, and
-//! TCP processes; the cross-backend tests in `rust/tests/transport.rs`
-//! prove byte-identical delivery.
+//! [`crate::transport::Transport::sendrecv_into`] per round. The same code
+//! runs unchanged over the lockstep simulator backend, per-rank OS
+//! threads, and TCP processes; the cross-backend tests in
+//! `rust/tests/transport.rs` prove byte-identical delivery.
+//!
+//! ## Zero-copy round loop
+//!
+//! Outgoing blocks are *borrowed* straight out of the rank's block storage
+//! (or, at the broadcast root, straight out of the user's payload — the
+//! root never copies its message at all), and incoming frames land in
+//! pooled buffers that move into block storage without a copy. The `_into`
+//! variants ([`bcast_circulant_into`]) additionally reuse the caller's
+//! output buffer and [`BufferPool`] across invocations, which is what the
+//! counting-allocator bench uses to show zero steady-state payload
+//! allocations per round on the point-to-point backends.
 //!
 //! Relation to the centralized collectives in the sibling modules: those
 //! drive all `p` ranks of the [`crate::simulator::Engine`] from one loop,
@@ -21,7 +32,7 @@
 
 use super::blocks::BlockPartition;
 use crate::sched::{ceil_log2, AllgatherSchedules, BcastPlan, Schedule, Skips};
-use crate::transport::{SendSpec, Transport, TransportError, WireMsg};
+use crate::transport::{BufferPool, SendSpec, Transport, TransportError};
 
 fn cerr(msg: String) -> TransportError {
     TransportError::Collective(msg)
@@ -39,37 +50,36 @@ pub fn bcast_rounds(p: u64, n: usize) -> usize {
 }
 
 /// Check one round's delivery against the schedule: exactly the scheduled
-/// block must arrive, carrying exactly `want_bytes`.
-fn take_scheduled(
+/// block must arrive, carrying exactly `want_bytes`. Returns whether a
+/// (scheduled) payload arrived.
+fn check_scheduled(
     rank: u64,
     round: usize,
-    got: Option<WireMsg>,
+    got: Option<u64>,
+    got_len: u64,
     expect: Option<usize>,
     want_bytes: impl FnOnce(usize) -> u64,
-) -> Result<Option<Vec<u8>>, TransportError> {
+) -> Result<bool, TransportError> {
     match (got, expect) {
-        (None, None) => Ok(None),
-        (Some(msg), Some(blk)) => {
+        (None, None) => Ok(false),
+        (Some(tag), Some(blk)) => {
             // Determinacy: no metadata is exchanged — the received block
             // must be exactly the scheduled one.
-            if msg.tag != blk as u64 {
+            if tag != blk as u64 {
                 return Err(cerr(format!(
-                    "rank {rank} round {round}: scheduled block {blk}, wire carried {}",
-                    msg.tag
+                    "rank {rank} round {round}: scheduled block {blk}, wire carried {tag}"
                 )));
             }
             let want = want_bytes(blk);
-            if msg.data.len() as u64 != want {
+            if got_len != want {
                 return Err(cerr(format!(
-                    "rank {rank} round {round}: block {blk} has {} bytes, scheduled {want}",
-                    msg.data.len()
+                    "rank {rank} round {round}: block {blk} has {got_len} bytes, scheduled {want}"
                 )));
             }
-            Ok(Some(msg.data))
+            Ok(true)
         }
-        (Some(msg), None) => Err(cerr(format!(
-            "rank {rank} round {round}: unexpected message (block {})",
-            msg.tag
+        (Some(tag), None) => Err(cerr(format!(
+            "rank {rank} round {round}: unexpected message (block {tag})"
         ))),
         (None, Some(blk)) => Err(cerr(format!(
             "rank {rank} round {round}: scheduled block {blk} never arrived"
@@ -90,6 +100,27 @@ pub fn bcast_circulant<T: Transport + ?Sized>(
     m: u64,
     data: Option<&[u8]>,
 ) -> Result<Vec<u8>, TransportError> {
+    let mut pool = BufferPool::default();
+    let mut out = Vec::new();
+    bcast_circulant_into(t, root, n, m, data, &mut pool, &mut out)?;
+    Ok(out)
+}
+
+/// [`bcast_circulant`] with caller-owned storage: the reassembled message
+/// lands in `out` (cleared, capacity reused) and block buffers are drawn
+/// from and recycled into `pool`. Repeated broadcasts with the same
+/// `(pool, out)` perform zero steady-state payload allocations — the hot
+/// path the transport bench measures.
+#[allow(clippy::too_many_arguments)]
+pub fn bcast_circulant_into<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    m: u64,
+    data: Option<&[u8]>,
+    pool: &mut BufferPool,
+    out: &mut Vec<u8>,
+) -> Result<(), TransportError> {
     let p = t.size();
     let rank = t.rank();
     if root >= p {
@@ -108,30 +139,36 @@ pub fn bcast_circulant<T: Transport + ?Sized>(
         return Err(cerr(format!("root {root} must supply the payload")));
     }
     if p == 1 {
-        return Ok(data.expect("validated above").to_vec());
+        out.clear();
+        out.extend_from_slice(data.expect("validated above"));
+        return Ok(());
     }
     let skips = Skips::new(p);
     let rel = (rank + p - root) % p;
     let plan = BcastPlan::new(Schedule::compute(&skips, rel), n);
-    let mut bufs: Vec<Option<Vec<u8>>> = if rank == root {
-        let d = data.expect("validated above");
-        (0..n).map(|i| Some(d[part.range(i)].to_vec())).collect()
-    } else {
-        vec![None; n]
-    };
+    // Non-root block storage; the root sends borrowed slices of `data`
+    // directly and never populates (or copies into) block buffers.
+    let mut bufs: Vec<Option<Vec<u8>>> = vec![None; n];
     for round in 0..plan.num_rounds() {
         let a = plan.action(round);
         let to_rel = skips.to_proc(rel, a.k);
         let from_rel = skips.from_proc(rel, a.k);
+        let expect = if rank == root { None } else { a.recv_block };
+        let recv_from = expect.map(|_| (from_rel + root) % p);
+        let mut recv_slot = pool.get();
         // Never send to the root; the root never receives.
         let send = if to_rel != 0 {
             match a.send_block {
                 Some(sb) => {
-                    let payload = bufs[sb].clone().ok_or_else(|| {
-                        cerr(format!(
-                            "rank {rank} round {round}: sends block {sb} before receiving it"
-                        ))
-                    })?;
+                    let payload: &[u8] = if rank == root {
+                        &data.expect("validated above")[part.range(sb)]
+                    } else {
+                        bufs[sb].as_deref().ok_or_else(|| {
+                            cerr(format!(
+                                "rank {rank} round {round}: sends block {sb} before receiving it"
+                            ))
+                        })?
+                    };
                     Some(SendSpec {
                         to: (to_rel + root) % p,
                         tag: sb as u64,
@@ -143,29 +180,43 @@ pub fn bcast_circulant<T: Transport + ?Sized>(
         } else {
             None
         };
-        let expect = if rank == root { None } else { a.recv_block };
-        let recv_from = expect.map(|_| (from_rel + root) % p);
-        let got = t.sendrecv(send, recv_from)?;
-        if let Some(payload) = take_scheduled(rank, round, got, expect, |b| part.size(b))? {
-            let blk = expect.expect("take_scheduled returned a payload");
-            bufs[blk] = Some(payload);
+        let got = t.sendrecv_into(send, recv_from, &mut recv_slot)?;
+        if check_scheduled(rank, round, got, recv_slot.len() as u64, expect, |b| {
+            part.size(b)
+        })? {
+            let blk = expect.expect("check_scheduled confirmed a scheduled payload");
+            bufs[blk] = Some(recv_slot);
+        } else {
+            pool.put(recv_slot);
         }
     }
-    let mut out = Vec::with_capacity(m as usize);
-    for (i, buf) in bufs.iter().enumerate() {
-        let b = buf
-            .as_deref()
-            .ok_or_else(|| cerr(format!("rank {rank}: missing block {i}")))?;
-        out.extend_from_slice(b);
-    }
-    if let Some(d) = data {
-        if out != d {
-            return Err(cerr(format!(
-                "rank {rank}: reassembled payload differs from the reference"
-            )));
+    out.clear();
+    out.reserve(m as usize);
+    if rank == root {
+        out.extend_from_slice(data.expect("validated above"));
+    } else {
+        for (i, buf) in bufs.iter().enumerate() {
+            let b = buf
+                .as_deref()
+                .ok_or_else(|| cerr(format!("rank {rank}: missing block {i}")))?;
+            out.extend_from_slice(b);
         }
     }
-    Ok(out)
+    for buf in bufs.into_iter().flatten() {
+        pool.put(buf);
+    }
+    // Meaningful only off-root: the root's output *is* its input, while a
+    // non-root caller passing the expected payload gets delivery asserted.
+    if rank != root {
+        if let Some(d) = data {
+            if out != d {
+                return Err(cerr(format!(
+                    "rank {rank}: reassembled payload differs from the reference"
+                )));
+            }
+        }
+    }
+    Ok(())
 }
 
 /// The paper's Algorithm 2 as an SPMD program: irregular all-to-all
@@ -222,13 +273,17 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
     for b in 0..n {
         bufs[rank as usize][b] = Some(mine[parts[rank as usize].range(b)].to_vec());
     }
+    // Round-reused scratch: the packed outgoing message and the inbound
+    // frame. Capacities stabilize after the first few rounds.
+    let mut send_payload: Vec<u8> = Vec::new();
+    let mut recv_buf: Vec<u8> = Vec::new();
     for i in x..(n + q - 1 + x) {
         let k = i % q;
         let to = skips.to_proc(rank, k);
         let from = skips.from_proc(rank, k);
         // Pack one block per root j != to (the to-processor is root for
         // its own contribution).
-        let mut payload = Vec::new();
+        send_payload.clear();
         for j in 0..p {
             if j == to {
                 continue;
@@ -239,22 +294,22 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
                         "rank {rank} round {i}: sends root {j} block {b} before receiving it"
                     ))
                 })?;
-                payload.extend_from_slice(blk);
+                send_payload.extend_from_slice(blk);
             }
         }
-        let got = t.sendrecv(
+        let got = t.sendrecv_into(
             Some(SendSpec {
                 to,
                 tag: k as u64,
-                data: payload,
+                data: &send_payload,
             }),
             Some(from),
+            &mut recv_buf,
         )?;
-        let msg = got.ok_or_else(|| cerr(format!("rank {rank} round {i}: no message")))?;
-        if msg.tag != k as u64 {
+        let tag = got.ok_or_else(|| cerr(format!("rank {rank} round {i}: no message")))?;
+        if tag != k as u64 {
             return Err(cerr(format!(
-                "rank {rank} round {i}: message tagged {}, expected round-index {k}",
-                msg.tag
+                "rank {rank} round {i}: message tagged {tag}, expected round-index {k}"
             )));
         }
         // Unpack: one block per root j != rank, by this rank's own
@@ -266,19 +321,19 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
             }
             if let Some(b) = concrete(sched.recv[j as usize][k], i, k) {
                 let sz = parts[j as usize].size(b) as usize;
-                if off + sz > msg.data.len() {
+                if off + sz > recv_buf.len() {
                     return Err(cerr(format!(
                         "rank {rank} round {i}: pack/unpack misalignment"
                     )));
                 }
-                bufs[j as usize][b] = Some(msg.data[off..off + sz].to_vec());
+                bufs[j as usize][b] = Some(recv_buf[off..off + sz].to_vec());
                 off += sz;
             }
         }
-        if off != msg.data.len() {
+        if off != recv_buf.len() {
             return Err(cerr(format!(
                 "rank {rank} round {i}: {} unconsumed payload bytes",
-                msg.data.len() - off
+                recv_buf.len() - off
             )));
         }
     }
@@ -294,13 +349,6 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
         out.push(v);
     }
     Ok(out)
-}
-
-fn combine(dst: &mut [f32], src: &[f32]) {
-    debug_assert_eq!(dst.len(), src.len());
-    for (d, s) in dst.iter_mut().zip(src) {
-        *d += s;
-    }
 }
 
 fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
@@ -347,6 +395,10 @@ pub fn reduce_circulant<T: Transport + ?Sized>(
         r.start / 4..r.end / 4
     };
     let rounds = plan.num_rounds();
+    // Round-reused scratch for the serialized outgoing block and the
+    // inbound partial sums — no per-round allocation.
+    let mut send_scratch: Vec<u8> = Vec::new();
+    let mut recv_scratch: Vec<u8> = Vec::new();
     for t_rev in 0..rounds {
         let tf = rounds - 1 - t_rev; // the bcast round being reversed
         let a = plan.action(tf);
@@ -355,11 +407,20 @@ pub fn reduce_circulant<T: Transport + ?Sized>(
         // Reverse of "r receives block b from f": r emits its accumulated
         // block b to f. The root only combines.
         let send = if rank != root {
-            a.recv_block.map(|b| SendSpec {
-                to: (from_rel + root) % p,
-                tag: b as u64,
-                data: f32s_to_bytes(&acc[erange(b)]),
-            })
+            match a.recv_block {
+                Some(b) => {
+                    send_scratch.clear();
+                    for x in &acc[erange(b)] {
+                        send_scratch.extend_from_slice(&x.to_le_bytes());
+                    }
+                    Some(SendSpec {
+                        to: (from_rel + root) % p,
+                        tag: b as u64,
+                        data: &send_scratch,
+                    })
+                }
+                None => None,
+            }
         } else {
             None
         };
@@ -367,13 +428,18 @@ pub fn reduce_circulant<T: Transport + ?Sized>(
         // from t — unless the forward send was suppressed (target root).
         let expect = if to_rel != 0 { a.send_block } else { None };
         let recv_from = expect.map(|_| (to_rel + root) % p);
-        let got = t.sendrecv(send, recv_from)?;
-        if let Some(payload) =
-            take_scheduled(rank, t_rev, got, expect, |b| erange(b).len() as u64 * 4)?
-        {
-            let blk = expect.expect("take_scheduled returned a payload");
-            let incoming = bytes_to_f32s(&payload);
-            combine(&mut acc[erange(blk)], &incoming);
+        let got = t.sendrecv_into(send, recv_from, &mut recv_scratch)?;
+        if check_scheduled(rank, t_rev, got, recv_scratch.len() as u64, expect, |b| {
+            erange(b).len() as u64 * 4
+        })? {
+            let blk = expect.expect("check_scheduled confirmed a scheduled payload");
+            // Combine in place, straight off the wire bytes.
+            for (d, c) in acc[erange(blk)]
+                .iter_mut()
+                .zip(recv_scratch.chunks_exact(4))
+            {
+                *d += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
         }
     }
     Ok(acc)
@@ -449,36 +515,36 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
     let my_node = rank / ranks_per_node;
 
     // --- Phase 0: root → its node leader (one round, if distinct) --------
-    let mut held: Option<Vec<u8>> = if rank == root {
-        Some(data.expect("validated above").to_vec())
-    } else {
-        None
-    };
+    // `held` stores only *received* payloads; the root always reads
+    // straight from the user's `data` (never copies its message at all,
+    // matching the flat broadcast's root path).
+    let mut held: Option<Vec<u8>> = None;
     if root != leader(root_node) {
         if rank == root {
-            let payload = held.clone().expect("root holds the payload");
-            let got = t.sendrecv(
+            let mut sink = Vec::new();
+            let got = t.sendrecv_into(
                 Some(SendSpec {
                     to: leader(root_node),
                     tag: 0,
-                    data: payload,
+                    data: data.expect("validated above"),
                 }),
                 None,
+                &mut sink,
             )?;
             if got.is_some() {
                 return Err(cerr(format!("rank {rank}: unexpected message in phase 0")));
             }
         } else if rank == leader(root_node) {
-            let msg = t
-                .sendrecv(None, Some(root))?
+            let mut buf = Vec::new();
+            t.sendrecv_into(None, Some(root), &mut buf)?
                 .ok_or_else(|| cerr(format!("leader {rank}: phase-0 payload never arrived")))?;
-            if msg.data.len() as u64 != m {
+            if buf.len() as u64 != m {
                 return Err(cerr(format!(
                     "leader {rank}: phase-0 payload has {} bytes, expected {m}",
-                    msg.data.len()
+                    buf.len()
                 )));
             }
-            held = Some(msg.data);
+            held = Some(buf);
         } else {
             idle_round(t)?;
         }
@@ -487,8 +553,9 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
     // --- Phase 1: circulant broadcast across the node leaders ------------
     let leaders: Vec<u64> = (0..nodes).map(leader).collect();
     if rank == leader(my_node) {
+        let src = if rank == root { data } else { held.as_deref() };
         let mut g = GroupTransport::new(&mut *t, &leaders)?;
-        let buf = bcast_circulant(&mut g, root_node, n_inter, m, held.as_deref())?;
+        let buf = bcast_circulant(&mut g, root_node, n_inter, m, src)?;
         held = Some(buf);
     } else {
         for _ in 0..bcast_rounds(nodes, n_inter) {
@@ -498,9 +565,10 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
 
     // --- Phase 2: per-node circulant broadcast from each leader ----------
     // All groups have the same size, hence the same round count: lockstep.
+    let src = if rank == root { data } else { held.as_deref() };
     let members: Vec<u64> = (0..ranks_per_node).map(|i| leader(my_node) + i).collect();
     let mut g = GroupTransport::new(&mut *t, &members)?;
-    let out = bcast_circulant(&mut g, 0, n_intra, m, held.as_deref())?;
+    let out = bcast_circulant(&mut g, 0, n_intra, m, src)?;
     if let Some(d) = data {
         if out != d {
             return Err(cerr(format!(

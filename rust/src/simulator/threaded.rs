@@ -18,7 +18,7 @@
 
 use crate::collectives::generic;
 use crate::transport::thread::run_threads;
-use crate::transport::Transport;
+use crate::transport::{BufferPool, Transport};
 use std::time::Duration;
 
 /// Result of a threaded broadcast run.
@@ -44,7 +44,13 @@ pub fn threaded_bcast(
     let started = std::time::Instant::now();
     let results = run_threads(p, timeout, |mut t| {
         let data = if t.rank() == root { Some(payload) } else { None };
-        generic::bcast_circulant(&mut t, root, n, m, data)
+        // The borrowed-payload hot path: pooled block buffers, reused
+        // output storage (one bcast here, but the shape matches the
+        // steady-state loop of the transport bench).
+        let mut pool = BufferPool::default();
+        let mut out = Vec::new();
+        generic::bcast_circulant_into(&mut t, root, n, m, data, &mut pool, &mut out)?;
+        Ok(out)
     })
     .map_err(|e| e.to_string())?;
     for (r, buf) in results.iter().enumerate() {

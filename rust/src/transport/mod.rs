@@ -15,16 +15,27 @@
 //! * [`thread::ThreadTransport`] — one OS thread per rank exchanging
 //!   blocks over per-(sender, receiver) FIFO channels, real in-process
 //!   parallelism;
-//! * [`tcp::TcpTransport`] — one socket per directed pair over localhost
-//!   (or any reachable host set), each rank typically its own process,
-//!   with a small length-prefixed wire format.
+//! * [`tcp::TcpTransport`] — sockets over localhost (or any reachable
+//!   host set), each rank typically its own process, with a small
+//!   length-prefixed wire format and a lazy, schedule-aware mesh.
+//!
+//! ## The zero-copy hot path
+//!
+//! The primitive is [`Transport::sendrecv_into`]: the outgoing payload is
+//! *borrowed* (`SendSpec::data: &[u8]`, so a sender never clones a block
+//! just to hand it to the transport) and the incoming frame lands in a
+//! *caller-owned* `Vec<u8>` that is reused round after round. After
+//! warm-up a steady-state round performs zero payload heap allocations on
+//! the point-to-point backends; see DESIGN.md §"Transport hot path".
+//! [`Transport::sendrecv`] remains as a convenience shim that returns an
+//! owning [`WireMsg`] (allocating per call) for tests and cold paths.
 //!
 //! The SPMD contract: every rank runs the same program and makes the same
-//! sequence of [`Transport::sendrecv`] / [`Transport::barrier`] calls, one
-//! per communication round. Point-to-point backends (thread, tcp) only
-//! need per-pair FIFO ordering; the simulator backend additionally uses
-//! the global round structure to enforce one-portedness and to price each
-//! round at its maximum edge cost.
+//! sequence of [`Transport::sendrecv_into`] / [`Transport::barrier`]
+//! calls, one per communication round. Point-to-point backends (thread,
+//! tcp) only need per-pair FIFO ordering; the simulator backend
+//! additionally uses the global round structure to enforce one-portedness
+//! and to price each round at its maximum edge cost.
 
 pub mod sim;
 pub mod tcp;
@@ -32,23 +43,75 @@ pub mod thread;
 
 use std::fmt;
 
-/// One received block: the sender's tag (block index by convention of the
-/// collectives) plus the payload bytes.
+/// One received block in the owning (shim) API: the sender's tag (block
+/// index by convention of the collectives) plus the payload bytes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireMsg {
     pub tag: u64,
     pub data: Vec<u8>,
 }
 
-/// An outgoing block for one round.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct SendSpec {
+/// An outgoing block for one round. The payload is borrowed: transports
+/// write it to the wire (or copy it into a pooled buffer) without taking
+/// ownership, so callers keep their block storage across rounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SendSpec<'a> {
     /// Destination rank.
     pub to: u64,
     /// Collective-defined tag (block index); verified by receivers.
     pub tag: u64,
     /// Payload bytes (may be empty — zero-sized blocks must still flow).
-    pub data: Vec<u8>,
+    pub data: &'a [u8],
+}
+
+/// A free-list of `Vec<u8>` recycled across rounds: `get` pops a warm
+/// buffer (or allocates once, cold), `put` clears and shelves it. Both the
+/// transports (frame-assembly and channel buffers) and the generic
+/// collectives (block storage) use one per rank, which is what makes
+/// steady-state rounds allocation-free.
+#[derive(Debug)]
+pub struct BufferPool {
+    free: Vec<Vec<u8>>,
+    max: usize,
+}
+
+impl BufferPool {
+    /// A pool that shelves at most `max` free buffers (beyond that, `put`
+    /// drops them). Note the cap bounds the *count*, not bytes: shelved
+    /// buffers keep their capacity, so a pool that served huge blocks
+    /// retains up to `max` huge allocations until dropped — size `max` to
+    /// the working set (collectives need ~n + 1 buffers in flight).
+    pub fn with_capacity(max: usize) -> BufferPool {
+        BufferPool {
+            free: Vec::new(),
+            max,
+        }
+    }
+
+    /// A warm buffer if one is shelved, else a fresh empty one. Always
+    /// returned cleared.
+    pub fn get(&mut self) -> Vec<u8> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    /// Recycle a buffer (cleared, capacity kept) for a later `get`.
+    pub fn put(&mut self, mut buf: Vec<u8>) {
+        if self.free.len() < self.max {
+            buf.clear();
+            self.free.push(buf);
+        }
+    }
+
+    /// Number of buffers currently shelved.
+    pub fn shelved(&self) -> usize {
+        self.free.len()
+    }
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::with_capacity(256)
+    }
 }
 
 /// Failures raised by a transport backend or by the collective layer on
@@ -96,11 +159,11 @@ impl From<std::io::Error> for TransportError {
 
 /// The paper's one-ported, fully bidirectional round exchange.
 ///
-/// `sendrecv` is the single communication primitive: in one round a rank
-/// optionally sends one block and optionally receives one block, and the
-/// two directions overlap. `recv_from` names the expected source — the
-/// schedules are deterministic, so every rank knows its from-processor
-/// each round and no metadata is ever exchanged.
+/// [`Transport::sendrecv_into`] is the single communication primitive: in
+/// one round a rank optionally sends one block and optionally receives one
+/// block, and the two directions overlap. `recv_from` names the expected
+/// source — the schedules are deterministic, so every rank knows its
+/// from-processor each round and no metadata is ever exchanged.
 pub trait Transport {
     /// This endpoint's rank in `0..size()`.
     fn rank(&self) -> u64;
@@ -108,14 +171,44 @@ pub trait Transport {
     /// Number of ranks `p`.
     fn size(&self) -> u64;
 
-    /// Execute one communication round: send `send` (if any) while
-    /// receiving one block from `recv_from` (if any). Returns the received
-    /// block, or `None` when `recv_from` is `None`.
+    /// Execute one communication round: send `send` (if any, payload
+    /// borrowed) while receiving one block from `recv_from` (if any) into
+    /// `recv_buf`.
+    ///
+    /// When a block is received, `recv_buf` is cleared and filled with
+    /// exactly the payload (its capacity is reused across rounds — after
+    /// warm-up no reallocation happens) and the sender's tag is returned.
+    /// When `recv_from` is `None`, `recv_buf` is left untouched and the
+    /// result is `Ok(None)`.
+    fn sendrecv_into(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError>;
+
+    /// Owning convenience shim over [`Transport::sendrecv_into`]: the
+    /// received block comes back as a fresh [`WireMsg`] (one allocation
+    /// per received frame). Kept for tests, cold paths and callers that
+    /// genuinely want ownership.
     fn sendrecv(
         &mut self,
-        send: Option<SendSpec>,
+        send: Option<SendSpec<'_>>,
         recv_from: Option<u64>,
-    ) -> Result<Option<WireMsg>, TransportError>;
+    ) -> Result<Option<WireMsg>, TransportError> {
+        let mut data = Vec::new();
+        Ok(self
+            .sendrecv_into(send, recv_from, &mut data)?
+            .map(|tag| WireMsg { tag, data }))
+    }
+
+    /// Hint that the backend may pre-establish the resources (connections,
+    /// threads) the circulant schedules will use, so first rounds do not
+    /// pay setup latency. Default: no-op; the TCP backend pre-connects its
+    /// `2⌈log₂p⌉` circulant neighbors.
+    fn warm_up(&mut self) -> Result<(), TransportError> {
+        Ok(())
+    }
 
     /// Block until every rank has reached the barrier.
     fn barrier(&mut self) -> Result<(), TransportError>;
@@ -151,16 +244,58 @@ fn drain_results<R>(
     Ok(out)
 }
 
+/// Dissemination barrier over the reserved tag `u64::MAX`:
+/// `⌈log₂p⌉` token exchanges, each rank sending to `rank + 2ᵏ` while
+/// receiving from `rank - 2ᵏ`. Per-pair FIFO keeps tokens behind any
+/// in-flight data; all blocking is bounded by the backend's timeouts, so
+/// one failed rank reports instead of hanging the rest. Shared by the
+/// point-to-point backends' `barrier` impls (the lockstep simulator
+/// synchronizes with an empty global round instead).
+pub fn dissemination_barrier<T: Transport + ?Sized>(t: &mut T) -> Result<(), TransportError> {
+    const BARRIER_TAG: u64 = u64::MAX;
+    let p = t.size();
+    if p == 1 {
+        return Ok(());
+    }
+    let rank = t.rank();
+    let q = crate::sched::ceil_log2(p);
+    let mut token = Vec::new();
+    for k in 0..q {
+        let step = 1u64 << k;
+        let to = (rank + step) % p;
+        let from = (rank + p - step) % p;
+        let got = t.sendrecv_into(
+            Some(SendSpec {
+                to,
+                tag: BARRIER_TAG,
+                data: &[],
+            }),
+            Some(from),
+            &mut token,
+        )?;
+        match got {
+            Some(BARRIER_TAG) if token.is_empty() => {}
+            Some(tag) => {
+                return Err(TransportError::Protocol(format!(
+                    "rank {rank}: expected barrier token from {from}, got block {tag}"
+                )))
+            }
+            None => unreachable!("recv_from was Some"),
+        }
+    }
+    Ok(())
+}
+
 /// A round in which this rank neither sends nor receives. On the lockstep
 /// simulator backend the rank still participates in the global round; on
 /// point-to-point backends this is a no-op.
 pub fn idle_round<T: Transport + ?Sized>(t: &mut T) -> Result<(), TransportError> {
-    match t.sendrecv(None, None)? {
+    let mut scratch = Vec::new();
+    match t.sendrecv_into(None, None, &mut scratch)? {
         None => Ok(()),
-        Some(msg) => Err(TransportError::Protocol(format!(
-            "rank {}: received block {} in an idle round",
-            t.rank(),
-            msg.tag
+        Some(tag) => Err(TransportError::Protocol(format!(
+            "rank {}: received block {tag} in an idle round",
+            t.rank()
         ))),
     }
 }
@@ -225,11 +360,12 @@ impl<T: Transport + ?Sized> Transport for GroupTransport<'_, T> {
         self.members.len() as u64
     }
 
-    fn sendrecv(
+    fn sendrecv_into(
         &mut self,
-        send: Option<SendSpec>,
+        send: Option<SendSpec<'_>>,
         recv_from: Option<u64>,
-    ) -> Result<Option<WireMsg>, TransportError> {
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
         let send = match send {
             Some(s) => Some(SendSpec {
                 to: self.resolve(s.to)?,
@@ -242,7 +378,7 @@ impl<T: Transport + ?Sized> Transport for GroupTransport<'_, T> {
             Some(f) => Some(self.resolve(f)?),
             None => None,
         };
-        self.inner.sendrecv(send, recv_from)
+        self.inner.sendrecv_into(send, recv_from, recv_buf)
     }
 
     fn barrier(&mut self) -> Result<(), TransportError> {
@@ -273,11 +409,12 @@ mod tests {
         fn size(&self) -> u64 {
             self.p
         }
-        fn sendrecv(
+        fn sendrecv_into(
             &mut self,
-            send: Option<SendSpec>,
+            send: Option<SendSpec<'_>>,
             recv_from: Option<u64>,
-        ) -> Result<Option<WireMsg>, TransportError> {
+            _recv_buf: &mut Vec<u8>,
+        ) -> Result<Option<u64>, TransportError> {
             self.last = Some((send.map(|s| s.to), recv_from));
             Ok(None)
         }
@@ -301,7 +438,7 @@ mod tests {
             Some(SendSpec {
                 to: 0,
                 tag: 9,
-                data: vec![1],
+                data: &[1],
             }),
             Some(2),
         )
@@ -320,5 +457,25 @@ mod tests {
         let members = [5u64, 0];
         let mut g = GroupTransport::new(&mut base, &members).unwrap();
         assert!(g.sendrecv(None, Some(9)).is_err());
+    }
+
+    #[test]
+    fn buffer_pool_recycles_capacity() {
+        let mut pool = BufferPool::with_capacity(2);
+        let mut a = pool.get();
+        a.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = a.capacity();
+        let ptr = a.as_ptr();
+        pool.put(a);
+        assert_eq!(pool.shelved(), 1);
+        let b = pool.get();
+        assert!(b.is_empty());
+        assert_eq!(b.capacity(), cap);
+        assert_eq!(b.as_ptr(), ptr);
+        // The cap bounds retention.
+        pool.put(Vec::with_capacity(8));
+        pool.put(Vec::with_capacity(8));
+        pool.put(Vec::with_capacity(8));
+        assert_eq!(pool.shelved(), 2);
     }
 }

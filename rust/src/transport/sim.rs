@@ -15,7 +15,7 @@
 //! [`Stats`] so transport-generic runs still yield the simulated
 //! time/round/byte accounting of the paper's figures.
 
-use super::{SendSpec, Transport, TransportError, WireMsg};
+use super::{SendSpec, Transport, TransportError};
 use crate::simulator::{CostModel, Engine, Msg, SimError, Stats};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
@@ -62,11 +62,12 @@ impl Transport for SimTransport {
         self.shared.p
     }
 
-    fn sendrecv(
+    fn sendrecv_into(
         &mut self,
-        send: Option<SendSpec>,
+        send: Option<SendSpec<'_>>,
         recv_from: Option<u64>,
-    ) -> Result<Option<WireMsg>, TransportError> {
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
         let sh = &self.shared;
         let mut st = lock(&sh.round);
         if st.departed > 0 && st.error.is_none() {
@@ -81,12 +82,15 @@ impl Transport for SimTransport {
         }
         let gen = st.generation;
         if let Some(s) = send {
+            // The lockstep engine needs owned payloads (they cross the
+            // round boundary); the copy is part of the simulator's price,
+            // not of the machine model.
             st.msgs.push(Msg {
                 from: self.rank,
                 to: s.to,
                 bytes: s.data.len() as u64,
                 tag: s.tag,
-                data: Some(s.data),
+                data: Some(s.data.to_vec()),
             });
         }
         st.submitted += 1;
@@ -119,10 +123,11 @@ impl Transport for SimTransport {
                         self.rank, msg.from
                     )));
                 }
-                Ok(Some(WireMsg {
-                    tag: msg.tag,
-                    data: msg.data.unwrap_or_default(),
-                }))
+                recv_buf.clear();
+                if let Some(data) = &msg.data {
+                    recv_buf.extend_from_slice(data);
+                }
+                Ok(Some(msg.tag))
             }
             (Some(msg), None) => Err(TransportError::Protocol(format!(
                 "rank {}: unscheduled message from {} (block {})",
@@ -138,7 +143,8 @@ impl Transport for SimTransport {
     fn barrier(&mut self) -> Result<(), TransportError> {
         // An empty exchange synchronizes all ranks; the engine does not
         // account empty rounds, so a barrier is free in simulated time.
-        match self.sendrecv(None, None)? {
+        let mut scratch = Vec::new();
+        match self.sendrecv_into(None, None, &mut scratch)? {
             None => Ok(()),
             Some(_) => unreachable!("sendrecv(None, None) validated the empty inbox"),
         }
@@ -236,7 +242,7 @@ mod tests {
                     Some(SendSpec {
                         to: (r + 1) % p,
                         tag: round,
-                        data: vec![r as u8; 2],
+                        data: &[r as u8; 2],
                     }),
                     Some((r + p - 1) % p),
                 )?;
@@ -266,7 +272,7 @@ mod tests {
                 Some(SendSpec {
                     to: 2,
                     tag: 0,
-                    data: Vec::new(),
+                    data: &[],
                 })
             } else {
                 None

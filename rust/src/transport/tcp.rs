@@ -1,5 +1,5 @@
-//! TCP-backed transport: one socket per directed pair, each rank typically
-//! its own OS process, rendezvous via a listener map.
+//! TCP-backed transport: lazy schedule-aware socket mesh, each rank
+//! typically its own OS process, rendezvous via a listener map.
 //!
 //! ## Wire format
 //!
@@ -10,17 +10,54 @@
 //! frame  := [tag u64][len u64][len payload bytes]
 //! ```
 //!
-//! A connection carries frames in FIFO order; together with the schedule
-//! determinism of the paper that is all the collectives need — no block
-//! metadata beyond the asserted `tag` ever crosses the wire.
+//! On send-only rounds a frame goes out as *one* buffered write (small
+//! payloads, coalesced into a reused scratch buffer) or two (large
+//! payloads: header, then the caller's borrowed bytes — no copy),
+//! instead of the three-plus-flush of the original implementation.
+//! Full-duplex rounds assemble the frame into a pooled buffer (one
+//! memcpy) so the persistent writer thread can carry it — see below.
+//! A connection carries
+//! frames in FIFO order; together with the schedule determinism of the
+//! paper that is all the collectives need — no block metadata beyond the
+//! asserted `tag` ever crosses the wire.
+//!
+//! ## Lazy mesh
+//!
+//! Connections are dialed on *first use*. The circulant graph of the
+//! paper is `2⌈log₂p⌉`-regular, so a rank running a broadcast touches
+//! `O(log p)` peers — the old eager full mesh (`p - 1` sockets per rank,
+//! `O(p²)` fds in the in-process harness [`run_tcp`]) paid for `p - 1`.
+//! The dial direction is deterministic — **the higher rank dials the
+//! lower rank's listener** — so two ranks that first talk in the same
+//! round can never attempt crossed simultaneous connects. Acceptors park
+//! early arrivals from other peers in their slots while waiting. Because
+//! every link is used by both of its ends in matching rounds (sendrecv
+//! pairs, barrier tokens), the dialer always shows up; and because a dial
+//! lands in the listener's backlog without the acceptor calling `accept`,
+//! the dial-all-then-accept-all order in [`TcpTransport::warm_circulant`]
+//! and the per-round link setup cannot deadlock.
+//!
+//! [`TcpTransport::warm_circulant`] optionally pre-connects exactly the
+//! circulant neighbors (`{rank ± skipₖ}`, the same absolute edge set for
+//! every broadcast root) so first rounds pay no setup latency.
+//!
+//! ## Persistent writers
+//!
+//! A full-duplex round needs send ∥ recv so that cyclic exchanges larger
+//! than the socket buffers cannot deadlock. Instead of spawning a scoped
+//! thread per round (~tens of µs each), every endpoint lazily gets one
+//! *persistent* writer thread fed by a bounded channel: the caller
+//! assembles `[tag][len][payload]` into a pooled buffer (one memcpy),
+//! hands it over, reads its own inbound frame, then reaps the write ack
+//! and recycles the buffer. The ack-before-return invariant means the
+//! writer is idle outside `sendrecv_into`, so send-only rounds may write
+//! directly from the calling thread without interleaving. Writers join on
+//! drop.
 //!
 //! ## Rendezvous
 //!
 //! Every rank owns a listener; the *listener map* (rank → socket address)
-//! is the only shared configuration. Rank `r` dials every rank below it
-//! (retrying until the peer's listener is up) and accepts connections from
-//! every rank above it, identified by the hello frame. Two entry points
-//! build the map:
+//! is the only shared configuration. Two entry points build the map:
 //!
 //! * [`run_tcp`] — in-process harness: binds `p` ephemeral-port listeners
 //!   up front (collision-free), then runs one rank per thread. Used by the
@@ -29,9 +66,11 @@
 //!   binds `base_port + r`, so `p` processes need only agree on
 //!   `(host, base_port, p)`. Used by `examples/bcast_tcp.rs`.
 
-use super::{SendSpec, Transport, TransportError, WireMsg};
+use super::{BufferPool, SendSpec, Transport, TransportError};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Connection hello marker: "nblkTcp1" as little-endian bytes.
@@ -39,6 +78,11 @@ pub const MAGIC: u64 = u64::from_le_bytes(*b"nblkTcp1");
 
 /// Upper bound on a frame payload (fail fast on desynchronized streams).
 pub const MAX_FRAME: u64 = 1 << 32;
+
+/// Payloads up to this size are coalesced with their header into one
+/// buffered write (one syscall); larger ones go as header + borrowed
+/// payload (two syscalls, zero copies).
+const COALESCE_MAX: usize = 64 * 1024;
 
 fn write_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -50,16 +94,33 @@ fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
     Ok(u64::from_le_bytes(buf))
 }
 
-/// Write one `[tag][len][payload]` frame.
+/// The 16-byte `[tag][len]` frame header.
+fn frame_header(tag: u64, len: usize) -> [u8; 16] {
+    let mut hdr = [0u8; 16];
+    hdr[..8].copy_from_slice(&tag.to_le_bytes());
+    hdr[8..16].copy_from_slice(&(len as u64).to_le_bytes());
+    hdr
+}
+
+/// Assemble one `[tag][len][payload]` frame into `buf` (cleared first).
+fn encode_frame(buf: &mut Vec<u8>, tag: u64, data: &[u8]) {
+    buf.clear();
+    buf.reserve(16 + data.len());
+    buf.extend_from_slice(&frame_header(tag, data.len()));
+    buf.extend_from_slice(data);
+}
+
+/// Write one `[tag][len][payload]` frame (simple form for tests and
+/// in-memory writers; the transport hot path uses coalesced frames).
 pub fn write_frame(w: &mut impl Write, tag: u64, data: &[u8]) -> std::io::Result<()> {
-    write_u64(w, tag)?;
-    write_u64(w, data.len() as u64)?;
+    w.write_all(&frame_header(tag, data.len()))?;
     w.write_all(data)?;
     w.flush()
 }
 
-/// Read one `[tag][len][payload]` frame.
-pub fn read_frame(r: &mut impl Read) -> std::io::Result<(u64, Vec<u8>)> {
+/// Read one `[tag][len][payload]` frame into a caller-owned buffer,
+/// reusing its capacity. Returns the tag.
+pub fn read_frame_into(r: &mut impl Read, buf: &mut Vec<u8>) -> std::io::Result<u64> {
     let tag = read_u64(r)?;
     let len = read_u64(r)?;
     if len > MAX_FRAME {
@@ -68,32 +129,73 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<(u64, Vec<u8>)> {
             format!("frame length {len} exceeds the {MAX_FRAME}-byte cap"),
         ));
     }
-    let mut data = vec![0u8; len as usize];
-    r.read_exact(&mut data)?;
+    // `take + read_to_end` reuses the buffer's capacity without the
+    // full-payload memset that `resize + read_exact` would pay (the
+    // receive path is the hot path; zeroing 64 KiB just to overwrite it
+    // roughly doubles the landing cost of a block).
+    buf.clear();
+    let n = r.by_ref().take(len).read_to_end(buf)? as u64;
+    if n != len {
+        return Err(std::io::Error::new(
+            ErrorKind::UnexpectedEof,
+            format!("frame truncated: {n} of {len} payload bytes"),
+        ));
+    }
+    Ok(tag)
+}
+
+/// Read one `[tag][len][payload]` frame (owning form).
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<(u64, Vec<u8>)> {
+    let mut data = Vec::new();
+    let tag = read_frame_into(r, &mut data)?;
     Ok((tag, data))
 }
 
-/// One rank's endpoint of the socket mesh.
-///
-/// The mesh is eager and fully connected: `p - 1` sockets per rank. That
-/// is the simplest correct rendezvous, but it makes the *in-process*
-/// harness [`run_tcp`] hold `O(p²)` file descriptors — fine at test/bench
-/// scale (`p ≤ 16`), but watch `ulimit -n` beyond that. The circulant
-/// schedules only ever touch `2⌈log₂p⌉` neighbors per rank, so a lazy
-/// variant is a known follow-up (see ROADMAP).
+/// The persistent writer thread of one endpoint: receives assembled
+/// frames over a bounded channel, writes each as a single `write_all`,
+/// and acks with the buffer so the caller can recycle it.
+struct Writer {
+    /// `None` after shutdown begins (dropping it is what stops the thread).
+    job_tx: Option<SyncSender<Vec<u8>>>,
+    ack_rx: Receiver<(std::io::Result<()>, Vec<u8>)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// One established connection to a peer.
+struct Endpoint {
+    stream: TcpStream,
+    writer: Option<Writer>,
+}
+
+/// One rank's endpoint of the lazy socket mesh: at most `2⌈log₂p⌉ + O(1)`
+/// connections for the circulant collectives, established on first use
+/// (or ahead of time via [`TcpTransport::warm_circulant`]).
 pub struct TcpTransport {
     rank: u64,
     p: u64,
-    /// `streams[peer]`: the connection to `peer` (`None` only at `rank`).
-    streams: Vec<Option<TcpStream>>,
+    /// Own listener, kept in non-blocking mode for lazy accepts.
+    listener: TcpListener,
+    /// The listener map (rank → address); own entry unused.
+    addrs: Vec<SocketAddr>,
+    /// `endpoints[peer]`: the connection to `peer`, once established.
+    endpoints: Vec<Option<Endpoint>>,
     timeout: Duration,
+    /// Recycled frame buffers for the writer-thread path.
+    pool: BufferPool,
+    /// Reused coalescing buffer for direct (send-only) writes.
+    scratch: Vec<u8>,
 }
 
 impl TcpTransport {
-    /// Establish the full mesh for `rank` out of `p`: dial every lower
-    /// rank through `addrs` (the listener map; own entry is ignored),
-    /// accept every higher rank on `listener`. Returns once all `p - 1`
-    /// connections are up, or errors at `timeout`.
+    /// Create rank `rank`'s endpoint of a `p`-rank mesh over `addrs` (the
+    /// listener map; own entry is ignored), owning `listener`.
+    ///
+    /// No connection is established here: links are dialed/accepted on
+    /// first use (higher rank dials lower), so a rank only ever holds the
+    /// sockets its schedule touches — `O(log p)` for the circulant
+    /// collectives instead of the old eager `p - 1`. Call
+    /// [`TcpTransport::warm_circulant`] to pre-connect the circulant
+    /// neighborhood eagerly.
     pub fn connect(
         rank: u64,
         p: u64,
@@ -108,91 +210,16 @@ impl TcpTransport {
                 addrs.len()
             )));
         }
-        let deadline = Instant::now() + timeout;
-        let pu = p as usize;
-        let mut streams: Vec<Option<TcpStream>> = (0..pu).map(|_| None).collect();
-        // Dial phase: lower ranks. Their listeners may not be up yet —
-        // retry until the deadline (connections land in the peer's backlog
-        // even before it calls accept).
-        for peer in 0..rank {
-            let stream = loop {
-                match TcpStream::connect_timeout(
-                    &addrs[peer as usize],
-                    Duration::from_millis(250),
-                ) {
-                    Ok(s) => break s,
-                    Err(e) => {
-                        if Instant::now() >= deadline {
-                            return Err(TransportError::Timeout(format!(
-                                "rank {rank}: dialing rank {peer} at {}: {e}",
-                                addrs[peer as usize]
-                            )));
-                        }
-                        std::thread::sleep(Duration::from_millis(10));
-                    }
-                }
-            };
-            stream.set_nodelay(true)?;
-            let mut s = stream;
-            write_u64(&mut s, MAGIC)?;
-            write_u64(&mut s, rank)?;
-            s.flush()?;
-            streams[peer as usize] = Some(s);
-        }
-        // Accept phase: higher ranks, identified by their hello.
         listener.set_nonblocking(true)?;
-        let mut accepted = 0u64;
-        while accepted < p - 1 - rank {
-            match listener.accept() {
-                Ok((stream, _)) => {
-                    stream.set_nonblocking(false)?;
-                    stream.set_nodelay(true)?;
-                    stream.set_read_timeout(Some(timeout))?;
-                    stream.set_write_timeout(Some(timeout))?;
-                    let mut s = stream;
-                    let magic = read_u64(&mut s)?;
-                    if magic != MAGIC {
-                        return Err(TransportError::Protocol(format!(
-                            "rank {rank}: bad hello magic {magic:#018x}"
-                        )));
-                    }
-                    let peer = read_u64(&mut s)?;
-                    if peer <= rank || peer >= p {
-                        return Err(TransportError::Protocol(format!(
-                            "rank {rank}: hello from unexpected rank {peer}"
-                        )));
-                    }
-                    if streams[peer as usize].is_some() {
-                        return Err(TransportError::Protocol(format!(
-                            "rank {rank}: duplicate connection from rank {peer}"
-                        )));
-                    }
-                    streams[peer as usize] = Some(s);
-                    accepted += 1;
-                }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                    if Instant::now() >= deadline {
-                        return Err(TransportError::Timeout(format!(
-                            "rank {rank}: only {accepted} of {} higher ranks connected",
-                            p - 1 - rank
-                        )));
-                    }
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(e) => return Err(e.into()),
-            }
-        }
-        // Bound both directions: a blocked write (peer not draining) must
-        // surface as a timeout, not hang forever.
-        for s in streams.iter().flatten() {
-            s.set_read_timeout(Some(timeout))?;
-            s.set_write_timeout(Some(timeout))?;
-        }
         Ok(TcpTransport {
             rank,
             p,
-            streams,
+            listener,
+            addrs: addrs.to_vec(),
+            endpoints: (0..p).map(|_| None).collect(),
             timeout,
+            pool: BufferPool::default(),
+            scratch: Vec::new(),
         })
     }
 
@@ -223,32 +250,249 @@ impl TcpTransport {
         TcpTransport::connect(rank, p, listener, &addrs, timeout)
     }
 
-    fn stream(&mut self, peer: u64) -> Result<&mut TcpStream, TransportError> {
+    /// Number of peer connections currently established (the lazy-mesh
+    /// tests assert this stays `O(log p)` through a broadcast).
+    pub fn established_connections(&self) -> usize {
+        self.endpoints.iter().filter(|e| e.is_some()).count()
+    }
+
+    /// Eagerly connect exactly the circulant neighborhood `{rank ± skipₖ}`
+    /// (at most `2⌈log₂p⌉` peers — independent of the broadcast root,
+    /// since relative-rank arithmetic cancels the root shift). Returns the
+    /// neighbor count. Dials first, accepts second: dials never block on
+    /// the acceptor (listener backlog), so all ranks can warm concurrently.
+    pub fn warm_circulant(&mut self) -> Result<usize, TransportError> {
+        if self.p == 1 {
+            return Ok(0);
+        }
+        let skips = crate::sched::Skips::new(self.p);
+        let mut peers: Vec<u64> = Vec::new();
+        for k in 0..skips.q() {
+            for peer in [skips.to_proc(self.rank, k), skips.from_proc(self.rank, k)] {
+                if peer != self.rank && !peers.contains(&peer) {
+                    peers.push(peer);
+                }
+            }
+        }
+        let deadline = Instant::now() + self.timeout;
+        for &peer in &peers {
+            if peer < self.rank {
+                self.dial(peer, deadline)?;
+            }
+        }
+        for &peer in &peers {
+            if peer > self.rank {
+                self.accept_until(peer, deadline)?;
+            }
+        }
+        Ok(peers.len())
+    }
+
+    fn check_peer(&self, peer: u64) -> Result<(), TransportError> {
         if peer >= self.p || peer == self.rank {
             return Err(TransportError::Collective(format!(
                 "rank {}: invalid peer {peer} (p = {})",
                 self.rank, self.p
             )));
         }
-        self.streams[peer as usize]
-            .as_mut()
-            .ok_or_else(|| TransportError::Protocol(format!("no link to peer {peer}")))
+        Ok(())
     }
 
-    fn read_from(&mut self, from: u64) -> Result<WireMsg, TransportError> {
-        let rank = self.rank;
-        let timeout = self.timeout;
-        let stream = self.stream(from)?;
-        match read_frame(stream) {
-            Ok((tag, data)) => Ok(WireMsg { tag, data }),
-            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
-                Err(TransportError::Timeout(format!(
-                    "rank {rank}: waited {timeout:?} for a block from {from}"
-                )))
+    /// Establish the (up to two) links this round needs. Dial phase first,
+    /// accept phase second — see the module docs for why this ordering is
+    /// deadlock-free.
+    fn ensure_links(
+        &mut self,
+        a: Option<u64>,
+        b: Option<u64>,
+    ) -> Result<(), TransportError> {
+        if [a, b]
+            .into_iter()
+            .flatten()
+            .all(|peer| self.endpoints[peer as usize].is_some())
+        {
+            return Ok(());
+        }
+        let deadline = Instant::now() + self.timeout;
+        for peer in [a, b].into_iter().flatten() {
+            if peer < self.rank && self.endpoints[peer as usize].is_none() {
+                self.dial(peer, deadline)?;
             }
-            Err(e) => Err(TransportError::Io(format!(
-                "rank {rank}: reading from {from}: {e}"
-            ))),
+        }
+        for peer in [a, b].into_iter().flatten() {
+            if peer > self.rank && self.endpoints[peer as usize].is_none() {
+                self.accept_until(peer, deadline)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Dial `peer` (a lower rank), retrying until the deadline — its
+    /// listener may not be bound yet in separate-process mode.
+    fn dial(&mut self, peer: u64, deadline: Instant) -> Result<(), TransportError> {
+        debug_assert!(peer < self.rank, "dial direction: higher dials lower");
+        if self.endpoints[peer as usize].is_some() {
+            return Ok(());
+        }
+        let addr = self.addrs[peer as usize];
+        let stream = loop {
+            match TcpStream::connect_timeout(&addr, Duration::from_millis(250)) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::Timeout(format!(
+                            "rank {}: dialing rank {peer} at {addr}: {e}",
+                            self.rank
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        let mut s = stream;
+        write_u64(&mut s, MAGIC)?;
+        write_u64(&mut s, self.rank)?;
+        self.endpoints[peer as usize] = Some(Endpoint {
+            stream: s,
+            writer: None,
+        });
+        Ok(())
+    }
+
+    /// Accept connections (parking early arrivals from other peers in
+    /// their slots) until the one from `peer` — a higher rank, by the dial
+    /// rule — is established.
+    fn accept_until(&mut self, peer: u64, deadline: Instant) -> Result<(), TransportError> {
+        debug_assert!(peer > self.rank, "dial direction: higher dials lower");
+        while self.endpoints[peer as usize].is_none() {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_nodelay(true)?;
+                    stream.set_read_timeout(Some(self.timeout))?;
+                    stream.set_write_timeout(Some(self.timeout))?;
+                    let mut s = stream;
+                    let magic = read_u64(&mut s)?;
+                    if magic != MAGIC {
+                        return Err(TransportError::Protocol(format!(
+                            "rank {}: bad hello magic {magic:#018x}",
+                            self.rank
+                        )));
+                    }
+                    let from = read_u64(&mut s)?;
+                    if from <= self.rank || from >= self.p {
+                        return Err(TransportError::Protocol(format!(
+                            "rank {}: hello from unexpected rank {from}",
+                            self.rank
+                        )));
+                    }
+                    if self.endpoints[from as usize].is_some() {
+                        return Err(TransportError::Protocol(format!(
+                            "rank {}: duplicate connection from rank {from}",
+                            self.rank
+                        )));
+                    }
+                    self.endpoints[from as usize] = Some(Endpoint {
+                        stream: s,
+                        writer: None,
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(TransportError::Timeout(format!(
+                            "rank {}: waited {:?} for rank {peer} to dial",
+                            self.rank, self.timeout
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    /// Spawn the persistent writer thread for `peer`'s endpoint if it does
+    /// not exist yet. The endpoint must be established.
+    fn ensure_writer(&mut self, peer: u64) -> Result<(), TransportError> {
+        let rank = self.rank;
+        let ep = self.endpoints[peer as usize]
+            .as_mut()
+            .expect("endpoint established before ensure_writer");
+        if ep.writer.is_some() {
+            return Ok(());
+        }
+        let stream = ep.stream.try_clone().map_err(|e| {
+            TransportError::Io(format!("rank {rank}: cloning stream to {peer}: {e}"))
+        })?;
+        let (job_tx, job_rx) = sync_channel::<Vec<u8>>(1);
+        let (ack_tx, ack_rx) = sync_channel::<(std::io::Result<()>, Vec<u8>)>(1);
+        let handle = std::thread::Builder::new()
+            .name(format!("nblk-writer-{rank}-{peer}"))
+            .spawn(move || {
+                let mut stream = stream;
+                while let Ok(frame) = job_rx.recv() {
+                    let res = stream.write_all(&frame);
+                    if ack_tx.send((res, frame)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .map_err(|e| {
+                TransportError::Io(format!("rank {rank}: spawning writer for {peer}: {e}"))
+            })?;
+        ep.writer = Some(Writer {
+            job_tx: Some(job_tx),
+            ack_rx,
+            handle: Some(handle),
+        });
+        Ok(())
+    }
+
+    /// Write one frame to `to` from the calling thread: coalesced into the
+    /// reused scratch buffer (one syscall) for small payloads, header +
+    /// borrowed payload (two syscalls, zero copies) for large ones.
+    ///
+    /// Safe next to a persistent writer because of the ack-before-return
+    /// invariant: outside `sendrecv_into` the writer holds no frame.
+    fn write_direct(&mut self, to: u64, tag: u64, data: &[u8]) -> Result<(), TransportError> {
+        let rank = self.rank;
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let ep = self.endpoints[to as usize]
+            .as_mut()
+            .expect("endpoint established before write_direct");
+        let res = if data.len() <= COALESCE_MAX {
+            encode_frame(&mut scratch, tag, data);
+            ep.stream.write_all(&scratch)
+        } else {
+            ep.stream
+                .write_all(&frame_header(tag, data.len()))
+                .and_then(|()| ep.stream.write_all(data))
+        };
+        self.scratch = scratch;
+        res.map_err(|e| {
+            // A failed write may have emitted part of the frame: the
+            // stream is desynchronized, never reuse it.
+            self.endpoints[to as usize] = None;
+            TransportError::Io(format!("rank {rank}: writing to {to}: {e}"))
+        })
+    }
+
+    /// Record a failed read and map its error: a frame may have been
+    /// half-consumed, so the inbound stream is desynchronized — drop the
+    /// endpoint so it can never be reused.
+    fn poison_read(&mut self, from: u64, e: std::io::Error) -> TransportError {
+        self.endpoints[from as usize] = None;
+        if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut {
+            TransportError::Timeout(format!(
+                "rank {}: waited {:?} for a block from {from}",
+                self.rank, self.timeout
+            ))
+        } else {
+            TransportError::Io(format!("rank {}: reading from {from}: {e}", self.rank))
         }
     }
 }
@@ -262,83 +506,132 @@ impl Transport for TcpTransport {
         self.p
     }
 
-    fn sendrecv(
+    fn warm_up(&mut self) -> Result<(), TransportError> {
+        self.warm_circulant().map(|_| ())
+    }
+
+    fn sendrecv_into(
         &mut self,
-        send: Option<SendSpec>,
+        send: Option<SendSpec<'_>>,
         recv_from: Option<u64>,
-    ) -> Result<Option<WireMsg>, TransportError> {
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
         match (send, recv_from) {
             (None, None) => Ok(None),
             (Some(s), None) => {
-                let stream = self.stream(s.to)?;
-                write_frame(stream, s.tag, &s.data)?;
+                self.check_peer(s.to)?;
+                self.ensure_links(Some(s.to), None)?;
+                self.write_direct(s.to, s.tag, s.data)?;
                 Ok(None)
             }
-            (None, Some(from)) => self.read_from(from).map(Some),
+            (None, Some(from)) => {
+                self.check_peer(from)?;
+                self.ensure_links(Some(from), None)?;
+                let got = {
+                    let ep = self.endpoints[from as usize]
+                        .as_mut()
+                        .expect("link established above");
+                    read_frame_into(&mut ep.stream, recv_buf)
+                };
+                got.map(Some).map_err(|e| self.poison_read(from, e))
+            }
             (Some(s), Some(from)) => {
-                // Send ∥ recv, possibly with the same peer: write on a
-                // scoped thread (on a cloned handle) while this thread
-                // reads, so cyclic rounds with payloads larger than the
-                // socket buffers cannot deadlock.
-                let writer = self
-                    .stream(s.to)?
-                    .try_clone()
-                    .map_err(|e| TransportError::Io(format!("clone to {}: {e}", s.to)))?;
-                let tag = s.tag;
-                let data = s.data;
-                std::thread::scope(|scope| {
-                    let handle = scope.spawn(move || -> std::io::Result<()> {
-                        let mut w = writer;
-                        write_frame(&mut w, tag, &data)
-                    });
-                    let got = self.read_from(from);
-                    let wrote = handle
-                        .join()
-                        .unwrap_or_else(|_| {
-                            Err(std::io::Error::new(ErrorKind::Other, "writer panicked"))
-                        });
-                    wrote.map_err(|e| {
-                        TransportError::Io(format!("rank {}: writing: {e}", self.rank))
-                    })?;
-                    got.map(Some)
-                })
+                // Send ∥ recv, possibly with the same peer: the persistent
+                // writer thread carries the outgoing frame while this
+                // thread reads, so cyclic rounds with payloads larger than
+                // the socket buffers cannot deadlock.
+                self.check_peer(s.to)?;
+                self.check_peer(from)?;
+                self.ensure_links(Some(s.to), Some(from))?;
+                self.ensure_writer(s.to)?;
+                let mut frame = self.pool.get();
+                encode_frame(&mut frame, s.tag, s.data);
+                let rank = self.rank;
+                let (got, ack) = {
+                    let writer = self.endpoints[s.to as usize]
+                        .as_ref()
+                        .expect("link established above")
+                        .writer
+                        .as_ref()
+                        .expect("writer spawned above");
+                    writer
+                        .job_tx
+                        .as_ref()
+                        .expect("writer alive")
+                        .send(frame)
+                        .map_err(|_| {
+                            TransportError::Io(format!(
+                                "rank {rank}: writer thread for {} is gone",
+                                s.to
+                            ))
+                        })?;
+                    let mut reader: &TcpStream = &self.endpoints[from as usize]
+                        .as_ref()
+                        .expect("link established above")
+                        .stream;
+                    let got = read_frame_into(&mut reader, recv_buf);
+                    // Always reap the ack, even when the read failed: the
+                    // ack-before-return invariant is what keeps direct
+                    // writes from interleaving with the writer thread.
+                    // Block without a cap, exactly like the old scoped-
+                    // thread join did: a *stalled* write fails on its own
+                    // via the stream's write timeout, so the ack always
+                    // arrives, while a slow-but-progressing large write is
+                    // allowed to finish instead of poisoning the link.
+                    let ack = writer.ack_rx.recv();
+                    (got, ack)
+                };
+                match ack {
+                    Ok((wres, buf)) => {
+                        self.pool.put(buf);
+                        wres.map_err(|e| {
+                            // Possibly-partial write: the outbound stream
+                            // is desynchronized, never reuse it.
+                            self.endpoints[s.to as usize] = None;
+                            TransportError::Io(format!("rank {rank}: writing to {}: {e}", s.to))
+                        })?;
+                    }
+                    Err(_) => {
+                        // The writer died without acking; whether the frame
+                        // made it out (fully or partially) is unknowable, so
+                        // the stream is desynchronized: poison the endpoint.
+                        // Dropping it detaches the writer machinery and
+                        // closes our side; the link is NOT recoverable —
+                        // the round has already failed for both sides, and
+                        // any further use of this peer errors instead of
+                        // corrupting the stream.
+                        self.endpoints[s.to as usize] = None;
+                        return Err(TransportError::Io(format!(
+                            "rank {rank}: writer thread for {} died",
+                            s.to
+                        )));
+                    }
+                }
+                got.map(Some).map_err(|e| self.poison_read(from, e))
             }
         }
     }
 
     fn barrier(&mut self) -> Result<(), TransportError> {
-        // Dissemination barrier over the reserved tag: q = ⌈log₂p⌉ token
-        // exchanges; FIFO per pair keeps tokens behind any in-flight data.
-        const BARRIER_TAG: u64 = u64::MAX;
-        let p = self.p;
-        if p == 1 {
-            return Ok(());
-        }
-        let q = crate::sched::ceil_log2(p);
-        for k in 0..q {
-            let step = 1u64 << k;
-            let to = (self.rank + step) % p;
-            let from = (self.rank + p - step) % p;
-            let got = self.sendrecv(
-                Some(SendSpec {
-                    to,
-                    tag: BARRIER_TAG,
-                    data: Vec::new(),
-                }),
-                Some(from),
-            )?;
-            match got {
-                Some(msg) if msg.tag == BARRIER_TAG && msg.data.is_empty() => {}
-                Some(msg) => {
-                    return Err(TransportError::Protocol(format!(
-                        "rank {}: expected barrier token from {from}, got block {}",
-                        self.rank, msg.tag
-                    )))
+        // FIFO per pair keeps barrier tokens behind any in-flight data;
+        // the token links are established lazily like any other link.
+        super::dissemination_barrier(self)
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // Stop and join every persistent writer: dropping the job channel
+        // ends its loop; a writer stuck in a write is bounded by the
+        // stream's write timeout.
+        for ep in self.endpoints.iter_mut().flatten() {
+            if let Some(w) = ep.writer.as_mut() {
+                drop(w.job_tx.take());
+                if let Some(h) = w.handle.take() {
+                    let _ = h.join();
                 }
-                None => unreachable!("recv_from was Some"),
             }
         }
-        Ok(())
     }
 }
 
@@ -357,7 +650,13 @@ pub fn bind_mesh(p: u64) -> Result<(Vec<TcpListener>, Vec<SocketAddr>), Transpor
 
 /// Run `f` as an SPMD program over real localhost sockets, one rank per
 /// thread (the wire path is identical to the separate-process mode; only
-/// the rendezvous differs). Returns the per-rank results (index = rank).
+/// the rendezvous differs). Connections are lazy, so the in-process fd
+/// footprint is `O(p log p)` for the circulant collectives (~3k fds at
+/// `p = 128`, vs ~16k stream ends for the old eager `O(p²)` mesh) —
+/// which is what lets `run_tcp` handle `p` in the hundreds within
+/// ordinary fd limits (the classic 1024 soft default still needs
+/// raising past p ≈ 48; eager meshing broke there already at p ≈ 23).
+/// Returns the per-rank results (index = rank).
 pub fn run_tcp<R, F>(p: u64, timeout: Duration, f: F) -> Result<Vec<R>, TransportError>
 where
     R: Send,
@@ -403,6 +702,24 @@ mod tests {
     }
 
     #[test]
+    fn frame_into_reuses_capacity() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, 1, &[9u8; 300]).unwrap();
+        write_frame(&mut wire, 2, &[8u8; 100]).unwrap();
+        let mut r = &wire[..];
+        let mut buf = Vec::new();
+        assert_eq!(read_frame_into(&mut r, &mut buf).unwrap(), 1);
+        assert_eq!(buf.len(), 300);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        assert_eq!(read_frame_into(&mut r, &mut buf).unwrap(), 2);
+        assert_eq!(buf.len(), 100);
+        assert!(buf.iter().all(|&b| b == 8));
+        assert_eq!(buf.capacity(), cap, "no reallocation on a smaller frame");
+        assert_eq!(buf.as_ptr(), ptr, "buffer storage is stable");
+    }
+
+    #[test]
     fn frame_cap_rejected() {
         let mut buf = Vec::new();
         write_u64(&mut buf, 1).unwrap();
@@ -415,6 +732,15 @@ mod tests {
     }
 
     #[test]
+    fn encode_frame_matches_write_frame() {
+        let mut a = Vec::new();
+        write_frame(&mut a, 5, b"payload").unwrap();
+        let mut b = Vec::new();
+        encode_frame(&mut b, 5, b"payload");
+        assert_eq!(a, b);
+    }
+
+    #[test]
     fn mesh_pairwise_exchange() {
         let results = run_tcp(4, Duration::from_secs(20), |mut t| {
             let partner = t.rank() ^ 1;
@@ -423,7 +749,7 @@ mod tests {
                 Some(SendSpec {
                     to: partner,
                     tag: t.rank(),
-                    data: payload,
+                    data: &payload,
                 }),
                 Some(partner),
             )?;
@@ -448,11 +774,12 @@ mod tests {
         let m = 1 << 20;
         let results = run_tcp(p, Duration::from_secs(30), |mut t| {
             let r = t.rank();
+            let payload = vec![r as u8; m];
             let got = t.sendrecv(
                 Some(SendSpec {
                     to: (r + 1) % p,
                     tag: r,
-                    data: vec![r as u8; m],
+                    data: &payload,
                 }),
                 Some((r + p - 1) % p),
             )?;
@@ -464,6 +791,46 @@ mod tests {
             assert_eq!(msg.tag, prev as u64);
             assert_eq!(msg.data.len(), m);
             assert!(msg.data.iter().all(|&b| b == prev));
+        }
+    }
+
+    #[test]
+    fn lazy_mesh_connects_only_used_links() {
+        // A 2-exchange among ranks {0,1} of a 6-rank mesh: the other four
+        // ranks never open a socket, the active pair opens exactly one.
+        let counts = run_tcp(6, Duration::from_secs(20), |mut t| {
+            if t.rank() < 2 {
+                let partner = t.rank() ^ 1;
+                let payload = [t.rank() as u8; 4];
+                let got = t.sendrecv(
+                    Some(SendSpec {
+                        to: partner,
+                        tag: t.rank(),
+                        data: &payload,
+                    }),
+                    Some(partner),
+                )?;
+                assert_eq!(got.expect("scheduled receive").tag, partner);
+            }
+            Ok(t.established_connections())
+        })
+        .unwrap();
+        assert_eq!(counts, vec![1, 1, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn warm_circulant_connects_neighbors_symmetrically() {
+        let counts = run_tcp(9, Duration::from_secs(20), |mut t| {
+            let n = t.warm_circulant()?;
+            assert_eq!(t.established_connections(), n);
+            t.barrier()?;
+            Ok(n)
+        })
+        .unwrap();
+        let q = crate::sched::ceil_log2(9);
+        for (r, &n) in counts.iter().enumerate() {
+            assert!(n <= 2 * q, "rank {r}: {n} neighbors > 2q = {}", 2 * q);
+            assert!(n >= 2, "rank {r}: suspiciously few neighbors ({n})");
         }
     }
 }
