@@ -85,7 +85,11 @@ Tools:
                                                  (T: regular|irregular|degenerate)
     both accept --transport {sim,thread,tcp}: run the generic SPMD
     collective (real payload, verified) over that backend instead of the
-    cost-model comparison
+    cost-model comparison; with --transport they also accept --algo
+    {auto,circulant,binomial,scatter-allgather,ring,bruck} to pick the
+    algorithm (default circulant; auto resolves from p, n and size —
+    bcast supports circulant/binomial/scatter-allgather, allgatherv
+    supports circulant/ring/bruck)
   allreduce --p P --elems E  compare allreduce algorithms (circulant dual,
                              binomial, ring reduce-scatter+allgather)
   threaded --p P --n N --m BYTES   one-OS-thread-per-rank broadcast
@@ -134,6 +138,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 args.get("n", 0),
                 args.get("root", 0),
                 backend.as_str(),
+                &args.get("algo", "circulant".to_string()),
             ),
             None => tools::bcast(
                 args.get("p", 64),
@@ -149,6 +154,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 args.get("n", 0),
                 &args.get("type", "regular".to_string()),
                 backend.as_str(),
+                &args.get("algo", "circulant".to_string()),
             ),
             None => tools::allgatherv(
                 args.get("p", 64),

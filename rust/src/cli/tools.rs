@@ -293,9 +293,18 @@ where
 }
 
 /// Run one data-mode collective over a chosen transport backend
-/// (`--transport {sim,thread,tcp}`): the *same* generic SPMD code on the
-/// lockstep simulator, per-rank OS threads, or localhost TCP sockets.
-pub fn bcast_transport(p: u64, m: u64, n: usize, root: u64, backend: &str) -> Result<()> {
+/// (`--transport {sim,thread,tcp}`) and algorithm (`--algo`): the *same*
+/// generic SPMD code on the lockstep simulator, per-rank OS threads, or
+/// localhost TCP sockets.
+pub fn bcast_transport(
+    p: u64,
+    m: u64,
+    n: usize,
+    root: u64,
+    backend: &str,
+    algo: &str,
+) -> Result<()> {
+    use crate::collectives::generic::Algorithm;
     use crate::transport::Transport;
     if p == 0 {
         bail!("need at least one rank");
@@ -305,18 +314,22 @@ pub fn bcast_transport(p: u64, m: u64, n: usize, root: u64, backend: &str) -> Re
     if root >= p {
         bail!("root must be < p");
     }
+    let requested: Algorithm = algo.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let resolved = requested.resolve_bcast(p, n, m);
+    let auto_note = if requested == Algorithm::Auto { " (auto)" } else { "" };
     let payload: Vec<u8> = (0..m).map(|i| ((i * 131) % 251) as u8).collect();
     println!(
-        "broadcast of {} from root {root} over p = {p} (q = {q}), n = {n} blocks, transport `{backend}`",
+        "broadcast of {} from root {root} over p = {p} (q = {q}), n = {n} blocks, \
+         transport `{backend}`, algorithm `{resolved}`{auto_note}",
         fmt_bytes(m)
     );
     let t0 = std::time::Instant::now();
     let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
-        // Pre-establish the circulant neighborhood (lazy-mesh TCP dials
-        // ahead of the first round; no-op on sim/thread).
-        t.warm_up()?;
+        // The dispatch pre-warms exactly the links the chosen algorithm's
+        // schedule uses (lazy-mesh TCP dials ahead of the first round;
+        // no-op on sim/thread).
         let data = if t.rank() == root { Some(&payload[..]) } else { None };
-        generic::bcast_circulant(t.as_mut(), root, n, m, data)
+        generic::bcast(t.as_mut(), resolved, root, n, m, data)
     })?;
     let wall = t0.elapsed().as_secs_f64();
     for (r, buf) in results.iter().enumerate() {
@@ -325,7 +338,9 @@ pub fn bcast_transport(p: u64, m: u64, n: usize, root: u64, backend: &str) -> Re
         }
     }
     println!("  delivery   : byte-exact at all {p} ranks");
-    println!("  rounds     : {} (= n-1+q)", generic::bcast_rounds(p, n));
+    if let Some(rounds) = resolved.bcast_round_count(p, n) {
+        println!("  rounds     : {rounds}");
+    }
     println!("  wall time  : {}", fmt_time(wall));
     if let Some(stats) = sim_stats {
         println!("  sim time   : {}", fmt_time(stats.time_s));
@@ -334,8 +349,16 @@ pub fn bcast_transport(p: u64, m: u64, n: usize, root: u64, backend: &str) -> Re
     Ok(())
 }
 
-/// `--transport` counterpart for the irregular allgatherv.
-pub fn allgatherv_transport(p: u64, m: u64, n: usize, kind: &str, backend: &str) -> Result<()> {
+/// `--transport`/`--algo` counterpart for the irregular allgatherv.
+pub fn allgatherv_transport(
+    p: u64,
+    m: u64,
+    n: usize,
+    kind: &str,
+    backend: &str,
+    algo: &str,
+) -> Result<()> {
+    use crate::collectives::generic::Algorithm;
     use crate::transport::Transport;
     if p == 0 {
         bail!("need at least one rank");
@@ -347,20 +370,24 @@ pub fn allgatherv_transport(p: u64, m: u64, n: usize, kind: &str, backend: &str)
         n
     };
     let counts = problem_counts(kind, p, m)?;
+    let total: u64 = counts.iter().sum();
+    let requested: Algorithm = algo.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let resolved = requested.resolve_allgatherv(p, n, total);
+    let auto_note = if requested == Algorithm::Auto { " (auto)" } else { "" };
     let datas: Vec<Vec<u8>> = counts
         .iter()
         .enumerate()
         .map(|(j, &c)| (0..c).map(|i| ((i * 7 + j as u64 * 13) % 251) as u8).collect())
         .collect();
     println!(
-        "allgatherv ({kind}) of total {} over p = {p} (q = {q}), n = {n} blocks/root, transport `{backend}`",
-        fmt_bytes(counts.iter().sum())
+        "allgatherv ({kind}) of total {} over p = {p} (q = {q}), n = {n} blocks/root, \
+         transport `{backend}`, algorithm `{resolved}`{auto_note}",
+        fmt_bytes(total)
     );
     let t0 = std::time::Instant::now();
     let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
-        t.warm_up()?;
         let mine = &datas[t.rank() as usize];
-        generic::allgatherv_circulant(t.as_mut(), n, &counts, mine)
+        generic::allgatherv(t.as_mut(), resolved, n, &counts, mine)
     })?;
     let wall = t0.elapsed().as_secs_f64();
     for (r, bufs) in results.iter().enumerate() {
@@ -369,7 +396,9 @@ pub fn allgatherv_transport(p: u64, m: u64, n: usize, kind: &str, backend: &str)
         }
     }
     println!("  delivery   : all {p} contributions byte-exact at all {p} ranks");
-    println!("  rounds     : {} (= n-1+q)", n - 1 + q);
+    if let Some(rounds) = resolved.allgatherv_round_count(p, n) {
+        println!("  rounds     : {rounds}");
+    }
     println!("  wall time  : {}", fmt_time(wall));
     if let Some(stats) = sim_stats {
         println!("  sim time   : {}", fmt_time(stats.time_s));

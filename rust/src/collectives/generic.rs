@@ -29,10 +29,26 @@
 //! data always moves for real — and the simulator backend ties the two
 //! together: it enforces the identical machine model and produces the
 //! identical round/byte/time accounting.
+//!
+//! ## Algorithm selection
+//!
+//! The circulant collectives above compete against the classical
+//! baselines in [`crate::collectives::generic_baselines`] (binomial tree,
+//! scatter-allgather, ring, Bruck — the algorithms the paper's figures
+//! compare against, now runnable on every backend). The [`Algorithm`]
+//! enum names them and the dispatch entry points [`bcast`],
+//! [`allgatherv`], [`reduce`] and [`allreduce`] select one, pre-warm the
+//! transport links the chosen schedule will use (a no-op off the lazy TCP
+//! mesh), and run it. [`Algorithm::Auto`] picks a sensible algorithm from
+//! `(p, n, message size)` — see [`Algorithm::resolve_bcast`] for the
+//! exact thresholds.
+
+#![warn(missing_docs)]
 
 use super::blocks::BlockPartition;
 use crate::sched::{ceil_log2, AllgatherSchedules, BcastPlan, Schedule, Skips};
 use crate::transport::{BufferPool, SendSpec, Transport, TransportError};
+use std::fmt;
 
 fn cerr(msg: String) -> TransportError {
     TransportError::Collective(msg)
@@ -93,6 +109,26 @@ fn check_scheduled(
 /// The root passes `Some(payload)`; other ranks may pass `None`, or
 /// `Some(expected)` to additionally assert delivery in place. Every rank
 /// returns the reassembled `m`-byte message.
+///
+/// # Examples
+///
+/// Broadcast 1 KiB from rank 1 to 5 ranks in 3 blocks over real OS
+/// threads — `3 - 1 + ⌈log₂5⌉ = 5` rounds:
+///
+/// ```
+/// use nblock_bcast::collectives::generic::{bcast_circulant, bcast_rounds};
+/// use nblock_bcast::transport::thread::run_threads;
+/// use std::time::Duration;
+///
+/// let msg: Vec<u8> = (0..1024u32).map(|i| (i % 251) as u8).collect();
+/// let out = run_threads(5, Duration::from_secs(10), |mut t| {
+///     let data = if t.rank() == 1 { Some(&msg[..]) } else { None };
+///     bcast_circulant(&mut t, 1, 3, msg.len() as u64, data)
+/// })
+/// .unwrap();
+/// assert!(out.iter().all(|buf| buf == &msg));
+/// assert_eq!(bcast_rounds(5, 3), 5);
+/// ```
 pub fn bcast_circulant<T: Transport + ?Sized>(
     t: &mut T,
     root: u64,
@@ -269,10 +305,22 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
             Some((v as usize).min(n - 1))
         }
     };
-    let mut bufs: Vec<Vec<Option<Vec<u8>>>> = (0..p as usize).map(|_| vec![None; n]).collect();
-    for b in 0..n {
-        bufs[rank as usize][b] = Some(mine[parts[rank as usize].range(b)].to_vec());
-    }
+    // Final-offset storage: `out[j]` is the buffer ultimately returned for
+    // root `j`, pre-sized to `counts[j]`, and inbound blocks are unpacked
+    // *directly into their final offset* within it. This removes both the
+    // per-block owned-storage allocation the old unpack paid every round
+    // and the final reassembly copy.
+    let mut out: Vec<Vec<u8>> = (0..p as usize)
+        .map(|j| {
+            if j == rank as usize {
+                mine.to_vec()
+            } else {
+                vec![0u8; counts[j] as usize]
+            }
+        })
+        .collect();
+    let mut have: Vec<Vec<bool>> = (0..p as usize).map(|_| vec![false; n]).collect();
+    have[rank as usize].fill(true);
     // Round-reused scratch: the packed outgoing message and the inbound
     // frame. Capacities stabilize after the first few rounds.
     let mut send_payload: Vec<u8> = Vec::new();
@@ -289,12 +337,12 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
                 continue;
             }
             if let Some(b) = concrete(sched.send[j as usize][k], i, k) {
-                let blk = bufs[j as usize][b].as_deref().ok_or_else(|| {
-                    cerr(format!(
+                if !have[j as usize][b] {
+                    return Err(cerr(format!(
                         "rank {rank} round {i}: sends root {j} block {b} before receiving it"
-                    ))
-                })?;
-                send_payload.extend_from_slice(blk);
+                    )));
+                }
+                send_payload.extend_from_slice(&out[j as usize][parts[j as usize].range(b)]);
             }
         }
         let got = t.sendrecv_into(
@@ -326,7 +374,9 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
                         "rank {rank} round {i}: pack/unpack misalignment"
                     )));
                 }
-                bufs[j as usize][b] = Some(recv_buf[off..off + sz].to_vec());
+                out[j as usize][parts[j as usize].range(b)]
+                    .copy_from_slice(&recv_buf[off..off + sz]);
+                have[j as usize][b] = true;
                 off += sz;
             }
         }
@@ -337,16 +387,10 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
             )));
         }
     }
-    let mut out = Vec::with_capacity(p as usize);
-    for j in 0..p as usize {
-        let mut v = Vec::with_capacity(counts[j] as usize);
-        for (b, buf) in bufs[j].iter().enumerate() {
-            let blk = buf
-                .as_deref()
-                .ok_or_else(|| cerr(format!("rank {rank}: missing root {j} block {b}")))?;
-            v.extend_from_slice(blk);
+    for (j, hj) in have.iter().enumerate() {
+        if let Some(b) = hj.iter().position(|&x| !x) {
+            return Err(cerr(format!("rank {rank}: missing root {j} block {b}")));
         }
-        out.push(v);
     }
     Ok(out)
 }
@@ -577,4 +621,499 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
         }
     }
     Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm selection
+// ---------------------------------------------------------------------------
+
+/// Message-size threshold (total bytes) below which [`Algorithm::Auto`]
+/// treats a collective as latency-bound and picks a `⌈log₂p⌉`-round
+/// whole-message algorithm over a pipelined one.
+pub const AUTO_LATENCY_CUTOFF: u64 = 4096;
+
+/// A collective algorithm selectable through the dispatch entry points
+/// ([`bcast`], [`allgatherv`], [`reduce`], [`allreduce`]).
+///
+/// Not every algorithm implements every collective; the support matrix is:
+///
+/// | algorithm | bcast | allgatherv | reduce | allreduce |
+/// |---|---|---|---|---|
+/// | `Circulant` (the paper's) | ✓ | ✓ | ✓ | ✓ |
+/// | `Binomial` | ✓ | — | ✓ | — |
+/// | `ScatterAllgather` | ✓ | — | — | — |
+/// | `Ring` | — | ✓ | — | ✓ |
+/// | `Bruck` | — | ✓ | — | — |
+/// | `Auto` | resolves | resolves | resolves | resolves |
+///
+/// Dispatching an unsupported combination returns
+/// [`TransportError::Collective`]. Parsing (`FromStr`) accepts the
+/// kebab-case names shown by [`Algorithm::name`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Resolve a concrete algorithm from `(p, n, message size)` — see the
+    /// `resolve_*` methods for the exact thresholds.
+    Auto,
+    /// The paper's round-optimal n-block schedules on the circulant graph
+    /// ([`bcast_circulant`], [`allgatherv_circulant`],
+    /// [`reduce_circulant`], [`allreduce_circulant`]).
+    Circulant,
+    /// Binomial tree: `⌈log₂p⌉` rounds, the whole message per edge
+    /// ([`crate::collectives::generic_baselines::bcast_binomial`],
+    /// [`crate::collectives::generic_baselines::reduce_binomial`]).
+    Binomial,
+    /// Van de Geijn broadcast: binomial scatter + ring allgather
+    /// ([`crate::collectives::generic_baselines::bcast_scatter_allgather`]).
+    ScatterAllgather,
+    /// Classical ring: `p - 1` rounds for allgatherv, `2(p - 1)` for
+    /// allreduce ([`crate::collectives::generic_baselines::allgatherv_ring`],
+    /// [`crate::collectives::generic_baselines::allreduce_ring`]).
+    Ring,
+    /// Bruck/dissemination allgatherv: `⌈log₂p⌉` rounds with doubling
+    /// chunk sets
+    /// ([`crate::collectives::generic_baselines::allgatherv_bruck`]).
+    Bruck,
+}
+
+impl Algorithm {
+    /// The kebab-case name (`"auto"`, `"circulant"`, `"binomial"`,
+    /// `"scatter-allgather"`, `"ring"`, `"bruck"`) — the same spelling the
+    /// CLI's `--algo` flag and `FromStr` accept.
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Auto => "auto",
+            Algorithm::Circulant => "circulant",
+            Algorithm::Binomial => "binomial",
+            Algorithm::ScatterAllgather => "scatter-allgather",
+            Algorithm::Ring => "ring",
+            Algorithm::Bruck => "bruck",
+        }
+    }
+
+    /// Resolve `Auto` for a broadcast of `m` bytes in `n` blocks at `p`
+    /// ranks; concrete algorithms pass through unchanged.
+    ///
+    /// The heuristic: messages of at most [`AUTO_LATENCY_CUTOFF`] bytes
+    /// are latency-bound, so the `⌈log₂p⌉`-round binomial tree wins; for
+    /// larger messages the pipelined circulant broadcast wins whenever
+    /// the caller allows pipelining (`n > 1`), and scatter-allgather is
+    /// the fallback for large single-block messages (`n == 1`, where the
+    /// circulant schedule degenerates to whole-message rounds).
+    pub fn resolve_bcast(self, p: u64, n: usize, m: u64) -> Algorithm {
+        match self {
+            Algorithm::Auto => {
+                if p <= 1 {
+                    Algorithm::Circulant
+                } else if m <= AUTO_LATENCY_CUTOFF {
+                    Algorithm::Binomial
+                } else if n <= 1 {
+                    Algorithm::ScatterAllgather
+                } else {
+                    Algorithm::Circulant
+                }
+            }
+            a => a,
+        }
+    }
+
+    /// Resolve `Auto` for an allgatherv of `total` bytes (all
+    /// contributions summed) at `p` ranks: small totals are latency-bound
+    /// (`⌈log₂p⌉`-round Bruck), everything else runs the round-optimal
+    /// circulant Algorithm 2. The ring is never auto-picked — it
+    /// degenerates by a factor approaching `p` on irregular inputs (the
+    /// paper's Figure 2) and is kept as an explicit baseline only.
+    pub fn resolve_allgatherv(self, p: u64, _n: usize, total: u64) -> Algorithm {
+        match self {
+            Algorithm::Auto => {
+                if p <= 1 {
+                    Algorithm::Circulant
+                } else if total <= AUTO_LATENCY_CUTOFF {
+                    Algorithm::Bruck
+                } else {
+                    Algorithm::Circulant
+                }
+            }
+            a => a,
+        }
+    }
+
+    /// Resolve `Auto` for a reduction of `bytes` payload bytes at `p`
+    /// ranks: the binomial tree for latency-bound vectors, the circulant
+    /// time-reversal otherwise (mirroring [`Algorithm::resolve_bcast`]).
+    pub fn resolve_reduce(self, p: u64, _n: usize, bytes: u64) -> Algorithm {
+        match self {
+            Algorithm::Auto => {
+                if p <= 1 || bytes > AUTO_LATENCY_CUTOFF {
+                    Algorithm::Circulant
+                } else {
+                    Algorithm::Binomial
+                }
+            }
+            a => a,
+        }
+    }
+
+    /// Resolve `Auto` for an allreduce: always the circulant
+    /// reduce-then-broadcast (`2(n - 1 + ⌈log₂p⌉)` rounds, which both
+    /// pipelines and keeps the round count logarithmic in `p`); the
+    /// `2(p - 1)`-round ring is kept as the explicit classical baseline.
+    pub fn resolve_allreduce(self, _p: u64, _n: usize, _bytes: u64) -> Algorithm {
+        match self {
+            Algorithm::Auto => Algorithm::Circulant,
+            a => a,
+        }
+    }
+
+    /// Communication rounds a (concrete) algorithm takes for an `n`-block
+    /// broadcast at `p` ranks — `None` if it does not implement broadcast
+    /// or is still `Auto`. The comparison the repo exists to make:
+    /// circulant `n - 1 + ⌈log₂p⌉`, binomial `⌈log₂p⌉` (each round
+    /// carrying all `n` blocks), scatter-allgather `⌈log₂p⌉ + p - 1`.
+    pub fn bcast_round_count(self, p: u64, n: usize) -> Option<usize> {
+        let q = ceil_log2(p);
+        match self {
+            Algorithm::Circulant => Some(bcast_rounds(p, n)),
+            Algorithm::Binomial => Some(q),
+            Algorithm::ScatterAllgather => Some(if p <= 1 { 0 } else { q + (p - 1) as usize }),
+            _ => None,
+        }
+    }
+
+    /// Communication rounds a (concrete) algorithm takes for an `n`-block
+    /// allgatherv at `p` ranks — `None` if it does not implement
+    /// allgatherv or is still `Auto`.
+    pub fn allgatherv_round_count(self, p: u64, n: usize) -> Option<usize> {
+        match self {
+            Algorithm::Circulant => Some(bcast_rounds(p, n)),
+            Algorithm::Ring => Some((p.max(1) - 1) as usize),
+            Algorithm::Bruck => Some(ceil_log2(p)),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Algorithm, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => Algorithm::Auto,
+            "circulant" | "nblock" => Algorithm::Circulant,
+            "binomial" => Algorithm::Binomial,
+            "scatter-allgather" | "scatter_allgather" | "vandegeijn" => {
+                Algorithm::ScatterAllgather
+            }
+            "ring" => Algorithm::Ring,
+            "bruck" => Algorithm::Bruck,
+            other => {
+                return Err(format!(
+                    "unknown algorithm `{other}` \
+                     (auto|circulant|binomial|scatter-allgather|ring|bruck)"
+                ))
+            }
+        })
+    }
+}
+
+/// The absolute peers a binomial tree rooted at `root` connects relative
+/// rank `rel` to: its parent (if any) plus every child — the edge set both
+/// [`crate::collectives::generic_baselines::bcast_binomial`] and its
+/// reversal [`crate::collectives::generic_baselines::reduce_binomial`]
+/// touch, used to pre-warm the lazy TCP mesh.
+fn binomial_peers(p: u64, rel: u64, root: u64) -> Vec<u64> {
+    let q = ceil_log2(p);
+    let mut peers = Vec::new();
+    for j in 0..q {
+        let step = 1u64 << j;
+        if rel < step && rel + step < p {
+            peers.push((rel + step + root) % p); // child in round j
+        } else if rel >= step && rel < 2 * step {
+            peers.push((rel - step + root) % p); // parent (exactly once)
+        }
+    }
+    peers
+}
+
+/// The absolute peers the scatter-allgather broadcast connects relative
+/// rank `rel` to: its scatter-tree partners (one per splitting round it
+/// participates in) plus its two ring neighbors.
+fn scatter_allgather_peers(p: u64, rel: u64, root: u64) -> Vec<u64> {
+    let mut peers = Vec::new();
+    let (mut lo, mut hi) = (0u64, p);
+    while hi - lo > 1 {
+        let len = hi - lo;
+        let half = len - len / 2;
+        let mid = lo + half;
+        if rel == lo {
+            peers.push((mid + root) % p);
+            hi = mid;
+        } else if rel == mid {
+            peers.push((lo + root) % p);
+            lo = mid;
+        } else if rel < mid {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    for x in [((rel + 1) % p + root) % p, ((rel + p - 1) % p + root) % p] {
+        if !peers.contains(&x) {
+            peers.push(x);
+        }
+    }
+    peers
+}
+
+/// The absolute peers the Bruck allgatherv connects `rank` to:
+/// `{rank ± h}` for every doubling offset `h`.
+fn bruck_peers(p: u64, rank: u64) -> Vec<u64> {
+    let mut peers = Vec::new();
+    let mut h = 1u64;
+    while h < p {
+        for x in [(rank + p - h) % p, (rank + h) % p] {
+            if x != rank && !peers.contains(&x) {
+                peers.push(x);
+            }
+        }
+        h += h.min(p - h);
+    }
+    peers
+}
+
+/// Pre-establish the links `algo` will use for a broadcast/reduction tree
+/// rooted at `root` (no-op on backends without connection setup costs).
+fn warm_rooted<T: Transport + ?Sized>(
+    t: &mut T,
+    algo: Algorithm,
+    root: u64,
+) -> Result<(), TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if p <= 1 || root >= p {
+        return Ok(());
+    }
+    let rel = (rank + p - root) % p;
+    match algo {
+        Algorithm::Circulant => t.warm_up(),
+        Algorithm::Binomial => t.warm_peers(&binomial_peers(p, rel, root)),
+        Algorithm::ScatterAllgather => t.warm_peers(&scatter_allgather_peers(p, rel, root)),
+        _ => Ok(()),
+    }
+}
+
+/// Broadcast `m` bytes from `root` with the chosen [`Algorithm`],
+/// pre-warming exactly the links its schedule uses. `n` is the block
+/// count for the pipelined circulant schedule (binomial and
+/// scatter-allgather define their own message decomposition and ignore
+/// it). Argument and return conventions are those of [`bcast_circulant`]:
+/// the root passes `Some(payload)`, other ranks `None` (or
+/// `Some(expected)` to assert delivery), and every rank returns the full
+/// message.
+///
+/// # Examples
+///
+/// Auto-selected broadcast over the thread backend (at 100 bytes the
+/// heuristic resolves to the binomial tree):
+///
+/// ```
+/// use nblock_bcast::collectives::generic::{bcast, Algorithm};
+/// use nblock_bcast::transport::thread::run_threads;
+/// use std::time::Duration;
+///
+/// let msg: Vec<u8> = (0..100u32).map(|i| (i * 7 % 251) as u8).collect();
+/// let out = run_threads(4, Duration::from_secs(10), |mut t| {
+///     let data = if t.rank() == 0 { Some(&msg[..]) } else { None };
+///     bcast(&mut t, Algorithm::Auto, 0, 4, msg.len() as u64, data)
+/// })
+/// .unwrap();
+/// assert!(out.iter().all(|buf| buf == &msg));
+/// ```
+pub fn bcast<T: Transport + ?Sized>(
+    t: &mut T,
+    algo: Algorithm,
+    root: u64,
+    n: usize,
+    m: u64,
+    data: Option<&[u8]>,
+) -> Result<Vec<u8>, TransportError> {
+    let algo = algo.resolve_bcast(t.size(), n, m);
+    warm_rooted(t, algo, root)?;
+    match algo {
+        Algorithm::Circulant => bcast_circulant(t, root, n, m, data),
+        Algorithm::Binomial => super::generic_baselines::bcast_binomial(t, root, m, data),
+        Algorithm::ScatterAllgather => {
+            super::generic_baselines::bcast_scatter_allgather(t, root, m, data)
+        }
+        other => Err(cerr(format!(
+            "{other} is not a broadcast algorithm (auto|circulant|binomial|scatter-allgather)"
+        ))),
+    }
+}
+
+/// Irregular all-to-all broadcast with the chosen [`Algorithm`],
+/// pre-warming exactly the links its schedule uses. `n` is the per-root
+/// block count for the circulant Algorithm 2 (ring and Bruck forward
+/// whole contributions and ignore it). Conventions are those of
+/// [`allgatherv_circulant`]: `mine` is this rank's `counts[rank]`-byte
+/// contribution and every rank returns all `p` contributions, index =
+/// root.
+pub fn allgatherv<T: Transport + ?Sized>(
+    t: &mut T,
+    algo: Algorithm,
+    n: usize,
+    counts: &[u64],
+    mine: &[u8],
+) -> Result<Vec<Vec<u8>>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    let algo = algo.resolve_allgatherv(p, n, counts.iter().sum());
+    if p > 1 {
+        match algo {
+            Algorithm::Circulant => t.warm_up()?,
+            Algorithm::Ring => t.warm_peers(&[(rank + 1) % p, (rank + p - 1) % p])?,
+            Algorithm::Bruck => t.warm_peers(&bruck_peers(p, rank))?,
+            _ => {}
+        }
+    }
+    match algo {
+        Algorithm::Circulant => allgatherv_circulant(t, n, counts, mine),
+        Algorithm::Ring => super::generic_baselines::allgatherv_ring(t, counts, mine),
+        Algorithm::Bruck => super::generic_baselines::allgatherv_bruck(t, counts, mine),
+        other => Err(cerr(format!(
+            "{other} is not an allgatherv algorithm (auto|circulant|ring|bruck)"
+        ))),
+    }
+}
+
+/// n-block reduction (f32 sum) to `root` with the chosen [`Algorithm`],
+/// pre-warming exactly the links its schedule uses. Conventions are those
+/// of [`reduce_circulant`]: every rank passes its contribution and gets
+/// back its final accumulator (the full sum at `root`).
+pub fn reduce<T: Transport + ?Sized>(
+    t: &mut T,
+    algo: Algorithm,
+    root: u64,
+    n: usize,
+    mine: &[f32],
+) -> Result<Vec<f32>, TransportError> {
+    let algo = algo.resolve_reduce(t.size(), n, (mine.len() * 4) as u64);
+    warm_rooted(t, algo, root)?;
+    match algo {
+        Algorithm::Circulant => reduce_circulant(t, root, n, mine),
+        Algorithm::Binomial => super::generic_baselines::reduce_binomial(t, root, mine),
+        other => Err(cerr(format!(
+            "{other} is not a reduction algorithm (auto|circulant|binomial)"
+        ))),
+    }
+}
+
+/// Allreduce (f32 sum) with the chosen [`Algorithm`], pre-warming exactly
+/// the links its schedule uses. Conventions are those of
+/// [`allreduce_circulant`]: every rank returns the full elementwise sum.
+pub fn allreduce<T: Transport + ?Sized>(
+    t: &mut T,
+    algo: Algorithm,
+    n: usize,
+    mine: &[f32],
+) -> Result<Vec<f32>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    let algo = algo.resolve_allreduce(p, n, (mine.len() * 4) as u64);
+    if p > 1 {
+        match algo {
+            // The circulant allreduce is reduce-to-0 + bcast-from-0: warm
+            // the root-independent circulant neighborhood once.
+            Algorithm::Circulant => t.warm_up()?,
+            Algorithm::Ring => t.warm_peers(&[(rank + 1) % p, (rank + p - 1) % p])?,
+            _ => {}
+        }
+    }
+    match algo {
+        Algorithm::Circulant => allreduce_circulant(t, n, mine),
+        Algorithm::Ring => super::generic_baselines::allreduce_ring(t, mine),
+        other => Err(cerr(format!(
+            "{other} is not an allreduce algorithm (auto|circulant|ring)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_resolution_thresholds() {
+        let a = Algorithm::Auto;
+        assert_eq!(a.resolve_bcast(16, 8, 1024), Algorithm::Binomial);
+        assert_eq!(a.resolve_bcast(16, 8, 1 << 20), Algorithm::Circulant);
+        assert_eq!(a.resolve_bcast(16, 1, 1 << 20), Algorithm::ScatterAllgather);
+        assert_eq!(a.resolve_bcast(1, 1, 1 << 20), Algorithm::Circulant);
+        assert_eq!(a.resolve_allgatherv(16, 4, 512), Algorithm::Bruck);
+        assert_eq!(a.resolve_allgatherv(16, 4, 1 << 20), Algorithm::Circulant);
+        assert_eq!(a.resolve_reduce(16, 4, 100), Algorithm::Binomial);
+        assert_eq!(a.resolve_reduce(16, 4, 1 << 20), Algorithm::Circulant);
+        assert_eq!(a.resolve_allreduce(16, 4, 100), Algorithm::Circulant);
+        // Concrete algorithms pass through untouched.
+        assert_eq!(Algorithm::Ring.resolve_bcast(16, 8, 10), Algorithm::Ring);
+    }
+
+    #[test]
+    fn algorithm_names_round_trip() {
+        for a in [
+            Algorithm::Auto,
+            Algorithm::Circulant,
+            Algorithm::Binomial,
+            Algorithm::ScatterAllgather,
+            Algorithm::Ring,
+            Algorithm::Bruck,
+        ] {
+            assert_eq!(a.name().parse::<Algorithm>().unwrap(), a);
+        }
+        assert!("nope".parse::<Algorithm>().is_err());
+    }
+
+    #[test]
+    fn round_counts() {
+        assert_eq!(Algorithm::Circulant.bcast_round_count(16, 8), Some(11));
+        assert_eq!(Algorithm::Binomial.bcast_round_count(16, 8), Some(4));
+        assert_eq!(Algorithm::ScatterAllgather.bcast_round_count(16, 8), Some(19));
+        assert_eq!(Algorithm::Ring.bcast_round_count(16, 8), None);
+        assert_eq!(Algorithm::Ring.allgatherv_round_count(16, 8), Some(15));
+        assert_eq!(Algorithm::Bruck.allgatherv_round_count(16, 8), Some(4));
+        assert_eq!(Algorithm::Circulant.allgatherv_round_count(16, 8), Some(11));
+    }
+
+    #[test]
+    fn peer_sets_are_symmetric() {
+        // Every warm edge must be listed by both of its endpoints, or the
+        // TCP accept side would wait for a dial that never comes.
+        for p in [2u64, 3, 7, 16, 33] {
+            for root in [0, p / 2] {
+                let bin: Vec<Vec<u64>> = (0..p)
+                    .map(|r| binomial_peers(p, (r + p - root) % p, root))
+                    .collect();
+                let vdg: Vec<Vec<u64>> = (0..p)
+                    .map(|r| scatter_allgather_peers(p, (r + p - root) % p, root))
+                    .collect();
+                let bruck: Vec<Vec<u64>> = (0..p).map(|r| bruck_peers(p, r)).collect();
+                for (name, sets) in [("binomial", &bin), ("vdg", &vdg), ("bruck", &bruck)] {
+                    for r in 0..p {
+                        for &peer in &sets[r as usize] {
+                            assert_ne!(peer, r, "{name} p={p} root={root}: self edge");
+                            assert!(
+                                sets[peer as usize].contains(&r),
+                                "{name} p={p} root={root}: edge {r}->{peer} not symmetric"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
 }

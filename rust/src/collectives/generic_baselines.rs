@@ -1,0 +1,781 @@
+//! The classical baseline collectives as SPMD programs over the
+//! [`crate::transport::Transport`] trait.
+//!
+//! The paper's headline claim is *comparative*: the circulant-graph
+//! schedules are round-optimal where the classical algorithms are not.
+//! The centralized baseline implementations in
+//! [`crate::collectives::bcast`], [`crate::collectives::allgather`] and
+//! [`crate::collectives::reduce`] drive all `p` ranks of the simulated
+//! [`crate::simulator::Engine`] from one loop — fine for cost-model
+//! sweeps, but unable to run on the thread or TCP backends. This module
+//! ports them to true per-rank SPMD form so the *comparison* (not just the
+//! paper's algorithm) runs end-to-end on every backend:
+//!
+//! * [`bcast_binomial`] — binomial tree, `⌈log₂p⌉` rounds, the whole
+//!   message on every edge (OpenMPI's small-message broadcast);
+//! * [`bcast_scatter_allgather`] — van de Geijn: binomial scatter of `p`
+//!   chunks (`⌈log₂p⌉` rounds) then a ring allgather (`p - 1` rounds),
+//!   ≈ `2m` bytes per rank (OpenMPI's large-message broadcast);
+//! * [`allgatherv_ring`] — the classical ring, `p - 1` rounds, whole
+//!   contributions forwarded hop by hop (degenerates when one rank holds
+//!   all the data — the Figure 2 effect);
+//! * [`allgatherv_bruck`] — Bruck/dissemination, `⌈log₂p⌉` rounds with
+//!   doubling chunk sets;
+//! * [`reduce_binomial`] — reverse binomial tree, `⌈log₂p⌉` rounds, whole
+//!   vector per edge;
+//! * [`allreduce_ring`] — ring reduce-scatter + ring allgather,
+//!   `2(p - 1)` rounds, bandwidth-optimal for large vectors.
+//!
+//! All six follow the PR 2 zero-copy idioms: outgoing payloads are
+//! *borrowed* (`SendSpec::data`) straight out of block storage or — at the
+//! broadcast root — out of the caller's payload, inbound frames land in
+//! reused buffers, and round-loop scratch is allocated once per call, not
+//! per round.
+//!
+//! Every function makes the same number of [`Transport::sendrecv_into`]
+//! calls on every rank (idle ranks call [`idle_round`]), which is what the
+//! lockstep simulator backend requires and what keeps the round accounting
+//! of the baselines honest: a binomial broadcast *is* `⌈log₂p⌉` rounds,
+//! also when most ranks idle through the early ones.
+//!
+//! Algorithm selection (including the `Auto` heuristic) lives in
+//! [`crate::collectives::generic::Algorithm`]; these functions are the raw
+//! per-algorithm entry points.
+
+#![warn(missing_docs)]
+
+use super::blocks::BlockPartition;
+use crate::sched::ceil_log2;
+use crate::transport::{idle_round, SendSpec, Transport, TransportError};
+
+fn cerr(msg: String) -> TransportError {
+    TransportError::Collective(msg)
+}
+
+/// Assert an inbound frame: the scheduled `tag` must arrive carrying
+/// exactly `want_bytes`.
+fn check_frame(
+    rank: u64,
+    what: &str,
+    got: Option<u64>,
+    got_len: u64,
+    want_tag: u64,
+    want_bytes: u64,
+) -> Result<(), TransportError> {
+    match got {
+        Some(tag) if tag == want_tag && got_len == want_bytes => Ok(()),
+        Some(tag) => Err(cerr(format!(
+            "rank {rank} ({what}): expected tag {want_tag} with {want_bytes} bytes, \
+             got tag {tag} with {got_len}"
+        ))),
+        None => Err(cerr(format!(
+            "rank {rank} ({what}): scheduled message (tag {want_tag}) never arrived"
+        ))),
+    }
+}
+
+fn f32s_to_scratch(v: &[f32], scratch: &mut Vec<u8>) {
+    scratch.clear();
+    scratch.reserve(v.len() * 4);
+    for x in v {
+        scratch.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn combine_bytes(dst: &mut [f32], src: &[u8]) {
+    for (d, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+        *d += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+}
+
+/// Borrow chunk `s` immutably while borrowing chunk `r` mutably from the
+/// same slot vector (`s != r`): the shape of a full-duplex ring round,
+/// where the outgoing chunk is sent borrowed while the inbound chunk lands
+/// *directly in its final slot* — no unpack copy at all.
+fn send_recv_slots(slots: &mut [Vec<u8>], s: usize, r: usize) -> (&[u8], &mut Vec<u8>) {
+    debug_assert_ne!(s, r, "a ring round never sends and receives the same chunk");
+    if s < r {
+        let (lo, hi) = slots.split_at_mut(r);
+        (lo[s].as_slice(), &mut hi[0])
+    } else {
+        let (lo, hi) = slots.split_at_mut(s);
+        (hi[0].as_slice(), &mut lo[r])
+    }
+}
+
+/// Classical binomial-tree broadcast as an SPMD program: `⌈log₂p⌉` rounds,
+/// the whole `m`-byte message on every edge.
+///
+/// In round `j`, relative ranks `< 2ʲ` (which already hold the message)
+/// send it to relative rank `+ 2ʲ`; after `⌈log₂p⌉` rounds every rank is
+/// reached. The root sends the caller's payload *borrowed* (never copies
+/// it); every other rank receives the message exactly once and forwards
+/// borrowed slices of its received buffer. Compare
+/// [`super::generic::bcast_circulant`]: the binomial tree pays
+/// `⌈log₂p⌉ · m` bytes of serial edge time where the pipelined circulant
+/// broadcast pays `≈ (1 + ⌈log₂p⌉/n) · m`.
+///
+/// The root passes `Some(payload)`; other ranks may pass `None`, or
+/// `Some(expected)` to additionally assert delivery. Every rank returns
+/// the full `m`-byte message.
+pub fn bcast_binomial<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    m: u64,
+    data: Option<&[u8]>,
+) -> Result<Vec<u8>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if root >= p {
+        return Err(cerr(format!("root {root} out of range (p = {p})")));
+    }
+    if let Some(d) = data {
+        if d.len() as u64 != m {
+            return Err(cerr(format!("data length {} != m {m}", d.len())));
+        }
+    }
+    if rank == root && data.is_none() {
+        return Err(cerr(format!("root {root} must supply the payload")));
+    }
+    if p == 1 {
+        return Ok(data.expect("validated above").to_vec());
+    }
+    let q = ceil_log2(p);
+    let rel = (rank + p - root) % p;
+    // The received message (non-root ranks only); the root always borrows
+    // the caller's payload.
+    let mut held: Vec<u8> = Vec::new();
+    let mut have = rel == 0;
+    for j in 0..q {
+        let step = 1u64 << j;
+        if rel < step {
+            let to_rel = rel + step;
+            if to_rel < p {
+                debug_assert!(have, "binomial sender must hold the message");
+                let payload: &[u8] = if rank == root {
+                    data.expect("validated above")
+                } else {
+                    &held
+                };
+                t.sendrecv_into(
+                    Some(SendSpec {
+                        to: (to_rel + root) % p,
+                        tag: 0,
+                        data: payload,
+                    }),
+                    None,
+                    &mut Vec::new(),
+                )?;
+            } else {
+                idle_round(t)?;
+            }
+        } else if rel < 2 * step {
+            let from = (rel - step + root) % p;
+            let got = t.sendrecv_into(None, Some(from), &mut held)?;
+            check_frame(rank, "binomial bcast", got, held.len() as u64, 0, m)?;
+            have = true;
+        } else {
+            idle_round(t)?;
+        }
+    }
+    if !have {
+        return Err(cerr(format!(
+            "rank {rank}: binomial tree never reached relative rank {rel}"
+        )));
+    }
+    let out = if rank == root {
+        data.expect("validated above").to_vec()
+    } else {
+        held
+    };
+    if rank != root {
+        if let Some(d) = data {
+            if out != d {
+                return Err(cerr(format!(
+                    "rank {rank}: binomial delivery differs from the reference"
+                )));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Van de Geijn broadcast as an SPMD program: binomial scatter of `p`
+/// chunks, then a ring allgather — `⌈log₂p⌉ + p - 1` rounds, ≈ `2m` bytes
+/// per rank.
+///
+/// Chunks live in *relative* rank space: after the scatter, relative rank
+/// `rel` owns chunk `rel` (bytes `part.range(rel)` of the message, under
+/// the `p`-way [`BlockPartition`]). The scatter is recursive range
+/// halving: the owner of a chunk range keeps the lower ⌈len/2⌉ chunks and
+/// sends the upper half — a *contiguous* byte slice, so the root borrows
+/// straight out of the caller's payload and forwarding ranks borrow
+/// suffixes of their received buffer. The ring allgather then circulates
+/// one chunk per round, each inbound chunk landing in a reused scratch
+/// buffer before one copy into its final offset.
+///
+/// Argument and return conventions are those of [`bcast_binomial`].
+pub fn bcast_scatter_allgather<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    m: u64,
+    data: Option<&[u8]>,
+) -> Result<Vec<u8>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if root >= p {
+        return Err(cerr(format!("root {root} out of range (p = {p})")));
+    }
+    if let Some(d) = data {
+        if d.len() as u64 != m {
+            return Err(cerr(format!("data length {} != m {m}", d.len())));
+        }
+    }
+    if rank == root && data.is_none() {
+        return Err(cerr(format!("root {root} must supply the payload")));
+    }
+    if p == 1 {
+        return Ok(data.expect("validated above").to_vec());
+    }
+    let q = ceil_log2(p);
+    let rel = (rank + p - root) % p;
+    let part = BlockPartition::new(m, p as usize);
+    // Byte range of the chunk span [a, b) (chunk spans are contiguous).
+    let span = |a: u64, b: u64| part.offset(a as usize) as usize..part.offset(b as usize) as usize;
+
+    // --- Scatter: q rounds of synchronized recursive range halving -------
+    // Every rank tracks the bracket [lo, hi) of chunks its subtree covers;
+    // the bracket owner is always `lo`. All brackets with more than one
+    // chunk split in the same global round, so the round structure is
+    // identical on every rank.
+    let (mut lo, mut hi) = (0u64, p);
+    // Received scatter bytes (non-root ranks): chunks [lo, hi) once this
+    // rank has become an owner, based at byte offset part.offset(lo).
+    let mut held: Vec<u8> = Vec::new();
+    let mut received = rel == 0;
+    for _ in 0..q {
+        if hi - lo <= 1 {
+            idle_round(t)?;
+            continue;
+        }
+        let len = hi - lo;
+        let half = len - len / 2; // lower part keeps ⌈len/2⌉ chunks
+        let mid = lo + half;
+        if rel == lo {
+            // Owner: send the upper chunk span [mid, hi) and keep [lo, mid).
+            debug_assert!(received, "scatter owner must hold its span");
+            let bytes = span(mid, hi);
+            let payload: &[u8] = if rank == root {
+                &data.expect("validated above")[bytes]
+            } else {
+                let base = part.offset(lo as usize) as usize;
+                &held[bytes.start - base..bytes.end - base]
+            };
+            t.sendrecv_into(
+                Some(SendSpec {
+                    to: (mid + root) % p,
+                    tag: mid,
+                    data: payload,
+                }),
+                None,
+                &mut Vec::new(),
+            )?;
+            hi = mid;
+            if rank != root {
+                // Drop the sent suffix; [lo, mid) stays in place.
+                let base = part.offset(lo as usize) as usize;
+                held.truncate(part.offset(mid as usize) as usize - base);
+            }
+        } else if rel == mid {
+            // New owner: receive the span [mid, hi) from `lo`.
+            let from = (lo + root) % p;
+            let got = t.sendrecv_into(None, Some(from), &mut held)?;
+            let want = span(mid, hi);
+            check_frame(
+                rank,
+                "vdg scatter",
+                got,
+                held.len() as u64,
+                mid,
+                (want.end - want.start) as u64,
+            )?;
+            lo = mid;
+            received = true;
+        } else {
+            // Bystander this round: just narrow the bracket.
+            if rel < mid {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+            idle_round(t)?;
+        }
+    }
+    debug_assert_eq!(hi - lo, 1, "q halvings reduce every bracket to one chunk");
+    debug_assert_eq!(lo, rel, "after the scatter, rel owns chunk rel");
+    if !received {
+        return Err(cerr(format!(
+            "rank {rank}: scatter never delivered chunk {rel}"
+        )));
+    }
+
+    // --- Ring allgather: p - 1 rounds ------------------------------------
+    // `out` is the reassembled message; start with the own chunk in place.
+    let mut out = vec![0u8; m as usize];
+    let mut have = vec![false; p as usize];
+    if rank == root {
+        out.copy_from_slice(data.expect("validated above"));
+        have.fill(true);
+    } else {
+        out[part.range(rel as usize)].copy_from_slice(&held);
+        have[rel as usize] = true;
+    }
+    let mut recv_scratch: Vec<u8> = Vec::new();
+    for round in 0..p - 1 {
+        // Relative rank `rel` sends chunk (rel - round) and receives chunk
+        // (rel - 1 - round), both mod p — the standard ring pipeline.
+        let send_c = ((rel + p - round % p) % p) as usize;
+        let recv_c = ((rel + p - 1 - round % p) % p) as usize;
+        if !have[send_c] {
+            return Err(cerr(format!(
+                "rank {rank} ring round {round}: chunk {send_c} not yet held"
+            )));
+        }
+        let got = t.sendrecv_into(
+            Some(SendSpec {
+                to: ((rel + 1) % p + root) % p,
+                tag: send_c as u64,
+                data: &out[part.range(send_c)],
+            }),
+            Some(((rel + p - 1) % p + root) % p),
+            &mut recv_scratch,
+        )?;
+        check_frame(
+            rank,
+            "vdg allgather",
+            got,
+            recv_scratch.len() as u64,
+            recv_c as u64,
+            part.size(recv_c),
+        )?;
+        out[part.range(recv_c)].copy_from_slice(&recv_scratch);
+        have[recv_c] = true;
+    }
+    if let Some(i) = have.iter().position(|&h| !h) {
+        return Err(cerr(format!("rank {rank}: missing chunk {i}")));
+    }
+    if rank != root {
+        if let Some(d) = data {
+            if out != d {
+                return Err(cerr(format!(
+                    "rank {rank}: scatter-allgather delivery differs from the reference"
+                )));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Classical ring allgatherv as an SPMD program: `p - 1` rounds, each rank
+/// forwarding to `rank + 1` the whole contribution it received the
+/// previous round.
+///
+/// `mine` is this rank's contribution (`counts[rank]` bytes); returns all
+/// `p` contributions, index = root — the same convention as
+/// [`super::generic::allgatherv_circulant`]. Each inbound contribution
+/// lands *directly in its final output slot* (the slot vector doubles as
+/// the receive buffer), so the steady-state round is one borrowed send and
+/// one in-place receive with no unpack copy.
+///
+/// For the degenerate problem where one rank holds all the data, the big
+/// chunk crosses every edge one round at a time — the `Θ(p·m)` blow-up
+/// the paper's Figure 2 shows for native ring-based libraries, which
+/// Algorithm 2 avoids.
+pub fn allgatherv_ring<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+    mine: &[u8],
+) -> Result<Vec<Vec<u8>>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if counts.len() as u64 != p {
+        return Err(cerr(format!("counts length {} != p {p}", counts.len())));
+    }
+    if mine.len() as u64 != counts[rank as usize] {
+        return Err(cerr(format!(
+            "rank {rank}: contribution is {} bytes, counts says {}",
+            mine.len(),
+            counts[rank as usize]
+        )));
+    }
+    if p == 1 {
+        return Ok(vec![mine.to_vec()]);
+    }
+    let mut out: Vec<Vec<u8>> = (0..p as usize).map(|_| Vec::new()).collect();
+    out[rank as usize] = mine.to_vec();
+    let mut have = vec![false; p as usize];
+    have[rank as usize] = true;
+    let to = (rank + 1) % p;
+    let from = (rank + p - 1) % p;
+    for round in 0..p - 1 {
+        let send_c = ((rank + p - round % p) % p) as usize;
+        let recv_c = ((rank + p - 1 - round % p) % p) as usize;
+        if !have[send_c] {
+            return Err(cerr(format!(
+                "rank {rank} round {round}: chunk {send_c} not yet held"
+            )));
+        }
+        let (send_slice, recv_slot) = send_recv_slots(&mut out, send_c, recv_c);
+        let got = t.sendrecv_into(
+            Some(SendSpec {
+                to,
+                tag: send_c as u64,
+                data: send_slice,
+            }),
+            Some(from),
+            recv_slot,
+        )?;
+        let got_len = recv_slot.len() as u64;
+        check_frame(rank, "ring allgatherv", got, got_len, recv_c as u64, counts[recv_c])?;
+        have[recv_c] = true;
+    }
+    if let Some(j) = have.iter().position(|&h| !h) {
+        return Err(cerr(format!("rank {rank}: missing contribution {j}")));
+    }
+    Ok(out)
+}
+
+/// Bruck/dissemination allgatherv as an SPMD program: `⌈log₂p⌉` rounds
+/// with doubling chunk sets.
+///
+/// In the round with offset `h` (`h = 1, 2, 4, …`), rank `r` packs its
+/// `min(h, p - h)` consecutive chunks `r, r+1, …` (mod `p`) into one
+/// message for rank `r - h` and receives the matching set starting at
+/// `r + h` from rank `r + h`. Packing is one copy per chunk into a reused
+/// send buffer (multiple chunks must share a frame); unpacking copies each
+/// chunk once into its final output slot.
+///
+/// Argument and return conventions are those of [`allgatherv_ring`].
+pub fn allgatherv_bruck<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+    mine: &[u8],
+) -> Result<Vec<Vec<u8>>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if counts.len() as u64 != p {
+        return Err(cerr(format!("counts length {} != p {p}", counts.len())));
+    }
+    if mine.len() as u64 != counts[rank as usize] {
+        return Err(cerr(format!(
+            "rank {rank}: contribution is {} bytes, counts says {}",
+            mine.len(),
+            counts[rank as usize]
+        )));
+    }
+    if p == 1 {
+        return Ok(vec![mine.to_vec()]);
+    }
+    let mut out: Vec<Vec<u8>> = (0..p as usize).map(|_| Vec::new()).collect();
+    out[rank as usize] = mine.to_vec();
+    let mut have = vec![false; p as usize];
+    have[rank as usize] = true;
+    // Round-reused scratch: the packed outgoing message and inbound frame.
+    let mut send_buf: Vec<u8> = Vec::new();
+    let mut recv_buf: Vec<u8> = Vec::new();
+    let mut h = 1u64;
+    while h < p {
+        let cnt = h.min(p - h);
+        let to = (rank + p - h) % p;
+        let from = (rank + h) % p;
+        send_buf.clear();
+        for i in 0..cnt {
+            let c = ((rank + i) % p) as usize;
+            if !have[c] {
+                return Err(cerr(format!(
+                    "rank {rank} (bruck h={h}): chunk {c} not yet held"
+                )));
+            }
+            send_buf.extend_from_slice(&out[c]);
+        }
+        let want: u64 = (0..cnt).map(|i| counts[((rank + h + i) % p) as usize]).sum();
+        let got = t.sendrecv_into(
+            Some(SendSpec {
+                to,
+                tag: h,
+                data: &send_buf,
+            }),
+            Some(from),
+            &mut recv_buf,
+        )?;
+        check_frame(rank, "bruck allgatherv", got, recv_buf.len() as u64, h, want)?;
+        let mut off = 0usize;
+        for i in 0..cnt {
+            let c = ((rank + h + i) % p) as usize;
+            let sz = counts[c] as usize;
+            out[c].clear();
+            out[c].extend_from_slice(&recv_buf[off..off + sz]);
+            have[c] = true;
+            off += sz;
+        }
+        h += cnt;
+    }
+    if let Some(j) = have.iter().position(|&h| !h) {
+        return Err(cerr(format!("rank {rank}: missing contribution {j}")));
+    }
+    Ok(out)
+}
+
+/// Classical binomial-tree reduction (f32 sum) to `root` as an SPMD
+/// program: `⌈log₂p⌉` rounds, the whole vector on every edge — the
+/// reversal of [`bcast_binomial`], exactly as
+/// [`super::generic::reduce_circulant`] reverses the circulant broadcast.
+///
+/// `mine` is this rank's contribution; all ranks must pass equal lengths.
+/// Returns this rank's final accumulator — the full elementwise sum at
+/// `root`, partial sums elsewhere (the convention of
+/// [`super::generic::reduce_circulant`]).
+pub fn reduce_binomial<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    mine: &[f32],
+) -> Result<Vec<f32>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if root >= p {
+        return Err(cerr(format!("root {root} out of range (p = {p})")));
+    }
+    let mut acc = mine.to_vec();
+    if p == 1 {
+        return Ok(acc);
+    }
+    let q = ceil_log2(p);
+    let rel = (rank + p - root) % p;
+    let bytes = (mine.len() * 4) as u64;
+    let mut send_scratch: Vec<u8> = Vec::new();
+    let mut recv_scratch: Vec<u8> = Vec::new();
+    // Reverse the binomial broadcast: round j runs from q-1 down to 0;
+    // relative ranks in [2ʲ, 2ʲ⁺¹) emit their accumulator to rel - 2ʲ,
+    // which combines it. Each rank sends exactly once; the root never
+    // sends.
+    for j in (0..q).rev() {
+        let step = 1u64 << j;
+        if rel >= step && rel < 2 * step {
+            f32s_to_scratch(&acc, &mut send_scratch);
+            t.sendrecv_into(
+                Some(SendSpec {
+                    to: (rel - step + root) % p,
+                    tag: 0,
+                    data: &send_scratch,
+                }),
+                None,
+                &mut Vec::new(),
+            )?;
+        } else if rel < step && rel + step < p {
+            let from = (rel + step + root) % p;
+            let got = t.sendrecv_into(None, Some(from), &mut recv_scratch)?;
+            check_frame(rank, "binomial reduce", got, recv_scratch.len() as u64, 0, bytes)?;
+            combine_bytes(&mut acc, &recv_scratch);
+        } else {
+            idle_round(t)?;
+        }
+    }
+    Ok(acc)
+}
+
+/// Ring allreduce (f32 sum) as an SPMD program: ring reduce-scatter then
+/// ring allgather, `2(p - 1)` rounds — the classical bandwidth-optimal
+/// large-vector algorithm, against which the circulant
+/// [`super::generic::allreduce_circulant`] (`2(n - 1 + ⌈log₂p⌉)` rounds)
+/// competes.
+///
+/// The vector is split into `p` chunks. Reduce-scatter: in round `t`,
+/// rank `r` sends its partial chunk `(r - t) mod p` to `r + 1` and
+/// combines the inbound chunk `(r - 1 - t) mod p`; after `p - 1` rounds
+/// chunk `c` is fully reduced at rank `(c + p - 1) mod p`. The allgather
+/// then circulates the completed chunks. Every rank returns the full
+/// elementwise sum.
+pub fn allreduce_ring<T: Transport + ?Sized>(
+    t: &mut T,
+    mine: &[f32],
+) -> Result<Vec<f32>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    let mut acc = mine.to_vec();
+    if p == 1 {
+        return Ok(acc);
+    }
+    let part = BlockPartition::new((mine.len() * 4) as u64, p as usize);
+    let erange = |c: usize| {
+        let r = part.range(c);
+        r.start / 4..r.end / 4
+    };
+    let to = (rank + 1) % p;
+    let from = (rank + p - 1) % p;
+    let mut send_scratch: Vec<u8> = Vec::new();
+    let mut recv_scratch: Vec<u8> = Vec::new();
+    // Phase 1: reduce-scatter.
+    for round in 0..p - 1 {
+        let send_c = ((rank + p - round % p) % p) as usize;
+        let recv_c = ((rank + p - 1 - round % p) % p) as usize;
+        f32s_to_scratch(&acc[erange(send_c)], &mut send_scratch);
+        let got = t.sendrecv_into(
+            Some(SendSpec {
+                to,
+                tag: send_c as u64,
+                data: &send_scratch,
+            }),
+            Some(from),
+            &mut recv_scratch,
+        )?;
+        // Expected length is the *element* chunk serialized (erange truncates
+        // the byte partition to whole f32s), not the raw byte-partition size.
+        check_frame(
+            rank,
+            "ring reduce-scatter",
+            got,
+            recv_scratch.len() as u64,
+            recv_c as u64,
+            (erange(recv_c).len() * 4) as u64,
+        )?;
+        combine_bytes(&mut acc[erange(recv_c)], &recv_scratch);
+    }
+    // Phase 2: allgather of the completed chunks. Rank r finished chunk
+    // (r + 1) mod p in the last reduce-scatter round; circulate from there.
+    for round in 0..p - 1 {
+        let send_c = ((rank + 1 + p - round % p) % p) as usize;
+        let recv_c = ((rank + p - round % p) % p) as usize;
+        f32s_to_scratch(&acc[erange(send_c)], &mut send_scratch);
+        let got = t.sendrecv_into(
+            Some(SendSpec {
+                to,
+                tag: send_c as u64,
+                data: &send_scratch,
+            }),
+            Some(from),
+            &mut recv_scratch,
+        )?;
+        check_frame(
+            rank,
+            "ring allgather",
+            got,
+            recv_scratch.len() as u64,
+            recv_c as u64,
+            (erange(recv_c).len() * 4) as u64,
+        )?;
+        for (d, c) in acc[erange(recv_c)].iter_mut().zip(recv_scratch.chunks_exact(4)) {
+            *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::thread::run_threads;
+    use std::time::Duration;
+
+    const TIMEOUT: Duration = Duration::from_secs(30);
+
+    fn payload(m: u64, seed: u64) -> Vec<u8> {
+        (0..m).map(|i| ((i * 131 + seed * 29 + 7) % 251) as u8).collect()
+    }
+
+    #[test]
+    fn binomial_bcast_delivers_all_roots() {
+        for p in [2u64, 3, 7, 8] {
+            for root in [0, p - 1] {
+                let m = 67 * p;
+                let d = payload(m, p);
+                let out = run_threads(p, TIMEOUT, |mut t| {
+                    let data = if t.rank() == root { Some(&d[..]) } else { None };
+                    bcast_binomial(&mut t, root, m, data)
+                })
+                .unwrap_or_else(|e| panic!("p={p} root={root}: {e}"));
+                for buf in &out {
+                    assert_eq!(buf, &d, "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_allgather_delivers_including_tiny_m() {
+        for (p, root, m) in [(2u64, 0u64, 501u64), (5, 3, 1009), (8, 1, 4096), (7, 2, 3)] {
+            let d = payload(m, p + root);
+            let out = run_threads(p, TIMEOUT, |mut t| {
+                let data = if t.rank() == root { Some(&d[..]) } else { None };
+                bcast_scatter_allgather(&mut t, root, m, data)
+            })
+            .unwrap_or_else(|e| panic!("p={p} root={root} m={m}: {e}"));
+            for buf in &out {
+                assert_eq!(buf, &d, "p={p} root={root} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_and_bruck_allgatherv_deliver_irregular() {
+        for p in [2u64, 3, 5, 8] {
+            // Irregular, including empty contributions.
+            let counts: Vec<u64> = (0..p).map(|j| (j % 3) * 41).collect();
+            let datas: Vec<Vec<u8>> = counts
+                .iter()
+                .enumerate()
+                .map(|(j, &c)| payload(c, j as u64))
+                .collect();
+            for ring in [true, false] {
+                let out = run_threads(p, TIMEOUT, |mut t| {
+                    let mine = &datas[t.rank() as usize];
+                    if ring {
+                        allgatherv_ring(&mut t, &counts, mine)
+                    } else {
+                        allgatherv_bruck(&mut t, &counts, mine)
+                    }
+                })
+                .unwrap_or_else(|e| panic!("p={p} ring={ring}: {e}"));
+                for all in &out {
+                    assert_eq!(all, &datas, "p={p} ring={ring}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_binomial_and_allreduce_ring_sum() {
+        for p in [2u64, 3, 6, 8] {
+            let elems = 4 * p as usize + 1;
+            let contribs: Vec<Vec<f32>> = (0..p)
+                .map(|r| (0..elems).map(|i| ((r * 37 + i as u64 * 11) % 97) as f32 / 7.0).collect())
+                .collect();
+            let mut want = vec![0f32; elems];
+            for c in &contribs {
+                for (w, v) in want.iter_mut().zip(c) {
+                    *w += v;
+                }
+            }
+            let red = run_threads(p, TIMEOUT, |mut t| {
+                let mine = &contribs[t.rank() as usize];
+                reduce_binomial(&mut t, 1 % p, mine)
+            })
+            .unwrap_or_else(|e| panic!("reduce p={p}: {e}"));
+            for (i, (&g, &w)) in red[(1 % p) as usize].iter().zip(&want).enumerate() {
+                assert!((g - w).abs() < 1e-3 * w.abs().max(1.0), "p={p} elem {i}: {g} vs {w}");
+            }
+            let ar = run_threads(p, TIMEOUT, |mut t| {
+                let mine = &contribs[t.rank() as usize];
+                allreduce_ring(&mut t, mine)
+            })
+            .unwrap_or_else(|e| panic!("allreduce p={p}: {e}"));
+            for r in 0..p as usize {
+                for (i, (&g, &w)) in ar[r].iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - w).abs() < 1e-3 * w.abs().max(1.0),
+                        "p={p} rank {r} elem {i}: {g} vs {w}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -11,10 +11,16 @@
 //!   [`crate::transport::Transport`], where each rank computes only its
 //!   own schedule — runnable on the simulator, on per-rank OS threads,
 //!   and over TCP, with byte-identical delivery (see
-//!   `rust/tests/transport.rs`).
+//!   `rust/tests/transport.rs`). [`generic_baselines`] ports the
+//!   classical baselines (binomial, scatter-allgather, ring, Bruck) to
+//!   the same SPMD form, and [`generic::Algorithm`] +
+//!   [`generic::bcast`]/[`generic::allgatherv`] dispatch between them
+//!   (with an `Auto` heuristic), so the paper's *comparison* runs on
+//!   real transports too (see `rust/tests/baselines.rs`).
 
 pub mod allgather;
 pub mod generic;
+pub mod generic_baselines;
 pub mod hierarchical;
 pub mod reduce;
 pub mod bcast;

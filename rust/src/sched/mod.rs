@@ -1,6 +1,37 @@
 //! Round-optimal n-block broadcast schedules — the paper's core
 //! contribution.
 //!
+//! ## Round structure
+//!
+//! Broadcasting `n` blocks over `p` processors proceeds in *rounds*; in
+//! each round a processor sends at most one block and receives at most
+//! one block (the one-ported, fully bidirectional model that
+//! [`crate::transport::Transport`] realizes). Rounds cycle through the
+//! `q = ⌈log₂p⌉` round-indices `k = 0, 1, …, q-1, 0, 1, …`; in
+//! round-index `k` processor `r` talks to its fixed circulant neighbors
+//! `r ± skip[k]`. A full broadcast takes `n - 1 + q` rounds — the
+//! round-optimal count, since the last block cannot leave the root before
+//! round `n` and then needs `q` rounds to reach everyone. The first `q`
+//! rounds are padded with *virtual* (negative-index) blocks so that every
+//! processor's schedule is a pure function of its relative rank
+//! (`BcastPlan` applies the shift and the final-block capping in closed
+//! form).
+//!
+//! ## Schedule invariants
+//!
+//! The per-processor receive schedule `recvschedule[k]` (block received in
+//! round-index `k`) and send schedule `sendschedule[k]` are computed in
+//! `O(log p)` time with **no communication**, and satisfy the four §2.1
+//! correctness conditions the [`verify`] module checks exhaustively:
+//! every processor receives every block exactly once; a block is sent
+//! only after it was received (or originates at the root); matching
+//! send/receive pairs name the same block (determinacy — which is why the
+//! transports never exchange metadata and the wire `tag` is only
+//! *asserted*); and the regular phase pattern repeats with period `q`.
+//! Theorem 1 then gives delivery in `n - 1 + q` rounds.
+//!
+//! ## Module map
+//!
 //! * [`skips`] — the circulant-graph communication pattern (Algorithm 3).
 //! * [`mod@baseblock`] — canonical skip decompositions (Algorithm 4, Lemma 1).
 //! * [`recv`] — `O(log p)` receive schedules (Algorithms 5 and 6).

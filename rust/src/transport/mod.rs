@@ -37,6 +37,8 @@
 //! additionally uses the global round structure to enforce one-portedness
 //! and to price each round at its maximum edge cost.
 
+#![warn(missing_docs)]
+
 pub mod sim;
 pub mod tcp;
 pub mod thread;
@@ -47,7 +49,9 @@ use std::fmt;
 /// index by convention of the collectives) plus the payload bytes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireMsg {
+    /// Collective-defined tag (block index by convention).
     pub tag: u64,
+    /// The payload bytes.
     pub data: Vec<u8>,
 }
 
@@ -180,6 +184,14 @@ pub trait Transport {
     /// warm-up no reallocation happens) and the sender's tag is returned.
     /// When `recv_from` is `None`, `recv_buf` is left untouched and the
     /// result is `Ok(None)`.
+    ///
+    /// The borrowed `send.data` is fully consumed before the call returns
+    /// — backends that hand the frame to helper machinery (the TCP
+    /// backend's persistent writer thread) must uphold an
+    /// *ack-before-return* invariant so the caller can immediately reuse
+    /// or drop its block storage. Send ∥ recv overlap within the call:
+    /// a full-duplex round whose payloads exceed any internal buffering
+    /// must not deadlock.
     fn sendrecv_into(
         &mut self,
         send: Option<SendSpec<'_>>,
@@ -207,6 +219,20 @@ pub trait Transport {
     /// pay setup latency. Default: no-op; the TCP backend pre-connects its
     /// `2⌈log₂p⌉` circulant neighbors.
     fn warm_up(&mut self) -> Result<(), TransportError> {
+        Ok(())
+    }
+
+    /// Hint that the backend may pre-establish links to exactly `peers`
+    /// (duplicates, the own rank and out-of-range entries are ignored) —
+    /// the non-circulant counterpart of [`Transport::warm_up`], used by
+    /// the baseline collectives whose neighborhoods (binomial tree, ring,
+    /// Bruck offsets) the circulant warm-up would not cover.
+    ///
+    /// Like every connection-setup path this must be called *collectively*
+    /// with symmetric peer sets: if rank `a` lists `b`, rank `b` must list
+    /// `a`, or the lazy TCP mesh's accept side waits for a dial that never
+    /// comes. Default: no-op.
+    fn warm_peers(&mut self, _peers: &[u64]) -> Result<(), TransportError> {
         Ok(())
     }
 
@@ -379,6 +405,20 @@ impl<T: Transport + ?Sized> Transport for GroupTransport<'_, T> {
             None => None,
         };
         self.inner.sendrecv_into(send, recv_from, recv_buf)
+    }
+
+    // `warm_up` keeps the trait's no-op default on purpose: the group's
+    // circulant neighborhood is *not* the parent transport's, so blanket
+    // warming would dial links the group schedule never uses.
+
+    fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
+        // Per the trait contract, out-of-range entries are ignored (not
+        // errors): resolve what maps into the group, drop the rest.
+        let resolved: Vec<u64> = peers
+            .iter()
+            .filter_map(|&g| self.members.get(g as usize).copied())
+            .collect();
+        self.inner.warm_peers(&resolved)
     }
 
     fn barrier(&mut self) -> Result<(), TransportError> {

@@ -269,23 +269,39 @@ impl TcpTransport {
         let mut peers: Vec<u64> = Vec::new();
         for k in 0..skips.q() {
             for peer in [skips.to_proc(self.rank, k), skips.from_proc(self.rank, k)] {
-                if peer != self.rank && !peers.contains(&peer) {
+                if !peers.contains(&peer) {
                     peers.push(peer);
                 }
             }
         }
+        self.warm_list(&peers)
+    }
+
+    /// Establish links to every listed peer not yet connected (duplicates,
+    /// the own rank and out-of-range entries are skipped; already-warm
+    /// links are free). Returns the number of distinct peers requested.
+    /// Must be called collectively with symmetric peer sets — see
+    /// [`Transport::warm_peers`] — and uses the same deadlock-free
+    /// dial-all-then-accept-all order as [`TcpTransport::warm_circulant`].
+    fn warm_list(&mut self, peers: &[u64]) -> Result<usize, TransportError> {
+        let mut wanted: Vec<u64> = Vec::new();
+        for &peer in peers {
+            if peer != self.rank && peer < self.p && !wanted.contains(&peer) {
+                wanted.push(peer);
+            }
+        }
         let deadline = Instant::now() + self.timeout;
-        for &peer in &peers {
+        for &peer in &wanted {
             if peer < self.rank {
                 self.dial(peer, deadline)?;
             }
         }
-        for &peer in &peers {
+        for &peer in &wanted {
             if peer > self.rank {
                 self.accept_until(peer, deadline)?;
             }
         }
-        Ok(peers.len())
+        Ok(wanted.len())
     }
 
     fn check_peer(&self, peer: u64) -> Result<(), TransportError> {
@@ -508,6 +524,10 @@ impl Transport for TcpTransport {
 
     fn warm_up(&mut self) -> Result<(), TransportError> {
         self.warm_circulant().map(|_| ())
+    }
+
+    fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
+        self.warm_list(peers).map(|_| ())
     }
 
     fn sendrecv_into(
