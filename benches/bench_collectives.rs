@@ -1,11 +1,14 @@
 //! Bench: end-to-end collective cost sweeps (the paper's Figures 1–3 in
-//! condensed form) plus simulator-engine wall-clock throughput.
+//! condensed form) plus simulator-engine wall-clock throughput — all
+//! through the unified rank-local path (the wrapper collectives dispatch
+//! the generic SPMD round loops over the lockstep `CostTransport`
+//! backend; cost-only rows use virtual payloads).
 //!
 //! `cargo bench --bench bench_collectives`
 
 use nblock_bcast::bench_support::{fmt_bytes, time_once};
 use nblock_bcast::collectives::{
-    allgather_block_count, allgatherv_circulant_cost, allgatherv_ring, bcast_binomial,
+    allgather_block_count, allgatherv_circulant, allgatherv_ring, bcast_binomial,
     bcast_block_count, bcast_circulant, bcast_scatter_allgather, AllgatherInput,
 };
 use nblock_bcast::sched::ceil_log2;
@@ -56,7 +59,7 @@ fn main() {
         let mut e1 = Engine::new(p, cost);
         let ring = allgatherv_ring(&mut e1, &input).unwrap().time_s;
         let mut e2 = Engine::new(p, cost);
-        let circ = allgatherv_circulant_cost(&mut e2, n, &counts).unwrap().time_s;
+        let circ = allgatherv_circulant(&mut e2, n, &input).unwrap().time_s;
         println!(
             "{:>10} {:>6} {:>13.6} {:>13.6} {:>8.1}",
             fmt_bytes(m),

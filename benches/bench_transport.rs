@@ -27,7 +27,10 @@
 //! `cargo bench --bench bench_transport -- --smoke`  # tiny p=8 grid for CI
 
 use nblock_bcast::bench_support::{fmt_bytes, fmt_time};
-use nblock_bcast::collectives::generic::{bcast, bcast_circulant_into, Algorithm};
+use nblock_bcast::collectives::generic::{bcast_circulant_into, Algorithm};
+use nblock_bcast::collectives::generic_baselines::{
+    bcast_binomial_into, bcast_scatter_allgather_into,
+};
 use nblock_bcast::simulator::CostModel;
 use nblock_bcast::transport::sim::run_sim;
 use nblock_bcast::transport::tcp::run_tcp;
@@ -81,11 +84,11 @@ fn payload(m: u64) -> Vec<u8> {
 /// then time `reps` broadcasts between barriers and report the wall time
 /// plus the process-wide payload-allocation delta over that window.
 ///
-/// The circulant algorithm runs through the zero-copy
-/// `bcast_circulant_into` path (pool and output reused — the shape whose
+/// Every algorithm runs through its zero-copy `_into` path (pool and
+/// output reused across calls), so the rows are allocation-comparable:
 /// steady-state payload allocations must be zero on the point-to-point
-/// backends); the baselines run through the owning `Algorithm` dispatch,
-/// whose per-call allocations are reported but not asserted.
+/// backends for the circulant *and* binomial broadcasts (asserted below);
+/// scatter-allgather's count is reported for the record.
 #[allow(clippy::too_many_arguments)]
 fn steady_state_bcast<T: Transport>(
     t: &mut T,
@@ -112,11 +115,15 @@ fn steady_state_bcast<T: Transport>(
         pool: &mut BufferPool,
         out: &mut Vec<u8>,
     ) -> Result<(), TransportError> {
-        if algo == Algorithm::Circulant {
-            bcast_circulant_into(t, root, n, m, data, pool, out)
-        } else {
-            *out = bcast(t, algo, root, n, m, data)?;
-            Ok(())
+        match algo {
+            Algorithm::Circulant => bcast_circulant_into(t, root, n, m, data, pool, out),
+            Algorithm::Binomial => bcast_binomial_into(t, root, m, data, out),
+            Algorithm::ScatterAllgather => {
+                bcast_scatter_allgather_into(t, root, m, data, pool, out)
+            }
+            other => Err(TransportError::Collective(format!(
+                "bench does not cover algorithm {other}"
+            ))),
         }
     }
     // One barrier per broadcast: without it the root (which never
@@ -301,18 +308,19 @@ fn main() {
             }
         }
     }
-    // Steady-state circulant rounds on the point-to-point backends must
-    // not touch the payload allocator: borrowed sends, pooled receives.
-    // (The baselines go through the owning dispatch API and legitimately
-    // allocate; their counts are reported above for the record.)
+    // Steady-state circulant AND binomial rounds on the point-to-point
+    // backends must not touch the payload allocator: borrowed sends,
+    // pooled/reused receives, through the `_into` paths. (The
+    // scatter-allgather rows are reported for the record; its `_into`
+    // variant is expected to be clean too but is not yet gated.)
     for row in rows
         .iter()
-        .filter(|r| r.backend != "sim" && r.algo == "circulant")
+        .filter(|r| r.backend != "sim" && (r.algo == "circulant" || r.algo == "binomial"))
     {
         assert_eq!(
             row.payload_allocs, 0,
-            "{} p={} n={} block={}: {} steady-state payload allocations",
-            row.backend, row.p, row.n, row.block_bytes, row.payload_allocs
+            "{} {} p={} n={} block={}: {} steady-state payload allocations",
+            row.backend, row.algo, row.p, row.n, row.block_bytes, row.payload_allocs
         );
     }
     let json = format!(

@@ -13,8 +13,7 @@
 
 use nblock_bcast::bench_support::{fmt_bytes, fmt_time};
 use nblock_bcast::collectives::{
-    allgather_block_count, allgatherv_circulant, allgatherv_circulant_cost, allgatherv_ring,
-    AllgatherInput,
+    allgather_block_count, allgatherv_circulant, allgatherv_ring, AllgatherInput,
 };
 use nblock_bcast::sched::ceil_log2;
 use nblock_bcast::simulator::{CostModel, Engine};
@@ -73,7 +72,7 @@ fn main() -> anyhow::Result<()> {
         let mut e1 = Engine::new(p, cost);
         let ring = allgatherv_ring(&mut e1, &input)?.time_s;
         let mut e2 = Engine::new(p, cost);
-        let circ = allgatherv_circulant_cost(&mut e2, n, &counts)?.time_s;
+        let circ = allgatherv_circulant(&mut e2, n, &input)?.time_s;
         println!(
             "{:>12} {:>10} {:>6} {:>12} {:>12} {:>8.1}",
             kind,

@@ -16,9 +16,28 @@ use crate::sched::{
 use crate::simulator::{CostModel, Engine};
 use anyhow::Result;
 
+/// The collective-driving ablations run the unified rank-local path (one
+/// OS thread per rank on the lockstep cost backend), so their `p` is
+/// capped at a thread-friendly scale; the schedule-construction ablations
+/// (`violations`, `cache`) are pure computation and keep the huge `p`.
+const MAX_COLLECTIVE_RANKS: u64 = 4096;
+
+fn clamp_collective_p(p: u64) -> u64 {
+    if p > MAX_COLLECTIVE_RANKS {
+        println!(
+            "(p = {p} clamped to {MAX_COLLECTIVE_RANKS} for the collective-driving ablation: \
+             the unified cost path runs one thread per rank)\n"
+        );
+        MAX_COLLECTIVE_RANKS
+    } else {
+        p
+    }
+}
+
 /// Broadcast time vs block count `n` (fixed m, p): the U-shaped tradeoff
 /// behind the paper's block-size heuristic.
 pub fn block_count_sensitivity(p: u64, m: u64) -> Result<()> {
+    let p = clamp_collective_p(p);
     let q = ceil_log2(p);
     let heuristic = bcast_block_count(m, q, 70.0);
     println!(
@@ -108,6 +127,7 @@ pub fn violation_cost(p: u64) -> Result<()> {
 
 /// Flat vs hierarchical broadcast across message sizes.
 pub fn hierarchy(p: u64, rpn: u64) -> Result<()> {
+    let p = clamp_collective_p(p);
     let q = ceil_log2(p);
     let cost = CostModel::cluster_36(rpn);
     println!(

@@ -8,10 +8,17 @@
 //! ring / Bruck / gather+bcast allgatherv); "new" is the paper's
 //! Algorithm 1 / Algorithm 2 with the §3 block-count heuristics (F = 70,
 //! G = 40).
+//!
+//! Every sweep runs the unified rank-local path: the wrapper collectives
+//! dispatch the generic SPMD round loops over the lockstep
+//! [`crate::transport::cost::CostTransport`] backend with virtual
+//! (size-only) payloads, so the modeled times come from exactly the code
+//! that moves real bytes on the thread/TCP backends (`rust/tests/golden.rs`
+//! pins the pre-refactor outputs).
 
 use crate::bench_support::fmt_bytes;
 use crate::collectives::{
-    allgather_block_count, allgatherv_circulant_cost, allgatherv_gather_bcast, allgatherv_ring,
+    allgather_block_count, allgatherv_circulant, allgatherv_gather_bcast, allgatherv_ring,
     bcast_binomial, bcast_block_count, bcast_circulant, bcast_scatter_allgather, AllgatherInput,
 };
 use crate::sched::ceil_log2;
@@ -116,7 +123,7 @@ fn allgather_row(
     let mut e2 = Engine::new(p, cost);
     let t_gb = allgatherv_gather_bcast(&mut e2, &input)?.time_s;
     let mut e3 = Engine::new(p, cost);
-    let t_new = allgatherv_circulant_cost(&mut e3, n, &counts)?.time_s;
+    let t_new = allgatherv_circulant(&mut e3, n, &input)?.time_s;
     Ok((n, t_ring, t_gb, t_new, t_ring.min(t_gb)))
 }
 

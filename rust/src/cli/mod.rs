@@ -86,12 +86,19 @@ Tools:
     both accept --transport {sim,thread,tcp}: run the generic SPMD
     collective (real payload, verified) over that backend instead of the
     cost-model comparison; with --transport they also accept --algo
-    {auto,circulant,binomial,scatter-allgather,ring,bruck} to pick the
-    algorithm (default circulant; auto resolves from p, n and size —
-    bcast supports circulant/binomial/scatter-allgather, allgatherv
-    supports circulant/ring/bruck)
+    {auto,circulant,binomial,scatter-allgather,ring,bruck,gather-bcast}
+    to pick the algorithm (default circulant; auto resolves from p, n,
+    size and the backend's α/β hint — bcast supports
+    circulant/binomial/scatter-allgather, allgatherv supports
+    circulant/ring/bruck/gather-bcast)
+  reduce --p P --elems E [--n N] [--root R]      run an n-block f32-sum
+                             reduction over a transport (--transport, --algo
+                             {auto,circulant,binomial}; verified at the root)
   allreduce --p P --elems E  compare allreduce algorithms (circulant dual,
-                             binomial, ring reduce-scatter+allgather)
+                             binomial, ring reduce-scatter+allgather);
+                             with --transport (and --algo
+                             {auto,circulant,ring}) runs the generic SPMD
+                             allreduce on that backend, verified at all ranks
   threaded --p P --n N --m BYTES   one-OS-thread-per-rank broadcast
   ablation [--which n|violations|hier|cache|all] [--p P] [--m BYTES]
   e2e [--p P] [--root R] [--artifacts DIR]       PJRT end-to-end broadcast
@@ -163,7 +170,34 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 args.get("type", "regular".to_string()),
             ),
         },
-        "allreduce" => tools::allreduce(args.get("p", 64), args.get("elems", 1 << 16)),
+        "reduce" => match transport_arg(&args)? {
+            Some(backend) => tools::reduce_transport(
+                args.get("p", 16),
+                args.get("elems", 1 << 14),
+                args.get("n", 0),
+                args.get("root", 0),
+                backend.as_str(),
+                &args.get("algo", "circulant".to_string()),
+            ),
+            None => tools::reduce_transport(
+                args.get("p", 16),
+                args.get("elems", 1 << 14),
+                args.get("n", 0),
+                args.get("root", 0),
+                "sim",
+                &args.get("algo", "circulant".to_string()),
+            ),
+        },
+        "allreduce" => match transport_arg(&args)? {
+            Some(backend) => tools::allreduce_transport(
+                args.get("p", 16),
+                args.get("elems", 1 << 14),
+                args.get("n", 0),
+                backend.as_str(),
+                &args.get("algo", "circulant".to_string()),
+            ),
+            None => tools::allreduce(args.get("p", 64), args.get("elems", 1 << 16)),
+        },
         "threaded" => tools::threaded(args.get("p", 16), args.get("n", 8), args.get("m", 1 << 16)),
         "ablation" => ablation::run(
             &args.get("which", "all".to_string()),

@@ -276,7 +276,7 @@ where
     use crate::transport::{sim::run_sim, tcp::run_tcp, thread::run_threads};
     Ok(match backend {
         "sim" => {
-            let (res, stats) = run_sim(p, CostModel::flat_default(), |t| spmd(Box::new(t)))
+            let (res, stats) = run_sim(p, sim_cost_model(), |t| spmd(Box::new(t)))
                 .map_err(|e| anyhow::anyhow!("{e}"))?;
             (res, Some(stats))
         }
@@ -290,6 +290,27 @@ where
         ),
         other => bail!("unknown transport `{other}` (sim|thread|tcp)"),
     })
+}
+
+/// The cost model the `--transport sim` backend runs under — the single
+/// definition shared by [`run_over_backend`] and [`backend_hint`], so the
+/// displayed `Auto` resolution can never drift from the model the run
+/// actually uses.
+fn sim_cost_model() -> CostModel {
+    CostModel::flat_default()
+}
+
+/// The [`crate::transport::CostHint`] the chosen backend will report —
+/// used to display the same `Auto` resolution the dispatch will make (the
+/// sim backend derives its latency/bandwidth crossover from
+/// [`sim_cost_model`]; the point-to-point backends use the trait's
+/// fallback hint).
+fn backend_hint(backend: &str) -> crate::transport::CostHint {
+    if backend == "sim" {
+        crate::transport::CostHint::from_model(&sim_cost_model())
+    } else {
+        crate::transport::CostHint::DEFAULT
+    }
 }
 
 /// Run one data-mode collective over a chosen transport backend
@@ -315,7 +336,8 @@ pub fn bcast_transport(
         bail!("root must be < p");
     }
     let requested: Algorithm = algo.parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    let resolved = requested.resolve_bcast(p, n, m);
+    let cutoff = backend_hint(backend).latency_cutoff_bytes();
+    let resolved = requested.resolve_bcast_with(cutoff, p, n, m);
     let auto_note = if requested == Algorithm::Auto { " (auto)" } else { "" };
     let payload: Vec<u8> = (0..m).map(|i| ((i * 131) % 251) as u8).collect();
     println!(
@@ -372,7 +394,8 @@ pub fn allgatherv_transport(
     let counts = problem_counts(kind, p, m)?;
     let total: u64 = counts.iter().sum();
     let requested: Algorithm = algo.parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    let resolved = requested.resolve_allgatherv(p, n, total);
+    let cutoff = backend_hint(backend).latency_cutoff_bytes();
+    let resolved = requested.resolve_allgatherv_with(cutoff, p, n, total);
     let auto_note = if requested == Algorithm::Auto { " (auto)" } else { "" };
     let datas: Vec<Vec<u8>> = counts
         .iter()
@@ -397,6 +420,133 @@ pub fn allgatherv_transport(
     }
     println!("  delivery   : all {p} contributions byte-exact at all {p} ranks");
     if let Some(rounds) = resolved.allgatherv_round_count(p, n) {
+        println!("  rounds     : {rounds}");
+    }
+    println!("  wall time  : {}", fmt_time(wall));
+    if let Some(stats) = sim_stats {
+        println!("  sim time   : {}", fmt_time(stats.time_s));
+        println!("  wire bytes : {}", fmt_bytes(stats.bytes_on_wire));
+    }
+    Ok(())
+}
+
+/// Deterministic per-rank f32 contributions shared by the reduce /
+/// allreduce transport runs and their serial reference.
+fn reduce_contribs(p: u64, elems: usize) -> Vec<Vec<f32>> {
+    (0..p)
+        .map(|r| {
+            (0..elems)
+                .map(|i| ((r * 37 + i as u64 * 11) % 97) as f32 / 7.0)
+                .collect()
+        })
+        .collect()
+}
+
+fn serial_sum(contribs: &[Vec<f32>]) -> Vec<f32> {
+    let mut want = vec![0f32; contribs[0].len()];
+    for c in contribs {
+        for (w, v) in want.iter_mut().zip(c) {
+            *w += v;
+        }
+    }
+    want
+}
+
+fn check_sum(label: &str, got: &[f32], want: &[f32]) -> Result<()> {
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
+            bail!("{label}: element {i} is {g}, serial sum says {w}");
+        }
+    }
+    Ok(())
+}
+
+/// `--transport`/`--algo` counterpart for the n-block reduction: every
+/// rank contributes a deterministic f32 vector, the root's result is
+/// verified against the serial sum.
+pub fn reduce_transport(
+    p: u64,
+    elems: usize,
+    n: usize,
+    root: u64,
+    backend: &str,
+    algo: &str,
+) -> Result<()> {
+    use crate::collectives::generic::Algorithm;
+    use crate::transport::Transport;
+    if p == 0 {
+        bail!("need at least one rank");
+    }
+    if root >= p {
+        bail!("root must be < p");
+    }
+    let q = ceil_log2(p);
+    let n = if n == 0 { (elems / 4096).clamp(1, 256) } else { n };
+    let requested: Algorithm = algo.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let cutoff = backend_hint(backend).latency_cutoff_bytes();
+    let resolved = requested.resolve_reduce_with(cutoff, p, n, (elems * 4) as u64);
+    let auto_note = if requested == Algorithm::Auto { " (auto)" } else { "" };
+    let contribs = reduce_contribs(p, elems);
+    println!(
+        "reduce (f32 sum) of {elems} elements to root {root} over p = {p} (q = {q}), \
+         n = {n} blocks, transport `{backend}`, algorithm `{resolved}`{auto_note}"
+    );
+    let t0 = std::time::Instant::now();
+    let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+        let mine = &contribs[t.rank() as usize];
+        generic::reduce(t.as_mut(), resolved, root, n, mine)
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    let want = serial_sum(&contribs);
+    check_sum("root accumulator", &results[root as usize], &want)?;
+    println!("  result     : verified against the serial sum at the root");
+    if let Some(rounds) = resolved.reduce_round_count(p, n) {
+        println!("  rounds     : {rounds}");
+    }
+    println!("  wall time  : {}", fmt_time(wall));
+    if let Some(stats) = sim_stats {
+        println!("  sim time   : {}", fmt_time(stats.time_s));
+        println!("  wire bytes : {}", fmt_bytes(stats.bytes_on_wire));
+    }
+    Ok(())
+}
+
+/// `--transport`/`--algo` counterpart for the allreduce: every rank's
+/// result is verified against the serial sum.
+pub fn allreduce_transport(
+    p: u64,
+    elems: usize,
+    n: usize,
+    backend: &str,
+    algo: &str,
+) -> Result<()> {
+    use crate::collectives::generic::Algorithm;
+    use crate::transport::Transport;
+    if p == 0 {
+        bail!("need at least one rank");
+    }
+    let q = ceil_log2(p);
+    let n = if n == 0 { (elems / 4096).clamp(1, 256) } else { n };
+    let requested: Algorithm = algo.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let resolved = requested.resolve_allreduce(p, n, (elems * 4) as u64);
+    let auto_note = if requested == Algorithm::Auto { " (auto)" } else { "" };
+    let contribs = reduce_contribs(p, elems);
+    println!(
+        "allreduce (f32 sum) of {elems} elements over p = {p} (q = {q}), n = {n} blocks, \
+         transport `{backend}`, algorithm `{resolved}`{auto_note}"
+    );
+    let t0 = std::time::Instant::now();
+    let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+        let mine = &contribs[t.rank() as usize];
+        generic::allreduce(t.as_mut(), resolved, n, mine)
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    let want = serial_sum(&contribs);
+    for (r, got) in results.iter().enumerate() {
+        check_sum(&format!("rank {r}"), got, &want)?;
+    }
+    println!("  result     : verified against the serial sum at all {p} ranks");
+    if let Some(rounds) = resolved.allreduce_round_count(p, n) {
         println!("  rounds     : {rounds}");
     }
     println!("  wall time  : {}", fmt_time(wall));

@@ -1,36 +1,35 @@
-//! All-to-all broadcast (allgatherv) collectives over the simulated machine.
+//! All-to-all broadcast (allgatherv) collectives over the simulated
+//! machine — Engine-compatible wrappers around the rank-local SPMD
+//! implementations.
 //!
-//! * [`allgatherv_circulant`] — the paper's Algorithm 2: `p` simultaneous
-//!   n-block broadcasts on the same circulant pattern, with per-round
-//!   packing/unpacking of one block per root. Handles fully irregular
-//!   inputs (each root `j` contributes `counts[j]` bytes split into `n`
-//!   blocks), including degenerate ones, in `n-1+⌈log₂p⌉` rounds.
-//! * [`allgatherv_ring`] — the classical ring: `p-1` rounds, each rank
-//!   forwards the chunk received last round. Degenerates badly when one
-//!   rank holds all the data (the big chunk crosses every edge one round
-//!   at a time) — the effect Figure 2 of the paper shows for the native
-//!   library.
-//! * [`allgatherv_bruck`] — the Bruck/dissemination allgather:
-//!   `⌈log₂p⌉` rounds with doubling chunk sets.
+//! * [`allgatherv_circulant`] — the paper's Algorithm 2
+//!   ([`crate::collectives::generic::allgatherv_circulant`]), round-optimal
+//!   `n-1+⌈log₂p⌉` rounds on fully irregular inputs;
+//! * [`allgatherv_ring`] — the classical ring (`p-1` rounds; degenerates
+//!   badly when one rank holds all the data — the Figure 2 effect);
+//! * [`allgatherv_bruck`] — Bruck/dissemination (`⌈log₂p⌉` rounds);
 //! * [`allgatherv_gather_bcast`] — gather-to-root + binomial broadcast of
-//!   the concatenation (another degenerate-prone native pattern).
+//!   the concatenation (`2⌈log₂p⌉` rounds, another degenerate-prone
+//!   native pattern).
 //!
-//! All verify byte-exact delivery of every root's contribution to every
-//! rank when payload data is provided.
+//! Since the one-core refactor these functions contain **no round loops of
+//! their own**: each dispatches the generic collective over the lockstep
+//! [`crate::transport::cost::CostTransport`] backend — real bytes
+//! (verified at every rank) when `input.data` is `Some`, size-only virtual
+//! blocks otherwise — and folds the accounting back into the caller's
+//! [`Engine`].
+//!
+//! The pre-refactor `allgatherv_circulant_cost` uniform-block
+//! approximation is gone: cost-only sweeps now run the *exact* Algorithm-2
+//! round loop in virtual mode, so modeled bytes/times equal the data
+//! path's for every input (they previously only agreed when all counts
+//! divided `n`).
 
 use super::bcast::Outcome;
-use super::blocks::BlockPartition;
-use crate::sched::{recv_schedule_into, Scratch, Skips};
-use crate::simulator::{Engine, Msg, SimError, Stats};
-
-fn outcome(before: Stats, after: Stats) -> Outcome {
-    let d = after - before;
-    Outcome {
-        rounds: d.rounds,
-        time_s: d.time_s,
-        bytes_on_wire: d.bytes_on_wire,
-    }
-}
+use super::{generic, generic_baselines, run_unified};
+use crate::simulator::{Engine, SimError};
+use crate::transport::cost::CostTransport;
+use crate::transport::{Transport, TransportError};
 
 fn cerr(msg: String) -> SimError {
     SimError::Collective(msg)
@@ -39,7 +38,10 @@ fn cerr(msg: String) -> SimError {
 /// Per-rank input for the irregular allgatherv: `counts[j]` bytes
 /// contributed by rank `j`; in data mode, `data[j]` holds those bytes.
 pub struct AllgatherInput<'a> {
+    /// Per-root contribution sizes in bytes (`counts.len() == p`).
     pub counts: &'a [u64],
+    /// The contributions themselves (data mode), or `None` for a
+    /// virtual (size-only) cost run.
     pub data: Option<&'a [Vec<u8>]>,
 }
 
@@ -69,30 +71,33 @@ impl AllgatherInput<'_> {
     }
 }
 
-/// Verify final buffers against the inputs (data mode).
-fn verify_buffers(
-    p: u64,
-    parts: &[BlockPartition],
+/// Run one allgatherv algorithm over the unified cost path: data mode
+/// verifies every rank's full result set against the inputs.
+fn run_allgatherv<F, V>(
+    eng: &mut Engine,
     input: &AllgatherInput,
-    bufs: &[Vec<Vec<Option<Vec<u8>>>>],
-) -> Result<(), SimError> {
-    let data = match input.data {
-        Some(d) => d,
-        None => return Ok(()),
-    };
-    for r in 0..p as usize {
-        for j in 0..p as usize {
-            for b in 0..parts[j].n {
-                let got = bufs[r][j][b]
-                    .as_deref()
-                    .ok_or_else(|| cerr(format!("rank {r}: missing root {j} block {b}")))?;
-                if got != &data[j][parts[j].range(b)] {
-                    return Err(cerr(format!("rank {r}: root {j} block {b} corrupted")));
-                }
+    real: F,
+    virt: V,
+) -> Result<Outcome, SimError>
+where
+    F: Fn(&mut CostTransport, &[u8]) -> Result<Vec<Vec<u8>>, TransportError> + Sync,
+    V: Fn(&mut CostTransport) -> Result<(), TransportError> + Sync,
+{
+    input.validate(eng.p())?;
+    let (_, out) = run_unified(eng, |mut t| match input.data {
+        Some(data) => {
+            let rank = t.rank();
+            let got = real(&mut t, &data[rank as usize])?;
+            if got.as_slice() != data {
+                return Err(TransportError::Collective(format!(
+                    "rank {rank}: allgatherv delivery differs from the reference"
+                )));
             }
+            Ok(())
         }
-    }
-    Ok(())
+        None => virt(&mut t),
+    })?;
+    Ok(out)
 }
 
 /// The paper's Algorithm 2: irregular all-to-all broadcast in the
@@ -103,320 +108,34 @@ pub fn allgatherv_circulant(
     n: usize,
     input: &AllgatherInput,
 ) -> Result<Outcome, SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    input.validate(p)?;
-    if p == 1 {
-        return Ok(outcome(before, eng.stats()));
-    }
-    let skips = Skips::new(p);
-    let q = skips.q();
-    let parts: Vec<BlockPartition> = input
-        .counts
-        .iter()
-        .map(|&m| BlockPartition::new(m, n))
-        .collect();
-    // Only p distinct receive schedules exist globally: rank r's schedule
-    // for root j is the schedule of relative rank (r - j) mod p. Computing
-    // them once here is exactly the per-rank O(p log p) precomputation of
-    // Algorithm 2, shared across ranks because the simulator is one
-    // process. sendblocks[j][k] of rank r = recv_all[(r - j + skip[k]) % p][k].
-    let mut recv_all = vec![vec![0i64; q]; p as usize];
-    let mut scratch = Scratch::new();
-    for rel in 0..p {
-        recv_schedule_into(&skips, rel, &mut scratch, &mut recv_all[rel as usize]);
-    }
-    let x = (q - (n - 1 + q) % q) % q;
-    // concrete block for round i given raw relative schedule entry.
-    let concrete = |raw: i64, i: usize, k: usize| -> Option<usize> {
-        let v = raw + (i - k) as i64 - x as i64;
-        if v < 0 {
-            None
-        } else {
-            Some((v as usize).min(n - 1))
-        }
-    };
-    // bufs[r][j][b] (data mode).
-    let mut bufs: Vec<Vec<Vec<Option<Vec<u8>>>>> = if input.data.is_some() {
-        (0..p as usize)
-            .map(|_| (0..p as usize).map(|j| vec![None; parts[j].n]).collect())
-            .collect()
-    } else {
-        Vec::new()
-    };
-    if let Some(data) = input.data {
-        for r in 0..p as usize {
-            for b in 0..n {
-                bufs[r][r][b] = Some(data[r][parts[r].range(b)].to_vec());
-            }
-        }
-    }
-    for i in x..(n + q - 1 + x) {
-        let k = i % q;
-        let mut msgs = Vec::with_capacity(p as usize);
-        for r in 0..p {
-            let to = skips.to_proc(r, k);
-            // Pack one block per root j != to.
-            let mut bytes = 0u64;
-            let mut payload: Option<Vec<u8>> = input.data.map(|_| Vec::new());
-            for j in 0..p {
-                if j == to {
-                    continue; // the to-processor is root for j: already has it
-                }
-                let rel = (r + p - j + skips.skip(k)) % p;
-                let raw = recv_all[rel as usize][k];
-                if let Some(b) = concrete(raw, i, k) {
-                    let sz = parts[j as usize].size(b);
-                    bytes += sz;
-                    if let Some(pl) = payload.as_mut() {
-                        let blk = bufs[r as usize][j as usize][b].as_deref().ok_or_else(|| {
-                            cerr(format!(
-                                "rank {r} round {i}: sends root {j} block {b} before receiving it"
-                            ))
-                        })?;
-                        pl.extend_from_slice(blk);
-                    }
-                }
-            }
-            msgs.push(Msg {
-                from: r,
-                to,
-                bytes,
-                tag: k as u64,
-                data: payload,
-            });
-        }
-        let inbox = eng.exchange(msgs)?;
-        // Unpack: rank r receives from f = r - skip[k]; one block per root
-        // j != r, scheduled by its own receive schedules.
-        for r in 0..p {
-            let msg = inbox[r as usize]
-                .as_ref()
-                .ok_or_else(|| cerr(format!("rank {r} round {i}: no message")))?;
-            let mut off = 0usize;
-            let mut bytes = 0u64;
-            for j in 0..p {
-                if j == r {
-                    continue; // own contribution never received
-                }
-                let rel = (r + p - j) % p;
-                let raw = recv_all[rel as usize][k];
-                if let Some(b) = concrete(raw, i, k) {
-                    let sz = parts[j as usize].size(b) as usize;
-                    bytes += sz as u64;
-                    if let Some(d) = &msg.data {
-                        if off + sz > d.len() {
-                            return Err(cerr(format!(
-                                "rank {r} round {i}: pack/unpack misalignment"
-                            )));
-                        }
-                        bufs[r as usize][j as usize][b] = Some(d[off..off + sz].to_vec());
-                        off += sz;
-                    }
-                }
-            }
-            if bytes != msg.bytes {
-                return Err(cerr(format!(
-                    "rank {r} round {i}: expected {bytes} bytes, wire carried {}",
-                    msg.bytes
-                )));
-            }
-        }
-    }
-    verify_buffers(p, &parts, input, &bufs)?;
-    Ok(outcome(before, eng.stats()))
-}
-
-/// Cost-only fast path for [`allgatherv_circulant`] at large `p`/`m`.
-///
-/// Uses one uniform block size `⌈m_j/n⌉` per root (the paper's "roughly
-/// equal" blocks) so a round's per-rank message size decomposes as
-/// `total − sz[to] − Σ_{missing rel} sz[j(r,rel)]`, making the whole sweep
-/// `O(p·rounds + p·q)` instead of `O(p²·rounds)`. Timing and byte
-/// accounting go through the same [`Engine`] cost model; message payloads
-/// and the one-ported checks are exercised by the exact
-/// [`allgatherv_circulant`] (tested equal on small instances).
-pub fn allgatherv_circulant_cost(
-    eng: &mut Engine,
-    n: usize,
-    counts: &[u64],
-) -> Result<Outcome, SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    if counts.len() as u64 != p {
-        return Err(cerr(format!("counts length {} != p {p}", counts.len())));
-    }
-    if p == 1 {
-        return Ok(outcome(before, eng.stats()));
-    }
-    let skips = Skips::new(p);
-    let q = skips.q();
-    let sz: Vec<u64> = counts.iter().map(|&m| m.div_ceil(n as u64)).collect();
-    let total: u64 = sz.iter().sum();
-    let mut recv_all = vec![vec![0i64; q]; p as usize];
-    let mut scratch = Scratch::new();
-    for rel in 0..p {
-        recv_schedule_into(&skips, rel, &mut scratch, &mut recv_all[rel as usize]);
-    }
-    let x = (q - (n - 1 + q) % q) % q;
-    let model = eng.cost_model();
-    let mut missing: Vec<u64> = Vec::with_capacity(p as usize);
-    for i in x..(n + q - 1 + x) {
-        let k = i % q;
-        let shift = (i - k) as i64 - x as i64;
-        // Relative ranks whose scheduled block this round is virtual.
-        missing.clear();
-        for rel in 0..p {
-            if recv_all[rel as usize][k] + shift < 0 {
-                missing.push(rel);
-            }
-        }
-        let skipv = skips.skip(k);
-        let mut round_time = 0.0f64;
-        let mut round_bytes = 0u64;
-        for r in 0..p {
-            let to = skips.to_proc(r, k);
-            let mut bytes = total - sz[to as usize];
-            for &rel in &missing {
-                let j = (r + skipv + p - rel) % p;
-                if j != to {
-                    bytes -= sz[j as usize];
-                }
-            }
-            round_bytes += bytes;
-            round_time = round_time.max(model.edge_cost(r, to, bytes));
-        }
-        eng.account_round(round_time, round_bytes);
-    }
-    Ok(outcome(before, eng.stats()))
+    run_allgatherv(
+        eng,
+        input,
+        |t, mine| generic::allgatherv_circulant(t, n, input.counts, mine),
+        |t| generic::allgatherv_circulant_virtual(t, n, input.counts),
+    )
 }
 
 /// Classical ring allgatherv: `p-1` rounds; in round `t` rank `r` forwards
 /// chunk `(r - t) mod p` to `r + 1`.
 pub fn allgatherv_ring(eng: &mut Engine, input: &AllgatherInput) -> Result<Outcome, SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    input.validate(p)?;
-    if p == 1 {
-        return Ok(outcome(before, eng.stats()));
-    }
-    let mut have: Vec<Vec<Option<Vec<u8>>>> = (0..p as usize)
-        .map(|r| {
-            let mut v = vec![None; p as usize];
-            if let Some(d) = input.data {
-                v[r] = Some(d[r].clone());
-            }
-            v
-        })
-        .collect();
-    for t in 0..p - 1 {
-        let mut msgs = Vec::with_capacity(p as usize);
-        for r in 0..p {
-            let c = (r + p - t % p) % p;
-            let to = (r + 1) % p;
-            msgs.push(Msg {
-                from: r,
-                to,
-                bytes: input.counts[c as usize],
-                tag: c,
-                data: input.data.map(|_| {
-                    have[r as usize][c as usize]
-                        .clone()
-                        .expect("ring invariant: chunk present")
-                }),
-            });
-        }
-        let inbox = eng.exchange(msgs)?;
-        for r in 0..p {
-            if let Some(msg) = &inbox[r as usize] {
-                if input.data.is_some() {
-                    have[r as usize][msg.tag as usize] = msg.data.clone();
-                }
-            }
-        }
-    }
-    if let Some(data) = input.data {
-        for r in 0..p as usize {
-            for j in 0..p as usize {
-                if have[r][j].as_deref() != Some(&data[j]) {
-                    return Err(cerr(format!("ring: rank {r} wrong chunk {j}")));
-                }
-            }
-        }
-    }
-    Ok(outcome(before, eng.stats()))
+    run_allgatherv(
+        eng,
+        input,
+        |t, mine| generic_baselines::allgatherv_ring(t, input.counts, mine),
+        |t| generic_baselines::allgatherv_ring_virtual(t, input.counts),
+    )
 }
 
 /// Bruck/dissemination allgatherv: `⌈log₂p⌉` rounds with doubling chunk
 /// sets; rank `r` holds chunks `r..r+h` (mod p) after each step.
 pub fn allgatherv_bruck(eng: &mut Engine, input: &AllgatherInput) -> Result<Outcome, SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    input.validate(p)?;
-    if p == 1 {
-        return Ok(outcome(before, eng.stats()));
-    }
-    let mut have: Vec<Vec<Option<Vec<u8>>>> = (0..p as usize)
-        .map(|r| {
-            let mut v = vec![None; p as usize];
-            if let Some(d) = input.data {
-                v[r] = Some(d[r].clone());
-            }
-            v
-        })
-        .collect();
-    let mut h = 1u64;
-    while h < p {
-        let cnt = h.min(p - h);
-        let mut msgs = Vec::with_capacity(p as usize);
-        for r in 0..p {
-            let to = (r + p - h) % p;
-            let bytes: u64 = (0..cnt)
-                .map(|i| input.counts[((r + i) % p) as usize])
-                .sum();
-            let payload = input.data.map(|_| {
-                let mut v = Vec::with_capacity(bytes as usize);
-                for i in 0..cnt {
-                    let c = ((r + i) % p) as usize;
-                    v.extend_from_slice(have[r as usize][c].as_deref().unwrap());
-                }
-                v
-            });
-            msgs.push(Msg {
-                from: r,
-                to,
-                bytes,
-                tag: h,
-                data: payload,
-            });
-        }
-        let inbox = eng.exchange(msgs)?;
-        for r in 0..p {
-            if let Some(msg) = &inbox[r as usize] {
-                if let Some(d) = &msg.data {
-                    // Sender was (r + h) mod p; its chunks start at r + h.
-                    let mut off = 0usize;
-                    for i in 0..cnt {
-                        let c = ((r + h + i) % p) as usize;
-                        let sz = input.counts[c] as usize;
-                        have[r as usize][c] = Some(d[off..off + sz].to_vec());
-                        off += sz;
-                    }
-                }
-            }
-        }
-        h += cnt;
-    }
-    if let Some(data) = input.data {
-        for r in 0..p as usize {
-            for j in 0..p as usize {
-                if have[r][j].as_deref() != Some(&data[j]) {
-                    return Err(cerr(format!("bruck: rank {r} wrong chunk {j}")));
-                }
-            }
-        }
-    }
-    Ok(outcome(before, eng.stats()))
+    run_allgatherv(
+        eng,
+        input,
+        |t, mine| generic_baselines::allgatherv_bruck(t, input.counts, mine),
+        |t| generic_baselines::allgatherv_bruck_virtual(t, input.counts),
+    )
 }
 
 /// Gather-to-root then binomial broadcast of the concatenation — the
@@ -425,74 +144,12 @@ pub fn allgatherv_gather_bcast(
     eng: &mut Engine,
     input: &AllgatherInput,
 ) -> Result<Outcome, SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    input.validate(p)?;
-    if p == 1 {
-        return Ok(outcome(before, eng.stats()));
-    }
-    let q = crate::sched::ceil_log2(p);
-    // Binomial gather: round k, ranks r with r mod 2^{k+1} == 2^k send
-    // their accumulated range [r, min(r + 2^k, p)) to r - 2^k.
-    let mut held: Vec<std::ops::Range<u64>> = (0..p).map(|r| r..r + 1).collect();
-    let mut store: Vec<Vec<Option<Vec<u8>>>> = (0..p as usize)
-        .map(|r| {
-            let mut v = vec![None; p as usize];
-            if let Some(d) = input.data {
-                v[r] = Some(d[r].clone());
-            }
-            v
-        })
-        .collect();
-    for k in 0..q {
-        let step = 1u64 << k;
-        let mut msgs = Vec::new();
-        let mut moves: Vec<(u64, u64)> = Vec::new();
-        for r in 0..p {
-            if r % (step * 2) == step {
-                let to = r - step;
-                let range = held[r as usize].clone();
-                let bytes: u64 = range.clone().map(|c| input.counts[c as usize]).sum();
-                let payload = input.data.map(|_| {
-                    let mut v = Vec::with_capacity(bytes as usize);
-                    for c in range.clone() {
-                        v.extend_from_slice(store[r as usize][c as usize].as_deref().unwrap());
-                    }
-                    v
-                });
-                msgs.push(Msg {
-                    from: r,
-                    to,
-                    bytes,
-                    tag: range.start,
-                    data: payload,
-                });
-                moves.push((r, to));
-            }
-        }
-        eng.exchange(msgs)?;
-        for (from, to) in moves {
-            let range = held[from as usize].clone();
-            held[to as usize] = held[to as usize].start..range.end;
-            if input.data.is_some() {
-                for c in range {
-                    store[to as usize][c as usize] = store[from as usize][c as usize].take();
-                }
-            }
-        }
-    }
-    // Binomial broadcast of the concatenated buffer.
-    let total: u64 = input.counts.iter().sum();
-    let concat: Option<Vec<u8>> = input.data.map(|d| {
-        let mut v = Vec::with_capacity(total as usize);
-        for dj in d {
-            v.extend_from_slice(dj);
-        }
-        v
-    });
-    let out = super::bcast::bcast_binomial(eng, 0, total, concat.as_deref())?;
-    let _ = out;
-    Ok(outcome(before, eng.stats()))
+    run_allgatherv(
+        eng,
+        input,
+        |t, mine| generic_baselines::allgatherv_gather_bcast(t, input.counts, mine),
+        |t| generic_baselines::allgatherv_gather_bcast_virtual(t, input.counts),
+    )
 }
 
 #[cfg(test)]
@@ -585,28 +242,34 @@ mod tests {
     }
 
     #[test]
-    fn cost_only_matches_exact_when_divisible() {
-        // With m_j divisible by n the uniform-block approximation is exact,
-        // so rounds, bytes and simulated time must agree with the
-        // data-mode collective.
-        for p in [3u64, 8, 16, 17, 33] {
-            for n in [1usize, 2, 4, 8] {
-                let counts: Vec<u64> = (0..p).map(|j| (j % 3) * 8 * n as u64).collect();
-                let input = AllgatherInput {
+    fn virtual_mode_matches_data_mode_cost() {
+        // The virtual (size-only) path must account exactly what the data
+        // path moves — same rounds, bytes and simulated time, for every
+        // input shape (the old uniform-block approximation only agreed
+        // when all counts divided n).
+        for p in [3u64, 8, 17] {
+            for n in [1usize, 2, 5, 7] {
+                let counts: Vec<u64> = (0..p).map(|j| (j % 3) * 101 + 13).collect();
+                let (counts, data) = mk_input(&counts);
+                let with_data = AllgatherInput {
+                    counts: &counts,
+                    data: Some(&data),
+                };
+                let size_only = AllgatherInput {
                     counts: &counts,
                     data: None,
                 };
                 let mut e1 = eng(p);
-                let exact = allgatherv_circulant(&mut e1, n, &input).unwrap();
+                let real = allgatherv_circulant(&mut e1, n, &with_data).unwrap();
                 let mut e2 = eng(p);
-                let fast = allgatherv_circulant_cost(&mut e2, n, &counts).unwrap();
-                assert_eq!(exact.rounds, fast.rounds, "p={p} n={n}");
-                assert_eq!(exact.bytes_on_wire, fast.bytes_on_wire, "p={p} n={n}");
+                let virt = allgatherv_circulant(&mut e2, n, &size_only).unwrap();
+                assert_eq!(real.rounds, virt.rounds, "p={p} n={n}");
+                assert_eq!(real.bytes_on_wire, virt.bytes_on_wire, "p={p} n={n}");
                 assert!(
-                    (exact.time_s - fast.time_s).abs() < 1e-12,
+                    (real.time_s - virt.time_s).abs() < 1e-12,
                     "p={p} n={n}: {} vs {}",
-                    exact.time_s,
-                    fast.time_s
+                    real.time_s,
+                    virt.time_s
                 );
             }
         }

@@ -1,20 +1,25 @@
-//! Broadcast collectives over the simulated machine.
+//! Broadcast collectives over the simulated machine — Engine-compatible
+//! wrappers around the rank-local SPMD implementations.
 //!
-//! * [`bcast_circulant`] — the paper's Algorithm 1: round-optimal n-block
-//!   broadcast on the `⌈log₂p⌉`-regular circulant graph, driven entirely by
-//!   the O(log p) receive/send schedules (no block metadata is ever
-//!   communicated — the `tag` field is used only to *assert* determinacy).
-//! * [`bcast_binomial`] — the classical binomial tree (OpenMPI's choice for
-//!   small messages): `⌈log₂p⌉` rounds, whole message per edge.
-//! * [`bcast_scatter_allgather`] — van de Geijn: binomial scatter of `p`
-//!   chunks followed by a ring allgather (OpenMPI's large-message choice).
+//! * [`bcast_circulant`] — the paper's Algorithm 1
+//!   ([`crate::collectives::generic::bcast_circulant`]);
+//! * [`bcast_binomial`] — the classical binomial tree
+//!   ([`crate::collectives::generic_baselines::bcast_binomial`]);
+//! * [`bcast_scatter_allgather`] — van de Geijn
+//!   ([`crate::collectives::generic_baselines::bcast_scatter_allgather`]).
 //!
-//! All three move real payload when `data` is provided and verify that
-//! every rank ends with a byte-exact copy.
+//! Since the one-core refactor these functions contain **no round loops of
+//! their own**: each runs the generic collective over the lockstep
+//! [`crate::transport::cost::CostTransport`] backend — with real payload
+//! bytes (moved and verified end-to-end on every rank) when `data` is
+//! `Some`, or size-only virtual blocks (nothing allocated; the
+//! `p = 1152` × gigabyte sweep mode) when it is `None` — and folds the
+//! accounting back into the caller's [`Engine`]. `rust/tests/golden.rs`
+//! pins that this reproduces the pre-refactor centralized accounting
+//! bit-for-bit.
 
-use super::blocks::BlockPartition;
-use crate::sched::{BcastPlan, Schedule, Skips};
-use crate::simulator::{Engine, Msg, SimError, Stats};
+use super::{generic, generic_baselines, run_unified};
+use crate::simulator::{Engine, SimError};
 
 /// Outcome of one collective run.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -27,24 +32,12 @@ pub struct Outcome {
     pub bytes_on_wire: u64,
 }
 
-fn outcome(before: Stats, after: Stats) -> Outcome {
-    let d = after - before;
-    Outcome {
-        rounds: d.rounds,
-        time_s: d.time_s,
-        bytes_on_wire: d.bytes_on_wire,
-    }
-}
-
-fn collective_err(msg: String) -> SimError {
-    SimError::Collective(msg)
-}
-
 /// The paper's Algorithm 1: broadcast `m` bytes from `root` as `n` blocks
 /// in the round-optimal `n-1+⌈log₂p⌉` rounds.
 ///
 /// When `data` is `Some`, real bytes are moved and every rank's
-/// reassembled buffer is verified against the input.
+/// reassembled buffer is verified against the input; when it is `None`
+/// the identical rounds are accounted with virtual (size-only) payloads.
 pub fn bcast_circulant(
     eng: &mut Engine,
     root: u64,
@@ -52,120 +45,13 @@ pub fn bcast_circulant(
     m: u64,
     data: Option<&[u8]>,
 ) -> Result<Outcome, SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    if let Some(d) = data {
-        if d.len() as u64 != m {
-            return Err(collective_err(format!(
-                "data length {} != m {}",
-                d.len(),
-                m
-            )));
-        }
-    }
-    if p == 1 {
-        return Ok(outcome(before, eng.stats()));
-    }
-    let skips = Skips::new(p);
-    let part = BlockPartition::new(m, n);
-    // Per-rank plans; rank r acts as relative rank (r - root) mod p.
-    let plans: Vec<BcastPlan> = (0..p)
-        .map(|r| {
-            let rel = (r + p - root) % p;
-            BcastPlan::new(Schedule::compute(&skips, rel), n)
-        })
-        .collect();
-    // Per-rank block buffers (verification mode only).
-    let mut bufs: Vec<Vec<Option<Vec<u8>>>> = if data.is_some() {
-        (0..p).map(|_| vec![None; n]).collect()
-    } else {
-        Vec::new()
-    };
-    if let Some(d) = data {
-        bufs[root as usize] = (0..n).map(|i| Some(d[part.range(i)].to_vec())).collect();
-    }
-    let rounds = plans[0].num_rounds();
-    for t in 0..rounds {
-        let mut msgs = Vec::with_capacity(p as usize);
-        for r in 0..p {
-            let a = plans[r as usize].action(t);
-            let rel = (r + p - root) % p;
-            let to_rel = skips.to_proc(rel, a.k);
-            if to_rel == 0 {
-                continue; // never send to the root
-            }
-            let to = (to_rel + root) % p;
-            if let Some(sb) = a.send_block {
-                let payload = if data.is_some() {
-                    match &bufs[r as usize][sb] {
-                        Some(v) => Some(v.clone()),
-                        None => {
-                            return Err(collective_err(format!(
-                                "rank {r} sends block {sb} in round {t} before receiving it"
-                            )))
-                        }
-                    }
-                } else {
-                    None
-                };
-                msgs.push(Msg {
-                    from: r,
-                    to,
-                    bytes: part.size(sb),
-                    tag: sb as u64,
-                    data: payload,
-                });
-            }
-        }
-        let inbox = eng.exchange(msgs)?;
-        for r in 0..p {
-            let expected = if r == root {
-                None // nothing is ever sent to the root
-            } else {
-                plans[r as usize].action(t).recv_block
-            };
-            match (inbox[r as usize].as_ref(), expected) {
-                (None, None) => {}
-                (Some(msg), Some(blk)) => {
-                    // Determinacy: the received block must be exactly the
-                    // scheduled one — no metadata is exchanged.
-                    if msg.tag != blk as u64 {
-                        return Err(collective_err(format!(
-                            "rank {r} round {t}: scheduled block {blk}, wire carried {}",
-                            msg.tag
-                        )));
-                    }
-                    if data.is_some() {
-                        bufs[r as usize][blk] = Some(msg.data.clone().unwrap_or_default());
-                    }
-                }
-                (Some(msg), None) => {
-                    return Err(collective_err(format!(
-                        "rank {r} round {t}: unexpected message (block {})",
-                        msg.tag
-                    )))
-                }
-                (None, Some(blk)) => {
-                    return Err(collective_err(format!(
-                        "rank {r} round {t}: scheduled block {blk} never arrived"
-                    )))
-                }
-            }
-        }
-    }
-    if let Some(d) = data {
-        for r in 0..p {
-            for i in 0..n {
-                let got = bufs[r as usize][i]
-                    .as_deref()
-                    .ok_or_else(|| collective_err(format!("rank {r} missing block {i}")))?;
-                if got != &d[part.range(i)] {
-                    return Err(collective_err(format!("rank {r} block {i} corrupted")));
-                }
-            }
-        }
-    }
-    Ok(outcome(before, eng.stats()))
+    let (_, out) = run_unified(eng, |mut t| match data {
+        // Every rank passes the reference payload: the root sends it, the
+        // others assert byte-exact delivery in place.
+        Some(d) => generic::bcast_circulant(&mut t, root, n, m, Some(d)).map(|_| ()),
+        None => generic::bcast_circulant_virtual(&mut t, root, n, m),
+    })?;
+    Ok(out)
 }
 
 /// Classical binomial-tree broadcast: `⌈log₂p⌉` rounds, the whole `m`-byte
@@ -176,54 +62,11 @@ pub fn bcast_binomial(
     m: u64,
     data: Option<&[u8]>,
 ) -> Result<Outcome, SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    if p == 1 {
-        return Ok(outcome(before, eng.stats()));
-    }
-    let q = crate::sched::ceil_log2(p);
-    let mut have: Vec<Option<Vec<u8>>> = vec![None; p as usize];
-    have[root as usize] = data.map(|d| d.to_vec());
-    let mut has = vec![false; p as usize];
-    has[root as usize] = true;
-    // Round j: relative ranks < 2^j send to rank + 2^j.
-    for j in 0..q {
-        let step = 1u64 << j;
-        let mut msgs = Vec::new();
-        for rel in 0..step.min(p) {
-            let to_rel = rel + step;
-            if to_rel >= p {
-                continue;
-            }
-            let from = (rel + root) % p;
-            let to = (to_rel + root) % p;
-            debug_assert!(has[from as usize]);
-            msgs.push(Msg {
-                from,
-                to,
-                bytes: m,
-                tag: 0,
-                data: have[from as usize].clone(),
-            });
-        }
-        let inbox = eng.exchange(msgs)?;
-        for r in 0..p {
-            if let Some(msg) = &inbox[r as usize] {
-                has[r as usize] = true;
-                have[r as usize] = msg.data.clone();
-            }
-        }
-    }
-    if data.is_some() {
-        for r in 0..p {
-            if have[r as usize].as_deref() != data {
-                return Err(collective_err(format!("binomial: rank {r} wrong data")));
-            }
-        }
-    } else if !has.iter().all(|&h| h) {
-        return Err(collective_err("binomial: not all ranks reached".into()));
-    }
-    Ok(outcome(before, eng.stats()))
+    let (_, out) = run_unified(eng, |mut t| match data {
+        Some(d) => generic_baselines::bcast_binomial(&mut t, root, m, Some(d)).map(|_| ()),
+        None => generic_baselines::bcast_binomial_virtual(&mut t, root, m),
+    })?;
+    Ok(out)
 }
 
 /// Van de Geijn broadcast: binomial scatter of `p` chunks, then ring
@@ -234,113 +77,13 @@ pub fn bcast_scatter_allgather(
     m: u64,
     data: Option<&[u8]>,
 ) -> Result<Outcome, SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    if p == 1 {
-        return Ok(outcome(before, eng.stats()));
-    }
-    let part = BlockPartition::new(m, p as usize);
-    // chunks[r][c]: chunk c held by rank r (relative chunk/rank space).
-    let mut chunks: Vec<Vec<Option<Vec<u8>>>> = (0..p).map(|_| vec![None; p as usize]).collect();
-    let mut owned: Vec<std::ops::Range<u64>> = (0..p).map(|_| 0..0).collect();
-    owned[0] = 0..p; // relative rank 0 = root owns all chunks
-    if let Some(d) = data {
-        chunks[0] = (0..p as usize).map(|i| Some(d[part.range(i)].to_vec())).collect();
-    }
-    // Scatter phase: recursive range halving, upper half forwarded.
-    loop {
-        let mut msgs = Vec::new();
-        let mut splits: Vec<(u64, u64, std::ops::Range<u64>)> = Vec::new();
-        for rel in 0..p {
-            let range = owned[rel as usize].clone();
-            if range.end - range.start <= 1 || range.start != rel {
-                continue;
-            }
-            let len = range.end - range.start;
-            let half = len - len / 2; // lower part keeps ceil(len/2)
-            let mid = range.start + half;
-            let to_rel = mid;
-            let bytes: u64 = (mid..range.end).map(|c| part.size(c as usize)).sum();
-            let payload = data.map(|_| {
-                let mut v = Vec::with_capacity(bytes as usize);
-                for c in mid..range.end {
-                    v.extend_from_slice(chunks[rel as usize][c as usize].as_ref().unwrap());
-                }
-                v
-            });
-            msgs.push(Msg {
-                from: (rel + root) % p,
-                to: (to_rel + root) % p,
-                bytes,
-                tag: mid,
-                data: payload,
-            });
-            splits.push((rel, to_rel, mid..range.end));
+    let (_, out) = run_unified(eng, |mut t| match data {
+        Some(d) => {
+            generic_baselines::bcast_scatter_allgather(&mut t, root, m, Some(d)).map(|_| ())
         }
-        if msgs.is_empty() {
-            break;
-        }
-        eng.exchange(msgs)?;
-        for (from_rel, to_rel, moved) in splits {
-            owned[from_rel as usize] = owned[from_rel as usize].start..moved.start;
-            owned[to_rel as usize] = moved.clone();
-            if data.is_some() {
-                for c in moved {
-                    chunks[to_rel as usize][c as usize] =
-                        chunks[from_rel as usize][c as usize].take();
-                }
-            }
-        }
-    }
-    // Ring allgather phase: p-1 rounds; in round t, relative rank rel sends
-    // chunk (rel - t) mod p to rel + 1.
-    for t in 0..p - 1 {
-        let mut msgs = Vec::with_capacity(p as usize);
-        for rel in 0..p {
-            let c = (rel + p - t % p) % p;
-            let to_rel = (rel + 1) % p;
-            msgs.push(Msg {
-                from: (rel + root) % p,
-                to: (to_rel + root) % p,
-                bytes: part.size(c as usize),
-                tag: c,
-                data: if data.is_some() {
-                    Some(
-                        chunks[rel as usize][c as usize]
-                            .clone()
-                            .ok_or_else(|| collective_err(format!("vdg: rel {rel} missing chunk {c} at round {t}")))?,
-                    )
-                } else {
-                    None
-                },
-            });
-        }
-        let inbox = eng.exchange(msgs)?;
-        for r in 0..p {
-            if let Some(msg) = &inbox[r as usize] {
-                let rel = (r + p - root) % p;
-                if data.is_some() {
-                    chunks[rel as usize][msg.tag as usize] = msg.data.clone();
-                } else {
-                    // track possession implicitly; nothing to store
-                    let _ = rel;
-                }
-            }
-        }
-    }
-    if let Some(d) = data {
-        for rel in 0..p {
-            for c in 0..p as usize {
-                let got = chunks[rel as usize][c]
-                    .as_deref()
-                    .ok_or_else(|| collective_err(format!("vdg: rel {rel} missing chunk {c}")))?;
-                if got != &d[part.range(c)] {
-                    return Err(collective_err(format!("vdg: rel {rel} chunk {c} corrupt")));
-                }
-            }
-        }
-    }
-    Ok(outcome(before, eng.stats()))
+        None => generic_baselines::bcast_scatter_allgather_virtual(&mut t, root, m),
+    })?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -435,5 +178,16 @@ mod tests {
         assert_eq!(real.rounds, virt.rounds);
         assert_eq!(real.bytes_on_wire, virt.bytes_on_wire);
         assert!((real.time_s - virt.time_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn engine_accumulates_across_wrapped_calls() {
+        // The wrapper must fold each run back into the caller's engine.
+        let mut e = eng(8);
+        let a = bcast_circulant(&mut e, 0, 4, 1000, None).unwrap();
+        let b = bcast_binomial(&mut e, 0, 1000, None).unwrap();
+        assert_eq!(e.stats().rounds, a.rounds + b.rounds);
+        assert!((e.stats().time_s - (a.time_s + b.time_s)).abs() < 1e-12);
+        assert_eq!(e.stats().bytes_on_wire, a.bytes_on_wire + b.bytes_on_wire);
     }
 }

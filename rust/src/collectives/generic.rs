@@ -21,14 +21,24 @@
 //! counting-allocator bench uses to show zero steady-state payload
 //! allocations per round on the point-to-point backends.
 //!
-//! Relation to the centralized collectives in the sibling modules: those
-//! drive all `p` ranks of the [`crate::simulator::Engine`] from one loop,
-//! which is what the large cost-model sweeps of the paper's figures need
-//! (`p = 1152` with gigabyte virtual payloads would be absurd as 1152
-//! threads). The functions here are the deployment-shaped counterparts —
-//! data always moves for real — and the simulator backend ties the two
-//! together: it enforces the identical machine model and produces the
-//! identical round/byte/time accounting.
+//! ## Virtual payloads: one implementation for data and cost sweeps
+//!
+//! Every algorithm here exists exactly once. The `_virtual` entry points
+//! ([`bcast_circulant_virtual`], [`allgatherv_circulant_virtual`],
+//! [`reduce_circulant_virtual`], …) drive the *same* round loop with
+//! size-only [`crate::transport::Payload::Virtual`] blocks: identical
+//! schedules, identical rounds, identical per-round message sizes — but
+//! no payload is ever materialized, so `p = 1152` sweeps over gigabyte
+//! messages run through the rank-local code path that also moves real
+//! bytes. The centralized modules ([`crate::collectives::bcast`],
+//! [`crate::collectives::allgather`], [`crate::collectives::reduce`],
+//! [`crate::collectives::hierarchical`]) are since PR 4 thin wrappers
+//! dispatching these functions over the lockstep
+//! [`crate::transport::cost::CostTransport`] backend, whose
+//! [`crate::simulator::Engine`] accounting prices every round at its
+//! maximum `α + β·bytes` edge. `rust/tests/golden.rs` pins that the
+//! unified path reproduces the pre-refactor figure-sweep outputs
+//! bit-for-bit.
 //!
 //! ## Algorithm selection
 //!
@@ -47,7 +57,7 @@
 
 use super::blocks::BlockPartition;
 use crate::sched::{ceil_log2, AllgatherSchedules, BcastPlan, Schedule, Skips};
-use crate::transport::{BufferPool, SendSpec, Transport, TransportError};
+use crate::transport::{BufferPool, Payload, SendSpec, Transport, TransportError};
 use std::fmt;
 
 fn cerr(msg: String) -> TransportError {
@@ -66,15 +76,16 @@ pub fn bcast_rounds(p: u64, n: usize) -> usize {
 }
 
 /// Check one round's delivery against the schedule: exactly the scheduled
-/// block must arrive, carrying exactly `want_bytes`. Returns whether a
-/// (scheduled) payload arrived.
+/// block must arrive, carrying exactly `want_bytes(blk)` (return `None`
+/// to skip the length check — virtual frames carry no bytes to measure).
+/// Returns whether a (scheduled) payload arrived.
 fn check_scheduled(
     rank: u64,
     round: usize,
     got: Option<u64>,
     got_len: u64,
     expect: Option<usize>,
-    want_bytes: impl FnOnce(usize) -> u64,
+    want_bytes: impl FnOnce(usize) -> Option<u64>,
 ) -> Result<bool, TransportError> {
     match (got, expect) {
         (None, None) => Ok(false),
@@ -86,11 +97,12 @@ fn check_scheduled(
                     "rank {rank} round {round}: scheduled block {blk}, wire carried {tag}"
                 )));
             }
-            let want = want_bytes(blk);
-            if got_len != want {
-                return Err(cerr(format!(
-                    "rank {rank} round {round}: block {blk} has {got_len} bytes, scheduled {want}"
-                )));
+            if let Some(want) = want_bytes(blk) {
+                if got_len != want {
+                    return Err(cerr(format!(
+                        "rank {rank} round {round}: block {blk} has {got_len} bytes, scheduled {want}"
+                    )));
+                }
             }
             Ok(true)
         }
@@ -157,6 +169,39 @@ pub fn bcast_circulant_into<T: Transport + ?Sized>(
     pool: &mut BufferPool,
     out: &mut Vec<u8>,
 ) -> Result<(), TransportError> {
+    bcast_circulant_impl(t, root, n, m, data, false, pool, out)
+}
+
+/// [`bcast_circulant`] in virtual (size-only) mode: the *identical* round
+/// loop — same schedules, same rounds, same per-round block sizes — with
+/// [`Payload::Virtual`] blocks, so cost-model backends account an
+/// `m`-byte broadcast (gigabytes, `p` in the thousands) without a single
+/// payload allocation. No rank passes or returns bytes.
+pub fn bcast_circulant_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    m: u64,
+) -> Result<(), TransportError> {
+    let mut pool = BufferPool::with_capacity(0);
+    let mut out = Vec::new();
+    bcast_circulant_impl(t, root, n, m, None, true, &mut pool, &mut out)
+}
+
+/// The single Algorithm-1 round loop behind both the data-mode and the
+/// virtual entry points: `virt` only switches how payloads are
+/// represented (borrowed slices vs declared sizes), never the schedule.
+#[allow(clippy::too_many_arguments)]
+fn bcast_circulant_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    m: u64,
+    data: Option<&[u8]>,
+    virt: bool,
+    pool: &mut BufferPool,
+    out: &mut Vec<u8>,
+) -> Result<(), TransportError> {
     let p = t.size();
     let rank = t.rank();
     if root >= p {
@@ -171,39 +216,50 @@ pub fn bcast_circulant_into<T: Transport + ?Sized>(
         }
     }
     let part = BlockPartition::new(m, n);
-    if rank == root && data.is_none() {
+    if !virt && rank == root && data.is_none() {
         return Err(cerr(format!("root {root} must supply the payload")));
     }
     if p == 1 {
         out.clear();
-        out.extend_from_slice(data.expect("validated above"));
+        if !virt {
+            out.extend_from_slice(data.expect("validated above"));
+        }
         return Ok(());
     }
     let skips = Skips::new(p);
     let rel = (rank + p - root) % p;
     let plan = BcastPlan::new(Schedule::compute(&skips, rel), n);
     // Non-root block storage; the root sends borrowed slices of `data`
-    // directly and never populates (or copies into) block buffers.
-    let mut bufs: Vec<Option<Vec<u8>>> = vec![None; n];
+    // directly and never populates (or copies into) block buffers. In
+    // virtual mode only possession is tracked — one bool per block.
+    let mut bufs: Vec<Option<Vec<u8>>> = if virt { Vec::new() } else { vec![None; n] };
+    let mut have: Vec<bool> = if virt { vec![false; n] } else { Vec::new() };
     for round in 0..plan.num_rounds() {
         let a = plan.action(round);
         let to_rel = skips.to_proc(rel, a.k);
         let from_rel = skips.from_proc(rel, a.k);
         let expect = if rank == root { None } else { a.recv_block };
         let recv_from = expect.map(|_| (from_rel + root) % p);
-        let mut recv_slot = pool.get();
+        let mut recv_slot = if virt { Vec::new() } else { pool.get() };
         // Never send to the root; the root never receives.
         let send = if to_rel != 0 {
             match a.send_block {
                 Some(sb) => {
-                    let payload: &[u8] = if rank == root {
-                        &data.expect("validated above")[part.range(sb)]
+                    let payload: Payload = if virt {
+                        if rank != root && !have[sb] {
+                            return Err(cerr(format!(
+                                "rank {rank} round {round}: sends block {sb} before receiving it"
+                            )));
+                        }
+                        Payload::Virtual(part.size(sb))
+                    } else if rank == root {
+                        Payload::Bytes(&data.expect("validated above")[part.range(sb)])
                     } else {
-                        bufs[sb].as_deref().ok_or_else(|| {
+                        Payload::Bytes(bufs[sb].as_deref().ok_or_else(|| {
                             cerr(format!(
                                 "rank {rank} round {round}: sends block {sb} before receiving it"
                             ))
-                        })?
+                        })?)
                     };
                     Some(SendSpec {
                         to: (to_rel + root) % p,
@@ -217,14 +273,31 @@ pub fn bcast_circulant_into<T: Transport + ?Sized>(
             None
         };
         let got = t.sendrecv_into(send, recv_from, &mut recv_slot)?;
-        if check_scheduled(rank, round, got, recv_slot.len() as u64, expect, |b| {
-            part.size(b)
-        })? {
+        let scheduled = check_scheduled(rank, round, got, recv_slot.len() as u64, expect, |b| {
+            if virt {
+                None // size-only frames carry no bytes to measure
+            } else {
+                Some(part.size(b))
+            }
+        })?;
+        if scheduled {
             let blk = expect.expect("check_scheduled confirmed a scheduled payload");
-            bufs[blk] = Some(recv_slot);
-        } else {
+            if virt {
+                have[blk] = true;
+            } else {
+                bufs[blk] = Some(recv_slot);
+            }
+        } else if !virt {
             pool.put(recv_slot);
         }
+    }
+    if virt {
+        if rank != root {
+            if let Some(b) = have.iter().position(|&h| !h) {
+                return Err(cerr(format!("rank {rank}: missing block {b}")));
+            }
+        }
+        return Ok(());
     }
     out.clear();
     out.reserve(m as usize);
@@ -268,6 +341,34 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
     counts: &[u64],
     mine: &[u8],
 ) -> Result<Vec<Vec<u8>>, TransportError> {
+    allgatherv_circulant_impl(t, n, counts, Some(mine), false)
+}
+
+/// [`allgatherv_circulant`] in virtual (size-only) mode: the identical
+/// round loop packing [`Payload::Virtual`] messages whose sizes are the
+/// exact per-round block sums of the data path — the unified cost path of
+/// the Figure 2/3 sweeps (`p = 1152`, per-root contributions in the
+/// hundreds of megabytes). No bytes are stored, so per-rank memory stays
+/// `O(p log p)` (the Algorithm-2 schedule precomputation).
+pub fn allgatherv_circulant_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    counts: &[u64],
+) -> Result<(), TransportError> {
+    allgatherv_circulant_impl(t, n, counts, None, true).map(|_| ())
+}
+
+/// The single Algorithm-2 round loop behind both entry points. Virtual
+/// mode skips block storage and the possession ledger (their memory would
+/// be `O(p·n)` per rank — the very thing the sweeps cannot afford); the
+/// data path exercises the full checks on every backend.
+fn allgatherv_circulant_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    counts: &[u64],
+    mine: Option<&[u8]>,
+    virt: bool,
+) -> Result<Vec<Vec<u8>>, TransportError> {
     let p = t.size();
     let rank = t.rank();
     if counts.len() as u64 != p {
@@ -276,15 +377,19 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
     if n == 0 {
         return Err(cerr("need at least one block".into()));
     }
-    if mine.len() as u64 != counts[rank as usize] {
-        return Err(cerr(format!(
-            "rank {rank}: contribution is {} bytes, counts says {}",
-            mine.len(),
-            counts[rank as usize]
-        )));
+    let mine_len = mine.map(|m| m.len() as u64);
+    if let Some(len) = mine_len {
+        if len != counts[rank as usize] {
+            return Err(cerr(format!(
+                "rank {rank}: contribution is {len} bytes, counts says {}",
+                counts[rank as usize]
+            )));
+        }
+    } else if !virt {
+        return Err(cerr(format!("rank {rank} must supply its contribution")));
     }
     if p == 1 {
-        return Ok(vec![mine.to_vec()]);
+        return Ok(mine.map(|m| vec![m.to_vec()]).unwrap_or_default());
     }
     let skips = Skips::new(p);
     let q = skips.q();
@@ -305,22 +410,31 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
             Some((v as usize).min(n - 1))
         }
     };
-    // Final-offset storage: `out[j]` is the buffer ultimately returned for
-    // root `j`, pre-sized to `counts[j]`, and inbound blocks are unpacked
-    // *directly into their final offset* within it. This removes both the
-    // per-block owned-storage allocation the old unpack paid every round
-    // and the final reassembly copy.
-    let mut out: Vec<Vec<u8>> = (0..p as usize)
-        .map(|j| {
-            if j == rank as usize {
-                mine.to_vec()
-            } else {
-                vec![0u8; counts[j] as usize]
-            }
-        })
-        .collect();
-    let mut have: Vec<Vec<bool>> = (0..p as usize).map(|_| vec![false; n]).collect();
-    have[rank as usize].fill(true);
+    // Final-offset storage (data mode only): `out[j]` is the buffer
+    // ultimately returned for root `j`, pre-sized to `counts[j]`, and
+    // inbound blocks are unpacked *directly into their final offset*
+    // within it — no per-block owned-storage allocation, no reassembly
+    // copy.
+    let mut out: Vec<Vec<u8>> = if virt {
+        Vec::new()
+    } else {
+        (0..p as usize)
+            .map(|j| {
+                if j == rank as usize {
+                    mine.expect("validated above").to_vec()
+                } else {
+                    vec![0u8; counts[j] as usize]
+                }
+            })
+            .collect()
+    };
+    let mut have: Vec<Vec<bool>> = if virt {
+        Vec::new()
+    } else {
+        let mut h: Vec<Vec<bool>> = (0..p as usize).map(|_| vec![false; n]).collect();
+        h[rank as usize].fill(true);
+        h
+    };
     // Round-reused scratch: the packed outgoing message and the inbound
     // frame. Capacities stabilize after the first few rounds.
     let mut send_payload: Vec<u8> = Vec::new();
@@ -330,26 +444,41 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
         let to = skips.to_proc(rank, k);
         let from = skips.from_proc(rank, k);
         // Pack one block per root j != to (the to-processor is root for
-        // its own contribution).
-        send_payload.clear();
-        for j in 0..p {
-            if j == to {
-                continue;
-            }
-            if let Some(b) = concrete(sched.send[j as usize][k], i, k) {
-                if !have[j as usize][b] {
-                    return Err(cerr(format!(
-                        "rank {rank} round {i}: sends root {j} block {b} before receiving it"
-                    )));
+        // its own contribution). Virtual mode sums the exact same block
+        // sizes into a size-only payload.
+        let payload: Payload = if virt {
+            let mut bytes = 0u64;
+            for j in 0..p {
+                if j == to {
+                    continue;
                 }
-                send_payload.extend_from_slice(&out[j as usize][parts[j as usize].range(b)]);
+                if let Some(b) = concrete(sched.send[j as usize][k], i, k) {
+                    bytes += parts[j as usize].size(b);
+                }
             }
-        }
+            Payload::Virtual(bytes)
+        } else {
+            send_payload.clear();
+            for j in 0..p {
+                if j == to {
+                    continue;
+                }
+                if let Some(b) = concrete(sched.send[j as usize][k], i, k) {
+                    if !have[j as usize][b] {
+                        return Err(cerr(format!(
+                            "rank {rank} round {i}: sends root {j} block {b} before receiving it"
+                        )));
+                    }
+                    send_payload.extend_from_slice(&out[j as usize][parts[j as usize].range(b)]);
+                }
+            }
+            Payload::Bytes(&send_payload)
+        };
         let got = t.sendrecv_into(
             Some(SendSpec {
                 to,
                 tag: k as u64,
-                data: &send_payload,
+                data: payload,
             }),
             Some(from),
             &mut recv_buf,
@@ -359,6 +488,9 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
             return Err(cerr(format!(
                 "rank {rank} round {i}: message tagged {tag}, expected round-index {k}"
             )));
+        }
+        if virt {
+            continue; // size-only frames carry nothing to unpack
         }
         // Unpack: one block per root j != rank, by this rank's own
         // receive schedules (own contribution is never received).
@@ -418,6 +550,32 @@ pub fn reduce_circulant<T: Transport + ?Sized>(
     n: usize,
     mine: &[f32],
 ) -> Result<Vec<f32>, TransportError> {
+    reduce_circulant_impl(t, root, n, mine.len(), Some(mine), false)
+}
+
+/// [`reduce_circulant`] in virtual (size-only) mode: the identical
+/// time-reversed round loop with [`Payload::Virtual`] blocks of the exact
+/// serialized sizes (`4·elems` bytes split into `n` blocks), so the
+/// cost-model backends account an `elems`-element reduction without
+/// materializing a single float.
+pub fn reduce_circulant_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    elems: usize,
+) -> Result<(), TransportError> {
+    reduce_circulant_impl(t, root, n, elems, None, true).map(|_| ())
+}
+
+/// The single time-reversal round loop behind both reduce entry points.
+fn reduce_circulant_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    elems: usize,
+    mine: Option<&[f32]>,
+    virt: bool,
+) -> Result<Vec<f32>, TransportError> {
     let p = t.size();
     let rank = t.rank();
     if root >= p {
@@ -426,14 +584,17 @@ pub fn reduce_circulant<T: Transport + ?Sized>(
     if n == 0 {
         return Err(cerr("need at least one block".into()));
     }
-    let mut acc = mine.to_vec();
+    if !virt && mine.is_none() {
+        return Err(cerr(format!("rank {rank} must supply its contribution")));
+    }
+    let mut acc: Vec<f32> = mine.map(|m| m.to_vec()).unwrap_or_default();
     if p == 1 {
         return Ok(acc);
     }
     let skips = Skips::new(p);
     let rel = (rank + p - root) % p;
     let plan = BcastPlan::new(Schedule::compute(&skips, rel), n);
-    let part = BlockPartition::new((mine.len() * 4) as u64, n);
+    let part = BlockPartition::new((elems * 4) as u64, n);
     let erange = |b: usize| {
         let r = part.range(b);
         r.start / 4..r.end / 4
@@ -453,14 +614,19 @@ pub fn reduce_circulant<T: Transport + ?Sized>(
         let send = if rank != root {
             match a.recv_block {
                 Some(b) => {
-                    send_scratch.clear();
-                    for x in &acc[erange(b)] {
-                        send_scratch.extend_from_slice(&x.to_le_bytes());
-                    }
+                    let payload: Payload = if virt {
+                        Payload::Virtual(erange(b).len() as u64 * 4)
+                    } else {
+                        send_scratch.clear();
+                        for x in &acc[erange(b)] {
+                            send_scratch.extend_from_slice(&x.to_le_bytes());
+                        }
+                        Payload::Bytes(&send_scratch)
+                    };
                     Some(SendSpec {
                         to: (from_rel + root) % p,
                         tag: b as u64,
-                        data: &send_scratch,
+                        data: payload,
                     })
                 }
                 None => None,
@@ -473,9 +639,15 @@ pub fn reduce_circulant<T: Transport + ?Sized>(
         let expect = if to_rel != 0 { a.send_block } else { None };
         let recv_from = expect.map(|_| (to_rel + root) % p);
         let got = t.sendrecv_into(send, recv_from, &mut recv_scratch)?;
-        if check_scheduled(rank, t_rev, got, recv_scratch.len() as u64, expect, |b| {
-            erange(b).len() as u64 * 4
-        })? {
+        let scheduled =
+            check_scheduled(rank, t_rev, got, recv_scratch.len() as u64, expect, |b| {
+                if virt {
+                    None
+                } else {
+                    Some(erange(b).len() as u64 * 4)
+                }
+            })?;
+        if scheduled && !virt {
             let blk = expect.expect("check_scheduled confirmed a scheduled payload");
             // Combine in place, straight off the wire bytes.
             for (d, c) in acc[erange(blk)]
@@ -511,6 +683,21 @@ pub fn allreduce_circulant<T: Transport + ?Sized>(
     Ok(bytes_to_f32s(&out))
 }
 
+/// [`allreduce_circulant`] in virtual (size-only) mode: the same
+/// reduce-to-0 + broadcast-from-0 chain, accounted without materializing
+/// any floats.
+pub fn allreduce_circulant_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    elems: usize,
+) -> Result<(), TransportError> {
+    reduce_circulant_virtual(t, 0, n, elems)?;
+    if t.size() == 1 {
+        return Ok(());
+    }
+    bcast_circulant_virtual(t, 0, n, (elems * 4) as u64)
+}
+
 /// Hierarchical (leader-decomposed) broadcast as an SPMD program: root →
 /// node leader, circulant broadcast across the leaders (`n_inter` blocks),
 /// then per-node circulant broadcasts (`n_intra` blocks) in lockstep.
@@ -530,6 +717,38 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
     m: u64,
     data: Option<&[u8]>,
 ) -> Result<Vec<u8>, TransportError> {
+    bcast_hierarchical_impl(t, root, ranks_per_node, n_inter, n_intra, m, data, false)
+        .map(|out| out.unwrap_or_default())
+}
+
+/// [`bcast_hierarchical`] in virtual (size-only) mode: the same three
+/// phases (root → leader hop, circulant broadcast across leaders,
+/// lockstep per-node broadcasts) accounted with [`Payload::Virtual`]
+/// blocks — the unified cost path of the flat-vs-hierarchical ablation.
+pub fn bcast_hierarchical_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    ranks_per_node: u64,
+    n_inter: usize,
+    n_intra: usize,
+    m: u64,
+) -> Result<(), TransportError> {
+    bcast_hierarchical_impl(t, root, ranks_per_node, n_inter, n_intra, m, None, true).map(|_| ())
+}
+
+/// The single three-phase loop behind both hierarchical-broadcast entry
+/// points; in virtual mode the returned payload is `None`.
+#[allow(clippy::too_many_arguments)]
+fn bcast_hierarchical_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    ranks_per_node: u64,
+    n_inter: usize,
+    n_intra: usize,
+    m: u64,
+    data: Option<&[u8]>,
+    virt: bool,
+) -> Result<Option<Vec<u8>>, TransportError> {
     use crate::transport::{idle_round, GroupTransport};
     let p = t.size();
     let rank = t.rank();
@@ -541,7 +760,12 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
     let nodes = p / ranks_per_node;
     if nodes == 1 || ranks_per_node == 1 {
         // Degenerate layouts: fall back to the flat algorithm.
-        return bcast_circulant(t, root, n_inter.max(n_intra), m, data);
+        let n = n_inter.max(n_intra);
+        return if virt {
+            bcast_circulant_virtual(t, root, n, m).map(|()| None)
+        } else {
+            bcast_circulant(t, root, n, m, data).map(Some)
+        };
     }
     if root >= p {
         return Err(cerr(format!("root {root} out of range (p = {p})")));
@@ -551,7 +775,7 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
             return Err(cerr(format!("data length {} != m {m}", d.len())));
         }
     }
-    if rank == root && data.is_none() {
+    if !virt && rank == root && data.is_none() {
         return Err(cerr(format!("root {root} must supply the payload")));
     }
     let root_node = root / ranks_per_node;
@@ -565,12 +789,17 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
     let mut held: Option<Vec<u8>> = None;
     if root != leader(root_node) {
         if rank == root {
+            let payload: Payload = if virt {
+                Payload::Virtual(m)
+            } else {
+                Payload::Bytes(data.expect("validated above"))
+            };
             let mut sink = Vec::new();
             let got = t.sendrecv_into(
                 Some(SendSpec {
                     to: leader(root_node),
                     tag: 0,
-                    data: data.expect("validated above"),
+                    data: payload,
                 }),
                 None,
                 &mut sink,
@@ -582,13 +811,15 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
             let mut buf = Vec::new();
             t.sendrecv_into(None, Some(root), &mut buf)?
                 .ok_or_else(|| cerr(format!("leader {rank}: phase-0 payload never arrived")))?;
-            if buf.len() as u64 != m {
-                return Err(cerr(format!(
-                    "leader {rank}: phase-0 payload has {} bytes, expected {m}",
-                    buf.len()
-                )));
+            if !virt {
+                if buf.len() as u64 != m {
+                    return Err(cerr(format!(
+                        "leader {rank}: phase-0 payload has {} bytes, expected {m}",
+                        buf.len()
+                    )));
+                }
+                held = Some(buf);
             }
-            held = Some(buf);
         } else {
             idle_round(t)?;
         }
@@ -597,10 +828,14 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
     // --- Phase 1: circulant broadcast across the node leaders ------------
     let leaders: Vec<u64> = (0..nodes).map(leader).collect();
     if rank == leader(my_node) {
-        let src = if rank == root { data } else { held.as_deref() };
         let mut g = GroupTransport::new(&mut *t, &leaders)?;
-        let buf = bcast_circulant(&mut g, root_node, n_inter, m, src)?;
-        held = Some(buf);
+        if virt {
+            bcast_circulant_virtual(&mut g, root_node, n_inter, m)?;
+        } else {
+            let src = if rank == root { data } else { held.as_deref() };
+            let buf = bcast_circulant(&mut g, root_node, n_inter, m, src)?;
+            held = Some(buf);
+        }
     } else {
         for _ in 0..bcast_rounds(nodes, n_inter) {
             idle_round(t)?;
@@ -609,9 +844,13 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
 
     // --- Phase 2: per-node circulant broadcast from each leader ----------
     // All groups have the same size, hence the same round count: lockstep.
-    let src = if rank == root { data } else { held.as_deref() };
     let members: Vec<u64> = (0..ranks_per_node).map(|i| leader(my_node) + i).collect();
     let mut g = GroupTransport::new(&mut *t, &members)?;
+    if virt {
+        bcast_circulant_virtual(&mut g, 0, n_intra, m)?;
+        return Ok(None);
+    }
+    let src = if rank == root { data } else { held.as_deref() };
     let out = bcast_circulant(&mut g, 0, n_intra, m, src)?;
     if let Some(d) = data {
         if out != d {
@@ -620,7 +859,123 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
             )));
         }
     }
-    Ok(out)
+    Ok(Some(out))
+}
+
+/// Hierarchical (leader-decomposed) allgatherv as an SPMD program, in
+/// virtual (size-only) mode: intra-node binomial gathers to the node
+/// leaders, the circulant Algorithm-2 allgatherv across leaders (per-node
+/// aggregated counts, over a [`crate::transport::GroupTransport`] so the
+/// hierarchical cost model prices those edges as inter-node), then
+/// intra-node binomial broadcasts of the assembled total.
+///
+/// Cost-only by design — matching the centralized sweep it replaces: the
+/// phase structure is what the 36×`ranks_per_node` comparison needs, and
+/// a data-mode variant would only re-verify what the flat
+/// [`allgatherv_circulant`] already proves on every backend.
+pub fn allgatherv_hierarchical_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    ranks_per_node: u64,
+    n: usize,
+    counts: &[u64],
+) -> Result<(), TransportError> {
+    use crate::transport::{idle_round, GroupTransport};
+    let p = t.size();
+    let rank = t.rank();
+    if ranks_per_node == 0 || p % ranks_per_node != 0 {
+        return Err(cerr(format!(
+            "p = {p} not divisible by ranks_per_node = {ranks_per_node}"
+        )));
+    }
+    if counts.len() as u64 != p {
+        return Err(cerr(format!("counts length {} != p {p}", counts.len())));
+    }
+    let nodes = p / ranks_per_node;
+    if nodes == 1 || ranks_per_node == 1 {
+        return allgatherv_circulant_virtual(t, n, counts);
+    }
+    let my_node = rank / ranks_per_node;
+    let base = my_node * ranks_per_node;
+    let local = rank - base;
+    let q_intra = ceil_log2(ranks_per_node);
+    let total: u64 = counts.iter().sum();
+
+    // --- Phase 1: binomial gather within each node (lockstep) ------------
+    // Local rank i holds the contiguous contribution span [i, hi(i, k));
+    // in round k the span owners at i ≡ 2ᵏ (mod 2ᵏ⁺¹) fold into i - 2ᵏ.
+    for k in 0..q_intra {
+        let step = 1u64 << k;
+        if local % (step * 2) == step {
+            let hi = (local + step).min(ranks_per_node);
+            let bytes: u64 = (local..hi).map(|i| counts[(base + i) as usize]).sum();
+            let mut sink = Vec::new();
+            t.sendrecv_into(
+                Some(SendSpec {
+                    to: base + local - step,
+                    tag: 0,
+                    data: Payload::Virtual(bytes),
+                }),
+                None,
+                &mut sink,
+            )?;
+        } else if local % (step * 2) == 0 && local + step < ranks_per_node {
+            let mut sink = Vec::new();
+            let got = t.sendrecv_into(None, Some(base + local + step), &mut sink)?;
+            if got != Some(0) {
+                return Err(cerr(format!(
+                    "rank {rank}: unexpected intra-node gather frame {got:?}"
+                )));
+            }
+        } else {
+            idle_round(t)?;
+        }
+    }
+
+    // --- Phase 2: circulant allgatherv across the node leaders -----------
+    let node_counts: Vec<u64> = (0..nodes)
+        .map(|nd| {
+            (0..ranks_per_node)
+                .map(|i| counts[(nd * ranks_per_node + i) as usize])
+                .sum()
+        })
+        .collect();
+    let leaders: Vec<u64> = (0..nodes).map(|nd| nd * ranks_per_node).collect();
+    if local == 0 {
+        let mut g = GroupTransport::new(&mut *t, &leaders)?;
+        allgatherv_circulant_virtual(&mut g, n, &node_counts)?;
+    } else {
+        for _ in 0..bcast_rounds(nodes, n) {
+            idle_round(t)?;
+        }
+    }
+
+    // --- Phase 3: binomial broadcast of the assembled total per node -----
+    for k in 0..q_intra {
+        let step = 1u64 << k;
+        if local < step && local + step < ranks_per_node {
+            let mut sink = Vec::new();
+            t.sendrecv_into(
+                Some(SendSpec {
+                    to: base + local + step,
+                    tag: 0,
+                    data: Payload::Virtual(total),
+                }),
+                None,
+                &mut sink,
+            )?;
+        } else if local >= step && local < 2 * step {
+            let mut sink = Vec::new();
+            let got = t.sendrecv_into(None, Some(base + local - step), &mut sink)?;
+            if got != Some(0) {
+                return Err(cerr(format!(
+                    "rank {rank}: unexpected intra-node bcast frame {got:?}"
+                )));
+            }
+        } else {
+            idle_round(t)?;
+        }
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -630,6 +985,13 @@ pub fn bcast_hierarchical<T: Transport + ?Sized>(
 /// Message-size threshold (total bytes) below which [`Algorithm::Auto`]
 /// treats a collective as latency-bound and picks a `⌈log₂p⌉`-round
 /// whole-message algorithm over a pipelined one.
+///
+/// This is the *fallback* cutoff (matching
+/// [`crate::transport::CostHint::DEFAULT`]): the dispatch entry points
+/// derive the actual cutoff from the active backend's
+/// [`Transport::cost_hint`] (`α/β`, the size at which per-message startup
+/// equals transfer time), so a backend with a calibrated cost model
+/// places the crossover where *its* links put it.
 pub const AUTO_LATENCY_CUTOFF: u64 = 4096;
 
 /// A collective algorithm selectable through the dispatch entry points
@@ -644,6 +1006,7 @@ pub const AUTO_LATENCY_CUTOFF: u64 = 4096;
 /// | `ScatterAllgather` | ✓ | — | — | — |
 /// | `Ring` | — | ✓ | — | ✓ |
 /// | `Bruck` | — | ✓ | — | — |
+/// | `GatherBcast` | — | ✓ | — | — |
 /// | `Auto` | resolves | resolves | resolves | resolves |
 ///
 /// Dispatching an unsupported combination returns
@@ -673,6 +1036,11 @@ pub enum Algorithm {
     /// chunk sets
     /// ([`crate::collectives::generic_baselines::allgatherv_bruck`]).
     Bruck,
+    /// Gather-to-root then binomial broadcast of the concatenation:
+    /// `2⌈log₂p⌉` rounds, the simplest (and degenerate-prone) native
+    /// allgatherv pattern
+    /// ([`crate::collectives::generic_baselines::allgatherv_gather_bcast`]).
+    GatherBcast,
 }
 
 impl Algorithm {
@@ -687,6 +1055,7 @@ impl Algorithm {
             Algorithm::ScatterAllgather => "scatter-allgather",
             Algorithm::Ring => "ring",
             Algorithm::Bruck => "bruck",
+            Algorithm::GatherBcast => "gather-bcast",
         }
     }
 
@@ -699,12 +1068,22 @@ impl Algorithm {
     /// the caller allows pipelining (`n > 1`), and scatter-allgather is
     /// the fallback for large single-block messages (`n == 1`, where the
     /// circulant schedule degenerates to whole-message rounds).
+    ///
+    /// This form uses the fixed fallback cutoff; the dispatch entry
+    /// points call [`Algorithm::resolve_bcast_with`] with the active
+    /// backend's [`Transport::cost_hint`] crossover instead.
     pub fn resolve_bcast(self, p: u64, n: usize, m: u64) -> Algorithm {
+        self.resolve_bcast_with(AUTO_LATENCY_CUTOFF, p, n, m)
+    }
+
+    /// [`Algorithm::resolve_bcast`] with an explicit latency cutoff
+    /// (bytes), as derived from a backend's α/β estimate.
+    pub fn resolve_bcast_with(self, cutoff: u64, p: u64, n: usize, m: u64) -> Algorithm {
         match self {
             Algorithm::Auto => {
                 if p <= 1 {
                     Algorithm::Circulant
-                } else if m <= AUTO_LATENCY_CUTOFF {
+                } else if m <= cutoff {
                     Algorithm::Binomial
                 } else if n <= 1 {
                     Algorithm::ScatterAllgather
@@ -719,15 +1098,22 @@ impl Algorithm {
     /// Resolve `Auto` for an allgatherv of `total` bytes (all
     /// contributions summed) at `p` ranks: small totals are latency-bound
     /// (`⌈log₂p⌉`-round Bruck), everything else runs the round-optimal
-    /// circulant Algorithm 2. The ring is never auto-picked — it
-    /// degenerates by a factor approaching `p` on irregular inputs (the
-    /// paper's Figure 2) and is kept as an explicit baseline only.
-    pub fn resolve_allgatherv(self, p: u64, _n: usize, total: u64) -> Algorithm {
+    /// circulant Algorithm 2. The ring and gather-bcast patterns are never
+    /// auto-picked — they degenerate by a factor approaching `p` on
+    /// irregular inputs (the paper's Figure 2) and are kept as explicit
+    /// baselines only.
+    pub fn resolve_allgatherv(self, p: u64, n: usize, total: u64) -> Algorithm {
+        self.resolve_allgatherv_with(AUTO_LATENCY_CUTOFF, p, n, total)
+    }
+
+    /// [`Algorithm::resolve_allgatherv`] with an explicit latency cutoff
+    /// (bytes), as derived from a backend's α/β estimate.
+    pub fn resolve_allgatherv_with(self, cutoff: u64, p: u64, _n: usize, total: u64) -> Algorithm {
         match self {
             Algorithm::Auto => {
                 if p <= 1 {
                     Algorithm::Circulant
-                } else if total <= AUTO_LATENCY_CUTOFF {
+                } else if total <= cutoff {
                     Algorithm::Bruck
                 } else {
                     Algorithm::Circulant
@@ -740,10 +1126,16 @@ impl Algorithm {
     /// Resolve `Auto` for a reduction of `bytes` payload bytes at `p`
     /// ranks: the binomial tree for latency-bound vectors, the circulant
     /// time-reversal otherwise (mirroring [`Algorithm::resolve_bcast`]).
-    pub fn resolve_reduce(self, p: u64, _n: usize, bytes: u64) -> Algorithm {
+    pub fn resolve_reduce(self, p: u64, n: usize, bytes: u64) -> Algorithm {
+        self.resolve_reduce_with(AUTO_LATENCY_CUTOFF, p, n, bytes)
+    }
+
+    /// [`Algorithm::resolve_reduce`] with an explicit latency cutoff
+    /// (bytes), as derived from a backend's α/β estimate.
+    pub fn resolve_reduce_with(self, cutoff: u64, p: u64, _n: usize, bytes: u64) -> Algorithm {
         match self {
             Algorithm::Auto => {
-                if p <= 1 || bytes > AUTO_LATENCY_CUTOFF {
+                if p <= 1 || bytes > cutoff {
                     Algorithm::Circulant
                 } else {
                     Algorithm::Binomial
@@ -787,6 +1179,32 @@ impl Algorithm {
             Algorithm::Circulant => Some(bcast_rounds(p, n)),
             Algorithm::Ring => Some((p.max(1) - 1) as usize),
             Algorithm::Bruck => Some(ceil_log2(p)),
+            Algorithm::GatherBcast => Some(2 * ceil_log2(p)),
+            _ => None,
+        }
+    }
+
+    /// Communication rounds a (concrete) algorithm takes for an `n`-block
+    /// reduction at `p` ranks — `None` if it does not implement reduce or
+    /// is still `Auto`. The circulant time-reversal inherits broadcast's
+    /// round optimality; the binomial tree pays `⌈log₂p⌉` whole-vector
+    /// rounds.
+    pub fn reduce_round_count(self, p: u64, n: usize) -> Option<usize> {
+        match self {
+            Algorithm::Circulant => Some(bcast_rounds(p, n)),
+            Algorithm::Binomial => Some(ceil_log2(p)),
+            _ => None,
+        }
+    }
+
+    /// Communication rounds a (concrete) algorithm takes for an `n`-block
+    /// allreduce at `p` ranks — `None` if it does not implement allreduce
+    /// or is still `Auto`: circulant reduce+bcast `2(n - 1 + ⌈log₂p⌉)`,
+    /// ring reduce-scatter + allgather `2(p - 1)`.
+    pub fn allreduce_round_count(self, p: u64, n: usize) -> Option<usize> {
+        match self {
+            Algorithm::Circulant => Some(2 * bcast_rounds(p, n)),
+            Algorithm::Ring => Some(2 * (p.max(1) - 1) as usize),
             _ => None,
         }
     }
@@ -811,10 +1229,11 @@ impl std::str::FromStr for Algorithm {
             }
             "ring" => Algorithm::Ring,
             "bruck" => Algorithm::Bruck,
+            "gather-bcast" | "gather_bcast" => Algorithm::GatherBcast,
             other => {
                 return Err(format!(
                     "unknown algorithm `{other}` \
-                     (auto|circulant|binomial|scatter-allgather|ring|bruck)"
+                     (auto|circulant|binomial|scatter-allgather|ring|bruck|gather-bcast)"
                 ))
             }
         })
@@ -865,6 +1284,28 @@ fn scatter_allgather_peers(p: u64, rel: u64, root: u64) -> Vec<u64> {
     for x in [((rel + 1) % p + root) % p, ((rel + p - 1) % p + root) % p] {
         if !peers.contains(&x) {
             peers.push(x);
+        }
+    }
+    peers
+}
+
+/// The absolute peers the binomial *gather* to rank 0 connects `rank` to:
+/// its fold target `rank - 2^trailing_zeros(rank)` plus every rank that
+/// folds into it. This is a different tree from the binomial *broadcast*
+/// (the gather clears the lowest set bit of the rank, the broadcast the
+/// highest), so the gather-bcast allgatherv warms the union of both edge
+/// sets. Mirrors the round conditions of
+/// [`crate::collectives::generic_baselines::allgatherv_gather_bcast`]
+/// exactly, which keeps the set symmetric.
+fn gather_tree_peers(p: u64, rank: u64) -> Vec<u64> {
+    let q = ceil_log2(p);
+    let mut peers = Vec::new();
+    for k in 0..q {
+        let step = 1u64 << k;
+        if rank % (step * 2) == step {
+            peers.push(rank - step); // fold target (exactly one round)
+        } else if rank % (step * 2) == 0 && rank + step < p {
+            peers.push(rank + step); // the rank folding into this one
         }
     }
     peers
@@ -942,7 +1383,8 @@ pub fn bcast<T: Transport + ?Sized>(
     m: u64,
     data: Option<&[u8]>,
 ) -> Result<Vec<u8>, TransportError> {
-    let algo = algo.resolve_bcast(t.size(), n, m);
+    let cutoff = t.cost_hint().latency_cutoff_bytes();
+    let algo = algo.resolve_bcast_with(cutoff, t.size(), n, m);
     warm_rooted(t, algo, root)?;
     match algo {
         Algorithm::Circulant => bcast_circulant(t, root, n, m, data),
@@ -972,12 +1414,25 @@ pub fn allgatherv<T: Transport + ?Sized>(
 ) -> Result<Vec<Vec<u8>>, TransportError> {
     let p = t.size();
     let rank = t.rank();
-    let algo = algo.resolve_allgatherv(p, n, counts.iter().sum());
+    let cutoff = t.cost_hint().latency_cutoff_bytes();
+    let algo = algo.resolve_allgatherv_with(cutoff, p, n, counts.iter().sum());
     if p > 1 {
         match algo {
             Algorithm::Circulant => t.warm_up()?,
             Algorithm::Ring => t.warm_peers(&[(rank + 1) % p, (rank + p - 1) % p])?,
             Algorithm::Bruck => t.warm_peers(&bruck_peers(p, rank))?,
+            // The gather tree (clear-lowest-bit) and the phase-2 binomial
+            // broadcast tree (clear-highest-bit) are different trees:
+            // warm the union of both edge sets.
+            Algorithm::GatherBcast => {
+                let mut peers = gather_tree_peers(p, rank);
+                for x in binomial_peers(p, rank, 0) {
+                    if !peers.contains(&x) {
+                        peers.push(x);
+                    }
+                }
+                t.warm_peers(&peers)?
+            }
             _ => {}
         }
     }
@@ -985,8 +1440,11 @@ pub fn allgatherv<T: Transport + ?Sized>(
         Algorithm::Circulant => allgatherv_circulant(t, n, counts, mine),
         Algorithm::Ring => super::generic_baselines::allgatherv_ring(t, counts, mine),
         Algorithm::Bruck => super::generic_baselines::allgatherv_bruck(t, counts, mine),
+        Algorithm::GatherBcast => {
+            super::generic_baselines::allgatherv_gather_bcast(t, counts, mine)
+        }
         other => Err(cerr(format!(
-            "{other} is not an allgatherv algorithm (auto|circulant|ring|bruck)"
+            "{other} is not an allgatherv algorithm (auto|circulant|ring|bruck|gather-bcast)"
         ))),
     }
 }
@@ -1002,7 +1460,8 @@ pub fn reduce<T: Transport + ?Sized>(
     n: usize,
     mine: &[f32],
 ) -> Result<Vec<f32>, TransportError> {
-    let algo = algo.resolve_reduce(t.size(), n, (mine.len() * 4) as u64);
+    let cutoff = t.cost_hint().latency_cutoff_bytes();
+    let algo = algo.resolve_reduce_with(cutoff, t.size(), n, (mine.len() * 4) as u64);
     warm_rooted(t, algo, root)?;
     match algo {
         Algorithm::Circulant => reduce_circulant(t, root, n, mine),
@@ -1072,10 +1531,22 @@ mod tests {
             Algorithm::ScatterAllgather,
             Algorithm::Ring,
             Algorithm::Bruck,
+            Algorithm::GatherBcast,
         ] {
             assert_eq!(a.name().parse::<Algorithm>().unwrap(), a);
         }
         assert!("nope".parse::<Algorithm>().is_err());
+    }
+
+    #[test]
+    fn backend_derived_cutoffs_shift_the_crossover() {
+        // A high-latency link (cutoff 1 MiB) keeps the binomial tree
+        // winning where the fallback cutoff would already pipeline.
+        let a = Algorithm::Auto;
+        assert_eq!(a.resolve_bcast_with(1 << 20, 16, 8, 1 << 16), Algorithm::Binomial);
+        assert_eq!(a.resolve_bcast(16, 8, 1 << 16), Algorithm::Circulant);
+        assert_eq!(a.resolve_allgatherv_with(1 << 20, 16, 4, 1 << 16), Algorithm::Bruck);
+        assert_eq!(a.resolve_reduce_with(16, 16, 4, 1 << 10), Algorithm::Circulant);
     }
 
     #[test]
@@ -1087,6 +1558,12 @@ mod tests {
         assert_eq!(Algorithm::Ring.allgatherv_round_count(16, 8), Some(15));
         assert_eq!(Algorithm::Bruck.allgatherv_round_count(16, 8), Some(4));
         assert_eq!(Algorithm::Circulant.allgatherv_round_count(16, 8), Some(11));
+        assert_eq!(Algorithm::GatherBcast.allgatherv_round_count(16, 8), Some(8));
+        assert_eq!(Algorithm::Circulant.reduce_round_count(16, 8), Some(11));
+        assert_eq!(Algorithm::Binomial.reduce_round_count(16, 8), Some(4));
+        assert_eq!(Algorithm::Circulant.allreduce_round_count(16, 8), Some(22));
+        assert_eq!(Algorithm::Ring.allreduce_round_count(16, 8), Some(30));
+        assert_eq!(Algorithm::Bruck.reduce_round_count(16, 8), None);
     }
 
     #[test]
@@ -1102,7 +1579,23 @@ mod tests {
                     .map(|r| scatter_allgather_peers(p, (r + p - root) % p, root))
                     .collect();
                 let bruck: Vec<Vec<u64>> = (0..p).map(|r| bruck_peers(p, r)).collect();
-                for (name, sets) in [("binomial", &bin), ("vdg", &vdg), ("bruck", &bruck)] {
+                let gather: Vec<Vec<u64>> = (0..p)
+                    .map(|r| {
+                        let mut peers = gather_tree_peers(p, r);
+                        for x in binomial_peers(p, r, 0) {
+                            if !peers.contains(&x) {
+                                peers.push(x);
+                            }
+                        }
+                        peers
+                    })
+                    .collect();
+                for (name, sets) in [
+                    ("binomial", &bin),
+                    ("vdg", &vdg),
+                    ("bruck", &bruck),
+                    ("gather-bcast", &gather),
+                ] {
                     for r in 0..p {
                         for &peer in &sets[r as usize] {
                             assert_ne!(peer, r, "{name} p={p} root={root}: self edge");

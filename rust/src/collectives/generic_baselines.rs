@@ -3,13 +3,13 @@
 //!
 //! The paper's headline claim is *comparative*: the circulant-graph
 //! schedules are round-optimal where the classical algorithms are not.
-//! The centralized baseline implementations in
-//! [`crate::collectives::bcast`], [`crate::collectives::allgather`] and
-//! [`crate::collectives::reduce`] drive all `p` ranks of the simulated
-//! [`crate::simulator::Engine`] from one loop — fine for cost-model
-//! sweeps, but unable to run on the thread or TCP backends. This module
-//! ports them to true per-rank SPMD form so the *comparison* (not just the
-//! paper's algorithm) runs end-to-end on every backend:
+//! Since the one-rank-local-core refactor these functions are the *only*
+//! implementation of each baseline — the centralized modules
+//! ([`crate::collectives::bcast`], [`crate::collectives::allgather`],
+//! [`crate::collectives::reduce`]) are thin wrappers dispatching them over
+//! the lockstep [`crate::transport::cost::CostTransport`] backend — so the
+//! comparison runs end-to-end on every backend *and* feeds the cost-model
+//! sweeps from the same round loops:
 //!
 //! * [`bcast_binomial`] — binomial tree, `⌈log₂p⌉` rounds, the whole
 //!   message on every edge (OpenMPI's small-message broadcast);
@@ -21,16 +21,31 @@
 //!   all the data — the Figure 2 effect);
 //! * [`allgatherv_bruck`] — Bruck/dissemination, `⌈log₂p⌉` rounds with
 //!   doubling chunk sets;
+//! * [`allgatherv_gather_bcast`] — gather-to-rank-0 then binomial
+//!   broadcast of the concatenation, `2⌈log₂p⌉` rounds (the simplest, and
+//!   degenerate-prone, native allgatherv pattern);
 //! * [`reduce_binomial`] — reverse binomial tree, `⌈log₂p⌉` rounds, whole
 //!   vector per edge;
 //! * [`allreduce_ring`] — ring reduce-scatter + ring allgather,
 //!   `2(p - 1)` rounds, bandwidth-optimal for large vectors.
 //!
-//! All six follow the PR 2 zero-copy idioms: outgoing payloads are
-//! *borrowed* (`SendSpec::data`) straight out of block storage or — at the
-//! broadcast root — out of the caller's payload, inbound frames land in
-//! reused buffers, and round-loop scratch is allocated once per call, not
-//! per round.
+//! Three entry-point shapes per algorithm share one round loop:
+//!
+//! * the **owning** form (allocates its result — tests and cold paths);
+//! * the **`_into`** form (caller-owned output and
+//!   [`BufferPool`]-recycled scratch, so repeated calls are
+//!   allocation-free in steady state — what makes the baselines'
+//!   `BENCH_transport.json` rows allocation-comparable to the circulant
+//!   hot path);
+//! * the **`_virtual`** form (size-only [`Payload::Virtual`] blocks for
+//!   the cost-model backends — identical rounds, identical message sizes,
+//!   no bytes).
+//!
+//! All follow the PR 2 zero-copy idioms: outgoing payloads are *borrowed*
+//! (`SendSpec::data`) straight out of block storage or — at the broadcast
+//! root — out of the caller's payload, inbound frames land in reused
+//! buffers, and round-loop scratch is allocated once per call, not per
+//! round.
 //!
 //! Every function makes the same number of [`Transport::sendrecv_into`]
 //! calls on every rank (idle ranks call [`idle_round`]), which is what the
@@ -46,26 +61,31 @@
 
 use super::blocks::BlockPartition;
 use crate::sched::ceil_log2;
-use crate::transport::{idle_round, SendSpec, Transport, TransportError};
+use crate::transport::{idle_round, BufferPool, Payload, SendSpec, Transport, TransportError};
 
 fn cerr(msg: String) -> TransportError {
     TransportError::Collective(msg)
 }
 
-/// Assert an inbound frame: the scheduled `tag` must arrive carrying
-/// exactly `want_bytes`.
+/// Assert an inbound frame: the scheduled `tag` must arrive, carrying
+/// exactly `want_bytes` when given (`None` skips the length check —
+/// virtual frames carry no bytes to measure).
 fn check_frame(
     rank: u64,
     what: &str,
     got: Option<u64>,
     got_len: u64,
     want_tag: u64,
-    want_bytes: u64,
+    want_bytes: Option<u64>,
 ) -> Result<(), TransportError> {
+    let len_ok = match want_bytes {
+        Some(w) => got_len == w,
+        None => true,
+    };
     match got {
-        Some(tag) if tag == want_tag && got_len == want_bytes => Ok(()),
+        Some(tag) if tag == want_tag && len_ok => Ok(()),
         Some(tag) => Err(cerr(format!(
-            "rank {rank} ({what}): expected tag {want_tag} with {want_bytes} bytes, \
+            "rank {rank} ({what}): expected tag {want_tag} with {want_bytes:?} bytes, \
              got tag {tag} with {got_len}"
         ))),
         None => Err(cerr(format!(
@@ -103,6 +123,10 @@ fn send_recv_slots(slots: &mut [Vec<u8>], s: usize, r: usize) -> (&[u8], &mut Ve
     }
 }
 
+// ---------------------------------------------------------------------------
+// Binomial broadcast
+// ---------------------------------------------------------------------------
+
 /// Classical binomial-tree broadcast as an SPMD program: `⌈log₂p⌉` rounds,
 /// the whole `m`-byte message on every edge.
 ///
@@ -124,6 +148,43 @@ pub fn bcast_binomial<T: Transport + ?Sized>(
     m: u64,
     data: Option<&[u8]>,
 ) -> Result<Vec<u8>, TransportError> {
+    let mut out = Vec::new();
+    bcast_binomial_into(t, root, m, data, &mut out)?;
+    Ok(out)
+}
+
+/// [`bcast_binomial`] with caller-owned output: the message lands in
+/// `out` (cleared, capacity reused), so repeated broadcasts with the same
+/// `out` perform zero steady-state payload allocations — the
+/// allocation-comparable shape the transport bench measures and asserts.
+pub fn bcast_binomial_into<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    m: u64,
+    data: Option<&[u8]>,
+    out: &mut Vec<u8>,
+) -> Result<(), TransportError> {
+    bcast_binomial_impl(t, root, m, data, false, out)
+}
+
+/// [`bcast_binomial`] in virtual (size-only) mode: the identical rounds
+/// with [`Payload::Virtual`] whole-message blocks, for cost-model sweeps.
+pub fn bcast_binomial_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    m: u64,
+) -> Result<(), TransportError> {
+    bcast_binomial_impl(t, root, m, None, true, &mut Vec::new())
+}
+
+fn bcast_binomial_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    m: u64,
+    data: Option<&[u8]>,
+    virt: bool,
+    out: &mut Vec<u8>,
+) -> Result<(), TransportError> {
     let p = t.size();
     let rank = t.rank();
     if root >= p {
@@ -134,17 +195,20 @@ pub fn bcast_binomial<T: Transport + ?Sized>(
             return Err(cerr(format!("data length {} != m {m}", d.len())));
         }
     }
-    if rank == root && data.is_none() {
+    if !virt && rank == root && data.is_none() {
         return Err(cerr(format!("root {root} must supply the payload")));
     }
     if p == 1 {
-        return Ok(data.expect("validated above").to_vec());
+        out.clear();
+        if !virt {
+            out.extend_from_slice(data.expect("validated above"));
+        }
+        return Ok(());
     }
     let q = ceil_log2(p);
     let rel = (rank + p - root) % p;
-    // The received message (non-root ranks only); the root always borrows
-    // the caller's payload.
-    let mut held: Vec<u8> = Vec::new();
+    // Non-root ranks receive the whole message directly into `out`; the
+    // root always borrows the caller's payload.
     let mut have = rel == 0;
     for j in 0..q {
         let step = 1u64 << j;
@@ -152,10 +216,12 @@ pub fn bcast_binomial<T: Transport + ?Sized>(
             let to_rel = rel + step;
             if to_rel < p {
                 debug_assert!(have, "binomial sender must hold the message");
-                let payload: &[u8] = if rank == root {
-                    data.expect("validated above")
+                let payload: Payload = if virt {
+                    Payload::Virtual(m)
+                } else if rank == root {
+                    Payload::Bytes(data.expect("validated above"))
                 } else {
-                    &held
+                    Payload::Bytes(out.as_slice())
                 };
                 t.sendrecv_into(
                     Some(SendSpec {
@@ -171,8 +237,15 @@ pub fn bcast_binomial<T: Transport + ?Sized>(
             }
         } else if rel < 2 * step {
             let from = (rel - step + root) % p;
-            let got = t.sendrecv_into(None, Some(from), &mut held)?;
-            check_frame(rank, "binomial bcast", got, held.len() as u64, 0, m)?;
+            let got = t.sendrecv_into(None, Some(from), out)?;
+            check_frame(
+                rank,
+                "binomial bcast",
+                got,
+                out.len() as u64,
+                0,
+                if virt { None } else { Some(m) },
+            )?;
             have = true;
         } else {
             idle_round(t)?;
@@ -183,22 +256,25 @@ pub fn bcast_binomial<T: Transport + ?Sized>(
             "rank {rank}: binomial tree never reached relative rank {rel}"
         )));
     }
-    let out = if rank == root {
-        data.expect("validated above").to_vec()
-    } else {
-        held
-    };
-    if rank != root {
-        if let Some(d) = data {
-            if out != d {
-                return Err(cerr(format!(
-                    "rank {rank}: binomial delivery differs from the reference"
-                )));
-            }
+    if virt {
+        return Ok(());
+    }
+    if rank == root {
+        out.clear();
+        out.extend_from_slice(data.expect("validated above"));
+    } else if let Some(d) = data {
+        if out.as_slice() != d {
+            return Err(cerr(format!(
+                "rank {rank}: binomial delivery differs from the reference"
+            )));
         }
     }
-    Ok(out)
+    Ok(())
 }
+
+// ---------------------------------------------------------------------------
+// Van de Geijn scatter-allgather broadcast
+// ---------------------------------------------------------------------------
 
 /// Van de Geijn broadcast as an SPMD program: binomial scatter of `p`
 /// chunks, then a ring allgather — `⌈log₂p⌉ + p - 1` rounds, ≈ `2m` bytes
@@ -221,6 +297,47 @@ pub fn bcast_scatter_allgather<T: Transport + ?Sized>(
     m: u64,
     data: Option<&[u8]>,
 ) -> Result<Vec<u8>, TransportError> {
+    let mut pool = BufferPool::default();
+    let mut out = Vec::new();
+    bcast_scatter_allgather_into(t, root, m, data, &mut pool, &mut out)?;
+    Ok(out)
+}
+
+/// [`bcast_scatter_allgather`] with caller-owned storage: the reassembled
+/// message lands in `out` and the scatter/ring scratch buffers are drawn
+/// from and recycled into `pool`, so repeated broadcasts are
+/// allocation-free in steady state.
+pub fn bcast_scatter_allgather_into<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    m: u64,
+    data: Option<&[u8]>,
+    pool: &mut BufferPool,
+    out: &mut Vec<u8>,
+) -> Result<(), TransportError> {
+    bcast_scatter_allgather_impl(t, root, m, data, false, pool, out)
+}
+
+/// [`bcast_scatter_allgather`] in virtual (size-only) mode: the identical
+/// scatter/ring rounds with [`Payload::Virtual`] chunk spans.
+pub fn bcast_scatter_allgather_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    m: u64,
+) -> Result<(), TransportError> {
+    let mut pool = BufferPool::with_capacity(0);
+    bcast_scatter_allgather_impl(t, root, m, None, true, &mut pool, &mut Vec::new())
+}
+
+fn bcast_scatter_allgather_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    m: u64,
+    data: Option<&[u8]>,
+    virt: bool,
+    pool: &mut BufferPool,
+    out: &mut Vec<u8>,
+) -> Result<(), TransportError> {
     let p = t.size();
     let rank = t.rank();
     if root >= p {
@@ -231,11 +348,15 @@ pub fn bcast_scatter_allgather<T: Transport + ?Sized>(
             return Err(cerr(format!("data length {} != m {m}", d.len())));
         }
     }
-    if rank == root && data.is_none() {
+    if !virt && rank == root && data.is_none() {
         return Err(cerr(format!("root {root} must supply the payload")));
     }
     if p == 1 {
-        return Ok(data.expect("validated above").to_vec());
+        out.clear();
+        if !virt {
+            out.extend_from_slice(data.expect("validated above"));
+        }
+        return Ok(());
     }
     let q = ceil_log2(p);
     let rel = (rank + p - root) % p;
@@ -249,9 +370,10 @@ pub fn bcast_scatter_allgather<T: Transport + ?Sized>(
     // chunk split in the same global round, so the round structure is
     // identical on every rank.
     let (mut lo, mut hi) = (0u64, p);
-    // Received scatter bytes (non-root ranks): chunks [lo, hi) once this
-    // rank has become an owner, based at byte offset part.offset(lo).
-    let mut held: Vec<u8> = Vec::new();
+    // Received scatter bytes (non-root ranks, data mode): chunks [lo, hi)
+    // once this rank has become an owner, based at byte offset
+    // part.offset(lo).
+    let mut held: Vec<u8> = pool.get();
     let mut received = rel == 0;
     for _ in 0..q {
         if hi - lo <= 1 {
@@ -265,11 +387,13 @@ pub fn bcast_scatter_allgather<T: Transport + ?Sized>(
             // Owner: send the upper chunk span [mid, hi) and keep [lo, mid).
             debug_assert!(received, "scatter owner must hold its span");
             let bytes = span(mid, hi);
-            let payload: &[u8] = if rank == root {
-                &data.expect("validated above")[bytes]
+            let payload: Payload = if virt {
+                Payload::Virtual((bytes.end - bytes.start) as u64)
+            } else if rank == root {
+                Payload::Bytes(&data.expect("validated above")[bytes])
             } else {
                 let base = part.offset(lo as usize) as usize;
-                &held[bytes.start - base..bytes.end - base]
+                Payload::Bytes(&held[bytes.start - base..bytes.end - base])
             };
             t.sendrecv_into(
                 Some(SendSpec {
@@ -281,7 +405,7 @@ pub fn bcast_scatter_allgather<T: Transport + ?Sized>(
                 &mut Vec::new(),
             )?;
             hi = mid;
-            if rank != root {
+            if !virt && rank != root {
                 // Drop the sent suffix; [lo, mid) stays in place.
                 let base = part.offset(lo as usize) as usize;
                 held.truncate(part.offset(mid as usize) as usize - base);
@@ -297,7 +421,11 @@ pub fn bcast_scatter_allgather<T: Transport + ?Sized>(
                 got,
                 held.len() as u64,
                 mid,
-                (want.end - want.start) as u64,
+                if virt {
+                    None
+                } else {
+                    Some((want.end - want.start) as u64)
+                },
             )?;
             lo = mid;
             received = true;
@@ -321,16 +449,22 @@ pub fn bcast_scatter_allgather<T: Transport + ?Sized>(
 
     // --- Ring allgather: p - 1 rounds ------------------------------------
     // `out` is the reassembled message; start with the own chunk in place.
-    let mut out = vec![0u8; m as usize];
+    if !virt {
+        out.clear();
+        out.resize(m as usize, 0);
+        if rank == root {
+            out.copy_from_slice(data.expect("validated above"));
+        } else {
+            out[part.range(rel as usize)].copy_from_slice(&held);
+        }
+    }
     let mut have = vec![false; p as usize];
-    if rank == root {
-        out.copy_from_slice(data.expect("validated above"));
-        have.fill(true);
+    if rel == 0 {
+        have.fill(true); // relative rank 0 is the root: it has everything
     } else {
-        out[part.range(rel as usize)].copy_from_slice(&held);
         have[rel as usize] = true;
     }
-    let mut recv_scratch: Vec<u8> = Vec::new();
+    let mut recv_scratch: Vec<u8> = pool.get();
     for round in 0..p - 1 {
         // Relative rank `rel` sends chunk (rel - round) and receives chunk
         // (rel - 1 - round), both mod p — the standard ring pipeline.
@@ -341,11 +475,16 @@ pub fn bcast_scatter_allgather<T: Transport + ?Sized>(
                 "rank {rank} ring round {round}: chunk {send_c} not yet held"
             )));
         }
+        let payload: Payload = if virt {
+            Payload::Virtual(part.size(send_c))
+        } else {
+            Payload::Bytes(&out[part.range(send_c)])
+        };
         let got = t.sendrecv_into(
             Some(SendSpec {
                 to: ((rel + 1) % p + root) % p,
                 tag: send_c as u64,
-                data: &out[part.range(send_c)],
+                data: payload,
             }),
             Some(((rel + p - 1) % p + root) % p),
             &mut recv_scratch,
@@ -356,25 +495,33 @@ pub fn bcast_scatter_allgather<T: Transport + ?Sized>(
             got,
             recv_scratch.len() as u64,
             recv_c as u64,
-            part.size(recv_c),
+            if virt { None } else { Some(part.size(recv_c)) },
         )?;
-        out[part.range(recv_c)].copy_from_slice(&recv_scratch);
+        if !virt {
+            out[part.range(recv_c)].copy_from_slice(&recv_scratch);
+        }
         have[recv_c] = true;
     }
+    pool.put(held);
+    pool.put(recv_scratch);
     if let Some(i) = have.iter().position(|&h| !h) {
         return Err(cerr(format!("rank {rank}: missing chunk {i}")));
     }
-    if rank != root {
+    if !virt && rank != root {
         if let Some(d) = data {
-            if out != d {
+            if out.as_slice() != d {
                 return Err(cerr(format!(
                     "rank {rank}: scatter-allgather delivery differs from the reference"
                 )));
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
+
+// ---------------------------------------------------------------------------
+// Ring allgatherv
+// ---------------------------------------------------------------------------
 
 /// Classical ring allgatherv as an SPMD program: `p - 1` rounds, each rank
 /// forwarding to `rank + 1` the whole contribution it received the
@@ -396,23 +543,52 @@ pub fn allgatherv_ring<T: Transport + ?Sized>(
     counts: &[u64],
     mine: &[u8],
 ) -> Result<Vec<Vec<u8>>, TransportError> {
+    let mut out = Vec::new();
+    allgatherv_ring_into(t, counts, mine, &mut out)?;
+    Ok(out)
+}
+
+/// [`allgatherv_ring`] with caller-owned output slots: `out` is resized to
+/// `p` vectors (cleared, capacities reused), so repeated calls perform
+/// zero steady-state payload allocations.
+pub fn allgatherv_ring_into<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+    mine: &[u8],
+    out: &mut Vec<Vec<u8>>,
+) -> Result<(), TransportError> {
+    allgatherv_ring_impl(t, counts, Some(mine), false, out)
+}
+
+/// [`allgatherv_ring`] in virtual (size-only) mode.
+pub fn allgatherv_ring_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+) -> Result<(), TransportError> {
+    allgatherv_ring_impl(t, counts, None, true, &mut Vec::new())
+}
+
+fn allgatherv_ring_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+    mine: Option<&[u8]>,
+    virt: bool,
+    out: &mut Vec<Vec<u8>>,
+) -> Result<(), TransportError> {
     let p = t.size();
     let rank = t.rank();
-    if counts.len() as u64 != p {
-        return Err(cerr(format!("counts length {} != p {p}", counts.len())));
-    }
-    if mine.len() as u64 != counts[rank as usize] {
-        return Err(cerr(format!(
-            "rank {rank}: contribution is {} bytes, counts says {}",
-            mine.len(),
-            counts[rank as usize]
-        )));
-    }
+    validate_contribution(p, rank, counts, mine, virt)?;
     if p == 1 {
-        return Ok(vec![mine.to_vec()]);
+        fill_single_rank(out, mine, virt);
+        return Ok(());
     }
-    let mut out: Vec<Vec<u8>> = (0..p as usize).map(|_| Vec::new()).collect();
-    out[rank as usize] = mine.to_vec();
+    if !virt {
+        out.resize_with(p as usize, Vec::new);
+        for slot in out.iter_mut() {
+            slot.clear();
+        }
+        out[rank as usize].extend_from_slice(mine.expect("validated above"));
+    }
     let mut have = vec![false; p as usize];
     have[rank as usize] = true;
     let to = (rank + 1) % p;
@@ -425,25 +601,83 @@ pub fn allgatherv_ring<T: Transport + ?Sized>(
                 "rank {rank} round {round}: chunk {send_c} not yet held"
             )));
         }
-        let (send_slice, recv_slot) = send_recv_slots(&mut out, send_c, recv_c);
-        let got = t.sendrecv_into(
-            Some(SendSpec {
-                to,
-                tag: send_c as u64,
-                data: send_slice,
-            }),
-            Some(from),
-            recv_slot,
-        )?;
-        let got_len = recv_slot.len() as u64;
-        check_frame(rank, "ring allgatherv", got, got_len, recv_c as u64, counts[recv_c])?;
+        if virt {
+            let mut sink = Vec::new();
+            let got = t.sendrecv_into(
+                Some(SendSpec {
+                    to,
+                    tag: send_c as u64,
+                    data: Payload::Virtual(counts[send_c]),
+                }),
+                Some(from),
+                &mut sink,
+            )?;
+            check_frame(rank, "ring allgatherv", got, 0, recv_c as u64, None)?;
+        } else {
+            let (send_slice, recv_slot) = send_recv_slots(out, send_c, recv_c);
+            let got = t.sendrecv_into(
+                Some(SendSpec {
+                    to,
+                    tag: send_c as u64,
+                    data: Payload::Bytes(send_slice),
+                }),
+                Some(from),
+                recv_slot,
+            )?;
+            let got_len = recv_slot.len() as u64;
+            check_frame(
+                rank,
+                "ring allgatherv",
+                got,
+                got_len,
+                recv_c as u64,
+                Some(counts[recv_c]),
+            )?;
+        }
         have[recv_c] = true;
     }
     if let Some(j) = have.iter().position(|&h| !h) {
         return Err(cerr(format!("rank {rank}: missing contribution {j}")));
     }
-    Ok(out)
+    Ok(())
 }
+
+/// Shared head of the allgatherv baselines: `counts` must cover `p` ranks
+/// and (in data mode) `mine` must match this rank's count.
+fn validate_contribution(
+    p: u64,
+    rank: u64,
+    counts: &[u64],
+    mine: Option<&[u8]>,
+    virt: bool,
+) -> Result<(), TransportError> {
+    if counts.len() as u64 != p {
+        return Err(cerr(format!("counts length {} != p {p}", counts.len())));
+    }
+    match mine {
+        Some(m) if m.len() as u64 != counts[rank as usize] => Err(cerr(format!(
+            "rank {rank}: contribution is {} bytes, counts says {}",
+            m.len(),
+            counts[rank as usize]
+        ))),
+        None if !virt => Err(cerr(format!("rank {rank} must supply its contribution"))),
+        _ => Ok(()),
+    }
+}
+
+/// Shared `p == 1` tail of the allgatherv baselines.
+fn fill_single_rank(out: &mut Vec<Vec<u8>>, mine: Option<&[u8]>, virt: bool) {
+    if virt {
+        return;
+    }
+    out.resize_with(1, Vec::new);
+    out[0].clear();
+    out[0].extend_from_slice(mine.expect("validated by the caller"));
+}
+
+// ---------------------------------------------------------------------------
+// Bruck allgatherv
+// ---------------------------------------------------------------------------
 
 /// Bruck/dissemination allgatherv as an SPMD program: `⌈log₂p⌉` rounds
 /// with doubling chunk sets.
@@ -461,34 +695,70 @@ pub fn allgatherv_bruck<T: Transport + ?Sized>(
     counts: &[u64],
     mine: &[u8],
 ) -> Result<Vec<Vec<u8>>, TransportError> {
+    let mut pool = BufferPool::default();
+    let mut out = Vec::new();
+    allgatherv_bruck_into(t, counts, mine, &mut pool, &mut out)?;
+    Ok(out)
+}
+
+/// [`allgatherv_bruck`] with caller-owned storage: output slots in `out`
+/// and pack/unpack scratch from `pool` are reused across calls, so
+/// repeated calls perform zero steady-state payload allocations.
+pub fn allgatherv_bruck_into<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+    mine: &[u8],
+    pool: &mut BufferPool,
+    out: &mut Vec<Vec<u8>>,
+) -> Result<(), TransportError> {
+    allgatherv_bruck_impl(t, counts, Some(mine), false, pool, out)
+}
+
+/// [`allgatherv_bruck`] in virtual (size-only) mode.
+pub fn allgatherv_bruck_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+) -> Result<(), TransportError> {
+    let mut pool = BufferPool::with_capacity(0);
+    allgatherv_bruck_impl(t, counts, None, true, &mut pool, &mut Vec::new())
+}
+
+fn allgatherv_bruck_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+    mine: Option<&[u8]>,
+    virt: bool,
+    pool: &mut BufferPool,
+    out: &mut Vec<Vec<u8>>,
+) -> Result<(), TransportError> {
     let p = t.size();
     let rank = t.rank();
-    if counts.len() as u64 != p {
-        return Err(cerr(format!("counts length {} != p {p}", counts.len())));
-    }
-    if mine.len() as u64 != counts[rank as usize] {
-        return Err(cerr(format!(
-            "rank {rank}: contribution is {} bytes, counts says {}",
-            mine.len(),
-            counts[rank as usize]
-        )));
-    }
+    validate_contribution(p, rank, counts, mine, virt)?;
     if p == 1 {
-        return Ok(vec![mine.to_vec()]);
+        fill_single_rank(out, mine, virt);
+        return Ok(());
     }
-    let mut out: Vec<Vec<u8>> = (0..p as usize).map(|_| Vec::new()).collect();
-    out[rank as usize] = mine.to_vec();
+    if !virt {
+        out.resize_with(p as usize, Vec::new);
+        for slot in out.iter_mut() {
+            slot.clear();
+        }
+        out[rank as usize].extend_from_slice(mine.expect("validated above"));
+    }
     let mut have = vec![false; p as usize];
     have[rank as usize] = true;
     // Round-reused scratch: the packed outgoing message and inbound frame.
-    let mut send_buf: Vec<u8> = Vec::new();
-    let mut recv_buf: Vec<u8> = Vec::new();
+    let mut send_buf: Vec<u8> = pool.get();
+    let mut recv_buf: Vec<u8> = pool.get();
     let mut h = 1u64;
     while h < p {
         let cnt = h.min(p - h);
         let to = (rank + p - h) % p;
         let from = (rank + h) % p;
-        send_buf.clear();
+        let mut send_bytes = 0u64;
+        if !virt {
+            send_buf.clear();
+        }
         for i in 0..cnt {
             let c = ((rank + i) % p) as usize;
             if !have[c] {
@@ -496,35 +766,183 @@ pub fn allgatherv_bruck<T: Transport + ?Sized>(
                     "rank {rank} (bruck h={h}): chunk {c} not yet held"
                 )));
             }
-            send_buf.extend_from_slice(&out[c]);
+            send_bytes += counts[c];
+            if !virt {
+                send_buf.extend_from_slice(&out[c]);
+            }
         }
+        let payload: Payload = if virt {
+            Payload::Virtual(send_bytes)
+        } else {
+            Payload::Bytes(&send_buf)
+        };
         let want: u64 = (0..cnt).map(|i| counts[((rank + h + i) % p) as usize]).sum();
         let got = t.sendrecv_into(
             Some(SendSpec {
                 to,
                 tag: h,
-                data: &send_buf,
+                data: payload,
             }),
             Some(from),
             &mut recv_buf,
         )?;
-        check_frame(rank, "bruck allgatherv", got, recv_buf.len() as u64, h, want)?;
-        let mut off = 0usize;
-        for i in 0..cnt {
-            let c = ((rank + h + i) % p) as usize;
-            let sz = counts[c] as usize;
-            out[c].clear();
-            out[c].extend_from_slice(&recv_buf[off..off + sz]);
-            have[c] = true;
-            off += sz;
+        check_frame(
+            rank,
+            "bruck allgatherv",
+            got,
+            recv_buf.len() as u64,
+            h,
+            if virt { None } else { Some(want) },
+        )?;
+        if !virt {
+            let mut off = 0usize;
+            for i in 0..cnt {
+                let c = ((rank + h + i) % p) as usize;
+                let sz = counts[c] as usize;
+                out[c].clear();
+                out[c].extend_from_slice(&recv_buf[off..off + sz]);
+                have[c] = true;
+                off += sz;
+            }
+        } else {
+            for i in 0..cnt {
+                have[((rank + h + i) % p) as usize] = true;
+            }
         }
         h += cnt;
     }
+    pool.put(send_buf);
+    pool.put(recv_buf);
     if let Some(j) = have.iter().position(|&h| !h) {
         return Err(cerr(format!("rank {rank}: missing contribution {j}")));
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Gather + binomial-broadcast allgatherv
+// ---------------------------------------------------------------------------
+
+/// Gather-to-rank-0 then binomial broadcast of the concatenation, as an
+/// SPMD program: `2⌈log₂p⌉` rounds — the simplest (and degenerate-prone)
+/// native allgatherv pattern the paper's figures compare against.
+///
+/// Phase 1 is a binomial gather on absolute ranks (rank 0 is the fixed
+/// root, matching the centralized sweep this replaces): in round `k`,
+/// ranks `≡ 2ᵏ (mod 2ᵏ⁺¹)` fold their contiguous contribution span into
+/// rank `- 2ᵏ`; spans always append, so a receiver extends one buffer.
+/// Phase 2 reuses the binomial broadcast verbatim on the `total`-byte
+/// concatenation — every edge carries *everything*, which is exactly why
+/// this pattern loses to Algorithm 2 at scale.
+///
+/// Argument and return conventions are those of [`allgatherv_ring`].
+pub fn allgatherv_gather_bcast<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+    mine: &[u8],
+) -> Result<Vec<Vec<u8>>, TransportError> {
+    allgatherv_gather_bcast_impl(t, counts, Some(mine), false)
+}
+
+/// [`allgatherv_gather_bcast`] in virtual (size-only) mode.
+pub fn allgatherv_gather_bcast_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+) -> Result<(), TransportError> {
+    allgatherv_gather_bcast_impl(t, counts, None, true).map(|_| ())
+}
+
+fn allgatherv_gather_bcast_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    counts: &[u64],
+    mine: Option<&[u8]>,
+    virt: bool,
+) -> Result<Vec<Vec<u8>>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    validate_contribution(p, rank, counts, mine, virt)?;
+    if p == 1 {
+        return Ok(mine.map(|m| vec![m.to_vec()]).unwrap_or_default());
+    }
+    let q = ceil_log2(p);
+    let total: u64 = counts.iter().sum();
+    // Phase 1: binomial gather to rank 0. This rank owns the contiguous
+    // span [rank, hi); each non-zero rank sends exactly once, in round
+    // `rank.trailing_zeros()`.
+    let mut hi = rank + 1;
+    let mut held: Vec<u8> = if virt {
+        Vec::new()
+    } else {
+        mine.expect("validated above").to_vec()
+    };
+    let mut recv_scratch: Vec<u8> = Vec::new();
+    for k in 0..q {
+        let step = 1u64 << k;
+        if rank % (step * 2) == step {
+            let bytes: u64 = (rank..hi).map(|i| counts[i as usize]).sum();
+            let payload: Payload = if virt {
+                Payload::Virtual(bytes)
+            } else {
+                Payload::Bytes(&held)
+            };
+            t.sendrecv_into(
+                Some(SendSpec {
+                    to: rank - step,
+                    tag: rank,
+                    data: payload,
+                }),
+                None,
+                &mut Vec::new(),
+            )?;
+        } else if rank % (step * 2) == 0 && rank + step < p {
+            let sender = rank + step;
+            let sender_hi = (sender + step).min(p);
+            let want: u64 = (sender..sender_hi).map(|i| counts[i as usize]).sum();
+            let got = t.sendrecv_into(None, Some(sender), &mut recv_scratch)?;
+            check_frame(
+                rank,
+                "gather-bcast gather",
+                got,
+                recv_scratch.len() as u64,
+                sender,
+                if virt { None } else { Some(want) },
+            )?;
+            if !virt {
+                // The incoming span starts exactly at this rank's current
+                // hi, so the concatenation stays contiguous.
+                held.extend_from_slice(&recv_scratch);
+            }
+            hi = sender_hi;
+        } else {
+            idle_round(t)?;
+        }
+    }
+    // Phase 2: binomial broadcast of the total concatenation from rank 0.
+    let mut concat = Vec::new();
+    if virt {
+        bcast_binomial_virtual(t, 0, total)?;
+        return Ok(Vec::new());
+    }
+    let root_data = if rank == 0 { Some(held.as_slice()) } else { None };
+    bcast_binomial_into(t, 0, total, root_data, &mut concat)?;
+    // Split the concatenation back into per-root contributions.
+    let mut out: Vec<Vec<u8>> = Vec::with_capacity(p as usize);
+    let mut off = 0usize;
+    for &c in counts {
+        out.push(concat[off..off + c as usize].to_vec());
+        off += c as usize;
+    }
+    if out[rank as usize].as_slice() != mine.expect("validated above") {
+        return Err(cerr(format!(
+            "rank {rank}: gather-bcast returned a different own contribution"
+        )));
+    }
     Ok(out)
 }
+
+// ---------------------------------------------------------------------------
+// Binomial reduce
+// ---------------------------------------------------------------------------
 
 /// Classical binomial-tree reduction (f32 sum) to `root` as an SPMD
 /// program: `⌈log₂p⌉` rounds, the whole vector on every edge — the
@@ -540,20 +958,63 @@ pub fn reduce_binomial<T: Transport + ?Sized>(
     root: u64,
     mine: &[f32],
 ) -> Result<Vec<f32>, TransportError> {
+    let mut pool = BufferPool::default();
+    let mut acc = Vec::new();
+    reduce_binomial_into(t, root, mine, &mut pool, &mut acc)?;
+    Ok(acc)
+}
+
+/// [`reduce_binomial`] with caller-owned storage: the accumulator lands in
+/// `acc` (cleared, capacity reused) and wire scratch comes from `pool`, so
+/// repeated reductions perform zero steady-state payload allocations.
+pub fn reduce_binomial_into<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    mine: &[f32],
+    pool: &mut BufferPool,
+    acc: &mut Vec<f32>,
+) -> Result<(), TransportError> {
+    reduce_binomial_impl(t, root, mine.len(), Some(mine), false, pool, acc)
+}
+
+/// [`reduce_binomial`] in virtual (size-only) mode: `⌈log₂p⌉` rounds of
+/// [`Payload::Virtual`] whole-vector (`4·elems`-byte) blocks.
+pub fn reduce_binomial_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    elems: usize,
+) -> Result<(), TransportError> {
+    let mut pool = BufferPool::with_capacity(0);
+    reduce_binomial_impl(t, root, elems, None, true, &mut pool, &mut Vec::new())
+}
+
+fn reduce_binomial_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    elems: usize,
+    mine: Option<&[f32]>,
+    virt: bool,
+    pool: &mut BufferPool,
+    acc: &mut Vec<f32>,
+) -> Result<(), TransportError> {
     let p = t.size();
     let rank = t.rank();
     if root >= p {
         return Err(cerr(format!("root {root} out of range (p = {p})")));
     }
-    let mut acc = mine.to_vec();
+    if !virt {
+        let m = mine.ok_or_else(|| cerr(format!("rank {rank} must supply its contribution")))?;
+        acc.clear();
+        acc.extend_from_slice(m);
+    }
     if p == 1 {
-        return Ok(acc);
+        return Ok(());
     }
     let q = ceil_log2(p);
     let rel = (rank + p - root) % p;
-    let bytes = (mine.len() * 4) as u64;
-    let mut send_scratch: Vec<u8> = Vec::new();
-    let mut recv_scratch: Vec<u8> = Vec::new();
+    let bytes = (elems * 4) as u64;
+    let mut send_scratch: Vec<u8> = pool.get();
+    let mut recv_scratch: Vec<u8> = pool.get();
     // Reverse the binomial broadcast: round j runs from q-1 down to 0;
     // relative ranks in [2ʲ, 2ʲ⁺¹) emit their accumulator to rel - 2ʲ,
     // which combines it. Each rank sends exactly once; the root never
@@ -561,12 +1022,17 @@ pub fn reduce_binomial<T: Transport + ?Sized>(
     for j in (0..q).rev() {
         let step = 1u64 << j;
         if rel >= step && rel < 2 * step {
-            f32s_to_scratch(&acc, &mut send_scratch);
+            let payload: Payload = if virt {
+                Payload::Virtual(bytes)
+            } else {
+                f32s_to_scratch(acc, &mut send_scratch);
+                Payload::Bytes(&send_scratch)
+            };
             t.sendrecv_into(
                 Some(SendSpec {
                     to: (rel - step + root) % p,
                     tag: 0,
-                    data: &send_scratch,
+                    data: payload,
                 }),
                 None,
                 &mut Vec::new(),
@@ -574,14 +1040,29 @@ pub fn reduce_binomial<T: Transport + ?Sized>(
         } else if rel < step && rel + step < p {
             let from = (rel + step + root) % p;
             let got = t.sendrecv_into(None, Some(from), &mut recv_scratch)?;
-            check_frame(rank, "binomial reduce", got, recv_scratch.len() as u64, 0, bytes)?;
-            combine_bytes(&mut acc, &recv_scratch);
+            check_frame(
+                rank,
+                "binomial reduce",
+                got,
+                recv_scratch.len() as u64,
+                0,
+                if virt { None } else { Some(bytes) },
+            )?;
+            if !virt {
+                combine_bytes(acc, &recv_scratch);
+            }
         } else {
             idle_round(t)?;
         }
     }
-    Ok(acc)
+    pool.put(send_scratch);
+    pool.put(recv_scratch);
+    Ok(())
 }
+
+// ---------------------------------------------------------------------------
+// Ring allreduce
+// ---------------------------------------------------------------------------
 
 /// Ring allreduce (f32 sum) as an SPMD program: ring reduce-scatter then
 /// ring allgather, `2(p - 1)` rounds — the classical bandwidth-optimal
@@ -599,31 +1080,76 @@ pub fn allreduce_ring<T: Transport + ?Sized>(
     t: &mut T,
     mine: &[f32],
 ) -> Result<Vec<f32>, TransportError> {
+    let mut pool = BufferPool::default();
+    let mut acc = Vec::new();
+    allreduce_ring_into(t, mine, &mut pool, &mut acc)?;
+    Ok(acc)
+}
+
+/// [`allreduce_ring`] with caller-owned storage: the result lands in `acc`
+/// and wire scratch comes from `pool`, so repeated allreduces perform zero
+/// steady-state payload allocations.
+pub fn allreduce_ring_into<T: Transport + ?Sized>(
+    t: &mut T,
+    mine: &[f32],
+    pool: &mut BufferPool,
+    acc: &mut Vec<f32>,
+) -> Result<(), TransportError> {
+    allreduce_ring_impl(t, mine.len(), Some(mine), false, pool, acc)
+}
+
+/// [`allreduce_ring`] in virtual (size-only) mode: `2(p - 1)` rounds of
+/// [`Payload::Virtual`] chunk blocks.
+pub fn allreduce_ring_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    elems: usize,
+) -> Result<(), TransportError> {
+    let mut pool = BufferPool::with_capacity(0);
+    allreduce_ring_impl(t, elems, None, true, &mut pool, &mut Vec::new())
+}
+
+fn allreduce_ring_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    elems: usize,
+    mine: Option<&[f32]>,
+    virt: bool,
+    pool: &mut BufferPool,
+    acc: &mut Vec<f32>,
+) -> Result<(), TransportError> {
     let p = t.size();
     let rank = t.rank();
-    let mut acc = mine.to_vec();
-    if p == 1 {
-        return Ok(acc);
+    if !virt {
+        let m = mine.ok_or_else(|| cerr(format!("rank {rank} must supply its contribution")))?;
+        acc.clear();
+        acc.extend_from_slice(m);
     }
-    let part = BlockPartition::new((mine.len() * 4) as u64, p as usize);
+    if p == 1 {
+        return Ok(());
+    }
+    let part = BlockPartition::new((elems * 4) as u64, p as usize);
     let erange = |c: usize| {
         let r = part.range(c);
         r.start / 4..r.end / 4
     };
     let to = (rank + 1) % p;
     let from = (rank + p - 1) % p;
-    let mut send_scratch: Vec<u8> = Vec::new();
-    let mut recv_scratch: Vec<u8> = Vec::new();
+    let mut send_scratch: Vec<u8> = pool.get();
+    let mut recv_scratch: Vec<u8> = pool.get();
     // Phase 1: reduce-scatter.
     for round in 0..p - 1 {
         let send_c = ((rank + p - round % p) % p) as usize;
         let recv_c = ((rank + p - 1 - round % p) % p) as usize;
-        f32s_to_scratch(&acc[erange(send_c)], &mut send_scratch);
+        let payload: Payload = if virt {
+            Payload::Virtual(erange(send_c).len() as u64 * 4)
+        } else {
+            f32s_to_scratch(&acc[erange(send_c)], &mut send_scratch);
+            Payload::Bytes(&send_scratch)
+        };
         let got = t.sendrecv_into(
             Some(SendSpec {
                 to,
                 tag: send_c as u64,
-                data: &send_scratch,
+                data: payload,
             }),
             Some(from),
             &mut recv_scratch,
@@ -636,21 +1162,32 @@ pub fn allreduce_ring<T: Transport + ?Sized>(
             got,
             recv_scratch.len() as u64,
             recv_c as u64,
-            (erange(recv_c).len() * 4) as u64,
+            if virt {
+                None
+            } else {
+                Some((erange(recv_c).len() * 4) as u64)
+            },
         )?;
-        combine_bytes(&mut acc[erange(recv_c)], &recv_scratch);
+        if !virt {
+            combine_bytes(&mut acc[erange(recv_c)], &recv_scratch);
+        }
     }
     // Phase 2: allgather of the completed chunks. Rank r finished chunk
     // (r + 1) mod p in the last reduce-scatter round; circulate from there.
     for round in 0..p - 1 {
         let send_c = ((rank + 1 + p - round % p) % p) as usize;
         let recv_c = ((rank + p - round % p) % p) as usize;
-        f32s_to_scratch(&acc[erange(send_c)], &mut send_scratch);
+        let payload: Payload = if virt {
+            Payload::Virtual(erange(send_c).len() as u64 * 4)
+        } else {
+            f32s_to_scratch(&acc[erange(send_c)], &mut send_scratch);
+            Payload::Bytes(&send_scratch)
+        };
         let got = t.sendrecv_into(
             Some(SendSpec {
                 to,
                 tag: send_c as u64,
-                data: &send_scratch,
+                data: payload,
             }),
             Some(from),
             &mut recv_scratch,
@@ -661,13 +1198,21 @@ pub fn allreduce_ring<T: Transport + ?Sized>(
             got,
             recv_scratch.len() as u64,
             recv_c as u64,
-            (erange(recv_c).len() * 4) as u64,
+            if virt {
+                None
+            } else {
+                Some((erange(recv_c).len() * 4) as u64)
+            },
         )?;
-        for (d, c) in acc[erange(recv_c)].iter_mut().zip(recv_scratch.chunks_exact(4)) {
-            *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        if !virt {
+            for (d, c) in acc[erange(recv_c)].iter_mut().zip(recv_scratch.chunks_exact(4)) {
+                *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
         }
     }
-    Ok(acc)
+    pool.put(send_scratch);
+    pool.put(recv_scratch);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -701,6 +1246,32 @@ mod tests {
     }
 
     #[test]
+    fn binomial_bcast_into_reuses_output_storage() {
+        // 20 broadcasts through one reused output buffer: byte-exact every
+        // time and the storage stops moving after the first call sized it.
+        let (p, root, m) = (5u64, 2u64, 1500u64);
+        let d = payload(m, 9);
+        let ptrs = run_threads(p, TIMEOUT, |mut t| {
+            let data = if t.rank() == root { Some(&d[..]) } else { None };
+            let mut out = Vec::new();
+            let mut states = Vec::new();
+            for _ in 0..20 {
+                bcast_binomial_into(&mut t, root, m, data, &mut out)?;
+                assert_eq!(out, d);
+                states.push(out.as_ptr() as usize);
+                t.barrier()?;
+            }
+            Ok(states)
+        })
+        .unwrap();
+        for (r, states) in ptrs.iter().enumerate() {
+            for (i, &s) in states.iter().enumerate().skip(1) {
+                assert_eq!(s, states[1], "rank {r} bcast {i}: output storage moved");
+            }
+        }
+    }
+
+    #[test]
     fn scatter_allgather_delivers_including_tiny_m() {
         for (p, root, m) in [(2u64, 0u64, 501u64), (5, 3, 1009), (8, 1, 4096), (7, 2, 3)] {
             let d = payload(m, p + root);
@@ -712,6 +1283,27 @@ mod tests {
             for buf in &out {
                 assert_eq!(buf, &d, "p={p} root={root} m={m}");
             }
+        }
+    }
+
+    #[test]
+    fn scatter_allgather_into_repeats_cleanly() {
+        let (p, root, m) = (6u64, 1u64, 3000u64);
+        let d = payload(m, 31);
+        let out = run_threads(p, TIMEOUT, |mut t| {
+            let data = if t.rank() == root { Some(&d[..]) } else { None };
+            let mut pool = BufferPool::default();
+            let mut out = Vec::new();
+            for _ in 0..5 {
+                bcast_scatter_allgather_into(&mut t, root, m, data, &mut pool, &mut out)?;
+                assert_eq!(out, d);
+                t.barrier()?;
+            }
+            Ok(out)
+        })
+        .unwrap();
+        for buf in &out {
+            assert_eq!(buf, &d);
         }
     }
 
@@ -738,6 +1330,26 @@ mod tests {
                 for all in &out {
                     assert_eq!(all, &datas, "p={p} ring={ring}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_bcast_allgatherv_delivers() {
+        for p in [2u64, 3, 5, 8, 9] {
+            let counts: Vec<u64> = (0..p).map(|j| (j % 4) * 53 + 1).collect();
+            let datas: Vec<Vec<u8>> = counts
+                .iter()
+                .enumerate()
+                .map(|(j, &c)| payload(c, j as u64 + 11))
+                .collect();
+            let out = run_threads(p, TIMEOUT, |mut t| {
+                let mine = &datas[t.rank() as usize];
+                allgatherv_gather_bcast(&mut t, &counts, mine)
+            })
+            .unwrap_or_else(|e| panic!("p={p}: {e}"));
+            for all in &out {
+                assert_eq!(all, &datas, "p={p}");
             }
         }
     }

@@ -4,39 +4,36 @@
 //! node and intra-node phases over shared memory, instead of running the
 //! flat algorithm across all ranks.
 //!
-//! * [`bcast_hierarchical`]: root → its node leader (intra), circulant
-//!   n-block broadcast across the node leaders (inter), leaders → their
-//!   node's ranks (intra circulant broadcast). All three phases reuse the
-//!   same schedule machinery at their own scale.
-//! * [`allgatherv_hierarchical`]: intra-node gather to leaders, circulant
-//!   allgatherv across leaders, intra-node broadcast of the full result.
+//! Engine-compatible wrappers around the rank-local SPMD implementations
+//! in [`crate::collectives::generic`] — since the one-core refactor there
+//! are **no round loops here**:
 //!
-//! The node mapping matches [`crate::simulator::CostModel::Hierarchical`]: rank `r` is on
-//! node `r / ranks_per_node`, the leader is the node's first rank. The
+//! * [`bcast_hierarchical`] → [`crate::collectives::generic::bcast_hierarchical`]:
+//!   root → its node leader, circulant n-block broadcast across the node
+//!   leaders over a [`crate::transport::GroupTransport`] (so the
+//!   hierarchical cost model prices those edges as inter-node), then
+//!   lockstep per-node circulant broadcasts;
+//! * [`allgatherv_hierarchical`] →
+//!   [`crate::collectives::generic::allgatherv_hierarchical_virtual`]:
+//!   intra-node binomial gathers, circulant allgatherv across leaders
+//!   (exact Algorithm-2 accounting — the old leader-level uniform-block
+//!   approximation is gone), intra-node binomial broadcasts.
+//!
+//! The node mapping matches
+//! [`crate::simulator::CostModel::Hierarchical`]: rank `r` is on node
+//! `r / ranks_per_node`, the leader is the node's first rank. The
 //! ablation `nblock ablation --hier` (EXPERIMENTS.md §Ablations) compares
 //! flat vs hierarchical under the 36×32 model.
 
-use super::bcast::{bcast_circulant, Outcome};
-use super::blocks::BlockPartition;
-use crate::sched::{BcastPlan, Schedule, Skips};
-use crate::simulator::{Engine, Msg, SimError, Stats};
-
-fn outcome(before: Stats, after: Stats) -> Outcome {
-    let d = after - before;
-    Outcome {
-        rounds: d.rounds,
-        time_s: d.time_s,
-        bytes_on_wire: d.bytes_on_wire,
-    }
-}
-
-fn cerr(msg: String) -> SimError {
-    SimError::Collective(msg)
-}
+use super::bcast::Outcome;
+use super::{generic, run_unified};
+use crate::simulator::{Engine, SimError};
 
 /// Broadcast `m` bytes from `root` over a `nodes × ranks_per_node` cluster
 /// using the leader decomposition. `n_inter` blocks are used for the
-/// inter-node phase, `n_intra` for the per-node phase.
+/// inter-node phase, `n_intra` for the per-node phase. Real bytes are
+/// moved and verified end-to-end when `data` is `Some`; a `None` payload
+/// runs the identical rounds in virtual (size-only) mode.
 pub fn bcast_hierarchical(
     eng: &mut Engine,
     root: u64,
@@ -46,309 +43,45 @@ pub fn bcast_hierarchical(
     m: u64,
     data: Option<&[u8]>,
 ) -> Result<Outcome, SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    if p % ranks_per_node != 0 {
-        return Err(cerr(format!(
-            "p = {p} not divisible by ranks_per_node = {ranks_per_node}"
-        )));
-    }
-    let nodes = p / ranks_per_node;
-    if nodes == 1 || ranks_per_node == 1 {
-        // Degenerate layouts: fall back to the flat algorithm.
-        return bcast_circulant(eng, root, n_inter.max(n_intra), m, data);
-    }
-    let root_node = root / ranks_per_node;
-    let leader = |node: u64| node * ranks_per_node;
-
-    // --- Phase 0: root → its node leader (single hop, if distinct) -------
-    if root != leader(root_node) {
-        eng.exchange(vec![Msg {
-            from: root,
-            to: leader(root_node),
-            bytes: m,
-            tag: 0,
-            data: data.map(|d| d.to_vec()),
-        }])?;
-    }
-
-    // --- Phase 1: circulant n-block broadcast over the node leaders ------
-    // Runs on the same engine with leader ranks as endpoints, so the
-    // hierarchical cost model prices these edges as inter-node.
-    sub_bcast(
-        eng,
-        &(0..nodes).map(leader).collect::<Vec<u64>>(),
-        root_node,
-        n_inter,
-        m,
-        data,
-    )?;
-
-    // --- Phase 2: per-node circulant broadcast from each leader ----------
-    // All nodes proceed in lockstep; each round carries one message per
-    // (node, edge) — still one-ported per rank since groups are disjoint.
-    let groups: Vec<Vec<u64>> = (0..nodes)
-        .map(|nd| {
-            (0..ranks_per_node)
-                .map(|i| nd * ranks_per_node + i)
-                .collect()
-        })
-        .collect();
-    sub_bcast_grouped(eng, &groups, n_intra, m, data)?;
-
-    Ok(outcome(before, eng.stats()))
-}
-
-/// Circulant broadcast over an arbitrary subset of engine ranks
-/// (`members[0]`-relative addressing; `root_idx` indexes `members`).
-fn sub_bcast(
-    eng: &mut Engine,
-    members: &[u64],
-    root_idx: u64,
-    n: usize,
-    m: u64,
-    data: Option<&[u8]>,
-) -> Result<(), SimError> {
-    sub_bcast_grouped_inner(eng, std::slice::from_ref(&members.to_vec()), &[root_idx], n, m, data)
-}
-
-/// Lockstep per-group circulant broadcasts (group roots are the first
-/// members).
-fn sub_bcast_grouped(
-    eng: &mut Engine,
-    groups: &[Vec<u64>],
-    n: usize,
-    m: u64,
-    data: Option<&[u8]>,
-) -> Result<(), SimError> {
-    let roots = vec![0u64; groups.len()];
-    sub_bcast_grouped_inner(eng, groups, &roots, n, m, data)
-}
-
-fn sub_bcast_grouped_inner(
-    eng: &mut Engine,
-    groups: &[Vec<u64>],
-    root_idx: &[u64],
-    n: usize,
-    m: u64,
-    data: Option<&[u8]>,
-) -> Result<(), SimError> {
-    // All groups share the same size ⇒ same schedules and round count.
-    let g = groups[0].len() as u64;
-    if groups.iter().any(|grp| grp.len() as u64 != g) {
-        return Err(cerr("unequal group sizes".into()));
-    }
-    if g == 1 {
-        return Ok(());
-    }
-    let skips = Skips::new(g);
-    let part = BlockPartition::new(m, n);
-    let plans: Vec<Vec<BcastPlan>> = root_idx
-        .iter()
-        .map(|&ri| {
-            (0..g)
-                .map(|r| {
-                    let rel = (r + g - ri) % g;
-                    BcastPlan::new(Schedule::compute(&skips, rel), n)
-                })
-                .collect()
-        })
-        .collect();
-    // Group-local buffers (verification mode).
-    let mut bufs: Vec<Vec<Vec<Option<Vec<u8>>>>> = if data.is_some() {
-        groups
-            .iter()
-            .enumerate()
-            .map(|(gi, _)| {
-                (0..g)
-                    .map(|r| {
-                        if r == root_idx[gi] {
-                            (0..n)
-                                .map(|i| Some(data.unwrap()[part.range(i)].to_vec()))
-                                .collect()
-                        } else {
-                            vec![None; n]
-                        }
-                    })
-                    .collect()
-            })
-            .collect()
-    } else {
-        Vec::new()
-    };
-    let rounds = plans[0][0].num_rounds();
-    for t in 0..rounds {
-        let mut msgs = Vec::new();
-        for (gi, grp) in groups.iter().enumerate() {
-            let ri = root_idx[gi];
-            for r in 0..g {
-                let a = plans[gi][r as usize].action(t);
-                let rel = (r + g - ri) % g;
-                let to_rel = skips.to_proc(rel, a.k);
-                if to_rel == 0 {
-                    continue;
-                }
-                if let Some(sb) = a.send_block {
-                    let payload = if data.is_some() {
-                        Some(bufs[gi][r as usize][sb].clone().ok_or_else(|| {
-                            cerr(format!("group {gi} rank {r}: block {sb} missing at {t}"))
-                        })?)
-                    } else {
-                        None
-                    };
-                    msgs.push(Msg {
-                        from: grp[r as usize],
-                        to: grp[((to_rel + ri) % g) as usize],
-                        bytes: part.size(sb),
-                        tag: sb as u64,
-                        data: payload,
-                    });
-                }
-            }
+    let (_, out) = run_unified(eng, |mut t| match data {
+        // Every rank passes the reference payload: the root sends it,
+        // the others assert byte-exact hierarchical delivery.
+        Some(d) => {
+            generic::bcast_hierarchical(&mut t, root, ranks_per_node, n_inter, n_intra, m, Some(d))
+                .map(|_| ())
         }
-        let inbox = eng.exchange(msgs)?;
-        if data.is_some() {
-            for (gi, grp) in groups.iter().enumerate() {
-                for r in 0..g {
-                    if let Some(msg) = &inbox[grp[r as usize] as usize] {
-                        bufs[gi][r as usize][msg.tag as usize] =
-                            Some(msg.data.clone().unwrap_or_default());
-                    }
-                }
-            }
-        }
-    }
-    if let Some(d) = data {
-        for (gi, _) in groups.iter().enumerate() {
-            for r in 0..g {
-                for i in 0..n {
-                    let got = bufs[gi][r as usize][i]
-                        .as_deref()
-                        .ok_or_else(|| cerr(format!("group {gi} rank {r}: missing block {i}")))?;
-                    if got != &d[part.range(i)] {
-                        return Err(cerr(format!("group {gi} rank {r}: block {i} corrupt")));
-                    }
-                }
-            }
-        }
-    }
-    Ok(())
+        None => generic::bcast_hierarchical_virtual(
+            &mut t,
+            root,
+            ranks_per_node,
+            n_inter,
+            n_intra,
+            m,
+        ),
+    })?;
+    Ok(out)
 }
 
 /// Hierarchical allgatherv: intra-node binomial gather to leaders →
-/// circulant allgatherv across leaders (node-aggregated counts) →
-/// intra-node broadcast of the assembled total.
+/// circulant allgatherv across leaders (per-node aggregated counts) →
+/// intra-node broadcast of the assembled total. Cost-only (virtual
+/// payloads), matching the sweep shape it has always served.
 pub fn allgatherv_hierarchical(
     eng: &mut Engine,
     ranks_per_node: u64,
     n: usize,
     counts: &[u64],
 ) -> Result<Outcome, SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    if p % ranks_per_node != 0 {
-        return Err(cerr(format!(
-            "p = {p} not divisible by ranks_per_node = {ranks_per_node}"
-        )));
-    }
-    let nodes = p / ranks_per_node;
-    let total: u64 = counts.iter().sum();
-    if nodes == 1 || ranks_per_node == 1 {
-        return super::allgather::allgatherv_circulant_cost(eng, n, counts);
-    }
-    // Phase 1: binomial gather within each node (lockstep, disjoint).
-    let q_intra = crate::sched::ceil_log2(ranks_per_node);
-    for k in 0..q_intra {
-        let step = 1u64 << k;
-        let mut msgs = Vec::new();
-        for nd in 0..nodes {
-            let base = nd * ranks_per_node;
-            for i in 0..ranks_per_node {
-                if i % (step * 2) == step {
-                    let lo = base + i;
-                    let hi = (base + (i + step).min(ranks_per_node)).min(base + ranks_per_node);
-                    let bytes: u64 = (lo..hi).map(|r| counts[r as usize]).sum();
-                    msgs.push(Msg {
-                        from: base + i,
-                        to: base + i - step,
-                        bytes,
-                        tag: 0,
-                        data: None,
-                    });
-                }
-            }
-        }
-        eng.exchange(msgs)?;
-    }
-    // Phase 2: circulant allgatherv across leaders with per-node totals.
-    let node_counts: Vec<u64> = (0..nodes)
-        .map(|nd| {
-            (0..ranks_per_node)
-                .map(|i| counts[(nd * ranks_per_node + i) as usize])
-                .sum()
-        })
-        .collect();
-    // Reuse the cost fast path on a leader-index engine view: build the
-    // message rounds manually so the hierarchical model sees leader ranks.
-    let skips = Skips::new(nodes);
-    let q = skips.q();
-    let sz: Vec<u64> = node_counts.iter().map(|&m| m.div_ceil(n as u64)).collect();
-    let tot: u64 = sz.iter().sum();
-    let mut recv_all = vec![vec![0i64; q]; nodes as usize];
-    let mut scratch = crate::sched::Scratch::new();
-    for rel in 0..nodes {
-        crate::sched::recv_schedule_into(&skips, rel, &mut scratch, &mut recv_all[rel as usize]);
-    }
-    let x = (q - (n - 1 + q) % q) % q;
-    let model = eng.cost_model();
-    for i in x..(n + q - 1 + x) {
-        let k = i % q;
-        let shift = (i - k) as i64 - x as i64;
-        let mut round_time = 0.0f64;
-        let mut round_bytes = 0u64;
-        for r in 0..nodes {
-            let to = skips.to_proc(r, k);
-            let mut bytes = tot - sz[to as usize];
-            for rel in 0..nodes {
-                if recv_all[rel as usize][k] + shift < 0 {
-                    let j = (r + skips.skip(k) + nodes - rel) % nodes;
-                    if j != to {
-                        bytes -= sz[j as usize];
-                    }
-                }
-            }
-            round_bytes += bytes;
-            round_time =
-                round_time.max(model.edge_cost(r * ranks_per_node, to * ranks_per_node, bytes));
-        }
-        eng.account_round(round_time, round_bytes);
-    }
-    // Phase 3: intra-node binomial broadcast of the assembled `total`.
-    for k in 0..q_intra {
-        let step = 1u64 << k;
-        let mut msgs = Vec::new();
-        for nd in 0..nodes {
-            let base = nd * ranks_per_node;
-            for i in 0..step.min(ranks_per_node) {
-                if i + step < ranks_per_node {
-                    msgs.push(Msg {
-                        from: base + i,
-                        to: base + i + step,
-                        bytes: total,
-                        tag: 0,
-                        data: None,
-                    });
-                }
-            }
-        }
-        eng.exchange(msgs)?;
-    }
-    Ok(outcome(before, eng.stats()))
+    let (_, out) = run_unified(eng, |mut t| {
+        generic::allgatherv_hierarchical_virtual(&mut t, ranks_per_node, n, counts)
+    })?;
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collectives::bcast::bcast_circulant;
     use crate::simulator::CostModel;
 
     fn payload(m: u64) -> Vec<u8> {

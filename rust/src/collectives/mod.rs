@@ -2,21 +2,28 @@
 //! Algorithm 2 (irregular allgatherv), plus the "native MPI" baselines the
 //! paper's figures compare against.
 //!
-//! Two execution shapes coexist:
+//! There is exactly **one** implementation of every algorithm — the
+//! rank-local SPMD programs in [`generic`] (the paper's algorithms) and
+//! [`generic_baselines`] (the classical comparisons), generic over
+//! [`crate::transport::Transport`] and runnable on the lockstep
+//! simulator/cost backend, per-rank OS threads, and TCP (byte-identical
+//! delivery pinned by `rust/tests/transport.rs` and
+//! `rust/tests/baselines.rs`).
 //!
-//! * the modules below drive all `p` ranks of the simulated machine from
-//!   one loop — the cost-model path behind the figure sweeps (virtual
-//!   payloads, `p` in the thousands);
-//! * [`generic`] holds the same algorithms as SPMD programs generic over
-//!   [`crate::transport::Transport`], where each rank computes only its
-//!   own schedule — runnable on the simulator, on per-rank OS threads,
-//!   and over TCP, with byte-identical delivery (see
-//!   `rust/tests/transport.rs`). [`generic_baselines`] ports the
-//!   classical baselines (binomial, scatter-allgather, ring, Bruck) to
-//!   the same SPMD form, and [`generic::Algorithm`] +
-//!   [`generic::bcast`]/[`generic::allgatherv`] dispatch between them
-//!   (with an `Auto` heuristic), so the paper's *comparison* runs on
-//!   real transports too (see `rust/tests/baselines.rs`).
+//! The sibling modules ([`bcast`], [`allgather`], [`reduce`],
+//! [`hierarchical`]) keep the historical Engine-driven API of the
+//! figure/table sweeps — `fn(…, &mut Engine, …) -> Outcome` — but are thin
+//! wrappers since the one-core refactor: each dispatches the generic
+//! collective over [`crate::transport::cost::CostTransport`] (real bytes
+//! when the caller supplies data, size-only
+//! [`crate::transport::Payload::Virtual`] blocks otherwise) and folds the
+//! engine accounting back into the caller's [`crate::simulator::Engine`].
+//! `rust/tests/golden.rs` pins that this unified path reproduces the
+//! pre-refactor sweep outputs bit-for-bit.
+
+use crate::simulator::{Engine, SimError};
+use crate::transport::cost::{run_cost, CostTransport};
+use crate::transport::TransportError;
 
 pub mod allgather;
 pub mod generic;
@@ -27,7 +34,6 @@ pub mod bcast;
 pub mod blocks;
 
 pub use allgather::{
-    allgatherv_circulant_cost,
     allgatherv_bruck, allgatherv_circulant, allgatherv_gather_bcast, allgatherv_ring,
     AllgatherInput,
 };
@@ -35,3 +41,34 @@ pub use bcast::{bcast_binomial, bcast_circulant, bcast_scatter_allgather, Outcom
 pub use hierarchical::{allgatherv_hierarchical, bcast_hierarchical};
 pub use reduce::{allreduce_circulant, allreduce_ring, reduce_binomial, reduce_circulant};
 pub use blocks::{allgather_block_count, bcast_block_count, BlockPartition};
+
+/// Map a transport-layer failure back to the Engine-era error type the
+/// wrapper APIs expose.
+pub(crate) fn sim_err(e: TransportError) -> SimError {
+    match e {
+        TransportError::Sim(s) => s,
+        other => SimError::Collective(other.to_string()),
+    }
+}
+
+/// Run an SPMD closure over the lockstep [`CostTransport`] backend
+/// configured like `eng` (same `p`, same cost model), fold the run's
+/// accounting back into `eng`, and return the per-rank results plus this
+/// call's [`Outcome`] delta — the shared engine-compatibility shim of the
+/// wrapper collectives.
+pub(crate) fn run_unified<R, F>(eng: &mut Engine, f: F) -> Result<(Vec<R>, Outcome), SimError>
+where
+    R: Send,
+    F: Fn(CostTransport) -> Result<R, TransportError> + Sync,
+{
+    let (out, stats) = run_cost(eng.p(), eng.cost_model(), f).map_err(sim_err)?;
+    eng.absorb(stats);
+    Ok((
+        out,
+        Outcome {
+            rounds: stats.rounds,
+            time_s: stats.time_s,
+            bytes_on_wire: stats.bytes_on_wire,
+        },
+    ))
+}

@@ -1,40 +1,33 @@
-//! Reduction collectives built from the *same* schedules, by time reversal.
+//! Reduction collectives built from the *same* schedules, by time
+//! reversal — Engine-compatible wrappers around the rank-local SPMD
+//! implementations.
 //!
 //! The paper (§1) stresses that the symmetric circulant pattern serves many
-//! collectives beyond broadcast \[2,4,5,15\]. This module exploits a clean
-//! duality: running Algorithm 1 *backwards* — reverse every edge and
-//! traverse the rounds in reverse order — turns the n-block broadcast into
-//! a round-optimal n-block **reduction** to the root:
-//!
-//! * in broadcast, processor `r` *receives* block `b` exactly once (round
-//!   `t_b`) and *forwards* it in later rounds;
-//! * reversed, `r` *combines* incoming partial blocks in reverse-rounds
-//!   `R-1-s` (for each bcast send at round `s > t_b`) and *emits* its
-//!   accumulated block `b` at reverse-round `R-1-t_b` — after all
-//!   contributions have arrived. The root ends with the full reduction of
-//!   every block in the same `n-1+⌈log₂p⌉` rounds.
-//!
+//! collectives beyond broadcast \[2,4,5,15\]. Running Algorithm 1
+//! *backwards* — reverse every edge and traverse the rounds in reverse
+//! order — turns the n-block broadcast into a round-optimal n-block
+//! **reduction** to the root; the duality argument lives with the round
+//! loop in [`crate::collectives::generic::reduce_circulant`].
 //! [`allreduce_circulant`] chains reduce + broadcast (`2(n-1+q)` rounds).
-//! Baselines: binomial-tree reduce and ring reduce-scatter + ring
-//! allgather allreduce (the classical large-message algorithm).
+//! Baselines: binomial-tree reduce
+//! ([`crate::collectives::generic_baselines::reduce_binomial`]) and ring
+//! reduce-scatter + ring allgather allreduce
+//! ([`crate::collectives::generic_baselines::allreduce_ring`]).
+//!
+//! Since the one-core refactor these functions contain **no round loops of
+//! their own**: each runs the generic collective over the lockstep
+//! [`crate::transport::cost::CostTransport`] backend with every rank's
+//! real contribution, verifies against the serial sum when asked, and
+//! folds the accounting back into the caller's [`Engine`].
 //!
 //! Payloads are `f32` vectors summed elementwise (the associative-
 //! commutative case; the schedule duality needs only associativity with
-//! the deterministic combine order used here).
+//! the deterministic combine order used there).
 
 use super::bcast::Outcome;
-use super::blocks::BlockPartition;
-use crate::sched::{BcastPlan, Schedule, Skips};
-use crate::simulator::{Engine, Msg, SimError, Stats};
-
-fn outcome(before: Stats, after: Stats) -> Outcome {
-    let d = after - before;
-    Outcome {
-        rounds: d.rounds,
-        time_s: d.time_s,
-        bytes_on_wire: d.bytes_on_wire,
-    }
-}
+use super::{generic, generic_baselines, run_unified};
+use crate::simulator::{Engine, SimError};
+use crate::transport::Transport;
 
 fn cerr(msg: String) -> SimError {
     SimError::Collective(msg)
@@ -48,31 +41,7 @@ fn combine(dst: &mut [f32], src: &[f32]) {
     }
 }
 
-fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
-    v.iter().flat_map(|x| x.to_le_bytes()).collect()
-}
-
-fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
-    b.chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect()
-}
-
-/// n-block reduction (sum) to `root` in the round-optimal `n-1+⌈log₂p⌉`
-/// rounds, by time-reversal of Algorithm 1.
-///
-/// `contrib[r]` is rank `r`'s input vector of `elems` f32; on success the
-/// returned vector is the elementwise sum (verified against a serial
-/// reference when `verify`).
-pub fn reduce_circulant(
-    eng: &mut Engine,
-    root: u64,
-    n: usize,
-    contrib: &[Vec<f32>],
-    verify: bool,
-) -> Result<(Vec<f32>, Outcome), SimError> {
-    let p = eng.p();
-    let before = eng.stats();
+fn validate(p: u64, contrib: &[Vec<f32>]) -> Result<usize, SimError> {
     if contrib.len() as u64 != p {
         return Err(cerr(format!("contrib length {} != p {p}", contrib.len())));
     }
@@ -80,91 +49,45 @@ pub fn reduce_circulant(
     if contrib.iter().any(|c| c.len() != elems) {
         return Err(cerr("ragged contributions".into()));
     }
-    if p == 1 {
-        return Ok((contrib[0].clone(), outcome(before, eng.stats())));
+    Ok(elems)
+}
+
+fn verify_sum(result: &[f32], contrib: &[Vec<f32>], what: &str) -> Result<(), SimError> {
+    let mut want = vec![0f32; result.len()];
+    for c in contrib {
+        combine(&mut want, c);
     }
-    let skips = Skips::new(p);
-    let part = BlockPartition::new((elems * 4) as u64, n);
-    // Element ranges per block (4-byte elements).
-    let erange = |b: usize| {
-        let r = part.range(b);
-        r.start / 4..r.end / 4
-    };
-    let plans: Vec<BcastPlan> = (0..p)
-        .map(|r| {
-            let rel = (r + p - root) % p;
-            BcastPlan::new(Schedule::compute(&skips, rel), n)
-        })
-        .collect();
-    let rounds = plans[0].num_rounds();
-    // acc[r]: running partial sums held by rank r (all blocks; only the
-    // blocks scheduled through r are ever consulted).
-    let mut acc: Vec<Vec<f32>> = contrib.to_vec();
-    for t_rev in 0..rounds {
-        let t = rounds - 1 - t_rev; // the bcast round being reversed
-        let mut msgs = Vec::with_capacity(p as usize);
-        for r in 0..p {
-            // Reverse of "r receives block b from f" = r emits its
-            // accumulated block b to f.
-            let a = plans[r as usize].action(t);
-            if r == root {
-                continue; // the root only combines
-            }
-            if let Some(b) = a.recv_block {
-                let rel = (r + p - root) % p;
-                let from_rel = skips.from_proc(rel, a.k); // bcast source = reduce target
-                let to = (from_rel + root) % p;
-                let er = erange(b);
-                let payload = &acc[r as usize][er.clone()];
-                msgs.push(Msg {
-                    from: r,
-                    to,
-                    bytes: (er.len() * 4) as u64,
-                    tag: b as u64,
-                    data: Some(f32s_to_bytes(payload)),
-                });
-            }
-        }
-        let inbox = eng.exchange(msgs)?;
-        for r in 0..p {
-            // Reverse of "r sends block b to t" = r combines block b
-            // arriving from t.
-            if let Some(msg) = &inbox[r as usize] {
-                let a = plans[r as usize].action(t);
-                let expect = if r == root {
-                    // The root's bcast plan never sends (its sends are the
-                    // fresh injections); reversed, it combines what its
-                    // neighbors would have received from it: block =
-                    // sendblock of the root's schedule.
-                    a.send_block
-                } else {
-                    a.send_block
-                };
-                let b = msg.tag as usize;
-                if expect != Some(b) {
-                    return Err(cerr(format!(
-                        "rank {r} reverse-round {t_rev}: got block {b}, schedule says {expect:?}"
-                    )));
-                }
-                let er = erange(b);
-                let incoming = bytes_to_f32s(msg.data.as_ref().unwrap());
-                combine(&mut acc[r as usize][er], &incoming);
-            }
+    for (i, (&g, &w)) in result.iter().zip(&want).enumerate() {
+        if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
+            return Err(cerr(format!("{what} mismatch at elem {i}: {g} vs {w}")));
         }
     }
-    let result = acc[root as usize].clone();
+    Ok(())
+}
+
+/// n-block reduction (sum) to `root` in the round-optimal `n-1+⌈log₂p⌉`
+/// rounds, by time-reversal of Algorithm 1.
+///
+/// `contrib[r]` is rank `r`'s input vector; on success the returned
+/// vector is the elementwise sum (verified against a serial reference
+/// when `verify`).
+pub fn reduce_circulant(
+    eng: &mut Engine,
+    root: u64,
+    n: usize,
+    contrib: &[Vec<f32>],
+    verify: bool,
+) -> Result<(Vec<f32>, Outcome), SimError> {
+    validate(eng.p(), contrib)?;
+    let (mut accs, out) = run_unified(eng, |mut t| {
+        let rank = t.rank();
+        generic::reduce_circulant(&mut t, root, n, &contrib[rank as usize])
+    })?;
+    let result = accs.swap_remove(root as usize);
     if verify {
-        let mut want = vec![0f32; elems];
-        for c in contrib {
-            combine(&mut want, c);
-        }
-        for (i, (&g, &w)) in result.iter().zip(&want).enumerate() {
-            if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
-                return Err(cerr(format!("reduce mismatch at elem {i}: {g} vs {w}")));
-            }
-        }
+        verify_sum(&result, contrib, "reduce")?;
     }
-    Ok((result, outcome(before, eng.stats())))
+    Ok((result, out))
 }
 
 /// Allreduce (sum) via reduce-to-root + n-block broadcast:
@@ -175,13 +98,16 @@ pub fn allreduce_circulant(
     contrib: &[Vec<f32>],
     verify: bool,
 ) -> Result<(Vec<f32>, Outcome), SimError> {
-    let before = eng.stats();
-    let (sum, _) = reduce_circulant(eng, 0, n, contrib, verify)?;
-    // Broadcast the reduced vector back out (data mode reuses the verified
-    // Algorithm 1 implementation).
-    let bytes = f32s_to_bytes(&sum);
-    super::bcast::bcast_circulant(eng, 0, n, bytes.len() as u64, Some(&bytes))?;
-    Ok((sum, outcome(before, eng.stats())))
+    validate(eng.p(), contrib)?;
+    let (mut sums, out) = run_unified(eng, |mut t| {
+        let rank = t.rank();
+        generic::allreduce_circulant(&mut t, n, &contrib[rank as usize])
+    })?;
+    let result = sums.swap_remove(0);
+    if verify {
+        verify_sum(&result, contrib, "allreduce")?;
+    }
+    Ok((result, out))
 }
 
 /// Baseline: binomial-tree reduction (whole vector per edge, `⌈log₂p⌉`
@@ -192,54 +118,16 @@ pub fn reduce_binomial(
     contrib: &[Vec<f32>],
     verify: bool,
 ) -> Result<(Vec<f32>, Outcome), SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    if contrib.len() as u64 != p {
-        return Err(cerr(format!("contrib length {} != p {p}", contrib.len())));
-    }
-    let elems = contrib[0].len();
-    if p == 1 {
-        return Ok((contrib[0].clone(), outcome(before, eng.stats())));
-    }
-    let q = crate::sched::ceil_log2(p);
-    let mut acc: Vec<Vec<f32>> = contrib.to_vec();
-    // Reverse binomial broadcast: round j = q-1..0, relative rank
-    // rel with rel >= 2^j, rel < 2^{j+1} sends to rel - 2^j.
-    for j in (0..q).rev() {
-        let step = 1u64 << j;
-        let mut msgs = Vec::new();
-        for rel in step..(2 * step).min(p) {
-            let from = (rel + root) % p;
-            let to = (rel - step + root) % p;
-            msgs.push(Msg {
-                from,
-                to,
-                bytes: (elems * 4) as u64,
-                tag: 0,
-                data: Some(f32s_to_bytes(&acc[from as usize])),
-            });
-        }
-        let inbox = eng.exchange(msgs)?;
-        for r in 0..p {
-            if let Some(msg) = &inbox[r as usize] {
-                let incoming = bytes_to_f32s(msg.data.as_ref().unwrap());
-                combine(&mut acc[r as usize], &incoming);
-            }
-        }
-    }
-    let result = acc[root as usize].clone();
+    validate(eng.p(), contrib)?;
+    let (mut accs, out) = run_unified(eng, |mut t| {
+        let rank = t.rank();
+        generic_baselines::reduce_binomial(&mut t, root, &contrib[rank as usize])
+    })?;
+    let result = accs.swap_remove(root as usize);
     if verify {
-        let mut want = vec![0f32; elems];
-        for c in contrib {
-            combine(&mut want, c);
-        }
-        for (i, (&g, &w)) in result.iter().zip(&want).enumerate() {
-            if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
-                return Err(cerr(format!("binomial reduce mismatch at {i}: {g} vs {w}")));
-            }
-        }
+        verify_sum(&result, contrib, "binomial reduce")?;
     }
-    Ok((result, outcome(before, eng.stats())))
+    Ok((result, out))
 }
 
 /// Baseline: ring reduce-scatter + ring allgather allreduce
@@ -249,86 +137,18 @@ pub fn allreduce_ring(
     contrib: &[Vec<f32>],
     verify: bool,
 ) -> Result<(Vec<f32>, Outcome), SimError> {
-    let p = eng.p();
-    let before = eng.stats();
-    let elems = contrib[0].len();
-    if p == 1 {
-        return Ok((contrib[0].clone(), outcome(before, eng.stats())));
-    }
-    let part = BlockPartition::new((elems * 4) as u64, p as usize);
-    let erange = |c: usize| {
-        let r = part.range(c);
-        r.start / 4..r.end / 4
-    };
-    let mut acc: Vec<Vec<f32>> = contrib.to_vec();
-    // Reduce-scatter: p-1 rounds; rank r sends chunk (r - t) mod p to r+1,
-    // which combines it.
-    for t in 0..p - 1 {
-        let mut msgs = Vec::with_capacity(p as usize);
-        for r in 0..p {
-            let c = ((r + p - t % p) % p) as usize;
-            let er = erange(c);
-            msgs.push(Msg {
-                from: r,
-                to: (r + 1) % p,
-                bytes: (er.len() * 4) as u64,
-                tag: c as u64,
-                data: Some(f32s_to_bytes(&acc[r as usize][er])),
-            });
-        }
-        let inbox = eng.exchange(msgs)?;
-        for r in 0..p {
-            if let Some(msg) = &inbox[r as usize] {
-                let c = msg.tag as usize;
-                let er = erange(c);
-                let incoming = bytes_to_f32s(msg.data.as_ref().unwrap());
-                combine(&mut acc[r as usize][er], &incoming);
-            }
-        }
-    }
-    // Allgather: each chunk c is now complete at rank (c + p - 1) mod p;
-    // ring-circulate the completed chunks.
-    for t in 0..p - 1 {
-        let mut msgs = Vec::with_capacity(p as usize);
-        for r in 0..p {
-            // Completed chunk held by r at step t: (r + 1 + t)... the chunk
-            // r finished is c = (r + 1) mod p reduced fully at t = 0.
-            let c = ((r + 1 + p - t % p) % p) as usize;
-            let er = erange(c);
-            msgs.push(Msg {
-                from: r,
-                to: (r + 1) % p,
-                bytes: (er.len() * 4) as u64,
-                tag: c as u64,
-                data: Some(f32s_to_bytes(&acc[r as usize][er])),
-            });
-        }
-        let inbox = eng.exchange(msgs)?;
-        for r in 0..p {
-            if let Some(msg) = &inbox[r as usize] {
-                let c = msg.tag as usize;
-                let er = erange(c);
-                let incoming = bytes_to_f32s(msg.data.as_ref().unwrap());
-                acc[r as usize][er].copy_from_slice(&incoming);
-            }
-        }
-    }
+    validate(eng.p(), contrib)?;
+    let (mut sums, out) = run_unified(eng, |mut t| {
+        let rank = t.rank();
+        generic_baselines::allreduce_ring(&mut t, &contrib[rank as usize])
+    })?;
     if verify {
-        let mut want = vec![0f32; elems];
-        for c in contrib {
-            combine(&mut want, c);
-        }
-        for r in 0..p as usize {
-            for (i, (&g, &w)) in acc[r].iter().zip(&want).enumerate() {
-                if (g - w).abs() > 1e-3 * w.abs().max(1.0) {
-                    return Err(cerr(format!(
-                        "ring allreduce mismatch rank {r} elem {i}: {g} vs {w}"
-                    )));
-                }
-            }
+        for (r, s) in sums.iter().enumerate() {
+            verify_sum(s, contrib, &format!("ring allreduce (rank {r})"))?;
         }
     }
-    Ok((acc[0].clone(), outcome(before, eng.stats())))
+    let result = sums.swap_remove(0);
+    Ok((result, out))
 }
 
 #[cfg(test)]

@@ -6,12 +6,13 @@
 //! broadcast (Algorithm 1) and irregular allgatherv (Algorithm 2)
 //! collectives they drive, a simulated one-ported message-passing machine
 //! with linear cost models standing in for the paper's 36×32-core cluster,
-//! the classical baseline algorithms (centralized *and* as SPMD programs,
-//! selectable through [`collectives::generic::Algorithm`]), a pluggable
-//! [`transport`] subsystem executing the identical collectives over the
-//! simulator, per-rank OS threads, or TCP processes, and a PJRT-backed
-//! payload path (JAX/Pallas-authored HLO executed from rust; `pjrt`
-//! feature).
+//! the classical baseline algorithms (selectable through
+//! [`collectives::generic::Algorithm`]), and a pluggable [`transport`]
+//! subsystem executing the identical rank-local collectives over the
+//! lockstep simulator/cost backend (with virtual, size-only payloads for
+//! the `p = 1152` sweeps), per-rank OS threads, or TCP processes, plus a
+//! PJRT-backed payload path (JAX/Pallas-authored HLO executed from rust;
+//! `pjrt` feature).
 //!
 //! See README.md for a quickstart and the support matrix, and DESIGN.md
 //! for the architecture.

@@ -163,20 +163,44 @@ impl Engine {
         self.max_round_time = 0.0;
     }
 
+    /// Fold another accounting delta into this engine — how the unified
+    /// collective wrappers merge a [`crate::transport::cost::run_cost`]
+    /// run back into a caller-owned engine.
+    pub fn absorb(&mut self, d: Stats) {
+        self.rounds += d.rounds;
+        self.time_s += d.time_s;
+        self.bytes_on_wire += d.bytes_on_wire;
+    }
+
     /// Execute one simultaneous round. Returns, for each rank, the message
     /// delivered to it (index = receiver rank), or an error if the round
     /// violates the one-ported machine model.
-    pub fn exchange(&mut self, msgs: Vec<Msg>) -> Result<Vec<Option<Msg>>, SimError> {
+    pub fn exchange(&mut self, mut msgs: Vec<Msg>) -> Result<Vec<Option<Msg>>, SimError> {
+        let mut inbox = Vec::new();
+        self.exchange_into(&mut msgs, &mut inbox)?;
+        Ok(inbox)
+    }
+
+    /// [`Engine::exchange`] with caller-owned round buffers: drains `msgs`
+    /// and refills `inbox` (resized to `p`, every slot overwritten), so a
+    /// steady-state round reuses both allocations — the hot path of the
+    /// lockstep [`crate::transport::cost::CostTransport`] backend.
+    pub fn exchange_into(
+        &mut self,
+        msgs: &mut Vec<Msg>,
+        inbox: &mut Vec<Option<Msg>>,
+    ) -> Result<(), SimError> {
         for r in self.touched.drain(..) {
             self.sent[r as usize] = false;
             self.recvd[r as usize] = false;
         }
-        let mut inbox: Vec<Option<Msg>> = (0..self.p).map(|_| None).collect();
+        inbox.clear();
+        inbox.resize_with(self.p as usize, || None);
         if msgs.is_empty() {
-            return Ok(inbox);
+            return Ok(());
         }
         let mut round_time = 0.0f64;
-        for m in msgs {
+        for m in msgs.drain(..) {
             if m.from >= self.p {
                 return Err(SimError::RankOutOfRange(m.from, self.p));
             }
@@ -212,7 +236,7 @@ impl Engine {
         self.rounds += 1;
         self.time_s += round_time;
         self.max_round_time = self.max_round_time.max(round_time);
-        Ok(inbox)
+        Ok(())
     }
 }
 

@@ -1,0 +1,391 @@
+//! Cost-model transport: the lockstep all-ranks-in-one-process backend
+//! whose rounds are charged to a [`CostModel`] through the [`Engine`]'s
+//! accounting — the single execution core behind the paper's figure and
+//! table sweeps.
+//!
+//! Every rank runs on its own OS thread (spawned with a small stack so
+//! `p = 1152` is cheap), but communication is globally round-synchronous:
+//! a round executes once all `p` endpoints have called
+//! [`Transport::sendrecv_into`], at which point the collected messages go
+//! through [`Engine::exchange_into`] — so the one-ported machine model is
+//! *enforced* and every round is priced at its maximum `α + β·bytes` edge
+//! cost.
+//!
+//! Two payload modes share this code path:
+//!
+//! * **Real bytes** ([`Payload::Bytes`]) are copied into the round (the
+//!   copy is the simulator's price, not the machine model's) and
+//!   delivered byte-exactly — the reference behavior the cross-backend
+//!   tests compare thread/tcp against (see [`super::sim`]).
+//! * **Virtual payloads** ([`Payload::Virtual`]) carry only a size:
+//!   the engine accounts the declared bytes and the receiver gets a
+//!   size-only frame (empty receive buffer). This is what lets the
+//!   `p = 1152` sweeps run gigabyte messages through the *same* rank-local
+//!   collectives that move real bytes, without ever allocating a payload.
+//!
+//! [`run_cost`] is the SPMD harness; it returns the per-rank results plus
+//! the engine's round/byte/time accounting. Round buffers (the message
+//! vector and the delivery inbox) are reused across rounds, so a
+//! steady-state virtual round performs no payload-sized allocations —
+//! pinned by `rust/tests/cost_transport.rs`.
+
+use super::{CostHint, Payload, SendSpec, Transport, TransportError};
+use crate::simulator::{CostModel, Engine, Msg, SimError, Stats};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Stack size for the per-rank threads of [`run_cost`]: the SPMD
+/// collectives keep their state on the heap, so 512 KiB leaves ample
+/// headroom while letting `p` in the thousands spawn cheaply.
+const COST_STACK_BYTES: usize = 512 * 1024;
+
+struct Round {
+    engine: Engine,
+    /// Sends collected for the round being assembled (reused across
+    /// rounds; drained by [`Engine::exchange_into`]).
+    msgs: Vec<Msg>,
+    /// Delivery slots of the last executed round (index = receiver rank;
+    /// reused across rounds).
+    inbox: Vec<Option<Msg>>,
+    /// Endpoints that have called into the round being assembled.
+    submitted: u64,
+    /// Bumped once per executed round; waiters key on it.
+    generation: u64,
+    /// Endpoints that have been dropped (normally all-at-once at program
+    /// end; early departures fail later rounds instead of hanging them).
+    departed: u64,
+    /// Sticky first failure; every subsequent call observes it.
+    error: Option<SimError>,
+}
+
+struct Shared {
+    p: u64,
+    round: Mutex<Round>,
+    cv: Condvar,
+}
+
+fn lock(m: &Mutex<Round>) -> MutexGuard<'_, Round> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One rank's endpoint of the lockstep cost-model transport. Create a
+/// full set with [`run_cost`] (or [`super::sim::run_sim`], the data-mode
+/// veneer).
+pub struct CostTransport {
+    rank: u64,
+    cost: CostModel,
+    shared: Arc<Shared>,
+}
+
+impl Transport for CostTransport {
+    fn rank(&self) -> u64 {
+        self.rank
+    }
+
+    fn size(&self) -> u64 {
+        self.shared.p
+    }
+
+    fn cost_hint(&self) -> CostHint {
+        CostHint::from_model(&self.cost)
+    }
+
+    fn sendrecv_into(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
+        let sh = &self.shared;
+        let mut st = lock(&sh.round);
+        if st.departed > 0 && st.error.is_none() {
+            // A peer is gone for good; this round can never fill up.
+            st.error = Some(SimError::Collective(
+                "a rank exited before the collective completed".into(),
+            ));
+            sh.cv.notify_all();
+        }
+        if let Some(e) = &st.error {
+            return Err(TransportError::Sim(e.clone()));
+        }
+        let gen = st.generation;
+        if let Some(s) = send {
+            // Real payloads are owned across the round boundary (the copy
+            // is the simulator's price, not the machine model's); virtual
+            // payloads carry only their declared size.
+            let (bytes, data) = match s.data {
+                Payload::Bytes(b) => (b.len() as u64, Some(b.to_vec())),
+                Payload::Virtual(len) => (len, None),
+            };
+            st.msgs.push(Msg {
+                from: self.rank,
+                to: s.to,
+                bytes,
+                tag: s.tag,
+                data,
+            });
+        }
+        st.submitted += 1;
+        if st.submitted == sh.p {
+            // Last rank in: execute the round for everyone, reusing the
+            // round buffers (no per-round allocation in steady state).
+            let Round {
+                ref mut engine,
+                ref mut msgs,
+                ref mut inbox,
+                ..
+            } = *st;
+            if let Err(e) = engine.exchange_into(msgs, inbox) {
+                st.error = Some(e);
+            }
+            st.submitted = 0;
+            st.generation = gen + 1;
+            sh.cv.notify_all();
+        } else {
+            while st.generation == gen && st.error.is_none() {
+                st = sh.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        if let Some(e) = &st.error {
+            return Err(TransportError::Sim(e.clone()));
+        }
+        let got = st.inbox[self.rank as usize].take();
+        drop(st);
+        match (got, recv_from) {
+            (None, None) => Ok(None),
+            (Some(msg), Some(from)) => {
+                if msg.from != from {
+                    return Err(TransportError::Protocol(format!(
+                        "rank {}: scheduled receive from {from}, message came from {}",
+                        self.rank, msg.from
+                    )));
+                }
+                recv_buf.clear();
+                if let Some(data) = &msg.data {
+                    recv_buf.extend_from_slice(data);
+                }
+                Ok(Some(msg.tag))
+            }
+            (Some(msg), None) => Err(TransportError::Protocol(format!(
+                "rank {}: unscheduled message from {} (block {})",
+                self.rank, msg.from, msg.tag
+            ))),
+            (None, Some(from)) => Err(TransportError::Collective(format!(
+                "rank {}: scheduled block from {from} never arrived",
+                self.rank
+            ))),
+        }
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        // An empty exchange synchronizes all ranks; the engine does not
+        // account empty rounds, so a barrier is free in simulated time.
+        let mut scratch = Vec::new();
+        match self.sendrecv_into(None, None, &mut scratch)? {
+            None => Ok(()),
+            Some(_) => unreachable!("sendrecv(None, None) validated the empty inbox"),
+        }
+    }
+}
+
+impl Drop for CostTransport {
+    fn drop(&mut self) {
+        // If this endpoint exits (error or panic) while peers are waiting
+        // on a round it will never join, fail the round loudly instead of
+        // letting them block forever. Under the SPMD contract a normal
+        // exit never observes a pending round.
+        let sh = &self.shared;
+        let mut st = lock(&sh.round);
+        st.departed += 1;
+        if st.submitted > 0 && st.error.is_none() {
+            st.error = Some(SimError::Collective(format!(
+                "rank {} exited while a round was pending",
+                self.rank
+            )));
+            st.submitted = 0;
+            st.generation += 1;
+            sh.cv.notify_all();
+        }
+    }
+}
+
+/// Run `f` as an SPMD program: one small-stack OS thread per rank, each
+/// with its own [`CostTransport`] endpoint, all communicating through one
+/// [`Engine`] under `cost`.
+///
+/// Returns the per-rank results (index = rank) and the engine's final
+/// accounting. If any rank fails, the first substantive error is returned
+/// (abort-notifications raised on other ranks by the failure are
+/// suppressed in its favor).
+pub fn run_cost<R, F>(p: u64, cost: CostModel, f: F) -> Result<(Vec<R>, Stats), TransportError>
+where
+    R: Send,
+    F: Fn(CostTransport) -> Result<R, TransportError> + Sync,
+{
+    assert!(p >= 1, "need at least one rank");
+    let shared = Arc::new(Shared {
+        p,
+        round: Mutex::new(Round {
+            engine: Engine::new(p, cost),
+            msgs: Vec::new(),
+            inbox: (0..p).map(|_| None).collect(),
+            submitted: 0,
+            generation: 0,
+            departed: 0,
+            error: None,
+        }),
+        cv: Condvar::new(),
+    });
+    let mut results: Vec<Option<Result<R, TransportError>>> = (0..p).map(|_| None).collect();
+    let mut spawn_err: Option<String> = None;
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(p as usize);
+        for rank in 0..p {
+            let shared_for_rank = Arc::clone(&shared);
+            let f = &f;
+            let spawned = std::thread::Builder::new()
+                .name(format!("nblk-cost-{rank}"))
+                .stack_size(COST_STACK_BYTES)
+                .spawn_scoped(s, move || {
+                    f(CostTransport {
+                        rank,
+                        cost,
+                        shared: shared_for_rank,
+                    })
+                });
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Abort the ranks already running: they wait on a
+                    // round that can never fill without rank `rank`.
+                    let mut st = lock(&shared.round);
+                    st.error = Some(SimError::Collective(format!(
+                        "could not spawn rank {rank} of {p}: {e}"
+                    )));
+                    shared.cv.notify_all();
+                    drop(st);
+                    spawn_err = Some(format!(
+                        "could not spawn rank {rank} of {p} (raise the process/thread \
+                         limits or reduce p): {e}"
+                    ));
+                    break;
+                }
+            }
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            results[rank] = Some(h.join().unwrap_or_else(|_| {
+                Err(TransportError::Collective(format!("rank {rank} panicked")))
+            }));
+        }
+    });
+    if let Some(msg) = spawn_err {
+        return Err(TransportError::Io(msg));
+    }
+    let out = super::drain_results(results, is_abort_notification)?;
+    let stats = lock(&shared.round).engine.stats();
+    Ok((out, stats))
+}
+
+/// True for the secondary errors ranks observe when a *different* rank
+/// aborted a pending round (see `Drop`).
+pub(super) fn is_abort_notification(e: &TransportError) -> bool {
+    matches!(e, TransportError::Sim(SimError::Collective(msg))
+        if msg.contains("exited while a round was pending")
+            || msg.contains("exited before the collective completed"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_round_accounts_without_bytes() {
+        // A ring shift of 1 MiB virtual blocks: accounted, never stored.
+        let p = 4u64;
+        let m = 1u64 << 20;
+        let (_, stats) = run_cost(
+            p,
+            CostModel::Flat {
+                alpha: 0.0,
+                beta: 1.0,
+            },
+            |mut t| {
+                let r = t.rank();
+                let mut buf = vec![0xAAu8; 3]; // sentinel: must be cleared
+                let got = t.sendrecv_into(
+                    Some(SendSpec {
+                        to: (r + 1) % p,
+                        tag: 7,
+                        data: Payload::Virtual(m),
+                    }),
+                    Some((r + p - 1) % p),
+                    &mut buf,
+                )?;
+                assert_eq!(got, Some(7));
+                assert!(buf.is_empty(), "virtual frames carry no bytes");
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.rounds, 1);
+        assert_eq!(stats.bytes_on_wire, p * m);
+        assert!((stats.time_s - m as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_real_and_virtual_in_one_round() {
+        let (_, stats) = run_cost(
+            3,
+            CostModel::Flat {
+                alpha: 1.0,
+                beta: 0.0,
+            },
+            |mut t| {
+                let mut buf = Vec::new();
+                match t.rank() {
+                    0 => {
+                        // Real bytes to rank 1.
+                        t.sendrecv_into(
+                            Some(SendSpec {
+                                to: 1,
+                                tag: 0,
+                                data: Payload::Bytes(&[9, 9]),
+                            }),
+                            None,
+                            &mut buf,
+                        )?;
+                        Ok(0usize)
+                    }
+                    1 => {
+                        let got = t.sendrecv_into(None, Some(0), &mut buf)?;
+                        assert_eq!(got, Some(0));
+                        assert_eq!(buf, vec![9, 9]);
+                        Ok(buf.len())
+                    }
+                    _ => {
+                        // Virtual bytes to nobody: an idle round.
+                        t.sendrecv_into(None, None, &mut buf)?;
+                        Ok(0)
+                    }
+                }
+            },
+        )
+        .unwrap();
+        assert_eq!(stats.rounds, 1);
+        assert_eq!(stats.bytes_on_wire, 2);
+    }
+
+    #[test]
+    fn cost_hint_comes_from_the_model() {
+        let model = CostModel::Flat {
+            alpha: 4.0e-6,
+            beta: 1.0e-9,
+        };
+        let (hints, _) = run_cost(2, model, |mut t| {
+            let h = t.cost_hint();
+            t.barrier()?;
+            Ok(h.latency_cutoff_bytes())
+        })
+        .unwrap();
+        assert_eq!(hints, vec![4000, 4000]);
+    }
+}

@@ -19,16 +19,34 @@
 //!   host set), each rank typically its own process, with a small
 //!   length-prefixed wire format and a lazy, schedule-aware mesh.
 //!
+//! * [`cost::CostTransport`] — the same lockstep core tuned for
+//!   cost-model *sweeps*: small per-rank stacks so `p` in the thousands is
+//!   cheap, and first-class [`Payload::Virtual`] support so gigabyte
+//!   messages are accounted without ever being materialized. This is the
+//!   single execution path behind the paper's figure/table sweeps.
+//!
 //! ## The zero-copy hot path
 //!
 //! The primitive is [`Transport::sendrecv_into`]: the outgoing payload is
-//! *borrowed* (`SendSpec::data: &[u8]`, so a sender never clones a block
-//! just to hand it to the transport) and the incoming frame lands in a
-//! *caller-owned* `Vec<u8>` that is reused round after round. After
-//! warm-up a steady-state round performs zero payload heap allocations on
-//! the point-to-point backends; see DESIGN.md §"Transport hot path".
-//! [`Transport::sendrecv`] remains as a convenience shim that returns an
-//! owning [`WireMsg`] (allocating per call) for tests and cold paths.
+//! *borrowed* ([`SendSpec::data`] is [`Payload::Bytes`] around a `&[u8]`,
+//! so a sender never clones a block just to hand it to the transport) and
+//! the incoming frame lands in a *caller-owned* `Vec<u8>` that is reused
+//! round after round. After warm-up a steady-state round performs zero
+//! payload heap allocations on the point-to-point backends; see DESIGN.md
+//! §"Transport hot path". [`Transport::sendrecv`] remains as a convenience
+//! shim that returns an owning [`WireMsg`] (allocating per call) for tests
+//! and cold paths.
+//!
+//! ## Virtual payloads
+//!
+//! A payload is either real bytes or [`Payload::Virtual`]`(len)` — a
+//! size-only block for cost-model sweeps that must never allocate
+//! (`p = 1152`, gigabyte messages). The lockstep backends account virtual
+//! bytes through the [`crate::simulator::CostModel`] exactly as they
+//! would real ones and deliver a size-only frame (the receive buffer is
+//! left empty); the point-to-point backends (thread, tcp) reject virtual
+//! sends with a [`TransportError::Protocol`] — they exist to move real
+//! bytes.
 //!
 //! The SPMD contract: every rank runs the same program and makes the same
 //! sequence of [`Transport::sendrecv_into`] / [`Transport::barrier`]
@@ -39,6 +57,7 @@
 
 #![warn(missing_docs)]
 
+pub mod cost;
 pub mod sim;
 pub mod tcp;
 pub mod thread;
@@ -55,17 +74,135 @@ pub struct WireMsg {
     pub data: Vec<u8>,
 }
 
-/// An outgoing block for one round. The payload is borrowed: transports
-/// write it to the wire (or copy it into a pooled buffer) without taking
-/// ownership, so callers keep their block storage across rounds.
+/// The payload of one outgoing block: real borrowed bytes, or a virtual
+/// (size-only) block for cost-model sweeps that must not allocate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Payload<'a> {
+    /// Real payload bytes, borrowed from the caller (may be empty —
+    /// zero-sized blocks must still flow).
+    Bytes(&'a [u8]),
+    /// A size-only block of `len` bytes: accounted by the cost-model
+    /// backends, never materialized. Rejected by the point-to-point
+    /// backends, which exist to move real bytes.
+    Virtual(u64),
+}
+
+impl Payload<'_> {
+    /// Accounted size in bytes (the slice length for real payloads).
+    #[inline]
+    pub fn len(&self) -> u64 {
+        match *self {
+            Payload::Bytes(b) => b.len() as u64,
+            Payload::Virtual(len) => len,
+        }
+    }
+
+    /// Whether the accounted size is zero.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this is a size-only (virtual) payload.
+    #[inline]
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Payload::Virtual(_))
+    }
+
+    /// The real bytes, or `None` for a virtual payload.
+    #[inline]
+    pub fn bytes(&self) -> Option<&[u8]> {
+        match *self {
+            Payload::Bytes(b) => Some(b),
+            Payload::Virtual(_) => None,
+        }
+    }
+}
+
+impl<'a> From<&'a [u8]> for Payload<'a> {
+    fn from(b: &'a [u8]) -> Payload<'a> {
+        Payload::Bytes(b)
+    }
+}
+
+/// An outgoing block for one round. Real payloads are borrowed: transports
+/// write them to the wire (or copy them into a pooled buffer) without
+/// taking ownership, so callers keep their block storage across rounds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SendSpec<'a> {
     /// Destination rank.
     pub to: u64,
     /// Collective-defined tag (block index); verified by receivers.
     pub tag: u64,
-    /// Payload bytes (may be empty — zero-sized blocks must still flow).
-    pub data: &'a [u8],
+    /// Payload: borrowed bytes or a virtual (size-only) block.
+    pub data: Payload<'a>,
+}
+
+/// A backend's rough `α + β·bytes` link estimate, used by the algorithm
+/// dispatch to derive its latency/bandwidth crossover instead of
+/// hard-coding a byte constant (see
+/// [`crate::collectives::generic::Algorithm`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostHint {
+    /// Per-message startup latency in seconds.
+    pub alpha_s: f64,
+    /// Per-byte transfer time in seconds.
+    pub beta_s_per_byte: f64,
+}
+
+impl CostHint {
+    /// The fallback hint for backends without a calibrated model. Its
+    /// [`CostHint::latency_cutoff_bytes`] is exactly the historical fixed
+    /// 4096-byte cutoff
+    /// ([`crate::collectives::generic::AUTO_LATENCY_CUTOFF`]), so the
+    /// `Auto` heuristic behaves as before wherever no better estimate
+    /// exists.
+    pub const DEFAULT: CostHint = CostHint {
+        alpha_s: 2.0e-6,
+        beta_s_per_byte: 2.0e-6 / 4096.0,
+    };
+
+    /// The α/β of a [`crate::simulator::CostModel`] — for the hierarchical
+    /// model, the inter-node link (the conservative choice: it is the one
+    /// the `⌈log₂p⌉`-spanning schedules cannot avoid).
+    pub fn from_model(model: &crate::simulator::CostModel) -> CostHint {
+        match *model {
+            crate::simulator::CostModel::Flat { alpha, beta } => CostHint {
+                alpha_s: alpha,
+                beta_s_per_byte: beta,
+            },
+            crate::simulator::CostModel::Hierarchical {
+                inter_alpha,
+                inter_beta,
+                ..
+            } => CostHint {
+                alpha_s: inter_alpha,
+                beta_s_per_byte: inter_beta,
+            },
+        }
+    }
+
+    /// The message size below which a collective is latency-bound: the
+    /// size `α/β` at which per-message startup equals transfer time, so
+    /// below it a `⌈log₂p⌉`-round whole-message algorithm beats a
+    /// pipelined one. Clamped to `[1, 2³⁰]` (a β-free model would push the
+    /// cutoff to infinity, which would disable pipelining everywhere).
+    pub fn latency_cutoff_bytes(&self) -> u64 {
+        if self.alpha_s <= 0.0 {
+            return 1; // latency-free links: always pipeline
+        }
+        if self.beta_s_per_byte <= 0.0 {
+            return 1 << 30; // bandwidth-free links: always latency-bound
+        }
+        let cutoff = (self.alpha_s / self.beta_s_per_byte).round();
+        (cutoff.clamp(1.0, (1u64 << 30) as f64) as u64).max(1)
+    }
+}
+
+impl Default for CostHint {
+    fn default() -> CostHint {
+        CostHint::DEFAULT
+    }
 }
 
 /// A free-list of `Vec<u8>` recycled across rounds: `get` pops a warm
@@ -182,6 +319,8 @@ pub trait Transport {
     /// When a block is received, `recv_buf` is cleared and filled with
     /// exactly the payload (its capacity is reused across rounds — after
     /// warm-up no reallocation happens) and the sender's tag is returned.
+    /// A received *virtual* block (cost-model backends only) clears
+    /// `recv_buf` and returns the tag — size-only frames carry no bytes.
     /// When `recv_from` is `None`, `recv_buf` is left untouched and the
     /// result is `Ok(None)`.
     ///
@@ -234,6 +373,15 @@ pub trait Transport {
     /// comes. Default: no-op.
     fn warm_peers(&mut self, _peers: &[u64]) -> Result<(), TransportError> {
         Ok(())
+    }
+
+    /// This backend's rough `α + β·bytes` link estimate, used by the
+    /// algorithm dispatch to place the latency/bandwidth crossover.
+    /// Default: [`CostHint::DEFAULT`], whose cutoff is the historical
+    /// fixed 4096-byte constant; the cost-model backends derive it from
+    /// their configured [`crate::simulator::CostModel`].
+    fn cost_hint(&self) -> CostHint {
+        CostHint::DEFAULT
     }
 
     /// Block until every rank has reached the barrier.
@@ -294,7 +442,7 @@ pub fn dissemination_barrier<T: Transport + ?Sized>(t: &mut T) -> Result<(), Tra
             Some(SendSpec {
                 to,
                 tag: BARRIER_TAG,
-                data: &[],
+                data: Payload::Bytes(&[]),
             }),
             Some(from),
             &mut token,
@@ -411,6 +559,10 @@ impl<T: Transport + ?Sized> Transport for GroupTransport<'_, T> {
     // circulant neighborhood is *not* the parent transport's, so blanket
     // warming would dial links the group schedule never uses.
 
+    fn cost_hint(&self) -> CostHint {
+        self.inner.cost_hint()
+    }
+
     fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
         // Per the trait contract, out-of-range entries are ignored (not
         // errors): resolve what maps into the group, drop the rest.
@@ -478,7 +630,7 @@ mod tests {
             Some(SendSpec {
                 to: 0,
                 tag: 9,
-                data: &[1],
+                data: Payload::Bytes(&[1]),
             }),
             Some(2),
         )
@@ -497,6 +649,51 @@ mod tests {
         let members = [5u64, 0];
         let mut g = GroupTransport::new(&mut base, &members).unwrap();
         assert!(g.sendrecv(None, Some(9)).is_err());
+    }
+
+    #[test]
+    fn cost_hint_cutoffs() {
+        // The fallback hint reproduces the historical fixed constant.
+        assert_eq!(CostHint::DEFAULT.latency_cutoff_bytes(), 4096);
+        // A calibrated flat model derives its own crossover.
+        let m = crate::simulator::CostModel::Flat {
+            alpha: 1.0e-6,
+            beta: 1.0e-9,
+        };
+        assert_eq!(CostHint::from_model(&m).latency_cutoff_bytes(), 1000);
+        // The hierarchical model uses the inter-node link.
+        let h = crate::simulator::CostModel::Hierarchical {
+            ranks_per_node: 4,
+            intra_alpha: 1.0e-9,
+            intra_beta: 1.0e-12,
+            inter_alpha: 2.0e-6,
+            inter_beta: 1.0e-9,
+        };
+        assert_eq!(CostHint::from_model(&h).latency_cutoff_bytes(), 2000);
+        // Degenerate models clamp instead of exploding.
+        let a0 = CostHint {
+            alpha_s: 0.0,
+            beta_s_per_byte: 1.0,
+        };
+        assert_eq!(a0.latency_cutoff_bytes(), 1);
+        let b0 = CostHint {
+            alpha_s: 1.0,
+            beta_s_per_byte: 0.0,
+        };
+        assert_eq!(b0.latency_cutoff_bytes(), 1 << 30);
+    }
+
+    #[test]
+    fn payload_len_and_kind() {
+        let real = Payload::Bytes(&[1, 2, 3]);
+        assert_eq!(real.len(), 3);
+        assert!(!real.is_virtual());
+        assert_eq!(real.bytes(), Some(&[1u8, 2, 3][..]));
+        let virt = Payload::Virtual(1 << 30);
+        assert_eq!(virt.len(), 1 << 30);
+        assert!(virt.is_virtual() && !virt.is_empty());
+        assert_eq!(virt.bytes(), None);
+        assert!(Payload::Bytes(&[]).is_empty());
     }
 
     #[test]

@@ -1,180 +1,36 @@
-//! Simulator-backed transport: lockstep rounds through the deterministic
-//! [`Engine`].
+//! Simulator-backed transport: the data-mode face of the lockstep
+//! cost-model core in [`super::cost`].
 //!
-//! Every rank runs on its own OS thread, but communication is globally
-//! round-synchronous: a round executes once all `p` endpoints have called
-//! [`SimTransport::sendrecv`], at which point the collected messages go
-//! through [`Engine::exchange`] — so the one-ported machine model is
-//! *enforced* (multi-send/multi-recv/self-messages are errors, exactly as
-//! in the centralized cost-model collectives) and every round is priced at
-//! its maximum edge cost under the configured [`CostModel`].
+//! Since the one-rank-local-core refactor there is exactly one lockstep
+//! implementation: [`super::cost::CostTransport`] collects every rank's
+//! [`super::Transport::sendrecv_into`] call, funnels the round through
+//! [`crate::simulator::Engine::exchange_into`] — so the one-ported
+//! machine model is *enforced* (multi-send/multi-recv/self-messages are
+//! errors) and every round is priced at its maximum edge cost under the
+//! configured [`CostModel`] — and delivers real payload bytes when they
+//! are provided.
 //!
-//! This is the reference backend of the transport subsystem: the
-//! cross-backend tests compare thread/tcp deliveries byte-for-byte against
-//! the buffers it produces, and [`run_sim`] returns the engine's
-//! [`Stats`] so transport-generic runs still yield the simulated
-//! time/round/byte accounting of the paper's figures.
+//! [`SimTransport`] is that same backend under its historical name, and
+//! [`run_sim`] the matching harness: the *reference* backend of the
+//! transport subsystem, which the cross-backend tests compare thread/tcp
+//! deliveries against byte-for-byte, returning the engine's [`Stats`] so
+//! transport-generic runs still yield the simulated time/round/byte
+//! accounting of the paper's figures. Cost-only sweeps use
+//! [`super::cost::run_cost`] with virtual payloads instead — same core,
+//! no bytes.
 
-use super::{SendSpec, Transport, TransportError};
-use crate::simulator::{CostModel, Engine, Msg, SimError, Stats};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use super::TransportError;
+use crate::simulator::{CostModel, Stats};
 
-struct Round {
-    engine: Engine,
-    /// Sends collected for the round being assembled.
-    msgs: Vec<Msg>,
-    /// Delivery slots of the last executed round (index = receiver rank).
-    inbox: Vec<Option<Msg>>,
-    /// Endpoints that have called into the round being assembled.
-    submitted: u64,
-    /// Bumped once per executed round; waiters key on it.
-    generation: u64,
-    /// Endpoints that have been dropped (normally all-at-once at program
-    /// end; early departures fail later rounds instead of hanging them).
-    departed: u64,
-    /// Sticky first failure; every subsequent call observes it.
-    error: Option<SimError>,
-}
-
-struct Shared {
-    p: u64,
-    round: Mutex<Round>,
-    cv: Condvar,
-}
-
-fn lock(m: &Mutex<Round>) -> MutexGuard<'_, Round> {
-    m.lock().unwrap_or_else(|e| e.into_inner())
-}
-
-/// One rank's endpoint of the lockstep simulator transport. Create a full
-/// set with [`run_sim`].
-pub struct SimTransport {
-    rank: u64,
-    shared: Arc<Shared>,
-}
-
-impl Transport for SimTransport {
-    fn rank(&self) -> u64 {
-        self.rank
-    }
-
-    fn size(&self) -> u64 {
-        self.shared.p
-    }
-
-    fn sendrecv_into(
-        &mut self,
-        send: Option<SendSpec<'_>>,
-        recv_from: Option<u64>,
-        recv_buf: &mut Vec<u8>,
-    ) -> Result<Option<u64>, TransportError> {
-        let sh = &self.shared;
-        let mut st = lock(&sh.round);
-        if st.departed > 0 && st.error.is_none() {
-            // A peer is gone for good; this round can never fill up.
-            st.error = Some(SimError::Collective(
-                "a rank exited before the collective completed".into(),
-            ));
-            sh.cv.notify_all();
-        }
-        if let Some(e) = &st.error {
-            return Err(TransportError::Sim(e.clone()));
-        }
-        let gen = st.generation;
-        if let Some(s) = send {
-            // The lockstep engine needs owned payloads (they cross the
-            // round boundary); the copy is part of the simulator's price,
-            // not of the machine model.
-            st.msgs.push(Msg {
-                from: self.rank,
-                to: s.to,
-                bytes: s.data.len() as u64,
-                tag: s.tag,
-                data: Some(s.data.to_vec()),
-            });
-        }
-        st.submitted += 1;
-        if st.submitted == sh.p {
-            // Last rank in: execute the round for everyone.
-            let msgs = std::mem::take(&mut st.msgs);
-            match st.engine.exchange(msgs) {
-                Ok(inbox) => st.inbox = inbox,
-                Err(e) => st.error = Some(e),
-            }
-            st.submitted = 0;
-            st.generation = gen + 1;
-            sh.cv.notify_all();
-        } else {
-            while st.generation == gen && st.error.is_none() {
-                st = sh.cv.wait(st).unwrap_or_else(|e| e.into_inner());
-            }
-        }
-        if let Some(e) = &st.error {
-            return Err(TransportError::Sim(e.clone()));
-        }
-        let got = st.inbox[self.rank as usize].take();
-        drop(st);
-        match (got, recv_from) {
-            (None, None) => Ok(None),
-            (Some(msg), Some(from)) => {
-                if msg.from != from {
-                    return Err(TransportError::Protocol(format!(
-                        "rank {}: scheduled receive from {from}, message came from {}",
-                        self.rank, msg.from
-                    )));
-                }
-                recv_buf.clear();
-                if let Some(data) = &msg.data {
-                    recv_buf.extend_from_slice(data);
-                }
-                Ok(Some(msg.tag))
-            }
-            (Some(msg), None) => Err(TransportError::Protocol(format!(
-                "rank {}: unscheduled message from {} (block {})",
-                self.rank, msg.from, msg.tag
-            ))),
-            (None, Some(from)) => Err(TransportError::Collective(format!(
-                "rank {}: scheduled block from {from} never arrived",
-                self.rank
-            ))),
-        }
-    }
-
-    fn barrier(&mut self) -> Result<(), TransportError> {
-        // An empty exchange synchronizes all ranks; the engine does not
-        // account empty rounds, so a barrier is free in simulated time.
-        let mut scratch = Vec::new();
-        match self.sendrecv_into(None, None, &mut scratch)? {
-            None => Ok(()),
-            Some(_) => unreachable!("sendrecv(None, None) validated the empty inbox"),
-        }
-    }
-}
-
-impl Drop for SimTransport {
-    fn drop(&mut self) {
-        // If this endpoint exits (error or panic) while peers are waiting
-        // on a round it will never join, fail the round loudly instead of
-        // letting them block forever. Under the SPMD contract a normal
-        // exit never observes a pending round.
-        let sh = &self.shared;
-        let mut st = lock(&sh.round);
-        st.departed += 1;
-        if st.submitted > 0 && st.error.is_none() {
-            st.error = Some(SimError::Collective(format!(
-                "rank {} exited while a round was pending",
-                self.rank
-            )));
-            st.submitted = 0;
-            st.generation += 1;
-            sh.cv.notify_all();
-        }
-    }
-}
+/// One rank's endpoint of the lockstep simulator transport — the
+/// historical name of [`super::cost::CostTransport`], kept because it is
+/// the reference backend the data-mode tests and docs speak about. Create
+/// a full set with [`run_sim`].
+pub type SimTransport = super::cost::CostTransport;
 
 /// Run `f` as an SPMD program: one OS thread per rank, each with its own
-/// [`SimTransport`] endpoint, all communicating through one [`Engine`]
-/// under `cost`.
+/// [`SimTransport`] endpoint, all communicating through one
+/// [`crate::simulator::Engine`] under `cost`.
 ///
 /// Returns the per-rank results (index = rank) and the engine's final
 /// accounting. If any rank fails, the first substantive error is returned
@@ -185,74 +41,45 @@ where
     R: Send,
     F: Fn(SimTransport) -> Result<R, TransportError> + Sync,
 {
-    assert!(p >= 1, "need at least one rank");
-    let shared = Arc::new(Shared {
-        p,
-        round: Mutex::new(Round {
-            engine: Engine::new(p, cost),
-            msgs: Vec::new(),
-            inbox: (0..p).map(|_| None).collect(),
-            submitted: 0,
-            generation: 0,
-            departed: 0,
-            error: None,
-        }),
-        cv: Condvar::new(),
-    });
-    let mut results: Vec<Option<Result<R, TransportError>>> = (0..p).map(|_| None).collect();
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(p as usize);
-        for rank in 0..p {
-            let shared = Arc::clone(&shared);
-            let f = &f;
-            handles.push(s.spawn(move || f(SimTransport { rank, shared })));
-        }
-        for (rank, h) in handles.into_iter().enumerate() {
-            results[rank] = Some(h.join().unwrap_or_else(|_| {
-                Err(TransportError::Collective(format!("rank {rank} panicked")))
-            }));
-        }
-    });
-    let out = super::drain_results(results, is_abort_notification)?;
-    let stats = lock(&shared.round).engine.stats();
-    Ok((out, stats))
-}
-
-/// True for the secondary errors ranks observe when a *different* rank
-/// aborted a pending round (see `Drop`).
-fn is_abort_notification(e: &TransportError) -> bool {
-    matches!(e, TransportError::Sim(SimError::Collective(msg))
-        if msg.contains("exited while a round was pending")
-            || msg.contains("exited before the collective completed"))
+    super::cost::run_cost(p, cost, f)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::simulator::SimError;
+    use crate::transport::{Payload, SendSpec, Transport};
 
     #[test]
     fn lockstep_round_delivers_and_accounts() {
         // Ring shift: rank r sends to r+1, receives from r-1, three rounds.
         let p = 4u64;
-        let (results, stats) = run_sim(p, CostModel::Flat { alpha: 1.0, beta: 0.0 }, |mut t| {
-            let r = t.rank();
-            let mut seen = Vec::new();
-            for round in 0..3u64 {
-                let got = t.sendrecv(
-                    Some(SendSpec {
-                        to: (r + 1) % p,
-                        tag: round,
-                        data: &[r as u8; 2],
-                    }),
-                    Some((r + p - 1) % p),
-                )?;
-                let msg = got.expect("scheduled receive");
-                assert_eq!(msg.tag, round);
-                seen.push(msg.data[0]);
-            }
-            t.barrier()?;
-            Ok(seen)
-        })
+        let (results, stats) = run_sim(
+            p,
+            CostModel::Flat {
+                alpha: 1.0,
+                beta: 0.0,
+            },
+            |mut t| {
+                let r = t.rank();
+                let mut seen = Vec::new();
+                for round in 0..3u64 {
+                    let got = t.sendrecv(
+                        Some(SendSpec {
+                            to: (r + 1) % p,
+                            tag: round,
+                            data: Payload::Bytes(&[r as u8; 2]),
+                        }),
+                        Some((r + p - 1) % p),
+                    )?;
+                    let msg = got.expect("scheduled receive");
+                    assert_eq!(msg.tag, round);
+                    seen.push(msg.data[0]);
+                }
+                t.barrier()?;
+                Ok(seen)
+            },
+        )
         .unwrap();
         for (r, seen) in results.iter().enumerate() {
             let prev = ((r as u64 + p - 1) % p) as u8;
@@ -266,34 +93,48 @@ mod tests {
     #[test]
     fn machine_model_enforced_across_threads() {
         // Two ranks both send to rank 2 in the same round: MultiRecv.
-        let err = run_sim(3, CostModel::Flat { alpha: 0.0, beta: 0.0 }, |mut t| {
-            let r = t.rank();
-            let send = if r < 2 {
-                Some(SendSpec {
-                    to: 2,
-                    tag: 0,
-                    data: &[],
-                })
-            } else {
-                None
-            };
-            t.sendrecv(send, if r == 2 { Some(0) } else { None })?;
-            Ok(())
-        })
+        let err = run_sim(
+            3,
+            CostModel::Flat {
+                alpha: 0.0,
+                beta: 0.0,
+            },
+            |mut t| {
+                let r = t.rank();
+                let send = if r < 2 {
+                    Some(SendSpec {
+                        to: 2,
+                        tag: 0,
+                        data: Payload::Bytes(&[]),
+                    })
+                } else {
+                    None
+                };
+                t.sendrecv(send, if r == 2 { Some(0) } else { None })?;
+                Ok(())
+            },
+        )
         .unwrap_err();
         assert!(matches!(err, TransportError::Sim(SimError::MultiRecv(2))), "{err}");
     }
 
     #[test]
     fn early_exit_does_not_hang_peers() {
-        let err = run_sim(2, CostModel::Flat { alpha: 0.0, beta: 0.0 }, |mut t| {
-            if t.rank() == 0 {
-                // Rank 0 fails before joining the round rank 1 is in.
-                return Err(TransportError::Collective("boom".into()));
-            }
-            t.sendrecv(None, Some(0))?;
-            Ok(())
-        })
+        let err = run_sim(
+            2,
+            CostModel::Flat {
+                alpha: 0.0,
+                beta: 0.0,
+            },
+            |mut t| {
+                if t.rank() == 0 {
+                    // Rank 0 fails before joining the round rank 1 is in.
+                    return Err(TransportError::Collective("boom".into()));
+                }
+                t.sendrecv(None, Some(0))?;
+                Ok(())
+            },
+        )
         .unwrap_err();
         assert!(matches!(err, TransportError::Collective(ref m) if m == "boom"), "{err}");
     }

@@ -66,7 +66,7 @@
 //!   binds `base_port + r`, so `p` processes need only agree on
 //!   `(host, base_port, p)`. Used by `examples/bcast_tcp.rs`.
 
-use super::{BufferPool, SendSpec, Transport, TransportError};
+use super::{BufferPool, Payload, SendSpec, Transport, TransportError};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -497,6 +497,20 @@ impl TcpTransport {
         })
     }
 
+    /// The real bytes of an outgoing payload, or a protocol error: the
+    /// wire exists to move bytes, so size-only (virtual) payloads are
+    /// rejected — cost sweeps belong on the sim/cost backend.
+    fn payload_bytes<'a>(&self, data: Payload<'a>) -> Result<&'a [u8], TransportError> {
+        data.bytes().ok_or_else(|| {
+            TransportError::Protocol(format!(
+                "rank {}: virtual payload ({} bytes) on the tcp backend \
+                 — use the sim/cost backend for size-only sweeps",
+                self.rank,
+                data.len()
+            ))
+        })
+    }
+
     /// Record a failed read and map its error: a frame may have been
     /// half-consumed, so the inbound stream is desynchronized — drop the
     /// endpoint so it can never be reused.
@@ -540,8 +554,9 @@ impl Transport for TcpTransport {
             (None, None) => Ok(None),
             (Some(s), None) => {
                 self.check_peer(s.to)?;
+                let data = self.payload_bytes(s.data)?;
                 self.ensure_links(Some(s.to), None)?;
-                self.write_direct(s.to, s.tag, s.data)?;
+                self.write_direct(s.to, s.tag, data)?;
                 Ok(None)
             }
             (None, Some(from)) => {
@@ -562,10 +577,11 @@ impl Transport for TcpTransport {
                 // the socket buffers cannot deadlock.
                 self.check_peer(s.to)?;
                 self.check_peer(from)?;
+                let data = self.payload_bytes(s.data)?;
                 self.ensure_links(Some(s.to), Some(from))?;
                 self.ensure_writer(s.to)?;
                 let mut frame = self.pool.get();
-                encode_frame(&mut frame, s.tag, s.data);
+                encode_frame(&mut frame, s.tag, data);
                 let rank = self.rank;
                 let (got, ack) = {
                     let writer = self.endpoints[s.to as usize]
@@ -769,7 +785,7 @@ mod tests {
                 Some(SendSpec {
                     to: partner,
                     tag: t.rank(),
-                    data: &payload,
+                    data: Payload::Bytes(&payload),
                 }),
                 Some(partner),
             )?;
@@ -799,7 +815,7 @@ mod tests {
                 Some(SendSpec {
                     to: (r + 1) % p,
                     tag: r,
-                    data: &payload,
+                    data: Payload::Bytes(&payload),
                 }),
                 Some((r + p - 1) % p),
             )?;
@@ -826,7 +842,7 @@ mod tests {
                     Some(SendSpec {
                         to: partner,
                         tag: t.rank(),
-                        data: &payload,
+                        data: Payload::Bytes(&payload),
                     }),
                     Some(partner),
                 )?;

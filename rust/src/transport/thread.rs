@@ -22,7 +22,7 @@
 //! A failing rank cannot hang the rest: receives time out (configurable)
 //! and report which peer and block they were waiting for.
 
-use super::{BufferPool, SendSpec, Transport, TransportError, WireMsg};
+use super::{BufferPool, Payload, SendSpec, Transport, TransportError, WireMsg};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
@@ -139,8 +139,18 @@ impl Transport for ThreadTransport {
                     self.rank, s.to, self.p
                 )));
             }
+            let Payload::Bytes(data) = s.data else {
+                // Size-only payloads belong to the cost-model backends;
+                // this backend exists to move real bytes.
+                return Err(TransportError::Protocol(format!(
+                    "rank {}: virtual payload ({} bytes) on the thread backend \
+                     — use the sim/cost backend for size-only sweeps",
+                    self.rank,
+                    s.data.len()
+                )));
+            };
             let mut buf = self.outgoing_buf(s.to as usize);
-            buf.extend_from_slice(s.data);
+            buf.extend_from_slice(data);
             self.senders[s.to as usize]
                 .send(WireMsg {
                     tag: s.tag,
@@ -236,7 +246,7 @@ mod tests {
                 Some(SendSpec {
                     to: partner,
                     tag: t.rank(),
-                    data: &payload,
+                    data: Payload::Bytes(&payload),
                 }),
                 Some(partner),
             )?;
@@ -261,7 +271,7 @@ mod tests {
                         Some(SendSpec {
                             to: 1,
                             tag,
-                            data: &[tag as u8; 3],
+                            data: Payload::Bytes(&[tag as u8; 3]),
                         }),
                         None,
                     )?;
@@ -305,7 +315,7 @@ mod tests {
                         Some(SendSpec {
                             to: 1,
                             tag,
-                            data: &payload,
+                            data: Payload::Bytes(&payload),
                         }),
                         None,
                         &mut recv_buf,
@@ -330,7 +340,7 @@ mod tests {
                     Some(SendSpec {
                         to: 0,
                         tag: 99,
-                        data: &[],
+                        data: Payload::Bytes(&[]),
                     }),
                     None,
                     &mut recv_buf,

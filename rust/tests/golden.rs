@@ -1,0 +1,488 @@
+//! Golden figure-sweep parity: the unified rank-local execution core must
+//! reproduce the **pre-refactor** centralized cost accounting bit-for-bit.
+//!
+//! Before PR 4, every collective existed twice: as a rank-local SPMD
+//! program over `Transport`, and as a centralized loop driving all `p`
+//! ranks of the `Engine` — the path behind the Figure 1–3 sweeps. The
+//! refactor deleted the centralized bodies; this test pins their
+//! behavior: the `ref_*` functions below are faithful condensations of
+//! the deleted round loops (same messages, same byte counts, same rounds,
+//! driving the same `Engine`), and every sweep-shaped configuration must
+//! produce **identical** rounds, wire bytes, and bit-identical `f64`
+//! simulated times through the unified wrappers.
+//!
+//! A handful of analytically derived literals (α-only and β-only models,
+//! where the expected times are exact small integers) additionally pin
+//! the absolute values, so parity cannot degenerate into "both sides
+//! drifted together".
+
+use nblock_bcast::collectives::{
+    allgather_block_count, allgatherv_bruck, allgatherv_circulant, allgatherv_gather_bcast,
+    allgatherv_ring, bcast_binomial, bcast_block_count, bcast_circulant, bcast_scatter_allgather,
+    AllgatherInput, BlockPartition, Outcome,
+};
+use nblock_bcast::sched::{ceil_log2, recv_schedule_into, BcastPlan, Schedule, Scratch, Skips};
+use nblock_bcast::simulator::{CostModel, Engine, Msg, Stats};
+
+fn outcome(before: Stats, after: Stats) -> Outcome {
+    let d = after - before;
+    Outcome {
+        rounds: d.rounds,
+        time_s: d.time_s,
+        bytes_on_wire: d.bytes_on_wire,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference implementations: the deleted centralized cost loops, verbatim
+// in structure (cost-only mode — the sweeps never materialized payloads).
+// ---------------------------------------------------------------------------
+
+/// Pre-refactor `collectives::bcast::bcast_circulant` (data: None).
+fn ref_bcast_circulant(eng: &mut Engine, root: u64, n: usize, m: u64) -> Outcome {
+    let p = eng.p();
+    let before = eng.stats();
+    if p == 1 {
+        return outcome(before, eng.stats());
+    }
+    let skips = Skips::new(p);
+    let part = BlockPartition::new(m, n);
+    let plans: Vec<BcastPlan> = (0..p)
+        .map(|r| {
+            let rel = (r + p - root) % p;
+            BcastPlan::new(Schedule::compute(&skips, rel), n)
+        })
+        .collect();
+    let rounds = plans[0].num_rounds();
+    for t in 0..rounds {
+        let mut msgs = Vec::with_capacity(p as usize);
+        for r in 0..p {
+            let a = plans[r as usize].action(t);
+            let rel = (r + p - root) % p;
+            let to_rel = skips.to_proc(rel, a.k);
+            if to_rel == 0 {
+                continue; // never send to the root
+            }
+            if let Some(sb) = a.send_block {
+                msgs.push(Msg {
+                    from: r,
+                    to: (to_rel + root) % p,
+                    bytes: part.size(sb),
+                    tag: sb as u64,
+                    data: None,
+                });
+            }
+        }
+        eng.exchange(msgs).unwrap();
+    }
+    outcome(before, eng.stats())
+}
+
+/// Pre-refactor `collectives::bcast::bcast_binomial` (data: None).
+fn ref_bcast_binomial(eng: &mut Engine, root: u64, m: u64) -> Outcome {
+    let p = eng.p();
+    let before = eng.stats();
+    if p == 1 {
+        return outcome(before, eng.stats());
+    }
+    let q = ceil_log2(p);
+    for j in 0..q {
+        let step = 1u64 << j;
+        let mut msgs = Vec::new();
+        for rel in 0..step.min(p) {
+            let to_rel = rel + step;
+            if to_rel >= p {
+                continue;
+            }
+            msgs.push(Msg {
+                from: (rel + root) % p,
+                to: (to_rel + root) % p,
+                bytes: m,
+                tag: 0,
+                data: None,
+            });
+        }
+        eng.exchange(msgs).unwrap();
+    }
+    outcome(before, eng.stats())
+}
+
+/// Pre-refactor `collectives::bcast::bcast_scatter_allgather` (data: None).
+fn ref_bcast_scatter_allgather(eng: &mut Engine, root: u64, m: u64) -> Outcome {
+    let p = eng.p();
+    let before = eng.stats();
+    if p == 1 {
+        return outcome(before, eng.stats());
+    }
+    let part = BlockPartition::new(m, p as usize);
+    let mut owned: Vec<std::ops::Range<u64>> = (0..p).map(|_| 0..0).collect();
+    owned[0] = 0..p;
+    loop {
+        let mut msgs = Vec::new();
+        let mut splits: Vec<(u64, u64, std::ops::Range<u64>)> = Vec::new();
+        for rel in 0..p {
+            let range = owned[rel as usize].clone();
+            if range.end - range.start <= 1 || range.start != rel {
+                continue;
+            }
+            let len = range.end - range.start;
+            let half = len - len / 2;
+            let mid = range.start + half;
+            let bytes: u64 = (mid..range.end).map(|c| part.size(c as usize)).sum();
+            msgs.push(Msg {
+                from: (rel + root) % p,
+                to: (mid + root) % p,
+                bytes,
+                tag: mid,
+                data: None,
+            });
+            splits.push((rel, mid, mid..range.end));
+        }
+        if msgs.is_empty() {
+            break;
+        }
+        eng.exchange(msgs).unwrap();
+        for (from_rel, to_rel, moved) in splits {
+            owned[from_rel as usize] = owned[from_rel as usize].start..moved.start;
+            owned[to_rel as usize] = moved;
+        }
+    }
+    for t in 0..p - 1 {
+        let mut msgs = Vec::with_capacity(p as usize);
+        for rel in 0..p {
+            let c = (rel + p - t % p) % p;
+            msgs.push(Msg {
+                from: (rel + root) % p,
+                to: ((rel + 1) % p + root) % p,
+                bytes: part.size(c as usize),
+                tag: c,
+                data: None,
+            });
+        }
+        eng.exchange(msgs).unwrap();
+    }
+    outcome(before, eng.stats())
+}
+
+/// Pre-refactor `collectives::allgather::allgatherv_circulant` (the exact
+/// data-path accounting, data: None).
+fn ref_allgatherv_circulant(eng: &mut Engine, n: usize, counts: &[u64]) -> Outcome {
+    let p = eng.p();
+    let before = eng.stats();
+    if p == 1 {
+        return outcome(before, eng.stats());
+    }
+    let skips = Skips::new(p);
+    let q = skips.q();
+    let parts: Vec<BlockPartition> = counts
+        .iter()
+        .map(|&m| BlockPartition::new(m, n))
+        .collect();
+    let mut recv_all = vec![vec![0i64; q]; p as usize];
+    let mut scratch = Scratch::new();
+    for rel in 0..p {
+        recv_schedule_into(&skips, rel, &mut scratch, &mut recv_all[rel as usize]);
+    }
+    let x = (q - (n - 1 + q) % q) % q;
+    let concrete = |raw: i64, i: usize, k: usize| -> Option<usize> {
+        let v = raw + (i - k) as i64 - x as i64;
+        if v < 0 {
+            None
+        } else {
+            Some((v as usize).min(n - 1))
+        }
+    };
+    for i in x..(n + q - 1 + x) {
+        let k = i % q;
+        let mut msgs = Vec::with_capacity(p as usize);
+        for r in 0..p {
+            let to = skips.to_proc(r, k);
+            let mut bytes = 0u64;
+            for j in 0..p {
+                if j == to {
+                    continue;
+                }
+                let rel = (r + p - j + skips.skip(k)) % p;
+                if let Some(b) = concrete(recv_all[rel as usize][k], i, k) {
+                    bytes += parts[j as usize].size(b);
+                }
+            }
+            msgs.push(Msg {
+                from: r,
+                to,
+                bytes,
+                tag: k as u64,
+                data: None,
+            });
+        }
+        eng.exchange(msgs).unwrap();
+    }
+    outcome(before, eng.stats())
+}
+
+/// Pre-refactor `collectives::allgather::allgatherv_ring` (data: None).
+fn ref_allgatherv_ring(eng: &mut Engine, counts: &[u64]) -> Outcome {
+    let p = eng.p();
+    let before = eng.stats();
+    if p == 1 {
+        return outcome(before, eng.stats());
+    }
+    for t in 0..p - 1 {
+        let mut msgs = Vec::with_capacity(p as usize);
+        for r in 0..p {
+            let c = (r + p - t % p) % p;
+            msgs.push(Msg {
+                from: r,
+                to: (r + 1) % p,
+                bytes: counts[c as usize],
+                tag: c,
+                data: None,
+            });
+        }
+        eng.exchange(msgs).unwrap();
+    }
+    outcome(before, eng.stats())
+}
+
+/// Pre-refactor `collectives::allgather::allgatherv_bruck` (data: None).
+fn ref_allgatherv_bruck(eng: &mut Engine, counts: &[u64]) -> Outcome {
+    let p = eng.p();
+    let before = eng.stats();
+    if p == 1 {
+        return outcome(before, eng.stats());
+    }
+    let mut h = 1u64;
+    while h < p {
+        let cnt = h.min(p - h);
+        let mut msgs = Vec::with_capacity(p as usize);
+        for r in 0..p {
+            let bytes: u64 = (0..cnt).map(|i| counts[((r + i) % p) as usize]).sum();
+            msgs.push(Msg {
+                from: r,
+                to: (r + p - h) % p,
+                bytes,
+                tag: h,
+                data: None,
+            });
+        }
+        eng.exchange(msgs).unwrap();
+        h += cnt;
+    }
+    outcome(before, eng.stats())
+}
+
+/// Pre-refactor `collectives::allgather::allgatherv_gather_bcast`
+/// (data: None).
+fn ref_allgatherv_gather_bcast(eng: &mut Engine, counts: &[u64]) -> Outcome {
+    let p = eng.p();
+    let before = eng.stats();
+    if p == 1 {
+        return outcome(before, eng.stats());
+    }
+    let q = ceil_log2(p);
+    let mut held: Vec<std::ops::Range<u64>> = (0..p).map(|r| r..r + 1).collect();
+    for k in 0..q {
+        let step = 1u64 << k;
+        let mut msgs = Vec::new();
+        let mut moves: Vec<(u64, u64)> = Vec::new();
+        for r in 0..p {
+            if r % (step * 2) == step {
+                let range = held[r as usize].clone();
+                let bytes: u64 = range.clone().map(|c| counts[c as usize]).sum();
+                msgs.push(Msg {
+                    from: r,
+                    to: r - step,
+                    bytes,
+                    tag: range.start,
+                    data: None,
+                });
+                moves.push((r, r - step));
+            }
+        }
+        eng.exchange(msgs).unwrap();
+        for (from, to) in moves {
+            let range = held[from as usize].clone();
+            held[to as usize] = held[to as usize].start..range.end;
+        }
+    }
+    let total: u64 = counts.iter().sum();
+    ref_bcast_binomial(eng, 0, total);
+    outcome(before, eng.stats())
+}
+
+// ---------------------------------------------------------------------------
+// Parity assertions
+// ---------------------------------------------------------------------------
+
+/// Bit-for-bit equality of two outcomes: rounds and wire bytes are exact
+/// integers, and the simulated times must have identical bit patterns —
+/// both paths sum the same per-round maxima in the same round order.
+fn assert_identical(what: &str, reference: Outcome, unified: Outcome) {
+    assert_eq!(reference.rounds, unified.rounds, "{what}: rounds differ");
+    assert_eq!(
+        reference.bytes_on_wire, unified.bytes_on_wire,
+        "{what}: wire bytes differ"
+    );
+    assert_eq!(
+        reference.time_s.to_bits(),
+        unified.time_s.to_bits(),
+        "{what}: simulated time differs ({} vs {})",
+        reference.time_s,
+        unified.time_s
+    );
+}
+
+fn problem_counts(kind: &str, p: u64, m: u64) -> Vec<u64> {
+    match kind {
+        "regular" => (0..p).map(|_| m / p).collect(),
+        "irregular" => (0..p).map(|i| (i % 3) * (m / p)).collect(),
+        "degenerate" => (0..p).map(|i| if i == 0 { m } else { 0 }).collect(),
+        other => panic!("unknown problem type {other}"),
+    }
+}
+
+#[test]
+fn fig1_bcast_sweep_outputs_unchanged() {
+    // The Figure 1 sweep shape (config × size × three algorithms) at
+    // reduced scale, plus one full-scale 36×32 spot check below.
+    for (p, cost) in [
+        (36u64, CostModel::cluster_36(1)),
+        (144, CostModel::cluster_36(4)),
+        (64, CostModel::flat_default()),
+    ] {
+        let q = ceil_log2(p);
+        for m in [1u64 << 10, 1 << 14, 1 << 18] {
+            let n = bcast_block_count(m, q, 70.0);
+            for root in [0u64, p / 3] {
+                let mut e1 = Engine::new(p, cost);
+                let r1 = ref_bcast_circulant(&mut e1, root, n, m);
+                let mut e2 = Engine::new(p, cost);
+                let u1 = bcast_circulant(&mut e2, root, n, m, None).unwrap();
+                assert_identical(&format!("circulant p={p} m={m} root={root}"), r1, u1);
+
+                let mut e1 = Engine::new(p, cost);
+                let r2 = ref_bcast_binomial(&mut e1, root, m);
+                let mut e2 = Engine::new(p, cost);
+                let u2 = bcast_binomial(&mut e2, root, m, None).unwrap();
+                assert_identical(&format!("binomial p={p} m={m} root={root}"), r2, u2);
+
+                let mut e1 = Engine::new(p, cost);
+                let r3 = ref_bcast_scatter_allgather(&mut e1, root, m);
+                let mut e2 = Engine::new(p, cost);
+                let u3 = bcast_scatter_allgather(&mut e2, root, m, None).unwrap();
+                assert_identical(&format!("vdg p={p} m={m} root={root}"), r3, u3);
+            }
+        }
+    }
+}
+
+#[test]
+fn fig1_full_scale_p1152_spot_check() {
+    // One point at the paper's full 36×32 scale: the unified path must
+    // reproduce the centralized accounting also at p = 1152.
+    let p = 36 * 32u64;
+    let cost = CostModel::cluster_36(32);
+    let m = 1u64 << 20;
+    let n = 8usize;
+    let mut e1 = Engine::new(p, cost);
+    let r = ref_bcast_circulant(&mut e1, 0, n, m);
+    let mut e2 = Engine::new(p, cost);
+    let u = bcast_circulant(&mut e2, 0, n, m, None).unwrap();
+    assert_identical("circulant p=1152", r, u);
+    let mut e1 = Engine::new(p, cost);
+    let rb = ref_bcast_binomial(&mut e1, 0, m);
+    let mut e2 = Engine::new(p, cost);
+    let ub = bcast_binomial(&mut e2, 0, m, None).unwrap();
+    assert_identical("binomial p=1152", rb, ub);
+}
+
+#[test]
+fn fig2_fig3_allgatherv_sweep_outputs_unchanged() {
+    // The Figure 2/3 sweep shape (problem type × size × algorithms) at
+    // reduced scale. The circulant reference is the exact pre-refactor
+    // data-path accounting — the sweeps now run exactly it.
+    for (p, cost) in [(36u64, CostModel::cluster_36(4)), (48, CostModel::flat_default())] {
+        let q = ceil_log2(p);
+        for kind in ["regular", "irregular", "degenerate"] {
+            for m in [1u64 << 12, 1 << 16] {
+                let counts = problem_counts(kind, p, m);
+                let n = allgather_block_count(m, q, 40.0);
+                let input = AllgatherInput {
+                    counts: &counts,
+                    data: None,
+                };
+
+                let mut e1 = Engine::new(p, cost);
+                let r1 = ref_allgatherv_circulant(&mut e1, n, &counts);
+                let mut e2 = Engine::new(p, cost);
+                let u1 = allgatherv_circulant(&mut e2, n, &input).unwrap();
+                assert_identical(&format!("ag-circulant p={p} {kind} m={m}"), r1, u1);
+
+                let mut e1 = Engine::new(p, cost);
+                let r2 = ref_allgatherv_ring(&mut e1, &counts);
+                let mut e2 = Engine::new(p, cost);
+                let u2 = allgatherv_ring(&mut e2, &input).unwrap();
+                assert_identical(&format!("ag-ring p={p} {kind} m={m}"), r2, u2);
+
+                let mut e1 = Engine::new(p, cost);
+                let r3 = ref_allgatherv_bruck(&mut e1, &counts);
+                let mut e2 = Engine::new(p, cost);
+                let u3 = allgatherv_bruck(&mut e2, &input).unwrap();
+                assert_identical(&format!("ag-bruck p={p} {kind} m={m}"), r3, u3);
+
+                let mut e1 = Engine::new(p, cost);
+                let r4 = ref_allgatherv_gather_bcast(&mut e1, &counts);
+                let mut e2 = Engine::new(p, cost);
+                let u4 = allgatherv_gather_bcast(&mut e2, &input).unwrap();
+                assert_identical(&format!("ag-gb p={p} {kind} m={m}"), r4, u4);
+            }
+        }
+    }
+}
+
+#[test]
+fn analytically_pinned_absolute_values() {
+    // α-only model (α = 1, β = 0): simulated time == round count exactly.
+    let alpha_only = CostModel::Flat {
+        alpha: 1.0,
+        beta: 0.0,
+    };
+    let p = 17u64;
+    let mut e = Engine::new(p, alpha_only);
+    let c = bcast_circulant(&mut e, 0, 5, 4099, None).unwrap();
+    assert_eq!(c.rounds, 9); // n - 1 + ⌈log₂17⌉ = 4 + 5
+    assert_eq!(c.time_s, 9.0);
+    let mut e = Engine::new(p, alpha_only);
+    let b = bcast_binomial(&mut e, 0, 4099, None).unwrap();
+    assert_eq!((b.rounds, b.time_s), (5, 5.0));
+    let mut e = Engine::new(p, alpha_only);
+    let v = bcast_scatter_allgather(&mut e, 0, 4099, None).unwrap();
+    assert_eq!((v.rounds, v.time_s), (21, 21.0)); // q + p - 1 = 5 + 16
+    let counts = problem_counts("regular", p, 17 * 64);
+    let input = AllgatherInput {
+        counts: &counts,
+        data: None,
+    };
+    let mut e = Engine::new(p, alpha_only);
+    let a = allgatherv_circulant(&mut e, 3, &input).unwrap();
+    assert_eq!((a.rounds, a.time_s), (7, 7.0)); // n - 1 + q = 2 + 5
+    let mut e = Engine::new(p, alpha_only);
+    let g = allgatherv_gather_bcast(&mut e, &input).unwrap();
+    assert_eq!((g.rounds, g.time_s), (10, 10.0)); // 2q
+
+    // β-only model (α = 0, β = 1): simulated time == critical-path bytes.
+    let beta_only = CostModel::Flat {
+        alpha: 0.0,
+        beta: 1.0,
+    };
+    let mut e = Engine::new(4, beta_only);
+    let b = bcast_binomial(&mut e, 0, 1000, None).unwrap();
+    assert_eq!(b.time_s, 2000.0); // q·m = 2 × 1000
+    let mut e = Engine::new(4, beta_only);
+    let c = bcast_circulant(&mut e, 0, 2, 1000, None).unwrap();
+    assert_eq!(c.time_s, 1500.0); // (n - 1 + q) blocks of m/n = 3 × 500
+    let mut e = Engine::new(4, beta_only);
+    let v = bcast_scatter_allgather(&mut e, 0, 1000, None).unwrap();
+    // Scatter: 500 then 250; ring: 3 × 250.
+    assert_eq!(v.time_s, 1500.0);
+}

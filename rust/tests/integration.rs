@@ -2,9 +2,8 @@
 //! simulator, end to end with real payloads.
 
 use nblock_bcast::collectives::{
-    allgatherv_bruck, allgatherv_circulant, allgatherv_circulant_cost, allgatherv_gather_bcast,
-    allgatherv_ring, bcast_binomial, bcast_circulant, bcast_scatter_allgather, AllgatherInput,
-    BlockPartition,
+    allgatherv_bruck, allgatherv_circulant, allgatherv_gather_bcast, allgatherv_ring,
+    bcast_binomial, bcast_circulant, bcast_scatter_allgather, AllgatherInput, BlockPartition,
 };
 use nblock_bcast::sched::{ceil_log2, verify_p, Skips};
 use nblock_bcast::simulator::{CostModel, Engine};
@@ -111,23 +110,39 @@ fn allgatherv_zero_contributors_everywhere() {
 }
 
 #[test]
-fn cost_fast_path_tracks_exact_path() {
-    // Beyond the divisible case (unit-tested), the approximation must stay
-    // within the ceil-vs-split slack on ragged sizes.
+fn virtual_cost_path_equals_data_path_on_ragged_sizes() {
+    // Since the one-core refactor the cost-only sweep mode *is* the exact
+    // algorithm with virtual payloads, so its accounting must equal the
+    // data path's exactly — also on ragged sizes, where the old
+    // uniform-block approximation diverged.
     for p in [8u64, 17, 40] {
         let counts: Vec<u64> = (0..p).map(|i| (i % 3) * 1001 + 17).collect();
         let n = 7usize;
-        let input = AllgatherInput {
+        let data: Vec<Vec<u8>> = counts
+            .iter()
+            .enumerate()
+            .map(|(j, &c)| payload(c, j as u64))
+            .collect();
+        let with_data = AllgatherInput {
+            counts: &counts,
+            data: Some(&data),
+        };
+        let size_only = AllgatherInput {
             counts: &counts,
             data: None,
         };
         let mut e1 = Engine::new(p, CostModel::flat_default());
-        let exact = allgatherv_circulant(&mut e1, n, &input).unwrap();
+        let exact = allgatherv_circulant(&mut e1, n, &with_data).unwrap();
         let mut e2 = Engine::new(p, CostModel::flat_default());
-        let fast = allgatherv_circulant_cost(&mut e2, n, &counts).unwrap();
-        assert_eq!(exact.rounds, fast.rounds);
-        let ratio = fast.bytes_on_wire as f64 / exact.bytes_on_wire as f64;
-        assert!((0.99..1.10).contains(&ratio), "p={p}: ratio {ratio}");
+        let virt = allgatherv_circulant(&mut e2, n, &size_only).unwrap();
+        assert_eq!(exact.rounds, virt.rounds, "p={p}");
+        assert_eq!(exact.bytes_on_wire, virt.bytes_on_wire, "p={p}");
+        assert!(
+            (exact.time_s - virt.time_s).abs() < 1e-12,
+            "p={p}: {} vs {}",
+            exact.time_s,
+            virt.time_s
+        );
     }
 }
 

@@ -17,7 +17,7 @@ use nblock_bcast::simulator::CostModel;
 use nblock_bcast::transport::sim::run_sim;
 use nblock_bcast::transport::tcp::run_tcp;
 use nblock_bcast::transport::thread::run_threads;
-use nblock_bcast::transport::{BufferPool, SendSpec, Transport};
+use nblock_bcast::transport::{BufferPool, Payload, SendSpec, Transport};
 use std::time::Duration;
 
 const TIMEOUT: Duration = Duration::from_secs(60);
@@ -284,7 +284,7 @@ fn thread_sendrecv_into_buffer_is_stable_after_warmup() {
                 Some(SendSpec {
                     to: peer,
                     tag: round,
-                    data: &block,
+                    data: Payload::Bytes(&block),
                 }),
                 Some(peer),
                 &mut recv_buf,
@@ -383,7 +383,7 @@ fn tcp_crossed_connects_all_pairs_first_talk_same_round() {
                 Some(SendSpec {
                     to: partner,
                     tag: r * 100 + s,
-                    data: &block,
+                    data: Payload::Bytes(&block),
                 }),
                 Some(partner),
                 &mut recv_buf,
