@@ -1,87 +1,241 @@
-//! Bench: schedule construction (the paper's Table 3 quantity).
+//! Bench: schedule construction (the paper's Table 3 quantity) — now with
+//! machine-readable output and an allocation gate on the kernel.
 //!
-//! `cargo bench --bench bench_schedule` — compares the new O(log p)
-//! construction against the old O(log²p)/O(log³p) baselines and reports
-//! per-processor times, plus the allocation-free `*_into` fast path vs the
-//! allocating convenience API.
+//! `cargo bench --bench bench_schedule`             # full grid
+//! `cargo bench --bench bench_schedule -- --smoke`  # tiny grid for CI
+//!
+//! Per `p` (powers of two plus the paper's 1152-rank 36×32 cluster) this
+//! measures, in ns per rank:
+//!
+//! * **kernel** — `recv_schedule_into_fast` + `send_schedule_into` into
+//!   reused buffers: the allocation-free hot path. A counting global
+//!   allocator asserts **zero allocations of any size** inside the
+//!   measured window;
+//! * **bundle** — `Schedule::compute_with` (the inline `[i64; MAX_Q]`
+//!   bundle the collectives consume); also asserted allocation-free;
+//! * **alloc-api** — the allocating convenience wrappers, for contrast;
+//! * **cache-cold / cache-warm** — `ScheduleCache` miss vs hit path (the
+//!   hit path is thread-local and takes no lock), with hit/miss counts;
+//! * **old-recv / old-send** — the `O(log²p)`/`O(log³p)` baselines
+//!   (skipped in `--smoke`, they are what Table 3 retires).
+//!
+//! Results go to stdout and to `BENCH_schedule.json` (uploaded as a CI
+//! artifact next to `BENCH_transport.json`).
 
 use nblock_bcast::bench_support::{time_reps, Timing};
-use nblock_bcast::sched::baseline::{
-    recv_schedule_old, send_schedule_old, send_schedule_old_improved,
-};
+use nblock_bcast::sched::baseline::{recv_schedule_old, send_schedule_old_improved};
 use nblock_bcast::sched::{
-    recv_schedule, recv_schedule_into_fast, send_schedule, send_schedule_into, Scratch, Skips,
+    recv_schedule, recv_schedule_into_fast, send_schedule, send_schedule_into, Schedule,
+    ScheduleCache, Scratch, Skips,
 };
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
 
-fn report(name: &str, per_proc_divisor: f64, t: Timing) {
-    println!(
-        "{name:<44} median {:>10.1} ns/proc   (min {:>10.1})",
-        t.median_s / per_proc_divisor * 1e9,
-        t.min_s / per_proc_divisor * 1e9
-    );
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Counts every allocation (any size): the schedule kernel must make none.
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+struct Row {
+    p: u64,
+    q: usize,
+    series: &'static str,
+    ns_per_rank: f64,
+    min_ns_per_rank: f64,
+    /// Allocations inside the measured window (all sizes).
+    allocs: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+}
+
+impl Row {
+    fn json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"p\":{},\"q\":{},\"series\":\"{}\",\"ns_per_rank\":{:.1},",
+                "\"min_ns_per_rank\":{:.1},\"allocs\":{},\"cache_hits\":{},",
+                "\"cache_misses\":{}}}"
+            ),
+            self.p,
+            self.q,
+            self.series,
+            self.ns_per_rank,
+            self.min_ns_per_rank,
+            self.allocs,
+            self.cache_hits,
+            self.cache_misses,
+        )
+    }
+}
+
+/// Run one measured series: tally allocations over one dedicated un-timed
+/// pass (the timer's own sample vector must not pollute the count), then
+/// time `reps` passes.
+fn series<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (Timing, u64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    f();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - a0;
+    let t = time_reps(0, reps, &mut f);
+    (t, allocs)
 }
 
 fn main() {
-    for p in [1_000u64, 17_000, 131_000, 1_048_575, 2_097_151] {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let ps: &[u64] = if smoke {
+        &[64, 1152]
+    } else {
+        &[64, 1024, 1152, 16_384, 262_144, 1_048_576]
+    };
+    let reps = if smoke { 3 } else { 7 };
+    let mut rows: Vec<Row> = Vec::new();
+    println!("schedule construction by series (ns/rank):");
+    println!(
+        "{:>9} {:>3} {:>12} {:>12} {:>12} {:>8} {:>8} {:>8}",
+        "p", "q", "series", "median", "min", "allocs", "hits", "misses"
+    );
+    for &p in ps {
         let skips = Skips::new(p);
         let q = skips.q();
-        println!("— p = {p} (q = {q}) —");
         let window = 2048u64.min(p);
         let step = (p / window).max(1) as usize;
         let ranks: Vec<u64> = (0..p).step_by(step).take(window as usize).collect();
         let nr = ranks.len() as f64;
 
+        let mut push = |series: &'static str, t: Timing, allocs: u64, hits: u64, misses: u64| {
+            let row = Row {
+                p,
+                q,
+                series,
+                ns_per_rank: t.median_s / nr * 1e9,
+                min_ns_per_rank: t.min_s / nr * 1e9,
+                allocs,
+                cache_hits: hits,
+                cache_misses: misses,
+            };
+            println!(
+                "{:>9} {:>3} {:>12} {:>12.1} {:>12.1} {:>8} {:>8} {:>8}",
+                row.p,
+                row.q,
+                row.series,
+                row.ns_per_rank,
+                row.min_ns_per_rank,
+                row.allocs,
+                row.cache_hits,
+                row.cache_misses
+            );
+            rows.push(row);
+        };
+
+        // --- kernel: the allocation-free *_into fast path -----------------
         let mut scratch = Scratch::new();
         let (mut recv, mut send, mut tmp) = (vec![0i64; q], vec![0i64; q], vec![0i64; q]);
+        let (t, allocs) = series(2, reps, || {
+            for &r in &ranks {
+                recv_schedule_into_fast(&skips, r, &mut scratch, &mut recv);
+                send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut send);
+                std::hint::black_box((&recv, &send));
+            }
+        });
+        assert_eq!(allocs, 0, "p={p}: the schedule kernel must be allocation-free");
+        push("kernel", t, allocs, 0, 0);
 
-        report(
-            "new recv+send (zero-alloc _into)",
-            nr,
-            time_reps(2, 7, || {
-                for &r in &ranks {
-                    recv_schedule_into_fast(&skips, r, &mut scratch, &mut recv);
-                    send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut send);
-                    std::hint::black_box((&recv, &send));
-                }
-            }),
+        // --- bundle: Schedule::compute_with (inline [i64; MAX_Q]) ---------
+        let (t, allocs) = series(2, reps, || {
+            for &r in &ranks {
+                let (s, _, _) = Schedule::compute_with(&skips, r, &mut scratch);
+                std::hint::black_box(&s);
+            }
+        });
+        assert_eq!(allocs, 0, "p={p}: Schedule::compute_with must be allocation-free");
+        push("bundle", t, allocs, 0, 0);
+
+        // --- the allocating convenience API, for contrast -----------------
+        let (t, allocs) = series(1, reps, || {
+            for &r in &ranks {
+                std::hint::black_box(recv_schedule(&skips, r));
+                std::hint::black_box(send_schedule(&skips, r));
+            }
+        });
+        push("alloc-api", t, allocs, 0, 0);
+
+        // --- cache: cold fill vs lock-free warm hits ----------------------
+        // The cold pass is hand-timed: it happens exactly once, so the
+        // generic warmup/alloc-pass split would warm it away.
+        let cache = ScheduleCache::new(4);
+        let ca0 = ALLOCS.load(Ordering::Relaxed);
+        let t0 = std::time::Instant::now();
+        for &r in &ranks {
+            std::hint::black_box(cache.schedule(p, r));
+        }
+        let cold_s = t0.elapsed().as_secs_f64();
+        let cold_allocs = ALLOCS.load(Ordering::Relaxed) - ca0;
+        let cold = Timing::from_samples(vec![cold_s]);
+        let cold_stats = cache.stats();
+        push("cache-cold", cold, cold_allocs, cold_stats.hits, cold_stats.misses);
+        let (warm, warm_allocs) = series(1, reps, || {
+            for &r in &ranks {
+                std::hint::black_box(cache.schedule(p, r));
+            }
+        });
+        let warm_stats = cache.stats();
+        push(
+            "cache-warm",
+            warm,
+            warm_allocs,
+            warm_stats.hits - cold_stats.hits,
+            warm_stats.misses - cold_stats.misses,
         );
-        report(
-            "new recv+send (allocating API)",
-            nr,
-            time_reps(2, 7, || {
-                for &r in &ranks {
-                    std::hint::black_box(recv_schedule(&skips, r));
-                    std::hint::black_box(send_schedule(&skips, r));
-                }
-            }),
-        );
-        report(
-            "old recv O(log^2 p)",
-            nr,
-            time_reps(1, 5, || {
+
+        // --- the old constructions (Table 3's other column) ---------------
+        if !smoke {
+            let (t, allocs) = series(1, 3.min(reps), || {
                 for &r in &ranks {
                     std::hint::black_box(recv_schedule_old(&skips, r));
                 }
-            }),
-        );
-        report(
-            "old send O(log^3 p)",
-            nr,
-            time_reps(1, 3, || {
-                for &r in &ranks {
-                    std::hint::black_box(send_schedule_old(&skips, r));
-                }
-            }),
-        );
-        report(
-            "old send improved O(log^2 p)",
-            nr,
-            time_reps(1, 5, || {
+            });
+            push("old-recv", t, allocs, 0, 0);
+            let (t, allocs) = series(1, 3.min(reps), || {
                 for &r in &ranks {
                     std::hint::black_box(send_schedule_old_improved(&skips, r));
                 }
-            }),
-        );
+            });
+            push("old-send", t, allocs, 0, 0);
+        }
         println!();
     }
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"schedule_construction\",\"smoke\":{},",
+            "\"results\":[\n{}\n]}}\n"
+        ),
+        smoke,
+        rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n")
+    );
+    let path = "BENCH_schedule.json";
+    let mut f = std::fs::File::create(path).expect("create BENCH_schedule.json");
+    f.write_all(json.as_bytes()).expect("write bench json");
+    println!("wrote {} rows to {path}", rows.len());
 }

@@ -31,11 +31,12 @@ use nblock_bcast::collectives::generic::{bcast_circulant_into, Algorithm};
 use nblock_bcast::collectives::generic_baselines::{
     bcast_binomial_into, bcast_scatter_allgather_into,
 };
+use nblock_bcast::collectives::segment::auto_block_count;
 use nblock_bcast::simulator::CostModel;
 use nblock_bcast::transport::sim::run_sim;
 use nblock_bcast::transport::tcp::run_tcp;
 use nblock_bcast::transport::thread::run_threads;
-use nblock_bcast::transport::{BufferPool, Transport, TransportError};
+use nblock_bcast::transport::{BufferPool, CostHint, Transport, TransportError};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::io::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -200,9 +201,10 @@ impl Row {
 fn summarize(
     backend: &'static str,
     algo: Algorithm,
+    label: &'static str,
     p: u64,
     n: usize,
-    block_bytes: u64,
+    m: u64,
     reps: usize,
     per_rank: Vec<(f64, u64)>,
 ) -> Row {
@@ -218,11 +220,11 @@ fn summarize(
     let denom = (reps * rounds).max(1) as f64;
     Row {
         backend,
-        algo: algo.name(),
+        algo: label,
         p,
         n,
-        block_bytes,
-        payload_bytes: n as u64 * block_bytes,
+        block_bytes: m / n as u64,
+        payload_bytes: m,
         rounds,
         reps,
         wall_s,
@@ -270,17 +272,25 @@ fn main() {
         for &(n, bs) in configs {
             let m = n as u64 * bs;
             let d = payload(m);
-            for &algo in &algos {
+            // The three fixed-n algorithm series, plus a `segmented` series:
+            // the same circulant `_into` path with the α/β-auto-chosen block
+            // count for this payload under `CostHint::DEFAULT` (the hint the
+            // point-to-point backends report).
+            let n_seg = auto_block_count(CostHint::DEFAULT, p, m);
+            let mut runs: Vec<(Algorithm, &'static str, usize)> =
+                algos.iter().map(|&a| (a, a.name(), n)).collect();
+            runs.push((Algorithm::Circulant, "segmented", n_seg));
+            for &(algo, label, n_run) in &runs {
                 let (sim_res, _stats) = run_sim(p, CostModel::flat_default(), |mut t| {
-                    steady_state_bcast(&mut t, algo, 0, n, m, &d, warmup, reps)
+                    steady_state_bcast(&mut t, algo, 0, n_run, m, &d, warmup, reps)
                 })
                 .expect("sim backend");
                 let thread_res = run_threads(p, timeout, |mut t| {
-                    steady_state_bcast(&mut t, algo, 0, n, m, &d, warmup, reps)
+                    steady_state_bcast(&mut t, algo, 0, n_run, m, &d, warmup, reps)
                 })
                 .expect("thread backend");
                 let tcp_res = run_tcp(p, timeout, |mut t| {
-                    steady_state_bcast(&mut t, algo, 0, n, m, &d, warmup, reps)
+                    steady_state_bcast(&mut t, algo, 0, n_run, m, &d, warmup, reps)
                 })
                 .expect("tcp backend");
                 for (backend, res) in [
@@ -288,7 +298,7 @@ fn main() {
                     ("thread", thread_res),
                     ("tcp", tcp_res),
                 ] {
-                    let row = summarize(backend, algo, p, n, bs, reps, res);
+                    let row = summarize(backend, algo, label, p, n_run, m, reps, res);
                     println!(
                         "{:>4} {:>4} {:>10} {:>10} {:>7} {:>8} {:>18} | {:>12} {:>14.3} | {:>12} {:>14}",
                         row.p,
@@ -308,15 +318,16 @@ fn main() {
             }
         }
     }
-    // Steady-state circulant AND binomial rounds on the point-to-point
-    // backends must not touch the payload allocator: borrowed sends,
-    // pooled/reused receives, through the `_into` paths. (The
-    // scatter-allgather rows are reported for the record; its `_into`
-    // variant is expected to be clean too but is not yet gated.)
-    for row in rows
-        .iter()
-        .filter(|r| r.backend != "sim" && (r.algo == "circulant" || r.algo == "binomial"))
-    {
+    // Steady-state circulant (fixed-n AND auto-segmented) plus binomial
+    // rounds on the point-to-point backends must not touch the payload
+    // allocator: borrowed sends, pooled/reused receives, through the
+    // `_into` paths. (The scatter-allgather rows are reported for the
+    // record; its `_into` variant is expected to be clean too but is not
+    // yet gated.)
+    for row in rows.iter().filter(|r| {
+        r.backend != "sim"
+            && (r.algo == "circulant" || r.algo == "binomial" || r.algo == "segmented")
+    }) {
         assert_eq!(
             row.payload_allocs, 0,
             "{} {} p={} n={} block={}: {} steady-state payload allocations",

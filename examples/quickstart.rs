@@ -20,8 +20,8 @@ fn main() -> anyhow::Result<()> {
     let r = 8u64;
     let sched = Schedule::compute(&skips, r);
     println!("\nprocessor {r}: baseblock {}", sched.baseblock);
-    println!("  recvblock[] = {:?}", sched.recv);
-    println!("  sendblock[] = {:?}", sched.send);
+    println!("  recvblock[] = {:?}", sched.recv_slice());
+    println!("  sendblock[] = {:?}", sched.send_slice());
 
     // --- 3. The concrete Algorithm-1 round plan for n blocks -------------
     let n = 6usize;

@@ -80,7 +80,11 @@ Tools:
   verify [--max P] [--sample N] [--n N]   check the 4 correctness conditions,
                                           Prop 1/3 bounds, Theorem 1 delivery
   schedule --p P --r R       print one processor's schedule and skip path
-  bcast --p P --m BYTES [--n N] [--root R]       compare bcast algorithms
+  bcast --p P --m BYTES [--n N] [--root R] [--segment auto|N]
+                             compare bcast algorithms; --segment auto picks
+                             the α/β-optimal block count n* = √(m·β·(q-1)/α)
+                             from the backend's cost hint (an explicit
+                             --segment N forces N blocks, overriding --n)
   allgatherv --p P --m BYTES [--n N] [--type T]  compare allgatherv algorithms
                                                  (T: regular|irregular|degenerate)
     both accept --transport {sim,thread,tcp}: run the generic SPMD
@@ -138,22 +142,27 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
             args.get("n", 5),
         ),
         "schedule" => tools::schedule(args.get("p", 17), args.get("r", 3)),
-        "bcast" => match transport_arg(&args)? {
-            Some(backend) => tools::bcast_transport(
-                args.get("p", 16),
-                args.get("m", 1 << 16),
-                args.get("n", 0),
-                args.get("root", 0),
-                backend.as_str(),
-                &args.get("algo", "circulant".to_string()),
-            ),
-            None => tools::bcast(
-                args.get("p", 64),
-                args.get("m", 1 << 20),
-                args.get("n", 0),
-                args.get("root", 0),
-            ),
-        },
+        "bcast" => {
+            let segment = args.options.get("segment").cloned();
+            match transport_arg(&args)? {
+                Some(backend) => tools::bcast_transport(
+                    args.get("p", 16),
+                    args.get("m", 1 << 16),
+                    args.get("n", 0),
+                    args.get("root", 0),
+                    backend.as_str(),
+                    &args.get("algo", "circulant".to_string()),
+                    segment.as_deref(),
+                ),
+                None => tools::bcast(
+                    args.get("p", 64),
+                    args.get("m", 1 << 20),
+                    args.get("n", 0),
+                    args.get("root", 0),
+                    segment.as_deref(),
+                ),
+            }
+        }
         "allgatherv" => match transport_arg(&args)? {
             Some(backend) => tools::allgatherv_transport(
                 args.get("p", 16),

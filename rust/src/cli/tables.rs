@@ -64,14 +64,14 @@ pub fn table2(p: u64) -> Result<()> {
     for k in 0..q {
         print!("{:16}", format!("recvblock[{k}]:"));
         for s in &scheds {
-            print!("{:>width$}", s.recv[k]);
+            print!("{:>width$}", s.recv_at(k));
         }
         println!();
     }
     for k in 0..q {
         print!("{:16}", format!("sendblock[{k}]:"));
         for s in &scheds {
-            print!("{:>width$}", s.send[k]);
+            print!("{:>width$}", s.send_at(k));
         }
         println!();
     }

@@ -71,27 +71,54 @@ pub fn schedule(p: u64, r: u64) -> Result<()> {
         })
         .collect();
     println!("canonical skip indices {:?} (path from root: 0 -> {:?})", d, path);
-    println!("recvblock[] = {:?}", s.recv);
-    println!("sendblock[] = {:?}", s.send);
+    println!("recvblock[] = {:?}", s.recv_slice());
+    println!("sendblock[] = {:?}", s.send_slice());
     for k in 0..skips.q() {
         println!(
             "  round k={k}: recv block {:>3} from {:>4}   send block {:>3} to {:>4}",
-            s.recv[k],
+            s.recv_at(k),
             skips.from_proc(r, k),
-            s.send[k],
+            s.send_at(k),
             skips.to_proc(r, k)
         );
     }
     Ok(())
 }
 
+/// Resolve the block count for a broadcast-shaped run: an explicit
+/// `--segment auto|<n>` wins (auto = the α/β-optimal closed form for
+/// `hint`), then an explicit `--n`, then the paper's `F·√(m/q)` heuristic.
+fn segment_block_count(
+    segment: Option<&str>,
+    hint: crate::transport::CostHint,
+    p: u64,
+    m: u64,
+    n: usize,
+) -> Result<usize> {
+    use crate::collectives::segment::Segment;
+    match segment {
+        Some(s) => {
+            let seg: Segment = s.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+            Ok(seg.block_count(hint, p, m))
+        }
+        None if n == 0 => Ok(bcast_block_count(m, ceil_log2(p), 70.0)),
+        None => Ok(n),
+    }
+}
+
 /// Compare the broadcast algorithms for one (p, m) under both cost models.
-pub fn bcast(p: u64, m: u64, n: usize, root: u64) -> Result<()> {
+pub fn bcast(p: u64, m: u64, n: usize, root: u64, segment: Option<&str>) -> Result<()> {
     let q = ceil_log2(p);
-    let n = if n == 0 { bcast_block_count(m, q, 70.0) } else { n };
+    let hint = crate::transport::CostHint::from_model(&CostModel::flat_default());
+    let n = segment_block_count(segment, hint, p, m, n)?;
     println!(
-        "broadcast of {} from root {root} over p = {p} (q = {q}), n = {n} blocks\n",
-        fmt_bytes(m)
+        "broadcast of {} from root {root} over p = {p} (q = {q}), n = {n} blocks{}\n",
+        fmt_bytes(m),
+        if segment == Some("auto") {
+            " (α/β-optimal auto-segmentation)"
+        } else {
+            ""
+        }
     );
     println!(
         "{:>22} {:>8} {:>14} {:>12}",
@@ -324,20 +351,43 @@ pub fn bcast_transport(
     root: u64,
     backend: &str,
     algo: &str,
+    segment: Option<&str>,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
+    use crate::collectives::segment::Segment;
     use crate::transport::Transport;
     if p == 0 {
         bail!("need at least one rank");
     }
     let q = ceil_log2(p);
-    let n = if n == 0 { bcast_block_count(m, q, 70.0) } else { n };
+    let hint = backend_hint(backend);
     if root >= p {
         bail!("root must be < p");
     }
     let requested: Algorithm = algo.parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    let cutoff = backend_hint(backend).latency_cutoff_bytes();
-    let resolved = requested.resolve_bcast_with(cutoff, p, n, m);
+    // Block-count precedence: an explicit `--segment` is final (never
+    // overridden below — `--segment 1` really runs one block); then an
+    // explicit `--n`; with neither, `--algo auto` leaves n = 0 so the
+    // dispatch resolution auto-segments from the backend's α/β (matching
+    // what a flat `generic::bcast(Auto, …)` call would do), while concrete
+    // algorithms keep the paper's F·√(m/q) heuristic.
+    let forced = segment.is_some();
+    let n = match segment {
+        Some(s) => {
+            let seg: Segment = s.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+            seg.block_count(hint, p, m)
+        }
+        None if n == 0 && requested == Algorithm::Auto => 0,
+        None if n == 0 => bcast_block_count(m, q, 70.0),
+        None => n,
+    };
+    // Display the same resolution the dispatch will make.
+    let (resolved, n) = if forced {
+        let cutoff = hint.latency_cutoff_bytes();
+        (requested.resolve_bcast_with(cutoff, p, n, m), n.max(1))
+    } else {
+        requested.resolve_bcast_segmented(hint, p, n, m)
+    };
     let auto_note = if requested == Algorithm::Auto { " (auto)" } else { "" };
     let payload: Vec<u8> = (0..m).map(|i| ((i * 131) % 251) as u8).collect();
     println!(

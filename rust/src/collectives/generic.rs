@@ -50,14 +50,21 @@
 //! [`allgatherv`], [`reduce`] and [`allreduce`] select one, pre-warm the
 //! transport links the chosen schedule will use (a no-op off the lazy TCP
 //! mesh), and run it. [`Algorithm::Auto`] picks a sensible algorithm from
-//! `(p, n, message size)` — see [`Algorithm::resolve_bcast`] for the
-//! exact thresholds.
+//! `(p, n, message size)` and the backend's α/β hint — see
+//! [`Algorithm::resolve_bcast`] for the exact thresholds — and, when the
+//! caller did not pick a block count, *auto-segments* large payloads into
+//! the closed-form-optimal `n* ≈ √(m·β·(q-1)/α)` blocks (see
+//! [`crate::collectives::segment`]), so a flat single-block broadcast
+//! pipelines itself. The [`bcast_virtual`], [`reduce_virtual`] and
+//! [`allreduce_virtual`] twins run the same resolution over the size-only
+//! cost path.
 
 #![warn(missing_docs)]
 
 use super::blocks::BlockPartition;
-use crate::sched::{ceil_log2, AllgatherSchedules, BcastPlan, Schedule, Skips};
-use crate::transport::{BufferPool, Payload, SendSpec, Transport, TransportError};
+use super::segment;
+use crate::sched::{ceil_log2, AllgatherSchedules, BcastPlan, Skips};
+use crate::transport::{BufferPool, CostHint, Payload, SendSpec, Transport, TransportError};
 use std::fmt;
 
 fn cerr(msg: String) -> TransportError {
@@ -226,14 +233,22 @@ fn bcast_circulant_impl<T: Transport + ?Sized>(
         }
         return Ok(());
     }
-    let skips = Skips::new(p);
+    // Schedules come from the process-global cache: the kernel itself is
+    // allocation-free, and the cache's hit path is thread-local (no lock),
+    // so 1152 concurrent ranks resolve their plans without serializing.
+    let cache = crate::sched::cache::global();
+    let skips = cache.skips(p);
     let rel = (rank + p - root) % p;
-    let plan = BcastPlan::new(Schedule::compute(&skips, rel), n);
+    let plan = BcastPlan::new((*cache.schedule(p, rel)).clone(), n);
     // Non-root block storage; the root sends borrowed slices of `data`
-    // directly and never populates (or copies into) block buffers. In
-    // virtual mode only possession is tracked — one bool per block.
+    // directly and never populates (or copies into) block buffers.
     let mut bufs: Vec<Option<Vec<u8>>> = if virt { Vec::new() } else { vec![None; n] };
-    let mut have: Vec<bool> = if virt { vec![false; n] } else { Vec::new() };
+    // Virtual-mode possession ledger (one bool per block): debug builds
+    // track arrivals to catch schedule violations; release builds rely on
+    // the statically verified schedule invariants (`sched::verify`), so
+    // the cost-sweep round loop carries zero verify cost or allocation.
+    let track = virt && cfg!(debug_assertions);
+    let mut have: Vec<bool> = if track { vec![false; n] } else { Vec::new() };
     for round in 0..plan.num_rounds() {
         let a = plan.action(round);
         let to_rel = skips.to_proc(rel, a.k);
@@ -246,7 +261,7 @@ fn bcast_circulant_impl<T: Transport + ?Sized>(
             match a.send_block {
                 Some(sb) => {
                     let payload: Payload = if virt {
-                        if rank != root && !have[sb] {
+                        if track && rank != root && !have[sb] {
                             return Err(cerr(format!(
                                 "rank {rank} round {round}: sends block {sb} before receiving it"
                             )));
@@ -283,7 +298,9 @@ fn bcast_circulant_impl<T: Transport + ?Sized>(
         if scheduled {
             let blk = expect.expect("check_scheduled confirmed a scheduled payload");
             if virt {
-                have[blk] = true;
+                if track {
+                    have[blk] = true;
+                }
             } else {
                 bufs[blk] = Some(recv_slot);
             }
@@ -292,7 +309,7 @@ fn bcast_circulant_impl<T: Transport + ?Sized>(
         }
     }
     if virt {
-        if rank != root {
+        if track && rank != root {
             if let Some(b) = have.iter().position(|&h| !h) {
                 return Err(cerr(format!("rank {rank}: missing block {b}")));
             }
@@ -428,12 +445,17 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
             })
             .collect()
     };
-    let mut have: Vec<Vec<bool>> = if virt {
-        Vec::new()
-    } else {
+    // Data-mode possession ledger (`O(p·n)` bools): debug builds track
+    // per-root block arrivals to catch pack/schedule violations; release
+    // builds rely on the verified schedule invariants plus the wire-level
+    // length checks below, so the round loop carries zero verify cost.
+    let track = !virt && cfg!(debug_assertions);
+    let mut have: Vec<Vec<bool>> = if track {
         let mut h: Vec<Vec<bool>> = (0..p as usize).map(|_| vec![false; n]).collect();
         h[rank as usize].fill(true);
         h
+    } else {
+        Vec::new()
     };
     // Round-reused scratch: the packed outgoing message and the inbound
     // frame. Capacities stabilize after the first few rounds.
@@ -464,7 +486,7 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
                     continue;
                 }
                 if let Some(b) = concrete(sched.send[j as usize][k], i, k) {
-                    if !have[j as usize][b] {
+                    if track && !have[j as usize][b] {
                         return Err(cerr(format!(
                             "rank {rank} round {i}: sends root {j} block {b} before receiving it"
                         )));
@@ -508,7 +530,9 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
                 }
                 out[j as usize][parts[j as usize].range(b)]
                     .copy_from_slice(&recv_buf[off..off + sz]);
-                have[j as usize][b] = true;
+                if track {
+                    have[j as usize][b] = true;
+                }
                 off += sz;
             }
         }
@@ -591,9 +615,10 @@ fn reduce_circulant_impl<T: Transport + ?Sized>(
     if p == 1 {
         return Ok(acc);
     }
-    let skips = Skips::new(p);
+    let cache = crate::sched::cache::global();
+    let skips = cache.skips(p);
     let rel = (rank + p - root) % p;
-    let plan = BcastPlan::new(Schedule::compute(&skips, rel), n);
+    let plan = BcastPlan::new((*cache.schedule(p, rel)).clone(), n);
     let part = BlockPartition::new((elems * 4) as u64, n);
     let erange = |b: usize| {
         let r = part.range(b);
@@ -1064,35 +1089,59 @@ impl Algorithm {
     ///
     /// The heuristic: messages of at most [`AUTO_LATENCY_CUTOFF`] bytes
     /// are latency-bound, so the `⌈log₂p⌉`-round binomial tree wins; for
-    /// larger messages the pipelined circulant broadcast wins whenever
-    /// the caller allows pipelining (`n > 1`), and scatter-allgather is
-    /// the fallback for large single-block messages (`n == 1`, where the
-    /// circulant schedule degenerates to whole-message rounds).
+    /// larger messages the pipelined circulant broadcast wins — and when
+    /// the caller did not pick a block count (`n ≤ 1`), the dispatch
+    /// pairs it with α/β-optimal auto-segmentation
+    /// ([`Algorithm::resolve_bcast_segmented`]), so a flat single-block
+    /// payload self-tunes instead of degenerating to whole-message
+    /// rounds. Scatter-allgather remains available as an explicit choice.
     ///
     /// This form uses the fixed fallback cutoff; the dispatch entry
-    /// points call [`Algorithm::resolve_bcast_with`] with the active
-    /// backend's [`Transport::cost_hint`] crossover instead.
+    /// points call [`Algorithm::resolve_bcast_segmented`] with the active
+    /// backend's [`Transport::cost_hint`] instead.
     pub fn resolve_bcast(self, p: u64, n: usize, m: u64) -> Algorithm {
         self.resolve_bcast_with(AUTO_LATENCY_CUTOFF, p, n, m)
     }
 
     /// [`Algorithm::resolve_bcast`] with an explicit latency cutoff
     /// (bytes), as derived from a backend's α/β estimate.
-    pub fn resolve_bcast_with(self, cutoff: u64, p: u64, n: usize, m: u64) -> Algorithm {
+    pub fn resolve_bcast_with(self, cutoff: u64, p: u64, _n: usize, m: u64) -> Algorithm {
         match self {
             Algorithm::Auto => {
                 if p <= 1 {
                     Algorithm::Circulant
                 } else if m <= cutoff {
                     Algorithm::Binomial
-                } else if n <= 1 {
-                    Algorithm::ScatterAllgather
                 } else {
                     Algorithm::Circulant
                 }
             }
             a => a,
         }
+    }
+
+    /// Resolve `Auto` for a broadcast *and* pick the block count: the
+    /// algorithm comes from [`Algorithm::resolve_bcast_with`] (cutoff
+    /// derived from `hint`), and when `Auto` lands on the pipelined
+    /// circulant schedule without a caller-chosen block count (`n ≤ 1`),
+    /// the count becomes the closed-form optimum
+    /// [`segment::optimal_block_count`] `n* ≈ √(m·β·(q-1)/α)` for the
+    /// hint's α/β. Explicit algorithms and explicit block counts pass
+    /// through unchanged (clamped to ≥ 1).
+    pub fn resolve_bcast_segmented(
+        self,
+        hint: CostHint,
+        p: u64,
+        n: usize,
+        m: u64,
+    ) -> (Algorithm, usize) {
+        let algo = self.resolve_bcast_with(hint.latency_cutoff_bytes(), p, n, m);
+        let n = if self == Algorithm::Auto && algo == Algorithm::Circulant && n <= 1 && p > 1 {
+            segment::auto_block_count(hint, p, m)
+        } else {
+            n.max(1)
+        };
+        (algo, n)
     }
 
     /// Resolve `Auto` for an allgatherv of `total` bytes (all
@@ -1145,6 +1194,26 @@ impl Algorithm {
         }
     }
 
+    /// [`Algorithm::resolve_bcast_segmented`] for a reduction of `bytes`
+    /// payload bytes: the time-reversed circulant schedule has the same
+    /// `(n - 1 + q)·(α + β·m/n)` cost shape, so `Auto` without a
+    /// caller-chosen block count gets the same closed-form `n*`.
+    pub fn resolve_reduce_segmented(
+        self,
+        hint: CostHint,
+        p: u64,
+        n: usize,
+        bytes: u64,
+    ) -> (Algorithm, usize) {
+        let algo = self.resolve_reduce_with(hint.latency_cutoff_bytes(), p, n, bytes);
+        let n = if self == Algorithm::Auto && algo == Algorithm::Circulant && n <= 1 && p > 1 {
+            segment::auto_block_count(hint, p, bytes)
+        } else {
+            n.max(1)
+        };
+        (algo, n)
+    }
+
     /// Resolve `Auto` for an allreduce: always the circulant
     /// reduce-then-broadcast (`2(n - 1 + ⌈log₂p⌉)` rounds, which both
     /// pipelines and keeps the round count logarithmic in `p`); the
@@ -1154,6 +1223,27 @@ impl Algorithm {
             Algorithm::Auto => Algorithm::Circulant,
             a => a,
         }
+    }
+
+    /// [`Algorithm::resolve_allreduce`] plus the block count: the
+    /// circulant allreduce is reduce-to-0 followed by bcast-from-0, each
+    /// with the broadcast cost shape, so `Auto` without a caller-chosen
+    /// block count gets the same closed-form `n*` as a broadcast of
+    /// `bytes`.
+    pub fn resolve_allreduce_segmented(
+        self,
+        hint: CostHint,
+        p: u64,
+        n: usize,
+        bytes: u64,
+    ) -> (Algorithm, usize) {
+        let algo = self.resolve_allreduce(p, n, bytes);
+        let n = if self == Algorithm::Auto && algo == Algorithm::Circulant && n <= 1 && p > 1 {
+            segment::auto_block_count(hint, p, bytes)
+        } else {
+            n.max(1)
+        };
+        (algo, n)
     }
 
     /// Communication rounds a (concrete) algorithm takes for an `n`-block
@@ -1352,10 +1442,12 @@ fn warm_rooted<T: Transport + ?Sized>(
 /// pre-warming exactly the links its schedule uses. `n` is the block
 /// count for the pipelined circulant schedule (binomial and
 /// scatter-allgather define their own message decomposition and ignore
-/// it). Argument and return conventions are those of [`bcast_circulant`]:
-/// the root passes `Some(payload)`, other ranks `None` (or
-/// `Some(expected)` to assert delivery), and every rank returns the full
-/// message.
+/// it); pass `n ≤ 1` with [`Algorithm::Auto`] to let the backend's
+/// [`Transport::cost_hint`] pick the α/β-optimal count
+/// (auto-segmentation — see [`segment`]). Argument and return
+/// conventions are those of [`bcast_circulant`]: the root passes
+/// `Some(payload)`, other ranks `None` (or `Some(expected)` to assert
+/// delivery), and every rank returns the full message.
 ///
 /// # Examples
 ///
@@ -1383,14 +1475,38 @@ pub fn bcast<T: Transport + ?Sized>(
     m: u64,
     data: Option<&[u8]>,
 ) -> Result<Vec<u8>, TransportError> {
-    let cutoff = t.cost_hint().latency_cutoff_bytes();
-    let algo = algo.resolve_bcast_with(cutoff, t.size(), n, m);
+    let (algo, n) = algo.resolve_bcast_segmented(t.cost_hint(), t.size(), n, m);
     warm_rooted(t, algo, root)?;
     match algo {
         Algorithm::Circulant => bcast_circulant(t, root, n, m, data),
         Algorithm::Binomial => super::generic_baselines::bcast_binomial(t, root, m, data),
         Algorithm::ScatterAllgather => {
             super::generic_baselines::bcast_scatter_allgather(t, root, m, data)
+        }
+        other => Err(cerr(format!(
+            "{other} is not a broadcast algorithm (auto|circulant|binomial|scatter-allgather)"
+        ))),
+    }
+}
+
+/// [`bcast`] in virtual (size-only) mode: the same resolution — including
+/// auto-segmentation from the backend's [`Transport::cost_hint`] — driving
+/// the matching `_virtual` round loop, so the `p = 1152` cost sweeps can
+/// plot predicted-vs-achieved segmentation gains through the exact
+/// dispatch path that moves real bytes.
+pub fn bcast_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    algo: Algorithm,
+    root: u64,
+    n: usize,
+    m: u64,
+) -> Result<(), TransportError> {
+    let (algo, n) = algo.resolve_bcast_segmented(t.cost_hint(), t.size(), n, m);
+    match algo {
+        Algorithm::Circulant => bcast_circulant_virtual(t, root, n, m),
+        Algorithm::Binomial => super::generic_baselines::bcast_binomial_virtual(t, root, m),
+        Algorithm::ScatterAllgather => {
+            super::generic_baselines::bcast_scatter_allgather_virtual(t, root, m)
         }
         other => Err(cerr(format!(
             "{other} is not a broadcast algorithm (auto|circulant|binomial|scatter-allgather)"
@@ -1460,12 +1576,32 @@ pub fn reduce<T: Transport + ?Sized>(
     n: usize,
     mine: &[f32],
 ) -> Result<Vec<f32>, TransportError> {
-    let cutoff = t.cost_hint().latency_cutoff_bytes();
-    let algo = algo.resolve_reduce_with(cutoff, t.size(), n, (mine.len() * 4) as u64);
+    let bytes = (mine.len() * 4) as u64;
+    let (algo, n) = algo.resolve_reduce_segmented(t.cost_hint(), t.size(), n, bytes);
     warm_rooted(t, algo, root)?;
     match algo {
         Algorithm::Circulant => reduce_circulant(t, root, n, mine),
         Algorithm::Binomial => super::generic_baselines::reduce_binomial(t, root, mine),
+        other => Err(cerr(format!(
+            "{other} is not a reduction algorithm (auto|circulant|binomial)"
+        ))),
+    }
+}
+
+/// [`reduce`] in virtual (size-only) mode, with the same resolution
+/// (including auto-segmentation) driving the `_virtual` round loops.
+pub fn reduce_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    algo: Algorithm,
+    root: u64,
+    n: usize,
+    elems: usize,
+) -> Result<(), TransportError> {
+    let bytes = (elems * 4) as u64;
+    let (algo, n) = algo.resolve_reduce_segmented(t.cost_hint(), t.size(), n, bytes);
+    match algo {
+        Algorithm::Circulant => reduce_circulant_virtual(t, root, n, elems),
+        Algorithm::Binomial => super::generic_baselines::reduce_binomial_virtual(t, root, elems),
         other => Err(cerr(format!(
             "{other} is not a reduction algorithm (auto|circulant|binomial)"
         ))),
@@ -1483,7 +1619,8 @@ pub fn allreduce<T: Transport + ?Sized>(
 ) -> Result<Vec<f32>, TransportError> {
     let p = t.size();
     let rank = t.rank();
-    let algo = algo.resolve_allreduce(p, n, (mine.len() * 4) as u64);
+    let bytes = (mine.len() * 4) as u64;
+    let (algo, n) = algo.resolve_allreduce_segmented(t.cost_hint(), p, n, bytes);
     if p > 1 {
         match algo {
             // The circulant allreduce is reduce-to-0 + bcast-from-0: warm
@@ -1502,6 +1639,25 @@ pub fn allreduce<T: Transport + ?Sized>(
     }
 }
 
+/// [`allreduce`] in virtual (size-only) mode, with the same resolution
+/// (including auto-segmentation) driving the `_virtual` round loops.
+pub fn allreduce_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    algo: Algorithm,
+    n: usize,
+    elems: usize,
+) -> Result<(), TransportError> {
+    let bytes = (elems * 4) as u64;
+    let (algo, n) = algo.resolve_allreduce_segmented(t.cost_hint(), t.size(), n, bytes);
+    match algo {
+        Algorithm::Circulant => allreduce_circulant_virtual(t, n, elems),
+        Algorithm::Ring => super::generic_baselines::allreduce_ring_virtual(t, elems),
+        other => Err(cerr(format!(
+            "{other} is not an allreduce algorithm (auto|circulant|ring)"
+        ))),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1511,7 +1667,10 @@ mod tests {
         let a = Algorithm::Auto;
         assert_eq!(a.resolve_bcast(16, 8, 1024), Algorithm::Binomial);
         assert_eq!(a.resolve_bcast(16, 8, 1 << 20), Algorithm::Circulant);
-        assert_eq!(a.resolve_bcast(16, 1, 1 << 20), Algorithm::ScatterAllgather);
+        // A large single-block payload now resolves to the *segmented*
+        // circulant run (the dispatch pairs it with n*), not to the
+        // scatter-allgather fallback.
+        assert_eq!(a.resolve_bcast(16, 1, 1 << 20), Algorithm::Circulant);
         assert_eq!(a.resolve_bcast(1, 1, 1 << 20), Algorithm::Circulant);
         assert_eq!(a.resolve_allgatherv(16, 4, 512), Algorithm::Bruck);
         assert_eq!(a.resolve_allgatherv(16, 4, 1 << 20), Algorithm::Circulant);
@@ -1520,6 +1679,42 @@ mod tests {
         assert_eq!(a.resolve_allreduce(16, 4, 100), Algorithm::Circulant);
         // Concrete algorithms pass through untouched.
         assert_eq!(Algorithm::Ring.resolve_bcast(16, 8, 10), Algorithm::Ring);
+    }
+
+    #[test]
+    fn segmented_resolution_picks_n_star() {
+        let hint = CostHint {
+            alpha_s: 2.0e-6,
+            beta_s_per_byte: 8.0e-11,
+        };
+        // Auto + flat payload: circulant with the closed-form n* > 1.
+        let (algo, n) = Algorithm::Auto.resolve_bcast_segmented(hint, 64, 1, 1 << 20);
+        assert_eq!(algo, Algorithm::Circulant);
+        assert_eq!(
+            n,
+            segment::optimal_block_count(hint.alpha_s, hint.beta_s_per_byte, 6, 1 << 20)
+        );
+        assert!(n > 1);
+        // Caller-chosen block counts pass through.
+        let (_, n8) = Algorithm::Auto.resolve_bcast_segmented(hint, 64, 8, 1 << 20);
+        assert_eq!(n8, 8);
+        // Explicit algorithms never auto-segment.
+        let sa = Algorithm::ScatterAllgather;
+        let (algo, n1) = sa.resolve_bcast_segmented(hint, 64, 1, 1 << 20);
+        assert_eq!((algo, n1), (Algorithm::ScatterAllgather, 1));
+        // Latency-bound payloads go binomial with the caller's count.
+        let (algo, _) = Algorithm::Auto.resolve_bcast_segmented(hint, 64, 1, 512);
+        assert_eq!(algo, Algorithm::Binomial);
+        // Reduce/allreduce mirror the broadcast shape.
+        let (algo, n) = Algorithm::Auto.resolve_reduce_segmented(hint, 64, 1, 1 << 20);
+        assert_eq!(algo, Algorithm::Circulant);
+        assert!(n > 1);
+        let (algo, n) = Algorithm::Auto.resolve_allreduce_segmented(hint, 64, 1, 1 << 20);
+        assert_eq!(algo, Algorithm::Circulant);
+        assert!(n > 1);
+        // p = 1 never segments.
+        let (_, n) = Algorithm::Auto.resolve_bcast_segmented(hint, 1, 1, 1 << 20);
+        assert_eq!(n, 1);
     }
 
     #[test]

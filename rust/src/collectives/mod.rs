@@ -32,6 +32,7 @@ pub mod hierarchical;
 pub mod reduce;
 pub mod bcast;
 pub mod blocks;
+pub mod segment;
 
 pub use allgather::{
     allgatherv_bruck, allgatherv_circulant, allgatherv_gather_bcast, allgatherv_ring,

@@ -1,0 +1,244 @@
+//! α/β-optimal auto-segmentation: pick the block count `n*` that makes a
+//! pipelined circulant collective fastest on the active link.
+//!
+//! The paper's whole payoff is pipelining — splitting an `m`-byte message
+//! into `n` blocks turns `n·⌈log₂p⌉` whole-message transmissions into the
+//! round-optimal `n - 1 + ⌈log₂p⌉` — but the block count used to be the
+//! *caller's* problem. Under a linear `α + β·bytes` link model the total
+//! broadcast time is
+//!
+//! ```text
+//! T(n) = (n - 1 + q)·(α + β·m/n)
+//!      = n·α + (q-1)·α + β·m + (q-1)·β·m/n        with q = ⌈log₂p⌉,
+//! ```
+//!
+//! a strictly convex function of `n` (a linear term that penalizes many
+//! rounds plus a hyperbolic term that penalizes big blocks). Setting
+//! `dT/dn = α - (q-1)·β·m/n² = 0` gives the closed form
+//!
+//! ```text
+//! n* = √(m·β·(q-1)/α),
+//! ```
+//!
+//! which [`optimal_block_count`] clamps and refines (see its docs for the
+//! exact rules). Träff's follow-up (arXiv:2407.18004) applies the same
+//! schedule family with cost-model-chosen granularity to broadcast and
+//! reduction; here the α/β estimate comes from
+//! [`crate::transport::Transport::cost_hint`], so
+//! [`crate::collectives::generic::Algorithm::Auto`] resolves a flat
+//! single-block payload into a self-tuned pipelined run on whatever
+//! backend it happens to be dispatched to.
+
+#![warn(missing_docs)]
+
+use crate::transport::CostHint;
+
+/// Hard cap on auto-chosen block counts. Bounds the per-collective
+/// schedule-plan work (`n - 1 + q` rounds are driven one by one) on
+/// degenerate hints (`α → 0` pushes the closed form toward one block per
+/// byte); at 4096 blocks the per-round α-overhead is already ≤ 1/4096 of
+/// the per-round payload time at the sizes where the cap can bind.
+pub const MAX_AUTO_BLOCKS: usize = 4096;
+
+/// Predicted time of an `m`-byte, `n`-block circulant broadcast (or its
+/// time-reversed reduction) over `q = ⌈log₂p⌉` rounds/phase on an
+/// `α + β·bytes` link: `(n - 1 + q)·(α + β·m/n)`.
+///
+/// The `m/n` is the *continuous* per-block size the closed form optimizes;
+/// the realized schedule rounds blocks to `⌈m/n⌉`/`⌊m/n⌋` bytes, which
+/// changes the total by at most `(n - 1 + q)·β` seconds.
+///
+/// # Examples
+///
+/// ```
+/// use nblock_bcast::collectives::segment::predicted_time;
+/// // One block: q whole-message rounds. q=6, α=2µs, β=80ps/B, m=1MiB.
+/// let t1 = predicted_time(2.0e-6, 8.0e-11, 6, 1 << 20, 1);
+/// assert!((t1 - 6.0 * (2.0e-6 + 8.0e-11 * 1048576.0)).abs() < 1e-12);
+/// // Fifteen blocks pipeline: more rounds, far smaller per-round cost.
+/// assert!(predicted_time(2.0e-6, 8.0e-11, 6, 1 << 20, 15) < t1 / 3.0);
+/// ```
+pub fn predicted_time(alpha: f64, beta: f64, q: usize, m: u64, n: usize) -> f64 {
+    debug_assert!(n >= 1);
+    (n as f64 - 1.0 + q as f64) * (alpha + beta * m as f64 / n as f64)
+}
+
+/// The block count minimizing [`predicted_time`] for an `m`-byte message
+/// at `q = ⌈log₂p⌉`: the closed form `n* = √(m·β·(q-1)/α)`, refined by
+/// evaluating the discrete neighbors (the function is convex, so checking
+/// `{⌊n*⌋ - 1, …, ⌈n*⌉ + 1}` is exhaustive — pinned by the brute-force
+/// property test in `rust/tests/segment.rs`) and clamped to
+/// `[1, min(m, MAX_AUTO_BLOCKS)]`.
+///
+/// Clamping rules for degenerate inputs:
+///
+/// * `q ≤ 1` (p ≤ 2) or `m == 0`: pipelining cannot help — 1 block;
+/// * `α ≤ 0` (latency-free link): the closed form diverges — the cap
+///   `min(m, MAX_AUTO_BLOCKS)` (one block per byte, bounded);
+/// * `β ≤ 0` (bandwidth-free link): rounds are all that costs — 1 block;
+/// * otherwise the refined closed form, clamped into the same range.
+///
+/// Ties between neighboring counts resolve to the smaller `n` (fewer
+/// rounds at equal predicted time).
+///
+/// # Examples
+///
+/// ```
+/// use nblock_bcast::collectives::segment::{optimal_block_count, predicted_time};
+/// // p = 64 (q = 6), 1 MiB on a 2 µs / 12.5 GB/s link: n* ≈ √(m·β·5/α) ≈ 14.5.
+/// let (alpha, beta) = (2.0e-6, 8.0e-11);
+/// let n = optimal_block_count(alpha, beta, 6, 1 << 20);
+/// assert!((14..=15).contains(&n));
+/// // No neighbor does better (convexity).
+/// let best = predicted_time(alpha, beta, 6, 1 << 20, n);
+/// assert!(best <= predicted_time(alpha, beta, 6, 1 << 20, n - 1));
+/// assert!(best <= predicted_time(alpha, beta, 6, 1 << 20, n + 1));
+/// // Degenerate links clamp instead of exploding.
+/// assert_eq!(optimal_block_count(alpha, beta, 1, 1 << 20), 1);
+/// assert_eq!(optimal_block_count(alpha, 0.0, 6, 1 << 20), 1);
+/// ```
+pub fn optimal_block_count(alpha: f64, beta: f64, q: usize, m: u64) -> usize {
+    if q <= 1 || m == 0 || beta <= 0.0 {
+        return 1;
+    }
+    let cap = MAX_AUTO_BLOCKS.min(m as usize).max(1);
+    if alpha <= 0.0 {
+        return cap;
+    }
+    let n0 = (m as f64 * beta * (q as f64 - 1.0) / alpha).sqrt();
+    if !n0.is_finite() || n0 >= cap as f64 {
+        // T is decreasing up to n*, so the cap is the best in-range count.
+        return cap;
+    }
+    let center = n0.floor() as usize;
+    let mut best = 1usize;
+    let mut best_t = f64::INFINITY;
+    for n in center.saturating_sub(1)..=center + 2 {
+        let n = n.clamp(1, cap);
+        let t = predicted_time(alpha, beta, q, m, n);
+        if t < best_t || (t == best_t && n < best) {
+            best = n;
+            best_t = t;
+        }
+    }
+    best
+}
+
+/// [`optimal_block_count`] driven by a backend's [`CostHint`] for a
+/// `p`-rank collective over `m` payload bytes — the form the
+/// [`crate::collectives::generic`] dispatch and the CLI's `--segment auto`
+/// use.
+pub fn auto_block_count(hint: CostHint, p: u64, m: u64) -> usize {
+    optimal_block_count(
+        hint.alpha_s,
+        hint.beta_s_per_byte,
+        crate::sched::ceil_log2(p.max(1)),
+        m,
+    )
+}
+
+/// A CLI-facing segmentation choice: `auto` (α/β-optimal block count from
+/// the backend's cost hint) or an explicit count.
+///
+/// # Examples
+///
+/// ```
+/// use nblock_bcast::collectives::segment::Segment;
+/// use nblock_bcast::transport::CostHint;
+/// assert_eq!("auto".parse::<Segment>(), Ok(Segment::Auto));
+/// assert_eq!("8".parse::<Segment>(), Ok(Segment::Fixed(8)));
+/// assert!("zero".parse::<Segment>().is_err());
+/// assert_eq!(Segment::Fixed(8).block_count(CostHint::DEFAULT, 64, 1 << 20), 8);
+/// assert!(Segment::Auto.block_count(CostHint::DEFAULT, 64, 1 << 20) > 1);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Segment {
+    /// Derive the block count from the backend's α/β estimate.
+    Auto,
+    /// Use exactly this many blocks (must be ≥ 1).
+    Fixed(usize),
+}
+
+impl Segment {
+    /// Resolve to a concrete block count for `m` bytes at `p` ranks.
+    pub fn block_count(self, hint: CostHint, p: u64, m: u64) -> usize {
+        match self {
+            Segment::Auto => auto_block_count(hint, p, m),
+            Segment::Fixed(n) => n.max(1),
+        }
+    }
+}
+
+impl std::fmt::Display for Segment {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Segment::Auto => f.write_str("auto"),
+            Segment::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Segment {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Segment, String> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(Segment::Auto);
+        }
+        match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(Segment::Fixed(n)),
+            _ => Err(format!("invalid segmentation `{s}` (auto|<blocks ≥ 1>)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_matches_brute_force_spot() {
+        // A denser grid lives in rust/tests/segment.rs; this is the smoke.
+        for (alpha, beta, q, m) in [
+            (2.0e-6, 8.0e-11, 6, 1u64 << 20),
+            (1.0e-6, 1.0e-9, 11, 1 << 24),
+            (5.0e-5, 1.0e-10, 4, 1 << 16),
+        ] {
+            let got = optimal_block_count(alpha, beta, q, m);
+            let brute = (1..=4096usize)
+                .min_by(|&a, &b| {
+                    predicted_time(alpha, beta, q, m, a)
+                        .total_cmp(&predicted_time(alpha, beta, q, m, b))
+                })
+                .unwrap();
+            assert!(
+                got.abs_diff(brute) <= 1,
+                "α={alpha} β={beta} q={q} m={m}: closed {got} vs brute {brute}"
+            );
+            assert!(
+                predicted_time(alpha, beta, q, m, got)
+                    <= predicted_time(alpha, beta, q, m, brute) * (1.0 + 1e-12)
+            );
+        }
+    }
+
+    #[test]
+    fn clamping_rules() {
+        assert_eq!(optimal_block_count(2.0e-6, 8.0e-11, 0, 1 << 20), 1);
+        assert_eq!(optimal_block_count(2.0e-6, 8.0e-11, 6, 0), 1);
+        assert_eq!(optimal_block_count(0.0, 8.0e-11, 6, 1 << 20), MAX_AUTO_BLOCKS);
+        assert_eq!(optimal_block_count(0.0, 8.0e-11, 6, 100), 100);
+        assert_eq!(optimal_block_count(2.0e-6, 0.0, 6, 1 << 20), 1);
+        // Huge m on a latency-light link hits the cap.
+        assert_eq!(optimal_block_count(1.0e-9, 1.0e-9, 20, u64::MAX), MAX_AUTO_BLOCKS);
+    }
+
+    #[test]
+    fn segment_parse_round_trip() {
+        for s in [Segment::Auto, Segment::Fixed(1), Segment::Fixed(1024)] {
+            assert_eq!(s.to_string().parse::<Segment>().unwrap(), s);
+        }
+        assert!("0".parse::<Segment>().is_err());
+        assert!("-3".parse::<Segment>().is_err());
+    }
+}

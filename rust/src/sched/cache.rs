@@ -3,25 +3,68 @@
 //! here optional: the `O(log p)` construction is cheap enough to run
 //! inline, but persistent communicators still benefit from reuse).
 //!
-//! [`ScheduleCache`] memoizes per-`(p, relative rank)` schedules behind a
-//! `RwLock`, so concurrent collective invocations on the same communicator
-//! share one computation. The statistics counters live *outside* the lock
-//! as atomics: the hit path takes only the read lock (it used to drop the
-//! read lock and re-acquire the write lock just to bump `hits`, which
-//! serialized concurrent readers). Eviction is size-capped FIFO over `p`
-//! groups, tracked in a `VecDeque` (O(1) pop-front, not the old O(n)
-//! `Vec::remove(0)`).
+//! ## Lock-free hit path
+//!
+//! [`ScheduleCache`] memoizes per-`(p, relative rank)` schedules in two
+//! layers:
+//!
+//! * a **thread-local front** (plain `HashMap`, no synchronization at
+//!   all): once a thread has seen a `(p, rel)` entry, every further hit is
+//!   a TLS lookup plus an `Arc` clone — no lock, no shared cache line
+//!   beyond the statistics counter. This is what lets 1152 in-process
+//!   ranks (`transport::cost::run_cost`) resolve their schedules without
+//!   serializing on a process-wide `RwLock`, which is exactly what the old
+//!   single-lock design did at that scale;
+//! * a **sharded shared store** (32 independent `RwLock`ed maps, keyed by
+//!   `(p, rel)` and sharded by `rel`): a thread's *first* access to an
+//!   entry takes one shard read lock (or, on a true miss, one shard write
+//!   lock for the insert), so even the cold path spreads `p` concurrent
+//!   first-time ranks over the shards instead of one lock.
+//!
+//! Schedules are pure functions of `(p, rel)`, so a thread-local entry can
+//! never be stale in a way that matters: after an eviction the shared
+//! store forgets a group, but any TLS copy still holds the identical
+//! value. Statistics live in atomics ([`CacheStats`]); eviction is
+//! size-capped FIFO over `p` groups.
+//!
+//! [`global`] is the process-wide instance the circulant collectives in
+//! [`crate::collectives::generic`] resolve their schedules through.
 
 use super::recv::Scratch;
 use super::schedule::Schedule;
 use super::skips::Skips;
+use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Number of independent locks the shared store is spread over. 32 shards
+/// keep `p` in the thousands of concurrent first-touch ranks from piling
+/// up on any single lock.
+const SHARDS: usize = 32;
+
+/// Thread-local front-layer entries kept per thread before the layer is
+/// reset (bounds per-thread memory for long-lived threads that touch many
+/// communicator sizes).
+const TLS_CAP: usize = 8192;
+
+/// Monotonic instance ids so thread-local entries of distinct caches never
+/// mix (two caches would still agree on the values — schedules are pure —
+/// but their hit/miss statistics must stay independent).
+static NEXT_CACHE_ID: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// The thread-local front: `(cache id, p, rel) → schedule`.
+    static TLS_SCHED: RefCell<HashMap<(u64, u64, u64), Arc<Schedule>>> =
+        RefCell::new(HashMap::new());
+    /// Thread-local skips: `(cache id, p) → skips`.
+    static TLS_SKIPS: RefCell<HashMap<(u64, u64), Arc<Skips>>> = RefCell::new(HashMap::new());
+}
 
 /// Cache statistics (for the ablation bench). A snapshot of the atomic
 /// counters; individual fields may be mutually skewed by concurrent
-/// bumps, which is fine for accounting.
+/// bumps, which is fine for accounting. Thread-local front hits count as
+/// hits.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct CacheStats {
     pub hits: u64,
@@ -36,98 +79,114 @@ struct AtomicStats {
     evictions: AtomicU64,
 }
 
-struct Group {
-    skips: Arc<Skips>,
-    /// Lazily filled per-rank schedules.
-    schedules: HashMap<u64, Arc<Schedule>>,
+/// The group directory: which `p` groups exist (their [`Skips`]) and in
+/// which order they were created (FIFO eviction).
+struct Groups {
+    skips: HashMap<u64, Arc<Skips>>,
+    insertion_order: VecDeque<u64>,
 }
 
-/// A thread-safe, size-capped schedule cache.
+type Shard = RwLock<HashMap<(u64, u64), Arc<Schedule>>>;
+
+/// A thread-safe, size-capped schedule cache with a lock-free
+/// (thread-local) hit path. See the module docs for the design.
 pub struct ScheduleCache {
+    id: u64,
     max_groups: usize,
     stats: AtomicStats,
-    inner: RwLock<Inner>,
+    groups: RwLock<Groups>,
+    shards: [Shard; SHARDS],
 }
 
-struct Inner {
-    groups: HashMap<u64, Group>,
-    insertion_order: VecDeque<u64>,
+/// The process-global cache the circulant collectives use: 16 communicator
+/// sizes, shared by every backend harness in the process. Safe to use from
+/// any thread; hits after the first touch are thread-local.
+pub fn global() -> &'static ScheduleCache {
+    static GLOBAL: OnceLock<ScheduleCache> = OnceLock::new();
+    GLOBAL.get_or_init(|| ScheduleCache::new(16))
+}
+
+#[inline]
+fn shard_of(rel: u64) -> usize {
+    (rel % SHARDS as u64) as usize
 }
 
 impl ScheduleCache {
     /// `max_groups`: number of distinct communicator sizes kept.
     pub fn new(max_groups: usize) -> ScheduleCache {
         ScheduleCache {
+            id: NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed),
             max_groups: max_groups.max(1),
             stats: AtomicStats::default(),
-            inner: RwLock::new(Inner {
-                groups: HashMap::new(),
+            groups: RwLock::new(Groups {
+                skips: HashMap::new(),
                 insertion_order: VecDeque::new(),
             }),
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
         }
     }
 
-    /// The skips for `p` (cached).
+    /// The skips for `p` (cached; thread-local after the first touch).
     pub fn skips(&self, p: u64) -> Arc<Skips> {
-        {
-            let inner = self.inner.read().unwrap();
-            if let Some(g) = inner.groups.get(&p) {
-                return g.skips.clone();
-            }
+        let key = (self.id, p);
+        if let Some(s) = TLS_SKIPS.with(|t| t.borrow().get(&key).cloned()) {
+            return s;
         }
-        let mut inner = self.inner.write().unwrap();
-        self.ensure_group(&mut inner, p);
-        inner.groups[&p].skips.clone()
+        let s = self.shared_skips(p);
+        TLS_SKIPS.with(|t| {
+            let mut t = t.borrow_mut();
+            if t.len() >= TLS_CAP {
+                t.clear();
+            }
+            t.insert(key, s.clone());
+        });
+        s
     }
 
     /// The schedule of relative rank `rel` in a `p`-communicator (cached).
-    /// The hit path takes only the read lock; counters are atomics.
+    ///
+    /// The hit path takes **no lock**: after this thread's first access to
+    /// the entry, lookups are served from the thread-local front (pinned
+    /// by the `hit_path_takes_no_locks` test, which calls this while
+    /// holding every internal write lock).
     pub fn schedule(&self, p: u64, rel: u64) -> Arc<Schedule> {
-        {
-            let inner = self.inner.read().unwrap();
-            if let Some(s) = inner.groups.get(&p).and_then(|g| g.schedules.get(&rel)) {
-                let s = s.clone();
-                drop(inner);
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                return s;
-            }
-        }
-        let mut inner = self.inner.write().unwrap();
-        self.ensure_group(&mut inner, p);
-        if let Some(s) = inner.groups[&p].schedules.get(&rel).cloned() {
-            // Raced with another writer that filled the slot first.
+        let key = (self.id, p, rel);
+        if let Some(s) = TLS_SCHED.with(|t| t.borrow().get(&key).cloned()) {
             self.stats.hits.fetch_add(1, Ordering::Relaxed);
             return s;
         }
-        self.stats.misses.fetch_add(1, Ordering::Relaxed);
-        let skips = inner.groups[&p].skips.clone();
-        let mut scratch = Scratch::new();
-        let (sched, _, _) = Schedule::compute_with(&skips, rel, &mut scratch);
-        let arc = Arc::new(sched);
-        inner
-            .groups
-            .get_mut(&p)
-            .unwrap()
-            .schedules
-            .insert(rel, arc.clone());
-        arc
+        let s = self.shared_schedule(p, rel);
+        TLS_SCHED.with(|t| {
+            let mut t = t.borrow_mut();
+            if t.len() >= TLS_CAP {
+                t.clear();
+            }
+            t.insert(key, s.clone());
+        });
+        s
     }
 
     /// Precompute every rank's schedule for a `p`-communicator (what an
-    /// `MPI_Comm_dup`-time hook would do).
+    /// `MPI_Comm_dup`-time hook would do). Fills the shared store only;
+    /// each thread's front still populates lazily on first access.
     pub fn warm(&self, p: u64) {
-        let skips = self.skips(p);
+        let skips = self.shared_skips(p);
         let mut scratch = Scratch::new();
         let mut computed: Vec<(u64, Arc<Schedule>)> = Vec::with_capacity(p as usize);
         for rel in 0..p {
             let (s, _, _) = Schedule::compute_with(&skips, rel, &mut scratch);
             computed.push((rel, Arc::new(s)));
         }
-        let mut inner = self.inner.write().unwrap();
-        self.ensure_group(&mut inner, p);
-        let g = inner.groups.get_mut(&p).unwrap();
+        // Directory read lock held across the inserts (groups → shards
+        // order): a group evicted during the long compute loop must not
+        // be re-populated behind the eviction sweep's back.
+        let groups = self.groups.read().unwrap();
+        if !groups.skips.contains_key(&p) {
+            return;
+        }
         for (rel, s) in computed {
-            g.schedules.entry(rel).or_insert(s);
+            let mut shard = self.shards[shard_of(rel)].write().unwrap();
+            shard.entry((p, rel)).or_insert(s);
         }
     }
 
@@ -139,26 +198,91 @@ impl ScheduleCache {
         }
     }
 
-    fn ensure_group(&self, inner: &mut Inner, p: u64) {
-        if inner.groups.contains_key(&p) {
-            return;
+    /// Shared-store skips lookup: read lock on the directory, write lock
+    /// (plus possible eviction) only when the group does not exist yet.
+    fn shared_skips(&self, p: u64) -> Arc<Skips> {
+        {
+            let groups = self.groups.read().unwrap();
+            if let Some(s) = groups.skips.get(&p) {
+                return s.clone();
+            }
         }
-        while inner.groups.len() >= self.max_groups {
-            let evict = inner
+        let mut groups = self.groups.write().unwrap();
+        self.ensure_group(&mut groups, p)
+    }
+
+    /// Shared-store schedule lookup/insert. One shard read lock on a
+    /// shared hit; compute + one shard write lock on a miss.
+    fn shared_schedule(&self, p: u64, rel: u64) -> Arc<Schedule> {
+        let shard = &self.shards[shard_of(rel)];
+        {
+            let map = shard.read().unwrap();
+            if let Some(s) = map.get(&(p, rel)) {
+                let s = s.clone();
+                drop(map);
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                return s;
+            }
+        }
+        // Compute outside any lock (a concurrent racer may duplicate the
+        // O(log p) work; the insert below resolves to one winner).
+        let skips = self.shared_skips(p);
+        let mut scratch = Scratch::new();
+        let (sched, _, _) = Schedule::compute_with(&skips, rel, &mut scratch);
+        let arc = Arc::new(sched);
+        use std::collections::hash_map::Entry;
+        let (s, raced) = {
+            // Directory read lock before the shard write lock (the same
+            // groups → shards order eviction uses): if the group was
+            // evicted while we computed, serve the value WITHOUT inserting
+            // it — an insert after the eviction sweep would be invisible
+            // to every future sweep and leak past the size cap.
+            let groups = self.groups.read().unwrap();
+            let mut map = shard.write().unwrap();
+            if !groups.skips.contains_key(&p) {
+                (arc, false)
+            } else {
+                match map.entry((p, rel)) {
+                    // Raced with another writer that filled the slot first.
+                    Entry::Occupied(e) => (e.get().clone(), true),
+                    Entry::Vacant(e) => {
+                        e.insert(arc.clone());
+                        (arc, false)
+                    }
+                }
+            }
+        };
+        if raced {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        s
+    }
+
+    /// Create the group for `p` if missing, evicting FIFO groups (and
+    /// sweeping their schedules out of every shard) beyond the cap. Called
+    /// with the directory write lock held; shard locks are taken strictly
+    /// after the directory lock, the order every path uses.
+    fn ensure_group(&self, groups: &mut Groups, p: u64) -> Arc<Skips> {
+        if let Some(s) = groups.skips.get(&p) {
+            return s.clone();
+        }
+        while groups.skips.len() >= self.max_groups {
+            let evict = groups
                 .insertion_order
                 .pop_front()
                 .expect("insertion order tracks every group");
-            inner.groups.remove(&evict);
+            groups.skips.remove(&evict);
+            for shard in &self.shards {
+                shard.write().unwrap().retain(|&(gp, _), _| gp != evict);
+            }
             self.stats.evictions.fetch_add(1, Ordering::Relaxed);
         }
-        inner.groups.insert(
-            p,
-            Group {
-                skips: Arc::new(Skips::new(p)),
-                schedules: HashMap::new(),
-            },
-        );
-        inner.insertion_order.push_back(p);
+        let skips = Arc::new(Skips::new(p));
+        groups.skips.insert(p, skips.clone());
+        groups.insertion_order.push_back(p);
+        skips
     }
 }
 
@@ -177,7 +301,7 @@ mod tests {
         let c = ScheduleCache::new(4);
         let a = c.schedule(17, 8);
         let b = c.schedule(17, 8);
-        assert_eq!(a.recv, b.recv);
+        assert_eq!(*a, *b);
         let st = c.stats();
         assert_eq!(st.misses, 1);
         assert!(st.hits >= 1);
@@ -209,6 +333,18 @@ mod tests {
     }
 
     #[test]
+    fn eviction_sweeps_shards() {
+        // After a group is evicted, none of its schedules may linger in
+        // the shared shards (they would leak memory cap-free).
+        let c = ScheduleCache::new(1);
+        c.warm(16);
+        c.warm(32); // evicts group 16
+        assert_eq!(c.stats().evictions, 1);
+        let total: usize = c.shards.iter().map(|s| s.read().unwrap().len()).sum();
+        assert_eq!(total, 32, "only group 32 may remain in the shards");
+    }
+
+    #[test]
     fn concurrent_access() {
         let c = std::sync::Arc::new(ScheduleCache::new(8));
         let mut handles = Vec::new();
@@ -230,9 +366,9 @@ mod tests {
 
     #[test]
     fn hit_counting_is_consistent_under_concurrency() {
-        // 8 threads hammer the same cached entry; every access after the
-        // first is a hit and none may be lost (they are atomic bumps, not
-        // write-lock re-acquisitions).
+        // 8 threads hammer the same cached entries; every access after the
+        // first is a hit and none may be lost (atomic bumps, with the
+        // thread-local front counting toward the same statistics).
         let c = std::sync::Arc::new(ScheduleCache::new(4));
         c.warm(32);
         let mut handles = Vec::new();
@@ -253,5 +389,28 @@ mod tests {
         let st = c.stats();
         assert_eq!(st.hits, 8 * 32 * 25);
         assert_eq!(st.misses, 0, "warm() precomputed everything");
+    }
+
+    #[test]
+    fn hit_path_takes_no_locks() {
+        // Populate this thread's front, then hold EVERY internal write
+        // lock while looking the entry up again: the hit path must return
+        // without touching any of them (std locks are not reentrant, so a
+        // lock acquisition here would deadlock the test).
+        let c = ScheduleCache::new(4);
+        let a = c.schedule(33, 5);
+        let _shard_guards: Vec<_> = c.shards.iter().map(|s| s.write().unwrap()).collect();
+        let _dir_guard = c.groups.write().unwrap();
+        let b = c.schedule(33, 5);
+        assert_eq!(*a, *b);
+        assert!(c.stats().hits >= 1);
+    }
+
+    #[test]
+    fn global_cache_is_shared_and_correct() {
+        let g = global();
+        let s = g.schedule(100, 42);
+        assert_eq!(*s, Schedule::compute(&Skips::new(100), 42));
+        assert_eq!(g.skips(100).p(), 100);
     }
 }

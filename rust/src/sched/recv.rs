@@ -16,11 +16,11 @@
 //! recursive calls).
 
 use super::baseblock::baseblock;
-use super::skips::Skips;
+use super::skips::{Skips, MAX_Q};
 
-/// Maximum supported `q+2` (list has slots for indices `-1 ..= q`); `q ≤ 64`
-/// covers every `p` representable in `u64`.
-const MAX_Q: usize = 66;
+/// Linked-list slots: one per skip index `-1 ..= q` plus one spare, with
+/// `q ≤ MAX_Q = 64` covering every `p` representable in `u64`.
+const SCRATCH_SLOTS: usize = MAX_Q + 2;
 
 /// Reusable, allocation-free scratch space for schedule computations.
 ///
@@ -30,9 +30,9 @@ const MAX_Q: usize = 66;
 #[derive(Debug, Clone)]
 pub struct Scratch {
     /// `next[e+1]`: next (smaller) live skip index after `e`; `-1` sentinel.
-    next: [i32; MAX_Q],
+    next: [i32; SCRATCH_SLOTS],
     /// `prev[e+1]`: previous (larger) live skip index before `e`.
-    prev: [i32; MAX_Q],
+    prev: [i32; SCRATCH_SLOTS],
 }
 
 impl Default for Scratch {
@@ -44,8 +44,8 @@ impl Default for Scratch {
 impl Scratch {
     pub fn new() -> Self {
         Scratch {
-            next: [0; MAX_Q],
-            prev: [0; MAX_Q],
+            next: [0; SCRATCH_SLOTS],
+            prev: [0; SCRATCH_SLOTS],
         }
     }
 
@@ -298,6 +298,7 @@ mod tests {
     fn recv_is_permutation_of_condition3_set() {
         // Correctness Condition 3: the schedule contains exactly the values
         // {-1..-q} \ {b-q} plus {b} (for the root: all of {-1..-q}).
+        let mut seen: Vec<i64> = Vec::new(); // reused across the sweep
         for p in 2..512u64 {
             let skips = Skips::new(p);
             let q = skips.q() as i64;
@@ -305,7 +306,8 @@ mod tests {
             let mut out = vec![0i64; skips.q()];
             for r in 0..p {
                 let (b, _) = recv_schedule_into(&skips, r, &mut scratch, &mut out);
-                let mut seen = out.clone();
+                seen.clear();
+                seen.extend_from_slice(&out);
                 seen.sort_unstable();
                 seen.dedup();
                 assert_eq!(seen.len(), skips.q(), "p={p} r={r}: distinct");

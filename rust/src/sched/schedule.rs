@@ -12,9 +12,16 @@
 
 use super::recv::{recv_schedule_into, RecvStats, Scratch};
 use super::send::{send_schedule_into, SendStats};
-use super::skips::Skips;
+use super::skips::{Skips, MAX_Q};
 
 /// The complete (phase-relative) schedule of one processor.
+///
+/// Storage is a pair of fixed-size inline `[i64; MAX_Q]` buffers (`q ≤ 64`
+/// covers every `p` representable in `u64`), so constructing a `Schedule`
+/// performs **zero heap allocations** — the schedule kernel is pure stack
+/// computation, pinned by the counting-allocator assertion in
+/// `benches/bench_schedule.rs`. Entries beyond `q` are zero (so derived
+/// equality is well-defined); use the accessors below.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Schedule {
     /// Processor rank (relative to the root; the broadcast root is rank 0).
@@ -24,9 +31,9 @@ pub struct Schedule {
     /// Baseblock of `r` (`q` for the root).
     pub baseblock: usize,
     /// Receive schedule `recvblock[0..q]` (relative block values).
-    pub recv: Vec<i64>,
+    recv: [i64; MAX_Q],
     /// Send schedule `sendblock[0..q]` (relative; absolute `k` for the root).
-    pub send: Vec<i64>,
+    send: [i64; MAX_Q],
 }
 
 impl Schedule {
@@ -36,19 +43,21 @@ impl Schedule {
         Self::compute_with(skips, r, &mut scratch).0
     }
 
-    /// Zero-extra-allocation variant reusing `scratch`; returns statistics
-    /// for the paper's empirical bound checks (§3).
+    /// Allocation-free kernel reusing `scratch`; returns statistics for
+    /// the paper's empirical bound checks (§3). The recv/send buffers are
+    /// inline arrays, so this performs no heap allocation at all.
     pub fn compute_with(
         skips: &Skips,
         r: u64,
         scratch: &mut Scratch,
     ) -> (Schedule, RecvStats, SendStats) {
         let q = skips.q();
-        let mut recv = vec![0i64; q];
-        let mut send = vec![0i64; q];
-        let mut tmp = vec![0i64; q];
-        let (b, rs) = recv_schedule_into(skips, r, scratch, &mut recv);
-        let (_, ss) = send_schedule_into(skips, r, scratch, &mut tmp, &mut send);
+        debug_assert!(q <= MAX_Q, "q = ⌈log₂p⌉ ≤ 64 for any u64 p");
+        let mut recv = [0i64; MAX_Q];
+        let mut send = [0i64; MAX_Q];
+        let mut tmp = [0i64; MAX_Q];
+        let (b, rs) = recv_schedule_into(skips, r, scratch, &mut recv[..q]);
+        let (_, ss) = send_schedule_into(skips, r, scratch, &mut tmp[..q], &mut send[..q]);
         (
             Schedule {
                 r,
@@ -60,6 +69,41 @@ impl Schedule {
             rs,
             ss,
         )
+    }
+
+    /// `recvblock[k]`, the (phase-relative) block received in round-index
+    /// `k ∈ 0..q`.
+    #[inline]
+    pub fn recv_at(&self, k: usize) -> i64 {
+        debug_assert!(k < self.q);
+        self.recv[k]
+    }
+
+    /// `sendblock[k]`, the block sent in round-index `k ∈ 0..q`
+    /// (phase-relative; absolute for the root).
+    #[inline]
+    pub fn send_at(&self, k: usize) -> i64 {
+        debug_assert!(k < self.q);
+        self.send[k]
+    }
+
+    /// The receive schedule `recvblock[0..q]` as a slice.
+    #[inline]
+    pub fn recv_slice(&self) -> &[i64] {
+        &self.recv[..self.q]
+    }
+
+    /// The send schedule `sendblock[0..q]` as a slice.
+    #[inline]
+    pub fn send_slice(&self) -> &[i64] {
+        &self.send[..self.q]
+    }
+
+    /// Mutable send schedule — only for the corruption-injection tests of
+    /// [`crate::sched::verify`].
+    #[cfg(test)]
+    pub(crate) fn send_slice_mut(&mut self) -> &mut [i64] {
+        &mut self.send[..self.q]
     }
 }
 
@@ -210,8 +254,8 @@ mod tests {
                     let plan = BcastPlan::new(sched.clone(), n);
                     let x = plan.x;
                     // Algorithm 1 verbatim:
-                    let mut recvb = sched.recv.clone();
-                    let mut sendb = sched.send.clone();
+                    let mut recvb = sched.recv_slice().to_vec();
+                    let mut sendb = sched.send_slice().to_vec();
                     for i in 0..x {
                         recvb[i] += q as i64 - x as i64;
                         sendb[i] += q as i64 - x as i64;

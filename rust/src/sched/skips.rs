@@ -13,6 +13,14 @@
 //! (debug-asserted and unit-tested) properties; the schedule constructions
 //! in [`crate::sched::recv`] and [`crate::sched::send`] rely on them.
 
+/// Upper bound on `q = ⌈log₂ p⌉` for any `p` representable in `u64`.
+///
+/// Every schedule of the paper has exactly `q ≤ 64` entries, so the
+/// schedule kernel ([`crate::sched::Schedule`], the `*_into` constructions)
+/// computes into fixed-size inline `[i64; MAX_Q]` buffers — no heap
+/// allocation anywhere on the schedule hot path.
+pub const MAX_Q: usize = 64;
+
 /// Number of rounds `q = ⌈log₂ p⌉` for `p ≥ 1`.
 ///
 /// `q = 0` for `p = 1` (a single processor needs no communication).

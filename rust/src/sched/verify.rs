@@ -9,7 +9,6 @@
 use super::recv::Scratch;
 use super::schedule::Schedule;
 use super::skips::Skips;
-use std::collections::HashSet;
 
 /// A violated correctness condition.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -91,6 +90,11 @@ pub struct VerifyReport {
 }
 
 /// Check Conditions 1, 3 and 4 for a full set of schedules.
+///
+/// The per-rank set comparison of Condition 3 reuses two sorted scratch
+/// vectors across the whole `p`-loop (the old version allocated two fresh
+/// `HashSet`s per rank, which dominated the verifier's own cost at large
+/// `p`).
 pub fn check_conditions(skips: &Skips, schedules: &[Schedule]) -> Result<(), VerifyError> {
     let p = skips.p();
     let q = skips.q();
@@ -98,14 +102,18 @@ pub fn check_conditions(skips: &Skips, schedules: &[Schedule]) -> Result<(), Ver
     if q == 0 {
         return Ok(());
     }
+    // Reused Condition-3 scratch: the expected and observed block sets,
+    // compared in sorted order.
+    let mut want: Vec<i64> = Vec::with_capacity(q);
+    let mut got: Vec<i64> = Vec::with_capacity(q);
     for r in 0..p {
         let s = &schedules[r as usize];
         // Condition 1 (== Condition 2): what r sends in round k is what the
         // to-processor receives in round k.
         for k in 0..q {
             let t = skips.to_proc(r, k);
-            let send = s.send[k];
-            let recv = schedules[t as usize].recv[k];
+            let send = s.send_at(k);
+            let recv = schedules[t as usize].recv_at(k);
             if send != recv {
                 return Err(VerifyError::SendRecvMismatch {
                     p,
@@ -120,46 +128,48 @@ pub fn check_conditions(skips: &Skips, schedules: &[Schedule]) -> Result<(), Ver
         // Root send schedule: block k in round k.
         if r == 0 {
             for k in 0..q {
-                if s.send[k] != k as i64 {
-                    return Err(VerifyError::RootSend { p, k, send: s.send[k] });
+                if s.send_at(k) != k as i64 {
+                    return Err(VerifyError::RootSend { p, k, send: s.send_at(k) });
                 }
             }
         }
         // Condition 3: the receive blocks are exactly
         // {-1..-q} \ {b-q} ∪ {b} (root: all of {-1..-q}).
         let b = s.baseblock as i64;
-        let want: HashSet<i64> = if r == 0 {
-            (-(q as i64)..0).collect()
+        want.clear();
+        if r == 0 {
+            want.extend(-(q as i64)..0);
         } else {
-            (-(q as i64)..0)
-                .filter(|&v| v != b - q as i64)
-                .chain(std::iter::once(b))
-                .collect()
-        };
-        let got: HashSet<i64> = s.recv.iter().copied().collect();
+            want.extend((-(q as i64)..0).filter(|&v| v != b - q as i64));
+            want.push(b);
+        }
+        want.sort_unstable();
+        got.clear();
+        got.extend_from_slice(s.recv_slice());
+        got.sort_unstable();
         if got != want {
             return Err(VerifyError::RecvBlockSet {
                 p,
                 r,
                 b: s.baseblock,
-                blocks: s.recv.clone(),
+                blocks: s.recv_slice().to_vec(),
             });
         }
         // Condition 4: a sent block was received in an earlier round of the
         // same phase, or is the processor's baseblock from the previous
         // phase (b - q). Implies sendblock[0] = b - q.
         if r != 0 {
-            if s.send[0] != b - q as i64 {
+            if s.send_at(0) != b - q as i64 {
                 return Err(VerifyError::SendBeforeRecv {
                     p,
                     r,
                     k: 0,
-                    send: s.send[0],
+                    send: s.send_at(0),
                 });
             }
             for k in 1..q {
-                let v = s.send[k];
-                let ok = v == b - q as i64 || s.recv[..k].contains(&v);
+                let v = s.send_at(k);
+                let ok = v == b - q as i64 || s.recv_slice()[..k].contains(&v);
                 if !ok {
                     return Err(VerifyError::SendBeforeRecv { p, r, k, send: v });
                 }
@@ -322,7 +332,7 @@ mod tests {
         let skips = Skips::new(17);
         let mut schedules: Vec<Schedule> = (0..17).map(|r| Schedule::compute(&skips, r)).collect();
         // Corrupt one send entry.
-        schedules[5].send[2] = -1;
+        schedules[5].send_slice_mut()[2] = -1;
         assert!(check_conditions(&skips, &schedules).is_err());
     }
 }

@@ -126,8 +126,9 @@ impl<'a> From<&'a [u8]> for Payload<'a> {
 }
 
 /// An outgoing block for one round. Real payloads are borrowed: transports
-/// write them to the wire (or copy them into a pooled buffer) without
-/// taking ownership, so callers keep their block storage across rounds.
+/// write them to the wire (the TCP backend as a single vectored write,
+/// zero copies at any size) without taking ownership, so callers keep
+/// their block storage across rounds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SendSpec<'a> {
     /// Destination rank.

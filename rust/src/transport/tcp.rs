@@ -10,16 +10,16 @@
 //! frame  := [tag u64][len u64][len payload bytes]
 //! ```
 //!
-//! On send-only rounds a frame goes out as *one* buffered write (small
-//! payloads, coalesced into a reused scratch buffer) or two (large
-//! payloads: header, then the caller's borrowed bytes — no copy),
-//! instead of the three-plus-flush of the original implementation.
-//! Full-duplex rounds assemble the frame into a pooled buffer (one
-//! memcpy) so the persistent writer thread can carry it — see below.
-//! A connection carries
-//! frames in FIFO order; together with the schedule determinism of the
-//! paper that is all the collectives need — no block metadata beyond the
-//! asserted `tag` ever crosses the wire.
+//! Every frame goes out as **one vectored write** (`writev` of the
+//! 16-byte header plus the caller's *borrowed* payload, with a
+//! short-write continuation loop), so a steady-state round performs one
+//! syscall per frame and **zero payload copies at any size** — the old
+//! path coalesced header+payload into a scratch buffer (one full memcpy)
+//! for everything up to 64 KiB, and the writer-thread path memcpy'd every
+//! full-duplex frame into a pooled buffer. A connection carries frames in
+//! FIFO order; together with the schedule determinism of the paper that
+//! is all the collectives need — no block metadata beyond the asserted
+//! `tag` ever crosses the wire.
 //!
 //! ## Lazy mesh
 //!
@@ -46,13 +46,24 @@
 //! A full-duplex round needs send ∥ recv so that cyclic exchanges larger
 //! than the socket buffers cannot deadlock. Instead of spawning a scoped
 //! thread per round (~tens of µs each), every endpoint lazily gets one
-//! *persistent* writer thread fed by a bounded channel: the caller
-//! assembles `[tag][len][payload]` into a pooled buffer (one memcpy),
-//! hands it over, reads its own inbound frame, then reaps the write ack
-//! and recycles the buffer. The ack-before-return invariant means the
-//! writer is idle outside `sendrecv_into`, so send-only rounds may write
-//! directly from the calling thread without interleaving. Writers join on
-//! drop.
+//! *persistent* writer thread fed by a bounded channel. The caller hands
+//! it the frame **by reference** — the tag by value plus a raw pointer to
+//! the borrowed payload — and the writer performs the same single
+//! vectored write as the direct path: no copy, no frame buffer.
+//! The caller then reads its own inbound frame and *always* reaps the
+//! write ack before returning; that ack-before-return invariant is what
+//! makes the borrowed-pointer handoff sound (the payload borrow outlives
+//! the write — see the safety notes on `WriteJob`) and keeps the writer
+//! idle outside `sendrecv_into`, so send-only rounds may write directly
+//! from the calling thread without interleaving. Writers join on drop.
+//!
+//! ## Idle-link reaping
+//!
+//! Long-lived communicators can accumulate `O(log p)` sockets per rank
+//! that a later workload never touches again. [`TcpTransport::reap_idle`]
+//! closes every link idle for more than a configurable number of
+//! *collective epochs* and lets the lazy mesh re-dial on demand; it must
+//! be called collectively at a synchronization point (see its docs).
 //!
 //! ## Rendezvous
 //!
@@ -66,8 +77,8 @@
 //!   binds `base_port + r`, so `p` processes need only agree on
 //!   `(host, base_port, p)`. Used by `examples/bcast_tcp.rs`.
 
-use super::{BufferPool, Payload, SendSpec, Transport, TransportError};
-use std::io::{ErrorKind, Read, Write};
+use super::{Payload, SendSpec, Transport, TransportError};
+use std::io::{ErrorKind, IoSlice, Read, Write};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
@@ -78,11 +89,6 @@ pub const MAGIC: u64 = u64::from_le_bytes(*b"nblkTcp1");
 
 /// Upper bound on a frame payload (fail fast on desynchronized streams).
 pub const MAX_FRAME: u64 = 1 << 32;
-
-/// Payloads up to this size are coalesced with their header into one
-/// buffered write (one syscall); larger ones go as header + borrowed
-/// payload (two syscalls, zero copies).
-const COALESCE_MAX: usize = 64 * 1024;
 
 fn write_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
     w.write_all(&v.to_le_bytes())
@@ -102,19 +108,47 @@ fn frame_header(tag: u64, len: usize) -> [u8; 16] {
     hdr
 }
 
-/// Assemble one `[tag][len][payload]` frame into `buf` (cleared first).
-fn encode_frame(buf: &mut Vec<u8>, tag: u64, data: &[u8]) {
-    buf.clear();
-    buf.reserve(16 + data.len());
-    buf.extend_from_slice(&frame_header(tag, data.len()));
-    buf.extend_from_slice(data);
+/// Write one `[tag][len][payload]` frame as a single vectored write
+/// (header + borrowed payload, zero copies), looping until both slices
+/// are fully on the wire. Short writes advance across the header/payload
+/// boundary; once the header is out, plain `write` finishes the payload
+/// (no point re-gathering one slice). `Interrupted` retries; a zero-length
+/// write is an error (`WriteZero`), matching `write_all`.
+fn write_frame_vectored(w: &mut impl Write, tag: u64, data: &[u8]) -> std::io::Result<()> {
+    let hdr = frame_header(tag, data.len());
+    let mut hoff = 0usize; // header bytes written
+    let mut doff = 0usize; // payload bytes written
+    while hoff < hdr.len() || doff < data.len() {
+        let written = if hoff < hdr.len() {
+            w.write_vectored(&[IoSlice::new(&hdr[hoff..]), IoSlice::new(&data[doff..])])
+        } else {
+            w.write(&data[doff..])
+        };
+        match written {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::WriteZero,
+                    "failed to write the whole frame",
+                ))
+            }
+            Ok(n) => {
+                let h = n.min(hdr.len() - hoff);
+                hoff += h;
+                doff += n - h;
+                debug_assert!(doff <= data.len());
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
-/// Write one `[tag][len][payload]` frame (simple form for tests and
-/// in-memory writers; the transport hot path uses coalesced frames).
+/// Write one `[tag][len][payload]` frame (public form for tests and
+/// in-memory writers) — the same single vectored write as the transport
+/// hot path, plus a flush for buffered writers.
 pub fn write_frame(w: &mut impl Write, tag: u64, data: &[u8]) -> std::io::Result<()> {
-    w.write_all(&frame_header(tag, data.len()))?;
-    w.write_all(data)?;
+    write_frame_vectored(w, tag, data)?;
     w.flush()
 }
 
@@ -151,20 +185,62 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<(u64, Vec<u8>)> {
     Ok((tag, data))
 }
 
-/// The persistent writer thread of one endpoint: receives assembled
-/// frames over a bounded channel, writes each as a single `write_all`,
-/// and acks with the buffer so the caller can recycle it.
+/// One frame handed to a persistent writer thread: the tag by value plus
+/// the caller's **borrowed** payload as a raw pointer — no copy is ever
+/// made of the payload on the wire path.
+///
+/// # Safety (why the raw pointer is sound)
+///
+/// The pointed-at slice is the `Payload::Bytes` borrow of an in-progress
+/// [`Transport::sendrecv_into`] call, and that call *always* blocks on the
+/// writer's ack before returning — even when its own read fails — so the
+/// borrow strictly outlives every access the writer makes:
+///
+/// * the ack arrives only after the writer has finished (or abandoned)
+///   the vectored write and dropped its reconstructed slice;
+/// * if the ack channel reports disconnection instead, the writer thread
+///   has already exited its loop (it drops the ack sender only on exit,
+///   after abandoning any frame), so it can no longer touch the pointer;
+/// * the job channel has capacity 1 and the ack is reaped before the next
+///   job is ever submitted, so at most one frame is in flight per writer.
+struct WriteJob {
+    tag: u64,
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the pointer is only dereferenced by the writer while the
+// submitting call is blocked waiting for the ack (see `WriteJob` docs).
+unsafe impl Send for WriteJob {}
+
+/// The persistent writer thread of one endpoint: receives borrowed frames
+/// over a bounded channel, writes each as a single vectored write, and
+/// acks the result. Dropping the `Writer` stops and joins the thread
+/// (instant in every reachable state: the ack-before-return invariant
+/// means the writer is idle whenever a `Writer` can be dropped).
 struct Writer {
     /// `None` after shutdown begins (dropping it is what stops the thread).
-    job_tx: Option<SyncSender<Vec<u8>>>,
-    ack_rx: Receiver<(std::io::Result<()>, Vec<u8>)>,
+    job_tx: Option<SyncSender<WriteJob>>,
+    ack_rx: Receiver<std::io::Result<()>>,
     handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for Writer {
+    fn drop(&mut self) {
+        drop(self.job_tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 /// One established connection to a peer.
 struct Endpoint {
     stream: TcpStream,
     writer: Option<Writer>,
+    /// Collective epoch of the last round that used this link (for
+    /// [`TcpTransport::reap_idle`]).
+    last_used: u64,
 }
 
 /// One rank's endpoint of the lazy socket mesh: at most `2⌈log₂p⌉ + O(1)`
@@ -180,10 +256,15 @@ pub struct TcpTransport {
     /// `endpoints[peer]`: the connection to `peer`, once established.
     endpoints: Vec<Option<Endpoint>>,
     timeout: Duration,
-    /// Recycled frame buffers for the writer-thread path.
-    pool: BufferPool,
-    /// Reused coalescing buffer for direct (send-only) writes.
-    scratch: Vec<u8>,
+    /// Current collective epoch (advanced by [`TcpTransport::reap_idle`]).
+    epoch: u64,
+    /// Accepted connections whose slot was still occupied: a peer that
+    /// reaped its end and re-dialed before this rank reached its own
+    /// (program-order-identical) reap point. The old link is quiescent by
+    /// then — the redialer finished every matching round first — so the
+    /// new connection parks here until our reap frees the slot, at which
+    /// point [`TcpTransport::accept_until`] promotes it.
+    pending_redials: Vec<(u64, TcpStream)>,
 }
 
 impl TcpTransport {
@@ -218,8 +299,8 @@ impl TcpTransport {
             addrs: addrs.to_vec(),
             endpoints: (0..p).map(|_| None).collect(),
             timeout,
-            pool: BufferPool::default(),
-            scratch: Vec::new(),
+            epoch: 0,
+            pending_redials: Vec::new(),
         })
     }
 
@@ -254,6 +335,37 @@ impl TcpTransport {
     /// tests assert this stays `O(log p)` through a broadcast).
     pub fn established_connections(&self) -> usize {
         self.endpoints.iter().filter(|e| e.is_some()).count()
+    }
+
+    /// Advance the collective epoch and close every link that was idle for
+    /// more than `max_idle` epochs, returning the number closed. Closed
+    /// links re-establish on demand through the ordinary lazy dial path,
+    /// so a long-lived communicator's socket budget shrinks back to what
+    /// its current workload actually touches (`max_idle = 0` closes every
+    /// link; `max_idle = N` keeps links used within the last `N` calls).
+    ///
+    /// Like every connection-setup path this must be called
+    /// **collectively and symmetrically**: every rank calls it at the same
+    /// program point with the same `max_idle`, immediately after a
+    /// synchronization ([`Transport::barrier`] or the end of a collective)
+    /// and before any further communication. Both ends of a link observe
+    /// identical usage epochs (every use is a matching send/recv pair), so
+    /// they always agree on which links die — a one-sided close would
+    /// instead strand the peer's half-open socket and poison its next
+    /// accept.
+    pub fn reap_idle(&mut self, max_idle: u64) -> usize {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let mut closed = 0usize;
+        for slot in self.endpoints.iter_mut() {
+            if slot.as_ref().is_some_and(|ep| epoch - ep.last_used > max_idle) {
+                // Dropping the endpoint joins its writer (idle by the
+                // ack-before-return invariant) and closes the socket.
+                *slot = None;
+                closed += 1;
+            }
+        }
+        closed
     }
 
     /// Eagerly connect exactly the circulant neighborhood `{rank ± skipₖ}`
@@ -374,6 +486,7 @@ impl TcpTransport {
         self.endpoints[peer as usize] = Some(Endpoint {
             stream: s,
             writer: None,
+            last_used: self.epoch,
         });
         Ok(())
     }
@@ -384,6 +497,18 @@ impl TcpTransport {
     fn accept_until(&mut self, peer: u64, deadline: Instant) -> Result<(), TransportError> {
         debug_assert!(peer > self.rank, "dial direction: higher dials lower");
         while self.endpoints[peer as usize].is_none() {
+            // A parked redial for this (now free) slot wins over the
+            // listener backlog: it arrived first, and per-pair FIFO must
+            // hold across the reconnect.
+            if let Some(pos) = self.pending_redials.iter().position(|&(r, _)| r == peer) {
+                let (_, s) = self.pending_redials.swap_remove(pos);
+                self.endpoints[peer as usize] = Some(Endpoint {
+                    stream: s,
+                    writer: None,
+                    last_used: self.epoch,
+                });
+                return Ok(());
+            }
             match self.listener.accept() {
                 Ok((stream, _)) => {
                     stream.set_nonblocking(false)?;
@@ -406,14 +531,25 @@ impl TcpTransport {
                         )));
                     }
                     if self.endpoints[from as usize].is_some() {
-                        return Err(TransportError::Protocol(format!(
-                            "rank {}: duplicate connection from rank {from}",
-                            self.rank
-                        )));
+                        // The peer reaped its end and re-dialed before this
+                        // rank reached its own reap point (the reap contract
+                        // guarantees the old link is quiescent and will be
+                        // closed here too): park the new connection until
+                        // the slot frees up. Two parked hellos from one rank
+                        // would mean a genuinely broken peer.
+                        if self.pending_redials.iter().any(|&(r, _)| r == from) {
+                            return Err(TransportError::Protocol(format!(
+                                "rank {}: duplicate connection from rank {from}",
+                                self.rank
+                            )));
+                        }
+                        self.pending_redials.push((from, s));
+                        continue;
                     }
                     self.endpoints[from as usize] = Some(Endpoint {
                         stream: s,
                         writer: None,
+                        last_used: self.epoch,
                     });
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -444,15 +580,20 @@ impl TcpTransport {
         let stream = ep.stream.try_clone().map_err(|e| {
             TransportError::Io(format!("rank {rank}: cloning stream to {peer}: {e}"))
         })?;
-        let (job_tx, job_rx) = sync_channel::<Vec<u8>>(1);
-        let (ack_tx, ack_rx) = sync_channel::<(std::io::Result<()>, Vec<u8>)>(1);
+        let (job_tx, job_rx) = sync_channel::<WriteJob>(1);
+        let (ack_tx, ack_rx) = sync_channel::<std::io::Result<()>>(1);
         let handle = std::thread::Builder::new()
             .name(format!("nblk-writer-{rank}-{peer}"))
             .spawn(move || {
                 let mut stream = stream;
-                while let Ok(frame) = job_rx.recv() {
-                    let res = stream.write_all(&frame);
-                    if ack_tx.send((res, frame)).is_err() {
+                while let Ok(job) = job_rx.recv() {
+                    // SAFETY: the submitting `sendrecv_into` call keeps its
+                    // payload borrow alive until it has reaped the ack for
+                    // this very job (see the `WriteJob` safety notes), so
+                    // the pointed-at bytes are valid for the whole write.
+                    let data = unsafe { std::slice::from_raw_parts(job.ptr, job.len) };
+                    let res = write_frame_vectored(&mut stream, job.tag, data);
+                    if ack_tx.send(res).is_err() {
                         break;
                     }
                 }
@@ -468,27 +609,22 @@ impl TcpTransport {
         Ok(())
     }
 
-    /// Write one frame to `to` from the calling thread: coalesced into the
-    /// reused scratch buffer (one syscall) for small payloads, header +
-    /// borrowed payload (two syscalls, zero copies) for large ones.
+    /// Write one frame to `to` from the calling thread: a single vectored
+    /// write of header + borrowed payload — one syscall, zero copies at
+    /// any size.
     ///
     /// Safe next to a persistent writer because of the ack-before-return
     /// invariant: outside `sendrecv_into` the writer holds no frame.
     fn write_direct(&mut self, to: u64, tag: u64, data: &[u8]) -> Result<(), TransportError> {
         let rank = self.rank;
-        let mut scratch = std::mem::take(&mut self.scratch);
-        let ep = self.endpoints[to as usize]
-            .as_mut()
-            .expect("endpoint established before write_direct");
-        let res = if data.len() <= COALESCE_MAX {
-            encode_frame(&mut scratch, tag, data);
-            ep.stream.write_all(&scratch)
-        } else {
-            ep.stream
-                .write_all(&frame_header(tag, data.len()))
-                .and_then(|()| ep.stream.write_all(data))
+        let epoch = self.epoch;
+        let res = {
+            let ep = self.endpoints[to as usize]
+                .as_mut()
+                .expect("endpoint established before write_direct");
+            ep.last_used = epoch;
+            write_frame_vectored(&mut ep.stream, tag, data)
         };
-        self.scratch = scratch;
         res.map_err(|e| {
             // A failed write may have emitted part of the frame: the
             // stream is desynchronized, never reuse it.
@@ -562,10 +698,12 @@ impl Transport for TcpTransport {
             (None, Some(from)) => {
                 self.check_peer(from)?;
                 self.ensure_links(Some(from), None)?;
+                let epoch = self.epoch;
                 let got = {
                     let ep = self.endpoints[from as usize]
                         .as_mut()
                         .expect("link established above");
+                    ep.last_used = epoch;
                     read_frame_into(&mut ep.stream, recv_buf)
                 };
                 got.map(Some).map_err(|e| self.poison_read(from, e))
@@ -574,14 +712,22 @@ impl Transport for TcpTransport {
                 // Send ∥ recv, possibly with the same peer: the persistent
                 // writer thread carries the outgoing frame while this
                 // thread reads, so cyclic rounds with payloads larger than
-                // the socket buffers cannot deadlock.
+                // the socket buffers cannot deadlock. The frame is handed
+                // over as tag-by-value + borrowed payload pointer — the
+                // writer performs the same single vectored write as the
+                // direct path, with zero copies (see `WriteJob`).
                 self.check_peer(s.to)?;
                 self.check_peer(from)?;
                 let data = self.payload_bytes(s.data)?;
                 self.ensure_links(Some(s.to), Some(from))?;
                 self.ensure_writer(s.to)?;
-                let mut frame = self.pool.get();
-                encode_frame(&mut frame, s.tag, data);
+                let epoch = self.epoch;
+                if let Some(ep) = self.endpoints[s.to as usize].as_mut() {
+                    ep.last_used = epoch;
+                }
+                if let Some(ep) = self.endpoints[from as usize].as_mut() {
+                    ep.last_used = epoch;
+                }
                 let rank = self.rank;
                 let (got, ack) = {
                     let writer = self.endpoints[s.to as usize]
@@ -594,7 +740,11 @@ impl Transport for TcpTransport {
                         .job_tx
                         .as_ref()
                         .expect("writer alive")
-                        .send(frame)
+                        .send(WriteJob {
+                            tag: s.tag,
+                            ptr: data.as_ptr(),
+                            len: data.len(),
+                        })
                         .map_err(|_| {
                             TransportError::Io(format!(
                                 "rank {rank}: writer thread for {} is gone",
@@ -608,18 +758,20 @@ impl Transport for TcpTransport {
                     let got = read_frame_into(&mut reader, recv_buf);
                     // Always reap the ack, even when the read failed: the
                     // ack-before-return invariant is what keeps direct
-                    // writes from interleaving with the writer thread.
-                    // Block without a cap, exactly like the old scoped-
-                    // thread join did: a *stalled* write fails on its own
-                    // via the stream's write timeout, so the ack always
-                    // arrives, while a slow-but-progressing large write is
-                    // allowed to finish instead of poisoning the link.
+                    // writes from interleaving with the writer thread AND
+                    // what keeps the borrowed payload pointer valid for
+                    // the writer's whole write (`data` lives until this
+                    // function returns). Block without a cap, exactly like
+                    // the old scoped-thread join did: a *stalled* write
+                    // fails on its own via the stream's write timeout, so
+                    // the ack always arrives, while a slow-but-progressing
+                    // large write is allowed to finish instead of
+                    // poisoning the link.
                     let ack = writer.ack_rx.recv();
                     (got, ack)
                 };
                 match ack {
-                    Ok((wres, buf)) => {
-                        self.pool.put(buf);
+                    Ok(wres) => {
                         wres.map_err(|e| {
                             // Possibly-partial write: the outbound stream
                             // is desynchronized, never reuse it.
@@ -628,14 +780,15 @@ impl Transport for TcpTransport {
                         })?;
                     }
                     Err(_) => {
-                        // The writer died without acking; whether the frame
-                        // made it out (fully or partially) is unknowable, so
-                        // the stream is desynchronized: poison the endpoint.
-                        // Dropping it detaches the writer machinery and
-                        // closes our side; the link is NOT recoverable —
-                        // the round has already failed for both sides, and
-                        // any further use of this peer errors instead of
-                        // corrupting the stream.
+                        // The writer died without acking; it exited its
+                        // loop first (so it no longer touches the payload
+                        // pointer), but whether the frame made it out —
+                        // fully or partially — is unknowable, so the
+                        // stream is desynchronized: poison the endpoint.
+                        // The link is NOT recoverable — the round has
+                        // already failed for both sides, and any further
+                        // use of this peer errors instead of corrupting
+                        // the stream.
                         self.endpoints[s.to as usize] = None;
                         return Err(TransportError::Io(format!(
                             "rank {rank}: writer thread for {} died",
@@ -652,22 +805,6 @@ impl Transport for TcpTransport {
         // FIFO per pair keeps barrier tokens behind any in-flight data;
         // the token links are established lazily like any other link.
         super::dissemination_barrier(self)
-    }
-}
-
-impl Drop for TcpTransport {
-    fn drop(&mut self) {
-        // Stop and join every persistent writer: dropping the job channel
-        // ends its loop; a writer stuck in a write is bounded by the
-        // stream's write timeout.
-        for ep in self.endpoints.iter_mut().flatten() {
-            if let Some(w) = ep.writer.as_mut() {
-                drop(w.job_tx.take());
-                if let Some(h) = w.handle.take() {
-                    let _ = h.join();
-                }
-            }
-        }
     }
 }
 
@@ -768,12 +905,50 @@ mod tests {
     }
 
     #[test]
-    fn encode_frame_matches_write_frame() {
+    fn vectored_frame_layout_is_header_then_payload() {
+        // The vectored writer must produce exactly [tag][len][payload],
+        // byte-identical to the documented wire format, including the
+        // empty-payload edge.
         let mut a = Vec::new();
         write_frame(&mut a, 5, b"payload").unwrap();
-        let mut b = Vec::new();
-        encode_frame(&mut b, 5, b"payload");
-        assert_eq!(a, b);
+        let mut want = Vec::new();
+        want.extend_from_slice(&5u64.to_le_bytes());
+        want.extend_from_slice(&(b"payload".len() as u64).to_le_bytes());
+        want.extend_from_slice(b"payload");
+        assert_eq!(a, want);
+    }
+
+    /// A writer that accepts at most `cap` bytes per call: exercises the
+    /// short-write continuation across the header/payload boundary.
+    struct Trickle {
+        out: Vec<u8>,
+        cap: usize,
+    }
+
+    impl Write for Trickle {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.cap);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn vectored_write_survives_short_writes() {
+        for cap in [1usize, 3, 7, 16, 17, 64] {
+            let mut w = Trickle {
+                out: Vec::new(),
+                cap,
+            };
+            let payload: Vec<u8> = (0..100u8).collect();
+            write_frame(&mut w, 42, &payload).unwrap();
+            let mut r = &w.out[..];
+            assert_eq!(read_frame(&mut r).unwrap(), (42, payload.clone()), "cap={cap}");
+            assert!(r.is_empty());
+        }
     }
 
     #[test]
@@ -852,6 +1027,39 @@ mod tests {
         })
         .unwrap();
         assert_eq!(counts, vec![1, 1, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn reap_idle_shrinks_socket_budget_and_relinks_on_demand() {
+        use crate::collectives::generic::bcast_circulant;
+        let m = 40_000u64;
+        let msg: Vec<u8> = (0..m).map(|i| ((i * 17 + 3) % 251) as u8).collect();
+        let budgets = run_tcp(8, Duration::from_secs(30), |mut t| {
+            let data = if t.rank() == 0 { Some(&msg[..]) } else { None };
+            let out = bcast_circulant(&mut t, 0, 3, m, data)?;
+            assert_eq!(out, msg);
+            t.barrier()?;
+            let before = t.established_connections();
+            assert!(before > 0, "broadcast must have opened links");
+            // Collective reap right after the barrier: every link was last
+            // used in the current epoch, so max_idle = 0 closes them all.
+            let closed = t.reap_idle(0);
+            assert_eq!(closed, before, "every idle link must close");
+            assert_eq!(t.established_connections(), 0);
+            // Reconnect-on-demand through the ordinary lazy dial path.
+            let out = bcast_circulant(&mut t, 0, 3, m, data)?;
+            assert_eq!(out, msg);
+            t.barrier()?;
+            // A reap that keeps the last epoch's links leaves them alone.
+            let kept = t.established_connections();
+            assert_eq!(t.reap_idle(1), 0);
+            assert_eq!(t.established_connections(), kept);
+            Ok((before, kept))
+        })
+        .unwrap();
+        for (r, &(before, kept)) in budgets.iter().enumerate() {
+            assert!(kept > 0 && before > 0, "rank {r}: links must re-establish");
+        }
     }
 
     #[test]

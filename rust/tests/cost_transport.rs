@@ -13,8 +13,12 @@
 
 use nblock_bcast::collectives::generic::{
     allgatherv_circulant_virtual, allgatherv_hierarchical_virtual, allreduce_circulant_virtual,
-    bcast_circulant_virtual, bcast_hierarchical_virtual, reduce_circulant_virtual, Algorithm,
+    bcast_circulant_virtual, bcast_hierarchical_virtual, bcast_virtual, reduce_circulant_virtual,
+    Algorithm,
 };
+use nblock_bcast::collectives::segment::predicted_time;
+use nblock_bcast::sched::ceil_log2;
+use nblock_bcast::transport::CostHint;
 use nblock_bcast::collectives::generic_baselines::{
     allgatherv_bruck_virtual, allgatherv_gather_bcast_virtual, allgatherv_ring_virtual,
     allreduce_ring_virtual, bcast_binomial_virtual, bcast_scatter_allgather_virtual,
@@ -159,6 +163,58 @@ fn p1152_gigabyte_virtual_sweep_every_algorithm() {
         payload_allocs, 0,
         "gigabyte-virtual sweep performed {payload_allocs} allocations ≥ 1 MiB"
     );
+}
+
+#[test]
+fn auto_segmentation_beats_single_block_by_the_predicted_ratio() {
+    // The acceptance gate: `Algorithm::Auto` on a flat 1 MiB payload at
+    // p = 64 resolves to a segmented circulant run with n* > 1 and beats
+    // the unsegmented single-block broadcast under the same cost model by
+    // the closed-form-predicted ratio.
+    let p = 64u64;
+    let m = 1u64 << 20;
+    let q = ceil_log2(p);
+    let model = CostModel::flat_default();
+    let hint = CostHint::from_model(&model);
+    let (algo, n_star) = Algorithm::Auto.resolve_bcast_segmented(hint, p, 1, m);
+    assert_eq!(algo, Algorithm::Circulant);
+    assert!(n_star > 1, "1 MiB at p = 64 must pipeline");
+
+    // Through the *dispatch* (the path a flat caller takes): the round
+    // count proves auto-segmentation actually happened.
+    let (_, auto_stats) = run_cost(p, model, |mut t| {
+        bcast_virtual(&mut t, Algorithm::Auto, 0, 1, m)
+    })
+    .unwrap();
+    assert_eq!(auto_stats.rounds, n_star - 1 + q);
+
+    // Unsegmented reference under the same model.
+    let (_, flat_stats) =
+        run_cost(p, model, |mut t| bcast_circulant_virtual(&mut t, 0, 1, m)).unwrap();
+    assert_eq!(flat_stats.rounds, q);
+    assert!(auto_stats.time_s < flat_stats.time_s, "segmentation must win");
+
+    // Achieved times match the closed-form prediction (the engine prices
+    // rounds at ⌈m/n⌉-byte blocks, the prediction uses continuous m/n:
+    // the gap is bounded by (n-1+q)·β — far below 0.1% here), so the
+    // achieved speedup equals the predicted ratio.
+    let pred_seg = predicted_time(hint.alpha_s, hint.beta_s_per_byte, q, m, n_star);
+    let pred_flat = predicted_time(hint.alpha_s, hint.beta_s_per_byte, q, m, 1);
+    assert!(
+        (auto_stats.time_s / pred_seg - 1.0).abs() < 1e-3,
+        "achieved {} vs predicted {pred_seg}",
+        auto_stats.time_s
+    );
+    assert!((flat_stats.time_s / pred_flat - 1.0).abs() < 1e-9);
+    let achieved_ratio = flat_stats.time_s / auto_stats.time_s;
+    let predicted_ratio = pred_flat / pred_seg;
+    assert!(
+        (achieved_ratio / predicted_ratio - 1.0).abs() < 1e-3,
+        "achieved speedup {achieved_ratio:.3} vs predicted {predicted_ratio:.3}"
+    );
+    // And the ratio is substantial at this size: ≥ 2× is what makes
+    // self-tuning worth it.
+    assert!(achieved_ratio > 2.0, "speedup only {achieved_ratio:.3}×");
 }
 
 #[test]

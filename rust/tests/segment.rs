@@ -1,0 +1,133 @@
+//! Auto-segmentation gates: the closed-form `n*` must equal a brute-force
+//! argmin over the full candidate range, and `Algorithm::Auto` on a flat
+//! payload must deliver byte-identical results — segmented — on every
+//! data backend.
+
+use nblock_bcast::bench_support::XorShift;
+use nblock_bcast::collectives::generic::{bcast, bcast_circulant, Algorithm};
+use nblock_bcast::collectives::segment::{
+    auto_block_count, optimal_block_count, predicted_time, Segment, MAX_AUTO_BLOCKS,
+};
+use nblock_bcast::sched::ceil_log2;
+use nblock_bcast::simulator::CostModel;
+use nblock_bcast::transport::sim::run_sim;
+use nblock_bcast::transport::tcp::run_tcp;
+use nblock_bcast::transport::thread::run_threads;
+use nblock_bcast::transport::CostHint;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Brute-force argmin over `n ∈ [1, 4096]` of `(n-1+q)(α+β·m/n)` — the
+/// smallest minimizer, matching the closed form's tie-breaking.
+fn brute_force_argmin(alpha: f64, beta: f64, q: usize, m: u64) -> usize {
+    let mut best = 1usize;
+    let mut best_t = f64::INFINITY;
+    for n in 1..=MAX_AUTO_BLOCKS {
+        let t = predicted_time(alpha, beta, q, m, n);
+        if t < best_t {
+            best = n;
+            best_t = t;
+        }
+    }
+    best
+}
+
+#[test]
+fn closed_form_matches_brute_force_across_grid() {
+    // A structured (α, β, m, p) grid plus randomized fill-in. The closed
+    // form must land within ±1 of the brute-force argmin and never
+    // predict a worse time.
+    let alphas = [1.0e-7, 2.0e-6, 5.0e-5];
+    let betas = [8.0e-11, 1.0e-9, 2.0e-8];
+    let ms = [1u64 << 12, 1 << 16, 1 << 20, (1 << 20) + 12345];
+    let ps = [2u64, 3, 17, 64, 1024, 36 * 32];
+    let mut checked = 0;
+    let mut check = |alpha: f64, beta: f64, m: u64, p: u64| {
+        let q = ceil_log2(p);
+        let got = optimal_block_count(alpha, beta, q, m);
+        let brute = brute_force_argmin(alpha, beta, q, m);
+        // Only compare where the brute-force grid actually contains the
+        // optimum (the closed form may clamp at the cap).
+        if brute < MAX_AUTO_BLOCKS && got < MAX_AUTO_BLOCKS.min(m as usize) {
+            assert!(
+                got.abs_diff(brute) <= 1,
+                "α={alpha} β={beta} m={m} p={p}: closed {got} vs brute {brute}"
+            );
+            assert!(
+                predicted_time(alpha, beta, q, m, got)
+                    <= predicted_time(alpha, beta, q, m, brute) * (1.0 + 1e-12),
+                "α={alpha} β={beta} m={m} p={p}: closed form is not optimal"
+            );
+        }
+        checked += 1;
+    };
+    for &alpha in &alphas {
+        for &beta in &betas {
+            for &m in &ms {
+                for &p in &ps {
+                    check(alpha, beta, m, p);
+                }
+            }
+        }
+    }
+    // Randomized fill-in over a wide dynamic range.
+    let mut rng = XorShift::new(0x5EC7);
+    for _ in 0..200 {
+        let alpha = 10f64.powi(-(rng.range(5, 8) as i32)) * (1 + rng.below(9)) as f64;
+        let beta = 10f64.powi(-(rng.range(8, 12) as i32)) * (1 + rng.below(9)) as f64;
+        let m = rng.range(1, 1 << 22);
+        let p = rng.range(2, 1 << 14);
+        check(alpha, beta, m, p);
+    }
+    assert!(checked > 400);
+}
+
+#[test]
+fn auto_resolves_to_segmented_circulant_at_p64_1mib() {
+    // The acceptance shape: a flat 1 MiB payload at p = 64 under the
+    // calibrated flat model resolves to a segmented circulant run with
+    // n* > 1 — not to a whole-message fallback.
+    let hint = CostHint::from_model(&CostModel::flat_default());
+    let (algo, n) = Algorithm::Auto.resolve_bcast_segmented(hint, 64, 1, 1 << 20);
+    assert_eq!(algo, Algorithm::Circulant);
+    assert!(n > 1, "1 MiB at p=64 must pipeline (got n = {n})");
+    assert_eq!(
+        n,
+        optimal_block_count(hint.alpha_s, hint.beta_s_per_byte, 6, 1 << 20)
+    );
+    // The Segment CLI arg resolves through the same function.
+    assert_eq!(Segment::Auto.block_count(hint, 64, 1 << 20), n);
+    assert_eq!(auto_block_count(hint, 64, 1 << 20), n);
+}
+
+#[test]
+fn segmented_auto_bcast_is_byte_identical_on_all_backends() {
+    // Auto at 1 MiB from a flat (n = 1) call segments on every backend and
+    // still delivers byte-exactly; the result must also equal an
+    // explicitly unsegmented circulant broadcast.
+    let p = 64u64;
+    let m = 1u64 << 20;
+    let d: Vec<u8> = (0..m).map(|i| ((i * 131 + 7) % 251) as u8).collect();
+    let spmd = |mut t: Box<dyn nblock_bcast::transport::Transport>| {
+        let data = if t.rank() == 0 { Some(&d[..]) } else { None };
+        bcast(t.as_mut(), Algorithm::Auto, 0, 1, m, data)
+    };
+    let (sim_out, _) = run_sim(p, CostModel::flat_default(), |t| spmd(Box::new(t)))
+        .expect("sim backend");
+    let thread_out = run_threads(p, TIMEOUT, |t| spmd(Box::new(t))).expect("thread backend");
+    let tcp_out = run_tcp(p, TIMEOUT, |t| spmd(Box::new(t))).expect("tcp backend");
+    for (backend, out) in [("sim", &sim_out), ("thread", &thread_out), ("tcp", &tcp_out)] {
+        assert_eq!(out.len(), p as usize, "{backend}");
+        for (r, buf) in out.iter().enumerate() {
+            assert_eq!(buf, &d, "{backend} rank {r}");
+        }
+    }
+    // Unsegmented reference on the sim backend: same bytes.
+    let (flat_out, _) = run_sim(p, CostModel::flat_default(), |mut t| {
+        let data = if t.rank() == 0 { Some(&d[..]) } else { None };
+        bcast_circulant(&mut t, 0, 1, m, data)
+    })
+    .expect("sim backend, unsegmented");
+    assert_eq!(flat_out, sim_out);
+}
