@@ -195,19 +195,16 @@ fn main() {
         let cold = Timing::from_samples(vec![cold_s]);
         let cold_stats = cache.stats();
         push("cache-cold", cold, cold_allocs, cold_stats.hits, cold_stats.misses);
+        // Zero the counters so the warm series reports its own hits/misses
+        // directly instead of a snapshot subtraction.
+        cache.reset_stats();
         let (warm, warm_allocs) = series(1, reps, || {
             for &r in &ranks {
                 std::hint::black_box(cache.schedule(p, r));
             }
         });
         let warm_stats = cache.stats();
-        push(
-            "cache-warm",
-            warm,
-            warm_allocs,
-            warm_stats.hits - cold_stats.hits,
-            warm_stats.misses - cold_stats.misses,
-        );
+        push("cache-warm", warm, warm_allocs, warm_stats.hits, warm_stats.misses);
 
         // --- the old constructions (Table 3's other column) ---------------
         if !smoke {
@@ -226,12 +223,16 @@ fn main() {
         }
         println!();
     }
+    // The process-wide metrics snapshot rides along (here mostly the
+    // global schedule-cache counters; the wire counters are zero in this
+    // bench regardless of features — nothing touches a transport).
     let json = format!(
         concat!(
             "{{\"bench\":\"schedule_construction\",\"smoke\":{},",
-            "\"results\":[\n{}\n]}}\n"
+            "\"metrics\":{},\"results\":[\n{}\n]}}\n"
         ),
         smoke,
+        nblock_bcast::obs::metrics::snapshot().to_json(),
         rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n")
     );
     let path = "BENCH_schedule.json";

@@ -334,13 +334,17 @@ fn main() {
             row.backend, row.algo, row.p, row.n, row.block_bytes, row.payload_allocs
         );
     }
+    // The process-wide metrics snapshot rides along in the JSON (all
+    // zeros unless the bench was built with `--features obs`; the
+    // schedule-cache counts are live either way).
     let json = format!(
         concat!(
             "{{\"bench\":\"transport_bcast_steady_state\",",
-            "\"threshold_bytes\":{},\"smoke\":{},\"results\":[\n{}\n]}}\n"
+            "\"threshold_bytes\":{},\"smoke\":{},\"metrics\":{},\"results\":[\n{}\n]}}\n"
         ),
         PAYLOAD_ALLOC_THRESHOLD,
         smoke,
+        nblock_bcast::obs::metrics::snapshot().to_json(),
         rows.iter().map(Row::json).collect::<Vec<_>>().join(",\n")
     );
     let path = "BENCH_transport.json";

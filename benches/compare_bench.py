@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: compare a bench JSON against its committed baseline.
+
+Usage:
+    compare_bench.py BASELINE.json CURRENT.json [--threshold PCT]
+    compare_bench.py BASELINE.json CURRENT.json --write-baseline
+
+Reads the machine-readable output of `cargo bench --bench bench_transport`
+(`BENCH_transport.json`) or `--bench bench_schedule`
+(`BENCH_schedule.json`), matches rows by their configuration key, and
+fails (exit 1) when any pinned series regressed by more than the
+threshold (default 15%).
+
+Pinned series (the perf contract, chosen to be stable under CI noise):
+
+* transport_bcast_steady_state — `ns_per_round` for every
+  (backend, algo, p, n, block_bytes) row; these are barrier-paced
+  steady-state medians over many reps.
+* schedule_construction — `min_ns_per_rank` for the hot-path series
+  `kernel`, `bundle` and `cache-warm` (min is the noise-robust statistic;
+  `cache-cold` and `alloc-api` are reported but not gated: the former is
+  a single cold pass, the latter intentionally allocates).
+
+Rows present in only one file (e.g. a grid change) are reported but never
+fail the gate. A baseline carrying `"provisional": true` — one that was
+committed from an estimate rather than written by `--write-baseline` on
+real hardware — reports regressions as ADVISORY and always exits 0.
+
+`--write-baseline` promotes CURRENT to the baseline path verbatim (plus
+`"provisional": false`), which is how a real measured run replaces a
+provisional baseline.
+
+Stdlib only; no third-party imports.
+"""
+
+import argparse
+import json
+import sys
+
+# bench kind -> (row key fields, gated metric, row filter)
+PINNED = {
+    "transport_bcast_steady_state": (
+        ("backend", "algo", "p", "n", "block_bytes"),
+        "ns_per_round",
+        lambda row: True,
+    ),
+    "schedule_construction": (
+        ("p", "series"),
+        "min_ns_per_rank",
+        lambda row: row.get("series") in ("kernel", "bundle", "cache-warm"),
+    ),
+}
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    kind = doc.get("bench")
+    if kind not in PINNED:
+        sys.exit(f"{path}: unknown bench kind {kind!r} (expected one of {sorted(PINNED)})")
+    return doc
+
+
+def index_rows(doc):
+    keys, metric, keep = PINNED[doc["bench"]]
+    out = {}
+    for row in doc.get("results", []):
+        if not keep(row):
+            continue
+        try:
+            out[tuple(row[k] for k in keys)] = float(row[metric])
+        except KeyError as e:
+            sys.exit(f"row {row!r} is missing pinned field {e}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=15.0,
+        help="max allowed regression, percent (default 15)",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="promote CURRENT to BASELINE (marks it non-provisional) instead of comparing",
+    )
+    args = ap.parse_args()
+
+    cur_doc = load(args.current)
+    if args.write_baseline:
+        cur_doc["provisional"] = False
+        with open(args.baseline, "w") as f:
+            json.dump(cur_doc, f, indent=1)
+            f.write("\n")
+        print(f"promoted {args.current} -> {args.baseline} ({cur_doc['bench']})")
+        return 0
+
+    base_doc = load(args.baseline)
+    if base_doc["bench"] != cur_doc["bench"]:
+        sys.exit(
+            f"bench kind mismatch: baseline is {base_doc['bench']!r}, "
+            f"current is {cur_doc['bench']!r}"
+        )
+    provisional = bool(base_doc.get("provisional", False))
+    base = index_rows(base_doc)
+    cur = index_rows(cur_doc)
+
+    shared = sorted(set(base) & set(cur))
+    only_base = sorted(set(base) - set(cur))
+    only_cur = sorted(set(cur) - set(base))
+    regressions = []
+    for key in shared:
+        b, c = base[key], cur[key]
+        if b <= 0:
+            continue
+        delta_pct = (c - b) / b * 100.0
+        marker = ""
+        if delta_pct > args.threshold:
+            regressions.append((key, b, c, delta_pct))
+            marker = "  <-- REGRESSION"
+        print(f"{key}: {b:.1f} -> {c:.1f} ns ({delta_pct:+.1f}%){marker}")
+    for key in only_base:
+        print(f"{key}: in baseline only (grid changed?) — not gated")
+    for key in only_cur:
+        print(f"{key}: new series (no baseline) — not gated")
+
+    if not shared:
+        print("no overlapping pinned rows; nothing to gate")
+        return 0
+    if regressions:
+        label = "ADVISORY (provisional baseline)" if provisional else "FAIL"
+        print(
+            f"\n{label}: {len(regressions)}/{len(shared)} pinned series regressed "
+            f"more than {args.threshold:.0f}% vs {args.baseline}"
+        )
+        if not provisional:
+            return 1
+    else:
+        print(f"\nOK: {len(shared)} pinned series within {args.threshold:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

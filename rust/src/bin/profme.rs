@@ -8,19 +8,80 @@
 //! Hammers the new O(log p) schedule construction at p ≈ 2²⁰ so `perf`
 //! attributes cost to `Dfs::run` / `send_schedule_into` /
 //! `recv_schedule_into` (the Table 3 hot path).
+//!
+//! The driver measures itself through the observability recorder rather
+//! than ad-hoc timers: each rep of each kernel records one
+//! [`RoundEvent`] (lane = kernel, round = rep, bytes = schedule words
+//! written) via the always-compiled [`Recorder::record`] path — no `obs`
+//! cargo feature needed — and the run ends with the recorder's own
+//! per-round latency table, so `profme` reports its phase timings even
+//! when `perf` is not attached.
 
+use nblock_bcast::obs::{export, Recorder, RoundEvent, NO_BLOCK, NO_PEER};
 use nblock_bcast::sched::{recv_schedule_into_fast, send_schedule_into, Scratch, Skips};
 
+const P: u64 = 1_048_575;
+const STEP: usize = 7;
+const REPS: u64 = 6;
+
+/// Recorder lanes (the table's per-round "ranks" are reps here).
+const LANE_RECV: u64 = 0;
+const LANE_SEND: u64 = 1;
+
 fn main() {
-    let skips = Skips::new(1_048_575);
+    let skips = Skips::new(P);
     let q = skips.q();
     let mut scratch = Scratch::new();
     let (mut recv, mut send, mut tmp) = (vec![0i64; q], vec![0i64; q], vec![0i64; q]);
-    for rep in 0..6u64 {
-        for r in (0..1_048_575u64).step_by(7) {
+    let rec = Recorder::new(2, REPS as usize);
+    let ranks = (0..P).step_by(STEP).count() as u64;
+    // Each kernel writes one q-word schedule per rank.
+    let pass_bytes = ranks * q as u64 * 8;
+    println!("profme: schedule construction at p = {P} (q = {q}), {ranks} ranks/pass, {REPS} reps");
+    for rep in 0..REPS {
+        let t0 = rec.now_ns();
+        for r in (0..P).step_by(STEP) {
             recv_schedule_into_fast(&skips, r, &mut scratch, &mut recv);
-            send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut send);
-            std::hint::black_box((&recv, &send, rep));
+            std::hint::black_box(&recv);
         }
+        let t1 = rec.now_ns();
+        rec.record(
+            LANE_RECV,
+            RoundEvent {
+                round: rep,
+                peer: NO_PEER,
+                block: NO_BLOCK,
+                bytes: pass_bytes,
+                t_start_ns: t0,
+                t_end_ns: t1,
+            },
+        );
+        for r in (0..P).step_by(STEP) {
+            send_schedule_into(&skips, r, &mut scratch, &mut tmp, &mut send);
+            std::hint::black_box(&send);
+        }
+        let t2 = rec.now_ns();
+        rec.record(
+            LANE_SEND,
+            RoundEvent {
+                round: rep,
+                peer: NO_PEER,
+                block: NO_BLOCK,
+                bytes: pass_bytes,
+                t_start_ns: t1,
+                t_end_ns: t2,
+            },
+        );
     }
+    for (lane, name) in [(LANE_RECV, "recv_schedule_into_fast"), (LANE_SEND, "send_schedule_into")] {
+        let evs = rec.events(lane);
+        let min = evs.iter().map(RoundEvent::duration_ns).min().unwrap_or(0);
+        println!(
+            "  {name:<24}: best pass {} ({:.1} ns/rank)",
+            nblock_bcast::bench_support::fmt_time(min as f64 * 1e-9),
+            min as f64 / ranks as f64,
+        );
+    }
+    println!("per-rep timings (lane 0 = recv kernel, lane 1 = send kernel):");
+    print!("{}", export::round_table(&rec.all_events()));
 }

@@ -94,7 +94,11 @@ Tools:
     to pick the algorithm (default circulant; auto resolves from p, n,
     size and the backend's α/β hint — bcast supports
     circulant/binomial/scatter-allgather, allgatherv supports
-    circulant/ring/bruck/gather-bcast)
+    circulant/ring/bruck/gather-bcast), and --trace FILE: record every
+    rank's per-round events, write them to FILE as Chrome-trace JSON
+    (open in chrome://tracing or ui.perfetto.dev), and print the
+    per-round latency table, the measured α/β fit and the metrics
+    snapshot (needs a build with --features obs to record anything)
   reduce --p P --elems E [--n N] [--root R]      run an n-block f32-sum
                              reduction over a transport (--transport, --algo
                              {auto,circulant,binomial}; verified at the root)
@@ -103,6 +107,8 @@ Tools:
                              with --transport (and --algo
                              {auto,circulant,ring}) runs the generic SPMD
                              allreduce on that backend, verified at all ranks
+  trace-report FILE          re-read a --trace Chrome-trace JSON and print
+                             its per-round latency table and α/β fit
   threaded --p P --n N --m BYTES   one-OS-thread-per-rank broadcast
   ablation [--which n|violations|hier|cache|all] [--p P] [--m BYTES]
   e2e [--p P] [--root R] [--artifacts DIR]       PJRT end-to-end broadcast
@@ -119,6 +125,25 @@ fn transport_arg(args: &Args) -> anyhow::Result<Option<&String>> {
         anyhow::bail!("--transport needs a value: sim|thread|tcp");
     }
     Ok(args.options.get("transport"))
+}
+
+/// The `--trace` option, rejecting a valueless `--trace` instead of
+/// silently running untraced.
+fn trace_arg(args: &Args) -> anyhow::Result<Option<&str>> {
+    if args.flags.iter().any(|f| f == "trace") {
+        anyhow::bail!("--trace needs a value: the Chrome-trace JSON output path");
+    }
+    Ok(args.options.get("trace").map(String::as_str))
+}
+
+/// The cost-model comparison paths run on the centralized [`crate::simulator::Engine`],
+/// which has no per-rank rounds to record — reject `--trace` there
+/// instead of writing an empty file.
+fn reject_untraceable(args: &Args) -> anyhow::Result<()> {
+    if args.flag("trace") {
+        anyhow::bail!("--trace needs a --transport backend (sim|thread|tcp)");
+    }
+    Ok(())
 }
 
 /// Entry point used by `main.rs`.
@@ -153,14 +178,18 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                     backend.as_str(),
                     &args.get("algo", "circulant".to_string()),
                     segment.as_deref(),
+                    trace_arg(&args)?,
                 ),
-                None => tools::bcast(
-                    args.get("p", 64),
-                    args.get("m", 1 << 20),
-                    args.get("n", 0),
-                    args.get("root", 0),
-                    segment.as_deref(),
-                ),
+                None => {
+                    reject_untraceable(&args)?;
+                    tools::bcast(
+                        args.get("p", 64),
+                        args.get("m", 1 << 20),
+                        args.get("n", 0),
+                        args.get("root", 0),
+                        segment.as_deref(),
+                    )
+                }
             }
         }
         "allgatherv" => match transport_arg(&args)? {
@@ -171,13 +200,17 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 &args.get("type", "regular".to_string()),
                 backend.as_str(),
                 &args.get("algo", "circulant".to_string()),
+                trace_arg(&args)?,
             ),
-            None => tools::allgatherv(
-                args.get("p", 64),
-                args.get("m", 1 << 20),
-                args.get("n", 0),
-                args.get("type", "regular".to_string()),
-            ),
+            None => {
+                reject_untraceable(&args)?;
+                tools::allgatherv(
+                    args.get("p", 64),
+                    args.get("m", 1 << 20),
+                    args.get("n", 0),
+                    args.get("type", "regular".to_string()),
+                )
+            }
         },
         "reduce" => match transport_arg(&args)? {
             Some(backend) => tools::reduce_transport(
@@ -187,6 +220,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 args.get("root", 0),
                 backend.as_str(),
                 &args.get("algo", "circulant".to_string()),
+                trace_arg(&args)?,
             ),
             None => tools::reduce_transport(
                 args.get("p", 16),
@@ -195,6 +229,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 args.get("root", 0),
                 "sim",
                 &args.get("algo", "circulant".to_string()),
+                trace_arg(&args)?,
             ),
         },
         "allreduce" => match transport_arg(&args)? {
@@ -204,8 +239,16 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 args.get("n", 0),
                 backend.as_str(),
                 &args.get("algo", "circulant".to_string()),
+                trace_arg(&args)?,
             ),
-            None => tools::allreduce(args.get("p", 64), args.get("elems", 1 << 16)),
+            None => {
+                reject_untraceable(&args)?;
+                tools::allreduce(args.get("p", 64), args.get("elems", 1 << 16))
+            }
+        },
+        "trace-report" => match args.positional.first() {
+            Some(path) => tools::trace_report(path),
+            None => anyhow::bail!("trace-report needs a file: nblock trace-report <trace.json>"),
         },
         "threaded" => tools::threaded(args.get("p", 16), args.get("n", 8), args.get("m", 1 << 16)),
         "ablation" => ablation::run(

@@ -319,6 +319,84 @@ where
     })
 }
 
+/// The per-rank ring capacity behind `--trace`: 8192 events keeps the
+/// newest ~8k rounds per rank, plenty for every CLI-sized run, at 48 B
+/// per slot.
+const TRACE_RING_CAPACITY: usize = 8192;
+
+/// The recorder behind `--trace` (`None` when tracing was not requested,
+/// so untraced runs allocate nothing).
+fn trace_recorder(trace: Option<&str>, p: u64) -> Option<crate::obs::Recorder> {
+    trace.map(|_| crate::obs::Recorder::new(p, TRACE_RING_CAPACITY))
+}
+
+/// `--trace` epilogue: write the Chrome-trace JSON, print the per-round
+/// latency table, the pooled α/β fit (and the n* segmentation it
+/// implies for this problem size), and the process metrics snapshot.
+fn report_trace(path: &str, rec: &crate::obs::Recorder, p: u64, m: u64) -> Result<()> {
+    use crate::obs::{calibrate, export};
+    if !cfg!(feature = "obs") {
+        println!(
+            "  trace      : WARNING — built without the `obs` cargo feature, so the \
+             transports recorded nothing; rebuild with `--features obs`"
+        );
+    }
+    export::write_chrome_trace(path, rec)?;
+    let events = rec.all_events();
+    println!(
+        "  trace      : {} events from {} ranks -> {path} (chrome://tracing / ui.perfetto.dev)",
+        events.len(),
+        export::per_rank_counts(&events).len()
+    );
+    if !events.is_empty() {
+        print!("{}", export::round_table(&events));
+    }
+    match calibrate::fit_recorder(rec) {
+        Some(fit) => {
+            let n_star =
+                crate::collectives::segment::Segment::Auto.block_count(fit.hint(), p, m);
+            println!(
+                "  measured   : α = {}, β = {}/byte ({} samples) — suggested n* = {n_star} \
+                 blocks for m = {}",
+                fmt_time(fit.alpha_s),
+                fmt_time(fit.beta_s_per_byte),
+                fit.samples,
+                fmt_bytes(m)
+            );
+        }
+        None => println!(
+            "  measured   : not enough size-varied samples for an α/β fit \
+             (need ≥ 2 distinct non-zero block sizes)"
+        ),
+    }
+    println!("{}", crate::obs::metrics::snapshot());
+    Ok(())
+}
+
+/// `trace-report <file>`: re-read an exported Chrome trace and print the
+/// same per-round latency table and pooled α/β fit the `--trace` run
+/// printed, without rerunning anything.
+pub fn trace_report(path: &str) -> Result<()> {
+    use crate::obs::{calibrate, export};
+    let text = std::fs::read_to_string(path)?;
+    let events = export::parse_chrome_trace(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    println!("{path}: {} events from {} ranks", events.len(), export::per_rank_counts(&events).len());
+    if events.is_empty() {
+        return Ok(());
+    }
+    print!("{}", export::round_table(&events));
+    match calibrate::fit_events(events.iter().map(|(_, ev)| ev)) {
+        Some(fit) => println!(
+            "measured α = {}, β = {}/byte ({} samples)",
+            fmt_time(fit.alpha_s),
+            fmt_time(fit.beta_s_per_byte),
+            fit.samples
+        ),
+        None => println!("not enough size-varied samples for an α/β fit"),
+    }
+    Ok(())
+}
+
 /// The cost model the `--transport sim` backend runs under — the single
 /// definition shared by [`run_over_backend`] and [`backend_hint`], so the
 /// displayed `Auto` resolution can never drift from the model the run
@@ -352,6 +430,7 @@ pub fn bcast_transport(
     backend: &str,
     algo: &str,
     segment: Option<&str>,
+    trace: Option<&str>,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
     use crate::collectives::segment::Segment;
@@ -395,13 +474,19 @@ pub fn bcast_transport(
          transport `{backend}`, algorithm `{resolved}`{auto_note}",
         fmt_bytes(m)
     );
+    let recorder = trace_recorder(trace, p);
     let t0 = std::time::Instant::now();
     let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+        if let Some(rec) = &recorder {
+            crate::obs::attach(rec, t.rank());
+        }
         // The dispatch pre-warms exactly the links the chosen algorithm's
         // schedule uses (lazy-mesh TCP dials ahead of the first round;
         // no-op on sim/thread).
         let data = if t.rank() == root { Some(&payload[..]) } else { None };
-        generic::bcast(t.as_mut(), resolved, root, n, m, data)
+        let res = generic::bcast(t.as_mut(), resolved, root, n, m, data);
+        crate::obs::detach();
+        res
     })?;
     let wall = t0.elapsed().as_secs_f64();
     for (r, buf) in results.iter().enumerate() {
@@ -418,6 +503,9 @@ pub fn bcast_transport(
         println!("  sim time   : {}", fmt_time(stats.time_s));
         println!("  wire bytes : {}", fmt_bytes(stats.bytes_on_wire));
     }
+    if let (Some(path), Some(rec)) = (trace, &recorder) {
+        report_trace(path, rec, p, m)?;
+    }
     Ok(())
 }
 
@@ -429,6 +517,7 @@ pub fn allgatherv_transport(
     kind: &str,
     backend: &str,
     algo: &str,
+    trace: Option<&str>,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
     use crate::transport::Transport;
@@ -457,10 +546,16 @@ pub fn allgatherv_transport(
          transport `{backend}`, algorithm `{resolved}`{auto_note}",
         fmt_bytes(total)
     );
+    let recorder = trace_recorder(trace, p);
     let t0 = std::time::Instant::now();
     let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+        if let Some(rec) = &recorder {
+            crate::obs::attach(rec, t.rank());
+        }
         let mine = &datas[t.rank() as usize];
-        generic::allgatherv(t.as_mut(), resolved, n, &counts, mine)
+        let res = generic::allgatherv(t.as_mut(), resolved, n, &counts, mine);
+        crate::obs::detach();
+        res
     })?;
     let wall = t0.elapsed().as_secs_f64();
     for (r, bufs) in results.iter().enumerate() {
@@ -476,6 +571,9 @@ pub fn allgatherv_transport(
     if let Some(stats) = sim_stats {
         println!("  sim time   : {}", fmt_time(stats.time_s));
         println!("  wire bytes : {}", fmt_bytes(stats.bytes_on_wire));
+    }
+    if let (Some(path), Some(rec)) = (trace, &recorder) {
+        report_trace(path, rec, p, total)?;
     }
     Ok(())
 }
@@ -521,6 +619,7 @@ pub fn reduce_transport(
     root: u64,
     backend: &str,
     algo: &str,
+    trace: Option<&str>,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
     use crate::transport::Transport;
@@ -541,10 +640,16 @@ pub fn reduce_transport(
         "reduce (f32 sum) of {elems} elements to root {root} over p = {p} (q = {q}), \
          n = {n} blocks, transport `{backend}`, algorithm `{resolved}`{auto_note}"
     );
+    let recorder = trace_recorder(trace, p);
     let t0 = std::time::Instant::now();
     let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+        if let Some(rec) = &recorder {
+            crate::obs::attach(rec, t.rank());
+        }
         let mine = &contribs[t.rank() as usize];
-        generic::reduce(t.as_mut(), resolved, root, n, mine)
+        let res = generic::reduce(t.as_mut(), resolved, root, n, mine);
+        crate::obs::detach();
+        res
     })?;
     let wall = t0.elapsed().as_secs_f64();
     let want = serial_sum(&contribs);
@@ -558,6 +663,9 @@ pub fn reduce_transport(
         println!("  sim time   : {}", fmt_time(stats.time_s));
         println!("  wire bytes : {}", fmt_bytes(stats.bytes_on_wire));
     }
+    if let (Some(path), Some(rec)) = (trace, &recorder) {
+        report_trace(path, rec, p, (elems * 4) as u64)?;
+    }
     Ok(())
 }
 
@@ -569,6 +677,7 @@ pub fn allreduce_transport(
     n: usize,
     backend: &str,
     algo: &str,
+    trace: Option<&str>,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
     use crate::transport::Transport;
@@ -585,10 +694,16 @@ pub fn allreduce_transport(
         "allreduce (f32 sum) of {elems} elements over p = {p} (q = {q}), n = {n} blocks, \
          transport `{backend}`, algorithm `{resolved}`{auto_note}"
     );
+    let recorder = trace_recorder(trace, p);
     let t0 = std::time::Instant::now();
     let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+        if let Some(rec) = &recorder {
+            crate::obs::attach(rec, t.rank());
+        }
         let mine = &contribs[t.rank() as usize];
-        generic::allreduce(t.as_mut(), resolved, n, mine)
+        let res = generic::allreduce(t.as_mut(), resolved, n, mine);
+        crate::obs::detach();
+        res
     })?;
     let wall = t0.elapsed().as_secs_f64();
     let want = serial_sum(&contribs);
@@ -603,6 +718,9 @@ pub fn allreduce_transport(
     if let Some(stats) = sim_stats {
         println!("  sim time   : {}", fmt_time(stats.time_s));
         println!("  wire bytes : {}", fmt_bytes(stats.bytes_on_wire));
+    }
+    if let (Some(path), Some(rec)) = (trace, &recorder) {
+        report_trace(path, rec, p, (elems * 4) as u64)?;
     }
     Ok(())
 }

@@ -250,6 +250,7 @@ fn bcast_circulant_impl<T: Transport + ?Sized>(
     let track = virt && cfg!(debug_assertions);
     let mut have: Vec<bool> = if track { vec![false; n] } else { Vec::new() };
     for round in 0..plan.num_rounds() {
+        crate::obs::set_round(round as u64);
         let a = plan.action(round);
         let to_rel = skips.to_proc(rel, a.k);
         let from_rel = skips.from_proc(rel, a.k);
@@ -308,6 +309,7 @@ fn bcast_circulant_impl<T: Transport + ?Sized>(
             pool.put(recv_slot);
         }
     }
+    crate::obs::clear_round();
     if virt {
         if track && rank != root {
             if let Some(b) = have.iter().position(|&h| !h) {
@@ -462,6 +464,7 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
     let mut send_payload: Vec<u8> = Vec::new();
     let mut recv_buf: Vec<u8> = Vec::new();
     for i in x..(n + q - 1 + x) {
+        crate::obs::set_round((i - x) as u64);
         let k = i % q;
         let to = skips.to_proc(rank, k);
         let from = skips.from_proc(rank, k);
@@ -543,6 +546,7 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
             )));
         }
     }
+    crate::obs::clear_round();
     for (j, hj) in have.iter().enumerate() {
         if let Some(b) = hj.iter().position(|&x| !x) {
             return Err(cerr(format!("rank {rank}: missing root {j} block {b}")));
@@ -630,6 +634,7 @@ fn reduce_circulant_impl<T: Transport + ?Sized>(
     let mut send_scratch: Vec<u8> = Vec::new();
     let mut recv_scratch: Vec<u8> = Vec::new();
     for t_rev in 0..rounds {
+        crate::obs::set_round(t_rev as u64);
         let tf = rounds - 1 - t_rev; // the bcast round being reversed
         let a = plan.action(tf);
         let to_rel = skips.to_proc(rel, a.k);
@@ -683,6 +688,7 @@ fn reduce_circulant_impl<T: Transport + ?Sized>(
             }
         }
     }
+    crate::obs::clear_round();
     Ok(acc)
 }
 

@@ -211,6 +211,7 @@ fn bcast_binomial_impl<T: Transport + ?Sized>(
     // root always borrows the caller's payload.
     let mut have = rel == 0;
     for j in 0..q {
+        crate::obs::set_round(j as u64);
         let step = 1u64 << j;
         if rel < step {
             let to_rel = rel + step;
@@ -251,6 +252,7 @@ fn bcast_binomial_impl<T: Transport + ?Sized>(
             idle_round(t)?;
         }
     }
+    crate::obs::clear_round();
     if !have {
         return Err(cerr(format!(
             "rank {rank}: binomial tree never reached relative rank {rel}"
@@ -375,7 +377,8 @@ fn bcast_scatter_allgather_impl<T: Transport + ?Sized>(
     // part.offset(lo).
     let mut held: Vec<u8> = pool.get();
     let mut received = rel == 0;
-    for _ in 0..q {
+    for sround in 0..q {
+        crate::obs::set_round(sround as u64);
         if hi - lo <= 1 {
             idle_round(t)?;
             continue;
@@ -466,6 +469,8 @@ fn bcast_scatter_allgather_impl<T: Transport + ?Sized>(
     }
     let mut recv_scratch: Vec<u8> = pool.get();
     for round in 0..p - 1 {
+        // Round numbering continues past the q scatter rounds.
+        crate::obs::set_round(q as u64 + round);
         // Relative rank `rel` sends chunk (rel - round) and receives chunk
         // (rel - 1 - round), both mod p — the standard ring pipeline.
         let send_c = ((rel + p - round % p) % p) as usize;
@@ -502,6 +507,7 @@ fn bcast_scatter_allgather_impl<T: Transport + ?Sized>(
         }
         have[recv_c] = true;
     }
+    crate::obs::clear_round();
     pool.put(held);
     pool.put(recv_scratch);
     if let Some(i) = have.iter().position(|&h| !h) {
@@ -594,6 +600,7 @@ fn allgatherv_ring_impl<T: Transport + ?Sized>(
     let to = (rank + 1) % p;
     let from = (rank + p - 1) % p;
     for round in 0..p - 1 {
+        crate::obs::set_round(round);
         let send_c = ((rank + p - round % p) % p) as usize;
         let recv_c = ((rank + p - 1 - round % p) % p) as usize;
         if !have[send_c] {
@@ -636,6 +643,7 @@ fn allgatherv_ring_impl<T: Transport + ?Sized>(
         }
         have[recv_c] = true;
     }
+    crate::obs::clear_round();
     if let Some(j) = have.iter().position(|&h| !h) {
         return Err(cerr(format!("rank {rank}: missing contribution {j}")));
     }
@@ -751,7 +759,10 @@ fn allgatherv_bruck_impl<T: Transport + ?Sized>(
     let mut send_buf: Vec<u8> = pool.get();
     let mut recv_buf: Vec<u8> = pool.get();
     let mut h = 1u64;
+    let mut bround = 0u64;
     while h < p {
+        crate::obs::set_round(bround);
+        bround += 1;
         let cnt = h.min(p - h);
         let to = (rank + p - h) % p;
         let from = (rank + h) % p;
@@ -811,6 +822,7 @@ fn allgatherv_bruck_impl<T: Transport + ?Sized>(
         }
         h += cnt;
     }
+    crate::obs::clear_round();
     pool.put(send_buf);
     pool.put(recv_buf);
     if let Some(j) = have.iter().position(|&h| !h) {

@@ -22,6 +22,7 @@ pub mod cli;
 pub mod collectives;
 #[cfg(feature = "pjrt")]
 pub mod coordinator;
+pub mod obs;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sched;

@@ -1,0 +1,137 @@
+//! Measured α/β: least-squares calibration of the linear cost model
+//! from recorded round samples.
+//!
+//! Every backend prices (or spends) `α + β·bytes` per block. Given the
+//! recorder's `(bytes, duration)` pairs, ordinary least squares recovers
+//! the two constants:
+//!
+//! ```text
+//! β̂ = Σ(bᵢ - b̄)(tᵢ - t̄) / Σ(bᵢ - b̄)²        α̂ = t̄ - β̂·b̄
+//! ```
+//!
+//! Zero-byte samples (idle rounds, barrier tokens) are excluded — they
+//! spend no link time and would drag α̂ toward 0 — and the fit needs at
+//! least two *distinct* block sizes or the slope is unidentifiable
+//! (uniform blocks give `Σ(bᵢ - b̄)² = 0`; run with `Auto` segmentation
+//! or an `m` not divisible by `n` so the capped final block varies the
+//! size). The result converts to a
+//! [`crate::transport::CostHint`], which
+//! [`crate::transport::Transport::with_measured_hint`] feeds back into
+//! `Algorithm::Auto` and the n* segmentation — measured constants in
+//! place of static ones.
+
+use super::recorder::{Recorder, RoundEvent, NO_PEER};
+use crate::transport::CostHint;
+
+/// A fitted linear cost model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fit {
+    /// Fitted per-message startup latency, seconds.
+    pub alpha_s: f64,
+    /// Fitted per-byte transfer time, seconds.
+    pub beta_s_per_byte: f64,
+    /// Number of non-empty samples behind the fit.
+    pub samples: usize,
+}
+
+impl Fit {
+    /// The fit as a [`CostHint`] for
+    /// [`crate::transport::Transport::with_measured_hint`].
+    pub fn hint(&self) -> CostHint {
+        CostHint {
+            alpha_s: self.alpha_s,
+            beta_s_per_byte: self.beta_s_per_byte,
+        }
+    }
+}
+
+/// Least-squares fit over raw `(bytes, duration_s)` samples. Zero-byte
+/// samples are skipped; `None` when fewer than two samples remain or all
+/// remaining sizes are equal (slope unidentifiable).
+pub fn fit_samples(samples: impl IntoIterator<Item = (u64, f64)>) -> Option<Fit> {
+    let kept: Vec<(f64, f64)> = samples
+        .into_iter()
+        .filter(|&(bytes, _)| bytes > 0)
+        .map(|(bytes, dur)| (bytes as f64, dur))
+        .collect();
+    if kept.len() < 2 {
+        return None;
+    }
+    let n = kept.len() as f64;
+    let mean_b = kept.iter().map(|&(b, _)| b).sum::<f64>() / n;
+    let mean_t = kept.iter().map(|&(_, t)| t).sum::<f64>() / n;
+    let sxx: f64 = kept.iter().map(|&(b, _)| (b - mean_b) * (b - mean_b)).sum();
+    if sxx <= 0.0 {
+        return None;
+    }
+    let sxy: f64 = kept
+        .iter()
+        .map(|&(b, t)| (b - mean_b) * (t - mean_t))
+        .sum();
+    let beta = sxy / sxx;
+    Some(Fit {
+        alpha_s: mean_t - beta * mean_b,
+        beta_s_per_byte: beta,
+        samples: kept.len(),
+    })
+}
+
+/// Fit over recorded events (idle / peer-less events are skipped along
+/// with zero-byte ones).
+pub fn fit_events<'a>(events: impl IntoIterator<Item = &'a RoundEvent>) -> Option<Fit> {
+    fit_samples(
+        events
+            .into_iter()
+            .filter(|ev| ev.peer != NO_PEER)
+            .map(|ev| (ev.bytes, ev.duration_ns() as f64 * 1e-9)),
+    )
+}
+
+/// Fit over everything a recorder retained, all ranks pooled — the
+/// per-backend calibration.
+pub fn fit_recorder(rec: &Recorder) -> Option<Fit> {
+    let all = rec.all_events();
+    fit_events(all.iter().map(|(_, ev)| ev))
+}
+
+/// Per-class fits: `classify(rank, event)` buckets each event (`None`
+/// drops it), and each bucket is fitted independently. The TCP backend's
+/// per-link-class calibration — e.g. with [`ring_distance_class`] — and
+/// anything finer (per-peer, per-NUMA-domain) both reduce to this.
+pub fn fit_by_class(
+    events: &[(u64, RoundEvent)],
+    classify: impl Fn(u64, &RoundEvent) -> Option<u64>,
+) -> Vec<(u64, Fit)> {
+    let mut buckets: std::collections::BTreeMap<u64, Vec<(u64, f64)>> =
+        std::collections::BTreeMap::new();
+    for (rank, ev) in events {
+        if let Some(class) = classify(*rank, ev) {
+            buckets
+                .entry(class)
+                .or_default()
+                .push((ev.bytes, ev.duration_ns() as f64 * 1e-9));
+        }
+    }
+    buckets
+        .into_iter()
+        .filter_map(|(class, samples)| fit_samples(samples).map(|fit| (class, fit)))
+        .collect()
+}
+
+/// The circulant link classifier: class `k` holds the events whose ring
+/// distance `min(d, p - d)` to the peer falls in `[2ᵏ, 2ᵏ⁺¹)` — the
+/// power-of-two neighborhoods the schedules actually use, a natural
+/// link-class split for hierarchical TCP meshes.
+pub fn ring_distance_class(p: u64) -> impl Fn(u64, &RoundEvent) -> Option<u64> {
+    move |rank, ev| {
+        if ev.peer == NO_PEER || ev.peer >= p || rank >= p {
+            return None;
+        }
+        let d = (ev.peer + p - rank) % p;
+        let d = d.min(p - d);
+        if d == 0 {
+            return None;
+        }
+        Some(63 - d.leading_zeros() as u64)
+    }
+}

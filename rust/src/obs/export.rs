@@ -1,0 +1,154 @@
+//! Trace export: Chrome-trace/Perfetto JSON, a built-in parser for
+//! `trace-report`, and the per-round latency table.
+//!
+//! The emitted file is the Chrome Trace Event Format: one complete
+//! (`"ph":"X"`) event per recorded round, `ts`/`dur` in microseconds,
+//! `tid` = rank, with the round/peer/block/bytes tuple under `args` —
+//! load it in `chrome://tracing` or <https://ui.perfetto.dev>. The build
+//! image vendors no JSON crate, so [`parse_chrome_trace`] is a small
+//! hand-rolled reader of exactly this shape (any serde-produced
+//! formatting of the same fields also parses: key lookup is textual, not
+//! positional).
+
+use super::recorder::{Recorder, RoundEvent, NO_PEER};
+use std::collections::BTreeMap;
+use std::io::Write as _;
+
+/// Render one event as a Chrome-trace object (no trailing separator).
+fn event_json(rank: u64, ev: &RoundEvent) -> String {
+    let peer: i64 = if ev.peer == NO_PEER { -1 } else { ev.peer as i64 };
+    format!(
+        concat!(
+            "{{\"name\":\"round {}\",\"cat\":\"round\",\"ph\":\"X\",",
+            "\"ts\":{:.3},\"dur\":{:.3},\"pid\":0,\"tid\":{},",
+            "\"args\":{{\"round\":{},\"peer\":{},\"block\":{},\"bytes\":{}}}}}"
+        ),
+        ev.round,
+        ev.t_start_ns as f64 / 1000.0,
+        ev.duration_ns() as f64 / 1000.0,
+        rank,
+        ev.round,
+        peer,
+        ev.block,
+        ev.bytes,
+    )
+}
+
+/// The recorder's retained events as a Chrome-trace JSON document.
+pub fn chrome_trace(rec: &Recorder) -> String {
+    chrome_trace_from(&rec.all_events())
+}
+
+/// `(rank, event)` pairs as a Chrome-trace JSON document.
+pub fn chrome_trace_from(events: &[(u64, RoundEvent)]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    for (i, (rank, ev)) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('\n');
+        out.push_str(&event_json(*rank, ev));
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+/// Write [`chrome_trace`] to `path`.
+pub fn write_chrome_trace(path: &str, rec: &Recorder) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(chrome_trace(rec).as_bytes())
+}
+
+/// First numeric value following `"key":` in `obj`, if any.
+fn num_field(obj: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let at = obj.find(&pat)? + pat.len();
+    let rest = obj[at..].trim_start();
+    let end = rest
+        .find(|c: char| {
+            !(c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E'))
+        })
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Parse a Chrome-trace JSON document back into `(rank, event)` pairs —
+/// the inverse of [`chrome_trace`], used by the `trace-report` CLI tool
+/// and the round-trip tests.
+///
+/// This reads the trace-event fields this crate emits (`ts`, `dur`,
+/// `tid`, and the `args` tuple) from each `"name"`-delimited object;
+/// events missing required fields are an error.
+pub fn parse_chrome_trace(text: &str) -> Result<Vec<(u64, RoundEvent)>, String> {
+    let body = text
+        .split_once("\"traceEvents\"")
+        .ok_or_else(|| "not a Chrome-trace document (no \"traceEvents\" key)".to_string())?
+        .1;
+    let mut out = Vec::new();
+    // Each event object starts with its "name" key; the slice up to the
+    // next event (or end) contains all of this event's fields.
+    for (i, chunk) in body.split("{\"name\"").skip(1).enumerate() {
+        let ts = num_field(chunk, "ts");
+        let dur = num_field(chunk, "dur");
+        let tid = num_field(chunk, "tid");
+        let (Some(ts), Some(dur), Some(tid)) = (ts, dur, tid) else {
+            return Err(format!("event {i}: missing ts/dur/tid"));
+        };
+        let round = num_field(chunk, "round").ok_or_else(|| format!("event {i}: missing args.round"))?;
+        let peer = num_field(chunk, "peer").ok_or_else(|| format!("event {i}: missing args.peer"))?;
+        let block = num_field(chunk, "block").ok_or_else(|| format!("event {i}: missing args.block"))?;
+        let bytes = num_field(chunk, "bytes").ok_or_else(|| format!("event {i}: missing args.bytes"))?;
+        let t_start_ns = (ts * 1000.0).round() as u64;
+        out.push((
+            tid as u64,
+            RoundEvent {
+                round: round as u64,
+                peer: if peer < 0.0 { NO_PEER } else { peer as u64 },
+                block: block as i64,
+                bytes: bytes as u64,
+                t_start_ns,
+                t_end_ns: t_start_ns + (dur * 1000.0).round() as u64,
+            },
+        ));
+    }
+    Ok(out)
+}
+
+/// Per-rank retained event counts from `(rank, event)` pairs, rank-sorted.
+pub fn per_rank_counts(events: &[(u64, RoundEvent)]) -> Vec<(u64, usize)> {
+    let mut counts: BTreeMap<u64, usize> = BTreeMap::new();
+    for (rank, _) in events {
+        *counts.entry(*rank).or_default() += 1;
+    }
+    counts.into_iter().collect()
+}
+
+/// The per-round latency table: for every semantic round, how many ranks
+/// were active, how many bytes their own edges carried, and the
+/// min/mean/max round duration across ranks. This is the CLI's `--trace`
+/// summary and the `trace-report` body.
+pub fn round_table(events: &[(u64, RoundEvent)]) -> String {
+    let mut rounds: BTreeMap<u64, Vec<&RoundEvent>> = BTreeMap::new();
+    for (_, ev) in events {
+        rounds.entry(ev.round).or_default().push(ev);
+    }
+    let mut out = String::new();
+    out.push_str("round  ranks      bytes        min        mean         max\n");
+    for (round, evs) in &rounds {
+        let bytes: u64 = evs.iter().map(|e| e.bytes).sum();
+        let durs: Vec<f64> = evs.iter().map(|e| e.duration_ns() as f64 * 1e-9).collect();
+        let min = durs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = durs.iter().cloned().fold(0.0f64, f64::max);
+        let mean = durs.iter().sum::<f64>() / durs.len() as f64;
+        out.push_str(&format!(
+            "{:>5}  {:>5}  {:>9}  {:>9}  {:>10}  {:>10}\n",
+            round,
+            evs.len(),
+            crate::bench_support::fmt_bytes(bytes),
+            crate::bench_support::fmt_time(min),
+            crate::bench_support::fmt_time(mean),
+            crate::bench_support::fmt_time(max),
+        ));
+    }
+    out
+}

@@ -1,0 +1,322 @@
+//! The metrics registry: relaxed atomic counters behind one
+//! [`snapshot`] surface.
+//!
+//! Two kinds of counters live here:
+//!
+//! * **wire/pool counters** — process-global, bumped by the transports
+//!   and [`crate::transport::BufferPool`] through the `on_*` hooks below.
+//!   The hooks compile to nothing without the `obs` cargo feature (the
+//!   overhead contract of [`crate::obs`]), so a default build reports
+//!   zeros;
+//! * **schedule-cache counters** ([`CacheCounters`]) — per-instance,
+//!   owned by each [`crate::sched::cache::ScheduleCache`] and always
+//!   maintained (they predate this module and sit off the per-round hot
+//!   path). [`snapshot`] folds in the global cache's counts.
+//!
+//! All loads and stores are `Ordering::Relaxed`: these are statistics,
+//! not synchronization, and every reader (CLI, bench JSON emitters,
+//! tests) tolerates the slight skew of concurrent increments.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A relaxed atomic event counter.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A zeroed counter (const, so counters can live in statics).
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add `n` (relaxed).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add 1 (relaxed).
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    /// Current value (relaxed).
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero (relaxed).
+    #[inline]
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+impl fmt::Debug for Counter {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Counter({})", self.get())
+    }
+}
+
+/// The hit/miss/eviction counters of one schedule cache — the one stat
+/// block that is always live (see the module docs). `reset` is what lets
+/// `bench_schedule.rs` isolate its warm series from cold-phase counts.
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    /// Served from the shared map or the thread-local front.
+    pub hits: Counter,
+    /// Computed fresh (including the loser of a build race).
+    pub misses: Counter,
+    /// Whole `(p, cache-id)` groups dropped by FIFO capacity eviction.
+    pub evictions: Counter,
+}
+
+impl CacheCounters {
+    /// Zeroed counters (const, usable in statics).
+    pub const fn new() -> CacheCounters {
+        CacheCounters {
+            hits: Counter::new(),
+            misses: Counter::new(),
+            evictions: Counter::new(),
+        }
+    }
+
+    /// Reset all three to zero.
+    pub fn reset(&self) {
+        self.hits.reset();
+        self.misses.reset();
+        self.evictions.reset();
+    }
+}
+
+/// The process-global wire/pool registry.
+struct WireMetrics {
+    bytes_sent: Counter,
+    bytes_received: Counter,
+    frames_sent: Counter,
+    frames_received: Counter,
+    short_write_continuations: Counter,
+    redials: Counter,
+    reaped_links: Counter,
+    pool_hits: Counter,
+    pool_misses: Counter,
+}
+
+static WIRE: WireMetrics = WireMetrics {
+    bytes_sent: Counter::new(),
+    bytes_received: Counter::new(),
+    frames_sent: Counter::new(),
+    frames_received: Counter::new(),
+    short_write_continuations: Counter::new(),
+    redials: Counter::new(),
+    reaped_links: Counter::new(),
+    pool_hits: Counter::new(),
+    pool_misses: Counter::new(),
+};
+
+/// One payload frame of `bytes` left this rank. No-op without the `obs`
+/// feature.
+#[inline(always)]
+pub fn on_send(_bytes: u64) {
+    #[cfg(feature = "obs")]
+    {
+        WIRE.bytes_sent.add(_bytes);
+        WIRE.frames_sent.incr();
+    }
+}
+
+/// One payload frame of `bytes` arrived at this rank. No-op without the
+/// `obs` feature.
+#[inline(always)]
+pub fn on_recv(_bytes: u64) {
+    #[cfg(feature = "obs")]
+    {
+        WIRE.bytes_received.add(_bytes);
+        WIRE.frames_received.incr();
+    }
+}
+
+/// A vectored frame write returned short and had to continue with the
+/// unwritten tail. No-op without the `obs` feature.
+#[inline(always)]
+pub fn on_short_write_continuation() {
+    #[cfg(feature = "obs")]
+    WIRE.short_write_continuations.incr();
+}
+
+/// A TCP link to a previously-connected peer was re-established (a
+/// redial after a reap or drop). No-op without the `obs` feature.
+#[inline(always)]
+pub fn on_redial() {
+    #[cfg(feature = "obs")]
+    WIRE.redials.incr();
+}
+
+/// `n` idle TCP links were reaped. No-op without the `obs` feature.
+#[inline(always)]
+pub fn on_reaped(_n: u64) {
+    #[cfg(feature = "obs")]
+    WIRE.reaped_links.add(_n);
+}
+
+/// A buffer-pool `get` was served from the shelf. No-op without the
+/// `obs` feature.
+#[inline(always)]
+pub fn on_pool_hit() {
+    #[cfg(feature = "obs")]
+    WIRE.pool_hits.incr();
+}
+
+/// A buffer-pool `get` had to hand out a fresh (empty) buffer. No-op
+/// without the `obs` feature.
+#[inline(always)]
+pub fn on_pool_miss() {
+    #[cfg(feature = "obs")]
+    WIRE.pool_misses.incr();
+}
+
+/// A point-in-time copy of every counter the registry knows about,
+/// including the global schedule cache's.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// Payload bytes sent by this process's ranks.
+    pub bytes_sent: u64,
+    /// Payload bytes received.
+    pub bytes_received: u64,
+    /// Frames sent.
+    pub frames_sent: u64,
+    /// Frames received.
+    pub frames_received: u64,
+    /// Vectored-write short-write continuations (TCP).
+    pub short_write_continuations: u64,
+    /// Re-established TCP links.
+    pub redials: u64,
+    /// Reaped idle TCP links.
+    pub reaped_links: u64,
+    /// Buffer-pool gets served warm.
+    pub pool_hits: u64,
+    /// Buffer-pool gets that handed out a fresh buffer.
+    pub pool_misses: u64,
+    /// Global schedule-cache hits.
+    pub sched_cache_hits: u64,
+    /// Global schedule-cache misses.
+    pub sched_cache_misses: u64,
+    /// Global schedule-cache group evictions.
+    pub sched_cache_evictions: u64,
+}
+
+impl MetricsSnapshot {
+    /// Buffer-pool hit rate in `[0, 1]`, or `None` before any `get`.
+    pub fn pool_hit_rate(&self) -> Option<f64> {
+        let total = self.pool_hits + self.pool_misses;
+        if total == 0 {
+            None
+        } else {
+            Some(self.pool_hits as f64 / total as f64)
+        }
+    }
+
+    /// The snapshot as one JSON object (the `"metrics"` block of the
+    /// bench JSONs).
+    pub fn to_json(&self) -> String {
+        format!(
+            concat!(
+                "{{\"bytes_sent\":{},\"bytes_received\":{},",
+                "\"frames_sent\":{},\"frames_received\":{},",
+                "\"short_write_continuations\":{},\"redials\":{},",
+                "\"reaped_links\":{},\"pool_hits\":{},\"pool_misses\":{},",
+                "\"sched_cache_hits\":{},\"sched_cache_misses\":{},",
+                "\"sched_cache_evictions\":{}}}"
+            ),
+            self.bytes_sent,
+            self.bytes_received,
+            self.frames_sent,
+            self.frames_received,
+            self.short_write_continuations,
+            self.redials,
+            self.reaped_links,
+            self.pool_hits,
+            self.pool_misses,
+            self.sched_cache_hits,
+            self.sched_cache_misses,
+            self.sched_cache_evictions,
+        )
+    }
+}
+
+impl fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "metrics:")?;
+        writeln!(
+            f,
+            "  wire     : {} sent / {} received ({} / {} frames)",
+            crate::bench_support::fmt_bytes(self.bytes_sent),
+            crate::bench_support::fmt_bytes(self.bytes_received),
+            self.frames_sent,
+            self.frames_received,
+        )?;
+        writeln!(
+            f,
+            "  tcp      : {} short-write continuations, {} redials, {} reaped links",
+            self.short_write_continuations, self.redials, self.reaped_links,
+        )?;
+        match self.pool_hit_rate() {
+            Some(rate) => writeln!(
+                f,
+                "  pool     : {} hits / {} misses ({:.1}% warm)",
+                self.pool_hits,
+                self.pool_misses,
+                rate * 100.0,
+            )?,
+            None => writeln!(f, "  pool     : unused")?,
+        }
+        write!(
+            f,
+            "  schedule : {} hits / {} misses / {} evictions",
+            self.sched_cache_hits, self.sched_cache_misses, self.sched_cache_evictions,
+        )
+    }
+}
+
+/// Read every counter: the global wire/pool registry plus the global
+/// schedule cache's [`CacheCounters`].
+pub fn snapshot() -> MetricsSnapshot {
+    let cache = crate::sched::cache::global().stats();
+    MetricsSnapshot {
+        bytes_sent: WIRE.bytes_sent.get(),
+        bytes_received: WIRE.bytes_received.get(),
+        frames_sent: WIRE.frames_sent.get(),
+        frames_received: WIRE.frames_received.get(),
+        short_write_continuations: WIRE.short_write_continuations.get(),
+        redials: WIRE.redials.get(),
+        reaped_links: WIRE.reaped_links.get(),
+        pool_hits: WIRE.pool_hits.get(),
+        pool_misses: WIRE.pool_misses.get(),
+        sched_cache_hits: cache.hits,
+        sched_cache_misses: cache.misses,
+        sched_cache_evictions: cache.evictions,
+    }
+}
+
+/// Zero the global wire/pool counters. (Schedule-cache counters are
+/// per-instance: reset those through
+/// [`crate::sched::cache::ScheduleCache::reset_stats`].)
+pub fn reset() {
+    WIRE.bytes_sent.reset();
+    WIRE.bytes_received.reset();
+    WIRE.frames_sent.reset();
+    WIRE.frames_received.reset();
+    WIRE.short_write_continuations.reset();
+    WIRE.redials.reset();
+    WIRE.reaped_links.reset();
+    WIRE.pool_hits.reset();
+    WIRE.pool_misses.reset();
+}

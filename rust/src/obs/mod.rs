@@ -1,0 +1,213 @@
+//! Observability: per-rank round tracing, unified transport/cache
+//! metrics, Chrome-trace export, and measured α/β calibration.
+//!
+//! The paper's experiments rely on per-round accounting to compare
+//! schedule families; this module is the equivalent measurement substrate
+//! for the Transport/collectives stack. It has three parts:
+//!
+//! * a **round-event recorder** ([`Recorder`]) — fixed-capacity per-rank
+//!   ring buffers stamped at [`crate::transport::Transport::sendrecv_into`]
+//!   boundaries with `{round, peer, block, bytes, t_start, t_end}`,
+//!   exportable as Chrome-trace JSON ([`export::chrome_trace`]) and as a
+//!   per-round latency table on the CLI (`--trace`, `trace-report`);
+//! * a **metrics registry** ([`metrics`]) — relaxed atomic counters for
+//!   wire traffic, TCP link churn, buffer-pool and schedule-cache
+//!   behavior, read through one [`metrics::snapshot`] surface;
+//! * an **α/β estimator** ([`calibrate`]) — a least-squares fit of the
+//!   linear cost model `α + β·bytes` from recorded `(bytes, duration)`
+//!   samples, feeding
+//!   [`crate::transport::Transport::with_measured_hint`] so
+//!   `Algorithm::Auto` and the n* segmentation resolve against measured
+//!   constants instead of static ones.
+//!
+//! ## Overhead contract
+//!
+//! The recorder hot path is **compiled out** unless the crate is built
+//! with the `obs` cargo feature: the hook functions in this module
+//! ([`attach`], [`record_round`], [`set_round`], [`now_ns`], ...) are
+//! empty inline stubs without it, so the steady-state round loop of the
+//! collectives is byte-for-byte the pre-observability code and the
+//! counting-allocator bench gates are unaffected. With the feature
+//! enabled but no recorder attached (or a [`Recorder::disabled`]
+//! recorder), every hook is a thread-local `Option` check that returns
+//! immediately — in particular [`now_ns`] returns 0 without touching the
+//! clock. With a recorder attached, one event costs two monotonic clock
+//! reads and one fixed-slot ring write: no heap allocation, no locks, no
+//! shared-cache-line traffic between ranks (each rank owns its ring).
+//!
+//! The wire/pool counters in [`metrics`] follow the same contract (their
+//! increment hooks compile to nothing without the feature). The
+//! schedule-cache counters are the exception: they predate this module,
+//! sit off the per-round hot path, and are always maintained — they are
+//! merely *read* through [`metrics::snapshot`].
+
+#![warn(missing_docs)]
+
+pub mod calibrate;
+pub mod export;
+pub mod metrics;
+mod recorder;
+
+pub use recorder::{Recorder, RoundEvent, NO_BLOCK, NO_PEER};
+
+/// Attach `rec` to the calling thread as rank `rank`: until [`detach`]
+/// (or a later `attach`), every instrumented `sendrecv_into` on this
+/// thread records one [`RoundEvent`] into `rec`'s ring for `rank`.
+///
+/// Attaching a [`Recorder::disabled`] recorder detaches. Compiled to a
+/// no-op without the `obs` feature.
+#[cfg(feature = "obs")]
+#[inline]
+pub fn attach(rec: &Recorder, rank: u64) {
+    recorder::tls::attach(rec, rank);
+}
+
+/// Attach `rec` to the calling thread as rank `rank`: until [`detach`]
+/// (or a later `attach`), every instrumented `sendrecv_into` on this
+/// thread records one [`RoundEvent`] into `rec`'s ring for `rank`.
+///
+/// Attaching a [`Recorder::disabled`] recorder detaches. Compiled to a
+/// no-op without the `obs` feature.
+#[cfg(not(feature = "obs"))]
+#[inline(always)]
+pub fn attach(_rec: &Recorder, _rank: u64) {}
+
+/// Detach any recorder from the calling thread and clear the round
+/// context. Compiled to a no-op without the `obs` feature.
+#[cfg(feature = "obs")]
+#[inline]
+pub fn detach() {
+    recorder::tls::detach();
+}
+
+/// Detach any recorder from the calling thread and clear the round
+/// context. Compiled to a no-op without the `obs` feature.
+#[cfg(not(feature = "obs"))]
+#[inline(always)]
+pub fn detach() {}
+
+/// Whether a recorder is attached to the calling thread. Always `false`
+/// without the `obs` feature.
+#[cfg(feature = "obs")]
+#[inline]
+pub fn is_active() -> bool {
+    recorder::tls::is_active()
+}
+
+/// Whether a recorder is attached to the calling thread. Always `false`
+/// without the `obs` feature.
+#[cfg(not(feature = "obs"))]
+#[inline(always)]
+pub fn is_active() -> bool {
+    false
+}
+
+/// Nanoseconds since the attached recorder's epoch, or 0 when no
+/// recorder is attached (no clock read) or without the `obs` feature.
+/// Transports stamp `t_start` with this before the exchange.
+#[cfg(feature = "obs")]
+#[inline]
+pub fn now_ns() -> u64 {
+    recorder::tls::now_ns()
+}
+
+/// Nanoseconds since the attached recorder's epoch, or 0 when no
+/// recorder is attached (no clock read) or without the `obs` feature.
+/// Transports stamp `t_start` with this before the exchange.
+#[cfg(not(feature = "obs"))]
+#[inline(always)]
+pub fn now_ns() -> u64 {
+    0
+}
+
+/// Set the calling thread's round context: events recorded until
+/// [`clear_round`] carry this semantic round number (the collectives'
+/// loop index) instead of the ring sequence number. Compiled to a no-op
+/// without the `obs` feature.
+#[cfg(feature = "obs")]
+#[inline]
+pub fn set_round(round: u64) {
+    recorder::tls::set_round(round);
+}
+
+/// Set the calling thread's round context: events recorded until
+/// [`clear_round`] carry this semantic round number (the collectives'
+/// loop index) instead of the ring sequence number. Compiled to a no-op
+/// without the `obs` feature.
+#[cfg(not(feature = "obs"))]
+#[inline(always)]
+pub fn set_round(_round: u64) {}
+
+/// Clear the calling thread's round context (events fall back to the
+/// ring sequence number). Compiled to a no-op without the `obs` feature.
+#[cfg(feature = "obs")]
+#[inline]
+pub fn clear_round() {
+    recorder::tls::clear_round();
+}
+
+/// Clear the calling thread's round context (events fall back to the
+/// ring sequence number). Compiled to a no-op without the `obs` feature.
+#[cfg(not(feature = "obs"))]
+#[inline(always)]
+pub fn clear_round() {}
+
+/// Record one wall-clock round on the attached recorder (no-op when none
+/// is attached): `send`/`recv` are `(peer, tag, bytes)` of the directions
+/// that happened, `t0_ns` is the [`now_ns`] stamp taken before the
+/// exchange; `t_end` is stamped here. The event's peer/block/bytes come
+/// from the send direction when present (the rank's own outgoing edge),
+/// else from the receive. Compiled to a no-op without the `obs` feature.
+#[cfg(feature = "obs")]
+#[inline]
+pub fn record_round(send: Option<(u64, u64, u64)>, recv: Option<(u64, u64, u64)>, t0_ns: u64) {
+    recorder::tls::record_round(send, recv, t0_ns);
+}
+
+/// Record one wall-clock round on the attached recorder (no-op when none
+/// is attached): `send`/`recv` are `(peer, tag, bytes)` of the directions
+/// that happened, `t0_ns` is the [`now_ns`] stamp taken before the
+/// exchange; `t_end` is stamped here. The event's peer/block/bytes come
+/// from the send direction when present (the rank's own outgoing edge),
+/// else from the receive. Compiled to a no-op without the `obs` feature.
+#[cfg(not(feature = "obs"))]
+#[inline(always)]
+pub fn record_round(
+    _send: Option<(u64, u64, u64)>,
+    _recv: Option<(u64, u64, u64)>,
+    _t0_ns: u64,
+) {
+}
+
+/// Record one *simulated-time* round on the attached recorder (cost
+/// backend): timestamps are simulated seconds, converted to integer
+/// nanoseconds. `dur_s` must be the recording rank's **own** edge cost so
+/// calibration sees exact `α + β·bytes` samples (the global round time is
+/// the max over edges and would mix block sizes). Compiled to a no-op
+/// without the `obs` feature.
+#[cfg(feature = "obs")]
+#[inline]
+pub fn record_sim(
+    send: Option<(u64, u64, u64)>,
+    recv: Option<(u64, u64, u64)>,
+    t_start_s: f64,
+    dur_s: f64,
+) {
+    recorder::tls::record_sim(send, recv, t_start_s, dur_s);
+}
+
+/// Record one *simulated-time* round on the attached recorder (cost
+/// backend): timestamps are simulated seconds, converted to integer
+/// nanoseconds. `dur_s` must be the recording rank's **own** edge cost so
+/// calibration sees exact `α + β·bytes` samples (the global round time is
+/// the max over edges and would mix block sizes). Compiled to a no-op
+/// without the `obs` feature.
+#[cfg(not(feature = "obs"))]
+#[inline(always)]
+pub fn record_sim(
+    _send: Option<(u64, u64, u64)>,
+    _recv: Option<(u64, u64, u64)>,
+    _t_start_s: f64,
+    _dur_s: f64,
+) {
+}

@@ -1,0 +1,376 @@
+//! The round-event recorder: fixed-capacity per-rank ring buffers with a
+//! lock-free, allocation-free write path.
+//!
+//! Layout: one [`Ring`] per rank, each a `Box<[RoundEvent]>` of
+//! `capacity` slots plus an atomic head counter. A write claims the next
+//! sequence number with a relaxed `fetch_add` and stores the event into
+//! `slot[seq % capacity]` — newest events overwrite oldest once the ring
+//! wraps, so a bounded recorder can watch an unbounded run and keep the
+//! tail. The intended discipline is single-writer-per-rank (each rank's
+//! own thread records its own events) with readers draining **after** the
+//! SPMD harness has joined the rank threads; the join is what makes the
+//! slot contents well-defined to the reader.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Sentinel peer for rounds with no counterpart (idle rounds).
+pub const NO_PEER: u64 = u64::MAX;
+
+/// Sentinel block index for rounds that carried no block (idle rounds;
+/// also what the barrier's reserved `u64::MAX` tag maps to).
+pub const NO_BLOCK: i64 = -1;
+
+/// One recorded communication round of one rank.
+///
+/// On the wall-clock backends (thread, tcp) timestamps are nanoseconds
+/// since the recorder's creation; on the cost backend they are simulated
+/// seconds scaled to integer nanoseconds. Within a single recorder the
+/// two never mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundEvent {
+    /// Semantic round number (the collective's loop index when the round
+    /// context was set, else the ring sequence number).
+    pub round: u64,
+    /// Peer rank: the destination when the rank sent, else the source;
+    /// [`NO_PEER`] for idle rounds.
+    pub peer: u64,
+    /// Block index (the transport tag), [`NO_BLOCK`] when none.
+    pub block: i64,
+    /// Accounted payload bytes of the rank's own edge (send preferred).
+    pub bytes: u64,
+    /// Start-of-round timestamp, ns.
+    pub t_start_ns: u64,
+    /// End-of-round timestamp, ns.
+    pub t_end_ns: u64,
+}
+
+impl RoundEvent {
+    /// `t_end - t_start`, saturating.
+    pub fn duration_ns(&self) -> u64 {
+        self.t_end_ns.saturating_sub(self.t_start_ns)
+    }
+}
+
+impl Default for RoundEvent {
+    fn default() -> RoundEvent {
+        RoundEvent {
+            round: 0,
+            peer: NO_PEER,
+            block: NO_BLOCK,
+            bytes: 0,
+            t_start_ns: 0,
+            t_end_ns: 0,
+        }
+    }
+}
+
+struct Ring {
+    /// Total events ever recorded for this rank (monotonic; the write
+    /// index is `head % capacity`).
+    head: AtomicU64,
+    slots: Box<[UnsafeCell<RoundEvent>]>,
+}
+
+// SAFETY: slots are plain-old-data written through `UnsafeCell` under the
+// single-writer-per-rank discipline documented on the module; readers
+// drain after the writer threads have been joined (the join provides the
+// happens-before edge). A torn read is impossible to observe under that
+// discipline; violating it is a logic error that can yield stale/mixed
+// events but no memory unsafety beyond the documented contract.
+unsafe impl Sync for Ring {}
+
+pub(crate) struct Shared {
+    epoch: Instant,
+    cap: usize,
+    rings: Vec<Ring>,
+}
+
+impl Shared {
+    #[inline]
+    pub(crate) fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Ring sequence number the next event for `rank` will get.
+    #[inline]
+    pub(crate) fn seq(&self, rank: u64) -> u64 {
+        match self.rings.get(rank as usize) {
+            Some(r) => r.head.load(Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    #[inline]
+    pub(crate) fn push(&self, rank: u64, ev: RoundEvent) {
+        let Some(ring) = self.rings.get(rank as usize) else {
+            return;
+        };
+        let seq = ring.head.fetch_add(1, Ordering::Relaxed) as usize;
+        let slot = &ring.slots[seq % self.cap];
+        // SAFETY: see `unsafe impl Sync for Ring`.
+        unsafe { *slot.get() = ev };
+    }
+}
+
+/// A per-rank round-event recorder. Cheap to clone (an `Arc` handle);
+/// clones record into the same rings.
+///
+/// Recording is lock-free and allocation-free; all storage is allocated
+/// up front by [`Recorder::new`]. Attach to a rank thread with
+/// [`crate::obs::attach`] so the instrumented transports feed it, or call
+/// [`Recorder::record`] directly (works without the `obs` cargo feature —
+/// only the transport hooks are feature-gated).
+#[derive(Clone)]
+pub struct Recorder {
+    shared: Arc<Shared>,
+}
+
+impl Recorder {
+    /// A recorder for ranks `0..p`, keeping the newest
+    /// `capacity_per_rank` events per rank (clamped to at least 1).
+    /// Allocates `p × capacity_per_rank` event slots up front.
+    pub fn new(p: u64, capacity_per_rank: usize) -> Recorder {
+        let cap = capacity_per_rank.max(1);
+        let rings = (0..p)
+            .map(|_| Ring {
+                head: AtomicU64::new(0),
+                slots: (0..cap)
+                    .map(|_| UnsafeCell::new(RoundEvent::default()))
+                    .collect(),
+            })
+            .collect();
+        Recorder {
+            shared: Arc::new(Shared {
+                epoch: Instant::now(),
+                cap,
+                rings,
+            }),
+        }
+    }
+
+    /// A recorder that records nothing: zero rings, every operation an
+    /// early return, and [`crate::obs::attach`]ing it detaches — the
+    /// runtime off switch.
+    pub fn disabled() -> Recorder {
+        Recorder {
+            shared: Arc::new(Shared {
+                epoch: Instant::now(),
+                cap: 0,
+                rings: Vec::new(),
+            }),
+        }
+    }
+
+    /// Whether this recorder has any rings (false for
+    /// [`Recorder::disabled`]).
+    pub fn is_enabled(&self) -> bool {
+        !self.shared.rings.is_empty()
+    }
+
+    /// Number of ranks this recorder covers.
+    pub fn p(&self) -> u64 {
+        self.shared.rings.len() as u64
+    }
+
+    /// Events retained per rank.
+    pub fn capacity(&self) -> usize {
+        self.shared.cap
+    }
+
+    /// Nanoseconds since this recorder was created — the timestamp base
+    /// every wall-clock event uses.
+    pub fn now_ns(&self) -> u64 {
+        self.shared.now_ns()
+    }
+
+    /// Record one event for `rank` directly (out-of-range ranks are
+    /// ignored). The direct path is always compiled, independent of the
+    /// `obs` feature; it is the profiling harness's entry point.
+    pub fn record(&self, rank: u64, ev: RoundEvent) {
+        self.shared.push(rank, ev);
+    }
+
+    /// Total events ever recorded for `rank` (including any that the ring
+    /// has since overwritten).
+    pub fn recorded(&self, rank: u64) -> u64 {
+        self.shared.seq(rank)
+    }
+
+    /// The retained events for `rank`, oldest first — the newest
+    /// `min(recorded, capacity)` of them.
+    pub fn events(&self, rank: u64) -> Vec<RoundEvent> {
+        let Some(ring) = self.shared.rings.get(rank as usize) else {
+            return Vec::new();
+        };
+        let head = ring.head.load(Ordering::Acquire) as usize;
+        let kept = head.min(self.shared.cap);
+        (head - kept..head)
+            // SAFETY: see `unsafe impl Sync for Ring`.
+            .map(|seq| unsafe { *ring.slots[seq % self.shared.cap].get() })
+            .collect()
+    }
+
+    /// All retained events as `(rank, event)` pairs, rank-major and
+    /// oldest-first within a rank — the shape the export and calibration
+    /// helpers consume.
+    pub fn all_events(&self) -> Vec<(u64, RoundEvent)> {
+        let mut out = Vec::new();
+        for rank in 0..self.p() {
+            out.extend(self.events(rank).into_iter().map(|ev| (rank, ev)));
+        }
+        out
+    }
+
+    #[cfg(feature = "obs")]
+    pub(crate) fn shared(&self) -> &Arc<Shared> {
+        &self.shared
+    }
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder")
+            .field("p", &self.p())
+            .field("capacity", &self.shared.cap)
+            .finish()
+    }
+}
+
+/// The feature-gated thread-local hot path behind the hook functions in
+/// [`crate::obs`].
+#[cfg(feature = "obs")]
+pub(crate) mod tls {
+    use super::*;
+    use std::cell::{Cell, RefCell};
+
+    const NO_ROUND: u64 = u64::MAX;
+
+    thread_local! {
+        static ACTIVE: RefCell<Option<(Arc<Shared>, u64)>> = const { RefCell::new(None) };
+        static ROUND: Cell<u64> = const { Cell::new(NO_ROUND) };
+    }
+
+    pub(crate) fn attach(rec: &Recorder, rank: u64) {
+        ACTIVE.with(|a| {
+            *a.borrow_mut() = if rec.is_enabled() {
+                Some((rec.shared().clone(), rank))
+            } else {
+                None
+            };
+        });
+        ROUND.with(|r| r.set(NO_ROUND));
+    }
+
+    pub(crate) fn detach() {
+        ACTIVE.with(|a| *a.borrow_mut() = None);
+        ROUND.with(|r| r.set(NO_ROUND));
+    }
+
+    #[inline]
+    pub(crate) fn is_active() -> bool {
+        ACTIVE.with(|a| a.borrow().is_some())
+    }
+
+    #[inline]
+    pub(crate) fn now_ns() -> u64 {
+        ACTIVE.with(|a| match a.borrow().as_ref() {
+            Some((shared, _)) => shared.now_ns(),
+            None => 0,
+        })
+    }
+
+    #[inline]
+    pub(crate) fn set_round(round: u64) {
+        ROUND.with(|r| r.set(round));
+    }
+
+    #[inline]
+    pub(crate) fn clear_round() {
+        ROUND.with(|r| r.set(NO_ROUND));
+    }
+
+    /// Peer/block/bytes of the rank's own edge: the send direction when
+    /// present, else the receive, else the idle sentinels.
+    #[inline]
+    fn own_edge(
+        send: Option<(u64, u64, u64)>,
+        recv: Option<(u64, u64, u64)>,
+    ) -> (u64, i64, u64) {
+        match (send, recv) {
+            (Some((to, tag, bytes)), _) => (to, tag as i64, bytes),
+            (None, Some((from, tag, bytes))) => (from, tag as i64, bytes),
+            (None, None) => (NO_PEER, NO_BLOCK, 0),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn record_round(
+        send: Option<(u64, u64, u64)>,
+        recv: Option<(u64, u64, u64)>,
+        t0_ns: u64,
+    ) {
+        ACTIVE.with(|a| {
+            let borrow = a.borrow();
+            let Some((shared, rank)) = borrow.as_ref() else {
+                return;
+            };
+            let t1 = shared.now_ns();
+            let round = ROUND.with(|r| r.get());
+            let round = if round == NO_ROUND {
+                shared.seq(*rank)
+            } else {
+                round
+            };
+            let (peer, block, bytes) = own_edge(send, recv);
+            shared.push(
+                *rank,
+                RoundEvent {
+                    round,
+                    peer,
+                    block,
+                    bytes,
+                    t_start_ns: t0_ns,
+                    t_end_ns: t1,
+                },
+            );
+        });
+    }
+
+    #[inline]
+    pub(crate) fn record_sim(
+        send: Option<(u64, u64, u64)>,
+        recv: Option<(u64, u64, u64)>,
+        t_start_s: f64,
+        dur_s: f64,
+    ) {
+        ACTIVE.with(|a| {
+            let borrow = a.borrow();
+            let Some((shared, rank)) = borrow.as_ref() else {
+                return;
+            };
+            let round = ROUND.with(|r| r.get());
+            let round = if round == NO_ROUND {
+                shared.seq(*rank)
+            } else {
+                round
+            };
+            let (peer, block, bytes) = own_edge(send, recv);
+            let t0 = (t_start_s * 1e9).round() as u64;
+            let t1 = ((t_start_s + dur_s) * 1e9).round() as u64;
+            shared.push(
+                *rank,
+                RoundEvent {
+                    round,
+                    peer,
+                    block,
+                    bytes,
+                    t_start_ns: t0,
+                    t_end_ns: t1.max(t0),
+                },
+            );
+        });
+    }
+}

@@ -24,8 +24,10 @@
 //! Schedules are pure functions of `(p, rel)`, so a thread-local entry can
 //! never be stale in a way that matters: after an eviction the shared
 //! store forgets a group, but any TLS copy still holds the identical
-//! value. Statistics live in atomics ([`CacheStats`]); eviction is
-//! size-capped FIFO over `p` groups.
+//! value. Statistics live in [`crate::obs::metrics::CacheCounters`]
+//! (relaxed atomics, snapshotted as [`CacheStats`] and surfaced by
+//! [`crate::obs::metrics::snapshot`]); eviction is size-capped FIFO over
+//! `p` groups.
 //!
 //! [`global`] is the process-wide instance the circulant collectives in
 //! [`crate::collectives::generic`] resolve their schedules through.
@@ -72,13 +74,6 @@ pub struct CacheStats {
     pub evictions: u64,
 }
 
-#[derive(Default)]
-struct AtomicStats {
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
-}
-
 /// The group directory: which `p` groups exist (their [`Skips`]) and in
 /// which order they were created (FIFO eviction).
 struct Groups {
@@ -93,7 +88,7 @@ type Shard = RwLock<HashMap<(u64, u64), Arc<Schedule>>>;
 pub struct ScheduleCache {
     id: u64,
     max_groups: usize,
-    stats: AtomicStats,
+    stats: crate::obs::metrics::CacheCounters,
     groups: RwLock<Groups>,
     shards: [Shard; SHARDS],
 }
@@ -117,7 +112,7 @@ impl ScheduleCache {
         ScheduleCache {
             id: NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed),
             max_groups: max_groups.max(1),
-            stats: AtomicStats::default(),
+            stats: crate::obs::metrics::CacheCounters::new(),
             groups: RwLock::new(Groups {
                 skips: HashMap::new(),
                 insertion_order: VecDeque::new(),
@@ -152,7 +147,7 @@ impl ScheduleCache {
     pub fn schedule(&self, p: u64, rel: u64) -> Arc<Schedule> {
         let key = (self.id, p, rel);
         if let Some(s) = TLS_SCHED.with(|t| t.borrow().get(&key).cloned()) {
-            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            self.stats.hits.incr();
             return s;
         }
         let s = self.shared_schedule(p, rel);
@@ -192,10 +187,17 @@ impl ScheduleCache {
 
     pub fn stats(&self) -> CacheStats {
         CacheStats {
-            hits: self.stats.hits.load(Ordering::Relaxed),
-            misses: self.stats.misses.load(Ordering::Relaxed),
-            evictions: self.stats.evictions.load(Ordering::Relaxed),
+            hits: self.stats.hits.get(),
+            misses: self.stats.misses.get(),
+            evictions: self.stats.evictions.get(),
         }
+    }
+
+    /// Zero the hit/miss/eviction counters (cached entries are untouched).
+    /// Benches use this to separate cold-build from steady-state series
+    /// without subtracting snapshots.
+    pub fn reset_stats(&self) {
+        self.stats.reset();
     }
 
     /// Shared-store skips lookup: read lock on the directory, write lock
@@ -220,7 +222,7 @@ impl ScheduleCache {
             if let Some(s) = map.get(&(p, rel)) {
                 let s = s.clone();
                 drop(map);
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.hits.incr();
                 return s;
             }
         }
@@ -253,9 +255,9 @@ impl ScheduleCache {
             }
         };
         if raced {
-            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            self.stats.hits.incr();
         } else {
-            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            self.stats.misses.incr();
         }
         s
     }
@@ -277,7 +279,7 @@ impl ScheduleCache {
             for shard in &self.shards {
                 shard.write().unwrap().retain(|&(gp, _), _| gp != evict);
             }
-            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            self.stats.evictions.incr();
         }
         let skips = Arc::new(Skips::new(p));
         groups.skips.insert(p, skips.clone());

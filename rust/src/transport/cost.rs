@@ -55,6 +55,10 @@ struct Round {
     departed: u64,
     /// Sticky first failure; every subsequent call observes it.
     error: Option<SimError>,
+    /// Simulated time at the start of the last executed round — what the
+    /// recorder stamps `t_start` with (simulated, not wall-clock, time).
+    #[cfg(feature = "obs")]
+    time_before_s: f64,
 }
 
 struct Shared {
@@ -108,6 +112,8 @@ impl Transport for CostTransport {
             return Err(TransportError::Sim(e.clone()));
         }
         let gen = st.generation;
+        #[cfg(feature = "obs")]
+        let sent_info = send.as_ref().map(|s| (s.to, s.tag, s.data.len()));
         if let Some(s) = send {
             // Real payloads are owned across the round boundary (the copy
             // is the simulator's price, not the machine model's); virtual
@@ -128,6 +134,10 @@ impl Transport for CostTransport {
         if st.submitted == sh.p {
             // Last rank in: execute the round for everyone, reusing the
             // round buffers (no per-round allocation in steady state).
+            #[cfg(feature = "obs")]
+            {
+                st.time_before_s = st.engine.stats().time_s;
+            }
             let Round {
                 ref mut engine,
                 ref mut msgs,
@@ -149,7 +159,22 @@ impl Transport for CostTransport {
             return Err(TransportError::Sim(e.clone()));
         }
         let got = st.inbox[self.rank as usize].take();
+        #[cfg(feature = "obs")]
+        let round_start_s = st.time_before_s;
         drop(st);
+        // Record the rank's *own* edge at its own α + β·bytes cost (not
+        // the global round maximum), so calibration sees exact linear
+        // samples; timestamps are simulated time.
+        #[cfg(feature = "obs")]
+        if crate::obs::is_active() {
+            let recv_info = got.as_ref().map(|m| (m.from, m.tag, m.bytes));
+            let dur_s = match (&sent_info, &recv_info) {
+                (Some((to, _, bytes)), _) => self.cost.edge_cost(self.rank, *to, *bytes),
+                (None, Some((from, _, bytes))) => self.cost.edge_cost(*from, self.rank, *bytes),
+                (None, None) => 0.0,
+            };
+            crate::obs::record_sim(sent_info, recv_info, round_start_s, dur_s);
+        }
         match (got, recv_from) {
             (None, None) => Ok(None),
             (Some(msg), Some(from)) => {
@@ -232,6 +257,8 @@ where
             generation: 0,
             departed: 0,
             error: None,
+            #[cfg(feature = "obs")]
+            time_before_s: 0.0,
         }),
         cv: Condvar::new(),
     });

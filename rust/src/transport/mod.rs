@@ -233,7 +233,16 @@ impl BufferPool {
     /// A warm buffer if one is shelved, else a fresh empty one. Always
     /// returned cleared.
     pub fn get(&mut self) -> Vec<u8> {
-        self.free.pop().unwrap_or_default()
+        match self.free.pop() {
+            Some(buf) => {
+                crate::obs::metrics::on_pool_hit();
+                buf
+            }
+            None => {
+                crate::obs::metrics::on_pool_miss();
+                Vec::new()
+            }
+        }
     }
 
     /// Recycle a buffer (cleared, capacity kept) for a later `get`.
@@ -387,6 +396,73 @@ pub trait Transport {
 
     /// Block until every rank has reached the barrier.
     fn barrier(&mut self) -> Result<(), TransportError>;
+
+    /// Override this backend's [`Transport::cost_hint`] with measured
+    /// constants — typically a [`crate::obs::calibrate::Fit`] from a
+    /// recorded run — so `Algorithm::Auto` and the n* segmentation
+    /// resolve against reality instead of the static default. Everything
+    /// else forwards to the wrapped transport unchanged.
+    fn with_measured_hint(self, hint: CostHint) -> MeasuredHint<Self>
+    where
+        Self: Sized,
+    {
+        MeasuredHint { inner: self, hint }
+    }
+}
+
+/// A transport whose [`Transport::cost_hint`] is pinned to a measured
+/// value; see [`Transport::with_measured_hint`].
+#[derive(Debug)]
+pub struct MeasuredHint<T> {
+    inner: T,
+    hint: CostHint,
+}
+
+impl<T> MeasuredHint<T> {
+    /// The pinned hint.
+    pub fn hint(&self) -> CostHint {
+        self.hint
+    }
+
+    /// Unwrap back to the underlying transport.
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+}
+
+impl<T: Transport> Transport for MeasuredHint<T> {
+    fn rank(&self) -> u64 {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> u64 {
+        self.inner.size()
+    }
+
+    fn sendrecv_into(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
+        self.inner.sendrecv_into(send, recv_from, recv_buf)
+    }
+
+    fn warm_up(&mut self) -> Result<(), TransportError> {
+        self.inner.warm_up()
+    }
+
+    fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
+        self.inner.warm_peers(peers)
+    }
+
+    fn cost_hint(&self) -> CostHint {
+        self.hint
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        self.inner.barrier()
+    }
 }
 
 /// Shared tail of the SPMD harnesses (`sim::run_sim`, `thread::run_threads`,
@@ -682,6 +758,34 @@ mod tests {
             beta_s_per_byte: 0.0,
         };
         assert_eq!(b0.latency_cutoff_bytes(), 1 << 30);
+    }
+
+    #[test]
+    fn measured_hint_overrides_cost_hint_only() {
+        let base = Recorder {
+            rank: 3,
+            p: 8,
+            last: None,
+        };
+        assert_eq!(base.cost_hint(), CostHint::DEFAULT);
+        let measured = CostHint {
+            alpha_s: 5.0e-6,
+            beta_s_per_byte: 1.0e-9,
+        };
+        let mut t = base.with_measured_hint(measured);
+        assert_eq!(t.cost_hint(), measured);
+        assert_eq!(t.rank(), 3);
+        assert_eq!(t.size(), 8);
+        t.sendrecv(
+            Some(SendSpec {
+                to: 1,
+                tag: 0,
+                data: Payload::Bytes(&[7]),
+            }),
+            Some(2),
+        )
+        .unwrap();
+        assert_eq!(t.into_inner().last, Some((Some(1), Some(2))));
     }
 
     #[test]

@@ -118,7 +118,12 @@ fn write_frame_vectored(w: &mut impl Write, tag: u64, data: &[u8]) -> std::io::R
     let hdr = frame_header(tag, data.len());
     let mut hoff = 0usize; // header bytes written
     let mut doff = 0usize; // payload bytes written
+    let mut first = true;
     while hoff < hdr.len() || doff < data.len() {
+        if !first {
+            crate::obs::metrics::on_short_write_continuation();
+        }
+        first = false;
         let written = if hoff < hdr.len() {
             w.write_vectored(&[IoSlice::new(&hdr[hoff..]), IoSlice::new(&data[doff..])])
         } else {
@@ -265,6 +270,10 @@ pub struct TcpTransport {
     /// new connection parks here until our reap frees the slot, at which
     /// point [`TcpTransport::accept_until`] promotes it.
     pending_redials: Vec<(u64, TcpStream)>,
+    /// `linked_before[peer]`: a link to `peer` existed at some point, so
+    /// any further establishment is a *re*-establishment — what the
+    /// `redials` metric counts.
+    linked_before: Vec<bool>,
 }
 
 impl TcpTransport {
@@ -301,7 +310,17 @@ impl TcpTransport {
             timeout,
             epoch: 0,
             pending_redials: Vec::new(),
+            linked_before: (0..p).map(|_| false).collect(),
         })
+    }
+
+    /// Note that the link to `peer` is (re-)established, bumping the
+    /// `redials` metric when it existed before.
+    fn note_linked(&mut self, peer: u64) {
+        if self.linked_before[peer as usize] {
+            crate::obs::metrics::on_redial();
+        }
+        self.linked_before[peer as usize] = true;
     }
 
     /// Separate-process rendezvous: rank `r` listens on
@@ -365,6 +384,7 @@ impl TcpTransport {
                 closed += 1;
             }
         }
+        crate::obs::metrics::on_reaped(closed as u64);
         closed
     }
 
@@ -488,6 +508,7 @@ impl TcpTransport {
             writer: None,
             last_used: self.epoch,
         });
+        self.note_linked(peer);
         Ok(())
     }
 
@@ -507,6 +528,7 @@ impl TcpTransport {
                     writer: None,
                     last_used: self.epoch,
                 });
+                self.note_linked(peer);
                 return Ok(());
             }
             match self.listener.accept() {
@@ -551,6 +573,7 @@ impl TcpTransport {
                         writer: None,
                         last_used: self.epoch,
                     });
+                    self.note_linked(from);
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     if Instant::now() >= deadline {
@@ -686,6 +709,46 @@ impl Transport for TcpTransport {
         recv_from: Option<u64>,
         recv_buf: &mut Vec<u8>,
     ) -> Result<Option<u64>, TransportError> {
+        #[cfg(feature = "obs")]
+        let t0 = crate::obs::now_ns();
+        #[cfg(feature = "obs")]
+        let sent_info = send.map(|s| (s.to, s.tag, s.data.len()));
+        let res = self.round_impl(send, recv_from, recv_buf);
+        #[cfg(feature = "obs")]
+        if let Ok(got) = &res {
+            if let Some((_, _, bytes)) = sent_info {
+                crate::obs::metrics::on_send(bytes);
+            }
+            let recv_info = got.map(|tag| {
+                (
+                    recv_from.expect("got implies recv_from"),
+                    tag,
+                    recv_buf.len() as u64,
+                )
+            });
+            if let Some((_, _, bytes)) = recv_info {
+                crate::obs::metrics::on_recv(bytes);
+            }
+            crate::obs::record_round(sent_info, recv_info, t0);
+        }
+        res
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        // FIFO per pair keeps barrier tokens behind any in-flight data;
+        // the token links are established lazily like any other link.
+        super::dissemination_barrier(self)
+    }
+}
+
+impl TcpTransport {
+    /// The uninstrumented round body behind [`Transport::sendrecv_into`].
+    fn round_impl(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
         match (send, recv_from) {
             (None, None) => Ok(None),
             (Some(s), None) => {
@@ -799,12 +862,6 @@ impl Transport for TcpTransport {
                 got.map(Some).map_err(|e| self.poison_read(from, e))
             }
         }
-    }
-
-    fn barrier(&mut self) -> Result<(), TransportError> {
-        // FIFO per pair keeps barrier tokens behind any in-flight data;
-        // the token links are established lazily like any other link.
-        super::dissemination_barrier(self)
     }
 }
 

@@ -130,6 +130,41 @@ impl Transport for ThreadTransport {
         recv_from: Option<u64>,
         recv_buf: &mut Vec<u8>,
     ) -> Result<Option<u64>, TransportError> {
+        #[cfg(feature = "obs")]
+        let t0 = crate::obs::now_ns();
+        #[cfg(feature = "obs")]
+        let sent_info = send.map(|s| (s.to, s.tag, s.data.len()));
+        let res = self.round_impl(send, recv_from, recv_buf);
+        #[cfg(feature = "obs")]
+        if let Ok(got) = &res {
+            if let Some((_, _, bytes)) = sent_info {
+                crate::obs::metrics::on_send(bytes);
+            }
+            let recv_info =
+                got.map(|tag| (recv_from.expect("got implies recv_from"), tag, recv_buf.len() as u64));
+            if let Some((_, _, bytes)) = recv_info {
+                crate::obs::metrics::on_recv(bytes);
+            }
+            crate::obs::record_round(sent_info, recv_info, t0);
+        }
+        res
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        // Bounded by the receive timeout, so one failed rank cannot hang
+        // the rest (which a std::sync::Barrier would).
+        super::dissemination_barrier(self)
+    }
+}
+
+impl ThreadTransport {
+    /// The uninstrumented round body behind [`Transport::sendrecv_into`].
+    fn round_impl(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
         // Fire the (non-blocking, unbounded-channel) send, then block on
         // the receive: send ∥ recv.
         if let Some(s) = send {
@@ -194,12 +229,6 @@ impl Transport for ThreadTransport {
                 }
             }
         }
-    }
-
-    fn barrier(&mut self) -> Result<(), TransportError> {
-        // Bounded by the receive timeout, so one failed rank cannot hang
-        // the rest (which a std::sync::Barrier would).
-        super::dissemination_barrier(self)
     }
 }
 

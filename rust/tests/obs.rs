@@ -1,0 +1,354 @@
+//! Observability-layer tests: ring retention, allocation-freedom of the
+//! record path, Chrome-trace round-trips, calibration, and (with the
+//! `obs` feature) the end-to-end cost-backend trace of the paper's
+//! circulant broadcast.
+//!
+//! The allocation gates use a *per-thread* counting allocator: tests in
+//! one binary run concurrently, so a process-global counter would pick up
+//! a neighboring test's allocations and flake. Counting per thread makes
+//! each gate see exactly its own traffic.
+
+use nblock_bcast::obs::{self, calibrate, export, metrics, Recorder, RoundEvent, NO_BLOCK, NO_PEER};
+use nblock_bcast::sched::ScheduleCache;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Counts every allocation made by the *calling thread* (any size).
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // try_with: the allocator runs during TLS teardown too, when the
+        // counter may already be gone.
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+fn ev(round: u64) -> RoundEvent {
+    RoundEvent {
+        round,
+        peer: (round + 1) % 8,
+        block: round as i64,
+        bytes: 1024 + round,
+        t_start_ns: round * 1000,
+        t_end_ns: round * 1000 + 500,
+    }
+}
+
+#[test]
+fn ring_wraparound_keeps_newest() {
+    let rec = Recorder::new(2, 4);
+    assert_eq!(rec.p(), 2);
+    assert_eq!(rec.capacity(), 4);
+    for round in 0..10 {
+        rec.record(0, ev(round));
+    }
+    // All ten were counted, the newest four retained, oldest-first.
+    assert_eq!(rec.recorded(0), 10);
+    let evs = rec.events(0);
+    assert_eq!(evs.iter().map(|e| e.round).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+    // The untouched rank stays empty, and out-of-range ranks are ignored.
+    assert!(rec.events(1).is_empty());
+    rec.record(99, ev(0));
+    assert_eq!(rec.all_events().len(), 4);
+}
+
+#[test]
+fn direct_record_is_allocation_free() {
+    let rec = Recorder::new(1, 128);
+    rec.record(0, ev(0)); // warm every lazy path before counting
+    let a0 = thread_allocs();
+    for round in 1..=64 {
+        rec.record(0, ev(round));
+    }
+    let allocs = thread_allocs() - a0;
+    assert_eq!(allocs, 0, "Recorder::record must not allocate");
+    assert_eq!(rec.recorded(0), 65);
+}
+
+#[test]
+fn disabled_recorder_records_nothing() {
+    let rec = Recorder::disabled();
+    assert!(!rec.is_enabled());
+    rec.record(0, ev(0));
+    assert_eq!(rec.recorded(0), 0);
+    assert!(rec.all_events().is_empty());
+}
+
+#[test]
+fn chrome_trace_round_trips() {
+    let events = vec![
+        (
+            0,
+            RoundEvent {
+                round: 0,
+                peer: 3,
+                block: 2,
+                bytes: 4096,
+                t_start_ns: 1000,
+                t_end_ns: 5000,
+            },
+        ),
+        // An idle round: sentinel peer/block survive the trip.
+        (
+            1,
+            RoundEvent {
+                round: 1,
+                peer: NO_PEER,
+                block: NO_BLOCK,
+                bytes: 0,
+                t_start_ns: 2000,
+                t_end_ns: 2000,
+            },
+        ),
+        (
+            7,
+            RoundEvent {
+                round: 9,
+                peer: 0,
+                block: 0,
+                bytes: 1,
+                t_start_ns: 0,
+                t_end_ns: 123_456_789,
+            },
+        ),
+    ];
+    let doc = export::chrome_trace_from(&events);
+    let parsed = export::parse_chrome_trace(&doc).expect("own output must parse");
+    assert_eq!(parsed, events);
+    assert_eq!(export::per_rank_counts(&events), vec![(0, 1), (1, 1), (7, 1)]);
+    // The latency table covers every semantic round once.
+    let table = export::round_table(&events);
+    for needle in ["round", "    0", "    1", "    9"] {
+        assert!(table.contains(needle), "table missing {needle:?}:\n{table}");
+    }
+    // Junk is an error, not a silent empty parse.
+    assert!(export::parse_chrome_trace("{}").is_err());
+    assert!(export::parse_chrome_trace("{\"traceEvents\":[{\"name\":\"x\"}]}").is_err());
+}
+
+#[test]
+fn calibration_recovers_linear_model() {
+    let (alpha, beta) = (2.0e-6, 8.0e-11);
+    let fit = calibrate::fit_samples(
+        (1..=16u64).map(|i| (i * 8192, alpha + beta * (i * 8192) as f64)),
+    )
+    .expect("16 distinct sizes fit");
+    assert_eq!(fit.samples, 16);
+    assert!((fit.alpha_s - alpha).abs() / alpha < 1e-9);
+    assert!((fit.beta_s_per_byte - beta).abs() / beta < 1e-9);
+    let hint = fit.hint();
+    assert_eq!(hint.alpha_s, fit.alpha_s);
+    // Degenerate inputs refuse to fit instead of dividing by zero:
+    // zero-byte samples are dropped, uniform sizes have no slope.
+    assert!(calibrate::fit_samples([(0, 1.0), (0, 2.0)]).is_none());
+    assert!(calibrate::fit_samples([(512, 1.0)]).is_none());
+    assert!(calibrate::fit_samples([(512, 1.0), (512, 2.0), (512, 3.0)]).is_none());
+}
+
+#[test]
+fn metrics_snapshot_has_cache_counts() {
+    let snap = metrics::snapshot();
+    let json = snap.to_json();
+    for key in [
+        "bytes_sent",
+        "short_write_continuations",
+        "pool_hits",
+        "sched_cache_hits",
+        "sched_cache_evictions",
+    ] {
+        assert!(json.contains(key), "snapshot JSON missing {key}: {json}");
+    }
+    assert!(format!("{snap}").contains("schedule"));
+}
+
+#[test]
+fn schedule_cache_reset_stats_zeroes_counters() {
+    let c = ScheduleCache::new(4);
+    c.schedule(17, 3);
+    c.schedule(17, 3);
+    let st = c.stats();
+    assert_eq!(st.misses, 1);
+    assert!(st.hits >= 1);
+    c.reset_stats();
+    let st = c.stats();
+    assert_eq!((st.hits, st.misses, st.evictions), (0, 0, 0));
+    // The cached entries themselves survive a stats reset.
+    c.schedule(17, 3);
+    assert_eq!(c.stats().misses, 0);
+}
+
+/// Without the `obs` feature, the hook surface is inert: nothing attaches,
+/// nothing records, timestamps are free.
+#[cfg(not(feature = "obs"))]
+#[test]
+fn hooks_are_inert_without_the_feature() {
+    let rec = Recorder::new(1, 8);
+    obs::attach(&rec, 0);
+    assert!(!obs::is_active());
+    assert_eq!(obs::now_ns(), 0);
+    obs::set_round(3);
+    obs::record_round(Some((1, 0, 8)), None, obs::now_ns());
+    obs::record_sim(Some((1, 0, 8)), None, 0.0, 1.0);
+    obs::clear_round();
+    obs::detach();
+    assert_eq!(rec.recorded(0), 0);
+}
+
+#[cfg(feature = "obs")]
+mod with_obs {
+    use super::*;
+    use nblock_bcast::collectives::generic::bcast_circulant;
+    use nblock_bcast::collectives::segment::auto_block_count;
+    use nblock_bcast::sched::ceil_log2;
+    use nblock_bcast::simulator::CostModel;
+    use nblock_bcast::transport::cost::run_cost;
+    use nblock_bcast::transport::CostHint;
+
+    #[test]
+    fn tls_recording_is_allocation_free_per_event() {
+        let rec = Recorder::new(1, 256);
+        obs::attach(&rec, 0);
+        assert!(obs::is_active());
+        // Warm the TLS paths once before counting.
+        obs::set_round(0);
+        obs::record_round(Some((1, 0, 64)), Some((2, 0, 64)), obs::now_ns());
+        let a0 = thread_allocs();
+        for round in 1..=128 {
+            obs::set_round(round);
+            let t0 = obs::now_ns();
+            obs::record_round(Some((1, round, 4096)), Some((2, round, 4096)), t0);
+        }
+        let allocs = thread_allocs() - a0;
+        obs::detach();
+        assert_eq!(allocs, 0, "one recorded event must cost zero heap allocations");
+        assert_eq!(rec.recorded(0), 129);
+        let last = *rec.events(0).last().expect("retained");
+        assert_eq!(last.round, 128);
+        assert_eq!(last.peer, 1); // send direction preferred
+        assert_eq!(last.bytes, 4096);
+    }
+
+    #[test]
+    fn attaching_disabled_recorder_detaches() {
+        let rec = Recorder::new(1, 8);
+        obs::attach(&rec, 0);
+        assert!(obs::is_active());
+        obs::attach(&Recorder::disabled(), 0);
+        assert!(!obs::is_active());
+        obs::record_round(Some((1, 0, 8)), None, 0);
+        assert_eq!(rec.recorded(0), 0);
+        obs::detach();
+    }
+
+    /// The acceptance scenario: a segmented circulant broadcast at p = 64
+    /// on the cost backend, traced end to end. Every rank's trace holds
+    /// exactly `n - 1 + ⌈log₂p⌉` events, the Chrome-trace export
+    /// round-trips, and the α/β fitted from the recorded simulated
+    /// durations lands within 5% of the `CostModel` constants (a second,
+    /// single-block run feeds the fit a distinct message size: within one
+    /// segmented run all blocks agree to ±1 byte, which is below the 1 ns
+    /// timestamp quantum — the calibration needs size variation, exactly
+    /// as `obs::calibrate`'s docs prescribe).
+    #[test]
+    fn cost_backend_trace_counts_and_calibration() {
+        let p = 64u64;
+        let q = ceil_log2(p);
+        let root = 3u64;
+        let m = (1u64 << 20) + 13; // not divisible by n: block sizes vary ±1
+        let model = CostModel::flat_default();
+        let static_hint = CostHint::from_model(&model);
+        let n = auto_block_count(static_hint, p, m);
+        assert!(n > 1, "auto segmentation must pipeline a 1 MiB payload");
+        let payload: Vec<u8> = (0..m).map(|i| ((i * 131) % 251) as u8).collect();
+        let rec = Recorder::new(p, 8192);
+
+        // Phase A: the segmented broadcast under trace.
+        let (results, _) = run_cost(p, model, |mut t| {
+            use nblock_bcast::transport::Transport as _;
+            obs::attach(&rec, t.rank());
+            let data = if t.rank() == root { Some(&payload[..]) } else { None };
+            let out = bcast_circulant(&mut t, root, n, m, data);
+            obs::detach();
+            out
+        })
+        .expect("cost backend run");
+        for (r, buf) in results.iter().enumerate() {
+            assert_eq!(buf, &payload, "rank {r} delivery");
+        }
+        let expect = (n - 1 + q) as u64;
+        for rank in 0..p {
+            assert_eq!(
+                rec.recorded(rank),
+                expect,
+                "rank {rank}: circulant bcast must record n-1+q = {expect} rounds"
+            );
+        }
+        // The export round-trips and shows the same per-rank counts.
+        let doc = export::chrome_trace(&rec);
+        let parsed = export::parse_chrome_trace(&doc).expect("own trace parses");
+        assert_eq!(parsed, rec.all_events());
+        for (rank, count) in export::per_rank_counts(&parsed) {
+            assert_eq!(count as u64, expect, "rank {rank} in the exported trace");
+        }
+
+        // Phase B: one single-block broadcast into the same recorder gives
+        // the fit a second, far-apart message size.
+        let (_, _) = run_cost(p, model, |mut t| {
+            use nblock_bcast::transport::Transport as _;
+            obs::attach(&rec, t.rank());
+            let data = if t.rank() == root { Some(&payload[..]) } else { None };
+            let out = bcast_circulant(&mut t, root, 1, m, data);
+            obs::detach();
+            out
+        })
+        .expect("cost backend run");
+
+        let fit = calibrate::fit_recorder(&rec).expect("two sizes identify the model");
+        let (alpha, beta) = match model {
+            CostModel::Flat { alpha, beta } => (alpha, beta),
+            _ => unreachable!("flat_default is flat"),
+        };
+        let alpha_err = (fit.alpha_s - alpha).abs() / alpha;
+        let beta_err = (fit.beta_s_per_byte - beta).abs() / beta;
+        assert!(
+            alpha_err < 0.05,
+            "fitted α {} vs model {alpha} ({:.2}% off)",
+            fit.alpha_s,
+            alpha_err * 100.0
+        );
+        assert!(
+            beta_err < 0.05,
+            "fitted β {} vs model {beta} ({:.2}% off)",
+            fit.beta_s_per_byte,
+            beta_err * 100.0
+        );
+        // Feeding the measured hint back reproduces the static n* choice.
+        let n_measured = auto_block_count(fit.hint(), p, m);
+        assert!(
+            (n_measured as i64 - n as i64).abs() <= 1,
+            "measured hint picks n* = {n_measured}, static hint picked {n}"
+        );
+    }
+}
