@@ -27,7 +27,9 @@
 //! `cargo bench --bench bench_transport -- --smoke`  # tiny p=8 grid for CI
 
 use nblock_bcast::bench_support::{fmt_bytes, fmt_time};
-use nblock_bcast::collectives::generic::{bcast_circulant_into, Algorithm};
+use nblock_bcast::collectives::generic::{
+    allreduce_circulant, allreduce_circulant_combined_into, bcast_circulant_into, Algorithm,
+};
 use nblock_bcast::collectives::generic_baselines::{
     bcast_binomial_into, bcast_scatter_allgather_into,
 };
@@ -158,6 +160,64 @@ fn steady_state_bcast<T: Transport>(
     Ok((wall, allocs))
 }
 
+/// Per-rank SPMD body for the allreduce series: same barrier-paced window
+/// as [`steady_state_bcast`]. The combined schedule runs through its
+/// zero-copy `_into` path (accumulator and wire scratch reused across
+/// calls) and is gated allocation-free on the point-to-point backends;
+/// the chained reduce+bcast path serializes between its two phases by
+/// design, so its allocation count is reported, not asserted.
+fn steady_state_allreduce<T: Transport>(
+    t: &mut T,
+    algo: Algorithm,
+    n: usize,
+    expect: &[f32],
+    warmup: usize,
+    reps: usize,
+) -> Result<(f64, u64), TransportError> {
+    t.warm_up()?;
+    let rank = t.rank();
+    let mine: Vec<f32> = (0..expect.len())
+        .map(|i| ((rank as usize * 37 + i * 11) % 97) as f32)
+        .collect();
+    let mut pool = BufferPool::default();
+    let mut acc = Vec::new();
+    let mut one = |t: &mut T, acc: &mut Vec<f32>| -> Result<(), TransportError> {
+        match algo {
+            Algorithm::Circulant => {
+                *acc = allreduce_circulant(t, n, &mine)?;
+                Ok(())
+            }
+            Algorithm::CirculantCombined => {
+                allreduce_circulant_combined_into(t, n, &mine, &mut pool, acc)
+            }
+            other => Err(TransportError::Collective(format!(
+                "bench does not cover allreduce algorithm {other}"
+            ))),
+        }
+    };
+    for _ in 0..warmup {
+        one(t, &mut acc)?;
+        t.barrier()?;
+    }
+    let allocs0 = PAYLOAD_ALLOCS.load(Ordering::Relaxed);
+    let mut busy = 0.0f64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        one(t, &mut acc)?;
+        busy += t0.elapsed().as_secs_f64();
+        t.barrier()?;
+    }
+    let allocs = PAYLOAD_ALLOCS.load(Ordering::Relaxed) - allocs0;
+    // Integer-valued contributions keep every f32 sum exact under any
+    // association order, so the check is bitwise.
+    if acc != expect {
+        return Err(TransportError::Collective(format!(
+            "rank {rank}: allreduce sum mismatch"
+        )));
+    }
+    Ok((busy, allocs))
+}
+
 struct Row {
     backend: &'static str,
     algo: &'static str,
@@ -200,17 +260,14 @@ impl Row {
 #[allow(clippy::too_many_arguments)]
 fn summarize(
     backend: &'static str,
-    algo: Algorithm,
     label: &'static str,
+    rounds: usize,
     p: u64,
     n: usize,
     m: u64,
     reps: usize,
     per_rank: Vec<(f64, u64)>,
 ) -> Row {
-    let rounds = algo
-        .bcast_round_count(p, n)
-        .expect("bench algorithms all implement broadcast");
     // Wall: slowest rank's summed broadcast time (barrier pacing is
     // excluded from the clock and from the denominator). Allocations: the
     // counter is process-wide, so every rank saw (approximately) the same
@@ -298,7 +355,67 @@ fn main() {
                     ("thread", thread_res),
                     ("tcp", tcp_res),
                 ] {
-                    let row = summarize(backend, algo, label, p, n_run, m, reps, res);
+                    let rounds = algo
+                        .bcast_round_count(p, n_run)
+                        .expect("bench algorithms all implement broadcast");
+                    let row = summarize(backend, label, rounds, p, n_run, m, reps, res);
+                    println!(
+                        "{:>4} {:>4} {:>10} {:>10} {:>7} {:>8} {:>18} | {:>12} {:>14.3} | {:>12} {:>14}",
+                        row.p,
+                        row.n,
+                        fmt_bytes(row.block_bytes),
+                        fmt_bytes(row.payload_bytes),
+                        row.rounds,
+                        row.backend,
+                        row.algo,
+                        format!("{:.0}", row.ns_per_round),
+                        row.allocs_per_round,
+                        fmt_time(row.wall_s),
+                        row.payload_allocs,
+                    );
+                    rows.push(row);
+                }
+            }
+        }
+    }
+    // The allreduce series: chained reduce+bcast vs the fused combined
+    // schedule at the same nominal n, through the `Algorithm` dispatch on
+    // all three backends. The combined `_into` path joins the zero-alloc
+    // gate below; the chained path serializes between its phases by
+    // design, so its count is reported for the record.
+    println!("\nsteady-state allreduce (f32 sum), chained vs combined schedule:");
+    for &p in ps {
+        for &(n, bs) in configs {
+            let m = n as u64 * bs;
+            let elems = (m / 4) as usize;
+            let expect: Vec<f32> = (0..elems)
+                .map(|i| (0..p).map(|r| ((r as usize * 37 + i * 11) % 97) as f32).sum())
+                .collect();
+            for (algo, label) in [
+                (Algorithm::Circulant, "allreduce-circulant"),
+                (Algorithm::CirculantCombined, "allreduce-combined"),
+            ] {
+                let (sim_res, _stats) = run_sim(p, CostModel::flat_default(), |mut t| {
+                    steady_state_allreduce(&mut t, algo, n, &expect, warmup, reps)
+                })
+                .expect("sim backend");
+                let thread_res = run_threads(p, timeout, |mut t| {
+                    steady_state_allreduce(&mut t, algo, n, &expect, warmup, reps)
+                })
+                .expect("thread backend");
+                let tcp_res = run_tcp(p, timeout, |mut t| {
+                    steady_state_allreduce(&mut t, algo, n, &expect, warmup, reps)
+                })
+                .expect("tcp backend");
+                for (backend, res) in [
+                    ("sim", sim_res),
+                    ("thread", thread_res),
+                    ("tcp", tcp_res),
+                ] {
+                    let rounds = algo
+                        .allreduce_round_count(p, n)
+                        .expect("both allreduce series implement the round count");
+                    let row = summarize(backend, label, rounds, p, n, m, reps, res);
                     println!(
                         "{:>4} {:>4} {:>10} {:>10} {:>7} {:>8} {:>18} | {:>12} {:>14.3} | {:>12} {:>14}",
                         row.p,
@@ -326,7 +443,10 @@ fn main() {
     // yet gated.)
     for row in rows.iter().filter(|r| {
         r.backend != "sim"
-            && (r.algo == "circulant" || r.algo == "binomial" || r.algo == "segmented")
+            && (r.algo == "circulant"
+                || r.algo == "binomial"
+                || r.algo == "segmented"
+                || r.algo == "allreduce-combined")
     }) {
         assert_eq!(
             row.payload_allocs, 0,

@@ -103,10 +103,12 @@ Tools:
                              reduction over a transport (--transport, --algo
                              {auto,circulant,binomial}; verified at the root)
   allreduce --p P --elems E  compare allreduce algorithms (circulant dual,
+                             circulant-combined fused half-round schedule,
                              binomial, ring reduce-scatter+allgather);
                              with --transport (and --algo
-                             {auto,circulant,ring}) runs the generic SPMD
-                             allreduce on that backend, verified at all ranks
+                             {auto,circulant,circulant-combined,ring}) runs
+                             the generic SPMD allreduce on that backend,
+                             verified at all ranks
   trace-report FILE          re-read a --trace Chrome-trace JSON and print
                              its per-round latency table and α/β fit
   threaded --p P --n N --m BYTES   one-OS-thread-per-rank broadcast

@@ -212,7 +212,9 @@ pub fn allgatherv(p: u64, m: u64, n: usize, kind: String) -> Result<()> {
 
 /// Compare allreduce algorithms (sum of p f32 vectors), all verified.
 pub fn allreduce(p: u64, elems: usize) -> Result<()> {
-    use crate::collectives::{allreduce_circulant, allreduce_ring, reduce_binomial};
+    use crate::collectives::{
+        allreduce_circulant, allreduce_circulant_combined, allreduce_ring, reduce_binomial,
+    };
     let contrib: Vec<Vec<f32>> = (0..p)
         .map(|r| {
             (0..elems)
@@ -232,6 +234,15 @@ pub fn allreduce(p: u64, elems: usize) -> Result<()> {
     println!(
         "{:>28} {:>8} {:>14} {:>12}",
         "circulant reduce+bcast",
+        out.rounds,
+        fmt_time(out.time_s),
+        fmt_bytes(out.bytes_on_wire)
+    );
+    let mut e = Engine::new(p, CostModel::flat_default());
+    let (_, out) = allreduce_circulant_combined(&mut e, n, &contrib, true)?;
+    println!(
+        "{:>28} {:>8} {:>14} {:>12}",
+        "circulant combined",
         out.rounds,
         fmt_time(out.time_s),
         fmt_bytes(out.bytes_on_wire)
@@ -687,7 +698,7 @@ pub fn allreduce_transport(
     let q = ceil_log2(p);
     let n = if n == 0 { (elems / 4096).clamp(1, 256) } else { n };
     let requested: Algorithm = algo.parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    let resolved = requested.resolve_allreduce(p, n, (elems * 4) as u64);
+    let resolved = requested.resolve_allreduce_with(backend_hint(backend), p, n, (elems * 4) as u64);
     let auto_note = if requested == Algorithm::Auto { " (auto)" } else { "" };
     let contribs = reduce_contribs(p, elems);
     println!(

@@ -63,7 +63,7 @@
 
 use super::blocks::BlockPartition;
 use super::segment;
-use crate::sched::{ceil_log2, AllgatherSchedules, BcastPlan, Skips};
+use crate::sched::{ceil_log2, BcastPlan};
 use crate::transport::{BufferPool, CostHint, Payload, SendSpec, Transport, TransportError};
 use std::fmt;
 
@@ -80,6 +80,27 @@ pub fn bcast_rounds(p: u64, n: usize) -> usize {
     } else {
         n - 1 + ceil_log2(p)
     }
+}
+
+/// Rounds taken by [`allreduce_circulant_combined`] at `p` ranks and
+/// nominal block count `n`: both fused phases run over `⌈n/2⌉`
+/// superblocks, giving `2(⌈n/2⌉ - 1 + ⌈log₂p⌉) ≤ n - 1 + 2⌈log₂p⌉`
+/// (equality at odd `n`) — the paper's combined-schedule budget, vs.
+/// `2(n - 1 + q)` for the unfused [`allreduce_circulant`] chain.
+pub fn combined_allreduce_rounds(p: u64, n: usize) -> usize {
+    if p <= 1 {
+        0
+    } else {
+        2 * bcast_rounds(p, n.div_ceil(2))
+    }
+}
+
+/// Rounds taken by the per-root-segmented
+/// [`allgatherv_circulant_per_root`] at `p` ranks: smaller roots
+/// start-delayed, every sub-broadcast finishing together after
+/// `max_j(n_j) - 1 + ⌈log₂p⌉` rounds.
+pub fn allgatherv_rounds_per_root(p: u64, ns: &[usize]) -> usize {
+    bcast_rounds(p, ns.iter().copied().max().unwrap_or(1))
 }
 
 /// Check one round's delivery against the schedule: exactly the scheduled
@@ -360,7 +381,25 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
     counts: &[u64],
     mine: &[u8],
 ) -> Result<Vec<Vec<u8>>, TransportError> {
-    allgatherv_circulant_impl(t, n, counts, Some(mine), false)
+    let ns = vec![n; counts.len()];
+    let mut out = Vec::new();
+    allgatherv_circulant_impl(t, &ns, counts, Some(mine), false, &mut out)?;
+    Ok(out)
+}
+
+/// [`allgatherv_circulant`] with caller-owned storage: the `p` per-root
+/// buffers land in `out` (cleared, capacities reused), so repeated
+/// all-broadcasts with the same `out` perform zero steady-state payload
+/// allocations.
+pub fn allgatherv_circulant_into<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    counts: &[u64],
+    mine: &[u8],
+    out: &mut Vec<Vec<u8>>,
+) -> Result<(), TransportError> {
+    let ns = vec![n; counts.len()];
+    allgatherv_circulant_impl(t, &ns, counts, Some(mine), false, out)
 }
 
 /// [`allgatherv_circulant`] in virtual (size-only) mode: the identical
@@ -368,33 +407,87 @@ pub fn allgatherv_circulant<T: Transport + ?Sized>(
 /// exact per-round block sums of the data path — the unified cost path of
 /// the Figure 2/3 sweeps (`p = 1152`, per-root contributions in the
 /// hundreds of megabytes). No bytes are stored, so per-rank memory stays
-/// `O(p log p)` (the Algorithm-2 schedule precomputation).
+/// `O(p)` (the shared-`Arc` Algorithm-2 plan).
 pub fn allgatherv_circulant_virtual<T: Transport + ?Sized>(
     t: &mut T,
     n: usize,
     counts: &[u64],
 ) -> Result<(), TransportError> {
-    allgatherv_circulant_impl(t, n, counts, None, true).map(|_| ())
+    let ns = vec![n; counts.len()];
+    allgatherv_circulant_impl(t, &ns, counts, None, true, &mut Vec::new())
 }
 
-/// The single Algorithm-2 round loop behind both entry points. Virtual
-/// mode skips block storage and the possession ledger (their memory would
-/// be `O(p·n)` per rank — the very thing the sweeps cannot afford); the
-/// data path exercises the full checks on every backend.
+/// Per-root-segmented Algorithm 2: root `j`'s `counts[j]` bytes travel as
+/// `ns[j]` blocks instead of one global count, so small contributions stop
+/// paying the large roots' round structure in per-block α overhead.
+///
+/// Root `j`'s `n_j`-block sub-broadcast is start-delayed by
+/// `max(ns) - n_j` rounds; the per-root virtual-round shifts then satisfy
+/// `x_j - d_j ≡ x (mod q)`, so every root shares one global round-index
+/// `k` per round and the packed per-round messages compose exactly as in
+/// the uniform schedule, finishing together after
+/// [`allgatherv_rounds_per_root`] rounds. Pass the counts from
+/// [`segment::per_root_block_counts`] to get the α/β-balanced choice (the
+/// `Auto` dispatch does).
+pub fn allgatherv_circulant_per_root<T: Transport + ?Sized>(
+    t: &mut T,
+    ns: &[usize],
+    counts: &[u64],
+    mine: &[u8],
+) -> Result<Vec<Vec<u8>>, TransportError> {
+    let mut out = Vec::new();
+    allgatherv_circulant_impl(t, ns, counts, Some(mine), false, &mut out)?;
+    Ok(out)
+}
+
+/// [`allgatherv_circulant_per_root`] with caller-owned storage (see
+/// [`allgatherv_circulant_into`]).
+pub fn allgatherv_circulant_per_root_into<T: Transport + ?Sized>(
+    t: &mut T,
+    ns: &[usize],
+    counts: &[u64],
+    mine: &[u8],
+    out: &mut Vec<Vec<u8>>,
+) -> Result<(), TransportError> {
+    allgatherv_circulant_impl(t, ns, counts, Some(mine), false, out)
+}
+
+/// [`allgatherv_circulant_per_root`] in virtual (size-only) mode.
+pub fn allgatherv_circulant_per_root_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    ns: &[usize],
+    counts: &[u64],
+) -> Result<(), TransportError> {
+    allgatherv_circulant_impl(t, ns, counts, None, true, &mut Vec::new())
+}
+
+/// The single Algorithm-2 round loop behind every all-broadcast entry
+/// point, generalized to per-root block counts (`ns[j]` blocks for root
+/// `j`; the uniform wrappers pass `[n; p]`). Virtual mode skips block
+/// storage and the possession ledger (their memory would be `O(p·n)` per
+/// rank — the very thing the sweeps cannot afford); the data path
+/// exercises the full checks on every backend.
 fn allgatherv_circulant_impl<T: Transport + ?Sized>(
     t: &mut T,
-    n: usize,
+    ns: &[usize],
     counts: &[u64],
     mine: Option<&[u8]>,
     virt: bool,
-) -> Result<Vec<Vec<u8>>, TransportError> {
+    out: &mut Vec<Vec<u8>>,
+) -> Result<(), TransportError> {
     let p = t.size();
     let rank = t.rank();
     if counts.len() as u64 != p {
         return Err(cerr(format!("counts length {} != p {p}", counts.len())));
     }
-    if n == 0 {
-        return Err(cerr("need at least one block".into()));
+    if ns.len() != counts.len() {
+        return Err(cerr(format!(
+            "block-count length {} != p {p}",
+            ns.len()
+        )));
+    }
+    if ns.iter().any(|&nj| nj == 0) {
+        return Err(cerr("need at least one block per root".into()));
     }
     let mine_len = mine.map(|m| m.len() as u64);
     if let Some(len) = mine_len {
@@ -408,52 +501,76 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
         return Err(cerr(format!("rank {rank} must supply its contribution")));
     }
     if p == 1 {
-        return Ok(mine.map(|m| vec![m.to_vec()]).unwrap_or_default());
+        out.clear();
+        if let Some(m) = mine {
+            out.push(m.to_vec());
+        }
+        return Ok(());
     }
-    let skips = Skips::new(p);
+    // Schedules come from the process-global cache's per-root keying: one
+    // AllgatherPlan per (p, rank), its p per-root entries Arc-shared with
+    // the broadcast/reduce schedules, so repeated all-broadcasts (and the
+    // p = 1152 sweeps) never recompute the O(p log p) preamble.
+    let cache = crate::sched::cache::global();
+    let skips = cache.skips(p);
     let q = skips.q();
-    // The per-rank O(p log p) precomputation of Algorithm 2: this rank's
-    // receive and send schedules for every root.
-    let sched = AllgatherSchedules::compute(&skips, rank);
+    let plan = cache.allgather_plan(p, rank);
     let parts: Vec<BlockPartition> = counts
         .iter()
-        .map(|&mj| BlockPartition::new(mj, n))
+        .zip(ns)
+        .map(|(&mj, &nj)| BlockPartition::new(mj, nj))
         .collect();
-    let x = (q - (n - 1 + q) % q) % q;
-    // Concrete block for internal round i given a raw schedule entry.
-    let concrete = |raw: i64, i: usize, k: usize| -> Option<usize> {
-        let v = raw + (i - k) as i64 - x as i64;
+    let nmax = *ns.iter().max().expect("validated non-empty");
+    // Per-root start delays and virtual-round shifts: root j's n_j-block
+    // sub-broadcast occupies global rounds [d_j, nmax - 1 + q) — exactly
+    // its own n_j - 1 + q rounds — and x_j ≡ 1 - n_j (mod q) while
+    // d_j = nmax - n_j gives x_j - d_j ≡ 1 - nmax ≡ x (mod q): all roots
+    // agree on the global round-index k every round (uniform ns make
+    // every d_j = 0 and reduce to the classic Algorithm 2 loop).
+    let xs: Vec<usize> = ns.iter().map(|&nj| (q - (nj - 1 + q) % q) % q).collect();
+    let ds: Vec<usize> = ns.iter().map(|&nj| nmax - nj).collect();
+    let x = (q - (nmax - 1 + q) % q) % q;
+    // Concrete block of root j at global external round tg (round-index
+    // k): None before the root's delayed start, then Algorithm 1's closed
+    // form on its own (n_j, x_j) plan.
+    let concrete = |j: usize, raw: i64, tg: usize, k: usize| -> Option<usize> {
+        if tg < ds[j] {
+            return None;
+        }
+        let i = tg - ds[j] + xs[j];
+        debug_assert_eq!(i % q, k, "per-root round-index alignment");
+        let v = raw + (i - k) as i64 - xs[j] as i64;
         if v < 0 {
             None
         } else {
-            Some((v as usize).min(n - 1))
+            Some((v as usize).min(ns[j] - 1))
         }
     };
     // Final-offset storage (data mode only): `out[j]` is the buffer
-    // ultimately returned for root `j`, pre-sized to `counts[j]`, and
-    // inbound blocks are unpacked *directly into their final offset*
-    // within it — no per-block owned-storage allocation, no reassembly
-    // copy.
-    let mut out: Vec<Vec<u8>> = if virt {
-        Vec::new()
+    // ultimately returned for root `j`, pre-sized to `counts[j]` with
+    // capacity reused across calls, and inbound blocks are unpacked
+    // *directly into their final offset* within it — no per-block
+    // owned-storage allocation, no reassembly copy.
+    if virt {
+        out.clear();
     } else {
-        (0..p as usize)
-            .map(|j| {
-                if j == rank as usize {
-                    mine.expect("validated above").to_vec()
-                } else {
-                    vec![0u8; counts[j] as usize]
-                }
-            })
-            .collect()
-    };
-    // Data-mode possession ledger (`O(p·n)` bools): debug builds track
+        out.resize_with(p as usize, Vec::new);
+        for (j, buf) in out.iter_mut().enumerate() {
+            buf.clear();
+            if j == rank as usize {
+                buf.extend_from_slice(mine.expect("validated above"));
+            } else {
+                buf.resize(counts[j] as usize, 0);
+            }
+        }
+    }
+    // Data-mode possession ledger (`O(Σn_j)` bools): debug builds track
     // per-root block arrivals to catch pack/schedule violations; release
     // builds rely on the verified schedule invariants plus the wire-level
     // length checks below, so the round loop carries zero verify cost.
     let track = !virt && cfg!(debug_assertions);
     let mut have: Vec<Vec<bool>> = if track {
-        let mut h: Vec<Vec<bool>> = (0..p as usize).map(|_| vec![false; n]).collect();
+        let mut h: Vec<Vec<bool>> = ns.iter().map(|&nj| vec![false; nj]).collect();
         h[rank as usize].fill(true);
         h
     } else {
@@ -463,9 +580,9 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
     // frame. Capacities stabilize after the first few rounds.
     let mut send_payload: Vec<u8> = Vec::new();
     let mut recv_buf: Vec<u8> = Vec::new();
-    for i in x..(n + q - 1 + x) {
-        crate::obs::set_round((i - x) as u64);
-        let k = i % q;
+    for tg in 0..(nmax - 1 + q) {
+        crate::obs::set_round(tg as u64);
+        let k = (tg + x) % q;
         let to = skips.to_proc(rank, k);
         let from = skips.from_proc(rank, k);
         // Pack one block per root j != to (the to-processor is root for
@@ -477,7 +594,7 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
                 if j == to {
                     continue;
                 }
-                if let Some(b) = concrete(sched.send[j as usize][k], i, k) {
+                if let Some(b) = concrete(j as usize, plan.send(j, k), tg, k) {
                     bytes += parts[j as usize].size(b);
                 }
             }
@@ -488,10 +605,10 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
                 if j == to {
                     continue;
                 }
-                if let Some(b) = concrete(sched.send[j as usize][k], i, k) {
+                if let Some(b) = concrete(j as usize, plan.send(j, k), tg, k) {
                     if track && !have[j as usize][b] {
                         return Err(cerr(format!(
-                            "rank {rank} round {i}: sends root {j} block {b} before receiving it"
+                            "rank {rank} round {tg}: sends root {j} block {b} before receiving it"
                         )));
                     }
                     send_payload.extend_from_slice(&out[j as usize][parts[j as usize].range(b)]);
@@ -508,10 +625,10 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
             Some(from),
             &mut recv_buf,
         )?;
-        let tag = got.ok_or_else(|| cerr(format!("rank {rank} round {i}: no message")))?;
+        let tag = got.ok_or_else(|| cerr(format!("rank {rank} round {tg}: no message")))?;
         if tag != k as u64 {
             return Err(cerr(format!(
-                "rank {rank} round {i}: message tagged {tag}, expected round-index {k}"
+                "rank {rank} round {tg}: message tagged {tag}, expected round-index {k}"
             )));
         }
         if virt {
@@ -524,11 +641,11 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
             if j == rank {
                 continue;
             }
-            if let Some(b) = concrete(sched.recv[j as usize][k], i, k) {
+            if let Some(b) = concrete(j as usize, plan.recv(j, k), tg, k) {
                 let sz = parts[j as usize].size(b) as usize;
                 if off + sz > recv_buf.len() {
                     return Err(cerr(format!(
-                        "rank {rank} round {i}: pack/unpack misalignment"
+                        "rank {rank} round {tg}: pack/unpack misalignment"
                     )));
                 }
                 out[j as usize][parts[j as usize].range(b)]
@@ -541,7 +658,7 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
         }
         if off != recv_buf.len() {
             return Err(cerr(format!(
-                "rank {rank} round {i}: {} unconsumed payload bytes",
+                "rank {rank} round {tg}: {} unconsumed payload bytes",
                 recv_buf.len() - off
             )));
         }
@@ -552,7 +669,7 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
             return Err(cerr(format!("rank {rank}: missing root {j} block {b}")));
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
@@ -727,6 +844,242 @@ pub fn allreduce_circulant_virtual<T: Transport + ?Sized>(
         return Ok(());
     }
     bcast_circulant_virtual(t, 0, n, (elems * 4) as u64)
+}
+
+/// Combined-schedule allreduce (f32 sum): the all-reduction of the
+/// all-broadcast/all-reduction companion paper, fused from a
+/// reduce-to-0 and a bcast-from-0 that each run over `⌈n/2⌉`
+/// *superblocks*, for [`combined_allreduce_rounds`]` = 2(⌈n/2⌉ - 1 + q)
+/// ≤ n - 1 + 2q` total rounds — about half the unfused
+/// [`allreduce_circulant`]'s `2(n - 1 + q)` at the same nominal `n`.
+///
+/// One accumulator serves both phases: the reduction combines inbound
+/// partial sums into it in place, then the broadcast overwrites its
+/// element ranges with the final sums as they arrive, so the fusion
+/// needs no intermediate buffer hand-off and no extra copies. Every
+/// rank returns the full elementwise sum.
+pub fn allreduce_circulant_combined<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    mine: &[f32],
+) -> Result<Vec<f32>, TransportError> {
+    let mut pool = BufferPool::default();
+    let mut acc = Vec::new();
+    allreduce_circulant_combined_into(t, n, mine, &mut pool, &mut acc)?;
+    Ok(acc)
+}
+
+/// [`allreduce_circulant_combined`] with caller-owned storage: the sum
+/// lands in `acc` (cleared, capacity reused) and the two wire-scratch
+/// buffers are drawn from and recycled into `pool`, so repeated
+/// allreduces with the same `(pool, acc)` perform zero steady-state
+/// payload allocations — the hot path the transport bench gates.
+pub fn allreduce_circulant_combined_into<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    mine: &[f32],
+    pool: &mut BufferPool,
+    acc: &mut Vec<f32>,
+) -> Result<(), TransportError> {
+    allreduce_circulant_combined_impl(t, n, mine.len(), Some(mine), false, pool, acc)
+}
+
+/// [`allreduce_circulant_combined`] in virtual (size-only) mode: the
+/// identical fused round loop with [`Payload::Virtual`] frames of the
+/// exact serialized superblock sizes, so the cost-model backends account
+/// the combined schedule without materializing a single float.
+pub fn allreduce_circulant_combined_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    elems: usize,
+) -> Result<(), TransportError> {
+    let mut pool = BufferPool::with_capacity(0);
+    allreduce_circulant_combined_impl(t, n, elems, None, true, &mut pool, &mut Vec::new())
+}
+
+/// The single fused round loop behind the combined entry points: a
+/// time-reversed Algorithm 1 over `⌈n/2⌉` superblocks (reduce to rank 0)
+/// immediately followed by the forward Algorithm 1 on the same plan
+/// (broadcast from rank 0), sharing one accumulator and one schedule.
+fn allreduce_circulant_combined_impl<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    elems: usize,
+    mine: Option<&[f32]>,
+    virt: bool,
+    pool: &mut BufferPool,
+    acc_out: &mut Vec<f32>,
+) -> Result<(), TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if n == 0 {
+        return Err(cerr("need at least one block".into()));
+    }
+    if !virt && mine.is_none() {
+        return Err(cerr(format!("rank {rank} must supply its contribution")));
+    }
+    acc_out.clear();
+    if let Some(m) = mine {
+        acc_out.extend_from_slice(m);
+    }
+    if p == 1 {
+        return Ok(());
+    }
+    let n_super = n.div_ceil(2);
+    let cache = crate::sched::cache::global();
+    let skips = cache.skips(p);
+    // Both phases are rooted at 0, so rel = rank and the one plan serves
+    // the reduction (reversed) and the broadcast (forward) alike.
+    let plan = BcastPlan::new((*cache.schedule(p, rank)).clone(), n_super);
+    let part = BlockPartition::new((elems * 4) as u64, n_super);
+    // Superblock b's *element* range. Byte boundaries need not be
+    // 4-aligned, so the floor-divided ranges partition the elements
+    // (block b ends where b+1 begins) and every wire size below derives
+    // from the element count — 4·|erange(b)|, not part.size(b).
+    let erange = |b: usize| {
+        let r = part.range(b);
+        r.start / 4..r.end / 4
+    };
+    let ebytes = |b: usize| erange(b).len() as u64 * 4;
+    let rounds = plan.num_rounds();
+    // Round-reused wire scratch from the caller's pool — no per-round
+    // (or, with a warm pool, per-call) allocation.
+    let mut send_scratch: Vec<u8> = pool.get();
+    let mut recv_scratch: Vec<u8> = pool.get();
+    // ---- Phase 1: reduce to rank 0 (time-reversal), rounds 0..rounds.
+    for t_rev in 0..rounds {
+        crate::obs::set_round(t_rev as u64);
+        let tf = rounds - 1 - t_rev; // the bcast round being reversed
+        let a = plan.action(tf);
+        let to_rel = skips.to_proc(rank, a.k);
+        let from_rel = skips.from_proc(rank, a.k);
+        // Reverse of "r receives superblock b from f": r emits its
+        // accumulated superblock b to f. The root only combines.
+        let send = if rank != 0 {
+            match a.recv_block {
+                Some(b) => {
+                    let payload: Payload = if virt {
+                        Payload::Virtual(ebytes(b))
+                    } else {
+                        send_scratch.clear();
+                        for x in &acc_out[erange(b)] {
+                            send_scratch.extend_from_slice(&x.to_le_bytes());
+                        }
+                        Payload::Bytes(&send_scratch)
+                    };
+                    Some(SendSpec {
+                        to: from_rel,
+                        tag: b as u64,
+                        data: payload,
+                    })
+                }
+                None => None,
+            }
+        } else {
+            None
+        };
+        // Reverse of "r sends superblock b to t": r combines b arriving
+        // from t — unless the forward send was suppressed (target root).
+        let expect = if to_rel != 0 { a.send_block } else { None };
+        let recv_from = expect.map(|_| to_rel);
+        let got = t.sendrecv_into(send, recv_from, &mut recv_scratch)?;
+        let scheduled =
+            check_scheduled(rank, t_rev, got, recv_scratch.len() as u64, expect, |b| {
+                if virt {
+                    None
+                } else {
+                    Some(ebytes(b))
+                }
+            })?;
+        if scheduled && !virt {
+            let blk = expect.expect("check_scheduled confirmed a scheduled payload");
+            // Combine in place, straight off the wire bytes.
+            for (d, c) in acc_out[erange(blk)]
+                .iter_mut()
+                .zip(recv_scratch.chunks_exact(4))
+            {
+                *d += f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+    }
+    // ---- Phase 2: broadcast from rank 0, rounds rounds..2·rounds. The
+    // accumulator doubles as block storage: a received superblock
+    // *overwrites* its element range with the final sums, and sends
+    // serialize straight from it (the root's accumulator is already the
+    // full sum — reduction correctness — so its sends need no ledger).
+    let track = cfg!(debug_assertions);
+    let mut have: Vec<bool> = if track { vec![rank == 0; n_super] } else { Vec::new() };
+    for round in 0..rounds {
+        crate::obs::set_round((rounds + round) as u64);
+        let a = plan.action(round);
+        let to_rel = skips.to_proc(rank, a.k);
+        let from_rel = skips.from_proc(rank, a.k);
+        let expect = if rank == 0 { None } else { a.recv_block };
+        let recv_from = expect.map(|_| from_rel);
+        // Never send to the root; the root never receives.
+        let send = if to_rel != 0 {
+            match a.send_block {
+                Some(sb) => {
+                    if track && rank != 0 && !have[sb] {
+                        return Err(cerr(format!(
+                            "rank {rank} round {}: sends final superblock {sb} before receiving it",
+                            rounds + round
+                        )));
+                    }
+                    let payload: Payload = if virt {
+                        Payload::Virtual(ebytes(sb))
+                    } else {
+                        send_scratch.clear();
+                        for x in &acc_out[erange(sb)] {
+                            send_scratch.extend_from_slice(&x.to_le_bytes());
+                        }
+                        Payload::Bytes(&send_scratch)
+                    };
+                    Some(SendSpec {
+                        to: to_rel,
+                        tag: sb as u64,
+                        data: payload,
+                    })
+                }
+                None => None,
+            }
+        } else {
+            None
+        };
+        let got = t.sendrecv_into(send, recv_from, &mut recv_scratch)?;
+        let scheduled = check_scheduled(
+            rank,
+            rounds + round,
+            got,
+            recv_scratch.len() as u64,
+            expect,
+            |b| if virt { None } else { Some(ebytes(b)) },
+        )?;
+        if scheduled {
+            let blk = expect.expect("check_scheduled confirmed a scheduled payload");
+            if !virt {
+                // Overwrite with the final sums, straight off the wire.
+                for (d, c) in acc_out[erange(blk)]
+                    .iter_mut()
+                    .zip(recv_scratch.chunks_exact(4))
+                {
+                    *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            if track {
+                have[blk] = true;
+            }
+        }
+    }
+    crate::obs::clear_round();
+    pool.put(send_scratch);
+    pool.put(recv_scratch);
+    if track && rank != 0 {
+        if let Some(b) = have.iter().position(|&h| !h) {
+            return Err(cerr(format!("rank {rank}: missing final superblock {b}")));
+        }
+    }
+    Ok(())
 }
 
 /// Hierarchical (leader-decomposed) broadcast as an SPMD program: root →
@@ -1033,6 +1386,7 @@ pub const AUTO_LATENCY_CUTOFF: u64 = 4096;
 /// | algorithm | bcast | allgatherv | reduce | allreduce |
 /// |---|---|---|---|---|
 /// | `Circulant` (the paper's) | ✓ | ✓ | ✓ | ✓ |
+/// | `CirculantCombined` | — | — | — | ✓ |
 /// | `Binomial` | ✓ | — | ✓ | — |
 /// | `ScatterAllgather` | ✓ | — | — | — |
 /// | `Ring` | — | ✓ | — | ✓ |
@@ -1052,6 +1406,10 @@ pub enum Algorithm {
     /// ([`bcast_circulant`], [`allgatherv_circulant`],
     /// [`reduce_circulant`], [`allreduce_circulant`]).
     Circulant,
+    /// The combined-schedule all-reduction of the companion paper: fused
+    /// reduce+bcast over `⌈n/2⌉` superblocks, `2(⌈n/2⌉ - 1 + ⌈log₂p⌉)`
+    /// rounds — allreduce only ([`allreduce_circulant_combined`]).
+    CirculantCombined,
     /// Binomial tree: `⌈log₂p⌉` rounds, the whole message per edge
     /// ([`crate::collectives::generic_baselines::bcast_binomial`],
     /// [`crate::collectives::generic_baselines::reduce_binomial`]).
@@ -1075,13 +1433,15 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
-    /// The kebab-case name (`"auto"`, `"circulant"`, `"binomial"`,
-    /// `"scatter-allgather"`, `"ring"`, `"bruck"`) — the same spelling the
-    /// CLI's `--algo` flag and `FromStr` accept.
+    /// The kebab-case name (`"auto"`, `"circulant"`,
+    /// `"circulant-combined"`, `"binomial"`, `"scatter-allgather"`,
+    /// `"ring"`, `"bruck"`) — the same spelling the CLI's `--algo` flag
+    /// and `FromStr` accept.
     pub fn name(self) -> &'static str {
         match self {
             Algorithm::Auto => "auto",
             Algorithm::Circulant => "circulant",
+            Algorithm::CirculantCombined => "circulant-combined",
             Algorithm::Binomial => "binomial",
             Algorithm::ScatterAllgather => "scatter-allgather",
             Algorithm::Ring => "ring",
@@ -1220,22 +1580,54 @@ impl Algorithm {
         (algo, n)
     }
 
-    /// Resolve `Auto` for an allreduce: always the circulant
-    /// reduce-then-broadcast (`2(n - 1 + ⌈log₂p⌉)` rounds, which both
-    /// pipelines and keeps the round count logarithmic in `p`); the
-    /// `2(p - 1)`-round ring is kept as the explicit classical baseline.
-    pub fn resolve_allreduce(self, _p: u64, _n: usize, _bytes: u64) -> Algorithm {
+    /// Resolve `Auto` for an allreduce of `bytes` payload bytes at `p`
+    /// ranks by predicted cost under the fallback α/β
+    /// ([`CostHint::DEFAULT`]): the combined circulant schedule
+    /// (`2(⌈n/2⌉ - 1 + q)` rounds,
+    /// [`segment::combined_allreduce_time`]) against the
+    /// bandwidth-optimal `2(p - 1)`-round ring
+    /// (`2(p - 1)(α + β·m/p)`). The ring wins for large vectors at
+    /// moderate `p` (its per-rank traffic `2βm` is optimal); the combined
+    /// schedule wins whenever latency or `log p` scaling matters.
+    pub fn resolve_allreduce(self, p: u64, n: usize, bytes: u64) -> Algorithm {
+        self.resolve_allreduce_with(CostHint::DEFAULT, p, n, bytes)
+    }
+
+    /// [`Algorithm::resolve_allreduce`] with an explicit backend α/β
+    /// estimate, as the dispatch entry points use
+    /// ([`Transport::cost_hint`]).
+    pub fn resolve_allreduce_with(self, hint: CostHint, p: u64, n: usize, bytes: u64) -> Algorithm {
         match self {
-            Algorithm::Auto => Algorithm::Circulant,
+            Algorithm::Auto => {
+                if p <= 1 {
+                    return Algorithm::CirculantCombined;
+                }
+                let q = ceil_log2(p);
+                let (alpha, beta) = (hint.alpha_s, hint.beta_s_per_byte);
+                let n_eff = if n <= 1 {
+                    segment::combined_block_count(hint, p, bytes)
+                } else {
+                    n
+                };
+                let t_comb = segment::combined_allreduce_time(alpha, beta, q, bytes, n_eff);
+                let t_ring =
+                    2.0 * (p - 1) as f64 * (alpha + beta * bytes as f64 / p as f64);
+                if t_ring < t_comb {
+                    Algorithm::Ring
+                } else {
+                    Algorithm::CirculantCombined
+                }
+            }
             a => a,
         }
     }
 
-    /// [`Algorithm::resolve_allreduce`] plus the block count: the
-    /// circulant allreduce is reduce-to-0 followed by bcast-from-0, each
-    /// with the broadcast cost shape, so `Auto` without a caller-chosen
-    /// block count gets the same closed-form `n*` as a broadcast of
-    /// `bytes`.
+    /// [`Algorithm::resolve_allreduce_with`] plus the block count: when
+    /// `Auto` lands on the combined schedule without a caller-chosen
+    /// block count, the nominal count becomes the closed-form
+    /// [`segment::combined_block_count`] `2n* - 1` (both fused phases
+    /// then run `n*` superblocks). Explicit algorithms and explicit
+    /// counts pass through unchanged (clamped to ≥ 1).
     pub fn resolve_allreduce_segmented(
         self,
         hint: CostHint,
@@ -1243,9 +1635,13 @@ impl Algorithm {
         n: usize,
         bytes: u64,
     ) -> (Algorithm, usize) {
-        let algo = self.resolve_allreduce(p, n, bytes);
-        let n = if self == Algorithm::Auto && algo == Algorithm::Circulant && n <= 1 && p > 1 {
-            segment::auto_block_count(hint, p, bytes)
+        let algo = self.resolve_allreduce_with(hint, p, n, bytes);
+        let n = if self == Algorithm::Auto && n <= 1 && p > 1 {
+            match algo {
+                Algorithm::CirculantCombined => segment::combined_block_count(hint, p, bytes),
+                Algorithm::Circulant => segment::auto_block_count(hint, p, bytes),
+                _ => n.max(1),
+            }
         } else {
             n.max(1)
         };
@@ -1296,10 +1692,12 @@ impl Algorithm {
     /// Communication rounds a (concrete) algorithm takes for an `n`-block
     /// allreduce at `p` ranks — `None` if it does not implement allreduce
     /// or is still `Auto`: circulant reduce+bcast `2(n - 1 + ⌈log₂p⌉)`,
+    /// combined schedule `2(⌈n/2⌉ - 1 + ⌈log₂p⌉) ≤ n - 1 + 2⌈log₂p⌉`,
     /// ring reduce-scatter + allgather `2(p - 1)`.
     pub fn allreduce_round_count(self, p: u64, n: usize) -> Option<usize> {
         match self {
             Algorithm::Circulant => Some(2 * bcast_rounds(p, n)),
+            Algorithm::CirculantCombined => Some(combined_allreduce_rounds(p, n)),
             Algorithm::Ring => Some(2 * (p.max(1) - 1) as usize),
             _ => None,
         }
@@ -1319,6 +1717,9 @@ impl std::str::FromStr for Algorithm {
         Ok(match s.to_ascii_lowercase().as_str() {
             "auto" => Algorithm::Auto,
             "circulant" | "nblock" => Algorithm::Circulant,
+            "circulant-combined" | "circulant_combined" | "combined-circulant" | "combined" => {
+                Algorithm::CirculantCombined
+            }
             "binomial" => Algorithm::Binomial,
             "scatter-allgather" | "scatter_allgather" | "vandegeijn" => {
                 Algorithm::ScatterAllgather
@@ -1329,7 +1730,7 @@ impl std::str::FromStr for Algorithm {
             other => {
                 return Err(format!(
                     "unknown algorithm `{other}` \
-                     (auto|circulant|binomial|scatter-allgather|ring|bruck|gather-bcast)"
+                     (auto|circulant|circulant-combined|binomial|scatter-allgather|ring|bruck|gather-bcast)"
                 ))
             }
         })
@@ -1536,8 +1937,9 @@ pub fn allgatherv<T: Transport + ?Sized>(
 ) -> Result<Vec<Vec<u8>>, TransportError> {
     let p = t.size();
     let rank = t.rank();
-    let cutoff = t.cost_hint().latency_cutoff_bytes();
-    let algo = algo.resolve_allgatherv_with(cutoff, p, n, counts.iter().sum());
+    let requested = algo;
+    let hint = t.cost_hint();
+    let algo = algo.resolve_allgatherv_with(hint.latency_cutoff_bytes(), p, n, counts.iter().sum());
     if p > 1 {
         match algo {
             Algorithm::Circulant => t.warm_up()?,
@@ -1559,11 +1961,56 @@ pub fn allgatherv<T: Transport + ?Sized>(
         }
     }
     match algo {
-        Algorithm::Circulant => allgatherv_circulant(t, n, counts, mine),
+        Algorithm::Circulant => {
+            // Auto without a caller-chosen count: per-root α/β-balanced
+            // block counts from the irregular contribution sizes, so small
+            // roots stop paying the large roots' per-block α overhead.
+            if requested == Algorithm::Auto && n <= 1 && p > 1 {
+                let ns = segment::per_root_block_counts(hint, p, counts);
+                allgatherv_circulant_per_root(t, &ns, counts, mine)
+            } else {
+                allgatherv_circulant(t, n.max(1), counts, mine)
+            }
+        }
         Algorithm::Ring => super::generic_baselines::allgatherv_ring(t, counts, mine),
         Algorithm::Bruck => super::generic_baselines::allgatherv_bruck(t, counts, mine),
         Algorithm::GatherBcast => {
             super::generic_baselines::allgatherv_gather_bcast(t, counts, mine)
+        }
+        other => Err(cerr(format!(
+            "{other} is not an allgatherv algorithm (auto|circulant|ring|bruck|gather-bcast)"
+        ))),
+    }
+}
+
+/// [`allgatherv`] in virtual (size-only) mode: the same resolution —
+/// including the per-root auto-segmentation from the backend's
+/// [`Transport::cost_hint`] — driving the matching `_virtual` round
+/// loops, so the `p = 1152` sweeps can plot the per-root gains through
+/// the exact dispatch path that moves real bytes.
+pub fn allgatherv_virtual<T: Transport + ?Sized>(
+    t: &mut T,
+    algo: Algorithm,
+    n: usize,
+    counts: &[u64],
+) -> Result<(), TransportError> {
+    let p = t.size();
+    let requested = algo;
+    let hint = t.cost_hint();
+    let algo = algo.resolve_allgatherv_with(hint.latency_cutoff_bytes(), p, n, counts.iter().sum());
+    match algo {
+        Algorithm::Circulant => {
+            if requested == Algorithm::Auto && n <= 1 && p > 1 {
+                let ns = segment::per_root_block_counts(hint, p, counts);
+                allgatherv_circulant_per_root_virtual(t, &ns, counts)
+            } else {
+                allgatherv_circulant_virtual(t, n.max(1), counts)
+            }
+        }
+        Algorithm::Ring => super::generic_baselines::allgatherv_ring_virtual(t, counts),
+        Algorithm::Bruck => super::generic_baselines::allgatherv_bruck_virtual(t, counts),
+        Algorithm::GatherBcast => {
+            super::generic_baselines::allgatherv_gather_bcast_virtual(t, counts)
         }
         other => Err(cerr(format!(
             "{other} is not an allgatherv algorithm (auto|circulant|ring|bruck|gather-bcast)"
@@ -1629,18 +2076,19 @@ pub fn allreduce<T: Transport + ?Sized>(
     let (algo, n) = algo.resolve_allreduce_segmented(t.cost_hint(), p, n, bytes);
     if p > 1 {
         match algo {
-            // The circulant allreduce is reduce-to-0 + bcast-from-0: warm
-            // the root-independent circulant neighborhood once.
-            Algorithm::Circulant => t.warm_up()?,
+            // Both circulant allreduces run rooted-at-0 phases over the
+            // root-independent circulant neighborhood: warm it once.
+            Algorithm::Circulant | Algorithm::CirculantCombined => t.warm_up()?,
             Algorithm::Ring => t.warm_peers(&[(rank + 1) % p, (rank + p - 1) % p])?,
             _ => {}
         }
     }
     match algo {
         Algorithm::Circulant => allreduce_circulant(t, n, mine),
+        Algorithm::CirculantCombined => allreduce_circulant_combined(t, n, mine),
         Algorithm::Ring => super::generic_baselines::allreduce_ring(t, mine),
         other => Err(cerr(format!(
-            "{other} is not an allreduce algorithm (auto|circulant|ring)"
+            "{other} is not an allreduce algorithm (auto|circulant|circulant-combined|ring)"
         ))),
     }
 }
@@ -1657,9 +2105,10 @@ pub fn allreduce_virtual<T: Transport + ?Sized>(
     let (algo, n) = algo.resolve_allreduce_segmented(t.cost_hint(), t.size(), n, bytes);
     match algo {
         Algorithm::Circulant => allreduce_circulant_virtual(t, n, elems),
+        Algorithm::CirculantCombined => allreduce_circulant_combined_virtual(t, n, elems),
         Algorithm::Ring => super::generic_baselines::allreduce_ring_virtual(t, elems),
         other => Err(cerr(format!(
-            "{other} is not an allreduce algorithm (auto|circulant|ring)"
+            "{other} is not an allreduce algorithm (auto|circulant|circulant-combined|ring)"
         ))),
     }
 }
@@ -1682,9 +2131,18 @@ mod tests {
         assert_eq!(a.resolve_allgatherv(16, 4, 1 << 20), Algorithm::Circulant);
         assert_eq!(a.resolve_reduce(16, 4, 100), Algorithm::Binomial);
         assert_eq!(a.resolve_reduce(16, 4, 1 << 20), Algorithm::Circulant);
-        assert_eq!(a.resolve_allreduce(16, 4, 100), Algorithm::Circulant);
+        // Small vectors are latency-bound: the combined schedule's
+        // 2(⌈n/2⌉ - 1 + q) rounds beat the ring's 2(p - 1).
+        assert_eq!(a.resolve_allreduce(16, 4, 100), Algorithm::CirculantCombined);
+        // Huge vectors at moderate p: the bandwidth-optimal ring wins
+        // under the fallback α/β.
+        assert_eq!(a.resolve_allreduce(16, 1, 1 << 28), Algorithm::Ring);
         // Concrete algorithms pass through untouched.
         assert_eq!(Algorithm::Ring.resolve_bcast(16, 8, 10), Algorithm::Ring);
+        assert_eq!(
+            Algorithm::Circulant.resolve_allreduce(16, 4, 100),
+            Algorithm::Circulant
+        );
     }
 
     #[test]
@@ -1715,9 +2173,20 @@ mod tests {
         let (algo, n) = Algorithm::Auto.resolve_reduce_segmented(hint, 64, 1, 1 << 20);
         assert_eq!(algo, Algorithm::Circulant);
         assert!(n > 1);
+        // Allreduce Auto at this calibrated hint lands on the combined
+        // schedule with the odd nominal count 2n* - 1 (both fused phases
+        // then run n* superblocks).
         let (algo, n) = Algorithm::Auto.resolve_allreduce_segmented(hint, 64, 1, 1 << 20);
-        assert_eq!(algo, Algorithm::Circulant);
-        assert!(n > 1);
+        assert_eq!(algo, Algorithm::CirculantCombined);
+        assert_eq!(n, segment::combined_block_count(hint, 64, 1 << 20));
+        assert!(n > 1 && n % 2 == 1);
+        assert_eq!(
+            n.div_ceil(2),
+            segment::optimal_block_count(hint.alpha_s, hint.beta_s_per_byte, 6, 1 << 20)
+        );
+        // An explicit circulant allreduce still passes through unsegmented.
+        let (algo, n1) = Algorithm::Circulant.resolve_allreduce_segmented(hint, 64, 1, 1 << 20);
+        assert_eq!((algo, n1), (Algorithm::Circulant, 1));
         // p = 1 never segments.
         let (_, n) = Algorithm::Auto.resolve_bcast_segmented(hint, 1, 1, 1 << 20);
         assert_eq!(n, 1);
@@ -1728,6 +2197,7 @@ mod tests {
         for a in [
             Algorithm::Auto,
             Algorithm::Circulant,
+            Algorithm::CirculantCombined,
             Algorithm::Binomial,
             Algorithm::ScatterAllgather,
             Algorithm::Ring,
@@ -1763,6 +2233,22 @@ mod tests {
         assert_eq!(Algorithm::Circulant.reduce_round_count(16, 8), Some(11));
         assert_eq!(Algorithm::Binomial.reduce_round_count(16, 8), Some(4));
         assert_eq!(Algorithm::Circulant.allreduce_round_count(16, 8), Some(22));
+        // Combined schedule: 2(⌈8/2⌉ - 1 + 4) = 14 — vs 22 unfused.
+        assert_eq!(
+            Algorithm::CirculantCombined.allreduce_round_count(16, 8),
+            Some(14)
+        );
+        // The n - 1 + 2q bound, with equality at odd n.
+        for n in 1..=33usize {
+            let comb = Algorithm::CirculantCombined
+                .allreduce_round_count(16, n)
+                .unwrap();
+            assert!(comb <= n - 1 + 2 * 4);
+            if n % 2 == 1 {
+                assert_eq!(comb, n - 1 + 2 * 4);
+            }
+        }
+        assert_eq!(Algorithm::CirculantCombined.bcast_round_count(16, 8), None);
         assert_eq!(Algorithm::Ring.allreduce_round_count(16, 8), Some(30));
         assert_eq!(Algorithm::Bruck.reduce_round_count(16, 8), None);
     }

@@ -40,7 +40,10 @@ pub use allgather::{
 };
 pub use bcast::{bcast_binomial, bcast_circulant, bcast_scatter_allgather, Outcome};
 pub use hierarchical::{allgatherv_hierarchical, bcast_hierarchical};
-pub use reduce::{allreduce_circulant, allreduce_ring, reduce_binomial, reduce_circulant};
+pub use reduce::{
+    allreduce_circulant, allreduce_circulant_combined, allreduce_ring, reduce_binomial,
+    reduce_circulant,
+};
 pub use blocks::{allgather_block_count, bcast_block_count, BlockPartition};
 
 /// Map a transport-layer failure back to the Engine-era error type the

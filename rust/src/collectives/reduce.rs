@@ -8,7 +8,10 @@
 //! order — turns the n-block broadcast into a round-optimal n-block
 //! **reduction** to the root; the duality argument lives with the round
 //! loop in [`crate::collectives::generic::reduce_circulant`].
-//! [`allreduce_circulant`] chains reduce + broadcast (`2(n-1+q)` rounds).
+//! [`allreduce_circulant`] chains reduce + broadcast (`2(n-1+q)` rounds);
+//! [`allreduce_circulant_combined`] fuses the two phases over `⌈n/2⌉`
+//! superblocks (`2(⌈n/2⌉-1+q) ≤ n-1+2q` rounds — the companion paper's
+//! combined schedule).
 //! Baselines: binomial-tree reduce
 //! ([`crate::collectives::generic_baselines::reduce_binomial`]) and ring
 //! reduce-scatter + ring allgather allreduce
@@ -110,6 +113,29 @@ pub fn allreduce_circulant(
     Ok((result, out))
 }
 
+/// Combined-schedule allreduce (sum): the fused reduce+bcast over
+/// `⌈n/2⌉` superblocks, `2(⌈n/2⌉-1+⌈log₂p⌉) ≤ n-1+2⌈log₂p⌉` rounds —
+/// about half the round count of [`allreduce_circulant`] at the same
+/// nominal `n` (see
+/// [`crate::collectives::generic::allreduce_circulant_combined`]).
+pub fn allreduce_circulant_combined(
+    eng: &mut Engine,
+    n: usize,
+    contrib: &[Vec<f32>],
+    verify: bool,
+) -> Result<(Vec<f32>, Outcome), SimError> {
+    validate(eng.p(), contrib)?;
+    let (mut sums, out) = run_unified(eng, |mut t| {
+        let rank = t.rank();
+        generic::allreduce_circulant_combined(&mut t, n, &contrib[rank as usize])
+    })?;
+    let result = sums.swap_remove(0);
+    if verify {
+        verify_sum(&result, contrib, "combined allreduce")?;
+    }
+    Ok((result, out))
+}
+
 /// Baseline: binomial-tree reduction (whole vector per edge, `⌈log₂p⌉`
 /// rounds).
 pub fn reduce_binomial(
@@ -199,9 +225,42 @@ mod tests {
             let (b, _) = reduce_binomial(&mut e, 0, &c, true).unwrap();
             let mut e = eng(p);
             let (r, _) = allreduce_ring(&mut e, &c, true).unwrap();
+            let mut e = eng(p);
+            let (f, _) = allreduce_circulant_combined(&mut e, 4, &c, true).unwrap();
             for i in 0..32 {
                 assert!((a[i] - b[i]).abs() < 1e-3, "p={p} i={i}");
                 assert!((a[i] - r[i]).abs() < 1e-3, "p={p} i={i}");
+                assert!((a[i] - f[i]).abs() < 1e-3, "p={p} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn combined_allreduce_halves_the_round_count() {
+        for p in [2u64, 4, 7, 16, 17, 33] {
+            for n in [1usize, 2, 4, 7, 8, 15] {
+                let c = contribs(p, 4 * n.max(2));
+                let q = crate::sched::ceil_log2(p);
+                let mut e = eng(p);
+                let (_, comb) = allreduce_circulant_combined(&mut e, n, &c, true)
+                    .unwrap_or_else(|er| panic!("p={p} n={n}: {er}"));
+                assert_eq!(
+                    comb.rounds,
+                    2 * (n.div_ceil(2) - 1 + q),
+                    "p={p} n={n}: combined schedule round count"
+                );
+                assert!(
+                    comb.rounds <= n - 1 + 2 * q,
+                    "p={p} n={n}: must meet the n-1+2q budget"
+                );
+                let mut e = eng(p);
+                let (_, chain) = allreduce_circulant(&mut e, n, &c, true).unwrap();
+                assert!(
+                    comb.rounds <= chain.rounds,
+                    "p={p} n={n}: combined {} vs chained {}",
+                    comb.rounds,
+                    chain.rounds
+                );
             }
         }
     }

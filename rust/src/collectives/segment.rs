@@ -137,6 +137,103 @@ pub fn auto_block_count(hint: CostHint, p: u64, m: u64) -> usize {
     )
 }
 
+/// Predicted time of an `m`-byte **combined** (fused reduce + broadcast)
+/// circulant allreduce at nominal block count `n`
+/// ([`crate::collectives::generic::allreduce_circulant_combined`]): both
+/// phases run over `n' = ⌈n/2⌉` superblocks of `m/n'` bytes, so
+///
+/// ```text
+/// T_comb(n) = 2·(⌈n/2⌉ - 1 + q)·(α + β·m/⌈n/2⌉).
+/// ```
+///
+/// The round count `2(⌈n/2⌉ - 1 + q) ≤ n - 1 + 2q` (equality at odd `n`)
+/// is the paper's combined-schedule budget — each rank still moves the
+/// `~2m` bytes an allreduce must move, just in half as many twice-as-large
+/// messages as the unfused `2(n - 1 + q)`-round reduce+bcast chain.
+///
+/// # Examples
+///
+/// ```
+/// use nblock_bcast::collectives::segment::{combined_allreduce_time, predicted_time};
+/// // The combined schedule is exactly two broadcast phases at ⌈n/2⌉ blocks.
+/// let t = combined_allreduce_time(2.0e-6, 8.0e-11, 6, 1 << 20, 8);
+/// assert_eq!(t, 2.0 * predicted_time(2.0e-6, 8.0e-11, 6, 1 << 20, 4));
+/// ```
+pub fn combined_allreduce_time(alpha: f64, beta: f64, q: usize, m: u64, n: usize) -> f64 {
+    debug_assert!(n >= 1);
+    2.0 * predicted_time(alpha, beta, q, m, n.div_ceil(2))
+}
+
+/// The nominal block count minimizing [`combined_allreduce_time`].
+///
+/// `T_comb` depends on `n` only through the superblock count
+/// `n' = ⌈n/2⌉`, and per phase it has exactly the broadcast cost shape
+/// `(n' - 1 + q)·(α + β·m/n')` — so the optimal superblock count is the
+/// same closed form `n* = √(m·β·(q-1)/α)` of [`optimal_block_count`],
+/// lifted back to the nominal count as `n = 2n* - 1` (the *smaller* of
+/// the two nominal counts mapping to `n*`, matching the fewer-blocks
+/// tie-break; `2n*` costs identically). Pinned against a brute-force
+/// argmin in `rust/tests/segment.rs`.
+///
+/// # Examples
+///
+/// ```
+/// use nblock_bcast::collectives::segment::{
+///     combined_allreduce_time, optimal_combined_block_count,
+/// };
+/// let (alpha, beta) = (2.0e-6, 8.0e-11);
+/// let n = optimal_combined_block_count(alpha, beta, 6, 1 << 20);
+/// assert!(n % 2 == 1);
+/// let best = combined_allreduce_time(alpha, beta, 6, 1 << 20, n);
+/// assert!(best <= combined_allreduce_time(alpha, beta, 6, 1 << 20, n - 1));
+/// assert!(best <= combined_allreduce_time(alpha, beta, 6, 1 << 20, n + 2));
+/// ```
+pub fn optimal_combined_block_count(alpha: f64, beta: f64, q: usize, m: u64) -> usize {
+    2 * optimal_block_count(alpha, beta, q, m) - 1
+}
+
+/// [`optimal_combined_block_count`] driven by a backend's [`CostHint`] for
+/// a `p`-rank allreduce over `m` payload bytes — what
+/// [`crate::collectives::generic::Algorithm::resolve_allreduce_segmented`]
+/// uses to auto-segment `Auto` allreduces.
+pub fn combined_block_count(hint: CostHint, p: u64, m: u64) -> usize {
+    optimal_combined_block_count(
+        hint.alpha_s,
+        hint.beta_s_per_byte,
+        crate::sched::ceil_log2(p.max(1)),
+        m,
+    )
+}
+
+/// Per-root block counts for an irregular all-broadcast
+/// ([`crate::collectives::generic::allgatherv_circulant_per_root`]):
+/// instead of one global `n` — which slices a tiny contribution into as
+/// many blocks as the largest one, paying α-rounds for nothing — pick the
+/// per-phase optimum `n*` for the **largest** contribution and give every
+/// root the count that keeps its blocks near the same size target
+/// `b = m_max/n*`:
+///
+/// ```text
+/// n_j = clamp(⌈m_j / b⌉, 1, n*).
+/// ```
+///
+/// The round loop start-delays root `j` by `max(n) - n_j` rounds so all
+/// per-root sub-broadcasts share one global round-index sequence and
+/// finish together in `max_j(n_j) - 1 + q` rounds (the alignment argument
+/// lives in DESIGN.md).
+pub fn per_root_block_counts(hint: CostHint, p: u64, counts: &[u64]) -> Vec<usize> {
+    let m_max = counts.iter().copied().max().unwrap_or(0);
+    let n_star = auto_block_count(hint, p, m_max);
+    if m_max == 0 || n_star <= 1 {
+        return vec![1; counts.len()];
+    }
+    let b = m_max as f64 / n_star as f64;
+    counts
+        .iter()
+        .map(|&c| ((c as f64 / b).ceil() as usize).clamp(1, n_star))
+        .collect()
+}
+
 /// A CLI-facing segmentation choice: `auto` (α/β-optimal block count from
 /// the backend's cost hint) or an explicit count.
 ///
@@ -231,6 +328,58 @@ mod tests {
         assert_eq!(optimal_block_count(2.0e-6, 0.0, 6, 1 << 20), 1);
         // Huge m on a latency-light link hits the cap.
         assert_eq!(optimal_block_count(1.0e-9, 1.0e-9, 20, u64::MAX), MAX_AUTO_BLOCKS);
+    }
+
+    #[test]
+    fn combined_argmin_matches_brute_force_spot() {
+        // The dense grid lives in rust/tests/segment.rs; this is the smoke.
+        for (alpha, beta, q, m) in [
+            (2.0e-6, 8.0e-11, 6, 1u64 << 20),
+            (1.0e-6, 1.0e-9, 11, 1 << 24),
+            (5.0e-5, 1.0e-10, 4, 1 << 16),
+        ] {
+            let got = optimal_combined_block_count(alpha, beta, q, m);
+            let brute = (1..=2 * MAX_AUTO_BLOCKS)
+                .min_by(|&a, &b| {
+                    combined_allreduce_time(alpha, beta, q, m, a)
+                        .total_cmp(&combined_allreduce_time(alpha, beta, q, m, b))
+                })
+                .unwrap();
+            // 2n*-1 and 2n* are exact ties; the closed form picks the odd
+            // one, min_by the even one — the *times* must agree exactly.
+            assert!(got.abs_diff(brute) <= 1, "closed {got} vs brute {brute}");
+            assert!(
+                combined_allreduce_time(alpha, beta, q, m, got)
+                    <= combined_allreduce_time(alpha, beta, q, m, brute) * (1.0 + 1e-12)
+            );
+        }
+    }
+
+    #[test]
+    fn combined_degenerate_clamps() {
+        // Degenerate links clamp through the per-phase rules: q ≤ 1 or
+        // β = 0 → one block; the minimum nominal count is always ≥ 1.
+        assert_eq!(optimal_combined_block_count(2.0e-6, 8.0e-11, 1, 1 << 20), 1);
+        assert_eq!(optimal_combined_block_count(2.0e-6, 0.0, 6, 1 << 20), 1);
+        assert_eq!(optimal_combined_block_count(2.0e-6, 8.0e-11, 6, 0), 1);
+    }
+
+    #[test]
+    fn per_root_counts_track_contribution_sizes() {
+        let hint = CostHint {
+            alpha_s: 2.0e-6,
+            beta_s_per_byte: 8.0e-11,
+        };
+        let counts = [1u64 << 20, 1 << 19, 4096, 0];
+        let ns = per_root_block_counts(hint, 64, &counts);
+        let n_star = auto_block_count(hint, 64, 1 << 20);
+        assert_eq!(ns[0], n_star, "largest root gets the full n*");
+        assert!(ns[1] <= n_star && ns[1] >= n_star / 2, "half-size root ≈ n*/2: {ns:?}");
+        assert_eq!(*ns.iter().max().unwrap(), n_star);
+        assert_eq!(ns[3], 1, "empty contributions still need one (empty) block");
+        // All-empty and tiny inputs degenerate to one block per root.
+        assert_eq!(per_root_block_counts(hint, 64, &[0, 0]), vec![1, 1]);
+        assert_eq!(per_root_block_counts(hint, 64, &[10, 7]), vec![1, 1]);
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //! [`crate::collectives::generic`] resolve their schedules through.
 
 use super::recv::Scratch;
-use super::schedule::Schedule;
+use super::schedule::{AllgatherPlan, Schedule};
 use super::skips::Skips;
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
@@ -61,6 +61,12 @@ thread_local! {
         RefCell::new(HashMap::new());
     /// Thread-local skips: `(cache id, p) → skips`.
     static TLS_SKIPS: RefCell<HashMap<(u64, u64), Arc<Skips>>> = RefCell::new(HashMap::new());
+    /// Thread-local all-broadcast plans: `(cache id, p, rank) → plan` —
+    /// the per-root keying of the cache (one entry covers *all* `p`
+    /// roots for that rank; the underlying per-root schedules are the
+    /// shared `(p, rel)` `Arc`s).
+    static TLS_PLANS: RefCell<HashMap<(u64, u64, u64), Arc<AllgatherPlan>>> =
+        RefCell::new(HashMap::new());
 }
 
 /// Cache statistics (for the ablation bench). A snapshot of the atomic
@@ -82,6 +88,7 @@ struct Groups {
 }
 
 type Shard = RwLock<HashMap<(u64, u64), Arc<Schedule>>>;
+type PlanShard = RwLock<HashMap<(u64, u64), Arc<AllgatherPlan>>>;
 
 /// A thread-safe, size-capped schedule cache with a lock-free
 /// (thread-local) hit path. See the module docs for the design.
@@ -91,6 +98,10 @@ pub struct ScheduleCache {
     stats: crate::obs::metrics::CacheCounters,
     groups: RwLock<Groups>,
     shards: [Shard; SHARDS],
+    /// Per-root keying: `(p, rank) → ` [`AllgatherPlan`], sharded by rank.
+    /// A plan is `O(p)` `Arc` clones of the entries in `shards`, so the
+    /// two stores share every schedule's memory; eviction sweeps both.
+    plan_shards: [PlanShard; SHARDS],
 }
 
 /// The process-global cache the circulant collectives use: 16 communicator
@@ -118,6 +129,7 @@ impl ScheduleCache {
                 insertion_order: VecDeque::new(),
             }),
             shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            plan_shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
         }
     }
 
@@ -152,6 +164,33 @@ impl ScheduleCache {
         }
         let s = self.shared_schedule(p, rel);
         TLS_SCHED.with(|t| {
+            let mut t = t.borrow_mut();
+            if t.len() >= TLS_CAP {
+                t.clear();
+            }
+            t.insert(key, s.clone());
+        });
+        s
+    }
+
+    /// The per-root [`AllgatherPlan`] of `rank` in a `p`-communicator
+    /// (cached): one entry covers the rank's schedules for *all* `p` roots
+    /// of an all-broadcast/all-reduction, assembled as `Arc` clones of the
+    /// same shared `(p, rel)` entries [`ScheduleCache::schedule`] serves —
+    /// the broadcast, reduction and all-broadcast collectives share every
+    /// schedule's memory.
+    ///
+    /// Like the schedule lookup, the hit path takes **no lock**: after
+    /// this thread's first access the plan is served from the thread-local
+    /// front (pinned by the `plan_hit_path_takes_no_locks` test).
+    pub fn allgather_plan(&self, p: u64, rank: u64) -> Arc<AllgatherPlan> {
+        let key = (self.id, p, rank);
+        if let Some(s) = TLS_PLANS.with(|t| t.borrow().get(&key).cloned()) {
+            self.stats.hits.incr();
+            return s;
+        }
+        let s = self.shared_plan(p, rank);
+        TLS_PLANS.with(|t| {
             let mut t = t.borrow_mut();
             if t.len() >= TLS_CAP {
                 t.clear();
@@ -262,6 +301,52 @@ impl ScheduleCache {
         s
     }
 
+    /// Shared-store plan lookup/insert: one plan-shard read lock on a
+    /// shared hit; assembly from the shared schedule entries + one
+    /// plan-shard write lock on a miss.
+    fn shared_plan(&self, p: u64, rank: u64) -> Arc<AllgatherPlan> {
+        let shard = &self.plan_shards[shard_of(rank)];
+        {
+            let map = shard.read().unwrap();
+            if let Some(s) = map.get(&(p, rank)) {
+                let s = s.clone();
+                drop(map);
+                self.stats.hits.incr();
+                return s;
+            }
+        }
+        // Assemble outside any lock, going through the shared schedule
+        // store directly (not the TLS front) so a p-rank plan build does
+        // not flood this thread's front with p one-off entries. The per-
+        // root receive schedule of root j is the schedule of relative
+        // rank (rank - j) mod p; these lookups count toward the ordinary
+        // hit/miss statistics.
+        let skips = self.shared_skips(p);
+        let scheds: Vec<Arc<Schedule>> = (0..p)
+            .map(|j| {
+                let rel = if rank >= j { rank - j } else { rank + p - j };
+                self.shared_schedule(p, rel)
+            })
+            .collect();
+        let arc = Arc::new(AllgatherPlan::new(skips, rank, scheds));
+        use std::collections::hash_map::Entry;
+        // Directory read lock before the plan-shard write lock — the same
+        // groups → shards order every path uses; serve without inserting
+        // if the group was evicted while we assembled.
+        let groups = self.groups.read().unwrap();
+        let mut map = shard.write().unwrap();
+        if !groups.skips.contains_key(&p) {
+            return arc;
+        }
+        match map.entry((p, rank)) {
+            Entry::Occupied(e) => e.get().clone(),
+            Entry::Vacant(e) => {
+                e.insert(arc.clone());
+                arc
+            }
+        }
+    }
+
     /// Create the group for `p` if missing, evicting FIFO groups (and
     /// sweeping their schedules out of every shard) beyond the cap. Called
     /// with the directory write lock held; shard locks are taken strictly
@@ -277,6 +362,9 @@ impl ScheduleCache {
                 .expect("insertion order tracks every group");
             groups.skips.remove(&evict);
             for shard in &self.shards {
+                shard.write().unwrap().retain(|&(gp, _), _| gp != evict);
+            }
+            for shard in &self.plan_shards {
                 shard.write().unwrap().retain(|&(gp, _), _| gp != evict);
             }
             self.stats.evictions.incr();
@@ -406,6 +494,78 @@ mod tests {
         let b = c.schedule(33, 5);
         assert_eq!(*a, *b);
         assert!(c.stats().hits >= 1);
+    }
+
+    #[test]
+    fn plan_matches_direct_computation() {
+        use crate::sched::schedule::AllgatherSchedules;
+        let c = ScheduleCache::new(4);
+        for p in [4u64, 7, 17] {
+            let skips = Skips::new(p);
+            for r in 0..p {
+                let plan = c.allgather_plan(p, r);
+                let full = AllgatherSchedules::compute(&skips, r);
+                for j in 0..p {
+                    for k in 0..skips.q() {
+                        assert_eq!(plan.recv(j, k), full.recv[j as usize][k], "p={p} r={r} j={j} k={k}");
+                        assert_eq!(plan.send(j, k), full.send[j as usize][k], "p={p} r={r} j={j} k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_shares_schedule_memory() {
+        // The plan's per-root entries must be the *same allocations* as
+        // the shared (p, rel) schedule entries — per-root keying may not
+        // duplicate schedule storage.
+        let c = ScheduleCache::new(4);
+        let p = 17u64;
+        let rank = 5u64;
+        let plan = c.allgather_plan(p, rank);
+        for j in 0..p {
+            let rel = (rank + p - j) % p;
+            let shared = c.schedule(p, rel);
+            // recv side of root j == schedule of rel; compare via values
+            // (the Arcs are private) on every round index.
+            for k in 0..shared.q {
+                assert_eq!(plan.recv(j, k), shared.recv_at(k), "j={j} k={k}");
+            }
+        }
+        // Building the plan populated the shared schedule store, so the
+        // lookups above were all hits (no recomputation).
+        assert_eq!(c.stats().misses, p);
+    }
+
+    #[test]
+    fn plan_hit_path_takes_no_locks() {
+        // Same contract as `hit_path_takes_no_locks`, for the per-root
+        // keying: populate this thread's front, then hold EVERY internal
+        // write lock while looking the plan up again.
+        let c = ScheduleCache::new(4);
+        let a = c.allgather_plan(33, 5);
+        let _shard_guards: Vec<_> = c.shards.iter().map(|s| s.write().unwrap()).collect();
+        let _plan_guards: Vec<_> = c.plan_shards.iter().map(|s| s.write().unwrap()).collect();
+        let _dir_guard = c.groups.write().unwrap();
+        let b = c.allgather_plan(33, 5);
+        assert_eq!(a.r, b.r);
+        assert!(c.stats().hits >= 1);
+    }
+
+    #[test]
+    fn eviction_sweeps_plan_shards() {
+        // Evicting a group must clear its plans too, or they would pin
+        // every schedule Arc of the group past the size cap.
+        let c = ScheduleCache::new(1);
+        c.allgather_plan(16, 0);
+        c.allgather_plan(32, 0); // evicts group 16
+        assert_eq!(c.stats().evictions, 1);
+        let total: usize = c.plan_shards.iter().map(|s| s.read().unwrap().len()).sum();
+        assert_eq!(total, 1, "only group 32's plan may remain");
+        // Still correct after the sweep.
+        let plan = c.allgather_plan(16, 3);
+        assert_eq!(plan.r, 3);
     }
 
     #[test]

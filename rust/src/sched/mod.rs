@@ -57,7 +57,7 @@ pub mod verify;
 pub use cache::{CacheStats, ScheduleCache};
 pub use baseblock::{baseblock, canonical_decomposition};
 pub use recv::{recv_schedule, recv_schedule_into, recv_schedule_into_fast, RecvStats, Scratch};
-pub use schedule::{AllgatherSchedules, BcastPlan, RoundAction, Schedule};
+pub use schedule::{AllgatherPlan, AllgatherSchedules, BcastPlan, RoundAction, Schedule};
 pub use send::{send_schedule, send_schedule_into, SendStats};
 pub use skips::{ceil_log2, Skips, MAX_Q};
 pub use verify::{check_broadcast_delivery, check_conditions, verify_p, VerifyError, VerifyReport};

@@ -13,6 +13,7 @@
 use super::recv::{recv_schedule_into, RecvStats, Scratch};
 use super::send::{send_schedule_into, SendStats};
 use super::skips::{Skips, MAX_Q};
+use std::sync::Arc;
 
 /// The complete (phase-relative) schedule of one processor.
 ///
@@ -225,6 +226,64 @@ impl AllgatherSchedules {
     }
 }
 
+/// The *cached* form of [`AllgatherSchedules`]: one processor's per-root
+/// schedule set assembled from shared [`Arc<Schedule>`] entries instead of
+/// freshly computed vectors.
+///
+/// The receive schedule this rank runs for root `j` is exactly the
+/// broadcast schedule of relative rank `(r - j) mod p` — the same `(p,
+/// rel)` value the broadcast and reduction collectives resolve through
+/// [`crate::sched::ScheduleCache`]. Holding those entries as `Arc`s means
+/// an all-broadcast at `p` ranks shares the `p` distinct schedules of the
+/// communicator process-wide (`O(p)` pointers per rank) rather than
+/// recomputing and owning `O(p·q)` words per rank per call, and the send
+/// side needs no storage at all: by Condition 1 lifted to every root
+/// (pinned by `allgather_schedules_consistent`),
+/// `sendblocks[j][k] = recvblocks[(j - skip[k]) mod p][k]`.
+#[derive(Debug, Clone)]
+pub struct AllgatherPlan {
+    /// Processor rank.
+    pub r: u64,
+    /// `q = ⌈log₂ p⌉`.
+    pub q: usize,
+    skips: Arc<Skips>,
+    /// `scheds[j]`: the schedule of relative rank `(r - j) mod p` — the
+    /// receive schedule this rank runs for root `j`.
+    scheds: Vec<Arc<Schedule>>,
+}
+
+impl AllgatherPlan {
+    /// Assemble a plan from per-root shared schedules; `scheds[j]` must be
+    /// the schedule of relative rank `(r - j) mod p` (the
+    /// [`crate::sched::ScheduleCache`] builds plans this way from its
+    /// shared `(p, rel)` entries).
+    pub fn new(skips: Arc<Skips>, r: u64, scheds: Vec<Arc<Schedule>>) -> AllgatherPlan {
+        debug_assert_eq!(scheds.len() as u64, skips.p());
+        let q = skips.q();
+        AllgatherPlan {
+            r,
+            q,
+            skips,
+            scheds,
+        }
+    }
+
+    /// `recvblocks[j][k]`: the raw (phase-relative) block this rank
+    /// receives for root `j` in round-index `k`.
+    #[inline]
+    pub fn recv(&self, j: u64, k: usize) -> i64 {
+        self.scheds[j as usize].recv_at(k)
+    }
+
+    /// `sendblocks[j][k]`: the raw block this rank sends for root `j` in
+    /// round-index `k`, derived as `recvblocks[(j - skip[k]) mod p][k]` —
+    /// what the to-processor `(r + skip[k]) mod p` is scheduled to receive.
+    #[inline]
+    pub fn send(&self, j: u64, k: usize) -> i64 {
+        self.scheds[self.skips.from_proc(j, k) as usize].recv_at(k)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,6 +344,32 @@ mod tests {
                         t += 1;
                     }
                     assert_eq!(t, plan.num_rounds());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_plan_matches_allgather_schedules() {
+        // The Arc-sharing plan must be value-identical to the freshly
+        // computed Algorithm-2 schedule set on both sides (recv and the
+        // derived send).
+        for p in [4u64, 7, 17, 23] {
+            let skips = Arc::new(Skips::new(p));
+            for r in 0..p {
+                let scheds: Vec<Arc<Schedule>> = (0..p)
+                    .map(|j| {
+                        let rel = if r >= j { r - j } else { r + p - j };
+                        Arc::new(Schedule::compute(&skips, rel))
+                    })
+                    .collect();
+                let plan = AllgatherPlan::new(skips.clone(), r, scheds);
+                let full = AllgatherSchedules::compute(&skips, r);
+                for j in 0..p {
+                    for k in 0..skips.q() {
+                        assert_eq!(plan.recv(j, k), full.recv[j as usize][k], "p={p} r={r} j={j} k={k}");
+                        assert_eq!(plan.send(j, k), full.send[j as usize][k], "p={p} r={r} j={j} k={k}");
+                    }
                 }
             }
         }

@@ -146,6 +146,148 @@ fn reduce_and_allreduce_baselines_sum_correctly_everywhere() {
 }
 
 #[test]
+fn combined_allreduce_byte_identical_to_chained_everywhere() {
+    for &p in &PS {
+        for n in [1usize, 4, 7] {
+            // Irregular: elems is a multiple of neither n nor ⌈n/2⌉, so
+            // both partitions are ragged.
+            let elems = 3 * p as usize + 5;
+            // Integer-valued f32 contributions: every partial sum is an
+            // exactly-representable integer (≪ 2²⁴), so the combined
+            // schedule's different association order (⌈n/2⌉ superblocks
+            // vs n blocks) cannot perturb a single bit — the two paths
+            // must agree bitwise on every backend.
+            let contribs: Vec<Vec<f32>> = (0..p)
+                .map(|r| {
+                    (0..elems)
+                        .map(|i| ((r * 37 + i as u64 * 11) % 97) as f32)
+                        .collect()
+                })
+                .collect();
+            let reference = on_all_backends(p, "allreduce/circulant", |t| {
+                let mine = &contribs[t.rank() as usize];
+                allreduce(t, Algorithm::Circulant, n, mine)
+            });
+            let combined = on_all_backends(p, "allreduce/circulant-combined", |t| {
+                let mine = &contribs[t.rank() as usize];
+                allreduce(t, Algorithm::CirculantCombined, n, mine)
+            });
+            assert_eq!(combined, reference, "p={p} n={n}");
+            let mut want = vec![0f32; elems];
+            for c in &contribs {
+                for (w, v) in want.iter_mut().zip(c) {
+                    *w += v;
+                }
+            }
+            for (r, got) in combined.iter().enumerate() {
+                assert_eq!(got, &want, "p={p} n={n} rank {r}: wrong sum");
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_allgatherv_per_root_segmentation_delivers_everywhere() {
+    for &p in &PS {
+        // Wildly irregular contributions including an empty root: Auto
+        // with no caller-chosen block count resolves *per-root* block
+        // counts from the backend's α/β hint, so every root gets blocks
+        // proportional to its own contribution.
+        let counts: Vec<u64> = (0..p).map(|j| (j % 3) * 25_000 + (j % 2) * 13).collect();
+        let datas: Vec<Vec<u8>> = counts
+            .iter()
+            .enumerate()
+            .map(|(j, &c)| payload(c, j as u64 + 11))
+            .collect();
+        let out = on_all_backends(p, "allgatherv/auto-per-root", |t| {
+            let mine = &datas[t.rank() as usize];
+            allgatherv(t, Algorithm::Auto, 0, &counts, mine)
+        });
+        for all in &out {
+            assert_eq!(all, &datas, "p={p}");
+        }
+    }
+}
+
+#[test]
+fn combined_allreduce_round_structure_under_beta_only_cost() {
+    // The allreduce counterpart of the n·q-vs-(n-1+q) bcast comparison, in
+    // exact cost-model terms (α = 0, β = 1, m divisible by both block
+    // counts): the chained circulant allreduce pays 2(n-1+q) rounds of one
+    // n-th block, the combined schedule 2(⌈n/2⌉-1+q) ≤ n-1+2q rounds of
+    // one ⌈n/2⌉-th superblock, and the binomial tree pays n·q block
+    // transmissions for its *reduce half alone* — already more than the
+    // combined schedule's complete allreduce.
+    let (p, n) = (16u64, 8usize);
+    let q = ceil_log2(p);
+    let elems = 128usize;
+    let m = (elems * 4) as u64;
+    let contribs: Vec<Vec<f32>> = (0..p)
+        .map(|r| {
+            (0..elems)
+                .map(|i| ((r * 37 + i as u64 * 11) % 97) as f32)
+                .collect()
+        })
+        .collect();
+    let cost = CostModel::Flat {
+        alpha: 0.0,
+        beta: 1.0,
+    };
+    let run = |algo: Algorithm| {
+        let (_, stats) = run_sim(p, cost, |mut t| {
+            let mine = &contribs[t.rank() as usize];
+            allreduce(&mut t, algo, n, mine)
+        })
+        .unwrap_or_else(|e| panic!("{algo}: {e}"));
+        stats
+    };
+    let chained = run(Algorithm::Circulant);
+    assert_eq!(chained.rounds, 2 * (n - 1 + q));
+    let block = m as f64 / n as f64;
+    assert!(
+        (chained.time_s - chained.rounds as f64 * block).abs() < 1e-9,
+        "chained pays one n-th block per round, got {}",
+        chained.time_s
+    );
+    let comb = run(Algorithm::CirculantCombined);
+    let n_super = n.div_ceil(2);
+    assert_eq!(comb.rounds, 2 * (n_super - 1 + q));
+    assert!(comb.rounds <= n - 1 + 2 * q, "the n-1+2q round budget");
+    let superblock = m as f64 / n_super as f64;
+    assert!(
+        (comb.time_s - comb.rounds as f64 * superblock).abs() < 1e-9,
+        "combined pays one superblock per round, got {}",
+        comb.time_s
+    );
+    // The round-count helpers the CLI and benches print must agree.
+    assert_eq!(
+        Algorithm::CirculantCombined.allreduce_round_count(p, n),
+        Some(comb.rounds)
+    );
+    assert_eq!(
+        Algorithm::Circulant.allreduce_round_count(p, n),
+        Some(chained.rounds)
+    );
+    // Binomial reduce half: q whole-message rounds = n·q blocks.
+    let (_, bin) = run_sim(p, cost, |mut t| {
+        let mine = &contribs[t.rank() as usize];
+        reduce(&mut t, Algorithm::Binomial, 0, n, mine)
+    })
+    .unwrap();
+    assert!(
+        (bin.time_s - (n * q) as f64 * block).abs() < 1e-9,
+        "binomial reduce pays n·q block transmissions, got {}",
+        bin.time_s
+    );
+    assert!(
+        comb.time_s < bin.time_s,
+        "combined full allreduce ({}) must beat the binomial reduce half ({})",
+        comb.time_s,
+        bin.time_s
+    );
+}
+
+#[test]
 fn round_counts_circulant_meets_optimum_binomial_pays_n_log_p() {
     // The comparison the repo exists to make, in exact cost-model terms:
     // with a byte-proportional cost (α = 0, β = 1) and m divisible by n,

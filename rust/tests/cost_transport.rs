@@ -12,11 +12,14 @@
 //! the threshold.
 
 use nblock_bcast::collectives::generic::{
-    allgatherv_circulant_virtual, allgatherv_hierarchical_virtual, allreduce_circulant_virtual,
-    bcast_circulant_virtual, bcast_hierarchical_virtual, bcast_virtual, reduce_circulant_virtual,
-    Algorithm,
+    allgatherv_circulant_per_root_virtual, allgatherv_circulant_virtual,
+    allgatherv_hierarchical_virtual, allgatherv_rounds_per_root,
+    allreduce_circulant_combined_virtual, allreduce_circulant_virtual, bcast_circulant_virtual,
+    bcast_hierarchical_virtual, bcast_virtual, reduce_circulant_virtual, Algorithm,
 };
-use nblock_bcast::collectives::segment::predicted_time;
+use nblock_bcast::collectives::segment::{
+    combined_allreduce_time, combined_block_count, predicted_time,
+};
 use nblock_bcast::sched::ceil_log2;
 use nblock_bcast::transport::CostHint;
 use nblock_bcast::collectives::generic_baselines::{
@@ -127,7 +130,16 @@ fn p1152_gigabyte_virtual_sweep_every_algorithm() {
     let (_, s) = run_cost(P, cost, |mut t| reduce_binomial_virtual(&mut t, 0, elems)).unwrap();
     assert_eq!(Some(s.rounds), Algorithm::Binomial.reduce_round_count(P, n));
 
-    // --- Allreduce: circulant / ring -------------------------------------
+    // --- Per-root segmented Algorithm 2 on ragged contributions ----------
+    let ragged: Vec<u64> = (0..P).map(|j| (j % 3) * (GIB / P)).collect();
+    let ns: Vec<usize> = ragged.iter().map(|&c| 1 + (c / (GIB / P)) as usize).collect();
+    let (_, s) = run_cost(P, cost, |mut t| {
+        allgatherv_circulant_per_root_virtual(&mut t, &ns, &ragged)
+    })
+    .unwrap();
+    assert_eq!(s.rounds, allgatherv_rounds_per_root(P, &ns));
+
+    // --- Allreduce: circulant / combined / ring --------------------------
     let (_, s) = run_cost(P, cost, |mut t| {
         allreduce_circulant_virtual(&mut t, n, elems)
     })
@@ -136,6 +148,16 @@ fn p1152_gigabyte_virtual_sweep_every_algorithm() {
         Some(s.rounds),
         Algorithm::Circulant.allreduce_round_count(P, n)
     );
+
+    let (_, s) = run_cost(P, cost, |mut t| {
+        allreduce_circulant_combined_virtual(&mut t, n, elems)
+    })
+    .unwrap();
+    assert_eq!(
+        Some(s.rounds),
+        Algorithm::CirculantCombined.allreduce_round_count(P, n)
+    );
+    assert!(s.rounds <= n - 1 + 2 * ceil_log2(P));
 
     let (_, s) = run_cost(P, cost, |mut t| allreduce_ring_virtual(&mut t, elems)).unwrap();
     assert_eq!(Some(s.rounds), Algorithm::Ring.allreduce_round_count(P, n));
@@ -215,6 +237,78 @@ fn auto_segmentation_beats_single_block_by_the_predicted_ratio() {
     // And the ratio is substantial at this size: ≥ 2× is what makes
     // self-tuning worth it.
     assert!(achieved_ratio > 2.0, "speedup only {achieved_ratio:.3}×");
+}
+
+#[test]
+fn combined_allreduce_meets_round_budget_and_prediction_at_p64() {
+    // The acceptance gate for the combined schedule: at p = 64 the
+    // measured round count stays within n - 1 + 2⌈log₂p⌉ for every
+    // nominal n ≥ 8, and the achieved time at the auto-chosen count
+    // matches the closed-form prediction within 0.1%.
+    let p = 64u64;
+    let q = ceil_log2(p);
+    let model = CostModel::flat_default();
+    let hint = CostHint::from_model(&model);
+    let m = 1u64 << 20;
+    let elems = (m / 4) as usize;
+
+    for n in [8usize, 9, 16, 27, 33, 64] {
+        let (_, s) = run_cost(p, model, |mut t| {
+            allreduce_circulant_combined_virtual(&mut t, n, elems)
+        })
+        .unwrap();
+        assert_eq!(
+            Some(s.rounds),
+            Algorithm::CirculantCombined.allreduce_round_count(p, n),
+            "n={n}"
+        );
+        assert!(
+            s.rounds <= n - 1 + 2 * q,
+            "n={n}: {} rounds exceed the n-1+2q budget {}",
+            s.rounds,
+            n - 1 + 2 * q
+        );
+        // Versus the chained reduce+bcast at the *same* nominal n: about
+        // half the rounds (exactly c/2 + q at odd n, one fewer at even n).
+        let (_, c) = run_cost(p, model, |mut t| {
+            allreduce_circulant_virtual(&mut t, n, elems)
+        })
+        .unwrap();
+        assert_eq!(c.rounds, 2 * (n - 1 + q), "n={n}");
+        assert!(
+            s.rounds <= c.rounds / 2 + q,
+            "n={n}: combined {} vs chained {}",
+            s.rounds,
+            c.rounds
+        );
+        // In the latency-dominated regime ((n/2)·α > (q-1)·β·m/n, i.e.
+        // n ≳ 51 here) the halved start-up count wins outright.
+        if n >= 64 {
+            assert!(
+                s.time_s < c.time_s,
+                "n={n}: combined {} must beat chained {}",
+                s.time_s,
+                c.time_s
+            );
+        }
+    }
+
+    // Predicted-vs-achieved at the auto-chosen nominal count 2n* - 1: the
+    // engine prices rounds at ⌈m/⌈n/2⌉⌉-byte superblocks, the prediction
+    // uses the continuous m/⌈n/2⌉ — the gap is far below 0.1% here.
+    let n = combined_block_count(hint, p, m);
+    assert!(n > 1 && n % 2 == 1);
+    let (_, s) = run_cost(p, model, |mut t| {
+        allreduce_circulant_combined_virtual(&mut t, n, elems)
+    })
+    .unwrap();
+    assert_eq!(s.rounds, 2 * (n.div_ceil(2) - 1 + q));
+    let pred = combined_allreduce_time(hint.alpha_s, hint.beta_s_per_byte, q, m, n);
+    assert!(
+        (s.time_s / pred - 1.0).abs() < 1e-3,
+        "achieved {} vs predicted {pred}",
+        s.time_s
+    );
 }
 
 #[test]

@@ -6,7 +6,8 @@
 use nblock_bcast::bench_support::XorShift;
 use nblock_bcast::collectives::generic::{bcast, bcast_circulant, Algorithm};
 use nblock_bcast::collectives::segment::{
-    auto_block_count, optimal_block_count, predicted_time, Segment, MAX_AUTO_BLOCKS,
+    auto_block_count, combined_allreduce_time, optimal_block_count, per_root_block_counts,
+    predicted_time, Segment, MAX_AUTO_BLOCKS,
 };
 use nblock_bcast::sched::ceil_log2;
 use nblock_bcast::simulator::CostModel;
@@ -81,6 +82,125 @@ fn closed_form_matches_brute_force_across_grid() {
         check(alpha, beta, m, p);
     }
     assert!(checked > 400);
+}
+
+/// Brute-force argmin of the *combined* allreduce time over nominal
+/// `n ∈ [1, 2·4096]` — the smallest minimizer.
+fn brute_force_combined_argmin(alpha: f64, beta: f64, q: usize, m: u64) -> usize {
+    let mut best = 1usize;
+    let mut best_t = f64::INFINITY;
+    for n in 1..=(2 * MAX_AUTO_BLOCKS) {
+        let t = combined_allreduce_time(alpha, beta, q, m, n);
+        if t < best_t {
+            best = n;
+            best_t = t;
+        }
+    }
+    best
+}
+
+#[test]
+fn combined_closed_form_matches_brute_force_across_grid() {
+    // The combined-schedule n* derivation (2n* - 1 nominal blocks, both
+    // fused phases at n* superblocks) must land on a brute-force-optimal
+    // nominal count. The time depends on n only through ⌈n/2⌉, so the
+    // comparison happens in superblock space: the closed form's
+    // superblock count must land within ±1 of the brute minimizer's —
+    // and it must never predict a worse time.
+    use nblock_bcast::collectives::segment::optimal_combined_block_count;
+    let alphas = [1.0e-7, 2.0e-6, 5.0e-5];
+    let betas = [8.0e-11, 1.0e-9, 2.0e-8];
+    let ms = [1u64 << 12, 1 << 16, 1 << 20, (1 << 20) + 12345];
+    let ps = [2u64, 3, 17, 64, 1024, 36 * 32];
+    let mut checked = 0;
+    let mut check = |alpha: f64, beta: f64, m: u64, p: u64| {
+        let q = ceil_log2(p);
+        let got = optimal_combined_block_count(alpha, beta, q, m);
+        assert!(got % 2 == 1, "nominal count must be odd (fewer-blocks tie-break)");
+        let brute = brute_force_combined_argmin(alpha, beta, q, m);
+        assert!(brute % 2 == 1, "2n'-1 and 2n' tie; strict < keeps the odd one");
+        let (got_s, brute_s) = (got.div_ceil(2), brute.div_ceil(2));
+        // Only compare where the brute-force grid actually contains the
+        // optimum (the closed form may clamp at the cap).
+        if brute_s < MAX_AUTO_BLOCKS && got_s < MAX_AUTO_BLOCKS.min(m as usize) {
+            assert!(
+                got_s.abs_diff(brute_s) <= 1,
+                "α={alpha} β={beta} m={m} p={p}: closed {got} vs brute {brute}"
+            );
+            assert!(
+                combined_allreduce_time(alpha, beta, q, m, got)
+                    <= combined_allreduce_time(alpha, beta, q, m, brute) * (1.0 + 1e-12),
+                "α={alpha} β={beta} m={m} p={p}: closed form is not optimal"
+            );
+        }
+        checked += 1;
+    };
+    for &alpha in &alphas {
+        for &beta in &betas {
+            for &m in &ms {
+                for &p in &ps {
+                    check(alpha, beta, m, p);
+                }
+            }
+        }
+    }
+    let mut rng = XorShift::new(0xC0DE);
+    for _ in 0..200 {
+        let alpha = 10f64.powi(-(rng.range(5, 8) as i32)) * (1 + rng.below(9)) as f64;
+        let beta = 10f64.powi(-(rng.range(8, 12) as i32)) * (1 + rng.below(9)) as f64;
+        let m = rng.range(1, 1 << 22);
+        let p = rng.range(2, 1 << 14);
+        check(alpha, beta, m, p);
+    }
+    assert!(checked > 400);
+}
+
+#[test]
+fn per_root_block_counts_properties() {
+    // Randomized property checks on the per-root segmentation: counts are
+    // always in [1, n*(m_max)], monotone in the contribution size, the
+    // largest root gets exactly n*, and block sizes never exceed the
+    // uniform schedule's m_max/n* granularity.
+    let hint = CostHint::from_model(&CostModel::flat_default());
+    let mut rng = XorShift::new(0xBEEF);
+    for _ in 0..100 {
+        let p = rng.range(2, 200);
+        let m_max = rng.range(1, 1 << 24);
+        let counts: Vec<u64> = (0..p)
+            .map(|j| if j == 0 { m_max } else { rng.range(0, m_max) })
+            .collect();
+        let ns = per_root_block_counts(hint, p, &counts);
+        assert_eq!(ns.len(), counts.len());
+        let n_star = auto_block_count(hint, p, m_max);
+        assert_eq!(ns[0], n_star, "largest root gets the full n*");
+        let b = m_max as f64 / n_star as f64;
+        for (j, (&nj, &cj)) in ns.iter().zip(&counts).enumerate() {
+            assert!(nj >= 1 && nj <= n_star, "root {j}: n_j = {nj}");
+            // Granularity: a root's blocks are never (much) larger than
+            // the uniform block size b — each root fills at most n_j
+            // blocks of its own, sized c_j/n_j ≤ b (+1 for the ceil).
+            if nj < n_star {
+                assert!(
+                    cj as f64 / nj as f64 <= b + 1.0,
+                    "root {j}: c_j/n_j = {} exceeds b = {b}",
+                    cj as f64 / nj as f64
+                );
+            }
+        }
+        // Monotonicity: bigger contribution ⇒ no fewer blocks.
+        let mut order: Vec<usize> = (0..counts.len()).collect();
+        order.sort_by_key(|&j| counts[j]);
+        for w in order.windows(2) {
+            assert!(
+                ns[w[0]] <= ns[w[1]],
+                "counts {} ≤ {} but ns {} > {}",
+                counts[w[0]],
+                counts[w[1]],
+                ns[w[0]],
+                ns[w[1]]
+            );
+        }
+    }
 }
 
 #[test]
