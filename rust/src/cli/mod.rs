@@ -89,7 +89,13 @@ Tools:
                                                  (T: regular|irregular|degenerate)
     both accept --transport {sim,thread,tcp}: run the generic SPMD
     collective (real payload, verified) over that backend instead of the
-    cost-model comparison; with --transport they also accept --algo
+    cost-model comparison; transport runs accept --timeout SECS (per-rank
+    operation deadline, default 60), and bcast accepts --fault-plan SPEC
+    for deterministic fault injection (kill=R@T, sever=A-B, delay=R@T:MS,
+    corrupt=R@T, seed=N; comma-separable and replayable — severed links
+    reroute through the degraded-subgraph broadcast, kill/corrupt faults
+    end in a bounded-time structured error echoed with the replay spec);
+    with --transport they also accept --algo
     {auto,circulant,binomial,scatter-allgather,ring,bruck,gather-bcast}
     to pick the algorithm (default circulant; auto resolves from p, n,
     size and the backend's α/β hint — bcast supports
@@ -138,6 +144,38 @@ fn trace_arg(args: &Args) -> anyhow::Result<Option<&str>> {
     Ok(args.options.get("trace").map(String::as_str))
 }
 
+/// The `--timeout` option (whole seconds; default 60): the per-rank
+/// operation deadline on the point-to-point backends. Rejects a valueless
+/// or zero `--timeout` instead of silently running with the default.
+fn timeout_arg(args: &Args) -> anyhow::Result<std::time::Duration> {
+    if args.flags.iter().any(|f| f == "timeout") {
+        anyhow::bail!("--timeout needs a value in seconds");
+    }
+    let secs: u64 = match args.options.get("timeout") {
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--timeout: `{v}` is not a whole number of seconds"))?,
+        None => 60,
+    };
+    if secs == 0 {
+        anyhow::bail!("--timeout must be at least 1 second");
+    }
+    Ok(std::time::Duration::from_secs(secs))
+}
+
+/// The `--fault-plan` option (see
+/// [`crate::transport::fault::FaultPlan::parse`] for the spec syntax),
+/// rejecting a valueless `--fault-plan`.
+fn fault_plan_arg(args: &Args) -> anyhow::Result<Option<&str>> {
+    if args.flags.iter().any(|f| f == "fault-plan") {
+        anyhow::bail!(
+            "--fault-plan needs a value, e.g. kill=3@5, sever=1-4, delay=2@3:50, \
+             corrupt=0@7, seed=42 (comma-separable)"
+        );
+    }
+    Ok(args.options.get("fault-plan").map(String::as_str))
+}
+
 /// The cost-model comparison paths run on the centralized [`crate::simulator::Engine`],
 /// which has no per-rank rounds to record — reject `--trace` there
 /// instead of writing an empty file.
@@ -181,9 +219,17 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                     &args.get("algo", "circulant".to_string()),
                     segment.as_deref(),
                     trace_arg(&args)?,
+                    timeout_arg(&args)?,
+                    fault_plan_arg(&args)?,
                 ),
                 None => {
                     reject_untraceable(&args)?;
+                    if fault_plan_arg(&args)?.is_some() {
+                        anyhow::bail!(
+                            "--fault-plan needs a --transport backend (thread|tcp; \
+                             sim for sever-only plans)"
+                        );
+                    }
                     tools::bcast(
                         args.get("p", 64),
                         args.get("m", 1 << 20),
@@ -203,6 +249,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 backend.as_str(),
                 &args.get("algo", "circulant".to_string()),
                 trace_arg(&args)?,
+                timeout_arg(&args)?,
             ),
             None => {
                 reject_untraceable(&args)?;
@@ -223,6 +270,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 backend.as_str(),
                 &args.get("algo", "circulant".to_string()),
                 trace_arg(&args)?,
+                timeout_arg(&args)?,
             ),
             None => tools::reduce_transport(
                 args.get("p", 16),
@@ -232,6 +280,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 "sim",
                 &args.get("algo", "circulant".to_string()),
                 trace_arg(&args)?,
+                timeout_arg(&args)?,
             ),
         },
         "allreduce" => match transport_arg(&args)? {
@@ -242,6 +291,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 backend.as_str(),
                 &args.get("algo", "circulant".to_string()),
                 trace_arg(&args)?,
+                timeout_arg(&args)?,
             ),
             None => {
                 reject_untraceable(&args)?;

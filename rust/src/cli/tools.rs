@@ -433,6 +433,17 @@ fn backend_hint(backend: &str) -> crate::transport::CostHint {
 /// (`--transport {sim,thread,tcp}`) and algorithm (`--algo`): the *same*
 /// generic SPMD code on the lockstep simulator, per-rank OS threads, or
 /// localhost TCP sockets.
+///
+/// `timeout` is the per-rank operation deadline (`--timeout`, default
+/// 60 s); `fault_plan` is a [`crate::transport::fault::FaultPlan`] spec
+/// (`--fault-plan`, e.g. `kill=3@5`, `sever=1-4`, `seed=42`) executed by
+/// wrapping every rank's transport in a
+/// [`crate::transport::fault::FaultTransport`]. Severed links switch the
+/// run to the degraded-subgraph broadcast
+/// ([`crate::collectives::bcast_circulant_degraded`]); kill/corrupt
+/// faults are expected to surface as structured errors, which are printed
+/// with the replayable plan instead of failing the command.
+#[allow(clippy::too_many_arguments)]
 pub fn bcast_transport(
     p: u64,
     m: u64,
@@ -442,9 +453,13 @@ pub fn bcast_transport(
     algo: &str,
     segment: Option<&str>,
     trace: Option<&str>,
+    timeout: Duration,
+    fault_plan: Option<&str>,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
     use crate::collectives::segment::Segment;
+    use crate::sched::LinkMask;
+    use crate::transport::fault::{FaultAction, FaultPlan, FaultTransport};
     use crate::transport::Transport;
     if p == 0 {
         bail!("need at least one rank");
@@ -485,9 +500,45 @@ pub fn bcast_transport(
          transport `{backend}`, algorithm `{resolved}`{auto_note}",
         fmt_bytes(m)
     );
+    let fplan = match fault_plan {
+        Some(spec) => Some(std::sync::Arc::new(
+            FaultPlan::parse(spec, p).map_err(|e| anyhow::anyhow!("--fault-plan: {e}"))?,
+        )),
+        None => None,
+    };
+    let mask = fplan
+        .as_ref()
+        .map(|pl| LinkMask::from_edges(pl.severed_edges()))
+        .unwrap_or_default();
+    // Kill/corrupt faults make some rank fail by design; the run then
+    // *must* end in a bounded-time structured error, which the epilogue
+    // prints (with the replayable plan) instead of treating as a bug.
+    let expects_failure = fplan.as_ref().is_some_and(|pl| {
+        pl.actions().iter().any(|a| {
+            matches!(
+                a,
+                FaultAction::KillRank { .. } | FaultAction::CorruptFrame { .. }
+            )
+        })
+    });
+    if let Some(pl) = &fplan {
+        if !mask.is_empty() && resolved != Algorithm::Circulant {
+            bail!(
+                "--fault-plan with severed links needs the circulant algorithm \
+                 (degraded-subgraph reroute is circulant-only); got `{resolved}`"
+            );
+        }
+        if backend == "sim" && expects_failure {
+            bail!(
+                "kill/corrupt faults abort one rank, which stalls the lockstep \
+                 sim backend; use --transport thread or tcp"
+            );
+        }
+        println!("  fault plan : {pl}");
+    }
     let recorder = trace_recorder(trace, p);
     let t0 = std::time::Instant::now();
-    let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+    let run = run_over_backend(backend, p, timeout, |mut t| {
         if let Some(rec) = &recorder {
             crate::obs::attach(rec, t.rank());
         }
@@ -495,10 +546,33 @@ pub fn bcast_transport(
         // schedule uses (lazy-mesh TCP dials ahead of the first round;
         // no-op on sim/thread).
         let data = if t.rank() == root { Some(&payload[..]) } else { None };
-        let res = generic::bcast(t.as_mut(), resolved, root, n, m, data);
+        let res = match &fplan {
+            Some(plan) => {
+                let mut ft = FaultTransport::new(t, plan.clone(), timeout);
+                if mask.is_empty() {
+                    generic::bcast(&mut ft, resolved, root, n, m, data)
+                } else {
+                    crate::collectives::bcast_circulant_degraded(&mut ft, root, n, m, data, &mask)
+                }
+            }
+            None => generic::bcast(t.as_mut(), resolved, root, n, m, data),
+        };
         crate::obs::detach();
         res
-    })?;
+    });
+    let (results, sim_stats) = match run {
+        Ok(v) => v,
+        Err(e) if expects_failure => {
+            println!("  outcome    : bounded-time structured failure under the injected fault");
+            println!("               {e}");
+            println!(
+                "  replay     : --fault-plan '{}' reproduces this outcome deterministically",
+                fplan.as_ref().expect("expects_failure implies a plan")
+            );
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
     let wall = t0.elapsed().as_secs_f64();
     for (r, buf) in results.iter().enumerate() {
         if buf != &payload {
@@ -506,7 +580,18 @@ pub fn bcast_transport(
         }
     }
     println!("  delivery   : byte-exact at all {p} ranks");
-    if let Some(rounds) = resolved.bcast_round_count(p, n) {
+    if !mask.is_empty() {
+        let deg = crate::sched::DegradedBcastPlan::new(p, root, n, mask.clone())
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        println!(
+            "  degraded   : {} masked link(s) — {} cancelled deliveries patched by {} repair \
+             wave(s), {} total rounds",
+            mask.len(),
+            deg.cancelled_count(),
+            deg.waves().len(),
+            deg.num_rounds()
+        );
+    } else if let Some(rounds) = resolved.bcast_round_count(p, n) {
         println!("  rounds     : {rounds}");
     }
     println!("  wall time  : {}", fmt_time(wall));
@@ -521,6 +606,7 @@ pub fn bcast_transport(
 }
 
 /// `--transport`/`--algo` counterpart for the irregular allgatherv.
+#[allow(clippy::too_many_arguments)]
 pub fn allgatherv_transport(
     p: u64,
     m: u64,
@@ -529,6 +615,7 @@ pub fn allgatherv_transport(
     backend: &str,
     algo: &str,
     trace: Option<&str>,
+    timeout: Duration,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
     use crate::transport::Transport;
@@ -559,7 +646,7 @@ pub fn allgatherv_transport(
     );
     let recorder = trace_recorder(trace, p);
     let t0 = std::time::Instant::now();
-    let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+    let (results, sim_stats) = run_over_backend(backend, p, timeout, |mut t| {
         if let Some(rec) = &recorder {
             crate::obs::attach(rec, t.rank());
         }
@@ -623,6 +710,7 @@ fn check_sum(label: &str, got: &[f32], want: &[f32]) -> Result<()> {
 /// `--transport`/`--algo` counterpart for the n-block reduction: every
 /// rank contributes a deterministic f32 vector, the root's result is
 /// verified against the serial sum.
+#[allow(clippy::too_many_arguments)]
 pub fn reduce_transport(
     p: u64,
     elems: usize,
@@ -631,6 +719,7 @@ pub fn reduce_transport(
     backend: &str,
     algo: &str,
     trace: Option<&str>,
+    timeout: Duration,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
     use crate::transport::Transport;
@@ -653,7 +742,7 @@ pub fn reduce_transport(
     );
     let recorder = trace_recorder(trace, p);
     let t0 = std::time::Instant::now();
-    let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+    let (results, sim_stats) = run_over_backend(backend, p, timeout, |mut t| {
         if let Some(rec) = &recorder {
             crate::obs::attach(rec, t.rank());
         }
@@ -682,6 +771,7 @@ pub fn reduce_transport(
 
 /// `--transport`/`--algo` counterpart for the allreduce: every rank's
 /// result is verified against the serial sum.
+#[allow(clippy::too_many_arguments)]
 pub fn allreduce_transport(
     p: u64,
     elems: usize,
@@ -689,6 +779,7 @@ pub fn allreduce_transport(
     backend: &str,
     algo: &str,
     trace: Option<&str>,
+    timeout: Duration,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
     use crate::transport::Transport;
@@ -707,7 +798,7 @@ pub fn allreduce_transport(
     );
     let recorder = trace_recorder(trace, p);
     let t0 = std::time::Instant::now();
-    let (results, sim_stats) = run_over_backend(backend, p, Duration::from_secs(60), |mut t| {
+    let (results, sim_stats) = run_over_backend(backend, p, timeout, |mut t| {
         if let Some(rec) = &recorder {
             crate::obs::attach(rec, t.rank());
         }

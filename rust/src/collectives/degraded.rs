@@ -1,0 +1,320 @@
+//! Degraded-subgraph broadcast: the circulant schedule on a mesh with
+//! severed links.
+//!
+//! [`bcast_circulant_degraded`] runs the paper's Algorithm 1 round loop
+//! over a subgraph mesh described by a [`LinkMask`]: rounds whose
+//! `{rank ± skipₖ}` edge is masked are *cancelled* (both endpoints skip
+//! them — deterministically, with no metadata on the wire and no timeout
+//! burned), and the blocks those rounds would have delivered are patched
+//! in by the [`DegradedBcastPlan`] repair waves — extra rounds after the
+//! healthy `n - 1 + q` in which surviving relays forward the missing
+//! blocks over unmasked links, doubling coverage binomially per wave.
+//!
+//! Delivery is **byte-identical** to the healthy path (pinned by
+//! `rust/tests/faults.rs`): the subgraph only changes *which edges carry*
+//! each block and how many rounds the broadcast takes, never the bytes a
+//! rank assembles. With an empty mask the function *is* the healthy path
+//! (it delegates to [`bcast_circulant_into`]).
+//!
+//! Like everything in [`crate::collectives::generic`], this is SPMD: each
+//! rank derives the identical global plan from `(p, root, n, mask)` alone
+//! — a pure function, no coordination — and drives one
+//! [`Transport::sendrecv_into`] per round. Repair edges need not be
+//! circulant; the point-to-point backends connect them lazily.
+
+#![warn(missing_docs)]
+
+use super::blocks::BlockPartition;
+use super::generic::bcast_circulant_into;
+use crate::sched::{BcastPlan, DegradedBcastPlan, LinkMask};
+use crate::transport::{idle_round, BufferPool, Payload, SendSpec, Transport, TransportError};
+
+fn cerr(msg: String) -> TransportError {
+    TransportError::Collective(msg)
+}
+
+/// Broadcast `m` bytes from `root` as `n` blocks over the subgraph mesh
+/// with `mask` severed, in `n - 1 + ⌈log₂p⌉` base rounds plus one round
+/// per repair wave. Every rank returns the reassembled message,
+/// byte-identical to the healthy broadcast.
+///
+/// Fails with a structured [`TransportError::Collective`] if the mask
+/// disconnects a rank from every holder of some block (see
+/// [`crate::sched::DegradedError`]) — a plan-time error, never a hang.
+pub fn bcast_circulant_degraded<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    m: u64,
+    data: Option<&[u8]>,
+    mask: &LinkMask,
+) -> Result<Vec<u8>, TransportError> {
+    let mut pool = BufferPool::default();
+    let mut out = Vec::new();
+    bcast_circulant_degraded_into(t, root, n, m, data, mask, &mut pool, &mut out)?;
+    Ok(out)
+}
+
+/// [`bcast_circulant_degraded`] with caller-owned storage, mirroring
+/// [`bcast_circulant_into`]: the message lands in `out` and block buffers
+/// are drawn from and recycled into `pool`.
+#[allow(clippy::too_many_arguments)]
+pub fn bcast_circulant_degraded_into<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    m: u64,
+    data: Option<&[u8]>,
+    mask: &LinkMask,
+    pool: &mut BufferPool,
+    out: &mut Vec<u8>,
+) -> Result<(), TransportError> {
+    if mask.is_empty() {
+        return bcast_circulant_into(t, root, n, m, data, pool, out);
+    }
+    let p = t.size();
+    let rank = t.rank();
+    if root >= p {
+        return Err(cerr(format!("root {root} out of range (p = {p})")));
+    }
+    if n == 0 {
+        return Err(cerr("need at least one block".into()));
+    }
+    if let Some(d) = data {
+        if d.len() as u64 != m {
+            return Err(cerr(format!("data length {} != m {m}", d.len())));
+        }
+    }
+    if rank == root && data.is_none() {
+        return Err(cerr(format!("root {root} must supply the payload")));
+    }
+    let part = BlockPartition::new(m, n);
+    if p == 1 {
+        out.clear();
+        out.extend_from_slice(data.expect("validated above"));
+        return Ok(());
+    }
+    // Every rank derives the identical degraded plan — cancellations and
+    // repair waves — from `(p, root, n, mask)` alone, no communication.
+    let deg = DegradedBcastPlan::new(p, root, n, mask.clone()).map_err(|e| cerr(e.to_string()))?;
+    let cache = crate::sched::cache::global();
+    let skips = cache.skips(p);
+    let rel = (rank + p - root) % p;
+    let plan = BcastPlan::new((*cache.schedule(p, rel)).clone(), n);
+    let mut bufs: Vec<Option<Vec<u8>>> = vec![None; n];
+    // Base rounds: the healthy round loop with cancelled deliveries
+    // suppressed on both endpoints.
+    for round in 0..plan.num_rounds() {
+        crate::obs::set_round(round as u64);
+        let a = plan.action(round);
+        let to_rel = skips.to_proc(rel, a.k);
+        let to_abs = (to_rel + root) % p;
+        let from_rel = skips.from_proc(rel, a.k);
+        let expect = match a.recv_block {
+            Some(b) if rank != root && !deg.is_cancelled(round, rank) => Some(b),
+            _ => None,
+        };
+        let recv_from = expect.map(|_| (from_rel + root) % p);
+        let mut recv_slot = pool.get();
+        // Never send to the root, and skip exactly the sends whose
+        // receiver is not waiting (masked edge, or this rank was starved
+        // of the block upstream — `is_cancelled` covers both).
+        let send = match a.send_block {
+            Some(sb) if to_rel != 0 && !deg.is_cancelled(round, to_abs) => {
+                let payload = if rank == root {
+                    Payload::Bytes(&data.expect("validated above")[part.range(sb)])
+                } else {
+                    Payload::Bytes(bufs[sb].as_deref().ok_or_else(|| {
+                        cerr(format!(
+                            "rank {rank} round {round}: uncancelled send of block {sb} not held"
+                        ))
+                    })?)
+                };
+                Some(SendSpec {
+                    to: to_abs,
+                    tag: sb as u64,
+                    data: payload,
+                })
+            }
+            _ => None,
+        };
+        let got = t.sendrecv_into(send, recv_from, &mut recv_slot)?;
+        match (got, expect) {
+            (None, None) => pool.put(recv_slot),
+            (Some(tag), Some(blk)) => {
+                check_block(rank, round, tag, recv_slot.len() as u64, blk, &part)?;
+                bufs[blk] = Some(recv_slot);
+            }
+            (Some(tag), None) => {
+                return Err(cerr(format!(
+                    "rank {rank} round {round}: unexpected message (block {tag})"
+                )))
+            }
+            (None, Some(blk)) => {
+                return Err(cerr(format!(
+                    "rank {rank} round {round}: scheduled block {blk} never arrived"
+                )))
+            }
+        }
+    }
+    // Repair waves: one extra round per wave; each rank sends at most one
+    // block and receives at most one (the plan's one-ported discipline).
+    for (w, wave) in deg.waves().iter().enumerate() {
+        let round = deg.base_rounds + w;
+        crate::obs::set_round(round as u64);
+        let my_send = wave.iter().find(|r| r.from == rank);
+        let my_recv = wave.iter().find(|r| r.to == rank);
+        if my_send.is_none() && my_recv.is_none() {
+            idle_round(t)?;
+            continue;
+        }
+        let send = match my_send {
+            Some(r) => {
+                let payload = if rank == root {
+                    Payload::Bytes(&data.expect("validated above")[part.range(r.block)])
+                } else {
+                    Payload::Bytes(bufs[r.block].as_deref().ok_or_else(|| {
+                        cerr(format!(
+                            "rank {rank} wave {w}: repair send of block {} not held",
+                            r.block
+                        ))
+                    })?)
+                };
+                Some(SendSpec {
+                    to: r.to,
+                    tag: r.block as u64,
+                    data: payload,
+                })
+            }
+            None => None,
+        };
+        let mut recv_slot = pool.get();
+        let got = t.sendrecv_into(send, my_recv.map(|r| r.from), &mut recv_slot)?;
+        match (got, my_recv) {
+            (None, None) => pool.put(recv_slot),
+            (Some(tag), Some(r)) => {
+                check_block(rank, round, tag, recv_slot.len() as u64, r.block, &part)?;
+                bufs[r.block] = Some(recv_slot);
+            }
+            (Some(tag), None) => {
+                return Err(cerr(format!(
+                    "rank {rank} wave {w}: unexpected message (block {tag})"
+                )))
+            }
+            (None, Some(r)) => {
+                return Err(cerr(format!(
+                    "rank {rank} wave {w}: repair block {} never arrived",
+                    r.block
+                )))
+            }
+        }
+    }
+    crate::obs::clear_round();
+    out.clear();
+    out.reserve(m as usize);
+    if rank == root {
+        out.extend_from_slice(data.expect("validated above"));
+    } else {
+        for (i, buf) in bufs.iter().enumerate() {
+            let b = buf
+                .as_deref()
+                .ok_or_else(|| cerr(format!("rank {rank}: missing block {i}")))?;
+            out.extend_from_slice(b);
+        }
+    }
+    for buf in bufs.into_iter().flatten() {
+        pool.put(buf);
+    }
+    if rank != root {
+        if let Some(d) = data {
+            if out != d {
+                return Err(cerr(format!(
+                    "rank {rank}: reassembled payload differs from the reference"
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Determinacy check for one delivered frame: exactly the planned block,
+/// carrying exactly its partition size.
+fn check_block(
+    rank: u64,
+    round: usize,
+    tag: u64,
+    got_len: u64,
+    blk: usize,
+    part: &BlockPartition,
+) -> Result<(), TransportError> {
+    if tag != blk as u64 {
+        return Err(cerr(format!(
+            "rank {rank} round {round}: planned block {blk}, wire carried {tag}"
+        )));
+    }
+    let want = part.size(blk);
+    if got_len != want {
+        return Err(cerr(format!(
+            "rank {rank} round {round}: block {blk} has {got_len} bytes, planned {want}"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::thread::run_threads;
+    use std::time::Duration;
+
+    fn msg(m: usize) -> Vec<u8> {
+        (0..m as u32).map(|i| (i.wrapping_mul(31) % 251) as u8).collect()
+    }
+
+    #[test]
+    fn severed_edge_still_delivers_byte_identical() {
+        let reference = msg(977);
+        for p in [4u64, 7, 16] {
+            for (a, b) in [(1u64, 2u64), (0, 1)] {
+                let mask = LinkMask::from_edges([(a, b % p)]);
+                let want = reference.clone();
+                let out = run_threads(p, Duration::from_secs(20), |mut t| {
+                    let data = if t.rank() == 0 { Some(&want[..]) } else { None };
+                    bcast_circulant_degraded(&mut t, 0, 3, want.len() as u64, data, &mask)
+                })
+                .unwrap_or_else(|e| panic!("p={p} sever {a}-{b}: {e}"));
+                for (r, o) in out.iter().enumerate() {
+                    assert_eq!(o, &reference, "p={p} sever {a}-{b} rank {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_mask_delegates_to_healthy_path() {
+        let reference = msg(256);
+        let mask = LinkMask::new();
+        let out = run_threads(5, Duration::from_secs(10), |mut t| {
+            let data = if t.rank() == 2 { Some(&reference[..]) } else { None };
+            bcast_circulant_degraded(&mut t, 2, 2, reference.len() as u64, data, &mask)
+        })
+        .unwrap();
+        assert!(out.iter().all(|o| o == &reference));
+    }
+
+    #[test]
+    fn disconnecting_mask_is_a_plan_time_error() {
+        let p = 4u64;
+        let mask = LinkMask::from_edges((0..p).filter(|&r| r != 3).map(|r| (r, 3)));
+        let reference = msg(64);
+        let err = run_threads(p, Duration::from_secs(10), |mut t| {
+            let data = if t.rank() == 0 { Some(&reference[..]) } else { None };
+            bcast_circulant_degraded(&mut t, 0, 2, reference.len() as u64, data, &mask)
+        })
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("disconnects"),
+            "want a structured plan-time error, got {err}"
+        );
+    }
+}

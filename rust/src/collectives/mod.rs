@@ -26,6 +26,7 @@ use crate::transport::cost::{run_cost, CostTransport};
 use crate::transport::TransportError;
 
 pub mod allgather;
+pub mod degraded;
 pub mod generic;
 pub mod generic_baselines;
 pub mod hierarchical;
@@ -45,6 +46,7 @@ pub use reduce::{
     reduce_circulant,
 };
 pub use blocks::{allgather_block_count, bcast_block_count, BlockPartition};
+pub use degraded::{bcast_circulant_degraded, bcast_circulant_degraded_into};
 
 /// Map a transport-layer failure back to the Engine-era error type the
 /// wrapper APIs expose.

@@ -1,0 +1,526 @@
+//! Degraded topologies: broadcast schedules over a subgraph mesh.
+//!
+//! A [`LinkMask`] names the undirected links that are *down* (severed by a
+//! fault, masked by a test, cut by a partial network partition). The
+//! circulant broadcast schedule assumes the full `{rank ± skipₖ}` edge set;
+//! when an edge it wants is masked, the scheduled transmission cannot
+//! happen and — because later rounds forward what earlier rounds delivered
+//! — the loss *cascades*: every block the starved rank would have relayed
+//! is now missing downstream too.
+//!
+//! [`DegradedBcastPlan`] repairs this deterministically and with **no
+//! communication**, in the same spirit as the healthy schedules: every
+//! rank, knowing only `(p, root, n, mask)`, runs the identical global
+//! possession simulation (the Theorem-1 dynamics of
+//! [`super::verify::check_broadcast_delivery`] with masked and
+//! starved transmissions suppressed) and derives
+//!
+//! 1. the set of **cancelled** base-round deliveries — consulted by both
+//!    endpoints, so a sender skips exactly the sends its receiver is not
+//!    waiting for (no metadata on the wire, no timeouts burned), and
+//! 2. a sequence of **repair waves** appended after the `n - 1 + q` base
+//!    rounds: per wave, a deterministic greedy one-ported matching sends
+//!    each still-missing block from its lowest-ranked surviving holder to
+//!    a missing rank over any unmasked link. Holders double wave over
+//!    wave — a binomial-tree patch per missing block, rooted at the
+//!    relay(s) that survived.
+//!
+//! The plan is a pure function of `(p, root, n, mask)`: every rank
+//! computes byte-identical waves, so the degraded execution needs no
+//! coordination and delivery is byte-identical to the healthy path
+//! (pinned by `rust/tests/faults.rs`). If the mask actually disconnects a
+//! rank from every eventual holder, [`DegradedBcastPlan::new`] fails with
+//! a structured [`DegradedError`] instead of scheduling a hang.
+
+use super::recv::Scratch;
+use super::schedule::{BcastPlan, Schedule};
+use super::skips::Skips;
+
+/// A set of severed undirected links between absolute ranks.
+///
+/// Stored normalized (`(min, max)`, sorted, deduplicated) so lookup is a
+/// binary search and two masks built from the same edges in any order
+/// compare equal.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LinkMask {
+    edges: Vec<(u64, u64)>,
+}
+
+impl LinkMask {
+    /// The empty mask (healthy mesh).
+    pub fn new() -> LinkMask {
+        LinkMask::default()
+    }
+
+    /// Build from undirected edges; order and orientation are irrelevant.
+    pub fn from_edges(edges: impl IntoIterator<Item = (u64, u64)>) -> LinkMask {
+        let mut mask = LinkMask::new();
+        for (a, b) in edges {
+            mask.sever(a, b);
+        }
+        mask
+    }
+
+    /// Sever the undirected link `{a, b}`.
+    pub fn sever(&mut self, a: u64, b: u64) {
+        assert_ne!(a, b, "cannot sever a self-link");
+        let e = (a.min(b), a.max(b));
+        if let Err(i) = self.edges.binary_search(&e) {
+            self.edges.insert(i, e);
+        }
+    }
+
+    /// Whether the undirected link `{a, b}` is severed.
+    #[inline]
+    pub fn is_severed(&self, a: u64, b: u64) -> bool {
+        self.edges.binary_search(&(a.min(b), a.max(b))).is_ok()
+    }
+
+    /// No links are severed.
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Number of severed links.
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// The severed links, normalized and sorted.
+    pub fn edges(&self) -> &[(u64, u64)] {
+        &self.edges
+    }
+}
+
+/// One repair transmission: `from` (which holds `block`) sends it to `to`
+/// over an unmasked link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Repair {
+    /// Sending rank (absolute); holds `block` when the wave runs.
+    pub from: u64,
+    /// Receiving rank (absolute); missing `block` until the wave runs.
+    pub to: u64,
+    /// The block index delivered.
+    pub block: usize,
+}
+
+/// Why a degraded plan could not be built.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DegradedError {
+    /// Some `(rank, block)` deficits cannot be repaired: every link from a
+    /// holder to the missing rank is masked (the mask disconnects it).
+    Unroutable {
+        /// Mesh size.
+        p: u64,
+        /// Broadcast root.
+        root: u64,
+        /// The unrepairable `(rank, block)` pairs.
+        stuck: Vec<(u64, usize)>,
+    },
+    /// A plan replay found an inconsistency (used by
+    /// [`DegradedBcastPlan::verify`]; a correct construction never
+    /// produces this).
+    Inconsistent {
+        /// Mesh size.
+        p: u64,
+        /// Broadcast root.
+        root: u64,
+        /// What the replay tripped over.
+        what: String,
+    },
+}
+
+impl std::fmt::Display for DegradedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DegradedError::Unroutable { p, root, stuck } => write!(
+                f,
+                "degraded broadcast p={p} root={root}: mask disconnects {} (rank, block) deficits, first {:?}",
+                stuck.len(),
+                &stuck[..stuck.len().min(4)]
+            ),
+            DegradedError::Inconsistent { p, root, what } => {
+                write!(f, "degraded broadcast p={p} root={root}: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DegradedError {}
+
+/// The deterministic degraded broadcast plan: base-round cancellations
+/// plus repair waves. See the module docs for the construction.
+#[derive(Debug, Clone)]
+pub struct DegradedBcastPlan {
+    /// Mesh size.
+    pub p: u64,
+    /// Broadcast root (absolute rank).
+    pub root: u64,
+    /// Block count.
+    pub n: usize,
+    /// The masked links the plan routes around.
+    pub mask: LinkMask,
+    /// Healthy-schedule rounds (`n - 1 + q`).
+    pub base_rounds: usize,
+    /// Cancelled base deliveries as sorted `(round, receiver_abs)` pairs:
+    /// the scheduled transmission into `receiver_abs` at `round` does not
+    /// happen (its edge is masked, or its sender was starved upstream).
+    cancelled: Vec<(usize, u64)>,
+    /// Repair waves appended after the base rounds; within a wave every
+    /// rank sends at most one block and receives at most one block.
+    waves: Vec<Vec<Repair>>,
+}
+
+impl DegradedBcastPlan {
+    /// Build the plan for broadcasting `n` blocks from `root` over `p`
+    /// ranks with `mask` severed. Pure function of its arguments — every
+    /// rank computes the identical plan. `O(p·(n + q) + D·p)` for `D`
+    /// total deficits, so intended for up to a few thousand ranks (the
+    /// scale the point-to-point backends run at).
+    pub fn new(p: u64, root: u64, n: usize, mask: LinkMask) -> Result<DegradedBcastPlan, DegradedError> {
+        assert!(n >= 1, "need at least one block");
+        assert!(root < p, "root {root} out of range (p = {p})");
+        let skips = Skips::new(p);
+        let q = skips.q();
+        let abs = |rel: u64| (rel + root) % p;
+        let mut plan = DegradedBcastPlan {
+            p,
+            root,
+            n,
+            mask,
+            base_rounds: 0,
+            cancelled: Vec::new(),
+            waves: Vec::new(),
+        };
+        if p == 1 || q == 0 {
+            return Ok(plan);
+        }
+        // Per-relative-rank round plans (the healthy schedule, root-shifted
+        // exactly as the executor shifts it).
+        let mut scratch = Scratch::new();
+        let plans: Vec<BcastPlan> = (0..p)
+            .map(|rel| {
+                let (s, _, _) = Schedule::compute_with(&skips, rel, &mut scratch);
+                BcastPlan::new(s, n)
+            })
+            .collect();
+        plan.base_rounds = plans[0].num_rounds();
+        // Global possession simulation with masked/starved sends
+        // suppressed. `have[rel][blk]`; the root (relative 0) starts with
+        // everything.
+        let mut have = vec![vec![false; n]; p as usize];
+        have[0] = vec![true; n];
+        let mut recvs: Vec<(u64, usize)> = Vec::new();
+        for t in 0..plan.base_rounds {
+            recvs.clear();
+            for rel in 0..p {
+                let a = plans[rel as usize].action(t);
+                let to_rel = skips.to_proc(rel, a.k);
+                if to_rel == 0 {
+                    continue; // never send to the root
+                }
+                if let Some(sb) = a.send_block {
+                    debug_assert_eq!(
+                        plans[to_rel as usize].action(t).recv_block,
+                        Some(sb),
+                        "schedule determinacy (condition 1)"
+                    );
+                    if plan.mask.is_severed(abs(rel), abs(to_rel)) || !have[rel as usize][sb] {
+                        plan.cancelled.push((t, abs(to_rel)));
+                    } else {
+                        recvs.push((to_rel, sb));
+                    }
+                }
+            }
+            for &(to, blk) in &recvs {
+                have[to as usize][blk] = true;
+            }
+        }
+        plan.cancelled.sort_unstable();
+        // Deficits in absolute terms, sorted for deterministic matching.
+        let mut deficits: Vec<(u64, usize)> = Vec::new();
+        for rel in 0..p {
+            for b in 0..n {
+                if !have[rel as usize][b] {
+                    deficits.push((abs(rel), b));
+                }
+            }
+        }
+        deficits.sort_unstable();
+        // Per-block sorted holder lists (absolute ranks).
+        let mut holders: Vec<Vec<u64>> = vec![Vec::new(); n];
+        for rel in 0..p {
+            for (b, h) in holders.iter_mut().enumerate() {
+                if have[rel as usize][b] {
+                    h.push(abs(rel));
+                }
+            }
+        }
+        for h in &mut holders {
+            h.sort_unstable();
+        }
+        // Greedy one-ported repair waves: per wave, each still-missing
+        // (rank, block) takes the lowest-ranked holder that is not already
+        // sending this wave and whose link to it is unmasked; a rank
+        // receives at most once per wave. Receivers become holders for the
+        // next wave, so coverage doubles binomially.
+        let mut sending = vec![false; p as usize];
+        let mut receiving = vec![false; p as usize];
+        while !deficits.is_empty() {
+            sending.iter_mut().for_each(|s| *s = false);
+            receiving.iter_mut().for_each(|s| *s = false);
+            let mut wave: Vec<Repair> = Vec::new();
+            let mut remaining: Vec<(u64, usize)> = Vec::new();
+            for &(to, block) in &deficits {
+                if receiving[to as usize] {
+                    remaining.push((to, block));
+                    continue;
+                }
+                let from = holders[block]
+                    .iter()
+                    .copied()
+                    .find(|&h| !sending[h as usize] && !plan.mask.is_severed(h, to));
+                match from {
+                    Some(from) => {
+                        sending[from as usize] = true;
+                        receiving[to as usize] = true;
+                        wave.push(Repair { from, to, block });
+                    }
+                    None => remaining.push((to, block)),
+                }
+            }
+            if wave.is_empty() {
+                return Err(DegradedError::Unroutable {
+                    p,
+                    root,
+                    stuck: remaining,
+                });
+            }
+            for r in &wave {
+                let h = &mut holders[r.block];
+                if let Err(i) = h.binary_search(&r.to) {
+                    h.insert(i, r.to);
+                }
+            }
+            plan.waves.push(wave);
+            deficits = remaining;
+        }
+        Ok(plan)
+    }
+
+    /// Whether the scheduled base-round delivery into `receiver` (absolute
+    /// rank) at round `t` is cancelled. The receiver consults this to skip
+    /// the matching receive; the sender consults it (with `receiver` = its
+    /// send target) to skip the matching send — both sides agree with no
+    /// communication.
+    #[inline]
+    pub fn is_cancelled(&self, t: usize, receiver: u64) -> bool {
+        self.cancelled.binary_search(&(t, receiver)).is_ok()
+    }
+
+    /// Number of cancelled base deliveries.
+    pub fn cancelled_count(&self) -> usize {
+        self.cancelled.len()
+    }
+
+    /// The repair waves (each an extra round after the base rounds).
+    pub fn waves(&self) -> &[Vec<Repair>] {
+        &self.waves
+    }
+
+    /// Total rounds the degraded execution takes: base plus one per wave.
+    pub fn num_rounds(&self) -> usize {
+        self.base_rounds + self.waves.len()
+    }
+
+    /// Independently replay the plan and validate it end to end: base
+    /// rounds must cancel exactly the masked/starved deliveries, every
+    /// repair must come from a rank that holds the block over an unmasked
+    /// link with one-ported wave discipline, and afterwards every rank
+    /// must hold all `n` blocks. `O(p·(n + q) + Σ|wave|)` with `O(p·n)`
+    /// memory — the sweep in `rust/tests/faults.rs` runs it for every
+    /// masked circulant edge.
+    pub fn verify(&self) -> Result<(), DegradedError> {
+        let (p, n, root) = (self.p, self.n, self.root);
+        let err = |what: String| DegradedError::Inconsistent { p, root, what };
+        if p == 1 {
+            return Ok(());
+        }
+        let skips = Skips::new(p);
+        let abs = |rel: u64| (rel + root) % p;
+        let mut scratch = Scratch::new();
+        let mut recvs: Vec<(u64, usize)> = Vec::new();
+        let mut cancelled_seen = 0usize;
+        let plans: Vec<BcastPlan> = (0..p)
+            .map(|rel| {
+                let (s, _, _) = Schedule::compute_with(&skips, rel, &mut scratch);
+                BcastPlan::new(s, n)
+            })
+            .collect();
+        let mut have = vec![vec![false; n]; p as usize];
+        have[0] = vec![true; n];
+        for t in 0..self.base_rounds {
+            recvs.clear();
+            for rel in 0..p {
+                let a = plans[rel as usize].action(t);
+                let to_rel = skips.to_proc(rel, a.k);
+                if to_rel == 0 {
+                    continue;
+                }
+                if let Some(sb) = a.send_block {
+                    let fails =
+                        self.mask.is_severed(abs(rel), abs(to_rel)) || !have[rel as usize][sb];
+                    if fails != self.is_cancelled(t, abs(to_rel)) {
+                        return Err(err(format!(
+                            "round {t}: cancellation of delivery into {} disagrees with replay",
+                            abs(to_rel)
+                        )));
+                    }
+                    if fails {
+                        cancelled_seen += 1;
+                    } else {
+                        recvs.push((to_rel, sb));
+                    }
+                }
+            }
+            for &(to, blk) in &recvs {
+                have[to as usize][blk] = true;
+            }
+        }
+        if cancelled_seen != self.cancelled.len() {
+            return Err(err(format!(
+                "{} cancellations recorded, replay found {cancelled_seen}",
+                self.cancelled.len()
+            )));
+        }
+        let mut sending = vec![false; p as usize];
+        let mut receiving = vec![false; p as usize];
+        for (w, wave) in self.waves.iter().enumerate() {
+            sending.iter_mut().for_each(|s| *s = false);
+            receiving.iter_mut().for_each(|s| *s = false);
+            for r in wave {
+                let from_rel = (r.from + p - root) % p;
+                let to_rel = (r.to + p - root) % p;
+                if !have[from_rel as usize][r.block] {
+                    return Err(err(format!(
+                        "wave {w}: {} sends block {} before holding it",
+                        r.from, r.block
+                    )));
+                }
+                if have[to_rel as usize][r.block] {
+                    return Err(err(format!(
+                        "wave {w}: {} already holds block {}",
+                        r.to, r.block
+                    )));
+                }
+                if self.mask.is_severed(r.from, r.to) {
+                    return Err(err(format!(
+                        "wave {w}: repair {} -> {} crosses a masked link",
+                        r.from, r.to
+                    )));
+                }
+                if sending[r.from as usize] || receiving[r.to as usize] {
+                    return Err(err(format!(
+                        "wave {w}: one-ported discipline violated at {} -> {}",
+                        r.from, r.to
+                    )));
+                }
+                sending[r.from as usize] = true;
+                receiving[r.to as usize] = true;
+            }
+            for r in wave {
+                let to_rel = (r.to + p - root) % p;
+                have[to_rel as usize][r.block] = true;
+            }
+        }
+        for rel in 0..p {
+            if let Some(b) = have[rel as usize].iter().position(|&h| !h) {
+                return Err(err(format!(
+                    "rank {} still missing block {b} after {} waves",
+                    abs(rel),
+                    self.waves.len()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_mask_is_the_healthy_schedule() {
+        for p in [2u64, 3, 7, 16, 33] {
+            for n in [1usize, 3, 8] {
+                let plan = DegradedBcastPlan::new(p, 0, n, LinkMask::new()).unwrap();
+                assert_eq!(plan.cancelled_count(), 0, "p={p} n={n}");
+                assert!(plan.waves().is_empty(), "p={p} n={n}");
+                plan.verify().unwrap_or_else(|e| panic!("p={p} n={n}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn every_single_severed_circulant_edge_repairs() {
+        for p in [4u64, 7, 16, 33] {
+            let skips = Skips::new(p);
+            for root in [0u64, 1, p - 1] {
+                for a in 0..p {
+                    for k in 0..skips.q() {
+                        let b = skips.to_proc(a, k);
+                        let mask = LinkMask::from_edges([(a, b)]);
+                        for n in [1usize, 4] {
+                            let plan = DegradedBcastPlan::new(p, root, n, mask.clone())
+                                .unwrap_or_else(|e| {
+                                    panic!("p={p} root={root} sever {a}-{b} n={n}: {e}")
+                                });
+                            plan.verify().unwrap_or_else(|e| {
+                                panic!("p={p} root={root} sever {a}-{b} n={n}: {e}")
+                            });
+                            assert!(
+                                plan.cancelled_count() > 0 || plan.waves().is_empty(),
+                                "p={p} root={root} sever {a}-{b} n={n}: waves without cancellations"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_rank_is_unroutable() {
+        let p = 4u64;
+        // Sever every link touching rank 2.
+        let mask = LinkMask::from_edges((0..p).filter(|&r| r != 2).map(|r| (r, 2)));
+        let err = DegradedBcastPlan::new(p, 0, 2, mask).unwrap_err();
+        match err {
+            DegradedError::Unroutable { stuck, .. } => {
+                assert!(stuck.iter().all(|&(r, _)| r == 2), "{stuck:?}");
+            }
+            other => panic!("want Unroutable, got {other}"),
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let mask = LinkMask::from_edges([(1, 3), (0, 5)]);
+        let a = DegradedBcastPlan::new(7, 2, 5, mask.clone()).unwrap();
+        let b = DegradedBcastPlan::new(7, 2, 5, mask).unwrap();
+        assert_eq!(a.cancelled, b.cancelled);
+        assert_eq!(a.waves, b.waves);
+    }
+
+    #[test]
+    fn mask_normalizes() {
+        let mut m = LinkMask::new();
+        m.sever(5, 2);
+        m.sever(2, 5);
+        assert_eq!(m.len(), 1);
+        assert!(m.is_severed(2, 5) && m.is_severed(5, 2));
+        assert!(!m.is_severed(2, 4));
+        assert_eq!(LinkMask::from_edges([(5, 2)]), m);
+    }
+}

@@ -43,10 +43,14 @@
 //!   (Table 3 comparison).
 //! * [`verify`] — the four correctness conditions of §2.1, Theorem 1
 //!   delivery, and the §3 empirical bounds.
+//! * [`mask`] — degraded topologies: [`LinkMask`]ed subgraph meshes and
+//!   the deterministic reroute plan ([`DegradedBcastPlan`]) that patches
+//!   severed circulant edges with repair waves through surviving relays.
 
 pub mod baseblock;
 pub mod baseline;
 pub mod cache;
+pub mod mask;
 pub mod pow2;
 pub mod recv;
 pub mod schedule;
@@ -56,6 +60,7 @@ pub mod verify;
 
 pub use cache::{CacheStats, ScheduleCache};
 pub use baseblock::{baseblock, canonical_decomposition};
+pub use mask::{DegradedBcastPlan, DegradedError, LinkMask, Repair};
 pub use recv::{recv_schedule, recv_schedule_into, recv_schedule_into_fast, RecvStats, Scratch};
 pub use schedule::{AllgatherPlan, AllgatherSchedules, BcastPlan, RoundAction, Schedule};
 pub use send::{send_schedule, send_schedule_into, SendStats};

@@ -305,7 +305,7 @@ where
         }
     });
     if let Some(msg) = spawn_err {
-        return Err(TransportError::Io(msg));
+        return Err(TransportError::io(msg));
     }
     let out = super::drain_results(results, is_abort_notification)?;
     let stats = lock(&shared.round).engine.stats();

@@ -1,0 +1,607 @@
+//! Deterministic fault injection: a wrapper transport that executes a
+//! seeded, replayable [`FaultPlan`] against any backend.
+//!
+//! Production meshes fail in four characteristic ways, and each one is an
+//! injectable, deterministic [`FaultAction`]:
+//!
+//! * **kill-rank-at-round** — the endpoint dies: its `sendrecv_into`
+//!   returns a structured [`TransportError::Fault`] at the configured
+//!   transport round and every later call fails too, exactly like a
+//!   crashed process whose peers then observe timeouts;
+//! * **sever-link** — an undirected edge goes down: frames across it are
+//!   silently dropped on the send side and the receive side waits out its
+//!   deadline before reporting a structured
+//!   [`TransportError::Timeout`] with peer/round context (a cut cable,
+//!   not a polite hangup);
+//! * **delay-round** — one endpoint stalls for a configured duration
+//!   before a round (congestion, GC pause, scheduler hiccup);
+//! * **corrupt-frame** — a received frame's tag and payload are flipped,
+//!   which the collective layer's determinacy check must surface as a
+//!   structured [`TransportError::Collective`] instead of delivering
+//!   silently wrong bytes.
+//!
+//! The plan is **shared by every rank** (each [`FaultTransport`] holds an
+//! `Arc` of the same plan) and is a pure function of its seed or explicit
+//! action list, so a failure scenario is a reproducible test case: same
+//! seed, same schedule, same outcome — never a flake. `FaultPlan`
+//! round-trips through its [`std::fmt::Display`] form via
+//! [`FaultPlan::parse`], which is what the CLI's `--fault-plan` flag and
+//! the "seed echoed on failure" replay workflow use.
+//!
+//! Rounds here are *transport rounds*: the per-endpoint `sendrecv_into`
+//! operation counter (the same counter [`crate::transport::FaultCtx`]
+//! reports), which on a healthy run is identical across ranks executing
+//! the same SPMD collective.
+
+use super::{CostHint, FaultCtx, SendSpec, Transport, TransportError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One injectable fault. See the module docs for the failure taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Rank `rank` dies at transport round `round`: that round and every
+    /// later operation on its endpoint returns [`TransportError::Fault`].
+    KillRank {
+        /// The rank that dies.
+        rank: u64,
+        /// The transport round it dies at.
+        round: u64,
+    },
+    /// The undirected link `{a, b}` is down for the whole run: sends
+    /// across it vanish, receives across it time out.
+    SeverLink {
+        /// One end of the severed link.
+        a: u64,
+        /// The other end.
+        b: u64,
+    },
+    /// Rank `rank` sleeps for `millis` ms before transport round `round`.
+    DelayRound {
+        /// The delayed rank.
+        rank: u64,
+        /// The transport round the delay precedes.
+        round: u64,
+        /// Delay in milliseconds.
+        millis: u64,
+    },
+    /// The frame rank `rank` receives in transport round `round` arrives
+    /// corrupted (tag flipped, payload bytes flipped).
+    CorruptFrame {
+        /// The receiving rank.
+        rank: u64,
+        /// The transport round whose inbound frame is corrupted.
+        round: u64,
+    },
+}
+
+impl std::fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            FaultAction::KillRank { rank, round } => write!(f, "kill={rank}@{round}"),
+            FaultAction::SeverLink { a, b } => write!(f, "sever={a}-{b}"),
+            FaultAction::DelayRound {
+                rank,
+                round,
+                millis,
+            } => write!(f, "delay={rank}@{round}:{millis}"),
+            FaultAction::CorruptFrame { rank, round } => write!(f, "corrupt={rank}@{round}"),
+        }
+    }
+}
+
+/// A seeded, replayable set of [`FaultAction`]s shared by all ranks.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    seed: u64,
+    actions: Vec<FaultAction>,
+}
+
+/// The xorshift64* step behind [`FaultPlan::from_seed`] — tiny, seeded,
+/// and fully deterministic (the offline image has no rand crate, and a
+/// reproducible plan must not depend on one anyway).
+fn xorshift(state: &mut u64) -> u64 {
+    let mut s = *state;
+    s ^= s << 13;
+    s ^= s >> 7;
+    s ^= s << 17;
+    *state = s;
+    s.wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults) with seed 0.
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Generate a random single-fault scenario for a `p`-rank mesh:
+    /// either one rank killed at a round within the first broadcast
+    /// phases, or one severed circulant edge. The scenario is a pure
+    /// function of `(seed, p)` — replaying with the same seed replays the
+    /// identical faults.
+    pub fn from_seed(seed: u64, p: u64) -> FaultPlan {
+        assert!(p >= 2, "a fault plan needs at least two ranks");
+        let mut s = seed | 1; // xorshift must not start at 0
+        let skips = crate::sched::Skips::new(p);
+        let q = skips.q() as u64;
+        let action = if xorshift(&mut s) % 2 == 0 {
+            FaultAction::KillRank {
+                rank: xorshift(&mut s) % p,
+                round: xorshift(&mut s) % (q + 4),
+            }
+        } else {
+            let a = xorshift(&mut s) % p;
+            let k = (xorshift(&mut s) % q.max(1)) as usize;
+            FaultAction::SeverLink {
+                a,
+                b: skips.to_proc(a, k),
+            }
+        };
+        FaultPlan {
+            seed,
+            actions: vec![action],
+        }
+    }
+
+    /// Parse a comma-separated plan spec — the same syntax
+    /// [`std::fmt::Display`] prints, so a failing test's echoed plan can
+    /// be replayed verbatim:
+    ///
+    /// * `kill=R@T` — kill rank `R` at transport round `T`
+    /// * `sever=A-B` — sever the undirected link `{A, B}`
+    /// * `delay=R@T:MS` — delay rank `R` by `MS` ms before round `T`
+    /// * `corrupt=R@T` — corrupt rank `R`'s inbound frame in round `T`
+    /// * `seed=N` — add the [`FaultPlan::from_seed`] scenario for seed `N`
+    ///
+    /// `p` is the mesh size (needed by `seed=`; also used to range-check
+    /// explicit ranks).
+    pub fn parse(spec: &str, p: u64) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new();
+        let check_rank = |r: u64| -> Result<u64, String> {
+            if r >= p {
+                Err(format!("rank {r} out of range (p = {p})"))
+            } else {
+                Ok(r)
+            }
+        };
+        let num = |s: &str| -> Result<u64, String> {
+            s.parse::<u64>().map_err(|_| format!("bad number `{s}`"))
+        };
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad fault spec `{part}` (want key=value)"))?;
+            match key {
+                "kill" => {
+                    let (r, t) = val
+                        .split_once('@')
+                        .ok_or_else(|| format!("bad kill spec `{val}` (want R@T)"))?;
+                    plan.actions.push(FaultAction::KillRank {
+                        rank: check_rank(num(r)?)?,
+                        round: num(t)?,
+                    });
+                }
+                "sever" => {
+                    let (a, b) = val
+                        .split_once('-')
+                        .ok_or_else(|| format!("bad sever spec `{val}` (want A-B)"))?;
+                    let (a, b) = (check_rank(num(a)?)?, check_rank(num(b)?)?);
+                    if a == b {
+                        return Err(format!("cannot sever the self-link {a}-{b}"));
+                    }
+                    plan.actions.push(FaultAction::SeverLink { a, b });
+                }
+                "delay" => {
+                    let (r, rest) = val
+                        .split_once('@')
+                        .ok_or_else(|| format!("bad delay spec `{val}` (want R@T:MS)"))?;
+                    let (t, ms) = rest
+                        .split_once(':')
+                        .ok_or_else(|| format!("bad delay spec `{val}` (want R@T:MS)"))?;
+                    plan.actions.push(FaultAction::DelayRound {
+                        rank: check_rank(num(r)?)?,
+                        round: num(t)?,
+                        millis: num(ms)?,
+                    });
+                }
+                "corrupt" => {
+                    let (r, t) = val
+                        .split_once('@')
+                        .ok_or_else(|| format!("bad corrupt spec `{val}` (want R@T)"))?;
+                    plan.actions.push(FaultAction::CorruptFrame {
+                        rank: check_rank(num(r)?)?,
+                        round: num(t)?,
+                    });
+                }
+                "seed" => {
+                    let seeded = FaultPlan::from_seed(num(val)?, p);
+                    plan.seed = seeded.seed;
+                    plan.actions.extend(seeded.actions);
+                }
+                other => return Err(format!("unknown fault kind `{other}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Add a kill-rank-at-round fault.
+    pub fn kill(mut self, rank: u64, round: u64) -> FaultPlan {
+        self.actions.push(FaultAction::KillRank { rank, round });
+        self
+    }
+
+    /// Add a severed undirected link.
+    pub fn sever(mut self, a: u64, b: u64) -> FaultPlan {
+        assert_ne!(a, b, "cannot sever a self-link");
+        self.actions.push(FaultAction::SeverLink { a, b });
+        self
+    }
+
+    /// Add a pre-round delay.
+    pub fn delay(mut self, rank: u64, round: u64, millis: u64) -> FaultPlan {
+        self.actions.push(FaultAction::DelayRound {
+            rank,
+            round,
+            millis,
+        });
+        self
+    }
+
+    /// Add an inbound-frame corruption.
+    pub fn corrupt(mut self, rank: u64, round: u64) -> FaultPlan {
+        self.actions.push(FaultAction::CorruptFrame { rank, round });
+        self
+    }
+
+    /// The seed this plan was generated from (0 for hand-built plans).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The plan's actions.
+    pub fn actions(&self) -> &[FaultAction] {
+        &self.actions
+    }
+
+    /// Every severed undirected edge in the plan — the subgraph mask the
+    /// degraded collectives must route around (see
+    /// [`crate::sched::LinkMask`]).
+    pub fn severed_edges(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.actions.iter().filter_map(|a| match *a {
+            FaultAction::SeverLink { a, b } => Some((a, b)),
+            _ => None,
+        })
+    }
+
+    /// Whether the undirected link `{a, b}` is severed.
+    pub fn severed(&self, a: u64, b: u64) -> bool {
+        self.severed_edges()
+            .any(|(x, y)| (x == a && y == b) || (x == b && y == a))
+    }
+
+    /// The round at which `rank` dies, if any (the earliest of its kills).
+    pub fn kill_round(&self, rank: u64) -> Option<u64> {
+        self.actions
+            .iter()
+            .filter_map(|a| match *a {
+                FaultAction::KillRank { rank: r, round } if r == rank => Some(round),
+                _ => None,
+            })
+            .min()
+    }
+
+    fn delay_at(&self, rank: u64, round: u64) -> Option<Duration> {
+        self.actions.iter().find_map(|a| match *a {
+            FaultAction::DelayRound {
+                rank: r,
+                round: t,
+                millis,
+            } if r == rank && t == round => Some(Duration::from_millis(millis)),
+            _ => None,
+        })
+    }
+
+    fn corrupt_at(&self, rank: u64, round: u64) -> bool {
+        self.actions.iter().any(|a| {
+            matches!(*a, FaultAction::CorruptFrame { rank: r, round: t } if r == rank && t == round)
+        })
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut sep = "";
+        for a in &self.actions {
+            write!(f, "{sep}{a}")?;
+            sep = ",";
+        }
+        Ok(())
+    }
+}
+
+/// A [`Transport`] wrapper executing a shared [`FaultPlan`] against the
+/// wrapped backend. Create one per rank over the rank's real transport;
+/// all wrappers share one plan `Arc`.
+///
+/// `recv_deadline` bounds how long a severed-link receive "waits" before
+/// reporting its structured timeout — pass the same deadline the inner
+/// transport uses so fault-injected timeouts and real ones are
+/// indistinguishable to the caller.
+pub struct FaultTransport<T> {
+    inner: T,
+    plan: Arc<FaultPlan>,
+    recv_deadline: Duration,
+    ops: u64,
+    dead: bool,
+}
+
+impl<T: Transport> FaultTransport<T> {
+    /// Wrap `inner` under `plan`.
+    pub fn new(inner: T, plan: Arc<FaultPlan>, recv_deadline: Duration) -> FaultTransport<T> {
+        FaultTransport {
+            inner,
+            plan,
+            recv_deadline,
+            ops: 0,
+            dead: false,
+        }
+    }
+
+    /// Unwrap back to the underlying transport (e.g. for post-failure
+    /// recovery: the killed rank's *inner* transport is still intact).
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    /// The shared plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Whether a kill fault already fired on this endpoint.
+    pub fn is_dead(&self) -> bool {
+        self.dead
+    }
+
+    fn check_alive(&mut self, round: u64) -> Result<(), TransportError> {
+        let rank = self.inner.rank();
+        if self.dead {
+            return Err(TransportError::fault_at(
+                format!("rank {rank}: endpoint killed by fault plan"),
+                FaultCtx::default().with_round(round),
+            ));
+        }
+        if let Some(at) = self.plan.kill_round(rank) {
+            if round >= at {
+                self.dead = true;
+                return Err(TransportError::fault_at(
+                    format!("rank {rank}: killed at transport round {at} by fault plan"),
+                    FaultCtx::default().with_round(round),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<T: Transport> Transport for FaultTransport<T> {
+    fn rank(&self) -> u64 {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> u64 {
+        self.inner.size()
+    }
+
+    fn sendrecv_into(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
+        let round = self.ops;
+        self.ops += 1;
+        let rank = self.inner.rank();
+        self.check_alive(round)?;
+        if let Some(d) = self.plan.delay_at(rank, round) {
+            std::thread::sleep(d);
+        }
+        // A send across a severed link vanishes: the cable is cut, not
+        // the protocol — the peer discovers it by timing out.
+        let send = match send {
+            Some(s) if self.plan.severed(rank, s.to) => None,
+            other => other,
+        };
+        if let Some(from) = recv_from {
+            if self.plan.severed(rank, from) {
+                // The frame can never arrive. Perform any surviving send
+                // half, wait out the deadline, and report the same
+                // structured timeout a dead link produces.
+                self.inner.sendrecv_into(send, None, recv_buf)?;
+                std::thread::sleep(self.recv_deadline);
+                return Err(TransportError::timeout_at(
+                    format!(
+                        "rank {rank}: waited {:?} for a block from {from} (link severed)",
+                        self.recv_deadline
+                    ),
+                    FaultCtx::peer(from).with_round(round),
+                ));
+            }
+        }
+        let got = self.inner.sendrecv_into(send, recv_from, recv_buf)?;
+        if got.is_some() && self.plan.corrupt_at(rank, round) {
+            // Bit-flip the frame: tag and every payload byte. The
+            // collective layer's determinacy check (asserted tags, block
+            // sizes) must turn this into a structured error.
+            for b in recv_buf.iter_mut() {
+                *b = !*b;
+            }
+            return Ok(got.map(|tag| tag ^ 1));
+        }
+        Ok(got)
+    }
+
+    fn warm_up(&mut self) -> Result<(), TransportError> {
+        self.inner.warm_up()
+    }
+
+    fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
+        self.inner.warm_peers(peers)
+    }
+
+    fn cost_hint(&self) -> CostHint {
+        self.inner.cost_hint()
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        let round = self.ops;
+        self.check_alive(round)?;
+        self.inner.barrier()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::thread::run_threads;
+    use crate::transport::Payload;
+
+    #[test]
+    fn plan_display_parse_roundtrip() {
+        let plan = FaultPlan::new()
+            .kill(3, 5)
+            .sever(1, 4)
+            .delay(2, 3, 50)
+            .corrupt(0, 7);
+        let spec = plan.to_string();
+        assert_eq!(spec, "kill=3@5,sever=1-4,delay=2@3:50,corrupt=0@7");
+        let parsed = FaultPlan::parse(&spec, 8).unwrap();
+        assert_eq!(parsed.actions(), plan.actions());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("kill=9@0", 8).is_err(), "rank out of range");
+        assert!(FaultPlan::parse("sever=2-2", 8).is_err(), "self-link");
+        assert!(FaultPlan::parse("explode=1", 8).is_err(), "unknown kind");
+        assert!(FaultPlan::parse("kill=1", 8).is_err(), "missing round");
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_vary() {
+        for p in [4u64, 7, 16, 33] {
+            let mut distinct = std::collections::HashSet::new();
+            for seed in 0..64u64 {
+                let a = FaultPlan::from_seed(seed, p);
+                let b = FaultPlan::from_seed(seed, p);
+                assert_eq!(a, b, "seed {seed} p {p} must replay identically");
+                assert_eq!(a.actions().len(), 1);
+                if let FaultAction::SeverLink { a: x, b: y } = a.actions()[0] {
+                    assert_ne!(x, y, "seed {seed} p {p}: self-link");
+                    assert!(x < p && y < p);
+                }
+                distinct.insert(format!("{a}"));
+            }
+            assert!(distinct.len() > 8, "p {p}: seeds must cover many scenarios");
+        }
+    }
+
+    #[test]
+    fn kill_fires_at_round_and_stays_dead() {
+        let plan = Arc::new(FaultPlan::new().kill(1, 2));
+        let outcomes = run_threads(2, Duration::from_millis(200), move |t| {
+            let rank = t.rank();
+            let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_millis(200));
+            let peer = rank ^ 1;
+            let mut buf = Vec::new();
+            let mut errs = Vec::new();
+            for _ in 0..4 {
+                let r = ft.sendrecv_into(
+                    Some(SendSpec {
+                        to: peer,
+                        tag: 0,
+                        data: Payload::Bytes(&[rank as u8]),
+                    }),
+                    Some(peer),
+                    &mut buf,
+                );
+                if let Err(e) = r {
+                    errs.push(e.to_string());
+                }
+            }
+            Ok(errs)
+        })
+        .unwrap();
+        // Rank 1 dies at its 3rd op and every op after; rank 0 times out
+        // from then on.
+        assert!(outcomes[1][0].contains("killed at transport round 2"), "{:?}", outcomes[1]);
+        assert_eq!(outcomes[1].len(), 2, "dead rank fails every later op");
+        assert!(!outcomes[0].is_empty(), "survivor must observe timeouts");
+        assert!(outcomes[0][0].contains("peer=1"), "{:?}", outcomes[0]);
+    }
+
+    #[test]
+    fn severed_link_times_out_with_context() {
+        let plan = Arc::new(FaultPlan::new().sever(0, 1));
+        let outcomes = run_threads(2, Duration::from_millis(100), move |t| {
+            let rank = t.rank();
+            let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_millis(100));
+            let peer = rank ^ 1;
+            let mut buf = Vec::new();
+            let err = ft
+                .sendrecv_into(
+                    Some(SendSpec {
+                        to: peer,
+                        tag: 0,
+                        data: Payload::Bytes(&[7]),
+                    }),
+                    Some(peer),
+                    &mut buf,
+                )
+                .unwrap_err();
+            match &err {
+                TransportError::Timeout { ctx, .. } => {
+                    assert_eq!(ctx.peer, Some(peer), "{err}");
+                    assert_eq!(ctx.round, Some(0), "{err}");
+                }
+                other => panic!("want structured timeout, got {other}"),
+            }
+            Ok(())
+        });
+        outcomes.unwrap();
+    }
+
+    #[test]
+    fn corrupt_frame_flips_tag_and_bytes() {
+        let plan = Arc::new(FaultPlan::new().corrupt(1, 0));
+        run_threads(2, Duration::from_secs(5), move |t| {
+            let rank = t.rank();
+            let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_secs(5));
+            let peer = rank ^ 1;
+            let mut buf = Vec::new();
+            let got = ft.sendrecv_into(
+                Some(SendSpec {
+                    to: peer,
+                    tag: 4,
+                    data: Payload::Bytes(&[0x0F]),
+                }),
+                Some(peer),
+                &mut buf,
+            )?;
+            if rank == 1 {
+                assert_eq!(got, Some(5), "tag must arrive flipped");
+                assert_eq!(buf, vec![0xF0], "payload must arrive flipped");
+            } else {
+                assert_eq!(got, Some(4));
+                assert_eq!(buf, vec![0x0F]);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+}

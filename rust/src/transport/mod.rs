@@ -58,6 +58,7 @@
 #![warn(missing_docs)]
 
 pub mod cost;
+pub mod fault;
 pub mod sim;
 pub mod tcp;
 pub mod thread;
@@ -265,31 +266,196 @@ impl Default for BufferPool {
     }
 }
 
+/// Structured failure context attached to the point-to-point transport
+/// errors: which peer the failing operation involved, the transport-level
+/// communication round (a per-endpoint `sendrecv_into` counter — barrier
+/// token exchanges included, so it is an operation index, not the
+/// collective's external round number), and the collective epoch (advanced
+/// by [`tcp::TcpTransport::reap_idle`]; backends without epochs leave it
+/// `None`).
+///
+/// Every field is optional: errors raised before a peer is known (listener
+/// setup, spawn failures) carry an empty context, which [`fmt::Display`]
+/// omits entirely.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCtx {
+    /// The peer rank the failing send/recv/dial involved.
+    pub peer: Option<u64>,
+    /// Transport-level round (operation) counter at the failure.
+    pub round: Option<u64>,
+    /// Collective epoch at the failure (TCP backend only).
+    pub epoch: Option<u64>,
+}
+
+impl FaultCtx {
+    /// A context naming just the peer.
+    pub fn peer(peer: u64) -> FaultCtx {
+        FaultCtx {
+            peer: Some(peer),
+            ..FaultCtx::default()
+        }
+    }
+
+    /// Attach the transport-level round counter.
+    pub fn with_round(mut self, round: u64) -> FaultCtx {
+        self.round = Some(round);
+        self
+    }
+
+    /// Attach the collective epoch.
+    pub fn with_epoch(mut self, epoch: u64) -> FaultCtx {
+        self.epoch = Some(epoch);
+        self
+    }
+
+    /// Whether no field is set.
+    pub fn is_empty(&self) -> bool {
+        self.peer.is_none() && self.round.is_none() && self.epoch.is_none()
+    }
+}
+
+impl fmt::Display for FaultCtx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut sep = "";
+        write!(f, "[")?;
+        if let Some(p) = self.peer {
+            write!(f, "peer={p}")?;
+            sep = " ";
+        }
+        if let Some(r) = self.round {
+            write!(f, "{sep}round={r}")?;
+            sep = " ";
+        }
+        if let Some(e) = self.epoch {
+            write!(f, "{sep}epoch={e}")?;
+        }
+        write!(f, "]")
+    }
+}
+
 /// Failures raised by a transport backend or by the collective layer on
 /// top of it.
+///
+/// The point-to-point failure variants ([`TransportError::Io`],
+/// [`TransportError::Timeout`], [`TransportError::Fault`]) carry a
+/// structured [`FaultCtx`] naming the peer rank, the transport round and
+/// the collective epoch, so a dead rank surfaces as *which* peer failed to
+/// deliver in *which* round instead of a bare string. The enum is
+/// `#[non_exhaustive]`: downstream matches must carry a wildcard arm, so
+/// new failure classes can be added without a breaking change.
 #[derive(Debug)]
+#[non_exhaustive]
 pub enum TransportError {
     /// Machine-model violation reported by the simulator backend.
     Sim(crate::simulator::SimError),
     /// Socket / channel failure.
-    Io(String),
+    Io {
+        /// Human-readable description.
+        msg: String,
+        /// Peer/round/epoch context (empty when unknown).
+        ctx: FaultCtx,
+    },
     /// A peer spoke the wrong protocol (bad magic, wrong sender, a message
     /// where none was scheduled, ...).
     Protocol(String),
     /// Timed out waiting for a peer.
-    Timeout(String),
+    Timeout {
+        /// Human-readable description.
+        msg: String,
+        /// Peer/round/epoch context (empty when unknown).
+        ctx: FaultCtx,
+    },
     /// Collective-level violation (schedule mismatch, corrupt delivery).
     Collective(String),
+    /// An injected fault fired on this endpoint (see
+    /// [`fault::FaultTransport`]): the deterministic first cause of a
+    /// failure scenario, as opposed to the [`TransportError::Timeout`] /
+    /// [`TransportError::Io`] fallout other ranks observe.
+    Fault {
+        /// Human-readable description of the injected fault.
+        msg: String,
+        /// Peer/round/epoch context (empty when unknown).
+        ctx: FaultCtx,
+    },
+}
+
+impl TransportError {
+    /// An [`TransportError::Io`] with no context.
+    pub fn io(msg: impl Into<String>) -> TransportError {
+        TransportError::Io {
+            msg: msg.into(),
+            ctx: FaultCtx::default(),
+        }
+    }
+
+    /// An [`TransportError::Io`] with peer/round/epoch context.
+    pub fn io_at(msg: impl Into<String>, ctx: FaultCtx) -> TransportError {
+        TransportError::Io {
+            msg: msg.into(),
+            ctx,
+        }
+    }
+
+    /// A [`TransportError::Timeout`] with no context.
+    pub fn timeout(msg: impl Into<String>) -> TransportError {
+        TransportError::Timeout {
+            msg: msg.into(),
+            ctx: FaultCtx::default(),
+        }
+    }
+
+    /// A [`TransportError::Timeout`] with peer/round/epoch context.
+    pub fn timeout_at(msg: impl Into<String>, ctx: FaultCtx) -> TransportError {
+        TransportError::Timeout {
+            msg: msg.into(),
+            ctx,
+        }
+    }
+
+    /// A [`TransportError::Fault`] with peer/round/epoch context.
+    pub fn fault_at(msg: impl Into<String>, ctx: FaultCtx) -> TransportError {
+        TransportError::Fault {
+            msg: msg.into(),
+            ctx,
+        }
+    }
+
+    /// The structured context, if this variant carries one.
+    pub fn ctx(&self) -> Option<FaultCtx> {
+        match self {
+            TransportError::Io { ctx, .. }
+            | TransportError::Timeout { ctx, .. }
+            | TransportError::Fault { ctx, .. } => Some(*ctx),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for TransportError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let write_ctx = |f: &mut fmt::Formatter<'_>, ctx: &FaultCtx| {
+            if ctx.is_empty() {
+                Ok(())
+            } else {
+                write!(f, " {ctx}")
+            }
+        };
         match self {
             TransportError::Sim(e) => write!(f, "simulator: {e}"),
-            TransportError::Io(msg) => write!(f, "io: {msg}"),
+            TransportError::Io { msg, ctx } => {
+                write!(f, "io: {msg}")?;
+                write_ctx(f, ctx)
+            }
             TransportError::Protocol(msg) => write!(f, "protocol: {msg}"),
-            TransportError::Timeout(msg) => write!(f, "timeout: {msg}"),
+            TransportError::Timeout { msg, ctx } => {
+                write!(f, "timeout: {msg}")?;
+                write_ctx(f, ctx)
+            }
             TransportError::Collective(msg) => write!(f, "collective: {msg}"),
+            TransportError::Fault { msg, ctx } => {
+                write!(f, "fault: {msg}")?;
+                write_ctx(f, ctx)
+            }
         }
     }
 }
@@ -304,7 +470,7 @@ impl From<crate::simulator::SimError> for TransportError {
 
 impl From<std::io::Error> for TransportError {
     fn from(e: std::io::Error) -> TransportError {
-        TransportError::Io(e.to_string())
+        TransportError::io(e.to_string())
     }
 }
 
@@ -427,6 +593,45 @@ impl<T> MeasuredHint<T> {
     /// Unwrap back to the underlying transport.
     pub fn into_inner(self) -> T {
         self.inner
+    }
+}
+
+/// Boxed transports are transports: delegation so trait objects compose
+/// with the wrapper transports ([`MeasuredHint`],
+/// [`fault::FaultTransport`]) — e.g. the CLI wraps the backend it
+/// selected at runtime, `FaultTransport<Box<dyn Transport>>`.
+impl<T: Transport + ?Sized> Transport for Box<T> {
+    fn rank(&self) -> u64 {
+        (**self).rank()
+    }
+
+    fn size(&self) -> u64 {
+        (**self).size()
+    }
+
+    fn sendrecv_into(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
+        (**self).sendrecv_into(send, recv_from, recv_buf)
+    }
+
+    fn warm_up(&mut self) -> Result<(), TransportError> {
+        (**self).warm_up()
+    }
+
+    fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
+        (**self).warm_peers(peers)
+    }
+
+    fn cost_hint(&self) -> CostHint {
+        (**self).cost_hint()
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        (**self).barrier()
     }
 }
 

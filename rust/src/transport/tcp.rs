@@ -77,7 +77,7 @@
 //!   binds `base_port + r`, so `p` processes need only agree on
 //!   `(host, base_port, p)`. Used by `examples/bcast_tcp.rs`.
 
-use super::{Payload, SendSpec, Transport, TransportError};
+use super::{FaultCtx, Payload, SendSpec, Transport, TransportError};
 use std::io::{ErrorKind, IoSlice, Read, Write};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -190,6 +190,64 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<(u64, Vec<u8>)> {
     Ok((tag, data))
 }
 
+/// A [`Read`] adapter enforcing a *whole-frame* deadline over a
+/// [`TcpStream`].
+///
+/// The socket's own `read_timeout` bounds each *syscall*, so a peer
+/// trickling one byte per timeout window could stretch a single frame
+/// arbitrarily. This wrapper checks the deadline before every read (a
+/// clock read, no syscall) and, once less than half the budget remains,
+/// lowers the socket timeout to the remainder — so the total blocking
+/// time for one frame is bounded by ~1.5× the configured timeout while
+/// the steady-state fast path pays zero extra `setsockopt` calls.
+struct DeadlineRead<'a> {
+    stream: &'a TcpStream,
+    deadline: Instant,
+    budget: Duration,
+    /// Whether the socket timeout was lowered (and must be restored).
+    lowered: bool,
+}
+
+impl Read for DeadlineRead<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let now = Instant::now();
+        if now >= self.deadline {
+            return Err(std::io::Error::new(
+                ErrorKind::TimedOut,
+                "whole-frame recv deadline exceeded",
+            ));
+        }
+        let remaining = self.deadline - now;
+        if remaining < self.budget / 2 {
+            self.stream
+                .set_read_timeout(Some(remaining.max(Duration::from_millis(1))))?;
+            self.lowered = true;
+        }
+        (&mut self.stream).read(buf)
+    }
+}
+
+/// Read one frame from `stream` under a whole-frame deadline of `timeout`
+/// from now, restoring the socket's configured timeout afterwards if the
+/// deadline machinery lowered it.
+fn read_frame_deadline(
+    stream: &TcpStream,
+    buf: &mut Vec<u8>,
+    timeout: Duration,
+) -> std::io::Result<u64> {
+    let mut r = DeadlineRead {
+        stream,
+        deadline: Instant::now() + timeout,
+        budget: timeout,
+        lowered: false,
+    };
+    let res = read_frame_into(&mut r, buf);
+    if r.lowered && res.is_ok() {
+        stream.set_read_timeout(Some(timeout))?;
+    }
+    res
+}
+
 /// One frame handed to a persistent writer thread: the tag by value plus
 /// the caller's **borrowed** payload as a raw pointer — no copy is ever
 /// made of the payload on the wire path.
@@ -274,7 +332,17 @@ pub struct TcpTransport {
     /// any further establishment is a *re*-establishment — what the
     /// `redials` metric counts.
     linked_before: Vec<bool>,
+    /// Per-attempt TCP connect timeout used by the dial loop (see
+    /// [`TcpTransport::with_connect_timeout`]).
+    connect_timeout: Duration,
+    /// Transport-level round counter: one per `sendrecv_into` call, so
+    /// failure context can name the round a peer went silent in.
+    ops: u64,
 }
+
+/// Default per-attempt connect timeout of the dial loop (overridable with
+/// [`TcpTransport::with_connect_timeout`]).
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_millis(250);
 
 impl TcpTransport {
     /// Create rank `rank`'s endpoint of a `p`-rank mesh over `addrs` (the
@@ -311,7 +379,23 @@ impl TcpTransport {
             epoch: 0,
             pending_redials: Vec::new(),
             linked_before: (0..p).map(|_| false).collect(),
+            connect_timeout: DEFAULT_CONNECT_TIMEOUT,
+            ops: 0,
         })
+    }
+
+    /// Override the per-attempt connect timeout used when dialing a peer's
+    /// listener (default [`DEFAULT_CONNECT_TIMEOUT`], 250 ms). The dial
+    /// loop keeps retrying with exponential backoff until the overall
+    /// operation timeout; a larger per-attempt value helps high-latency
+    /// links, a smaller one makes dead-address detection snappier.
+    pub fn with_connect_timeout(mut self, connect_timeout: Duration) -> TcpTransport {
+        assert!(
+            connect_timeout > Duration::ZERO,
+            "connect timeout must be positive"
+        );
+        self.connect_timeout = connect_timeout;
+        self
     }
 
     /// Note that the link to `peer` is (re-)established, bumping the
@@ -381,6 +465,31 @@ impl TcpTransport {
                 // Dropping the endpoint joins its writer (idle by the
                 // ack-before-return invariant) and closes the socket.
                 *slot = None;
+                closed += 1;
+            }
+        }
+        crate::obs::metrics::on_reaped(closed as u64);
+        closed
+    }
+
+    /// Drop **every** established link, returning the number closed — the
+    /// recovery step after a failed collective.
+    ///
+    /// When a round fails (a peer died, a read timed out), frames may
+    /// still be in flight on links *between survivors*: a rank that
+    /// errored out mid-collective never drained them, so its streams are
+    /// desynchronized even toward healthy peers. Surviving ranks call
+    /// `reset_links` collectively (same program point on every rank)
+    /// and let the lazy mesh re-dial fresh connections on demand — the
+    /// bounded exponential-backoff dial loop plus the redial-parking in
+    /// `accept_until` (a peer that resets and re-dials before this rank
+    /// resets parks its fresh connection until the slot frees) make the
+    /// re-establishment race-free. Parked redials are *kept*: they are
+    /// new, clean connections, exactly what recovery promotes.
+    pub fn reset_links(&mut self) -> usize {
+        let mut closed = 0usize;
+        for slot in self.endpoints.iter_mut() {
+            if slot.take().is_some() {
                 closed += 1;
             }
         }
@@ -475,25 +584,36 @@ impl TcpTransport {
         Ok(())
     }
 
-    /// Dial `peer` (a lower rank), retrying until the deadline — its
-    /// listener may not be bound yet in separate-process mode.
+    /// Dial `peer` (a lower rank), retrying with exponential backoff until
+    /// the deadline — its listener may not be bound yet in separate-process
+    /// mode, or the link is being re-established after a failure.
     fn dial(&mut self, peer: u64, deadline: Instant) -> Result<(), TransportError> {
         debug_assert!(peer < self.rank, "dial direction: higher dials lower");
         if self.endpoints[peer as usize].is_some() {
             return Ok(());
         }
         let addr = self.addrs[peer as usize];
+        // Bounded re-dial: per-attempt connect timeout (configurable via
+        // `with_connect_timeout`), exponential backoff between attempts
+        // (1 ms doubling to a 100 ms cap), overall bound = the deadline.
+        let mut backoff = Duration::from_millis(1);
+        const BACKOFF_CAP: Duration = Duration::from_millis(100);
         let stream = loop {
-            match TcpStream::connect_timeout(&addr, Duration::from_millis(250)) {
+            match TcpStream::connect_timeout(&addr, self.connect_timeout) {
                 Ok(s) => break s,
                 Err(e) => {
                     if Instant::now() >= deadline {
-                        return Err(TransportError::Timeout(format!(
-                            "rank {}: dialing rank {peer} at {addr}: {e}",
-                            self.rank
-                        )));
+                        return Err(TransportError::timeout_at(
+                            format!("rank {}: dialing rank {peer} at {addr}: {e}", self.rank),
+                            FaultCtx::peer(peer)
+                                .with_round(self.ops)
+                                .with_epoch(self.epoch),
+                        ));
                     }
-                    std::thread::sleep(Duration::from_millis(10));
+                    std::thread::sleep(backoff.min(deadline.saturating_duration_since(
+                        Instant::now(),
+                    )));
+                    backoff = (backoff * 2).min(BACKOFF_CAP);
                 }
             }
         };
@@ -577,10 +697,15 @@ impl TcpTransport {
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     if Instant::now() >= deadline {
-                        return Err(TransportError::Timeout(format!(
-                            "rank {}: waited {:?} for rank {peer} to dial",
-                            self.rank, self.timeout
-                        )));
+                        return Err(TransportError::timeout_at(
+                            format!(
+                                "rank {}: waited {:?} for rank {peer} to dial",
+                                self.rank, self.timeout
+                            ),
+                            FaultCtx::peer(peer)
+                                .with_round(self.ops)
+                                .with_epoch(self.epoch),
+                        ));
                     }
                     std::thread::sleep(Duration::from_millis(2));
                 }
@@ -594,6 +719,7 @@ impl TcpTransport {
     /// not exist yet. The endpoint must be established.
     fn ensure_writer(&mut self, peer: u64) -> Result<(), TransportError> {
         let rank = self.rank;
+        let ctx = FaultCtx::peer(peer).with_round(self.ops).with_epoch(self.epoch);
         let ep = self.endpoints[peer as usize]
             .as_mut()
             .expect("endpoint established before ensure_writer");
@@ -601,7 +727,7 @@ impl TcpTransport {
             return Ok(());
         }
         let stream = ep.stream.try_clone().map_err(|e| {
-            TransportError::Io(format!("rank {rank}: cloning stream to {peer}: {e}"))
+            TransportError::io_at(format!("rank {rank}: cloning stream to {peer}: {e}"), ctx)
         })?;
         let (job_tx, job_rx) = sync_channel::<WriteJob>(1);
         let (ack_tx, ack_rx) = sync_channel::<std::io::Result<()>>(1);
@@ -622,7 +748,10 @@ impl TcpTransport {
                 }
             })
             .map_err(|e| {
-                TransportError::Io(format!("rank {rank}: spawning writer for {peer}: {e}"))
+                TransportError::io_at(
+                    format!("rank {rank}: spawning writer for {peer}: {e}"),
+                    ctx,
+                )
             })?;
         ep.writer = Some(Writer {
             job_tx: Some(job_tx),
@@ -652,7 +781,10 @@ impl TcpTransport {
             // A failed write may have emitted part of the frame: the
             // stream is desynchronized, never reuse it.
             self.endpoints[to as usize] = None;
-            TransportError::Io(format!("rank {rank}: writing to {to}: {e}"))
+            TransportError::io_at(
+                format!("rank {rank}: writing to {to}: {e}"),
+                FaultCtx::peer(to).with_round(self.ops).with_epoch(epoch),
+            )
         })
     }
 
@@ -675,13 +807,22 @@ impl TcpTransport {
     /// endpoint so it can never be reused.
     fn poison_read(&mut self, from: u64, e: std::io::Error) -> TransportError {
         self.endpoints[from as usize] = None;
+        let ctx = FaultCtx::peer(from)
+            .with_round(self.ops)
+            .with_epoch(self.epoch);
         if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut {
-            TransportError::Timeout(format!(
-                "rank {}: waited {:?} for a block from {from}",
-                self.rank, self.timeout
-            ))
+            TransportError::timeout_at(
+                format!(
+                    "rank {}: waited {:?} for a block from {from}: {e}",
+                    self.rank, self.timeout
+                ),
+                ctx,
+            )
         } else {
-            TransportError::Io(format!("rank {}: reading from {from}: {e}", self.rank))
+            TransportError::io_at(
+                format!("rank {}: reading from {from}: {e}", self.rank),
+                ctx,
+            )
         }
     }
 }
@@ -749,6 +890,7 @@ impl TcpTransport {
         recv_from: Option<u64>,
         recv_buf: &mut Vec<u8>,
     ) -> Result<Option<u64>, TransportError> {
+        self.ops += 1;
         match (send, recv_from) {
             (None, None) => Ok(None),
             (Some(s), None) => {
@@ -762,12 +904,13 @@ impl TcpTransport {
                 self.check_peer(from)?;
                 self.ensure_links(Some(from), None)?;
                 let epoch = self.epoch;
+                let timeout = self.timeout;
                 let got = {
                     let ep = self.endpoints[from as usize]
                         .as_mut()
                         .expect("link established above");
                     ep.last_used = epoch;
-                    read_frame_into(&mut ep.stream, recv_buf)
+                    read_frame_deadline(&ep.stream, recv_buf, timeout)
                 };
                 got.map(Some).map_err(|e| self.poison_read(from, e))
             }
@@ -809,16 +952,16 @@ impl TcpTransport {
                             len: data.len(),
                         })
                         .map_err(|_| {
-                            TransportError::Io(format!(
-                                "rank {rank}: writer thread for {} is gone",
-                                s.to
-                            ))
+                            TransportError::io_at(
+                                format!("rank {rank}: writer thread for {} is gone", s.to),
+                                FaultCtx::peer(s.to).with_round(self.ops).with_epoch(epoch),
+                            )
                         })?;
-                    let mut reader: &TcpStream = &self.endpoints[from as usize]
+                    let reader: &TcpStream = &self.endpoints[from as usize]
                         .as_ref()
                         .expect("link established above")
                         .stream;
-                    let got = read_frame_into(&mut reader, recv_buf);
+                    let got = read_frame_deadline(reader, recv_buf, self.timeout);
                     // Always reap the ack, even when the read failed: the
                     // ack-before-return invariant is what keeps direct
                     // writes from interleaving with the writer thread AND
@@ -839,7 +982,10 @@ impl TcpTransport {
                             // Possibly-partial write: the outbound stream
                             // is desynchronized, never reuse it.
                             self.endpoints[s.to as usize] = None;
-                            TransportError::Io(format!("rank {rank}: writing to {}: {e}", s.to))
+                            TransportError::io_at(
+                                format!("rank {rank}: writing to {}: {e}", s.to),
+                                FaultCtx::peer(s.to).with_round(self.ops).with_epoch(epoch),
+                            )
                         })?;
                     }
                     Err(_) => {
@@ -853,10 +999,10 @@ impl TcpTransport {
                         // use of this peer errors instead of corrupting
                         // the stream.
                         self.endpoints[s.to as usize] = None;
-                        return Err(TransportError::Io(format!(
-                            "rank {rank}: writer thread for {} died",
-                            s.to
-                        )));
+                        return Err(TransportError::io_at(
+                            format!("rank {rank}: writer thread for {} died", s.to),
+                            FaultCtx::peer(s.to).with_round(self.ops).with_epoch(epoch),
+                        ));
                     }
                 }
                 got.map(Some).map_err(|e| self.poison_read(from, e))
@@ -912,7 +1058,10 @@ where
         }
     });
     super::drain_results(results, |e| {
-        matches!(e, TransportError::Timeout(_) | TransportError::Io(_))
+        matches!(
+            e,
+            TransportError::Timeout { .. } | TransportError::Io { .. }
+        )
     })
 }
 

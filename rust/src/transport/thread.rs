@@ -22,7 +22,7 @@
 //! A failing rank cannot hang the rest: receives time out (configurable)
 //! and report which peer and block they were waiting for.
 
-use super::{BufferPool, Payload, SendSpec, Transport, TransportError, WireMsg};
+use super::{BufferPool, FaultCtx, Payload, SendSpec, Transport, TransportError, WireMsg};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::Duration;
 
@@ -42,6 +42,9 @@ pub struct ThreadTransport {
     take_back: Vec<Receiver<Vec<u8>>>,
     pool: BufferPool,
     timeout: Duration,
+    /// Transport-level round counter: one per `sendrecv_into` call, so
+    /// failure context can name the round a peer went silent in.
+    ops: u64,
 }
 
 impl ThreadTransport {
@@ -98,6 +101,7 @@ impl ThreadTransport {
                     .collect(),
                 pool: BufferPool::default(),
                 timeout,
+                ops: 0,
             });
         }
         endpoints
@@ -167,6 +171,8 @@ impl ThreadTransport {
     ) -> Result<Option<u64>, TransportError> {
         // Fire the (non-blocking, unbounded-channel) send, then block on
         // the receive: send ∥ recv.
+        let round = self.ops;
+        self.ops += 1;
         if let Some(s) = send {
             if s.to >= self.p || s.to == self.rank {
                 return Err(TransportError::Collective(format!(
@@ -192,10 +198,10 @@ impl ThreadTransport {
                     data: buf,
                 })
                 .map_err(|_| {
-                    TransportError::Io(format!(
-                        "rank {}: peer {} hung up",
-                        self.rank, s.to
-                    ))
+                    TransportError::io_at(
+                        format!("rank {}: peer {} hung up", self.rank, s.to),
+                        FaultCtx::peer(s.to).with_round(round),
+                    )
                 })?;
         }
         match recv_from {
@@ -218,14 +224,17 @@ impl ThreadTransport {
                         }
                         Ok(Some(msg.tag))
                     }
-                    Err(RecvTimeoutError::Timeout) => Err(TransportError::Timeout(format!(
-                        "rank {}: waited {:?} for a block from {from}",
-                        self.rank, self.timeout
-                    ))),
-                    Err(RecvTimeoutError::Disconnected) => Err(TransportError::Io(format!(
-                        "rank {}: peer {from} disconnected",
-                        self.rank
-                    ))),
+                    Err(RecvTimeoutError::Timeout) => Err(TransportError::timeout_at(
+                        format!(
+                            "rank {}: waited {:?} for a block from {from}",
+                            self.rank, self.timeout
+                        ),
+                        FaultCtx::peer(from).with_round(round),
+                    )),
+                    Err(RecvTimeoutError::Disconnected) => Err(TransportError::io_at(
+                        format!("rank {}: peer {from} disconnected", self.rank),
+                        FaultCtx::peer(from).with_round(round),
+                    )),
                 }
             }
         }
@@ -256,7 +265,10 @@ where
         }
     });
     super::drain_results(results, |e| {
-        matches!(e, TransportError::Timeout(_) | TransportError::Io(_))
+        matches!(
+            e,
+            TransportError::Timeout { .. } | TransportError::Io { .. }
+        )
     })
 }
 
@@ -328,7 +340,13 @@ mod tests {
             Ok(())
         })
         .unwrap_err();
-        assert!(matches!(err, TransportError::Timeout(_) | TransportError::Io(_)), "{err}");
+        assert!(
+            matches!(
+                err,
+                TransportError::Timeout { .. } | TransportError::Io { .. }
+            ),
+            "{err}"
+        );
     }
 
     #[test]

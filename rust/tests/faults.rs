@@ -1,0 +1,507 @@
+//! Seeded fault matrix: deterministic fault injection across the thread
+//! and TCP backends.
+//!
+//! Every scenario here is a pure function of a [`FaultPlan`] — re-running
+//! with the same plan (or the same `seed=N` spec) reproduces the same
+//! outcome, which is the whole point: a failure observed in CI is a
+//! replayable test case, not a flake. The matrix covers
+//!
+//!   * every single-rank kill × every broadcast round (bounded-time
+//!     structured `Fault`/`Timeout` errors, never a hang or a panic),
+//!   * every single severed circulant edge (byte-identical degraded
+//!     delivery through [`DegradedBcastPlan`] repair waves),
+//!   * frame corruption (caught by the collective determinacy check),
+//!   * round delays (slow ranks are correct, just late),
+//!   * same-seed-same-outcome replay determinism, and
+//!   * a kill-mid-round TCP integration test: survivors return structured
+//!     errors within 2× the configured deadline and the transport is
+//!     reusable after `reset_links` re-dials.
+//!
+//! The exhaustive schedule-invariant sweep (all p ∈ 2..=1024 plus seeded
+//! random p up to 2²⁰, including masked-edge reroute plans) is a
+//! `--release` tier: `cargo test --release --test faults`.
+//!
+//! On failure, every panic message echoes enough of the plan/seed to
+//! replay the exact scenario.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nblock_bcast::bench_support::XorShift;
+use nblock_bcast::collectives::bcast_circulant_degraded;
+use nblock_bcast::collectives::generic::bcast_circulant;
+use nblock_bcast::sched::{verify_p, DegradedBcastPlan, LinkMask, Skips};
+use nblock_bcast::transport::fault::{FaultPlan, FaultTransport};
+use nblock_bcast::transport::tcp::run_tcp;
+use nblock_bcast::transport::thread::run_threads;
+use nblock_bcast::transport::{Payload, SendSpec, Transport, TransportError};
+
+fn payload(m: u64, seed: u64) -> Vec<u8> {
+    (0..m).map(|i| ((i * 131 + seed * 29 + 7) % 251) as u8).collect()
+}
+
+/// Every distinct undirected edge `{r, r + skipₖ}` of the circulant graph.
+fn circulant_edges(p: u64) -> Vec<(u64, u64)> {
+    let skips = Skips::new(p);
+    let mut edges: Vec<(u64, u64)> = Vec::new();
+    for r in 0..p {
+        for k in 0..skips.q() {
+            let to = skips.to_proc(r, k);
+            let e = (r.min(to), r.max(to));
+            if !edges.contains(&e) {
+                edges.push(e);
+            }
+        }
+    }
+    edges
+}
+
+/// Run one broadcast with `plan` injected on the thread backend and fold
+/// the result into a deterministic outcome string (payload checksum on
+/// success, error display on failure) — the replay-determinism currency.
+fn thread_outcome(p: u64, n: usize, plan: &Arc<FaultPlan>, deadline: Duration) -> String {
+    let reference = payload(768, plan.seed() ^ p);
+    let mask = LinkMask::from_edges(plan.severed_edges());
+    let res = run_threads(p, Duration::from_secs(30), |t| {
+        let rank = t.rank();
+        let mut ft = FaultTransport::new(t, plan.clone(), deadline);
+        let data = if rank == 0 { Some(&reference[..]) } else { None };
+        bcast_circulant_degraded(&mut ft, 0, n, reference.len() as u64, data, &mask)
+    });
+    match res {
+        Ok(out) => {
+            let mut h = 0xcbf29ce484222325u64;
+            for buf in &out {
+                for &b in buf {
+                    h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+                }
+            }
+            format!("ok:{h:016x}")
+        }
+        Err(e) => format!("err:{e}"),
+    }
+}
+
+/// Kill one rank at one transport round: the drained error must be the
+/// victim's structured `Fault`, and the run must finish in bounded time.
+fn assert_kill(p: u64, victim: u64, round: u64, n: usize) {
+    let reference = payload(512, victim * 37 + round);
+    let plan = Arc::new(FaultPlan::new().kill(victim, round));
+    let deadline = Duration::from_millis(150);
+    let start = Instant::now();
+    let err = run_threads(p, Duration::from_secs(30), |t| {
+        let rank = t.rank();
+        let mut ft = FaultTransport::new(t, plan.clone(), deadline);
+        let data = if rank == 0 { Some(&reference[..]) } else { None };
+        bcast_circulant(&mut ft, 0, n, reference.len() as u64, data)
+    })
+    .expect_err("a killed rank must fail the collective");
+    let elapsed = start.elapsed();
+    assert!(
+        matches!(err, TransportError::Fault { .. }),
+        "p={p} kill={victim}@{round}: want the victim's structured Fault, got {err}"
+    );
+    assert!(
+        err.to_string().contains("killed at transport round"),
+        "p={p} kill={victim}@{round}: missing kill context in {err}"
+    );
+    let ctx = err.ctx().unwrap_or_else(|| {
+        panic!("p={p} kill={victim}@{round}: Fault carried no FaultCtx ({err})")
+    });
+    assert_eq!(ctx.round, Some(round), "p={p} kill={victim}@{round}: {err}");
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "p={p} kill={victim}@{round}: took {elapsed:?} — survivors hung past the deadline"
+    );
+}
+
+/// Every single-rank kill × every broadcast round at the small mesh sizes
+/// (debug-tier smoke; the large sizes ride the release tier below).
+#[test]
+fn kill_matrix_every_rank_every_round_small() {
+    let n = 3usize;
+    for p in [4u64, 7] {
+        let rounds = (n - 1 + Skips::new(p).q()) as u64;
+        for victim in 0..p {
+            for round in 0..rounds {
+                assert_kill(p, victim, round, n);
+            }
+        }
+    }
+}
+
+/// The same matrix at p ∈ {16, 33} — release tier (timeout-dominated;
+/// hundreds of meshes).
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-tier matrix: cargo test --release --test faults"
+)]
+fn kill_matrix_every_rank_every_round_large() {
+    let n = 3usize;
+    for p in [16u64, 33] {
+        let rounds = (n - 1 + Skips::new(p).q()) as u64;
+        for victim in 0..p {
+            for round in 0..rounds {
+                assert_kill(p, victim, round, n);
+            }
+        }
+    }
+}
+
+/// Every single severed circulant edge at p ∈ {4, 7, 16, 33}: the
+/// degraded executor must deliver byte-identical to the healthy path. At
+/// the small sizes the sever is additionally injected at the *transport*
+/// (FaultTransport) — proving the rerouted schedule genuinely avoids the
+/// dead link rather than merely planning around it.
+#[test]
+fn sever_matrix_every_circulant_edge_delivers() {
+    let n = 3usize;
+    let root = 1u64;
+    for p in [4u64, 7, 16, 33] {
+        let reference = payload(977, p);
+        for (a, b) in circulant_edges(p) {
+            let mask = LinkMask::from_edges([(a, b)]);
+            let out = if p <= 7 {
+                let plan = Arc::new(FaultPlan::new().sever(a, b));
+                run_threads(p, Duration::from_secs(30), |t| {
+                    let rank = t.rank();
+                    let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_secs(5));
+                    let data = if rank == root { Some(&reference[..]) } else { None };
+                    bcast_circulant_degraded(&mut ft, root, n, reference.len() as u64, data, &mask)
+                })
+            } else {
+                run_threads(p, Duration::from_secs(30), |mut t| {
+                    let rank = t.rank();
+                    let data = if rank == root { Some(&reference[..]) } else { None };
+                    bcast_circulant_degraded(&mut t, root, n, reference.len() as u64, data, &mask)
+                })
+            }
+            .unwrap_or_else(|e| panic!("p={p} sever={a}-{b}: {e}"));
+            for (r, o) in out.iter().enumerate() {
+                assert_eq!(
+                    o, &reference,
+                    "p={p} sever={a}-{b}: rank {r} not byte-identical to healthy"
+                );
+            }
+        }
+    }
+}
+
+/// A severed link *without* the reroute is a bounded-time structured
+/// timeout naming the peer and round — the raw transport-layer guarantee
+/// the degraded executor builds on.
+#[test]
+fn sever_without_reroute_times_out_with_context() {
+    let p = 4u64;
+    let deadline = Duration::from_millis(120);
+    let plan = Arc::new(FaultPlan::new().sever(0, 1));
+    let reference = payload(256, 3);
+    let start = Instant::now();
+    let err = run_threads(p, Duration::from_secs(30), |t| {
+        let rank = t.rank();
+        let mut ft = FaultTransport::new(t, plan.clone(), deadline);
+        let data = if rank == 0 { Some(&reference[..]) } else { None };
+        bcast_circulant(&mut ft, 0, 2, reference.len() as u64, data)
+    })
+    .expect_err("an unrerouted severed link must fail the collective");
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "severed link hung: {:?}",
+        start.elapsed()
+    );
+    let ctx = err
+        .ctx()
+        .unwrap_or_else(|| panic!("sever error carried no FaultCtx: {err}"));
+    assert!(ctx.peer.is_some() && ctx.round.is_some(), "incomplete ctx in {err}");
+}
+
+/// A corrupted frame (flipped payload bytes + tag) is caught by the
+/// collective determinacy check as a structured error, at exactly the
+/// rounds where the victim receives — `n` of them, one per block.
+#[test]
+fn corrupt_frame_is_detected_by_determinacy_check() {
+    let p = 5u64;
+    let n = 3usize;
+    let victim = 1u64;
+    let rounds = n - 1 + Skips::new(p).q();
+    let reference = payload(300, 11);
+    let mut detected = 0usize;
+    for round in 0..rounds as u64 {
+        let plan = Arc::new(FaultPlan::new().corrupt(victim, round));
+        let res = run_threads(p, Duration::from_secs(30), |t| {
+            let rank = t.rank();
+            let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_secs(5));
+            let data = if rank == 0 { Some(&reference[..]) } else { None };
+            bcast_circulant(&mut ft, 0, n, reference.len() as u64, data)
+        });
+        match res {
+            Err(e) => {
+                assert!(
+                    e.to_string().contains("wire carried"),
+                    "corrupt={victim}@{round}: want the determinacy check, got {e}"
+                );
+                detected += 1;
+            }
+            Ok(out) => {
+                // No reception at this round — the corruption had nothing
+                // to bite; delivery must still be byte-identical.
+                assert!(out.iter().all(|o| o == &reference), "corrupt={victim}@{round}");
+            }
+        }
+    }
+    assert_eq!(
+        detected, n,
+        "victim receives exactly one frame per block — every one must be caught"
+    );
+}
+
+/// A delayed round slows the collective down but never changes its bytes.
+#[test]
+fn delay_round_is_slow_but_correct() {
+    let p = 5u64;
+    let plan = Arc::new(FaultPlan::new().delay(2, 1, 120));
+    let reference = payload(640, 17);
+    let start = Instant::now();
+    let out = run_threads(p, Duration::from_secs(30), |t| {
+        let rank = t.rank();
+        let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_secs(5));
+        let data = if rank == 0 { Some(&reference[..]) } else { None };
+        bcast_circulant(&mut ft, 0, 3, reference.len() as u64, data)
+    })
+    .unwrap();
+    assert!(out.iter().all(|o| o == &reference));
+    assert!(
+        start.elapsed() >= Duration::from_millis(120),
+        "the injected 120ms delay never fired"
+    );
+}
+
+/// Same seed ⇒ same plan ⇒ same outcome, run to run — kills resolve to
+/// the identical structured error, severs to the identical delivery.
+#[test]
+fn replay_same_seed_same_outcome() {
+    let p = 7u64;
+    let deadline = Duration::from_millis(150);
+    for seed in 0..12u64 {
+        let a = Arc::new(FaultPlan::from_seed(seed, p));
+        let b = Arc::new(FaultPlan::from_seed(seed, p));
+        assert_eq!(*a, *b, "seed={seed}: plan expansion must be deterministic");
+        let first = thread_outcome(p, 3, &a, deadline);
+        let second = thread_outcome(p, 3, &b, deadline);
+        assert_eq!(
+            first, second,
+            "seed={seed} plan '{a}': replay diverged — {first} vs {second}"
+        );
+    }
+}
+
+/// The `--fault-plan` spec syntax round-trips through parse for seeded
+/// plans too, so the spec echoed on a CI failure replays the exact run.
+#[test]
+fn seeded_spec_round_trips_through_parse() {
+    for seed in [1u64, 9, 42] {
+        let plan = FaultPlan::from_seed(seed, 16);
+        let reparsed = FaultPlan::parse(&plan.to_string(), 16)
+            .unwrap_or_else(|e| panic!("seed={seed}: '{plan}' failed to reparse: {e}"));
+        assert_eq!(plan.actions(), reparsed.actions(), "seed={seed}");
+    }
+}
+
+#[derive(Debug)]
+enum TcpOutcome {
+    Victim { got_fault: bool },
+    Completed,
+    Errored {
+        is_timeout: bool,
+        peer: Option<u64>,
+        round: Option<u64>,
+        elapsed: Duration,
+        display: String,
+    },
+}
+
+/// Kill-mid-round TCP integration test: abort one rank during round
+/// ⌈q/2⌉ while it *holds its sockets open* (a hung peer, not a closed
+/// one), and require that every survivor either completes or returns a
+/// structured error with peer/round context within 2× the configured
+/// deadline — then prove the transport is reusable by re-dialing a
+/// survivor ring after `reset_links`.
+#[test]
+fn tcp_kill_mid_round_is_bounded_and_transport_reusable() {
+    let p = 5u64;
+    let n = 4usize;
+    let q = Skips::new(p).q() as u64;
+    let kill_round = q.div_ceil(2);
+    let victim = 3u64;
+    let deadline = Duration::from_millis(800);
+    let reference = payload(4096, 9);
+    let plan = Arc::new(FaultPlan::new().kill(victim, kill_round));
+    // Common wall-clock point (past every survivor's worst-case error) at
+    // which survivors re-dial each other, so no ring recv outwaits a peer
+    // still stuck in the collective.
+    let resync = deadline * 2 + Duration::from_millis(300);
+    let outcomes = run_tcp(p, deadline, |t| {
+        let rank = t.rank();
+        let start = Instant::now();
+        let mut ft = FaultTransport::new(t, plan.clone(), deadline);
+        let data = if rank == 0 { Some(&reference[..]) } else { None };
+        let res = bcast_circulant(&mut ft, 0, n, reference.len() as u64, data);
+        let elapsed = start.elapsed();
+        if rank == victim {
+            // Hold the sockets open past the survivors' deadline window: a
+            // victim that dropped its transport would close them and turn
+            // the survivors' hangs into instant hangups.
+            std::thread::sleep(resync + deadline);
+            return Ok(TcpOutcome::Victim {
+                got_fault: matches!(res, Err(TransportError::Fault { .. })),
+            });
+        }
+        // Survivors: tear down poisoned links, then prove reuse.
+        let mut tcp = ft.into_inner();
+        tcp.reset_links();
+        if start.elapsed() < resync {
+            std::thread::sleep(resync - start.elapsed());
+        }
+        let survivors: Vec<u64> = (0..p).filter(|&r| r != victim).collect();
+        let i = survivors.iter().position(|&r| r == rank).unwrap();
+        let to = survivors[(i + 1) % survivors.len()];
+        let from = survivors[(i + survivors.len() - 1) % survivors.len()];
+        let mine = [rank as u8; 9];
+        let mut buf = Vec::new();
+        let tag = tcp.sendrecv_into(
+            Some(SendSpec {
+                to,
+                tag: 777,
+                data: Payload::Bytes(&mine),
+            }),
+            Some(from),
+            &mut buf,
+        )?;
+        if tag != Some(777) || buf != [from as u8; 9] {
+            return Err(TransportError::Collective(format!(
+                "rank {rank}: post-redial exchange corrupt (tag {tag:?})"
+            )));
+        }
+        Ok(match res {
+            Ok(out) => {
+                assert_eq!(out, reference, "rank {rank}: completed survivor not byte-identical");
+                TcpOutcome::Completed
+            }
+            Err(e) => {
+                let ctx = e.ctx().unwrap_or_default();
+                TcpOutcome::Errored {
+                    is_timeout: matches!(e, TransportError::Timeout { .. }),
+                    peer: ctx.peer,
+                    round: ctx.round,
+                    elapsed,
+                    display: e.to_string(),
+                }
+            }
+        })
+    })
+    .unwrap_or_else(|e| panic!("kill={victim}@{kill_round}: mesh failed outright: {e}"));
+    assert!(
+        matches!(outcomes[victim as usize], TcpOutcome::Victim { got_fault: true }),
+        "victim must observe its own structured Fault: {:?}",
+        outcomes[victim as usize]
+    );
+    let mut timeouts_naming_victim = 0usize;
+    let mut errored = 0usize;
+    for (r, o) in outcomes.iter().enumerate() {
+        if let TcpOutcome::Errored {
+            is_timeout,
+            peer,
+            round,
+            elapsed,
+            display,
+        } = o
+        {
+            errored += 1;
+            assert!(
+                peer.is_some() && round.is_some(),
+                "rank {r}: structured error lost its peer/round context: {display}"
+            );
+            assert!(
+                round.unwrap() >= kill_round,
+                "rank {r}: failed before the kill round? {display}"
+            );
+            assert!(
+                *elapsed <= deadline * 2,
+                "rank {r}: error took {elapsed:?}, past 2× the {deadline:?} deadline: {display}"
+            );
+            if *is_timeout && *peer == Some(victim) {
+                timeouts_naming_victim += 1;
+            }
+        }
+    }
+    assert!(errored >= 1, "no survivor observed the kill: {outcomes:?}");
+    assert!(
+        timeouts_naming_victim >= 1,
+        "no survivor timed out naming the victim: {outcomes:?}"
+    );
+}
+
+/// A severed circulant edge on TCP: repair waves dial non-circulant relay
+/// links lazily and delivery stays byte-identical.
+#[test]
+fn tcp_severed_edge_reroutes() {
+    let p = 5u64;
+    let reference = payload(2048, 21);
+    let mask = LinkMask::from_edges([(1u64, 2u64)]);
+    let out = run_tcp(p, Duration::from_secs(30), |mut t| {
+        let rank = t.rank();
+        let data = if rank == 0 { Some(&reference[..]) } else { None };
+        bcast_circulant_degraded(&mut t, 0, 3, reference.len() as u64, data, &mask)
+    })
+    .unwrap_or_else(|e| panic!("tcp sever=1-2: {e}"));
+    for (r, o) in out.iter().enumerate() {
+        assert_eq!(o, &reference, "tcp sever=1-2: rank {r}");
+    }
+}
+
+/// Exhaustive schedule-invariant sweep — release tier. All p ∈ 2..=1024
+/// (with Theorem-1 delivery checks at the small sizes), 32 seeded random
+/// p up to 2²⁰, and every single-edge masked reroute plan for p ∈ 3..=48
+/// independently re-verified by `DegradedBcastPlan::verify`.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-tier sweep: cargo test --release --test faults"
+)]
+fn release_sweep_schedule_invariants_and_masked_reroutes() {
+    for p in 2..=1024u64 {
+        let ns: &[usize] = if p <= 128 { &[1, 4] } else { &[] };
+        verify_p(p, ns).unwrap_or_else(|e| panic!("verify_p({p}): {e}"));
+    }
+    let sweep_seed = 0xFA_017u64;
+    let mut rng = XorShift::new(sweep_seed);
+    for _ in 0..32 {
+        let p = rng.range(1025, 1 << 20);
+        verify_p(p, &[]).unwrap_or_else(|e| panic!("verify_p({p}) [seed {sweep_seed:#x}]: {e}"));
+    }
+    for p in 3..=48u64 {
+        for (a, b) in circulant_edges(p) {
+            for root in [0, p - 1] {
+                for n in [1usize, 5] {
+                    let mask = LinkMask::from_edges([(a, b)]);
+                    let plan = DegradedBcastPlan::new(p, root, n, mask).unwrap_or_else(|e| {
+                        panic!("p={p} root={root} n={n} sever={a}-{b}: {e}")
+                    });
+                    plan.verify().unwrap_or_else(|e| {
+                        panic!("p={p} root={root} n={n} sever={a}-{b}: {e}")
+                    });
+                }
+            }
+        }
+    }
+    // p = 2: severing the only link must be a structured plan-time error,
+    // not a hang.
+    assert!(DegradedBcastPlan::new(2, 0, 1, LinkMask::from_edges([(0, 1)])).is_err());
+    // Large-p spot check: reroute planning stays tractable off the dense
+    // sweep range.
+    DegradedBcastPlan::new(257, 3, 3, LinkMask::from_edges([(10, 11)]))
+        .unwrap()
+        .verify()
+        .unwrap();
+}
