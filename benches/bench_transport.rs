@@ -35,6 +35,10 @@ use nblock_bcast::collectives::generic_baselines::{
 };
 use nblock_bcast::collectives::segment::auto_block_count;
 use nblock_bcast::simulator::CostModel;
+#[cfg(unix)]
+use nblock_bcast::transport::hier::run_hier;
+#[cfg(unix)]
+use nblock_bcast::transport::shm::run_shm;
 use nblock_bcast::transport::sim::run_sim;
 use nblock_bcast::transport::tcp::run_tcp;
 use nblock_bcast::transport::thread::run_threads;
@@ -350,11 +354,31 @@ fn main() {
                     steady_state_bcast(&mut t, algo, 0, n_run, m, &d, warmup, reps)
                 })
                 .expect("tcp backend");
-                for (backend, res) in [
+                let mut series: Vec<(&'static str, Vec<(f64, u64)>)> = vec![
                     ("sim", sim_res),
                     ("thread", thread_res),
                     ("tcp", tcp_res),
-                ] {
+                ];
+                // Same SPMD body over the cross-process ring path (threads
+                // sharing one segment — identical wire layout to `launch`)
+                // and over the two-node shm × TCP composition.
+                #[cfg(unix)]
+                series.push((
+                    "shm",
+                    run_shm(p, timeout, |mut t| {
+                        steady_state_bcast(&mut t, algo, 0, n_run, m, &d, warmup, reps)
+                    })
+                    .expect("shm backend"),
+                ));
+                #[cfg(unix)]
+                series.push((
+                    "hier",
+                    run_hier(p, p.div_ceil(2), timeout, |mut t| {
+                        steady_state_bcast(&mut t, algo, 0, n_run, m, &d, warmup, reps)
+                    })
+                    .expect("hier backend"),
+                ));
+                for (backend, res) in series {
                     let rounds = algo
                         .bcast_round_count(p, n_run)
                         .expect("bench algorithms all implement broadcast");
@@ -407,11 +431,28 @@ fn main() {
                     steady_state_allreduce(&mut t, algo, n, &expect, warmup, reps)
                 })
                 .expect("tcp backend");
-                for (backend, res) in [
+                let mut series: Vec<(&'static str, Vec<(f64, u64)>)> = vec![
                     ("sim", sim_res),
                     ("thread", thread_res),
                     ("tcp", tcp_res),
-                ] {
+                ];
+                #[cfg(unix)]
+                series.push((
+                    "shm",
+                    run_shm(p, timeout, |mut t| {
+                        steady_state_allreduce(&mut t, algo, n, &expect, warmup, reps)
+                    })
+                    .expect("shm backend"),
+                ));
+                #[cfg(unix)]
+                series.push((
+                    "hier",
+                    run_hier(p, p.div_ceil(2), timeout, |mut t| {
+                        steady_state_allreduce(&mut t, algo, n, &expect, warmup, reps)
+                    })
+                    .expect("hier backend"),
+                ));
+                for (backend, res) in series {
                     let rounds = algo
                         .allreduce_round_count(p, n)
                         .expect("both allreduce series implement the round count");
@@ -436,13 +477,16 @@ fn main() {
         }
     }
     // Steady-state circulant (fixed-n AND auto-segmented) plus binomial
-    // rounds on the point-to-point backends must not touch the payload
-    // allocator: borrowed sends, pooled/reused receives, through the
-    // `_into` paths. (The scatter-allgather rows are reported for the
-    // record; its `_into` variant is expected to be clean too but is not
-    // yet gated.)
+    // rounds on the point-to-point backends — tcp, thread, AND the
+    // shared-memory rings — must not touch the payload allocator:
+    // borrowed sends, pooled/reused receives, through the `_into` paths.
+    // (The scatter-allgather rows are reported for the record; hier is
+    // also reported-only, because its mixed rounds run the send half on a
+    // short-lived scoped thread whose spawn bookkeeping is not a payload
+    // path.)
     for row in rows.iter().filter(|r| {
         r.backend != "sim"
+            && r.backend != "hier"
             && (r.algo == "circulant"
                 || r.algo == "binomial"
                 || r.algo == "segmented"

@@ -87,7 +87,7 @@ Tools:
                              --segment N forces N blocks, overriding --n)
   allgatherv --p P --m BYTES [--n N] [--type T]  compare allgatherv algorithms
                                                  (T: regular|irregular|degenerate)
-    both accept --transport {sim,thread,tcp}: run the generic SPMD
+    both accept --transport {sim,thread,tcp,shm,hier}: run the generic SPMD
     collective (real payload, verified) over that backend instead of the
     cost-model comparison; transport runs accept --timeout SECS (per-rank
     operation deadline, default 60), and bcast accepts --fault-plan SPEC
@@ -115,6 +115,17 @@ Tools:
                              {auto,circulant,circulant-combined,ring}) runs
                              the generic SPMD allreduce on that backend,
                              verified at all ranks
+  launch [bcast|allreduce] --p P [--transport shm|hier] [--rpn R]
+                             fork/exec P real single-rank processes on this
+                             host and run the collective across them: over
+                             one shared-memory segment (shm, the default)
+                             or the shm-within-node × TCP-across-nodes
+                             composition (hier; --rpn ranks per node,
+                             default ⌈P/2⌉, rendezvous over loopback);
+                             accepts --m/--n/--root (bcast), --elems
+                             (allreduce), --timeout SECS; every rank
+                             verifies its result byte-exactly and rank 0
+                             prints a one-line summary
   trace-report FILE          re-read a --trace Chrome-trace JSON and print
                              its per-round latency table and α/β fit
   threaded --p P --n N --m BYTES   one-OS-thread-per-rank broadcast
@@ -130,7 +141,7 @@ binary's working directory under bench_results/.
 /// of silently falling back to the cost-model path.
 fn transport_arg(args: &Args) -> anyhow::Result<Option<&String>> {
     if args.flags.iter().any(|f| f == "transport") {
-        anyhow::bail!("--transport needs a value: sim|thread|tcp");
+        anyhow::bail!("--transport needs a value: sim|thread|tcp|shm|hier");
     }
     Ok(args.options.get("transport"))
 }
@@ -181,7 +192,7 @@ fn fault_plan_arg(args: &Args) -> anyhow::Result<Option<&str>> {
 /// instead of writing an empty file.
 fn reject_untraceable(args: &Args) -> anyhow::Result<()> {
     if args.flag("trace") {
-        anyhow::bail!("--trace needs a --transport backend (sim|thread|tcp)");
+        anyhow::bail!("--trace needs a --transport backend (sim|thread|tcp|shm|hier)");
     }
     Ok(())
 }
@@ -302,6 +313,26 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
             Some(path) => tools::trace_report(path),
             None => anyhow::bail!("trace-report needs a file: nblock trace-report <trace.json>"),
         },
+        #[cfg(unix)]
+        "launch" => tools::launch(
+            args.positional.first().map(String::as_str).unwrap_or("bcast"),
+            args.get("p", 8),
+            args.get("rpn", 0),
+            &args.get("transport", "shm".to_string()),
+            args.get("m", 1 << 16),
+            args.get("elems", 1 << 12),
+            args.get("n", 0),
+            args.get("root", 0),
+            timeout_arg(&args)?,
+        ),
+        // Internal: the per-rank child process `launch` fork/execs. Not in
+        // HELP on purpose — its contract is owned by `tools::launch`.
+        #[cfg(unix)]
+        "launch-worker" => tools::launch_worker(&args),
+        #[cfg(not(unix))]
+        "launch" | "launch-worker" => {
+            anyhow::bail!("launch needs a Unix host (memmap'd shared-memory segments)")
+        }
         "threaded" => tools::threaded(args.get("p", 16), args.get("n", 8), args.get("m", 1 << 16)),
         "ablation" => ablation::run(
             &args.get("which", "all".to_string()),

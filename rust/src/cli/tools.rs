@@ -326,7 +326,25 @@ where
             run_tcp(p, timeout, |t| spmd(Box::new(t))).map_err(|e| anyhow::anyhow!("{e}"))?,
             None,
         ),
-        other => bail!("unknown transport `{other}` (sim|thread|tcp)"),
+        // One process, one shared-memory segment, one OS thread per rank —
+        // the exact cross-process ring path; `launch` runs the same thing
+        // across real processes.
+        #[cfg(unix)]
+        "shm" => (
+            crate::transport::shm::run_shm(p, timeout, |t| spmd(Box::new(t)))
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+            None,
+        ),
+        // Two simulated nodes of ⌈p/2⌉ ranks: shm within each, loopback
+        // TCP across. `launch --transport hier --rpn R` controls the node
+        // size for real multi-process runs.
+        #[cfg(unix)]
+        "hier" => (
+            crate::transport::hier::run_hier(p, p.div_ceil(2), timeout, |t| spmd(Box::new(t)))
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+            None,
+        ),
+        other => bail!("unknown transport `{other}` (sim|thread|tcp|shm|hier)"),
     })
 }
 
@@ -416,16 +434,20 @@ fn sim_cost_model() -> CostModel {
     CostModel::flat_default()
 }
 
-/// The [`crate::transport::CostHint`] the chosen backend will report —
-/// used to display the same `Auto` resolution the dispatch will make (the
-/// sim backend derives its latency/bandwidth crossover from
-/// [`sim_cost_model`]; the point-to-point backends use the trait's
-/// fallback hint).
+/// The [`crate::transport::CostHint`] the chosen backend will report
+/// *before warm-up* — used to display the same `Auto` resolution the
+/// dispatch will make (the sim backend derives its latency/bandwidth
+/// crossover from [`sim_cost_model`]; shm has its own static link class;
+/// the other point-to-point backends use the trait's fallback hint). The
+/// run itself may resolve from a warm-up-measured fit instead — rank-
+/// uniform either way, so the display names the static class it starts
+/// from.
 fn backend_hint(backend: &str) -> crate::transport::CostHint {
-    if backend == "sim" {
-        crate::transport::CostHint::from_model(&sim_cost_model())
-    } else {
-        crate::transport::CostHint::DEFAULT
+    match backend {
+        "sim" => crate::transport::CostHint::from_model(&sim_cost_model()),
+        #[cfg(unix)]
+        "shm" => crate::transport::shm::SHM_STATIC_HINT,
+        _ => crate::transport::CostHint::DEFAULT,
     }
 }
 
@@ -823,6 +845,269 @@ pub fn allreduce_transport(
     }
     if let (Some(path), Some(rec)) = (trace, &recorder) {
         report_trace(path, rec, p, (elems * 4) as u64)?;
+    }
+    Ok(())
+}
+
+/// Fork/exec `p` real single-rank worker processes on this host and run a
+/// collective across them: over one shared-memory segment (`shm`) or the
+/// shm-within-node × TCP-across-nodes composition (`hier`, rendezvous over
+/// loopback). Every worker verifies its own result (byte-exact against the
+/// deterministic root payload for `bcast`, against the serial sum for
+/// `allreduce`) and exits nonzero on any mismatch; the parent reports which
+/// ranks failed. Segments are created here and unlinked when all workers
+/// exit.
+#[cfg(unix)]
+#[allow(clippy::too_many_arguments)]
+pub fn launch(
+    collective: &str,
+    p: u64,
+    rpn: u64,
+    backend: &str,
+    m: u64,
+    elems: usize,
+    n: usize,
+    root: u64,
+    timeout: Duration,
+) -> Result<()> {
+    use crate::transport::bootstrap::serve_rendezvous;
+    use crate::transport::shm::{default_ring_cap, segment_path, Segment};
+    use std::net::TcpListener;
+    use std::process::{Command, Stdio};
+
+    if p == 0 {
+        bail!("need at least one rank");
+    }
+    if !matches!(collective, "bcast" | "allreduce") {
+        bail!("unknown launch collective `{collective}` (bcast|allreduce)");
+    }
+    if root >= p {
+        bail!("root must be < p");
+    }
+    let exe = std::env::current_exe()?;
+    let secs = timeout.as_secs().max(1);
+    let t0 = std::time::Instant::now();
+    let spawn = |rank: u64, extra: &[(&str, String)]| -> Result<std::process::Child> {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("launch-worker")
+            .arg("--collective")
+            .arg(collective)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--p")
+            .arg(p.to_string())
+            .arg("--transport")
+            .arg(backend)
+            .arg("--m")
+            .arg(m.to_string())
+            .arg("--elems")
+            .arg(elems.to_string())
+            .arg("--n")
+            .arg(n.to_string())
+            .arg("--root")
+            .arg(root.to_string())
+            .arg("--timeout")
+            .arg(secs.to_string())
+            .stdin(Stdio::null());
+        for (name, value) in extra {
+            cmd.arg(format!("--{name}")).arg(value);
+        }
+        Ok(cmd.spawn()?)
+    };
+    // Keep the creator-side handles alive until every worker has exited —
+    // segments unlink on drop.
+    let mut segments: Vec<Segment> = Vec::new();
+    let mut children = Vec::with_capacity(p as usize);
+    match backend {
+        "shm" => {
+            let path = segment_path(&format!("launch-{collective}"));
+            let seg = Segment::create(&path, p, default_ring_cap(p))
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let seg_arg = seg.path().display().to_string();
+            segments.push(seg);
+            println!(
+                "launch: {p} × `{collective}` over one shared-memory segment ({} rings of {})",
+                p * (p - 1),
+                fmt_bytes(default_ring_cap(p))
+            );
+            for rank in 0..p {
+                children.push(spawn(rank, &[("segment", seg_arg.clone())])?);
+            }
+        }
+        "hier" => {
+            let rpn = if rpn == 0 { p.div_ceil(2) } else { rpn };
+            let nodes = p.div_ceil(rpn);
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            let rendezvous = listener.local_addr()?.to_string();
+            let mut node_paths = Vec::with_capacity(nodes as usize);
+            for node in 0..nodes {
+                let node_p = rpn.min(p - node * rpn);
+                let path = segment_path(&format!("launch-{collective}-node{node}"));
+                let seg = Segment::create(&path, node_p, default_ring_cap(node_p))
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                node_paths.push(seg.path().display().to_string());
+                segments.push(seg);
+            }
+            println!(
+                "launch: {p} × `{collective}` over {nodes} simulated nodes of ≤ {rpn} ranks \
+                 (shm within, loopback TCP across, rendezvous at {rendezvous})"
+            );
+            for rank in 0..p {
+                let node = rank / rpn;
+                children.push(spawn(
+                    rank,
+                    &[
+                        ("segment", node_paths[node as usize].clone()),
+                        ("rendezvous", rendezvous.clone()),
+                        ("rpn", rpn.to_string()),
+                    ],
+                )?);
+            }
+            // The workers dial back in to exchange their mesh endpoints;
+            // serve on this thread so a hung worker surfaces as a named
+            // timeout rather than a silent wait.
+            if let Err(e) = serve_rendezvous(&listener, p, timeout) {
+                for child in &mut children {
+                    let _ = child.kill();
+                }
+                for child in &mut children {
+                    let _ = child.wait();
+                }
+                bail!("rendezvous failed: {e}");
+            }
+        }
+        other => bail!("unknown launch transport `{other}` (shm|hier)"),
+    }
+    let mut failed = Vec::new();
+    for (rank, child) in children.iter_mut().enumerate() {
+        if !child.wait()?.success() {
+            failed.push(rank);
+        }
+    }
+    drop(segments);
+    if !failed.is_empty() {
+        bail!("launch: ranks {failed:?} exited with failure");
+    }
+    println!(
+        "launch: all {p} processes verified; wall time {}",
+        fmt_time(t0.elapsed().as_secs_f64())
+    );
+    Ok(())
+}
+
+/// The per-rank child process behind [`launch`]: attach to the inherited
+/// shared-memory segment (and, for `hier`, join the loopback TCP mesh via
+/// the rendezvous server), run the collective, verify locally, exit
+/// nonzero on any mismatch.
+#[cfg(unix)]
+pub fn launch_worker(args: &super::Args) -> Result<()> {
+    use crate::collectives::generic::Algorithm;
+    use crate::transport::bootstrap::join_rendezvous;
+    use crate::transport::hier::HierTransport;
+    use crate::transport::shm::ShmTransport;
+    use crate::transport::tcp::TcpTransport;
+    use crate::transport::Transport;
+    use std::net::{SocketAddr, TcpListener};
+    use std::path::Path;
+
+    let rank: u64 = args.get("rank", u64::MAX);
+    let p: u64 = args.get("p", 0);
+    if p == 0 || rank >= p {
+        bail!("launch-worker: --rank/--p missing or out of range");
+    }
+    let collective = args
+        .options
+        .get("collective")
+        .map(String::as_str)
+        .unwrap_or("bcast");
+    let backend = args
+        .options
+        .get("transport")
+        .map(String::as_str)
+        .unwrap_or("shm");
+    let segment = args
+        .options
+        .get("segment")
+        .ok_or_else(|| anyhow::anyhow!("launch-worker: missing --segment"))?;
+    let timeout = Duration::from_secs(args.get("timeout", 60));
+    let mut t: Box<dyn Transport> = match backend {
+        "shm" => Box::new(
+            ShmTransport::attach(Path::new(segment), rank, timeout)
+                .map_err(|e| anyhow::anyhow!("{e}"))?,
+        ),
+        "hier" => {
+            let rendezvous = args
+                .options
+                .get("rendezvous")
+                .ok_or_else(|| anyhow::anyhow!("launch-worker: missing --rendezvous"))?;
+            let rpn: u64 = args.get("rpn", 0);
+            if rpn == 0 {
+                bail!("launch-worker: missing --rpn");
+            }
+            let listener = TcpListener::bind("127.0.0.1:0")?;
+            let endpoint = listener.local_addr()?.to_string();
+            let map = join_rendezvous(rendezvous, rank, &endpoint, timeout)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let addrs = map
+                .iter()
+                .map(|a| a.parse())
+                .collect::<Result<Vec<SocketAddr>, _>>()
+                .map_err(|e| anyhow::anyhow!("launch-worker: bad endpoint in the map: {e}"))?;
+            let tcp = TcpTransport::connect(rank, p, listener, &addrs, timeout)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            let node_base = (rank / rpn) * rpn;
+            let shm = ShmTransport::attach(Path::new(segment), rank - node_base, timeout)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            Box::new(HierTransport::new(shm, tcp).map_err(|e| anyhow::anyhow!("{e}"))?)
+        }
+        other => bail!("launch-worker: unknown transport `{other}` (shm|hier)"),
+    };
+    let q = ceil_log2(p);
+    match collective {
+        "bcast" => {
+            let m: u64 = args.get("m", 1 << 16);
+            let root: u64 = args.get("root", 0);
+            let n = match args.get("n", 0) {
+                0 => bcast_block_count(m, q, 70.0),
+                n => n,
+            };
+            // The same deterministic payload `bcast --transport sim` uses,
+            // so a launch run is byte-comparable to the simulator.
+            let payload: Vec<u8> = (0..m).map(|i| ((i * 131) % 251) as u8).collect();
+            let data = (rank == root).then_some(payload.as_slice());
+            let got = generic::bcast(t.as_mut(), Algorithm::Circulant, root, n, m, data)
+                .map_err(|e| anyhow::anyhow!("rank {rank}: {e}"))?;
+            if got != payload {
+                bail!("rank {rank}: broadcast bytes diverge from the root payload");
+            }
+            t.barrier().map_err(|e| anyhow::anyhow!("rank {rank}: {e}"))?;
+            if rank == 0 {
+                println!(
+                    "  rank 0: bcast of {} over p = {p} (n = {n}) byte-identical at this rank",
+                    fmt_bytes(m)
+                );
+            }
+        }
+        "allreduce" => {
+            let elems: usize = args.get("elems", 1 << 12);
+            let n = match args.get("n", 0) {
+                0 => (elems / 4096).clamp(1, 256),
+                n => n,
+            };
+            let contribs = reduce_contribs(p, elems);
+            let got =
+                generic::allreduce(t.as_mut(), Algorithm::Circulant, n, &contribs[rank as usize])
+                    .map_err(|e| anyhow::anyhow!("rank {rank}: {e}"))?;
+            check_sum(&format!("rank {rank}"), &got, &serial_sum(&contribs))?;
+            t.barrier().map_err(|e| anyhow::anyhow!("rank {rank}: {e}"))?;
+            if rank == 0 {
+                println!(
+                    "  rank 0: allreduce of {elems} f32 over p = {p} (n = {n}) matches the \
+                     serial sum"
+                );
+            }
+        }
+        other => bail!("launch-worker: unknown collective `{other}` (bcast|allreduce)"),
     }
     Ok(())
 }

@@ -1,0 +1,330 @@
+//! Rendezvous: how `p` freshly-started processes learn the rank→address
+//! map before any transport exists.
+//!
+//! Two interchangeable mechanisms, both producing the same `Vec<String>`
+//! of per-rank endpoint strings (TCP `host:port` addresses, shared-memory
+//! segment paths — the layer is payload-agnostic):
+//!
+//! - **Socket rendezvous** — the root binds a listener and runs
+//!   [`serve_rendezvous`]; every rank (root included, over loopback if it
+//!   likes) dials it with [`join_rendezvous`], registering
+//!   `(rank, my_endpoint)` and blocking until the root has heard from all
+//!   `p` ranks, at which point everyone receives the full map on the same
+//!   connection. One round trip per rank, no ordering requirements, works
+//!   across hosts.
+//! - **File rendezvous** — for same-host launches where a filesystem path
+//!   is simpler to inherit than a socket address: the parent writes the
+//!   complete map with [`publish_file`] (atomically, via rename) and each
+//!   child polls [`wait_file`].
+//!
+//! Wire format of the socket handshake (everything little-endian, like
+//! the transport frames): registration is `[magic u64][rank u64]
+//! [len u64][endpoint bytes]`; the reply is `[magic u64][p u64]` followed
+//! by `p` length-prefixed endpoint strings in rank order.
+
+use super::TransportError;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Handshake magic for the socket rendezvous, so a stray connection (port
+/// scanner, misconfigured peer) is rejected instead of corrupting the map.
+pub const BOOT_MAGIC: u64 = u64::from_le_bytes(*b"nblkBoo1");
+
+/// Endpoint strings above this length are rejected as corrupt.
+const MAX_ENDPOINT_BYTES: u64 = 4096;
+
+fn read_u64(s: &mut TcpStream) -> Result<u64, TransportError> {
+    let mut b = [0u8; 8];
+    s.read_exact(&mut b)
+        .map_err(|e| TransportError::io(format!("rendezvous read: {e}")))?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_all(s: &mut TcpStream, bytes: &[u8]) -> Result<(), TransportError> {
+    s.write_all(bytes)
+        .map_err(|e| TransportError::io(format!("rendezvous write: {e}")))
+}
+
+fn read_endpoint(s: &mut TcpStream) -> Result<String, TransportError> {
+    let len = read_u64(s)?;
+    if len > MAX_ENDPOINT_BYTES {
+        return Err(TransportError::Protocol(format!(
+            "rendezvous endpoint of {len} bytes — corrupt handshake"
+        )));
+    }
+    let mut bytes = vec![0u8; len as usize];
+    s.read_exact(&mut bytes)
+        .map_err(|e| TransportError::io(format!("rendezvous read: {e}")))?;
+    String::from_utf8(bytes)
+        .map_err(|_| TransportError::Protocol("rendezvous endpoint is not UTF-8".into()))
+}
+
+/// Root side of the socket rendezvous: accept registrations on `listener`
+/// until all `p` ranks have checked in, then send every one of them the
+/// complete rank→endpoint map and return it. Duplicate or out-of-range
+/// ranks and bad magic abort the rendezvous (a clean failure at launch
+/// beats a corrupted map); `timeout` bounds the whole wait.
+pub fn serve_rendezvous(
+    listener: &TcpListener,
+    p: u64,
+    timeout: Duration,
+) -> Result<Vec<String>, TransportError> {
+    if p == 0 {
+        return Err(TransportError::Protocol("need at least one rank".into()));
+    }
+    let deadline = Instant::now() + timeout;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| TransportError::io(format!("rendezvous listener: {e}")))?;
+    let mut endpoints: Vec<Option<String>> = vec![None; p as usize];
+    let mut registered: Vec<TcpStream> = Vec::with_capacity(p as usize);
+    while registered.len() < p as usize {
+        match listener.accept() {
+            Ok((mut s, _)) => {
+                s.set_nonblocking(false)
+                    .map_err(|e| TransportError::io(format!("rendezvous accept: {e}")))?;
+                let remaining = deadline
+                    .saturating_duration_since(Instant::now())
+                    .max(Duration::from_millis(1));
+                s.set_read_timeout(Some(remaining))
+                    .map_err(|e| TransportError::io(format!("rendezvous accept: {e}")))?;
+                let magic = read_u64(&mut s)?;
+                if magic != BOOT_MAGIC {
+                    return Err(TransportError::Protocol(format!(
+                        "rendezvous: bad magic {magic:#x}"
+                    )));
+                }
+                let rank = read_u64(&mut s)?;
+                if rank >= p {
+                    return Err(TransportError::Protocol(format!(
+                        "rendezvous: rank {rank} out of range (p = {p})"
+                    )));
+                }
+                let ep = read_endpoint(&mut s)?;
+                let slot = &mut endpoints[rank as usize];
+                if slot.is_some() {
+                    return Err(TransportError::Protocol(format!(
+                        "rendezvous: rank {rank} registered twice"
+                    )));
+                }
+                *slot = Some(ep);
+                registered.push(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    let missing: Vec<u64> = endpoints
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, e)| e.is_none())
+                        .map(|(r, _)| r as u64)
+                        .collect();
+                    return Err(TransportError::timeout(format!(
+                        "rendezvous: waited {timeout:?} with ranks {missing:?} missing"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => {
+                return Err(TransportError::io(format!("rendezvous accept: {e}")));
+            }
+        }
+    }
+    let map: Vec<String> = endpoints.into_iter().map(|e| e.expect("all set")).collect();
+    let mut reply = Vec::new();
+    reply.extend_from_slice(&BOOT_MAGIC.to_le_bytes());
+    reply.extend_from_slice(&p.to_le_bytes());
+    for ep in &map {
+        reply.extend_from_slice(&(ep.len() as u64).to_le_bytes());
+        reply.extend_from_slice(ep.as_bytes());
+    }
+    for s in &mut registered {
+        write_all(s, &reply)?;
+    }
+    Ok(map)
+}
+
+/// Rank side of the socket rendezvous: dial `root` (retrying until it is
+/// listening or `timeout` passes), register `(rank, my_endpoint)`, and
+/// block until the root replies with the complete rank→endpoint map.
+pub fn join_rendezvous(
+    root: &str,
+    rank: u64,
+    my_endpoint: &str,
+    timeout: Duration,
+) -> Result<Vec<String>, TransportError> {
+    let deadline = Instant::now() + timeout;
+    let mut s = loop {
+        match TcpStream::connect(root) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(TransportError::timeout(format!(
+                        "rank {rank}: rendezvous root {root} not reachable after {timeout:?}: {e}"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    };
+    let remaining = deadline
+        .saturating_duration_since(Instant::now())
+        .max(Duration::from_millis(1));
+    s.set_read_timeout(Some(remaining))
+        .map_err(|e| TransportError::io(format!("rank {rank}: rendezvous socket: {e}")))?;
+    let mut reg = Vec::new();
+    reg.extend_from_slice(&BOOT_MAGIC.to_le_bytes());
+    reg.extend_from_slice(&rank.to_le_bytes());
+    reg.extend_from_slice(&(my_endpoint.len() as u64).to_le_bytes());
+    reg.extend_from_slice(my_endpoint.as_bytes());
+    write_all(&mut s, &reg)?;
+    let magic = read_u64(&mut s)?;
+    if magic != BOOT_MAGIC {
+        return Err(TransportError::Protocol(format!(
+            "rank {rank}: rendezvous reply has bad magic {magic:#x}"
+        )));
+    }
+    let p = read_u64(&mut s)?;
+    if rank >= p {
+        return Err(TransportError::Protocol(format!(
+            "rank {rank}: rendezvous reply says p = {p}"
+        )));
+    }
+    let mut map = Vec::with_capacity(p as usize);
+    for _ in 0..p {
+        map.push(read_endpoint(&mut s)?);
+    }
+    Ok(map)
+}
+
+/// File rendezvous, publisher side: atomically write the complete
+/// rank→endpoint map to `path` (via a temp file + rename, so a reader
+/// never observes a half-written map). Format: first line the rank count,
+/// then one endpoint per line in rank order.
+pub fn publish_file(path: &Path, endpoints: &[String]) -> Result<(), TransportError> {
+    let mut body = format!("{}\n", endpoints.len());
+    for ep in endpoints {
+        if ep.contains('\n') {
+            return Err(TransportError::Protocol(format!(
+                "endpoint {ep:?} contains a newline — not representable in a rendezvous file"
+            )));
+        }
+        body.push_str(ep);
+        body.push('\n');
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, body)
+        .map_err(|e| TransportError::io(format!("writing {}: {e}", tmp.display())))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| TransportError::io(format!("publishing {}: {e}", path.display())))?;
+    Ok(())
+}
+
+/// File rendezvous, reader side: poll `path` until a complete map for `p`
+/// ranks appears (the publisher's rename makes that atomic) or `timeout`
+/// passes.
+pub fn wait_file(path: &Path, p: u64, timeout: Duration) -> Result<Vec<String>, TransportError> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Ok(body) = std::fs::read_to_string(path) {
+            let mut lines = body.lines();
+            let count: Option<u64> = lines.next().and_then(|l| l.parse().ok());
+            if count == Some(p) {
+                let map: Vec<String> = lines.map(str::to_string).collect();
+                if map.len() == p as usize {
+                    return Ok(map);
+                }
+                return Err(TransportError::Protocol(format!(
+                    "rendezvous file {}: header says {p} ranks, found {}",
+                    path.display(),
+                    map.len()
+                )));
+            }
+            if let Some(c) = count {
+                return Err(TransportError::Protocol(format!(
+                    "rendezvous file {}: expected {p} ranks, header says {c}",
+                    path.display()
+                )));
+            }
+        }
+        if Instant::now() >= deadline {
+            return Err(TransportError::timeout(format!(
+                "rendezvous file {} not published after {timeout:?}",
+                path.display()
+            )));
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn socket_rendezvous_distributes_the_full_map() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let root = listener.local_addr().unwrap().to_string();
+        let p = 5u64;
+        std::thread::scope(|s| {
+            let mut joins = Vec::new();
+            for rank in 0..p {
+                let root = root.clone();
+                joins.push(s.spawn(move || {
+                    join_rendezvous(&root, rank, &format!("ep-{rank}"), Duration::from_secs(10))
+                        .unwrap()
+                }));
+            }
+            let served = serve_rendezvous(&listener, p, Duration::from_secs(10)).unwrap();
+            let expect: Vec<String> = (0..p).map(|r| format!("ep-{r}")).collect();
+            assert_eq!(served, expect);
+            for j in joins {
+                assert_eq!(j.join().unwrap(), expect);
+            }
+        });
+    }
+
+    #[test]
+    fn duplicate_rank_aborts_the_rendezvous() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let root = listener.local_addr().unwrap().to_string();
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let root = root.clone();
+                s.spawn(move || {
+                    let _ = join_rendezvous(&root, 0, "dup", Duration::from_secs(5));
+                });
+            }
+            let err = serve_rendezvous(&listener, 2, Duration::from_secs(5)).unwrap_err();
+            assert!(
+                matches!(err, TransportError::Protocol(ref m) if m.contains("twice")),
+                "{err}"
+            );
+        });
+    }
+
+    #[test]
+    fn rendezvous_times_out_with_missing_ranks_named() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = serve_rendezvous(&listener, 3, Duration::from_millis(60)).unwrap_err();
+        match err {
+            TransportError::Timeout { msg, .. } => {
+                assert!(msg.contains("[0, 1, 2]"), "{msg}");
+            }
+            other => panic!("expected Timeout, got {other}"),
+        }
+    }
+
+    #[test]
+    fn file_rendezvous_round_trips() {
+        let path = std::env::temp_dir().join(format!("nblk-boot-{}", std::process::id()));
+        let eps: Vec<String> = (0..4).map(|r| format!("127.0.0.1:{}", 9000 + r)).collect();
+        publish_file(&path, &eps).unwrap();
+        let got = wait_file(&path, 4, Duration::from_secs(5)).unwrap();
+        assert_eq!(got, eps);
+        let err = wait_file(&path, 5, Duration::from_secs(5)).unwrap_err();
+        assert!(matches!(err, TransportError::Protocol(_)), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,406 @@
+//! Hierarchical composition: same-host peers over shared memory,
+//! cross-host peers over TCP — behind the ordinary flat [`Transport`]
+//! trait, so every collective (and [`super::GroupTransport`]'s sub-views,
+//! which the hierarchical collectives are built from) runs unmodified.
+//!
+//! A [`HierTransport`] wraps one [`ShmTransport`] (this rank's endpoint
+//! in its node's segment, local ranks `0..p_node`) and one
+//! [`super::TcpTransport`] (the global mesh, ranks `0..p`). Same-host
+//! detection is positional: a node is a *contiguous* global rank range
+//! `[node_base, node_base + p_node)`, with `node_base = global_rank −
+//! local_rank` — the layout `launch` and [`run_hier`] produce, and the
+//! one `bcast_hierarchical`'s `p % ranks_per_node == 0` contract expects.
+//! Every peer inside the range routes over the segment; everything else
+//! routes over TCP.
+//!
+//! A mixed round (send to a neighbor on this host, receive from another
+//! host, or vice versa) runs its two halves on two backends *concurrently*
+//! — the send half on a scoped thread, the receive half inline — because
+//! serializing them could deadlock a communication cycle that crosses the
+//! backend boundary (every backend's own `sendrecv_into` makes exactly
+//! this full-duplex guarantee; the composition must keep it).
+
+use super::shm::ShmTransport;
+use super::tcp::TcpTransport;
+use super::{CostHint, SendSpec, Transport, TransportError};
+use std::time::Duration;
+
+/// Same-host peers over shared memory, cross-host peers over TCP. See the
+/// [module docs](self) for the rank-layout contract.
+pub struct HierTransport {
+    shm: ShmTransport,
+    tcp: TcpTransport,
+    node_base: u64,
+}
+
+impl HierTransport {
+    /// Compose a node-local segment endpoint and a global TCP mesh
+    /// endpoint. `shm` must be this rank's endpoint in a segment covering
+    /// the contiguous global range `[tcp.rank() − shm.rank(), …)`; the
+    /// range must fit inside the global size.
+    pub fn new(shm: ShmTransport, tcp: TcpTransport) -> Result<HierTransport, TransportError> {
+        let node_base = tcp.rank().checked_sub(shm.rank()).ok_or_else(|| {
+            TransportError::Protocol(format!(
+                "local rank {} exceeds global rank {} — node ranges must be contiguous",
+                shm.rank(),
+                tcp.rank()
+            ))
+        })?;
+        if node_base + shm.size() > tcp.size() {
+            return Err(TransportError::Protocol(format!(
+                "node range [{node_base}, {}) exceeds global size {}",
+                node_base + shm.size(),
+                tcp.size()
+            )));
+        }
+        Ok(HierTransport {
+            shm,
+            tcp,
+            node_base,
+        })
+    }
+
+    /// First global rank of this rank's node.
+    pub fn node_base(&self) -> u64 {
+        self.node_base
+    }
+
+    /// The node-local shared-memory endpoint.
+    pub fn shm(&self) -> &ShmTransport {
+        &self.shm
+    }
+
+    /// The global TCP endpoint.
+    pub fn tcp(&self) -> &TcpTransport {
+        &self.tcp
+    }
+
+    /// The segment-local index of `peer`, when it lives on this host.
+    fn local_index(&self, peer: u64) -> Option<u64> {
+        (peer >= self.node_base && peer < self.node_base + self.shm.size())
+            .then(|| peer - self.node_base)
+    }
+
+    /// Translate a send spec to the node-local rank space.
+    fn to_local<'a>(&self, s: SendSpec<'a>, local_to: u64) -> SendSpec<'a> {
+        SendSpec {
+            to: local_to,
+            tag: s.tag,
+            data: s.data,
+        }
+    }
+}
+
+impl Transport for HierTransport {
+    fn rank(&self) -> u64 {
+        self.tcp.rank()
+    }
+
+    fn size(&self) -> u64 {
+        self.tcp.size()
+    }
+
+    fn sendrecv_into(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
+        let send_local = send.map(|s| self.local_index(s.to));
+        let recv_local = recv_from.map(|from| self.local_index(from));
+        match (send, send_local, recv_from, recv_local) {
+            (None, _, None, _) => Ok(None),
+            // Single-backend rounds keep their backend's own full-duplex
+            // guarantee: one call, ranks translated where local.
+            (Some(s), Some(Some(lt)), None, _) => {
+                let spec = self.to_local(s, lt);
+                self.shm.sendrecv_into(Some(spec), None, recv_buf)
+            }
+            (Some(s), Some(None), None, _) => self.tcp.sendrecv_into(Some(s), None, recv_buf),
+            (None, _, Some(_), Some(Some(lf))) => self.shm.sendrecv_into(None, Some(lf), recv_buf),
+            (None, _, Some(from), Some(None)) => self.tcp.sendrecv_into(None, Some(from), recv_buf),
+            (Some(s), Some(Some(lt)), Some(_), Some(Some(lf))) => {
+                let spec = self.to_local(s, lt);
+                self.shm.sendrecv_into(Some(spec), Some(lf), recv_buf)
+            }
+            (Some(s), Some(None), Some(from), Some(None)) => {
+                self.tcp.sendrecv_into(Some(s), Some(from), recv_buf)
+            }
+            // Mixed rounds: run both halves concurrently on their two
+            // backends, or a cycle crossing the boundary could deadlock.
+            (Some(s), Some(Some(lt)), Some(from), Some(None)) => {
+                let spec = self.to_local(s, lt);
+                let shm = &mut self.shm;
+                let tcp = &mut self.tcp;
+                split_round(
+                    move |scratch| shm.sendrecv_into(Some(spec), None, scratch).map(|_| ()),
+                    move |buf| tcp.sendrecv_into(None, Some(from), buf),
+                    recv_buf,
+                )
+            }
+            (Some(s), Some(None), Some(_), Some(Some(lf))) => {
+                let shm = &mut self.shm;
+                let tcp = &mut self.tcp;
+                split_round(
+                    move |scratch| tcp.sendrecv_into(Some(s), None, scratch).map(|_| ()),
+                    move |buf| shm.sendrecv_into(None, Some(lf), buf),
+                    recv_buf,
+                )
+            }
+            // The compiler cannot see that `send_local`/`recv_local` are
+            // Some exactly when `send`/`recv_from` are.
+            _ => unreachable!("locality is computed for every present side"),
+        }
+    }
+
+    fn warm_up(&mut self) -> Result<(), TransportError> {
+        // Warm (and α/β-probe) the node-local rings; pre-dial the
+        // cross-host circulant links. Peer locality is symmetric and the
+        // circulant to/from sets are mutual, so every rank's warm list
+        // names exactly the links its peers also warm.
+        self.shm.warm_up()?;
+        if self.size() > 1 {
+            let skips = crate::sched::Skips::new(self.size());
+            let mut remote = Vec::new();
+            for k in 0..skips.q() {
+                for peer in [
+                    skips.to_proc(self.rank(), k),
+                    skips.from_proc(self.rank(), k),
+                ] {
+                    if self.local_index(peer).is_none() {
+                        remote.push(peer);
+                    }
+                }
+            }
+            self.tcp.warm_peers(&remote)?;
+        }
+        Ok(())
+    }
+
+    fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
+        let mut local = Vec::new();
+        let mut remote = Vec::new();
+        for &peer in peers {
+            match self.local_index(peer) {
+                Some(l) => local.push(l),
+                None => remote.push(peer),
+            }
+        }
+        self.shm.warm_peers(&local)?;
+        self.tcp.warm_peers(&remote)
+    }
+
+    fn cost_hint(&self) -> CostHint {
+        // The cross-host links govern: segmentation tuned for the slow
+        // link class is near-optimal on the fast one, not vice versa.
+        self.tcp.cost_hint()
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        super::dissemination_barrier(self)
+    }
+}
+
+/// Run a mixed round's two halves concurrently: `send_half` on a scoped
+/// thread with a private scratch buffer, `recv_half` inline into the
+/// caller's buffer. A send-side error wins over a receive-side one (it is
+/// the more causal of the two when a peer died mid-round).
+fn split_round<S, R>(
+    send_half: S,
+    recv_half: R,
+    recv_buf: &mut Vec<u8>,
+) -> Result<Option<u64>, TransportError>
+where
+    S: FnOnce(&mut Vec<u8>) -> Result<(), TransportError> + Send,
+    R: FnOnce(&mut Vec<u8>) -> Result<Option<u64>, TransportError>,
+{
+    std::thread::scope(|sc| {
+        let h = sc.spawn(move || {
+            let mut scratch = Vec::new();
+            send_half(&mut scratch)
+        });
+        let got = recv_half(recv_buf);
+        let sent = h
+            .join()
+            .unwrap_or_else(|_| Err(TransportError::Collective("send half panicked".into())));
+        sent?;
+        got
+    })
+}
+
+/// Run `f` as an SPMD program over `p` ranks split into nodes of
+/// `ranks_per_node` (the last node may be smaller), each rank holding a
+/// [`HierTransport`]: one shared-memory segment per node, a loopback TCP
+/// mesh across all of them, one OS thread per rank. Returns the per-rank
+/// results (index = global rank).
+pub fn run_hier<R, F>(
+    p: u64,
+    ranks_per_node: u64,
+    timeout: Duration,
+    f: F,
+) -> Result<Vec<R>, TransportError>
+where
+    R: Send,
+    F: Fn(HierTransport) -> Result<R, TransportError> + Sync,
+{
+    assert!(p >= 1, "need at least one rank");
+    assert!(
+        (1..=p).contains(&ranks_per_node),
+        "ranks_per_node must be in 1..=p"
+    );
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    static RUN_SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = RUN_SEQ.fetch_add(1, Ordering::Relaxed);
+    let nodes = p.div_ceil(ranks_per_node);
+    let mut segments = Vec::with_capacity(nodes as usize);
+    for node in 0..nodes {
+        let node_size = ranks_per_node.min(p - node * ranks_per_node);
+        let path = super::shm::segment_path(&format!("hier{seq}-node{node}"));
+        segments.push(Arc::new(super::shm::Segment::create(
+            &path,
+            node_size,
+            super::shm::default_ring_cap(node_size),
+        )?));
+    }
+    let (listeners, addrs) = super::tcp::bind_mesh(p)?;
+    let mut results: Vec<Option<Result<R, TransportError>>> = (0..p).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(p as usize);
+        for (rank, listener) in listeners.into_iter().enumerate() {
+            let rank = rank as u64;
+            let f = &f;
+            let addrs = &addrs;
+            let seg = segments[(rank / ranks_per_node) as usize].clone();
+            handles.push(s.spawn(move || {
+                let tcp = TcpTransport::connect(rank, p, listener, addrs, timeout)?;
+                let shm = ShmTransport::from_segment(seg, rank % ranks_per_node, timeout)?;
+                f(HierTransport::new(shm, tcp)?)
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            results[rank] = Some(h.join().unwrap_or_else(|_| {
+                Err(TransportError::Collective(format!("rank {rank} panicked")))
+            }));
+        }
+    });
+    super::drain_results(results, |e| {
+        matches!(
+            e,
+            TransportError::Timeout { .. } | TransportError::Io { .. }
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::Payload;
+
+    #[test]
+    fn mixed_rounds_cross_the_backend_boundary_concurrently() {
+        // p = 4, two nodes of 2. Every rank sends to (rank + 1) % 4 and
+        // receives from (rank + 3) % 4 — a single global cycle in which
+        // ranks 1 and 3 send locally but receive remotely, and ranks 0
+        // and 2 send remotely but receive locally. Serialized halves
+        // would deadlock; concurrent halves complete.
+        let results = run_hier(4, 2, Duration::from_secs(10), |mut t| {
+            let to = (t.rank() + 1) % 4;
+            let from = (t.rank() + 3) % 4;
+            let payload = [t.rank() as u8; 33];
+            let got = t.sendrecv(
+                Some(SendSpec {
+                    to,
+                    tag: t.rank(),
+                    data: Payload::Bytes(&payload),
+                }),
+                Some(from),
+            )?;
+            let msg = got.expect("scheduled receive");
+            t.barrier()?;
+            Ok((msg.tag, msg.data))
+        })
+        .unwrap();
+        for (r, (tag, data)) in results.iter().enumerate() {
+            let from = (r as u64 + 3) % 4;
+            assert_eq!(*tag, from);
+            assert_eq!(data.as_slice(), [from as u8; 33]);
+        }
+    }
+
+    #[test]
+    fn local_peers_never_touch_tcp() {
+        let results = run_hier(4, 2, Duration::from_secs(10), |mut t| {
+            let partner = t.node_base() + (t.rank() - t.node_base() + 1) % 2;
+            let payload = [7u8; 5];
+            t.sendrecv(
+                Some(SendSpec {
+                    to: partner,
+                    tag: 0,
+                    data: Payload::Bytes(&payload),
+                }),
+                Some(partner),
+            )?;
+            Ok(t.tcp().established_connections())
+        })
+        .unwrap();
+        assert_eq!(results, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn ragged_last_node_is_supported() {
+        let results = run_hier(5, 2, Duration::from_secs(10), |mut t| {
+            let to = (t.rank() + 1) % 5;
+            let from = (t.rank() + 4) % 5;
+            let payload = [t.rank() as u8; 17];
+            let got = t.sendrecv(
+                Some(SendSpec {
+                    to,
+                    tag: t.rank(),
+                    data: Payload::Bytes(&payload),
+                }),
+                Some(from),
+            )?;
+            Ok(got.expect("scheduled receive").tag)
+        })
+        .unwrap();
+        for (r, tag) in results.iter().enumerate() {
+            assert_eq!(*tag, (r as u64 + 4) % 5);
+        }
+    }
+
+    #[test]
+    fn misaligned_node_range_is_rejected() {
+        use crate::transport::shm::{default_ring_cap, segment_path, Segment};
+        use std::sync::Arc;
+
+        // A 1-rank TCP mesh to compose against.
+        let mk_tcp = || {
+            let (mut listeners, addrs) = crate::transport::tcp::bind_mesh(1).unwrap();
+            TcpTransport::connect(
+                0,
+                1,
+                listeners.pop().unwrap(),
+                &addrs,
+                Duration::from_secs(1),
+            )
+            .unwrap()
+        };
+
+        // Local rank 1 on global rank 0: node base would underflow.
+        let seg = Arc::new(
+            Segment::create(&segment_path("hier-underflow"), 2, default_ring_cap(2)).unwrap(),
+        );
+        let shm = ShmTransport::from_segment(seg, 1, Duration::from_secs(1)).unwrap();
+        let err = HierTransport::new(shm, mk_tcp()).unwrap_err();
+        assert!(matches!(err, TransportError::Protocol(_)), "{err}");
+
+        // A 2-rank node cannot fit inside a 1-rank global mesh.
+        let seg = Arc::new(
+            Segment::create(&segment_path("hier-overflow"), 2, default_ring_cap(2)).unwrap(),
+        );
+        let shm = ShmTransport::from_segment(seg, 0, Duration::from_secs(1)).unwrap();
+        let err = HierTransport::new(shm, mk_tcp()).unwrap_err();
+        assert!(matches!(err, TransportError::Protocol(_)), "{err}");
+    }
+}

@@ -25,6 +25,16 @@
 //!   messages are accounted without ever being materialized. This is the
 //!   single execution path behind the paper's figure/table sweeps.
 //!
+//! On Unix hosts two more backends scale the point-to-point path out to
+//! real multi-process runs: [`shm::ShmTransport`] — same-host ranks over
+//! per-link SPSC ring buffers in one memmap'd segment, memory-speed
+//! rounds across *processes* — and [`hier::HierTransport`] — the
+//! composition that routes same-host peers over the segment and
+//! cross-host peers over TCP. [`bootstrap`] is the rendezvous layer that
+//! hands freshly-launched processes the rank→endpoint map, and the
+//! `launch` CLI subcommand turns all of it into a one-command
+//! multi-process demo.
+//!
 //! ## The zero-copy hot path
 //!
 //! The primitive is [`Transport::sendrecv_into`]: the outgoing payload is
@@ -57,8 +67,13 @@
 
 #![warn(missing_docs)]
 
+pub mod bootstrap;
 pub mod cost;
 pub mod fault;
+#[cfg(unix)]
+pub mod hier;
+#[cfg(unix)]
+pub mod shm;
 pub mod sim;
 pub mod tcp;
 pub mod thread;
@@ -753,6 +768,115 @@ pub fn idle_round<T: Transport + ?Sized>(t: &mut T) -> Result<(), TransportError
             "rank {}: received block {tag} in an idle round",
             t.rank()
         ))),
+    }
+}
+
+/// Reserved tag for warm-up probe rounds (`u64::MAX` is the barrier
+/// token; collective tags are block indices, far below both).
+pub(crate) const PROBE_TAG: u64 = u64::MAX - 1;
+
+/// One symmetric probe round: send `bytes` to the next ring neighbor,
+/// receive the same-sized block from the previous one.
+fn probe_round<T: Transport + ?Sized>(
+    t: &mut T,
+    bytes: &[u8],
+    buf: &mut Vec<u8>,
+) -> Result<(), TransportError> {
+    let (rank, p) = (t.rank(), t.size());
+    let got = t.sendrecv_into(
+        Some(SendSpec {
+            to: (rank + 1) % p,
+            tag: PROBE_TAG,
+            data: Payload::Bytes(bytes),
+        }),
+        Some((rank + p - 1) % p),
+        buf,
+    )?;
+    if got != Some(PROBE_TAG) || buf.len() != bytes.len() {
+        return Err(TransportError::Protocol(format!(
+            "rank {rank}: warm-up probe expected a {}-byte PROBE block, got tag {got:?} ({} bytes)",
+            bytes.len(),
+            buf.len()
+        )));
+    }
+    Ok(())
+}
+
+/// The warm-up α/β probe: measure this backend's per-message latency and
+/// per-byte cost from timed ring exchanges, then agree on one value.
+///
+/// **Collective** — every rank must call it at the same point (the
+/// point-to-point backends run it inside [`Transport::warm_up`]). Two
+/// payload sizes (16 B and 64 KiB) are each exchanged along the ring
+/// (`rank → rank+1`, both in the circulant warm set since `skip₀ = 1`),
+/// one untimed sync round plus eight timed rounds; the two-point fit
+/// gives a local `(α, β)`. A dissemination pass (componentwise **max**
+/// over `⌈log₂p⌉` exchanges — idempotent, so the pattern yields the
+/// identical combined value on every rank for any `p`) then replaces the
+/// local fit: collectives resolve [`CostHint`]-driven decisions
+/// (`Algorithm::Auto`, n* segmentation) identically on every rank, and
+/// max is the conservative choice — the slowest link governs.
+///
+/// Returns `Ok(None)` (keep the static fallback) for `p < 2` or when the
+/// agreed fit is degenerate (non-finite or non-positive) — the check runs
+/// on the *consensus* value, so all ranks fall back together.
+pub(crate) fn measure_link_hint<T: Transport + ?Sized>(
+    t: &mut T,
+) -> Result<Option<CostHint>, TransportError> {
+    const SMALL: usize = 16;
+    const LARGE: usize = 65536;
+    const REPS: u32 = 8;
+    let p = t.size();
+    if p < 2 {
+        return Ok(None);
+    }
+    let rank = t.rank();
+    let payload = vec![0u8; LARGE];
+    let mut buf = Vec::with_capacity(LARGE);
+    let mut per_round = [0.0f64; 2];
+    for (slot, size) in [SMALL, LARGE].into_iter().enumerate() {
+        // One untimed round lines all ranks up so the timed window
+        // measures the link, not arrival skew.
+        probe_round(t, &payload[..size], &mut buf)?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..REPS {
+            probe_round(t, &payload[..size], &mut buf)?;
+        }
+        per_round[slot] = t0.elapsed().as_secs_f64() / f64::from(REPS);
+    }
+    let mut beta = (per_round[1] - per_round[0]) / (LARGE - SMALL) as f64;
+    let mut alpha = per_round[0] - beta * SMALL as f64;
+    let q = crate::sched::ceil_log2(p);
+    let mut msg = [0u8; 16];
+    for k in 0..q {
+        let step = 1u64 << k;
+        msg[..8].copy_from_slice(&alpha.to_le_bytes());
+        msg[8..].copy_from_slice(&beta.to_le_bytes());
+        let got = t.sendrecv_into(
+            Some(SendSpec {
+                to: (rank + step) % p,
+                tag: PROBE_TAG,
+                data: Payload::Bytes(&msg),
+            }),
+            Some((rank + p - step) % p),
+            &mut buf,
+        )?;
+        if got != Some(PROBE_TAG) || buf.len() != 16 {
+            return Err(TransportError::Protocol(format!(
+                "rank {rank}: probe consensus expected a 16-byte PROBE block, got tag {got:?} ({} bytes)",
+                buf.len()
+            )));
+        }
+        alpha = alpha.max(f64::from_le_bytes(buf[..8].try_into().expect("8 bytes")));
+        beta = beta.max(f64::from_le_bytes(buf[8..].try_into().expect("8 bytes")));
+    }
+    if alpha.is_finite() && beta.is_finite() && alpha > 0.0 && beta > 0.0 {
+        Ok(Some(CostHint {
+            alpha_s: alpha,
+            beta_s_per_byte: beta,
+        }))
+    } else {
+        Ok(None)
     }
 }
 

@@ -1,0 +1,1223 @@
+//! Cross-process shared-memory transport: per-link SPSC ring buffers in
+//! one memmap'd segment file.
+//!
+//! Ranks on the same host exchange blocks at memory speed instead of
+//! paying a loopback-TCP round trip. The segment is an ordinary file
+//! (preferably on `/dev/shm`) mapped `MAP_SHARED` by every rank:
+//!
+//! ```text
+//! [SegHdr 64 B][ring table: p·p offsets][arena: rings, allocated lazily]
+//! ```
+//!
+//! Each *directed* pair `(from, to)` owns at most one single-producer /
+//! single-consumer byte ring, created by its producer on first use (the
+//! arena is a sparse file, so untouched rings cost no memory — a p = 512
+//! mesh only materializes the `O(p log p)` rings the schedules actually
+//! drive). Frames mirror the TCP wire format — `[tag u64][len u64]
+//! [payload]`, little-endian — and are written *chunked*: a frame larger
+//! than the ring streams through it, the producer copying directly from
+//! the caller's borrowed [`Payload::Bytes`] into the ring and the consumer
+//! copying directly into the caller's reusable receive buffer. One copy
+//! in, one copy out, zero intermediate buffers, zero steady-state heap
+//! allocations.
+//!
+//! ## Wakeup protocol
+//!
+//! Progress never *depends* on wakeups: both sides run a
+//! spin-then-park loop bounded by the operation deadline. A blocked side
+//! raises its waiter flag (`data_waiter` for an empty ring,
+//! `space_waiter` for a full one), re-checks the counters, and parks on
+//! the flag with a short-bounded futex wait (plain `syscall(SYS_futex)`,
+//! cross-process mode; non-Linux hosts fall back to a short sleep). The
+//! peer clears-and-wakes the flag after advancing its counter, so lost
+//! races degrade to at most one bounded park, never a hang.
+//!
+//! ## Rendezvous
+//!
+//! A creator ([`Segment::create`]) sizes the file, initializes the
+//! header, and publishes it by storing the magic *last* (release order);
+//! attachers ([`Segment::open`]) spin until the magic appears. The
+//! `launch` CLI subcommand creates the segment in the parent and hands
+//! children the path — see [`crate::transport::bootstrap`] for the
+//! cross-host half.
+
+use super::{CostHint, FaultCtx, Payload, SendSpec, Transport, TransportError};
+use std::fs::{File, OpenOptions};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Segment header magic, stored last by the creator (release order) so an
+/// attacher that observes it also observes the initialized header.
+pub const SEG_MAGIC: u64 = u64::from_le_bytes(*b"nblkShm1");
+
+/// Bytes reserved for the segment header.
+const SEG_HDR_BYTES: u64 = 64;
+
+/// Bytes reserved for each ring's header (head and tail live on separate
+/// cache lines so the producer and consumer never false-share).
+const RING_HDR_BYTES: u64 = 128;
+
+/// Frame header: `[tag u64][len u64]`, mirroring the TCP wire format.
+const FRAME_HDR_BYTES: usize = 16;
+
+/// Frames above this are rejected as corrupt (same bound as the TCP
+/// backend's frame reader).
+const MAX_FRAME: u64 = 1 << 32;
+
+/// How long a blocked side parks per futex wait before re-checking the
+/// deadline (lost wakeup races therefore cost at most this much).
+const PARK_SLICE: Duration = Duration::from_millis(1);
+
+/// Spin iterations before parking — covers the common case where the
+/// peer is mid-round on another core.
+const SPIN_BEFORE_PARK: u32 = 256;
+
+/// The static pre-warm-up `α + β·bytes` hint of the shared-memory link
+/// class: sub-microsecond startup, memory-speed bandwidth (~10 GB/s).
+/// [`Transport::warm_up`] replaces it with a measured fit.
+pub const SHM_STATIC_HINT: CostHint = CostHint {
+    alpha_s: 4.0e-7,
+    beta_s_per_byte: 1.0e-10,
+};
+
+/// The default per-link ring capacity for a `p`-rank segment: generous
+/// while the mesh is small, tighter as `p²` sparse-file bookkeeping and
+/// the touched-ring footprint grow.
+pub fn default_ring_cap(p: u64) -> u64 {
+    if p <= 32 {
+        256 * 1024
+    } else if p <= 128 {
+        64 * 1024
+    } else {
+        16 * 1024
+    }
+}
+
+/// The preferred directory for segment files: `/dev/shm` (a tmpfs on
+/// Linux) when present, the system temp dir otherwise.
+pub fn default_segment_dir() -> PathBuf {
+    let shm = Path::new("/dev/shm");
+    if shm.is_dir() {
+        shm.to_path_buf()
+    } else {
+        std::env::temp_dir()
+    }
+}
+
+/// A collision-resistant segment path under [`default_segment_dir`],
+/// namespaced by the calling process id.
+pub fn segment_path(label: &str) -> PathBuf {
+    default_segment_dir().join(format!("nblk-shm-{}-{label}", std::process::id()))
+}
+
+// --- raw mmap ---------------------------------------------------------
+
+#[cfg(unix)]
+mod mm {
+    use std::os::fd::AsRawFd;
+    use std::os::raw::{c_int, c_void};
+
+    const PROT_READ: c_int = 1;
+    const PROT_WRITE: c_int = 2;
+    const MAP_SHARED: c_int = 1;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    /// Map `len` bytes of `file` shared read-write.
+    pub fn map_shared(file: &std::fs::File, len: usize) -> std::io::Result<*mut u8> {
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ | PROT_WRITE,
+                MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(ptr as *mut u8)
+    }
+
+    /// Unmap a [`map_shared`] mapping.
+    pub fn unmap(ptr: *mut u8, len: usize) {
+        unsafe {
+            munmap(ptr as *mut c_void, len);
+        }
+    }
+}
+
+// --- futex wakeups ----------------------------------------------------
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod park {
+    use std::os::raw::{c_int, c_long};
+    use std::sync::atomic::AtomicU32;
+    use std::time::Duration;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_FUTEX: c_long = 202;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_FUTEX: c_long = 98;
+    // Non-private ops: the waiter and waker are different processes.
+    const FUTEX_WAIT: c_int = 0;
+    const FUTEX_WAKE: c_int = 1;
+
+    #[repr(C)]
+    struct Timespec {
+        sec: i64,
+        nsec: i64,
+    }
+
+    extern "C" {
+        fn syscall(num: c_long, ...) -> c_long;
+    }
+
+    /// Sleep while `*flag == expected`, at most `timeout`. Spurious
+    /// returns are fine — every caller re-checks its condition.
+    pub fn wait(flag: &AtomicU32, expected: u32, timeout: Duration) {
+        let ts = Timespec {
+            sec: timeout.as_secs() as i64,
+            nsec: i64::from(timeout.subsec_nanos()),
+        };
+        unsafe {
+            syscall(
+                SYS_FUTEX,
+                flag as *const AtomicU32,
+                FUTEX_WAIT,
+                expected,
+                &ts as *const Timespec,
+                0usize,
+                0u32,
+            );
+        }
+    }
+
+    /// Wake every waiter parked on `flag`.
+    pub fn wake(flag: &AtomicU32) {
+        unsafe {
+            syscall(
+                SYS_FUTEX,
+                flag as *const AtomicU32,
+                FUTEX_WAKE,
+                i32::MAX,
+                0usize,
+                0usize,
+                0u32,
+            );
+        }
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod park {
+    use std::sync::atomic::AtomicU32;
+    use std::time::Duration;
+
+    /// Portable fallback: a short sleep instead of a futex wait — the
+    /// spin-then-park loops are deadline-bounded either way.
+    pub fn wait(_flag: &AtomicU32, _expected: u32, timeout: Duration) {
+        std::thread::sleep(timeout.min(Duration::from_micros(200)));
+    }
+
+    /// No-op: the fallback waiter polls.
+    pub fn wake(_flag: &AtomicU32) {}
+}
+
+// --- segment layout ---------------------------------------------------
+
+/// The segment header (64 bytes at offset 0). All fields are atomics
+/// because they are shared across processes; `magic` is stored last by
+/// the creator, with release order, to publish the rest.
+#[repr(C)]
+struct SegHdr {
+    magic: AtomicU64,
+    p: AtomicU64,
+    ring_cap: AtomicU64,
+    /// Bump allocator over the arena: next free byte offset.
+    alloc_next: AtomicU64,
+    _reserved: [u64; 4],
+}
+
+/// One ring's header: producer cache line (monotonic byte offset written
+/// by the producer + the consumer's waiter flag it wakes), then the
+/// consumer cache line mirroring it.
+#[repr(C)]
+struct RingHdr {
+    /// Total bytes ever written (monotonic; producer-owned).
+    head: AtomicU64,
+    /// Raised by a consumer about to park on an empty ring.
+    data_waiter: AtomicU32,
+    _pad0: [u8; 52],
+    /// Total bytes ever read (monotonic; consumer-owned).
+    tail: AtomicU64,
+    /// Raised by a producer about to park on a full ring.
+    space_waiter: AtomicU32,
+    _pad1: [u8; 52],
+}
+
+/// Byte layout of a `p`-rank segment with per-link capacity `ring_cap`.
+fn seg_layout(p: u64, ring_cap: u64) -> (u64, u64) {
+    let table_bytes = p * p * 8;
+    let arena_off = (SEG_HDR_BYTES + table_bytes).div_ceil(64) * 64;
+    let ring_bytes = RING_HDR_BYTES + ring_cap;
+    // Worst case every directed pair allocates a ring; the file is
+    // sparse, so only touched rings occupy memory.
+    let total = arena_off + p * p.saturating_sub(1) * ring_bytes;
+    (arena_off, total)
+}
+
+/// One mapped shared-memory segment: the rendezvous object every
+/// same-host rank attaches to. Create once ([`Segment::create`]), attach
+/// from anywhere ([`Segment::open`] cross-process, [`Arc`] clones
+/// in-process). The creator's `Drop` unlinks the file.
+pub struct Segment {
+    base: *mut u8,
+    len: usize,
+    path: PathBuf,
+    unlink: bool,
+}
+
+// SAFETY: the mapping is plain shared memory; all cross-thread access
+// goes through the atomics in `SegHdr`/`RingHdr` with acquire/release
+// pairs, exactly as it does cross-process.
+unsafe impl Send for Segment {}
+unsafe impl Sync for Segment {}
+
+impl Segment {
+    /// Create and publish a fresh `p`-rank segment at `path` (truncating
+    /// any stale file). `ring_cap` is the per-link ring capacity in bytes
+    /// (multiple of 64, at least 1024 — see [`default_ring_cap`]). The
+    /// returned handle owns the file: dropping it unlinks `path`.
+    pub fn create(path: &Path, p: u64, ring_cap: u64) -> Result<Segment, TransportError> {
+        if p == 0 {
+            return Err(TransportError::Protocol("need at least one rank".into()));
+        }
+        if ring_cap < 1024 || ring_cap % 64 != 0 {
+            return Err(TransportError::Protocol(format!(
+                "ring capacity {ring_cap} must be a multiple of 64, at least 1024"
+            )));
+        }
+        let (arena_off, total) = seg_layout(p, ring_cap);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .map_err(|e| TransportError::io(format!("creating segment {}: {e}", path.display())))?;
+        file.set_len(total)
+            .map_err(|e| TransportError::io(format!("sizing segment {}: {e}", path.display())))?;
+        let base = mm::map_shared(&file, total as usize)
+            .map_err(|e| TransportError::io(format!("mapping segment {}: {e}", path.display())))?;
+        let seg = Segment {
+            base,
+            len: total as usize,
+            path: path.to_path_buf(),
+            unlink: true,
+        };
+        let hdr = seg.hdr();
+        hdr.p.store(p, Ordering::Relaxed);
+        hdr.ring_cap.store(ring_cap, Ordering::Relaxed);
+        hdr.alloc_next.store(arena_off, Ordering::Relaxed);
+        // Publish: attachers spinning on the magic see the header above.
+        hdr.magic.store(SEG_MAGIC, Ordering::Release);
+        Ok(seg)
+    }
+
+    /// Attach to a segment some other process created, retrying until the
+    /// file exists and its magic is published or `deadline` passes. The
+    /// returned handle does *not* unlink the file on drop.
+    pub fn open(path: &Path, deadline: Instant) -> Result<Segment, TransportError> {
+        loop {
+            if let Some(seg) = Segment::try_open(path)? {
+                return Ok(seg);
+            }
+            if Instant::now() >= deadline {
+                return Err(TransportError::timeout(format!(
+                    "segment {} was not published in time",
+                    path.display()
+                )));
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// One attach attempt: `Ok(None)` when the segment is not published
+    /// yet (missing file, zero length, magic not stored).
+    fn try_open(path: &Path) -> Result<Option<Segment>, TransportError> {
+        let file = match File::options().read(true).write(true).open(path) {
+            Ok(f) => f,
+            Err(_) => return Ok(None),
+        };
+        let len = file
+            .metadata()
+            .map_err(|e| TransportError::io(format!("stat {}: {e}", path.display())))?
+            .len();
+        if len < SEG_HDR_BYTES {
+            return Ok(None);
+        }
+        let base = mm::map_shared(&file, len as usize)
+            .map_err(|e| TransportError::io(format!("mapping segment {}: {e}", path.display())))?;
+        let seg = Segment {
+            base,
+            len: len as usize,
+            path: path.to_path_buf(),
+            unlink: false,
+        };
+        let magic = seg.hdr().magic.load(Ordering::Acquire);
+        if magic != SEG_MAGIC {
+            if magic != 0 {
+                return Err(TransportError::Protocol(format!(
+                    "segment {}: bad magic {magic:#x}",
+                    path.display()
+                )));
+            }
+            return Ok(None); // not published yet; Drop unmaps
+        }
+        Ok(Some(seg))
+    }
+
+    fn hdr(&self) -> &SegHdr {
+        // SAFETY: the mapping is at least SEG_HDR_BYTES long (checked at
+        // create/open) and page-aligned.
+        unsafe { &*(self.base as *const SegHdr) }
+    }
+
+    /// Number of ranks this segment was created for.
+    pub fn ranks(&self) -> u64 {
+        self.hdr().p.load(Ordering::Relaxed)
+    }
+
+    /// Per-link ring capacity in bytes.
+    pub fn ring_capacity(&self) -> u64 {
+        self.hdr().ring_cap.load(Ordering::Relaxed)
+    }
+
+    /// The backing file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// The ring-table entry for the directed link `from → to` (a byte
+    /// offset into the segment; 0 = not yet allocated).
+    fn table_entry(&self, from: u64, to: u64) -> &AtomicU64 {
+        let p = self.ranks();
+        debug_assert!(from < p && to < p);
+        let off = SEG_HDR_BYTES + (from * p + to) * 8;
+        // SAFETY: in bounds by layout; 8-aligned.
+        unsafe { &*(self.base.add(off as usize) as *const AtomicU64) }
+    }
+
+    /// View the ring at byte offset `off`.
+    fn ring_at(&self, off: u64) -> Ring {
+        debug_assert!(off as usize + (RING_HDR_BYTES as usize) <= self.len);
+        Ring {
+            // SAFETY: offsets come from the bump allocator, which is
+            // bounds-checked against the mapping length.
+            hdr: unsafe { self.base.add(off as usize) as *const RingHdr },
+            data: unsafe { self.base.add((off + RING_HDR_BYTES) as usize) },
+            cap: self.ring_capacity(),
+        }
+    }
+
+    /// The producer-side lookup: the ring `from → to`, allocating it from
+    /// the arena on first use. Only the producer (`from`) may call this,
+    /// which is what makes the table store race-free.
+    fn producer_ring(&self, from: u64, to: u64) -> Result<Ring, TransportError> {
+        let entry = self.table_entry(from, to);
+        let mut off = entry.load(Ordering::Acquire);
+        if off == 0 {
+            let ring_bytes = RING_HDR_BYTES + self.ring_capacity();
+            off = self.hdr().alloc_next.fetch_add(ring_bytes, Ordering::Relaxed);
+            if off + ring_bytes > self.len as u64 {
+                return Err(TransportError::Protocol(format!(
+                    "segment {} arena exhausted allocating ring {from}->{to}",
+                    self.path.display()
+                )));
+            }
+            // Fresh pages of the sparse file are zero, which is exactly a
+            // valid empty ring — no initialization pass needed.
+            entry.store(off, Ordering::Release);
+        }
+        Ok(self.ring_at(off))
+    }
+
+    /// The consumer-side lookup: `None` until the producer allocates.
+    fn consumer_ring(&self, from: u64, to: u64) -> Option<Ring> {
+        let off = self.table_entry(from, to).load(Ordering::Acquire);
+        (off != 0).then(|| self.ring_at(off))
+    }
+}
+
+impl Drop for Segment {
+    fn drop(&mut self) {
+        mm::unmap(self.base, self.len);
+        if self.unlink {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// A resolved SPSC byte ring: header plus `cap` data bytes. `Copy` so the
+/// per-peer caches hand it out cheaply; all state lives in shared memory.
+#[derive(Clone, Copy)]
+struct Ring {
+    hdr: *const RingHdr,
+    data: *mut u8,
+    cap: u64,
+}
+
+impl Ring {
+    fn hdr(&self) -> &RingHdr {
+        // SAFETY: points into a live Segment mapping (the transport holds
+        // the Arc for as long as any Ring is reachable).
+        unsafe { &*self.hdr }
+    }
+
+    /// Producer side: copy as much of `src` as fits, advance `head`, wake
+    /// a parked consumer. Returns the bytes consumed from `src`.
+    fn push(&self, src: &[u8]) -> usize {
+        let h = self.hdr();
+        let head = h.head.load(Ordering::Relaxed);
+        let tail = h.tail.load(Ordering::Acquire);
+        let space = self.cap - (head - tail);
+        let n = (space as usize).min(src.len());
+        if n == 0 {
+            return 0;
+        }
+        let pos = (head % self.cap) as usize;
+        let first = n.min(self.cap as usize - pos);
+        // SAFETY: [pos, pos + first) and [0, n - first) are in the data
+        // area and, by the SPSC head/tail protocol, not concurrently read.
+        unsafe {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), self.data.add(pos), first);
+            std::ptr::copy_nonoverlapping(src.as_ptr().add(first), self.data, n - first);
+        }
+        h.head.store(head + n as u64, Ordering::Release);
+        if h.data_waiter.swap(0, Ordering::AcqRel) == 1 {
+            park::wake(&h.data_waiter);
+        }
+        n
+    }
+
+    /// Consumer side: feed up to `max` buffered bytes to `sink` (in one
+    /// or two slices at the wrap point), advance `tail`, wake a parked
+    /// producer. Returns the bytes drained.
+    fn pull(&self, max: usize, mut sink: impl FnMut(&[u8])) -> usize {
+        let h = self.hdr();
+        let head = h.head.load(Ordering::Acquire);
+        let tail = h.tail.load(Ordering::Relaxed);
+        let avail = head - tail;
+        let n = (avail as usize).min(max);
+        if n == 0 {
+            return 0;
+        }
+        let pos = (tail % self.cap) as usize;
+        let first = n.min(self.cap as usize - pos);
+        // SAFETY: the producer never writes [tail, head) while the
+        // consumer holds it; slices are in the data area.
+        unsafe {
+            sink(std::slice::from_raw_parts(self.data.add(pos), first));
+            sink(std::slice::from_raw_parts(self.data, n - first));
+        }
+        h.tail.store(tail + n as u64, Ordering::Release);
+        if h.space_waiter.swap(0, Ordering::AcqRel) == 1 {
+            park::wake(&h.space_waiter);
+        }
+        n
+    }
+
+    /// Bytes buffered and unread (consumer view).
+    fn buffered(&self) -> u64 {
+        self.hdr().head.load(Ordering::Acquire) - self.hdr().tail.load(Ordering::Relaxed)
+    }
+
+    /// Free capacity (producer view).
+    fn space(&self) -> u64 {
+        self.cap - (self.hdr().head.load(Ordering::Relaxed) - self.hdr().tail.load(Ordering::Acquire))
+    }
+}
+
+/// In-flight outgoing frame: header then the caller's borrowed payload,
+/// streamed straight into the peer ring.
+struct SendProgress<'a> {
+    hdr: [u8; FRAME_HDR_BYTES],
+    hdr_pos: usize,
+    data: &'a [u8],
+    data_pos: usize,
+}
+
+impl<'a> SendProgress<'a> {
+    fn new(tag: u64, data: &'a [u8]) -> SendProgress<'a> {
+        let mut hdr = [0u8; FRAME_HDR_BYTES];
+        hdr[..8].copy_from_slice(&tag.to_le_bytes());
+        hdr[8..].copy_from_slice(&(data.len() as u64).to_le_bytes());
+        SendProgress {
+            hdr,
+            hdr_pos: 0,
+            data,
+            data_pos: 0,
+        }
+    }
+
+    fn step(&mut self, ring: Ring) -> bool {
+        let mut progressed = false;
+        if self.hdr_pos < FRAME_HDR_BYTES {
+            let n = ring.push(&self.hdr[self.hdr_pos..]);
+            self.hdr_pos += n;
+            progressed |= n > 0;
+        }
+        if self.hdr_pos == FRAME_HDR_BYTES && self.data_pos < self.data.len() {
+            let n = ring.push(&self.data[self.data_pos..]);
+            self.data_pos += n;
+            progressed |= n > 0;
+        }
+        progressed
+    }
+
+    fn done(&self) -> bool {
+        self.hdr_pos == FRAME_HDR_BYTES && self.data_pos == self.data.len()
+    }
+}
+
+/// In-flight incoming frame: header assembly, then payload bytes appended
+/// to the caller's receive buffer.
+struct RecvProgress {
+    hdr: [u8; FRAME_HDR_BYTES],
+    hdr_pos: usize,
+    tag: u64,
+    want: usize,
+    parsed: bool,
+}
+
+impl RecvProgress {
+    fn new() -> RecvProgress {
+        RecvProgress {
+            hdr: [0u8; FRAME_HDR_BYTES],
+            hdr_pos: 0,
+            tag: 0,
+            want: 0,
+            parsed: false,
+        }
+    }
+
+    fn step(
+        &mut self,
+        ring: Ring,
+        recv_buf: &mut Vec<u8>,
+        rank: u64,
+        from: u64,
+    ) -> Result<bool, TransportError> {
+        let mut progressed = false;
+        if !self.parsed {
+            let need = FRAME_HDR_BYTES - self.hdr_pos;
+            let hdr = &mut self.hdr;
+            let mut pos = self.hdr_pos;
+            let n = ring.pull(need, |chunk| {
+                hdr[pos..pos + chunk.len()].copy_from_slice(chunk);
+                pos += chunk.len();
+            });
+            self.hdr_pos = pos;
+            progressed |= n > 0;
+            if self.hdr_pos == FRAME_HDR_BYTES {
+                self.tag = u64::from_le_bytes(self.hdr[..8].try_into().expect("8 bytes"));
+                let len = u64::from_le_bytes(self.hdr[8..].try_into().expect("8 bytes"));
+                if len > MAX_FRAME {
+                    return Err(TransportError::Protocol(format!(
+                        "rank {rank}: oversized frame from {from}: {len} bytes — corrupt ring"
+                    )));
+                }
+                self.want = len as usize;
+                self.parsed = true;
+                recv_buf.clear();
+                recv_buf.reserve(self.want);
+            }
+        }
+        if self.parsed && recv_buf.len() < self.want {
+            let need = self.want - recv_buf.len();
+            let n = ring.pull(need, |chunk| recv_buf.extend_from_slice(chunk));
+            progressed |= n > 0;
+        }
+        Ok(progressed)
+    }
+
+    fn done(&self, recv_buf: &[u8]) -> bool {
+        self.parsed && recv_buf.len() == self.want
+    }
+}
+
+/// One rank's endpoint of a shared-memory segment. Build a full in-process
+/// set with [`run_shm`], or attach each process to a published segment
+/// with [`ShmTransport::attach`] (the `launch` CLI subcommand does both
+/// halves for you).
+pub struct ShmTransport {
+    seg: Arc<Segment>,
+    rank: u64,
+    p: u64,
+    timeout: Duration,
+    /// Cached rings this rank produces into (`rank → peer`).
+    tx: Vec<Option<Ring>>,
+    /// Cached rings this rank consumes (`peer → rank`).
+    rx: Vec<Option<Ring>>,
+    /// Warm-up α/β measurement; `None` until [`ShmTransport::warm_up`].
+    measured: Option<CostHint>,
+    /// Transport-level round counter for failure context.
+    ops: u64,
+}
+
+// SAFETY: the cached `Ring` views point into the `Arc<Segment>` mapping
+// this endpoint keeps alive; all shared state behind them is atomics with
+// acquire/release pairs. Moving the whole endpoint to another thread
+// moves both the rings and the Arc together, so the pointers stay valid
+// and the SPSC roles (one producer, one consumer per ring) are preserved
+// — they are per-*rank*, not per-thread.
+unsafe impl Send for ShmTransport {}
+
+impl ShmTransport {
+    /// Rank `rank`'s endpoint over an already-mapped segment (in-process
+    /// sharing: every rank clones the same [`Arc`]).
+    pub fn from_segment(
+        seg: Arc<Segment>,
+        rank: u64,
+        timeout: Duration,
+    ) -> Result<ShmTransport, TransportError> {
+        let p = seg.ranks();
+        if rank >= p {
+            return Err(TransportError::Protocol(format!(
+                "rank {rank} out of range for a {p}-rank segment"
+            )));
+        }
+        Ok(ShmTransport {
+            seg,
+            rank,
+            p,
+            timeout,
+            tx: (0..p).map(|_| None).collect(),
+            rx: (0..p).map(|_| None).collect(),
+            measured: None,
+            ops: 0,
+        })
+    }
+
+    /// Cross-process attach: map the segment at `path` (waiting up to
+    /// `timeout` for the creator to publish it) and join as `rank`.
+    pub fn attach(path: &Path, rank: u64, timeout: Duration) -> Result<ShmTransport, TransportError> {
+        let seg = Segment::open(path, Instant::now() + timeout)?;
+        ShmTransport::from_segment(Arc::new(seg), rank, timeout)
+    }
+
+    /// The segment this endpoint is attached to.
+    pub fn segment(&self) -> &Arc<Segment> {
+        &self.seg
+    }
+
+    fn tx_ring(&mut self, to: u64) -> Result<Ring, TransportError> {
+        if let Some(r) = self.tx[to as usize] {
+            return Ok(r);
+        }
+        let r = self.seg.producer_ring(self.rank, to)?;
+        self.tx[to as usize] = Some(r);
+        Ok(r)
+    }
+
+    fn rx_ring(&mut self, from: u64) -> Option<Ring> {
+        if let Some(r) = self.rx[from as usize] {
+            return Some(r);
+        }
+        let r = self.seg.consumer_ring(from, self.rank)?;
+        self.rx[from as usize] = Some(r);
+        Some(r)
+    }
+
+    fn check_peer(&self, peer: u64) -> Result<(), TransportError> {
+        if peer >= self.p || peer == self.rank {
+            return Err(TransportError::Collective(format!(
+                "rank {}: invalid peer {peer} (p = {})",
+                self.rank, self.p
+            )));
+        }
+        Ok(())
+    }
+
+    /// The uninstrumented round body behind [`Transport::sendrecv_into`]:
+    /// an interleaved full-duplex progress loop, so a send and a receive
+    /// whose frames both exceed the ring capacity stream through it
+    /// concurrently instead of deadlocking.
+    fn round_impl(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
+        let round = self.ops;
+        self.ops += 1;
+        let mut tx = None;
+        let mut sp = None;
+        if let Some(s) = send {
+            self.check_peer(s.to)?;
+            let Payload::Bytes(data) = s.data else {
+                // Size-only payloads belong to the cost-model backends;
+                // this backend exists to move real bytes.
+                return Err(TransportError::Protocol(format!(
+                    "rank {}: virtual payload ({} bytes) on the shm backend \
+                     — use the sim/cost backend for size-only sweeps",
+                    self.rank,
+                    s.data.len()
+                )));
+            };
+            tx = Some((s.to, self.tx_ring(s.to)?));
+            sp = Some(SendProgress::new(s.tag, data));
+        }
+        let mut rp = None;
+        if let Some(from) = recv_from {
+            self.check_peer(from)?;
+            rp = Some(RecvProgress::new());
+        }
+        if sp.is_none() && rp.is_none() {
+            return Ok(None);
+        }
+        let deadline = Instant::now() + self.timeout;
+        let mut idle: u32 = 0;
+        loop {
+            let mut progressed = false;
+            if let (Some(st), Some((_, ring))) = (sp.as_mut(), tx) {
+                progressed |= st.step(ring);
+                if st.done() {
+                    sp = None;
+                }
+            }
+            if let (Some(st), Some(from)) = (rp.as_mut(), recv_from) {
+                if let Some(ring) = self.rx_ring(from) {
+                    progressed |= st.step(ring, recv_buf, self.rank, from)?;
+                    if st.done(recv_buf) {
+                        let tag = st.tag;
+                        rp = None;
+                        if sp.is_none() {
+                            return Ok(Some(tag));
+                        }
+                        // Stash the tag by re-entering with rp done.
+                        return self.finish_send(sp, tx, deadline, round).map(|()| Some(tag));
+                    }
+                }
+            }
+            if sp.is_none() && rp.is_none() {
+                return Ok(None);
+            }
+            if progressed {
+                idle = 0;
+                continue;
+            }
+            idle += 1;
+            if idle <= SPIN_BEFORE_PARK {
+                std::hint::spin_loop();
+                continue;
+            }
+            if Instant::now() >= deadline {
+                return Err(self.stall_error(send.map(|s| s.to), &sp, recv_from, &rp, round));
+            }
+            self.park_once(tx, recv_from);
+        }
+    }
+
+    /// Drain the remaining outgoing bytes after the receive half finished.
+    fn finish_send(
+        &mut self,
+        mut sp: Option<SendProgress<'_>>,
+        tx: Option<(u64, Ring)>,
+        deadline: Instant,
+        round: u64,
+    ) -> Result<(), TransportError> {
+        let (to, ring) = tx.expect("send in progress implies a ring");
+        let mut idle: u32 = 0;
+        while let Some(st) = sp.as_mut() {
+            if st.step(ring) {
+                idle = 0;
+                if st.done() {
+                    sp = None;
+                }
+                continue;
+            }
+            idle += 1;
+            if idle <= SPIN_BEFORE_PARK {
+                std::hint::spin_loop();
+                continue;
+            }
+            if Instant::now() >= deadline {
+                return Err(TransportError::timeout_at(
+                    format!(
+                        "rank {}: waited {:?} for {to} to drain its ring",
+                        self.rank, self.timeout
+                    ),
+                    FaultCtx::peer(to).with_round(round),
+                ));
+            }
+            let h = ring.hdr();
+            h.space_waiter.store(1, Ordering::SeqCst);
+            if ring.space() == 0 {
+                park::wait(&h.space_waiter, 1, PARK_SLICE);
+            }
+        }
+        Ok(())
+    }
+
+    /// Park on whichever side is blocked (bounded by [`PARK_SLICE`], so a
+    /// lost wakeup race or a simultaneous two-sided stall only costs one
+    /// slice before re-checking). Reached only while at least one side is
+    /// still pending: a pending receive parks on the data flag; otherwise
+    /// the pending send parks on the space flag.
+    fn park_once(&mut self, tx: Option<(u64, Ring)>, recv_from: Option<u64>) {
+        if let Some(from) = recv_from {
+            match self.rx_ring(from) {
+                Some(ring) => {
+                    let h = ring.hdr();
+                    h.data_waiter.store(1, Ordering::SeqCst);
+                    if ring.buffered() == 0 {
+                        park::wait(&h.data_waiter, 1, PARK_SLICE);
+                    }
+                }
+                None => {
+                    // The peer has not allocated its ring yet: nothing to
+                    // park on, poll gently.
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            }
+            return;
+        }
+        if let Some((_, ring)) = tx {
+            let h = ring.hdr();
+            h.space_waiter.store(1, Ordering::SeqCst);
+            if ring.space() == 0 {
+                park::wait(&h.space_waiter, 1, PARK_SLICE);
+            }
+        }
+    }
+
+    /// The structured timeout for a stalled round, naming the side(s)
+    /// still pending.
+    fn stall_error(
+        &self,
+        send_to: Option<u64>,
+        sp: &Option<SendProgress<'_>>,
+        recv_from: Option<u64>,
+        rp: &Option<RecvProgress>,
+        round: u64,
+    ) -> TransportError {
+        if let (Some(from), Some(_)) = (recv_from, rp.as_ref()) {
+            return TransportError::timeout_at(
+                format!(
+                    "rank {}: waited {:?} for a block from {from} over shm",
+                    self.rank, self.timeout
+                ),
+                FaultCtx::peer(from).with_round(round),
+            );
+        }
+        let to = send_to.unwrap_or(u64::MAX);
+        debug_assert!(sp.is_some());
+        TransportError::timeout_at(
+            format!(
+                "rank {}: waited {:?} for {to} to drain its ring",
+                self.rank, self.timeout
+            ),
+            FaultCtx::peer(to).with_round(round),
+        )
+    }
+}
+
+impl Transport for ShmTransport {
+    fn rank(&self) -> u64 {
+        self.rank
+    }
+
+    fn size(&self) -> u64 {
+        self.p
+    }
+
+    fn sendrecv_into(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
+        #[cfg(feature = "obs")]
+        let t0 = crate::obs::now_ns();
+        #[cfg(feature = "obs")]
+        let sent_info = send.map(|s| (s.to, s.tag, s.data.len()));
+        let res = self.round_impl(send, recv_from, recv_buf);
+        #[cfg(feature = "obs")]
+        if let Ok(got) = &res {
+            if let Some((_, _, bytes)) = sent_info {
+                crate::obs::metrics::on_send(bytes);
+            }
+            let recv_info = got.map(|tag| {
+                (
+                    recv_from.expect("got implies recv_from"),
+                    tag,
+                    recv_buf.len() as u64,
+                )
+            });
+            if let Some((_, _, bytes)) = recv_info {
+                crate::obs::metrics::on_recv(bytes);
+            }
+            crate::obs::record_round(sent_info, recv_info, t0);
+        }
+        res
+    }
+
+    fn warm_up(&mut self) -> Result<(), TransportError> {
+        // Pre-allocate the circulant rings this rank produces into, so
+        // first rounds skip the arena bump.
+        if self.p > 1 {
+            let skips = crate::sched::Skips::new(self.p);
+            for k in 0..skips.q() {
+                let to = skips.to_proc(self.rank, k);
+                let from = skips.from_proc(self.rank, k);
+                self.tx_ring(to)?;
+                self.tx_ring(from)?;
+            }
+        }
+        // Measure α/β once (collective: every rank runs the same probe).
+        if self.measured.is_none() {
+            self.measured = super::measure_link_hint(self)?;
+        }
+        Ok(())
+    }
+
+    fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
+        for &peer in peers {
+            if peer != self.rank && peer < self.p {
+                self.tx_ring(peer)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn cost_hint(&self) -> CostHint {
+        self.measured.unwrap_or(SHM_STATIC_HINT)
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        super::dissemination_barrier(self)
+    }
+}
+
+/// Run `f` as an SPMD program over one fresh shared-memory segment, one
+/// OS thread per rank (the ring path is identical to the separate-process
+/// mode; only the attach differs — threads share the mapping through an
+/// [`Arc`]). Returns the per-rank results (index = rank); the segment
+/// file is unlinked when the run ends.
+pub fn run_shm<R, F>(p: u64, timeout: Duration, f: F) -> Result<Vec<R>, TransportError>
+where
+    R: Send,
+    F: Fn(ShmTransport) -> Result<R, TransportError> + Sync,
+{
+    assert!(p >= 1, "need at least one rank");
+    static RUN_SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = RUN_SEQ.fetch_add(1, Ordering::Relaxed);
+    let path = segment_path(&format!("run{seq}"));
+    let seg = Arc::new(Segment::create(&path, p, default_ring_cap(p))?);
+    let mut results: Vec<Option<Result<R, TransportError>>> = (0..p).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(p as usize);
+        for rank in 0..p {
+            let f = &f;
+            let seg = seg.clone();
+            handles.push(s.spawn(move || {
+                let t = ShmTransport::from_segment(seg, rank, timeout)?;
+                f(t)
+            }));
+        }
+        for (rank, h) in handles.into_iter().enumerate() {
+            results[rank] = Some(h.join().unwrap_or_else(|_| {
+                Err(TransportError::Collective(format!("rank {rank} panicked")))
+            }));
+        }
+    });
+    super::drain_results(results, |e| {
+        matches!(
+            e,
+            TransportError::Timeout { .. } | TransportError::Io { .. }
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairwise_exchange_is_full_duplex() {
+        let results = run_shm(4, Duration::from_secs(10), |mut t| {
+            let partner = t.rank() ^ 1;
+            let payload = [t.rank() as u8; 9];
+            let got = t.sendrecv(
+                Some(SendSpec {
+                    to: partner,
+                    tag: t.rank(),
+                    data: Payload::Bytes(&payload),
+                }),
+                Some(partner),
+            )?;
+            let msg = got.expect("scheduled receive");
+            t.barrier()?;
+            Ok((msg.tag, msg.data))
+        })
+        .unwrap();
+        for (r, (tag, data)) in results.iter().enumerate() {
+            assert_eq!(*tag, r as u64 ^ 1);
+            assert_eq!(data.as_slice(), [(r as u64 ^ 1) as u8; 9]);
+        }
+    }
+
+    #[test]
+    fn frames_larger_than_the_ring_stream_through() {
+        // Frames 8× the ring capacity must stream: the interleaved
+        // progress loop is what keeps cyclic full-duplex rounds alive.
+        let path = segment_path("bigframe");
+        let seg = Arc::new(Segment::create(&path, 2, 1024).unwrap());
+        let big: Vec<u8> = (0..8 * 1024u64).map(|i| (i % 251) as u8).collect();
+        let mut results: Vec<Option<Vec<u8>>> = vec![None, None];
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for rank in 0..2u64 {
+                let seg = seg.clone();
+                let big = &big;
+                handles.push(s.spawn(move || {
+                    let mut t =
+                        ShmTransport::from_segment(seg, rank, Duration::from_secs(10)).unwrap();
+                    let other = 1 - rank;
+                    let mut buf = Vec::new();
+                    let got = t
+                        .sendrecv_into(
+                            Some(SendSpec {
+                                to: other,
+                                tag: 7,
+                                data: Payload::Bytes(big),
+                            }),
+                            Some(other),
+                            &mut buf,
+                        )
+                        .unwrap();
+                    assert_eq!(got, Some(7));
+                    buf
+                }));
+            }
+            for (rank, h) in handles.into_iter().enumerate() {
+                results[rank] = Some(h.join().unwrap());
+            }
+        });
+        for r in results {
+            assert_eq!(r.unwrap(), big);
+        }
+    }
+
+    #[test]
+    fn fifo_per_pair_keeps_blocks_ordered() {
+        let results = run_shm(2, Duration::from_secs(10), |mut t| {
+            let mut tags = Vec::new();
+            if t.rank() == 0 {
+                for tag in 0..5u64 {
+                    t.sendrecv(
+                        Some(SendSpec {
+                            to: 1,
+                            tag,
+                            data: Payload::Bytes(&[tag as u8; 3]),
+                        }),
+                        None,
+                    )?;
+                }
+            } else {
+                for _ in 0..5 {
+                    let msg = t.sendrecv(None, Some(0))?.expect("scheduled receive");
+                    tags.push(msg.tag);
+                }
+            }
+            Ok(tags)
+        })
+        .unwrap();
+        assert_eq!(results[1], vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn timeout_reports_instead_of_hanging() {
+        let err = run_shm(2, Duration::from_millis(80), |mut t| {
+            if t.rank() == 0 {
+                return Ok(());
+            }
+            t.sendrecv(None, Some(0))?;
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(
+            matches!(
+                err,
+                TransportError::Timeout { .. } | TransportError::Io { .. }
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn virtual_payload_is_a_structured_protocol_error() {
+        let err = run_shm(2, Duration::from_secs(5), |mut t| {
+            if t.rank() == 0 {
+                t.sendrecv(
+                    Some(SendSpec {
+                        to: 1,
+                        tag: 0,
+                        data: Payload::Virtual(1 << 20),
+                    }),
+                    None,
+                )?;
+            }
+            Ok(())
+        })
+        .unwrap_err();
+        match err {
+            TransportError::Protocol(msg) => {
+                assert!(msg.contains("virtual payload"), "{msg}");
+                assert!(msg.contains("shm backend"), "{msg}");
+            }
+            other => panic!("expected a Protocol error, got {other}"),
+        }
+    }
+
+    #[test]
+    fn warm_up_measures_a_positive_hint() {
+        let hints = run_shm(3, Duration::from_secs(10), |mut t| {
+            t.warm_up()?;
+            t.barrier()?;
+            Ok(t.cost_hint())
+        })
+        .unwrap();
+        // The consensus pass makes every rank agree exactly.
+        for h in &hints {
+            assert!(h.alpha_s > 0.0 && h.beta_s_per_byte > 0.0);
+            assert_eq!(h.alpha_s.to_bits(), hints[0].alpha_s.to_bits());
+            assert_eq!(h.beta_s_per_byte.to_bits(), hints[0].beta_s_per_byte.to_bits());
+        }
+    }
+
+    #[test]
+    fn segment_layout_is_aligned_and_sparse_sized() {
+        let (arena, total) = seg_layout(16, 4096);
+        assert_eq!(arena % 64, 0);
+        assert_eq!(total, arena + 16 * 15 * (RING_HDR_BYTES + 4096));
+        assert_eq!(std::mem::size_of::<SegHdr>(), 64);
+        assert_eq!(std::mem::size_of::<RingHdr>(), 128);
+    }
+}

@@ -77,7 +77,7 @@
 //!   binds `base_port + r`, so `p` processes need only agree on
 //!   `(host, base_port, p)`. Used by `examples/bcast_tcp.rs`.
 
-use super::{FaultCtx, Payload, SendSpec, Transport, TransportError};
+use super::{CostHint, FaultCtx, Payload, SendSpec, Transport, TransportError};
 use std::io::{ErrorKind, IoSlice, Read, Write};
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -338,6 +338,13 @@ pub struct TcpTransport {
     /// Transport-level round counter: one per `sendrecv_into` call, so
     /// failure context can name the round a peer went silent in.
     ops: u64,
+    /// When set, [`TcpTransport::reap_idle`] runs automatically with this
+    /// `max_idle` after every [`Transport::barrier`] (see
+    /// [`TcpTransport::with_auto_reap`]).
+    auto_reap: Option<u64>,
+    /// Warm-up α/β measurement; `None` until [`Transport::warm_up`] has
+    /// run (the static [`CostHint::DEFAULT`] applies meanwhile).
+    measured: Option<CostHint>,
 }
 
 /// Default per-attempt connect timeout of the dial loop (overridable with
@@ -381,6 +388,8 @@ impl TcpTransport {
             linked_before: (0..p).map(|_| false).collect(),
             connect_timeout: DEFAULT_CONNECT_TIMEOUT,
             ops: 0,
+            auto_reap: None,
+            measured: None,
         })
     }
 
@@ -395,6 +404,20 @@ impl TcpTransport {
             "connect timeout must be positive"
         );
         self.connect_timeout = connect_timeout;
+        self
+    }
+
+    /// Opt in to automatic idle-link reaping: after every
+    /// [`Transport::barrier`] — the collective epoch boundary every rank
+    /// reaches together, which is what makes the reap collective too —
+    /// run [`TcpTransport::reap_idle`] with this `max_idle`. A long-lived
+    /// communicator's socket budget then shrinks back to what its current
+    /// workload touches without anyone calling `reap_idle` by hand.
+    /// `max_idle = N` keeps links used within the last `N` barrier
+    /// epochs; the barrier's own dissemination links are used *every*
+    /// epoch, so any `max_idle ≥ 1` retains them.
+    pub fn with_auto_reap(mut self, max_idle: u64) -> TcpTransport {
+        self.auto_reap = Some(max_idle);
         self
     }
 
@@ -837,7 +860,14 @@ impl Transport for TcpTransport {
     }
 
     fn warm_up(&mut self) -> Result<(), TransportError> {
-        self.warm_circulant().map(|_| ())
+        self.warm_circulant()?;
+        // One-time α/β probe over the freshly-warmed ring links; the
+        // consensus pass inside makes every rank adopt the same fit, so
+        // hint-driven resolution stays rank-uniform.
+        if self.measured.is_none() {
+            self.measured = super::measure_link_hint(self)?;
+        }
+        Ok(())
     }
 
     fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
@@ -875,10 +905,20 @@ impl Transport for TcpTransport {
         res
     }
 
+    fn cost_hint(&self) -> CostHint {
+        self.measured.unwrap_or(CostHint::DEFAULT)
+    }
+
     fn barrier(&mut self) -> Result<(), TransportError> {
         // FIFO per pair keeps barrier tokens behind any in-flight data;
         // the token links are established lazily like any other link.
-        super::dissemination_barrier(self)
+        super::dissemination_barrier(self)?;
+        // The barrier is the collective epoch boundary: every rank is
+        // here together, so an opted-in reap is itself collective.
+        if let Some(max_idle) = self.auto_reap {
+            self.reap_idle(max_idle);
+        }
+        Ok(())
     }
 }
 

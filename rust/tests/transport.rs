@@ -465,6 +465,241 @@ fn tcp_warm_circulant_then_bcast_roundtrips() {
 }
 
 #[test]
+fn tcp_auto_reap_closes_idle_links_at_barrier_epochs() {
+    // Opt-in auto-reap: each barrier is a collective epoch boundary. With
+    // `max_idle = 1` a link used every epoch survives indefinitely, while
+    // a link idle for two epochs is closed. Distance 5 is not one of the
+    // p = 11 dissemination distances {1, 2, 4, 8} (or their mirrors), so
+    // the exchange links below go idle once the barriers start, and the
+    // socket budget shrinks from the full mesh to the barrier
+    // neighborhood — without breaking later traffic (closed links re-dial
+    // lazily).
+    let p = 11u64;
+    let results = run_tcp(p, TIMEOUT, |t| {
+        let mut t = t.with_auto_reap(1);
+        let r = t.rank();
+        let block = [r as u8; 32];
+        let mut recv_buf = Vec::new();
+        let from = (r + p - 5) % p;
+        let got = t.sendrecv_into(
+            Some(SendSpec {
+                to: (r + 5) % p,
+                tag: r,
+                data: Payload::Bytes(&block),
+            }),
+            Some(from),
+            &mut recv_buf,
+        )?;
+        assert_eq!(got, Some(from));
+        t.barrier()?; // epoch 1: exchange links idle for one epoch — kept
+        let before = t.established_connections();
+        t.barrier()?; // epoch 2: idle for two epochs — reaped
+        let after = t.established_connections();
+        Ok((before, after))
+    })
+    .unwrap();
+    for (r, &(before, after)) in results.iter().enumerate() {
+        assert_eq!(
+            before,
+            (p - 1) as usize,
+            "rank {r}: exchange + barrier should have meshed fully before reaping"
+        );
+        assert_eq!(
+            after, 8,
+            "rank {r}: only the 2·4 barrier links should survive two epochs"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared-memory and hierarchical backends: the same generic collectives
+// must produce the same bytes (and bitwise-equal floats) as the lockstep
+// simulator. p spans powers of two, primes, and > 32; sizes are irregular
+// on purpose (zero-sized blocks via m < n, empty allgatherv contributions).
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod shm_and_hier {
+    use super::*;
+    use nblock_bcast::transport::hier::run_hier;
+    use nblock_bcast::transport::shm::run_shm;
+    use nblock_bcast::transport::TransportError;
+
+    /// Node size per p: exercises all-one-node, even splits, and ragged
+    /// last nodes (7 = 3 + 3 + 1, 33 = 4 × 8 + 1).
+    fn rpn_for(p: u64) -> u64 {
+        match p {
+            2 => 1, // every rank its own node — pure TCP path
+            3 => 2,
+            7 => 3,
+            16 => 4,
+            _ => 8,
+        }
+    }
+
+    /// (p, n, m, root) — m = 2 < n = 4 makes zero-sized trailing blocks.
+    const BCAST_MATRIX: [(u64, usize, u64, u64); 5] =
+        [(2, 3, 777, 1), (3, 4, 2, 0), (7, 5, 4099, 3), (16, 4, 65549, 15), (33, 6, 10007, 17)];
+
+    #[test]
+    fn shm_bcast_matches_sim_reference_across_the_p_matrix() {
+        for (p, n, m, root) in BCAST_MATRIX {
+            let d = payload(m, p * 31 + n as u64);
+            let spmd = |rank: u64, t: &mut dyn Transport| {
+                let data = if rank == root { Some(&d[..]) } else { None };
+                bcast_circulant(t, root, n, m, data)
+            };
+            let (sim_bufs, _) = run_sim(p, flat(), |mut t| spmd(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("sim p={p}: {e}"));
+            let shm_bufs = run_shm(p, TIMEOUT, |mut t| spmd(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("shm p={p} n={n} m={m}: {e}"));
+            assert_eq!(sim_bufs, shm_bufs, "p={p} n={n} m={m} root={root}");
+        }
+    }
+
+    #[test]
+    fn hier_bcast_matches_sim_reference_across_the_p_matrix() {
+        for (p, n, m, root) in BCAST_MATRIX {
+            let d = payload(m, p * 37 + n as u64);
+            let spmd = |rank: u64, t: &mut dyn Transport| {
+                let data = if rank == root { Some(&d[..]) } else { None };
+                bcast_circulant(t, root, n, m, data)
+            };
+            let (sim_bufs, _) = run_sim(p, flat(), |mut t| spmd(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("sim p={p}: {e}"));
+            let hier_bufs = run_hier(p, rpn_for(p), TIMEOUT, |mut t| spmd(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("hier p={p} rpn={}: {e}", rpn_for(p)));
+            assert_eq!(sim_bufs, hier_bufs, "p={p} n={n} m={m} root={root}");
+        }
+    }
+
+    #[test]
+    fn shm_and_hier_allgatherv_match_sim_reference() {
+        for p in [2u64, 3, 7, 16, 33] {
+            let n = (p % 4 + 1) as usize;
+            // Irregular and including empty contributions (rank 0 and any
+            // rank where the product lands on a multiple of 241).
+            let counts: Vec<u64> = (0..p).map(|j| (j * 53) % 241).collect();
+            let datas: Vec<Vec<u8>> = counts
+                .iter()
+                .enumerate()
+                .map(|(j, &c)| payload(c, j as u64 + p))
+                .collect();
+            let spmd = |rank: u64, t: &mut dyn Transport| {
+                allgatherv_circulant(t, n, &counts, &datas[rank as usize])
+            };
+            let (sim_out, _) = run_sim(p, flat(), |mut t| spmd(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("sim p={p}: {e}"));
+            let shm_out = run_shm(p, TIMEOUT, |mut t| spmd(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("shm p={p} n={n}: {e}"));
+            assert_eq!(sim_out, shm_out, "shm p={p} n={n}");
+            let hier_out = run_hier(p, rpn_for(p), TIMEOUT, |mut t| spmd(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("hier p={p} n={n}: {e}"));
+            assert_eq!(sim_out, hier_out, "hier p={p} n={n}");
+        }
+    }
+
+    #[test]
+    fn shm_and_hier_reduce_and_allreduce_match_sim_bitwise() {
+        for p in [2u64, 3, 7, 16, 33] {
+            let n = (p % 3 + 1) as usize;
+            let elems = (p * 29 + 11) as usize;
+            let root = p / 2;
+            let contribs: Vec<Vec<f32>> = (0..p)
+                .map(|r| {
+                    (0..elems)
+                        .map(|i| ((r * 37 + i as u64 * 11) % 97) as f32 / 7.0)
+                        .collect()
+                })
+                .collect();
+            let red = |rank: u64, t: &mut dyn Transport| {
+                reduce_circulant(t, root, n, &contribs[rank as usize])
+            };
+            let (sim_red, _) = run_sim(p, flat(), |mut t| red(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("sim reduce p={p}: {e}"));
+            let shm_red = run_shm(p, TIMEOUT, |mut t| red(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("shm reduce p={p} n={n}: {e}"));
+            // Identical combine order on every backend ⇒ bitwise equality.
+            assert_eq!(sim_red, shm_red, "reduce p={p} n={n}");
+            let hier_red = run_hier(p, rpn_for(p), TIMEOUT, |mut t| red(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("hier reduce p={p} n={n}: {e}"));
+            assert_eq!(sim_red, hier_red, "reduce p={p} n={n}");
+
+            let ar = |rank: u64, t: &mut dyn Transport| {
+                allreduce_circulant(t, n, &contribs[rank as usize])
+            };
+            let (sim_ar, _) = run_sim(p, flat(), |mut t| ar(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("sim allreduce p={p}: {e}"));
+            let shm_ar = run_shm(p, TIMEOUT, |mut t| ar(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("shm allreduce p={p} n={n}: {e}"));
+            assert_eq!(sim_ar, shm_ar, "allreduce p={p} n={n}");
+            let hier_ar = run_hier(p, rpn_for(p), TIMEOUT, |mut t| ar(t.rank(), &mut t))
+                .unwrap_or_else(|e| panic!("hier allreduce p={p} n={n}: {e}"));
+            assert_eq!(sim_ar, hier_ar, "allreduce p={p} n={n}");
+        }
+    }
+
+    #[test]
+    fn shm_virtual_payload_is_a_structured_protocol_error() {
+        // Same contract as the thread/tcp backends: size-only payloads
+        // belong to the cost backends, and the shm rejection must be a
+        // Protocol error that names the problem — not a hang or a panic.
+        let err = run_shm(2, TIMEOUT, |mut t| {
+            let r = t.rank();
+            let mut buf = Vec::new();
+            t.sendrecv_into(
+                Some(SendSpec {
+                    to: 1 - r,
+                    tag: 0,
+                    data: Payload::Virtual(4096),
+                }),
+                None,
+                &mut buf,
+            )?;
+            Ok(())
+        })
+        .unwrap_err();
+        match err {
+            TransportError::Protocol(msg) => {
+                assert!(msg.contains("virtual payload"), "{msg}");
+                assert!(msg.contains("shm"), "{msg}");
+            }
+            other => panic!("expected a protocol error, got: {other}"),
+        }
+    }
+
+    #[test]
+    fn launch_p16_shm_forks_real_processes() {
+        // End-to-end through the installed binary: 16 real single-rank
+        // processes attach to one shared-memory segment and broadcast,
+        // every worker verifying byte-identity against the deterministic
+        // root payload (the same bytes `bcast --transport sim` moves).
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_nblock"))
+            .args([
+                "launch",
+                "bcast",
+                "--p",
+                "16",
+                "--transport",
+                "shm",
+                "--m",
+                "20000",
+                "--timeout",
+                "120",
+            ])
+            .output()
+            .expect("spawn the launch parent");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "launch failed:\n{stdout}\n{stderr}");
+        assert!(
+            stdout.contains("all 16 processes verified"),
+            "missing the parent summary:\n{stdout}"
+        );
+    }
+}
+
+#[test]
 fn single_rank_degenerates_gracefully_everywhere() {
     let d = payload(64, 9);
     let (sim_bufs, stats) = run_sim(1, flat(), |mut t| {
