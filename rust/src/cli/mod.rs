@@ -95,6 +95,12 @@ Tools:
     corrupt=R@T, seed=N; comma-separable and replayable — severed links
     reroute through the degraded-subgraph broadcast, kill/corrupt faults
     end in a bounded-time structured error echoed with the replay spec);
+    bcast and allreduce transport runs also accept --resilient: on a
+    structured fault the survivors gossip-agree on the failed links and
+    dead ranks (identical set at every survivor), rebuild a degraded
+    plan, and automatically re-run until delivery or the retry budget
+    is spent — kill/sever plans then end in verified delivery at every
+    survivor instead of an abort;
     with --transport they also accept --algo
     {auto,circulant,binomial,scatter-allgather,ring,bruck,gather-bcast}
     to pick the algorithm (default circulant; auto resolves from p, n,
@@ -125,7 +131,11 @@ Tools:
                              accepts --m/--n/--root (bcast), --elems
                              (allreduce), --timeout SECS; every rank
                              verifies its result byte-exactly and rank 0
-                             prints a one-line summary
+                             prints a one-line summary; --fault-plan SPEC
+                             with --resilient runs the chaos path across
+                             real processes: every worker injects the
+                             same deterministic faults, survivors agree
+                             on the failure set, recover, and verify
   trace-report FILE          re-read a --trace Chrome-trace JSON and print
                              its per-round latency table and α/β fit
   threaded --p P --n N --m BYTES   one-OS-thread-per-rank broadcast
@@ -232,6 +242,7 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                     trace_arg(&args)?,
                     timeout_arg(&args)?,
                     fault_plan_arg(&args)?,
+                    args.flag("resilient"),
                 ),
                 None => {
                     reject_untraceable(&args)?;
@@ -239,6 +250,11 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                         anyhow::bail!(
                             "--fault-plan needs a --transport backend (thread|tcp; \
                              sim for sever-only plans)"
+                        );
+                    }
+                    if args.flag("resilient") {
+                        anyhow::bail!(
+                            "--resilient needs a --transport backend (thread|tcp|shm|hier)"
                         );
                     }
                     tools::bcast(
@@ -303,9 +319,22 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
                 &args.get("algo", "circulant".to_string()),
                 trace_arg(&args)?,
                 timeout_arg(&args)?,
+                fault_plan_arg(&args)?,
+                args.flag("resilient"),
             ),
             None => {
                 reject_untraceable(&args)?;
+                if fault_plan_arg(&args)?.is_some() {
+                    anyhow::bail!(
+                        "--fault-plan needs a --transport backend (thread|tcp; \
+                         sim for sever-only plans)"
+                    );
+                }
+                if args.flag("resilient") {
+                    anyhow::bail!(
+                        "--resilient needs a --transport backend (thread|tcp|shm|hier)"
+                    );
+                }
                 tools::allreduce(args.get("p", 64), args.get("elems", 1 << 16))
             }
         },
@@ -324,6 +353,8 @@ pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
             args.get("n", 0),
             args.get("root", 0),
             timeout_arg(&args)?,
+            fault_plan_arg(&args)?,
+            args.flag("resilient"),
         ),
         // Internal: the per-rank child process `launch` fork/execs. Not in
         // HELP on purpose — its contract is owned by `tools::launch`.

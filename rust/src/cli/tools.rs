@@ -451,6 +451,51 @@ fn backend_hint(backend: &str) -> crate::transport::CostHint {
     }
 }
 
+/// `--resilient` epilogue shared by the bcast and allreduce runners:
+/// verify every survivor's value with `check`, pin the recovery record
+/// (epochs, agreed mask, agreed dead set) identical across survivors,
+/// cross-check the agreed dead set against the ranks that actually
+/// reported themselves dead, and print the one-line recovery summary.
+fn report_resilient<V>(
+    results: &[crate::transport::recover::Resilient<V>],
+    mut check: impl FnMut(usize, &V) -> Result<()>,
+) -> Result<crate::transport::recover::Recovery> {
+    use crate::transport::recover::Resilient;
+    let mut dead_ranks: Vec<u64> = Vec::new();
+    let mut agreed: Option<&crate::transport::recover::Recovery> = None;
+    for (r, res) in results.iter().enumerate() {
+        match res {
+            Resilient::Delivered { value, recovery } => {
+                check(r, value)?;
+                match agreed {
+                    Some(first) if first != recovery => bail!(
+                        "rank {r}: recovery record diverges from the other survivors \
+                         ({recovery:?} vs {first:?})"
+                    ),
+                    None => agreed = Some(recovery),
+                    _ => {}
+                }
+            }
+            Resilient::Dead => dead_ranks.push(r as u64),
+        }
+    }
+    let rec = agreed.ok_or_else(|| anyhow::anyhow!("no surviving rank delivered"))?;
+    if rec.dead != dead_ranks {
+        bail!(
+            "agreed dead set {:?} diverges from the ranks that reported themselves dead {:?}",
+            rec.dead,
+            dead_ranks
+        );
+    }
+    println!(
+        "  recovery   : {} epoch(s); agreed severed links {:?}, agreed dead {:?}",
+        rec.epochs,
+        rec.mask.edges(),
+        rec.dead
+    );
+    Ok(rec.clone())
+}
+
 /// Run one data-mode collective over a chosen transport backend
 /// (`--transport {sim,thread,tcp}`) and algorithm (`--algo`): the *same*
 /// generic SPMD code on the lockstep simulator, per-rank OS threads, or
@@ -465,6 +510,13 @@ fn backend_hint(backend: &str) -> crate::transport::CostHint {
 /// ([`crate::collectives::bcast_circulant_degraded`]); kill/corrupt
 /// faults are expected to surface as structured errors, which are printed
 /// with the replayable plan instead of failing the command.
+///
+/// With `resilient` (`--resilient`), the run goes through
+/// [`crate::transport::recover::bcast_resilient`] instead: every rank that
+/// hits a structured fault joins the gossip agreement, the group rebuilds
+/// a degraded plan over the agreed mask/dead set, and the collective
+/// re-runs from the root's original payload — so kill/sever plans end in
+/// verified delivery at every survivor rather than a structured abort.
 #[allow(clippy::too_many_arguments)]
 pub fn bcast_transport(
     p: u64,
@@ -477,6 +529,7 @@ pub fn bcast_transport(
     trace: Option<&str>,
     timeout: Duration,
     fault_plan: Option<&str>,
+    resilient: bool,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
     use crate::collectives::segment::Segment;
@@ -558,7 +611,73 @@ pub fn bcast_transport(
         }
         println!("  fault plan : {pl}");
     }
+    if resilient {
+        if backend == "sim" {
+            bail!(
+                "--resilient needs a point-to-point backend (thread|tcp|shm|hier); \
+                 the lockstep sim cannot lose a rank mid-run"
+            );
+        }
+        if resolved != Algorithm::Circulant {
+            bail!(
+                "--resilient re-plans over the circulant schedule \
+                 (degraded reroute is circulant-only); got `{resolved}`"
+            );
+        }
+    }
     let recorder = trace_recorder(trace, p);
+    if resilient {
+        use crate::transport::recover::{bcast_resilient, DEFAULT_RETRY_BUDGET};
+        let n = n.max(1);
+        let t0 = std::time::Instant::now();
+        let run = run_over_backend(backend, p, timeout, |mut t| {
+            if let Some(rec) = &recorder {
+                crate::obs::attach(rec, t.rank());
+            }
+            let data = if t.rank() == root { Some(&payload[..]) } else { None };
+            let res = match &fplan {
+                Some(plan) => {
+                    let mut ft = FaultTransport::new(t, plan.clone(), timeout);
+                    bcast_resilient(&mut ft, root, n, m, data, DEFAULT_RETRY_BUDGET)
+                }
+                None => bcast_resilient(t.as_mut(), root, n, m, data, DEFAULT_RETRY_BUDGET),
+            };
+            crate::obs::detach();
+            res
+        });
+        let (results, _) = match run {
+            Ok(v) => v,
+            // A plan that faults the root (or disconnects the graph) is
+            // unrecoverable by design: every survivor fails with the same
+            // structured error, echoed with the replay spec.
+            Err(e) if expects_failure => {
+                println!("  outcome    : unrecoverable under the injected fault");
+                println!("               {e}");
+                println!(
+                    "  replay     : --fault-plan '{}' reproduces this outcome deterministically",
+                    fplan.as_ref().expect("expects_failure implies a plan")
+                );
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        let rec = report_resilient(&results, |r, got| {
+            if got != &payload {
+                bail!("rank {r}: delivery mismatch");
+            }
+            Ok(())
+        })?;
+        println!(
+            "  delivery   : byte-exact at all {} surviving rank(s)",
+            p - rec.dead.len() as u64
+        );
+        println!("  wall time  : {}", fmt_time(wall));
+        if let (Some(path), Some(recorder)) = (trace, &recorder) {
+            report_trace(path, recorder, p, m)?;
+        }
+        return Ok(());
+    }
     let t0 = std::time::Instant::now();
     let run = run_over_backend(backend, p, timeout, |mut t| {
         if let Some(rec) = &recorder {
@@ -793,6 +912,14 @@ pub fn reduce_transport(
 
 /// `--transport`/`--algo` counterpart for the allreduce: every rank's
 /// result is verified against the serial sum.
+///
+/// `fault_plan` mirrors the bcast runner: severed links reroute through
+/// [`crate::collectives::allreduce_circulant_degraded`] (circulant-only),
+/// kill/corrupt faults end in a bounded-time structured error echoed with
+/// the replay spec. With `resilient` the run goes through
+/// [`crate::transport::recover::allreduce_resilient`]: survivors agree on
+/// the failure set, re-run degraded, and are verified against the serial
+/// sum over the agreed-live contributions only.
 #[allow(clippy::too_many_arguments)]
 pub fn allreduce_transport(
     p: u64,
@@ -802,8 +929,12 @@ pub fn allreduce_transport(
     algo: &str,
     trace: Option<&str>,
     timeout: Duration,
+    fault_plan: Option<&str>,
+    resilient: bool,
 ) -> Result<()> {
     use crate::collectives::generic::Algorithm;
+    use crate::sched::LinkMask;
+    use crate::transport::fault::{FaultAction, FaultPlan, FaultTransport};
     use crate::transport::Transport;
     if p == 0 {
         bail!("need at least one rank");
@@ -818,17 +949,148 @@ pub fn allreduce_transport(
         "allreduce (f32 sum) of {elems} elements over p = {p} (q = {q}), n = {n} blocks, \
          transport `{backend}`, algorithm `{resolved}`{auto_note}"
     );
+    let fplan = match fault_plan {
+        Some(spec) => Some(std::sync::Arc::new(
+            FaultPlan::parse(spec, p).map_err(|e| anyhow::anyhow!("--fault-plan: {e}"))?,
+        )),
+        None => None,
+    };
+    let mask = fplan
+        .as_ref()
+        .map(|pl| LinkMask::from_edges(pl.severed_edges()))
+        .unwrap_or_default();
+    let expects_failure = fplan.as_ref().is_some_and(|pl| {
+        pl.actions().iter().any(|a| {
+            matches!(
+                a,
+                FaultAction::KillRank { .. } | FaultAction::CorruptFrame { .. }
+            )
+        })
+    });
+    if !mask.is_empty() && resolved != Algorithm::Circulant {
+        bail!(
+            "--fault-plan with severed links needs the circulant algorithm \
+             (degraded-subgraph reroute is circulant-only); got `{resolved}`"
+        );
+    }
+    if backend == "sim" && expects_failure {
+        bail!(
+            "kill/corrupt faults abort one rank, which stalls the lockstep \
+             sim backend; use --transport thread or tcp"
+        );
+    }
+    if let Some(pl) = &fplan {
+        println!("  fault plan : {pl}");
+    }
+    if resilient {
+        if backend == "sim" {
+            bail!(
+                "--resilient needs a point-to-point backend (thread|tcp|shm|hier); \
+                 the lockstep sim cannot lose a rank mid-run"
+            );
+        }
+        if resolved != Algorithm::Circulant {
+            bail!(
+                "--resilient re-plans over the circulant schedule \
+                 (degraded reroute is circulant-only); got `{resolved}`"
+            );
+        }
+    }
     let recorder = trace_recorder(trace, p);
+    if resilient {
+        use crate::transport::recover::{allreduce_resilient, DEFAULT_RETRY_BUDGET};
+        let t0 = std::time::Instant::now();
+        let run = run_over_backend(backend, p, timeout, |mut t| {
+            if let Some(rec) = &recorder {
+                crate::obs::attach(rec, t.rank());
+            }
+            let mine = &contribs[t.rank() as usize];
+            let res = match &fplan {
+                Some(plan) => {
+                    let mut ft = FaultTransport::new(t, plan.clone(), timeout);
+                    allreduce_resilient(&mut ft, n, mine, DEFAULT_RETRY_BUDGET)
+                }
+                None => allreduce_resilient(t.as_mut(), n, mine, DEFAULT_RETRY_BUDGET),
+            };
+            crate::obs::detach();
+            res
+        });
+        let (results, _) = match run {
+            Ok(v) => v,
+            Err(e) if expects_failure => {
+                println!("  outcome    : unrecoverable under the injected fault");
+                println!("               {e}");
+                println!(
+                    "  replay     : --fault-plan '{}' reproduces this outcome deterministically",
+                    fplan.as_ref().expect("expects_failure implies a plan")
+                );
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        // The agreed sum covers exactly the agreed-live contributions, so
+        // the serial reference drops the agreed-dead ranks; the recovery
+        // record (and with it the dead set) is pinned identical across
+        // survivors before any sums are compared.
+        let first = results
+            .iter()
+            .find_map(|r| r.recovery())
+            .ok_or_else(|| anyhow::anyhow!("no surviving rank delivered"))?;
+        let live: Vec<Vec<f32>> = contribs
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| !first.dead.contains(&(*r as u64)))
+            .map(|(_, c)| c.clone())
+            .collect();
+        let want = serial_sum(&live);
+        let rec = report_resilient(&results, |r, got: &Vec<f32>| {
+            check_sum(&format!("rank {r}"), got, &want)
+        })?;
+        let live_p = p - rec.dead.len() as u64;
+        println!(
+            "  result     : verified against the serial sum of the {live_p} agreed-live \
+             contribution(s) at all {live_p} surviving rank(s)"
+        );
+        println!("  wall time  : {}", fmt_time(wall));
+        if let (Some(path), Some(recorder)) = (trace, &recorder) {
+            report_trace(path, recorder, p, (elems * 4) as u64)?;
+        }
+        return Ok(());
+    }
     let t0 = std::time::Instant::now();
-    let (results, sim_stats) = run_over_backend(backend, p, timeout, |mut t| {
+    let run = run_over_backend(backend, p, timeout, |mut t| {
         if let Some(rec) = &recorder {
             crate::obs::attach(rec, t.rank());
         }
         let mine = &contribs[t.rank() as usize];
-        let res = generic::allreduce(t.as_mut(), resolved, n, mine);
+        let res = match &fplan {
+            Some(plan) => {
+                let mut ft = FaultTransport::new(t, plan.clone(), timeout);
+                if mask.is_empty() {
+                    generic::allreduce(&mut ft, resolved, n, mine)
+                } else {
+                    crate::collectives::allreduce_circulant_degraded(&mut ft, n, mine, &mask, &[])
+                }
+            }
+            None => generic::allreduce(t.as_mut(), resolved, n, mine),
+        };
         crate::obs::detach();
         res
-    })?;
+    });
+    let (results, sim_stats) = match run {
+        Ok(v) => v,
+        Err(e) if expects_failure => {
+            println!("  outcome    : bounded-time structured failure under the injected fault");
+            println!("               {e}");
+            println!(
+                "  replay     : --fault-plan '{}' reproduces this outcome deterministically",
+                fplan.as_ref().expect("expects_failure implies a plan")
+            );
+            return Ok(());
+        }
+        Err(e) => return Err(e),
+    };
     let wall = t0.elapsed().as_secs_f64();
     let want = serial_sum(&contribs);
     for (r, got) in results.iter().enumerate() {
@@ -857,6 +1119,14 @@ pub fn allreduce_transport(
 /// `allreduce`) and exits nonzero on any mismatch; the parent reports which
 /// ranks failed. Segments are created here and unlinked when all workers
 /// exit.
+///
+/// `fault_plan` + `resilient` run the chaos path across real processes:
+/// every worker wraps its transport in the same deterministic
+/// [`crate::transport::fault::FaultTransport`] plan and runs the
+/// collective through [`crate::transport::recover`]; a worker whose rank
+/// is agreed dead exits cleanly after printing so, survivors verify their
+/// recovered result. A fault plan without `--resilient` is rejected —
+/// the plain worker path has no degraded reroute.
 #[cfg(unix)]
 #[allow(clippy::too_many_arguments)]
 pub fn launch(
@@ -869,8 +1139,11 @@ pub fn launch(
     n: usize,
     root: u64,
     timeout: Duration,
+    fault_plan: Option<&str>,
+    resilient: bool,
 ) -> Result<()> {
     use crate::transport::bootstrap::serve_rendezvous;
+    use crate::transport::fault::FaultPlan;
     use crate::transport::shm::{default_ring_cap, segment_path, Segment};
     use std::net::TcpListener;
     use std::process::{Command, Stdio};
@@ -883,6 +1156,18 @@ pub fn launch(
     }
     if root >= p {
         bail!("root must be < p");
+    }
+    if let Some(spec) = fault_plan {
+        if !resilient {
+            bail!(
+                "launch --fault-plan needs --resilient: the plain worker path has no \
+                 degraded reroute, so an injected fault would only hang the group"
+            );
+        }
+        // Parse here too so a bad spec fails in the parent, before any
+        // worker processes or segments exist.
+        let pl = FaultPlan::parse(spec, p).map_err(|e| anyhow::anyhow!("--fault-plan: {e}"))?;
+        println!("launch: fault plan {pl}, resilient recovery on");
     }
     let exe = std::env::current_exe()?;
     let secs = timeout.as_secs().max(1);
@@ -909,6 +1194,12 @@ pub fn launch(
             .arg("--timeout")
             .arg(secs.to_string())
             .stdin(Stdio::null());
+        if let Some(spec) = fault_plan {
+            cmd.arg("--fault-plan").arg(spec);
+        }
+        if resilient {
+            cmd.arg("--resilient").arg("true");
+        }
         for (name, value) in extra {
             cmd.arg(format!("--{name}")).arg(value);
         }
@@ -1062,6 +1353,16 @@ pub fn launch_worker(args: &super::Args) -> Result<()> {
         }
         other => bail!("launch-worker: unknown transport `{other}` (shm|hier)"),
     };
+    let resilient = args.flag("resilient");
+    if let Some(spec) = args.options.get("fault-plan") {
+        use crate::transport::fault::{FaultPlan, FaultTransport};
+        // Every worker parses the same spec against the same p, so all
+        // ranks execute the identical deterministic plan.
+        let plan = std::sync::Arc::new(
+            FaultPlan::parse(spec, p).map_err(|e| anyhow::anyhow!("launch-worker: --fault-plan: {e}"))?,
+        );
+        t = Box::new(FaultTransport::new(t, plan, timeout));
+    }
     let q = ceil_log2(p);
     match collective {
         "bcast" => {
@@ -1075,6 +1376,32 @@ pub fn launch_worker(args: &super::Args) -> Result<()> {
             // so a launch run is byte-comparable to the simulator.
             let payload: Vec<u8> = (0..m).map(|i| ((i * 131) % 251) as u8).collect();
             let data = (rank == root).then_some(payload.as_slice());
+            if resilient {
+                use crate::transport::recover::{bcast_resilient, Resilient, DEFAULT_RETRY_BUDGET};
+                match bcast_resilient(t.as_mut(), root, n, m, data, DEFAULT_RETRY_BUDGET)
+                    .map_err(|e| anyhow::anyhow!("rank {rank}: {e}"))?
+                {
+                    Resilient::Delivered { value, recovery } => {
+                        if value != payload {
+                            bail!("rank {rank}: broadcast bytes diverge from the root payload");
+                        }
+                        println!(
+                            "  rank {rank}: bcast of {} over p = {p} (n = {n}) byte-identical \
+                             after {} recovery epoch(s); agreed severed {:?}, dead {:?}",
+                            fmt_bytes(m),
+                            recovery.epochs,
+                            recovery.mask.edges(),
+                            recovery.dead
+                        );
+                    }
+                    Resilient::Dead => println!(
+                        "  rank {rank}: agreed dead under the fault plan — no delivery to verify"
+                    ),
+                }
+                // No trailing barrier: the dissemination pattern would
+                // route over the very edges the plan severed or killed.
+                return Ok(());
+            }
             let got = generic::bcast(t.as_mut(), Algorithm::Circulant, root, n, m, data)
                 .map_err(|e| anyhow::anyhow!("rank {rank}: {e}"))?;
             if got != payload {
@@ -1095,6 +1422,44 @@ pub fn launch_worker(args: &super::Args) -> Result<()> {
                 n => n,
             };
             let contribs = reduce_contribs(p, elems);
+            if resilient {
+                use crate::transport::recover::{
+                    allreduce_resilient, Resilient, DEFAULT_RETRY_BUDGET,
+                };
+                let run = allreduce_resilient(
+                    t.as_mut(),
+                    n,
+                    &contribs[rank as usize],
+                    DEFAULT_RETRY_BUDGET,
+                )
+                .map_err(|e| anyhow::anyhow!("rank {rank}: {e}"))?;
+                match run {
+                    Resilient::Delivered { value, recovery } => {
+                        // The agreed sum covers exactly the agreed-live
+                        // contributions.
+                        let live: Vec<Vec<f32>> = contribs
+                            .iter()
+                            .enumerate()
+                            .filter(|(r, _)| !recovery.dead.contains(&(*r as u64)))
+                            .map(|(_, c)| c.clone())
+                            .collect();
+                        check_sum(&format!("rank {rank}"), &value, &serial_sum(&live))?;
+                        println!(
+                            "  rank {rank}: allreduce of {elems} f32 over p = {p} (n = {n}) \
+                             matches the serial sum of {} agreed-live contribution(s) after \
+                             {} recovery epoch(s); agreed severed {:?}, dead {:?}",
+                            live.len(),
+                            recovery.epochs,
+                            recovery.mask.edges(),
+                            recovery.dead
+                        );
+                    }
+                    Resilient::Dead => println!(
+                        "  rank {rank}: agreed dead under the fault plan — no result to verify"
+                    ),
+                }
+                return Ok(());
+            }
             let got =
                 generic::allreduce(t.as_mut(), Algorithm::Circulant, n, &contribs[rank as usize])
                     .map_err(|e| anyhow::anyhow!("rank {rank}: {e}"))?;

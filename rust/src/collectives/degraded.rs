@@ -1,31 +1,47 @@
-//! Degraded-subgraph broadcast: the circulant schedule on a mesh with
-//! severed links.
+//! Degraded-subgraph collectives: the circulant schedules on a mesh with
+//! severed links and dead ranks.
 //!
 //! [`bcast_circulant_degraded`] runs the paper's Algorithm 1 round loop
-//! over a subgraph mesh described by a [`LinkMask`]: rounds whose
-//! `{rank ± skipₖ}` edge is masked are *cancelled* (both endpoints skip
-//! them — deterministically, with no metadata on the wire and no timeout
-//! burned), and the blocks those rounds would have delivered are patched
-//! in by the [`DegradedBcastPlan`] repair waves — extra rounds after the
-//! healthy `n - 1 + q` in which surviving relays forward the missing
-//! blocks over unmasked links, doubling coverage binomially per wave.
+//! over a subgraph mesh described by a [`LinkMask`] and a dead-rank set:
+//! rounds whose `{rank ± skipₖ}` edge is masked (or touches a dead rank)
+//! are *cancelled* (both endpoints skip them — deterministically, with no
+//! metadata on the wire and no timeout burned), and the blocks those
+//! rounds would have delivered are patched in by the
+//! [`DegradedBcastPlan`] repair waves — extra rounds after the healthy
+//! `n - 1 + q` in which surviving relays forward the missing blocks over
+//! unmasked links, doubling coverage binomially per wave. Under a heavy
+//! mask the plan is a pure survivor-tree wave schedule
+//! ([`DegradedBcastPlan::is_fallback`]) and the executor runs no base
+//! rounds at all — the same code path, with `base_rounds == 0`.
 //!
-//! Delivery is **byte-identical** to the healthy path (pinned by
-//! `rust/tests/faults.rs`): the subgraph only changes *which edges carry*
-//! each block and how many rounds the broadcast takes, never the bytes a
-//! rank assembles. With an empty mask the function *is* the healthy path
-//! (it delegates to [`bcast_circulant_into`]).
+//! [`allgatherv_circulant_degraded`] and [`allreduce_circulant_degraded`]
+//! extend degraded execution beyond broadcast by composition: one
+//! degraded broadcast per surviving root (dead ranks contribute nothing),
+//! with allreduce summing the gathered contributions in ascending rank
+//! order — the same deterministic order on every survivor, so results are
+//! byte-identical across survivors (and equal to the healthy collective
+//! whenever the healthy reduction order is exact, e.g. integer-valued
+//! data). They trade rounds for resilience — `p` sequential broadcasts
+//! instead of one fused schedule — which is the right trade in a degraded
+//! epoch: correctness first, the healthy fused path returns next epoch.
+//!
+//! Delivery is **byte-identical** to the healthy path on every surviving
+//! rank (pinned by `rust/tests/faults.rs`): the subgraph only changes
+//! *which edges carry* each block and how many rounds the collective
+//! takes, never the bytes a rank assembles. With an empty mask and no
+//! dead ranks the broadcast *is* the healthy path (it delegates to
+//! [`bcast_circulant_into`]).
 //!
 //! Like everything in [`crate::collectives::generic`], this is SPMD: each
-//! rank derives the identical global plan from `(p, root, n, mask)` alone
-//! — a pure function, no coordination — and drives one
+//! rank derives the identical global plan from `(p, root, n, mask, dead)`
+//! alone — a pure function, no coordination — and drives one
 //! [`Transport::sendrecv_into`] per round. Repair edges need not be
 //! circulant; the point-to-point backends connect them lazily.
 
 #![warn(missing_docs)]
 
 use super::blocks::BlockPartition;
-use super::generic::bcast_circulant_into;
+use super::generic::{bcast_circulant_into, bytes_to_f32s, f32s_to_bytes};
 use crate::sched::{BcastPlan, DegradedBcastPlan, LinkMask};
 use crate::transport::{idle_round, BufferPool, Payload, SendSpec, Transport, TransportError};
 
@@ -73,12 +89,44 @@ pub fn bcast_circulant_degraded_into<T: Transport + ?Sized>(
         return bcast_circulant_into(t, root, n, m, data, pool, out);
     }
     let p = t.size();
-    let rank = t.rank();
     if root >= p {
         return Err(cerr(format!("root {root} out of range (p = {p})")));
     }
     if n == 0 {
         return Err(cerr("need at least one block".into()));
+    }
+    // Every rank derives the identical degraded plan — cancellations and
+    // repair waves — from `(p, root, n, mask)` alone, no communication.
+    let deg = DegradedBcastPlan::new(p, root, n, mask.clone()).map_err(|e| cerr(e.to_string()))?;
+    bcast_circulant_degraded_with(t, m, data, &deg, pool, out)
+}
+
+/// Execute a pre-built [`DegradedBcastPlan`] (root, block count, mask and
+/// dead set all live in the plan). This is the executor the recovery loop
+/// in [`crate::transport::recover`] uses: building the plan *before* any
+/// communication makes plan-time errors ([`crate::sched::DegradedError`])
+/// deterministic and local, never a half-run collective.
+///
+/// Must not be called on a rank the plan declares dead — dead ranks are
+/// excluded from the schedule entirely and have nothing to execute.
+pub fn bcast_circulant_degraded_with<T: Transport + ?Sized>(
+    t: &mut T,
+    m: u64,
+    data: Option<&[u8]>,
+    deg: &DegradedBcastPlan,
+    pool: &mut BufferPool,
+    out: &mut Vec<u8>,
+) -> Result<(), TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    let (root, n) = (deg.root, deg.n);
+    if deg.p != p {
+        return Err(cerr(format!("plan built for p = {}, mesh has {p}", deg.p)));
+    }
+    if deg.is_dead(rank) {
+        return Err(cerr(format!(
+            "rank {rank} is in the plan's dead set and cannot execute it"
+        )));
     }
     if let Some(d) = data {
         if d.len() as u64 != m {
@@ -94,66 +142,68 @@ pub fn bcast_circulant_degraded_into<T: Transport + ?Sized>(
         out.extend_from_slice(data.expect("validated above"));
         return Ok(());
     }
-    // Every rank derives the identical degraded plan — cancellations and
-    // repair waves — from `(p, root, n, mask)` alone, no communication.
-    let deg = DegradedBcastPlan::new(p, root, n, mask.clone()).map_err(|e| cerr(e.to_string()))?;
     let cache = crate::sched::cache::global();
     let skips = cache.skips(p);
     let rel = (rank + p - root) % p;
-    let plan = BcastPlan::new((*cache.schedule(p, rel)).clone(), n);
     let mut bufs: Vec<Option<Vec<u8>>> = vec![None; n];
     // Base rounds: the healthy round loop with cancelled deliveries
-    // suppressed on both endpoints.
-    for round in 0..plan.num_rounds() {
-        crate::obs::set_round(round as u64);
-        let a = plan.action(round);
-        let to_rel = skips.to_proc(rel, a.k);
-        let to_abs = (to_rel + root) % p;
-        let from_rel = skips.from_proc(rel, a.k);
-        let expect = match a.recv_block {
-            Some(b) if rank != root && !deg.is_cancelled(round, rank) => Some(b),
-            _ => None,
-        };
-        let recv_from = expect.map(|_| (from_rel + root) % p);
-        let mut recv_slot = pool.get();
-        // Never send to the root, and skip exactly the sends whose
-        // receiver is not waiting (masked edge, or this rank was starved
-        // of the block upstream — `is_cancelled` covers both).
-        let send = match a.send_block {
-            Some(sb) if to_rel != 0 && !deg.is_cancelled(round, to_abs) => {
-                let payload = if rank == root {
-                    Payload::Bytes(&data.expect("validated above")[part.range(sb)])
-                } else {
-                    Payload::Bytes(bufs[sb].as_deref().ok_or_else(|| {
-                        cerr(format!(
-                            "rank {rank} round {round}: uncancelled send of block {sb} not held"
-                        ))
-                    })?)
-                };
-                Some(SendSpec {
-                    to: to_abs,
-                    tag: sb as u64,
-                    data: payload,
-                })
-            }
-            _ => None,
-        };
-        let got = t.sendrecv_into(send, recv_from, &mut recv_slot)?;
-        match (got, expect) {
-            (None, None) => pool.put(recv_slot),
-            (Some(tag), Some(blk)) => {
-                check_block(rank, round, tag, recv_slot.len() as u64, blk, &part)?;
-                bufs[blk] = Some(recv_slot);
-            }
-            (Some(tag), None) => {
-                return Err(cerr(format!(
-                    "rank {rank} round {round}: unexpected message (block {tag})"
-                )))
-            }
-            (None, Some(blk)) => {
-                return Err(cerr(format!(
-                    "rank {rank} round {round}: scheduled block {blk} never arrived"
-                )))
+    // suppressed on both endpoints. Under the survivor-tree fallback
+    // `base_rounds == 0` and the waves below carry the whole broadcast.
+    if deg.base_rounds > 0 {
+        let plan = BcastPlan::new((*cache.schedule(p, rel)).clone(), n);
+        debug_assert_eq!(deg.base_rounds, plan.num_rounds());
+        for round in 0..deg.base_rounds {
+            crate::obs::set_round(round as u64);
+            let a = plan.action(round);
+            let to_rel = skips.to_proc(rel, a.k);
+            let to_abs = (to_rel + root) % p;
+            let from_rel = skips.from_proc(rel, a.k);
+            let expect = match a.recv_block {
+                Some(b) if rank != root && !deg.is_cancelled(round, rank) => Some(b),
+                _ => None,
+            };
+            let recv_from = expect.map(|_| (from_rel + root) % p);
+            let mut recv_slot = pool.get();
+            // Never send to the root, and skip exactly the sends whose
+            // receiver is not waiting (masked edge, dead endpoint, or this
+            // rank was starved of the block upstream — `is_cancelled`
+            // covers all three).
+            let send = match a.send_block {
+                Some(sb) if to_rel != 0 && !deg.is_cancelled(round, to_abs) => {
+                    let payload = if rank == root {
+                        Payload::Bytes(&data.expect("validated above")[part.range(sb)])
+                    } else {
+                        Payload::Bytes(bufs[sb].as_deref().ok_or_else(|| {
+                            cerr(format!(
+                                "rank {rank} round {round}: uncancelled send of block {sb} not held"
+                            ))
+                        })?)
+                    };
+                    Some(SendSpec {
+                        to: to_abs,
+                        tag: sb as u64,
+                        data: payload,
+                    })
+                }
+                _ => None,
+            };
+            let got = t.sendrecv_into(send, recv_from, &mut recv_slot)?;
+            match (got, expect) {
+                (None, None) => pool.put(recv_slot),
+                (Some(tag), Some(blk)) => {
+                    check_block(rank, round, tag, recv_slot.len() as u64, blk, &part)?;
+                    bufs[blk] = Some(recv_slot);
+                }
+                (Some(tag), None) => {
+                    return Err(cerr(format!(
+                        "rank {rank} round {round}: unexpected message (block {tag})"
+                    )))
+                }
+                (None, Some(blk)) => {
+                    return Err(cerr(format!(
+                        "rank {rank} round {round}: scheduled block {blk} never arrived"
+                    )))
+                }
             }
         }
     }
@@ -237,6 +287,114 @@ pub fn bcast_circulant_degraded_into<T: Transport + ?Sized>(
     Ok(())
 }
 
+/// Normalize a dead-rank list against mesh size `p`: in-range, sorted,
+/// deduplicated — the same normalization [`DegradedBcastPlan`] applies,
+/// done up front so composition loops can consult it directly.
+fn normalize_dead(p: u64, dead: &[u64]) -> Vec<u64> {
+    let mut d: Vec<u64> = dead.iter().copied().filter(|&r| r < p).collect();
+    d.sort_unstable();
+    d.dedup();
+    d
+}
+
+/// Irregular allgather over a degraded mesh: every surviving rank ends up
+/// with every surviving rank's contribution, byte-identical to the
+/// healthy [`super::generic::allgatherv_circulant`] entries. Composed as
+/// one degraded `n`-block broadcast per surviving root in ascending rank
+/// order — `p` sequential broadcasts instead of one fused all-broadcast
+/// schedule, trading rounds for resilience on the damaged mesh.
+///
+/// `counts[r]` is rank `r`'s contribution length (identical array on
+/// every rank); `mine` is this rank's contribution. The result has one
+/// entry per rank; entries for dead ranks are **empty** — their payloads
+/// are gone, nobody can reproduce them.
+pub fn allgatherv_circulant_degraded<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    counts: &[u64],
+    mine: &[u8],
+    mask: &LinkMask,
+    dead: &[u64],
+) -> Result<Vec<Vec<u8>>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if counts.len() as u64 != p {
+        return Err(cerr(format!("{} counts for p = {p}", counts.len())));
+    }
+    if counts[rank as usize] != mine.len() as u64 {
+        return Err(cerr(format!(
+            "rank {rank}: contribution is {} bytes, counts says {}",
+            mine.len(),
+            counts[rank as usize]
+        )));
+    }
+    if n == 0 {
+        return Err(cerr("need at least one block".into()));
+    }
+    let dead = normalize_dead(p, dead);
+    if dead.binary_search(&rank).is_ok() {
+        return Err(cerr(format!(
+            "rank {rank} is in the dead set and cannot execute the plan"
+        )));
+    }
+    let mut pool = BufferPool::default();
+    let mut result: Vec<Vec<u8>> = Vec::with_capacity(p as usize);
+    for root in 0..p {
+        if dead.binary_search(&root).is_ok() {
+            result.push(Vec::new());
+            continue;
+        }
+        let deg = DegradedBcastPlan::with_dead(p, root, n, mask.clone(), &dead)
+            .map_err(|e| cerr(e.to_string()))?;
+        let data = if rank == root { Some(mine) } else { None };
+        let mut out = Vec::new();
+        bcast_circulant_degraded_with(t, counts[root as usize], data, &deg, &mut pool, &mut out)?;
+        result.push(out);
+    }
+    Ok(result)
+}
+
+/// Elementwise f32-sum allreduce over a degraded mesh: every surviving
+/// rank returns the sum of all surviving contributions, byte-identical
+/// across survivors. Composed as a degraded allgather of the raw f32
+/// bytes followed by a local sum in ascending rank order — the same
+/// deterministic order on every survivor, so the result bytes agree
+/// everywhere (and equal the healthy [`super::generic::allreduce_circulant`]
+/// whenever the reduction is exact, e.g. integer-valued data). Dead
+/// ranks' contributions are excluded from the sum.
+pub fn allreduce_circulant_degraded<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    mine: &[f32],
+    mask: &LinkMask,
+    dead: &[u64],
+) -> Result<Vec<f32>, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    let dead = normalize_dead(p, dead);
+    let bytes = f32s_to_bytes(mine);
+    let counts = vec![bytes.len() as u64; p as usize];
+    let parts = allgatherv_circulant_degraded(t, n, &counts, &bytes, mask, &dead)?;
+    let mut acc = vec![0f32; mine.len()];
+    for (r, part) in parts.iter().enumerate() {
+        if dead.binary_search(&(r as u64)).is_ok() {
+            continue;
+        }
+        let vals = bytes_to_f32s(part);
+        if vals.len() != acc.len() {
+            return Err(cerr(format!(
+                "rank {rank}: contribution from {r} has {} elements, expected {}",
+                vals.len(),
+                acc.len()
+            )));
+        }
+        for (a, v) in acc.iter_mut().zip(vals) {
+            *a += v;
+        }
+    }
+    Ok(acc)
+}
+
 /// Determinacy check for one delivered frame: exactly the planned block,
 /// carrying exactly its partition size.
 fn check_block(
@@ -316,5 +474,77 @@ mod tests {
             err.to_string().contains("disconnects"),
             "want a structured plan-time error, got {err}"
         );
+    }
+
+    #[test]
+    fn dead_rank_bcast_delivers_to_all_survivors() {
+        let reference = msg(300);
+        let p = 7u64;
+        let gone = 3u64;
+        let want = reference.clone();
+        let out = run_threads(p, Duration::from_secs(20), move |mut t| {
+            if t.rank() == gone {
+                return Ok(Vec::new()); // a dead rank runs nothing
+            }
+            let plan = DegradedBcastPlan::with_dead(p, 0, 3, LinkMask::new(), &[gone])
+                .map_err(|e| cerr(e.to_string()))?;
+            let data = if t.rank() == 0 { Some(&want[..]) } else { None };
+            let mut pool = BufferPool::default();
+            let mut out = Vec::new();
+            bcast_circulant_degraded_with(&mut t, want.len() as u64, data, &plan, &mut pool, &mut out)?;
+            Ok(out)
+        })
+        .unwrap();
+        for (r, o) in out.iter().enumerate() {
+            if r as u64 == gone {
+                continue;
+            }
+            assert_eq!(o, &reference, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn degraded_allgatherv_matches_contributions() {
+        let p = 7u64;
+        let mask = LinkMask::from_edges([(1, 2), (4, 6)]);
+        let contrib = |r: u64| -> Vec<u8> {
+            (0..(50 + 13 * r)).map(|i| (i as u8).wrapping_mul(7).wrapping_add(r as u8)).collect()
+        };
+        let out = run_threads(p, Duration::from_secs(30), move |mut t| {
+            let mine = contrib(t.rank());
+            let counts: Vec<u64> = (0..p).map(|r| 50 + 13 * r).collect();
+            allgatherv_circulant_degraded(&mut t, 2, &counts, &mine, &mask, &[])
+        })
+        .unwrap();
+        for (rank, view) in out.iter().enumerate() {
+            for (r, part) in view.iter().enumerate() {
+                assert_eq!(part, &contrib(r as u64), "rank {rank} entry {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn degraded_allreduce_sums_survivors_byte_identically() {
+        let p = 5u64;
+        let gone = 2u64;
+        let mask = LinkMask::from_edges([(0, 4)]);
+        let out = run_threads(p, Duration::from_secs(30), move |mut t| {
+            let r = t.rank();
+            if r == gone {
+                return Ok(Vec::new());
+            }
+            let mine: Vec<f32> = (0..8).map(|i| (i * (r + 1)) as f32).collect();
+            allreduce_circulant_degraded(&mut t, 2, &mine, &mask, &[gone])
+        })
+        .unwrap();
+        let expect: Vec<f32> = (0..8u64)
+            .map(|i| (0..p).filter(|&r| r != gone).map(|r| (i * (r + 1)) as f32).sum())
+            .collect();
+        for (r, o) in out.iter().enumerate() {
+            if r as u64 == gone {
+                continue;
+            }
+            assert_eq!(o, &expect, "rank {r}");
+        }
     }
 }

@@ -672,11 +672,11 @@ fn allgatherv_circulant_impl<T: Transport + ?Sized>(
     Ok(())
 }
 
-fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+pub(crate) fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
     v.iter().flat_map(|x| x.to_le_bytes()).collect()
 }
 
-fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+pub(crate) fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
     b.chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect()

@@ -46,7 +46,10 @@ pub use reduce::{
     reduce_circulant,
 };
 pub use blocks::{allgather_block_count, bcast_block_count, BlockPartition};
-pub use degraded::{bcast_circulant_degraded, bcast_circulant_degraded_into};
+pub use degraded::{
+    allgatherv_circulant_degraded, allreduce_circulant_degraded, bcast_circulant_degraded,
+    bcast_circulant_degraded_into, bcast_circulant_degraded_with,
+};
 
 /// Map a transport-layer failure back to the Engine-era error type the
 /// wrapper APIs expose.

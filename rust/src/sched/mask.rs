@@ -1,17 +1,20 @@
 //! Degraded topologies: broadcast schedules over a subgraph mesh.
 //!
 //! A [`LinkMask`] names the undirected links that are *down* (severed by a
-//! fault, masked by a test, cut by a partial network partition). The
-//! circulant broadcast schedule assumes the full `{rank ± skipₖ}` edge set;
-//! when an edge it wants is masked, the scheduled transmission cannot
-//! happen and — because later rounds forward what earlier rounds delivered
-//! — the loss *cascades*: every block the starved rank would have relayed
-//! is now missing downstream too.
+//! fault, masked by a test, cut by a partial network partition), and a
+//! *dead set* names the ranks that are gone entirely — a dead rank is
+//! equivalent to masking every one of its links **and** excluding it from
+//! delivery: nobody owes it blocks, and it never relays. The circulant
+//! broadcast schedule assumes the full `{rank ± skipₖ}` edge set; when an
+//! edge it wants is masked, the scheduled transmission cannot happen and —
+//! because later rounds forward what earlier rounds delivered — the loss
+//! *cascades*: every block the starved rank would have relayed is now
+//! missing downstream too.
 //!
 //! [`DegradedBcastPlan`] repairs this deterministically and with **no
 //! communication**, in the same spirit as the healthy schedules: every
-//! rank, knowing only `(p, root, n, mask)`, runs the identical global
-//! possession simulation (the Theorem-1 dynamics of
+//! rank, knowing only `(p, root, n, mask, dead)`, runs the identical
+//! global possession simulation (the Theorem-1 dynamics of
 //! [`super::verify::check_broadcast_delivery`] with masked and
 //! starved transmissions suppressed) and derives
 //!
@@ -25,12 +28,30 @@
 //!    wave — a binomial-tree patch per missing block, rooted at the
 //!    relay(s) that survived.
 //!
-//! The plan is a pure function of `(p, root, n, mask)`: every rank
+//! ## The survivor-tree fallback
+//!
+//! When the mask is *heavy* — more than half of the circulant's
+//! `(rank, skip)` edges are severed or touch a dead rank — the base
+//! rounds are mostly dead air: almost every block must be re-delivered
+//! by repair waves anyway.
+//! In that regime the plan drops the circulant base schedule entirely and
+//! broadcasts over a **binomial tree on the survivors**: the same greedy
+//! one-ported wave construction, started from scratch (only the root
+//! holds blocks), restricted to unmasked survivor links. The fallback is
+//! taken exactly when it is strictly shorter than base-plus-repairs
+//! (`is_fallback` reports which regime a plan is in); light masks — any
+//! single severed edge, the few-edge masks of the release sweep — never
+//! flip, so their schedules are unchanged.
+//!
+//! The plan is a pure function of `(p, root, n, mask, dead)`: every rank
 //! computes byte-identical waves, so the degraded execution needs no
 //! coordination and delivery is byte-identical to the healthy path
-//! (pinned by `rust/tests/faults.rs`). If the mask actually disconnects a
-//! rank from every eventual holder, [`DegradedBcastPlan::new`] fails with
-//! a structured [`DegradedError`] instead of scheduling a hang.
+//! (pinned by `rust/tests/faults.rs`). [`DegradedError::Unroutable`] is
+//! raised **only** when the survivors are genuinely disconnected — an
+//! up-front breadth-first reachability check over the unmasked survivor
+//! graph, not an artifact of the greedy construction (on a connected
+//! survivor graph the greedy always progresses: some deficit is always
+//! adjacent to a holder).
 
 use super::recv::Scratch;
 use super::schedule::{BcastPlan, Schedule};
@@ -40,10 +61,24 @@ use super::skips::Skips;
 ///
 /// Stored normalized (`(min, max)`, sorted, deduplicated) so lookup is a
 /// binary search and two masks built from the same edges in any order
-/// compare equal.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+/// compare equal. Degenerate edges are dropped on insertion: a self-link
+/// `a == a` is never stored, and a mask built with [`LinkMask::for_mesh`]
+/// also drops edges naming ranks outside `0..p` — so [`LinkMask::len`]
+/// and [`LinkMask::edges`] are canonical counts of real, distinct links.
+#[derive(Debug, Clone, Default, Eq)]
 pub struct LinkMask {
     edges: Vec<(u64, u64)>,
+    /// Mesh size this mask is scoped to, when known: `sever` ignores
+    /// edges naming ranks `>= bound`.
+    bound: Option<u64>,
+}
+
+/// Two masks are equal iff they mask the same links; the optional mesh
+/// bound is construction metadata, not identity.
+impl PartialEq for LinkMask {
+    fn eq(&self, other: &LinkMask) -> bool {
+        self.edges == other.edges
+    }
 }
 
 impl LinkMask {
@@ -52,7 +87,18 @@ impl LinkMask {
         LinkMask::default()
     }
 
-    /// Build from undirected edges; order and orientation are irrelevant.
+    /// The empty mask scoped to a `p`-rank mesh: [`LinkMask::sever`] will
+    /// ignore edges naming ranks `>= p` (as well as self-links, which
+    /// every mask ignores).
+    pub fn for_mesh(p: u64) -> LinkMask {
+        LinkMask {
+            edges: Vec::new(),
+            bound: Some(p),
+        }
+    }
+
+    /// Build from undirected edges; order and orientation are irrelevant,
+    /// duplicates and self-links are dropped.
     pub fn from_edges(edges: impl IntoIterator<Item = (u64, u64)>) -> LinkMask {
         let mut mask = LinkMask::new();
         for (a, b) in edges {
@@ -61,9 +107,30 @@ impl LinkMask {
         mask
     }
 
-    /// Sever the undirected link `{a, b}`.
+    /// [`LinkMask::from_edges`] scoped to a `p`-rank mesh (out-of-range
+    /// edges are dropped too).
+    pub fn from_edges_for_mesh(p: u64, edges: impl IntoIterator<Item = (u64, u64)>) -> LinkMask {
+        let mut mask = LinkMask::for_mesh(p);
+        for (a, b) in edges {
+            mask.sever(a, b);
+        }
+        mask
+    }
+
+    /// Sever the undirected link `{a, b}`. Degenerate edges are ignored:
+    /// a self-link (`a == b`) is a no-op, as is — on a mask scoped with
+    /// [`LinkMask::for_mesh`] — an edge naming a rank outside the mesh.
+    /// Duplicate inserts are deduplicated, so `len()` counts distinct
+    /// links.
     pub fn sever(&mut self, a: u64, b: u64) {
-        assert_ne!(a, b, "cannot sever a self-link");
+        if a == b {
+            return;
+        }
+        if let Some(p) = self.bound {
+            if a >= p || b >= p {
+                return;
+            }
+        }
         let e = (a.min(b), a.max(b));
         if let Err(i) = self.edges.binary_search(&e) {
             self.edges.insert(i, e);
@@ -107,15 +174,24 @@ pub struct Repair {
 /// Why a degraded plan could not be built.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum DegradedError {
-    /// Some `(rank, block)` deficits cannot be repaired: every link from a
-    /// holder to the missing rank is masked (the mask disconnects it).
+    /// The mask/dead set genuinely disconnects some survivors from the
+    /// root: no sequence of repairs over unmasked survivor links can
+    /// reach them.
     Unroutable {
         /// Mesh size.
         p: u64,
         /// Broadcast root.
         root: u64,
-        /// The unrepairable `(rank, block)` pairs.
+        /// The unreachable `(rank, block)` pairs.
         stuck: Vec<(u64, usize)>,
+    },
+    /// The broadcast root itself is in the dead set — its payload is
+    /// unrecoverable, no schedule can help.
+    DeadRoot {
+        /// Mesh size.
+        p: u64,
+        /// The dead root.
+        root: u64,
     },
     /// A plan replay found an inconsistency (used by
     /// [`DegradedBcastPlan::verify`]; a correct construction never
@@ -139,6 +215,10 @@ impl std::fmt::Display for DegradedError {
                 stuck.len(),
                 &stuck[..stuck.len().min(4)]
             ),
+            DegradedError::DeadRoot { p, root } => write!(
+                f,
+                "degraded broadcast p={p}: root {root} is in the dead set — its payload is unrecoverable"
+            ),
             DegradedError::Inconsistent { p, root, what } => {
                 write!(f, "degraded broadcast p={p} root={root}: {what}")
             }
@@ -149,7 +229,8 @@ impl std::fmt::Display for DegradedError {
 impl std::error::Error for DegradedError {}
 
 /// The deterministic degraded broadcast plan: base-round cancellations
-/// plus repair waves. See the module docs for the construction.
+/// plus repair waves, or — under a heavy mask — a pure survivor-tree
+/// wave schedule. See the module docs for the construction.
 #[derive(Debug, Clone)]
 pub struct DegradedBcastPlan {
     /// Mesh size.
@@ -160,40 +241,171 @@ pub struct DegradedBcastPlan {
     pub n: usize,
     /// The masked links the plan routes around.
     pub mask: LinkMask,
-    /// Healthy-schedule rounds (`n - 1 + q`).
+    /// Healthy-schedule rounds (`n - 1 + q`); `0` when the survivor-tree
+    /// fallback replaced the base schedule entirely.
     pub base_rounds: usize,
+    /// Dead ranks (sorted, in-range, never the root): all their links are
+    /// treated as masked and they are excluded from delivery.
+    dead: Vec<u64>,
+    /// Whether the survivor-tree fallback replaced the circulant base
+    /// schedule (see the module docs for the rule).
+    fallback: bool,
     /// Cancelled base deliveries as sorted `(round, receiver_abs)` pairs:
     /// the scheduled transmission into `receiver_abs` at `round` does not
-    /// happen (its edge is masked, or its sender was starved upstream).
+    /// happen (its edge is masked, an endpoint is dead, or its sender was
+    /// starved upstream).
     cancelled: Vec<(usize, u64)>,
     /// Repair waves appended after the base rounds; within a wave every
     /// rank sends at most one block and receives at most one block.
     waves: Vec<Vec<Repair>>,
 }
 
+/// Whether the undirected link `{a, b}` is usable: both endpoints alive
+/// and the edge not severed.
+#[inline]
+fn link_ok(mask: &LinkMask, dead: &[bool], a: u64, b: u64) -> bool {
+    !dead[a as usize] && !dead[b as usize] && !mask.is_severed(a, b)
+}
+
+/// The greedy one-ported wave construction shared by the repair phase and
+/// the survivor-tree fallback: per wave, each still-missing `(rank,
+/// block)` takes the lowest-ranked holder that is not already sending
+/// this wave and whose link to it is usable; a rank receives at most once
+/// per wave. Receivers become holders for the next wave, so coverage
+/// doubles binomially. Returns the waves, or the stuck deficits if a wave
+/// ever makes no progress (which cannot happen on a connected survivor
+/// graph: some deficit of every missing block is always adjacent to a
+/// holder).
+fn greedy_waves(
+    p: u64,
+    mut deficits: Vec<(u64, usize)>,
+    holders: &mut [Vec<u64>],
+    usable: impl Fn(u64, u64) -> bool,
+) -> Result<Vec<Vec<Repair>>, Vec<(u64, usize)>> {
+    let mut waves: Vec<Vec<Repair>> = Vec::new();
+    let mut sending = vec![false; p as usize];
+    let mut receiving = vec![false; p as usize];
+    while !deficits.is_empty() {
+        sending.iter_mut().for_each(|s| *s = false);
+        receiving.iter_mut().for_each(|s| *s = false);
+        let mut wave: Vec<Repair> = Vec::new();
+        let mut remaining: Vec<(u64, usize)> = Vec::new();
+        for &(to, block) in &deficits {
+            if receiving[to as usize] {
+                remaining.push((to, block));
+                continue;
+            }
+            let from = holders[block]
+                .iter()
+                .copied()
+                .find(|&h| !sending[h as usize] && usable(h, to));
+            match from {
+                Some(from) => {
+                    sending[from as usize] = true;
+                    receiving[to as usize] = true;
+                    wave.push(Repair { from, to, block });
+                }
+                None => remaining.push((to, block)),
+            }
+        }
+        if wave.is_empty() {
+            return Err(remaining);
+        }
+        for r in &wave {
+            let h = &mut holders[r.block];
+            if let Err(i) = h.binary_search(&r.to) {
+                h.insert(i, r.to);
+            }
+        }
+        waves.push(wave);
+        deficits = remaining;
+    }
+    Ok(waves)
+}
+
 impl DegradedBcastPlan {
     /// Build the plan for broadcasting `n` blocks from `root` over `p`
-    /// ranks with `mask` severed. Pure function of its arguments — every
-    /// rank computes the identical plan. `O(p·(n + q) + D·p)` for `D`
-    /// total deficits, so intended for up to a few thousand ranks (the
-    /// scale the point-to-point backends run at).
+    /// ranks with `mask` severed and no dead ranks. Pure function of its
+    /// arguments — every rank computes the identical plan.
     pub fn new(p: u64, root: u64, n: usize, mask: LinkMask) -> Result<DegradedBcastPlan, DegradedError> {
+        DegradedBcastPlan::with_dead(p, root, n, mask, &[])
+    }
+
+    /// Build the plan for broadcasting `n` blocks from `root` over `p`
+    /// ranks with `mask` severed and the ranks in `dead` gone entirely
+    /// (every link of a dead rank is treated as masked and it is excluded
+    /// from delivery; out-of-range entries are ignored, the list is
+    /// normalized). Pure function of its arguments — every rank computes
+    /// the identical plan. `O(p·(n + q) + D·p)` for `D` total deficits,
+    /// so intended for up to a few thousand ranks (the scale the
+    /// point-to-point backends run at).
+    ///
+    /// Fails with [`DegradedError::DeadRoot`] when the root is dead, and
+    /// with [`DegradedError::Unroutable`] exactly when some survivor is
+    /// unreachable from the root over unmasked survivor links.
+    pub fn with_dead(
+        p: u64,
+        root: u64,
+        n: usize,
+        mask: LinkMask,
+        dead: &[u64],
+    ) -> Result<DegradedBcastPlan, DegradedError> {
         assert!(n >= 1, "need at least one block");
         assert!(root < p, "root {root} out of range (p = {p})");
+        let mut dead: Vec<u64> = dead.iter().copied().filter(|&r| r < p).collect();
+        dead.sort_unstable();
+        dead.dedup();
+        if dead.binary_search(&root).is_ok() {
+            return Err(DegradedError::DeadRoot { p, root });
+        }
+        let mut dead_flag = vec![false; p as usize];
+        for &d in &dead {
+            dead_flag[d as usize] = true;
+        }
         let skips = Skips::new(p);
         let q = skips.q();
         let abs = |rel: u64| (rel + root) % p;
-        let mut plan = DegradedBcastPlan {
-            p,
-            root,
-            n,
-            mask,
-            base_rounds: 0,
-            cancelled: Vec::new(),
-            waves: Vec::new(),
-        };
         if p == 1 || q == 0 {
-            return Ok(plan);
+            return Ok(DegradedBcastPlan {
+                p,
+                root,
+                n,
+                mask,
+                base_rounds: 0,
+                dead,
+                fallback: false,
+                cancelled: Vec::new(),
+                waves: Vec::new(),
+            });
+        }
+        // Survivor reachability from the root over the *unmasked* graph —
+        // repairs may use any link, so the graph is the complete survivor
+        // clique minus the mask. Unreachable survivors are unroutable no
+        // matter what any schedule does; everything after this check is
+        // guaranteed to complete.
+        {
+            let mut seen = vec![false; p as usize];
+            seen[root as usize] = true;
+            let mut frontier = vec![root];
+            while let Some(v) = frontier.pop() {
+                for u in 0..p {
+                    if !seen[u as usize] && link_ok(&mask, &dead_flag, v, u) {
+                        seen[u as usize] = true;
+                        frontier.push(u);
+                    }
+                }
+            }
+            let mut stuck: Vec<(u64, usize)> = Vec::new();
+            for r in 0..p {
+                if !seen[r as usize] && !dead_flag[r as usize] {
+                    for b in 0..n {
+                        stuck.push((r, b));
+                    }
+                }
+            }
+            if !stuck.is_empty() {
+                return Err(DegradedError::Unroutable { p, root, stuck });
+            }
         }
         // Per-relative-rank round plans (the healthy schedule, root-shifted
         // exactly as the executor shifts it).
@@ -204,14 +416,16 @@ impl DegradedBcastPlan {
                 BcastPlan::new(s, n)
             })
             .collect();
-        plan.base_rounds = plans[0].num_rounds();
+        let base_rounds = plans[0].num_rounds();
         // Global possession simulation with masked/starved sends
         // suppressed. `have[rel][blk]`; the root (relative 0) starts with
-        // everything.
+        // everything; dead ranks accumulate nothing (all their links are
+        // masked).
         let mut have = vec![vec![false; n]; p as usize];
         have[0] = vec![true; n];
+        let mut cancelled: Vec<(usize, u64)> = Vec::new();
         let mut recvs: Vec<(u64, usize)> = Vec::new();
-        for t in 0..plan.base_rounds {
+        for t in 0..base_rounds {
             recvs.clear();
             for rel in 0..p {
                 let a = plans[rel as usize].action(t);
@@ -225,8 +439,10 @@ impl DegradedBcastPlan {
                         Some(sb),
                         "schedule determinacy (condition 1)"
                     );
-                    if plan.mask.is_severed(abs(rel), abs(to_rel)) || !have[rel as usize][sb] {
-                        plan.cancelled.push((t, abs(to_rel)));
+                    if !link_ok(&mask, &dead_flag, abs(rel), abs(to_rel))
+                        || !have[rel as usize][sb]
+                    {
+                        cancelled.push((t, abs(to_rel)));
                     } else {
                         recvs.push((to_rel, sb));
                     }
@@ -236,10 +452,14 @@ impl DegradedBcastPlan {
                 have[to as usize][blk] = true;
             }
         }
-        plan.cancelled.sort_unstable();
+        cancelled.sort_unstable();
         // Deficits in absolute terms, sorted for deterministic matching.
+        // Dead ranks are owed nothing.
         let mut deficits: Vec<(u64, usize)> = Vec::new();
         for rel in 0..p {
+            if dead_flag[abs(rel) as usize] {
+                continue;
+            }
             for b in 0..n {
                 if !have[rel as usize][b] {
                     deficits.push((abs(rel), b));
@@ -247,7 +467,8 @@ impl DegradedBcastPlan {
             }
         }
         deficits.sort_unstable();
-        // Per-block sorted holder lists (absolute ranks).
+        // Per-block sorted holder lists (absolute ranks; dead ranks never
+        // hold anything — their links are masked, so nothing reached them).
         let mut holders: Vec<Vec<u64>> = vec![Vec::new(); n];
         for rel in 0..p {
             for (b, h) in holders.iter_mut().enumerate() {
@@ -259,53 +480,76 @@ impl DegradedBcastPlan {
         for h in &mut holders {
             h.sort_unstable();
         }
-        // Greedy one-ported repair waves: per wave, each still-missing
-        // (rank, block) takes the lowest-ranked holder that is not already
-        // sending this wave and whose link to it is unmasked; a rank
-        // receives at most once per wave. Receivers become holders for the
-        // next wave, so coverage doubles binomially.
-        let mut sending = vec![false; p as usize];
-        let mut receiving = vec![false; p as usize];
-        while !deficits.is_empty() {
-            sending.iter_mut().for_each(|s| *s = false);
-            receiving.iter_mut().for_each(|s| *s = false);
-            let mut wave: Vec<Repair> = Vec::new();
-            let mut remaining: Vec<(u64, usize)> = Vec::new();
-            for &(to, block) in &deficits {
-                if receiving[to as usize] {
-                    remaining.push((to, block));
+        let usable = |a: u64, b: u64| link_ok(&mask, &dead_flag, a, b);
+        let mut circ_holders = holders.clone();
+        let circ = greedy_waves(p, deficits, &mut circ_holders, usable);
+        // Survivor-tree fallback candidate: the same greedy construction
+        // from scratch (only the root holds blocks, every other survivor
+        // misses everything), i.e. a pipelined binomial-tree broadcast
+        // over the unmasked survivor graph with no circulant base rounds.
+        let tree = || -> Result<Vec<Vec<Repair>>, Vec<(u64, usize)>> {
+            let mut tree_holders: Vec<Vec<u64>> = vec![vec![root]; n];
+            let mut tree_deficits: Vec<(u64, usize)> = Vec::new();
+            for r in 0..p {
+                if r == root || dead_flag[r as usize] {
                     continue;
                 }
-                let from = holders[block]
-                    .iter()
-                    .copied()
-                    .find(|&h| !sending[h as usize] && !plan.mask.is_severed(h, to));
-                match from {
-                    Some(from) => {
-                        sending[from as usize] = true;
-                        receiving[to as usize] = true;
-                        wave.push(Repair { from, to, block });
-                    }
-                    None => remaining.push((to, block)),
+                for b in 0..n {
+                    tree_deficits.push((r, b));
                 }
             }
-            if wave.is_empty() {
-                return Err(DegradedError::Unroutable {
-                    p,
-                    root,
-                    stuck: remaining,
-                });
-            }
-            for r in &wave {
-                let h = &mut holders[r.block];
-                if let Err(i) = h.binary_search(&r.to) {
-                    h.insert(i, r.to);
+            tree_deficits.sort_unstable();
+            greedy_waves(p, tree_deficits, &mut tree_holders, usable)
+        };
+        // Structural damage to the circulant: how many of its scheduled
+        // `(rank, skip)` edges are unusable. Purely topological (no
+        // dependence on n or the cascade), so light masks — any single
+        // severed edge, a handful of random edges, one dead rank at
+        // realistic p — never register as heavy.
+        let mut damaged = 0usize;
+        for a in 0..p {
+            for k in 0..q {
+                if !link_ok(&mask, &dead_flag, a, skips.to_proc(a, k)) {
+                    damaged += 1;
                 }
             }
-            plan.waves.push(wave);
-            deficits = remaining;
         }
-        Ok(plan)
+        let heavy = 2 * damaged > (p as usize) * q;
+        let (base_rounds, cancelled, waves, fallback) = match circ {
+            Ok(circ_waves) => {
+                // Heavy-mask rule: when most of the circulant is down,
+                // the base rounds are mostly dead air — switch to the
+                // survivor tree if it is strictly shorter.
+                let tree_waves = if heavy { tree().ok() } else { None };
+                match tree_waves {
+                    Some(tw) if tw.len() < base_rounds + circ_waves.len() => {
+                        (0, Vec::new(), tw, true)
+                    }
+                    _ => (base_rounds, cancelled, circ_waves, false),
+                }
+            }
+            Err(_) => {
+                // Defensive: the connectivity precheck passed, so the
+                // survivor tree must route (some deficit of every block is
+                // always adjacent to a holder on a connected graph). Fall
+                // back to it unconditionally.
+                match tree() {
+                    Ok(tw) => (0, Vec::new(), tw, true),
+                    Err(stuck) => return Err(DegradedError::Unroutable { p, root, stuck }),
+                }
+            }
+        };
+        Ok(DegradedBcastPlan {
+            p,
+            root,
+            n,
+            mask,
+            base_rounds,
+            dead,
+            fallback,
+            cancelled,
+            waves,
+        })
     }
 
     /// Whether the scheduled base-round delivery into `receiver` (absolute
@@ -328,6 +572,23 @@ impl DegradedBcastPlan {
         &self.waves
     }
 
+    /// The dead ranks this plan excludes (sorted).
+    pub fn dead(&self) -> &[u64] {
+        &self.dead
+    }
+
+    /// Whether `rank` is in the dead set.
+    pub fn is_dead(&self, rank: u64) -> bool {
+        self.dead.binary_search(&rank).is_ok()
+    }
+
+    /// Whether the survivor-tree fallback replaced the circulant base
+    /// schedule (then [`DegradedBcastPlan::base_rounds`] is `0` and the
+    /// waves carry the whole broadcast).
+    pub fn is_fallback(&self) -> bool {
+        self.fallback
+    }
+
     /// Total rounds the degraded execution takes: base plus one per wave.
     pub fn num_rounds(&self) -> usize {
         self.base_rounds + self.waves.len()
@@ -335,11 +596,11 @@ impl DegradedBcastPlan {
 
     /// Independently replay the plan and validate it end to end: base
     /// rounds must cancel exactly the masked/starved deliveries, every
-    /// repair must come from a rank that holds the block over an unmasked
-    /// link with one-ported wave discipline, and afterwards every rank
-    /// must hold all `n` blocks. `O(p·(n + q) + Σ|wave|)` with `O(p·n)`
-    /// memory — the sweep in `rust/tests/faults.rs` runs it for every
-    /// masked circulant edge.
+    /// repair must come from a live rank that holds the block over an
+    /// unmasked link to a live rank with one-ported wave discipline, and
+    /// afterwards every *surviving* rank must hold all `n` blocks.
+    /// `O(p·(n + q) + Σ|wave|)` with `O(p·n)` memory — the sweep in
+    /// `rust/tests/faults.rs` runs it for every masked scenario.
     pub fn verify(&self) -> Result<(), DegradedError> {
         let (p, n, root) = (self.p, self.n, self.root);
         let err = |what: String| DegradedError::Inconsistent { p, root, what };
@@ -348,43 +609,56 @@ impl DegradedBcastPlan {
         }
         let skips = Skips::new(p);
         let abs = |rel: u64| (rel + root) % p;
-        let mut scratch = Scratch::new();
+        let mut dead_flag = vec![false; p as usize];
+        for &d in &self.dead {
+            dead_flag[d as usize] = true;
+        }
         let mut recvs: Vec<(u64, usize)> = Vec::new();
         let mut cancelled_seen = 0usize;
-        let plans: Vec<BcastPlan> = (0..p)
-            .map(|rel| {
-                let (s, _, _) = Schedule::compute_with(&skips, rel, &mut scratch);
-                BcastPlan::new(s, n)
-            })
-            .collect();
         let mut have = vec![vec![false; n]; p as usize];
         have[0] = vec![true; n];
-        for t in 0..self.base_rounds {
-            recvs.clear();
-            for rel in 0..p {
-                let a = plans[rel as usize].action(t);
-                let to_rel = skips.to_proc(rel, a.k);
-                if to_rel == 0 {
-                    continue;
-                }
-                if let Some(sb) = a.send_block {
-                    let fails =
-                        self.mask.is_severed(abs(rel), abs(to_rel)) || !have[rel as usize][sb];
-                    if fails != self.is_cancelled(t, abs(to_rel)) {
-                        return Err(err(format!(
-                            "round {t}: cancellation of delivery into {} disagrees with replay",
-                            abs(to_rel)
-                        )));
-                    }
-                    if fails {
-                        cancelled_seen += 1;
-                    } else {
-                        recvs.push((to_rel, sb));
-                    }
-                }
+        if self.base_rounds > 0 {
+            let mut scratch = Scratch::new();
+            let plans: Vec<BcastPlan> = (0..p)
+                .map(|rel| {
+                    let (s, _, _) = Schedule::compute_with(&skips, rel, &mut scratch);
+                    BcastPlan::new(s, n)
+                })
+                .collect();
+            if self.base_rounds != plans[0].num_rounds() {
+                return Err(err(format!(
+                    "{} base rounds recorded, healthy schedule has {}",
+                    self.base_rounds,
+                    plans[0].num_rounds()
+                )));
             }
-            for &(to, blk) in &recvs {
-                have[to as usize][blk] = true;
+            for t in 0..self.base_rounds {
+                recvs.clear();
+                for rel in 0..p {
+                    let a = plans[rel as usize].action(t);
+                    let to_rel = skips.to_proc(rel, a.k);
+                    if to_rel == 0 {
+                        continue;
+                    }
+                    if let Some(sb) = a.send_block {
+                        let fails = !link_ok(&self.mask, &dead_flag, abs(rel), abs(to_rel))
+                            || !have[rel as usize][sb];
+                        if fails != self.is_cancelled(t, abs(to_rel)) {
+                            return Err(err(format!(
+                                "round {t}: cancellation of delivery into {} disagrees with replay",
+                                abs(to_rel)
+                            )));
+                        }
+                        if fails {
+                            cancelled_seen += 1;
+                        } else {
+                            recvs.push((to_rel, sb));
+                        }
+                    }
+                }
+                for &(to, blk) in &recvs {
+                    have[to as usize][blk] = true;
+                }
             }
         }
         if cancelled_seen != self.cancelled.len() {
@@ -401,6 +675,12 @@ impl DegradedBcastPlan {
             for r in wave {
                 let from_rel = (r.from + p - root) % p;
                 let to_rel = (r.to + p - root) % p;
+                if dead_flag[r.from as usize] || dead_flag[r.to as usize] {
+                    return Err(err(format!(
+                        "wave {w}: repair {} -> {} touches a dead rank",
+                        r.from, r.to
+                    )));
+                }
                 if !have[from_rel as usize][r.block] {
                     return Err(err(format!(
                         "wave {w}: {} sends block {} before holding it",
@@ -434,6 +714,9 @@ impl DegradedBcastPlan {
             }
         }
         for rel in 0..p {
+            if dead_flag[abs(rel) as usize] {
+                continue; // dead ranks are owed nothing
+            }
             if let Some(b) = have[rel as usize].iter().position(|&h| !h) {
                 return Err(err(format!(
                     "rank {} still missing block {b} after {} waves",
@@ -457,6 +740,7 @@ mod tests {
                 let plan = DegradedBcastPlan::new(p, 0, n, LinkMask::new()).unwrap();
                 assert_eq!(plan.cancelled_count(), 0, "p={p} n={n}");
                 assert!(plan.waves().is_empty(), "p={p} n={n}");
+                assert!(!plan.is_fallback(), "p={p} n={n}");
                 plan.verify().unwrap_or_else(|e| panic!("p={p} n={n}: {e}"));
             }
         }
@@ -479,6 +763,10 @@ mod tests {
                             plan.verify().unwrap_or_else(|e| {
                                 panic!("p={p} root={root} sever {a}-{b} n={n}: {e}")
                             });
+                            assert!(
+                                !plan.is_fallback(),
+                                "p={p} root={root} sever {a}-{b} n={n}: light mask must not fall back"
+                            );
                             assert!(
                                 plan.cancelled_count() > 0 || plan.waves().is_empty(),
                                 "p={p} root={root} sever {a}-{b} n={n}: waves without cancellations"
@@ -522,5 +810,109 @@ mod tests {
         assert!(m.is_severed(2, 5) && m.is_severed(5, 2));
         assert!(!m.is_severed(2, 4));
         assert_eq!(LinkMask::from_edges([(5, 2)]), m);
+    }
+
+    #[test]
+    fn mask_ignores_degenerate_edges() {
+        // Self-links are dropped on every mask.
+        let mut m = LinkMask::new();
+        m.sever(3, 3);
+        assert!(m.is_empty());
+        // Out-of-range edges are dropped on mesh-scoped masks.
+        let mut bounded = LinkMask::for_mesh(8);
+        bounded.sever(1, 9);
+        bounded.sever(12, 3);
+        bounded.sever(4, 4);
+        bounded.sever(1, 2);
+        bounded.sever(2, 1); // duplicate, other orientation
+        assert_eq!(bounded.len(), 1);
+        assert_eq!(bounded.edges(), &[(1, 2)]);
+        // Equality compares the edge set, not the bound.
+        assert_eq!(bounded, LinkMask::from_edges([(2, 1)]));
+        assert_eq!(
+            LinkMask::from_edges_for_mesh(8, [(1, 9), (2, 1), (4, 4)]),
+            LinkMask::from_edges([(1, 2)])
+        );
+    }
+
+    #[test]
+    fn dead_rank_is_excluded_and_survivors_complete() {
+        for p in [4u64, 7, 16] {
+            for &d in &[1u64, p - 1] {
+                let plan = DegradedBcastPlan::with_dead(p, 0, 3, LinkMask::new(), &[d])
+                    .unwrap_or_else(|e| panic!("p={p} dead={d}: {e}"));
+                assert_eq!(plan.dead(), &[d], "p={p}");
+                assert!(plan.is_dead(d) && !plan.is_dead(0));
+                plan.verify().unwrap_or_else(|e| panic!("p={p} dead={d}: {e}"));
+                for wave in plan.waves() {
+                    assert!(
+                        wave.iter().all(|r| r.from != d && r.to != d),
+                        "p={p} dead={d}: repair touches the dead rank"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dead_set_normalizes_and_dead_root_errors() {
+        // Out-of-range and duplicate entries are dropped.
+        let plan = DegradedBcastPlan::with_dead(7, 0, 2, LinkMask::new(), &[99, 3, 3, 42]).unwrap();
+        assert_eq!(plan.dead(), &[3]);
+        plan.verify().unwrap();
+        // A dead root is a structured error, not a hang.
+        let err = DegradedBcastPlan::with_dead(7, 2, 2, LinkMask::new(), &[2]).unwrap_err();
+        assert!(matches!(err, DegradedError::DeadRoot { root: 2, .. }), "{err}");
+    }
+
+    #[test]
+    fn multi_edge_and_multi_dead_plans_route_and_verify() {
+        let p = 16u64;
+        let mask = LinkMask::from_edges([(1, 2), (3, 7), (0, 4), (9, 13)]);
+        let plan = DegradedBcastPlan::with_dead(p, 0, 4, mask, &[5, 11]).unwrap();
+        plan.verify().unwrap();
+        // Every survivor is covered, no dead rank appears anywhere.
+        for wave in plan.waves() {
+            for r in wave {
+                assert!(r.from != 5 && r.from != 11 && r.to != 5 && r.to != 11);
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_mask_falls_back_to_survivor_tree() {
+        // Sever every circulant edge of p = 8: the base schedule delivers
+        // nothing, so the plan must drop it and broadcast over the
+        // remaining (non-circulant) links as a pure wave schedule.
+        let p = 8u64;
+        let skips = Skips::new(p);
+        let mut mask = LinkMask::for_mesh(p);
+        for a in 0..p {
+            for k in 0..skips.q() {
+                mask.sever(a, skips.to_proc(a, k));
+            }
+        }
+        let plan = DegradedBcastPlan::new(p, 0, 3, mask).unwrap();
+        assert!(plan.is_fallback(), "fully-masked circulant must fall back");
+        assert_eq!(plan.base_rounds, 0);
+        assert_eq!(plan.cancelled_count(), 0);
+        assert!(!plan.waves().is_empty());
+        assert_eq!(plan.num_rounds(), plan.waves().len());
+        plan.verify().unwrap();
+    }
+
+    #[test]
+    fn disconnected_survivors_are_unroutable_with_dead() {
+        // Rank 3 is alive but every link to the other survivors is
+        // severed; rank 2 being dead does not excuse it.
+        let p = 4u64;
+        let mask = LinkMask::from_edges([(0, 3), (1, 3)]);
+        let err = DegradedBcastPlan::with_dead(p, 0, 2, mask, &[2]).unwrap_err();
+        match err {
+            DegradedError::Unroutable { stuck, .. } => {
+                assert!(stuck.iter().all(|&(r, _)| r == 3), "{stuck:?}");
+            }
+            other => panic!("want Unroutable, got {other}"),
+        }
     }
 }

@@ -50,7 +50,7 @@ fn write_all(s: &mut TcpStream, bytes: &[u8]) -> Result<(), TransportError> {
 fn read_endpoint(s: &mut TcpStream) -> Result<String, TransportError> {
     let len = read_u64(s)?;
     if len > MAX_ENDPOINT_BYTES {
-        return Err(TransportError::Protocol(format!(
+        return Err(TransportError::protocol(format!(
             "rendezvous endpoint of {len} bytes — corrupt handshake"
         )));
     }
@@ -58,7 +58,7 @@ fn read_endpoint(s: &mut TcpStream) -> Result<String, TransportError> {
     s.read_exact(&mut bytes)
         .map_err(|e| TransportError::io(format!("rendezvous read: {e}")))?;
     String::from_utf8(bytes)
-        .map_err(|_| TransportError::Protocol("rendezvous endpoint is not UTF-8".into()))
+        .map_err(|_| TransportError::protocol("rendezvous endpoint is not UTF-8".into()))
 }
 
 /// Root side of the socket rendezvous: accept registrations on `listener`
@@ -72,7 +72,7 @@ pub fn serve_rendezvous(
     timeout: Duration,
 ) -> Result<Vec<String>, TransportError> {
     if p == 0 {
-        return Err(TransportError::Protocol("need at least one rank".into()));
+        return Err(TransportError::protocol("need at least one rank".into()));
     }
     let deadline = Instant::now() + timeout;
     listener
@@ -92,20 +92,20 @@ pub fn serve_rendezvous(
                     .map_err(|e| TransportError::io(format!("rendezvous accept: {e}")))?;
                 let magic = read_u64(&mut s)?;
                 if magic != BOOT_MAGIC {
-                    return Err(TransportError::Protocol(format!(
+                    return Err(TransportError::protocol(format!(
                         "rendezvous: bad magic {magic:#x}"
                     )));
                 }
                 let rank = read_u64(&mut s)?;
                 if rank >= p {
-                    return Err(TransportError::Protocol(format!(
+                    return Err(TransportError::protocol(format!(
                         "rendezvous: rank {rank} out of range (p = {p})"
                     )));
                 }
                 let ep = read_endpoint(&mut s)?;
                 let slot = &mut endpoints[rank as usize];
                 if slot.is_some() {
-                    return Err(TransportError::Protocol(format!(
+                    return Err(TransportError::protocol(format!(
                         "rendezvous: rank {rank} registered twice"
                     )));
                 }
@@ -181,13 +181,13 @@ pub fn join_rendezvous(
     write_all(&mut s, &reg)?;
     let magic = read_u64(&mut s)?;
     if magic != BOOT_MAGIC {
-        return Err(TransportError::Protocol(format!(
+        return Err(TransportError::protocol(format!(
             "rank {rank}: rendezvous reply has bad magic {magic:#x}"
         )));
     }
     let p = read_u64(&mut s)?;
     if rank >= p {
-        return Err(TransportError::Protocol(format!(
+        return Err(TransportError::protocol(format!(
             "rank {rank}: rendezvous reply says p = {p}"
         )));
     }
@@ -206,7 +206,7 @@ pub fn publish_file(path: &Path, endpoints: &[String]) -> Result<(), TransportEr
     let mut body = format!("{}\n", endpoints.len());
     for ep in endpoints {
         if ep.contains('\n') {
-            return Err(TransportError::Protocol(format!(
+            return Err(TransportError::protocol(format!(
                 "endpoint {ep:?} contains a newline — not representable in a rendezvous file"
             )));
         }
@@ -235,14 +235,14 @@ pub fn wait_file(path: &Path, p: u64, timeout: Duration) -> Result<Vec<String>, 
                 if map.len() == p as usize {
                     return Ok(map);
                 }
-                return Err(TransportError::Protocol(format!(
+                return Err(TransportError::protocol(format!(
                     "rendezvous file {}: header says {p} ranks, found {}",
                     path.display(),
                     map.len()
                 )));
             }
             if let Some(c) = count {
-                return Err(TransportError::Protocol(format!(
+                return Err(TransportError::protocol(format!(
                     "rendezvous file {}: expected {p} ranks, header says {c}",
                     path.display()
                 )));
@@ -298,7 +298,7 @@ mod tests {
             }
             let err = serve_rendezvous(&listener, 2, Duration::from_secs(5)).unwrap_err();
             assert!(
-                matches!(err, TransportError::Protocol(ref m) if m.contains("twice")),
+                matches!(err, TransportError::Protocol { ref msg, .. } if msg.contains("twice")),
                 "{err}"
             );
         });
@@ -324,7 +324,7 @@ mod tests {
         let got = wait_file(&path, 4, Duration::from_secs(5)).unwrap();
         assert_eq!(got, eps);
         let err = wait_file(&path, 5, Duration::from_secs(5)).unwrap_err();
-        assert!(matches!(err, TransportError::Protocol(_)), "{err}");
+        assert!(matches!(err, TransportError::Protocol { .. }), "{err}");
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -179,7 +179,7 @@ impl Transport for CostTransport {
             (None, None) => Ok(None),
             (Some(msg), Some(from)) => {
                 if msg.from != from {
-                    return Err(TransportError::Protocol(format!(
+                    return Err(TransportError::protocol(format!(
                         "rank {}: scheduled receive from {from}, message came from {}",
                         self.rank, msg.from
                     )));
@@ -190,7 +190,7 @@ impl Transport for CostTransport {
                 }
                 Ok(Some(msg.tag))
             }
-            (Some(msg), None) => Err(TransportError::Protocol(format!(
+            (Some(msg), None) => Err(TransportError::protocol(format!(
                 "rank {}: unscheduled message from {} (block {})",
                 self.rank, msg.from, msg.tag
             ))),

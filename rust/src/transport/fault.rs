@@ -311,6 +311,16 @@ impl FaultPlan {
             matches!(*a, FaultAction::CorruptFrame { rank: r, round: t } if r == rank && t == round)
         })
     }
+
+    /// Whether any action is keyed to a transport-round number (kill,
+    /// delay, corrupt — everything except `sever`, which is stateless).
+    /// Round-keyed plans pin faults to specific op counts, so extra
+    /// warm-up traffic would shift every subsequent fault.
+    pub fn has_round_keyed(&self) -> bool {
+        self.actions.iter().any(|a| {
+            !matches!(*a, FaultAction::SeverLink { .. })
+        })
+    }
 }
 
 impl std::fmt::Display for FaultPlan {
@@ -338,6 +348,7 @@ pub struct FaultTransport<T> {
     recv_deadline: Duration,
     ops: u64,
     dead: bool,
+    measured: Option<CostHint>,
 }
 
 impl<T: Transport> FaultTransport<T> {
@@ -349,6 +360,7 @@ impl<T: Transport> FaultTransport<T> {
             recv_deadline,
             ops: 0,
             dead: false,
+            measured: None,
         }
     }
 
@@ -447,7 +459,21 @@ impl<T: Transport> Transport for FaultTransport<T> {
     }
 
     fn warm_up(&mut self) -> Result<(), TransportError> {
-        self.inner.warm_up()
+        // Probing through `self` (not `inner`) means the α/β exchange sees
+        // the same injected faults the collective will — a severed probe
+        // link degrades to the static hint instead of reporting a latency
+        // the broken mesh can't deliver. But probe traffic advances the op
+        // counter, so under a round-keyed plan (kill/delay/corrupt pinned
+        // to specific rounds) we skip it entirely: shifting every fault to
+        // a different round would break replayability.
+        if self.plan.has_round_keyed() {
+            return Ok(());
+        }
+        match super::measure_link_hint(self) {
+            Ok(h) => self.measured = h,
+            Err(e) => super::warn_warm_up(self.rank(), "α/β probe", &e),
+        }
+        Ok(())
     }
 
     fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
@@ -455,7 +481,7 @@ impl<T: Transport> Transport for FaultTransport<T> {
     }
 
     fn cost_hint(&self) -> CostHint {
-        self.inner.cost_hint()
+        self.measured.unwrap_or_else(|| self.inner.cost_hint())
     }
 
     fn barrier(&mut self) -> Result<(), TransportError> {
@@ -574,6 +600,42 @@ mod tests {
             Ok(())
         });
         outcomes.unwrap();
+    }
+
+    #[test]
+    fn warm_up_survives_a_severed_probe_link() {
+        // The α/β warm-up probe rides the ring, and sever=0-1 cuts it.
+        // warm_up must degrade to the static hint and report Ok on every
+        // rank — a broken probe is a lost optimisation, not a lost job.
+        let plan = Arc::new(FaultPlan::new().sever(0, 1));
+        run_threads(2, Duration::from_millis(100), move |t| {
+            let static_hint = t.cost_hint();
+            let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_millis(50));
+            ft.warm_up()?;
+            assert_eq!(
+                ft.cost_hint(),
+                static_hint,
+                "failed probe must leave the static hint in place"
+            );
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn round_keyed_plans_skip_the_warm_up_probe() {
+        // kill=1@2 pins a fault to transport round 2; probe traffic would
+        // advance the op counter past it before the collective starts.
+        let plan = Arc::new(FaultPlan::new().kill(1, 2));
+        assert!(plan.has_round_keyed());
+        assert!(!FaultPlan::new().sever(0, 1).has_round_keyed());
+        run_threads(2, Duration::from_millis(200), move |t| {
+            let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_millis(200));
+            ft.warm_up()?;
+            assert_eq!(ft.ops, 0, "warm_up must not consume transport rounds");
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

@@ -40,14 +40,14 @@ impl HierTransport {
     /// range must fit inside the global size.
     pub fn new(shm: ShmTransport, tcp: TcpTransport) -> Result<HierTransport, TransportError> {
         let node_base = tcp.rank().checked_sub(shm.rank()).ok_or_else(|| {
-            TransportError::Protocol(format!(
+            TransportError::protocol(format!(
                 "local rank {} exceeds global rank {} — node ranges must be contiguous",
                 shm.rank(),
                 tcp.rank()
             ))
         })?;
         if node_base + shm.size() > tcp.size() {
-            return Err(TransportError::Protocol(format!(
+            return Err(TransportError::protocol(format!(
                 "node range [{node_base}, {}) exceeds global size {}",
                 node_base + shm.size(),
                 tcp.size()
@@ -158,6 +158,9 @@ impl Transport for HierTransport {
         // cross-host circulant links. Peer locality is symmetric and the
         // circulant to/from sets are mutual, so every rank's warm list
         // names exactly the links its peers also warm.
+        // Both halves downgrade their own failures to warnings; a faulted
+        // probe or failed pre-dial must not kill a run that can complete
+        // over lazy links with the static hint.
         self.shm.warm_up()?;
         if self.size() > 1 {
             let skips = crate::sched::Skips::new(self.size());
@@ -172,7 +175,9 @@ impl Transport for HierTransport {
                     }
                 }
             }
-            self.tcp.warm_peers(&remote)?;
+            if let Err(e) = self.tcp.warm_peers(&remote) {
+                super::warn_warm_up(self.rank(), "cross-host pre-dial", &e);
+            }
         }
         Ok(())
     }
@@ -393,7 +398,7 @@ mod tests {
         );
         let shm = ShmTransport::from_segment(seg, 1, Duration::from_secs(1)).unwrap();
         let err = HierTransport::new(shm, mk_tcp()).unwrap_err();
-        assert!(matches!(err, TransportError::Protocol(_)), "{err}");
+        assert!(matches!(err, TransportError::Protocol { .. }), "{err}");
 
         // A 2-rank node cannot fit inside a 1-rank global mesh.
         let seg = Arc::new(
@@ -401,6 +406,6 @@ mod tests {
         );
         let shm = ShmTransport::from_segment(seg, 0, Duration::from_secs(1)).unwrap();
         let err = HierTransport::new(shm, mk_tcp()).unwrap_err();
-        assert!(matches!(err, TransportError::Protocol(_)), "{err}");
+        assert!(matches!(err, TransportError::Protocol { .. }), "{err}");
     }
 }

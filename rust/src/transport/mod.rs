@@ -72,6 +72,7 @@ pub mod cost;
 pub mod fault;
 #[cfg(unix)]
 pub mod hier;
+pub mod recover;
 #[cfg(unix)]
 pub mod shm;
 pub mod sim;
@@ -372,7 +373,12 @@ pub enum TransportError {
     },
     /// A peer spoke the wrong protocol (bad magic, wrong sender, a message
     /// where none was scheduled, ...).
-    Protocol(String),
+    Protocol {
+        /// Human-readable description.
+        msg: String,
+        /// Peer/round/epoch context (empty when unknown).
+        ctx: FaultCtx,
+    },
     /// Timed out waiting for a peer.
     Timeout {
         /// Human-readable description.
@@ -411,6 +417,22 @@ impl TransportError {
         }
     }
 
+    /// A [`TransportError::Protocol`] with no context.
+    pub fn protocol(msg: impl Into<String>) -> TransportError {
+        TransportError::Protocol {
+            msg: msg.into(),
+            ctx: FaultCtx::default(),
+        }
+    }
+
+    /// A [`TransportError::Protocol`] with peer/round/epoch context.
+    pub fn protocol_at(msg: impl Into<String>, ctx: FaultCtx) -> TransportError {
+        TransportError::Protocol {
+            msg: msg.into(),
+            ctx,
+        }
+    }
+
     /// A [`TransportError::Timeout`] with no context.
     pub fn timeout(msg: impl Into<String>) -> TransportError {
         TransportError::Timeout {
@@ -440,6 +462,7 @@ impl TransportError {
         match self {
             TransportError::Io { ctx, .. }
             | TransportError::Timeout { ctx, .. }
+            | TransportError::Protocol { ctx, .. }
             | TransportError::Fault { ctx, .. } => Some(*ctx),
             _ => None,
         }
@@ -461,7 +484,10 @@ impl fmt::Display for TransportError {
                 write!(f, "io: {msg}")?;
                 write_ctx(f, ctx)
             }
-            TransportError::Protocol(msg) => write!(f, "protocol: {msg}"),
+            TransportError::Protocol { msg, ctx } => {
+                write!(f, "protocol: {msg}")?;
+                write_ctx(f, ctx)
+            }
             TransportError::Timeout { msg, ctx } => {
                 write!(f, "timeout: {msg}")?;
                 write_ctx(f, ctx)
@@ -747,7 +773,7 @@ pub fn dissemination_barrier<T: Transport + ?Sized>(t: &mut T) -> Result<(), Tra
         match got {
             Some(BARRIER_TAG) if token.is_empty() => {}
             Some(tag) => {
-                return Err(TransportError::Protocol(format!(
+                return Err(TransportError::protocol(format!(
                     "rank {rank}: expected barrier token from {from}, got block {tag}"
                 )))
             }
@@ -764,7 +790,7 @@ pub fn idle_round<T: Transport + ?Sized>(t: &mut T) -> Result<(), TransportError
     let mut scratch = Vec::new();
     match t.sendrecv_into(None, None, &mut scratch)? {
         None => Ok(()),
-        Some(tag) => Err(TransportError::Protocol(format!(
+        Some(tag) => Err(TransportError::protocol(format!(
             "rank {}: received block {tag} in an idle round",
             t.rank()
         ))),
@@ -774,6 +800,25 @@ pub fn idle_round<T: Transport + ?Sized>(t: &mut T) -> Result<(), TransportError
 /// Reserved tag for warm-up probe rounds (`u64::MAX` is the barrier
 /// token; collective tags are block indices, far below both).
 pub(crate) const PROBE_TAG: u64 = u64::MAX - 1;
+
+/// Reserved tag for the membership-agreement gossip frames of
+/// [`recover::agree_failures`] (below the barrier token and the warm-up
+/// probe; collective tags are block indices, far below all three).
+pub(crate) const GOSSIP_TAG: u64 = u64::MAX - 2;
+
+/// Downgrade a warm-up failure to a logged warning. Warm-up is an
+/// optimization — pre-established links and a measured α/β fit — so a
+/// timed-out or faulted probe must not kill a run that can still complete
+/// over lazily-established links with the static cost hint. Every
+/// backend's `warm_up` routes its internal failures through here instead
+/// of propagating them (pinned by the sever-plan warm-up test in
+/// `rust/tests/faults.rs`).
+pub(crate) fn warn_warm_up(rank: u64, what: &str, e: &TransportError) {
+    eprintln!(
+        "[warn] rank {rank}: warm-up {what} failed ({e}); \
+         continuing with lazy links and the static cost hint"
+    );
+}
 
 /// One symmetric probe round: send `bytes` to the next ring neighbor,
 /// receive the same-sized block from the previous one.
@@ -793,7 +838,7 @@ fn probe_round<T: Transport + ?Sized>(
         buf,
     )?;
     if got != Some(PROBE_TAG) || buf.len() != bytes.len() {
-        return Err(TransportError::Protocol(format!(
+        return Err(TransportError::protocol(format!(
             "rank {rank}: warm-up probe expected a {}-byte PROBE block, got tag {got:?} ({} bytes)",
             bytes.len(),
             buf.len()
@@ -862,7 +907,7 @@ pub(crate) fn measure_link_hint<T: Transport + ?Sized>(
             &mut buf,
         )?;
         if got != Some(PROBE_TAG) || buf.len() != 16 {
-            return Err(TransportError::Protocol(format!(
+            return Err(TransportError::protocol(format!(
                 "rank {rank}: probe consensus expected a 16-byte PROBE block, got tag {got:?} ({} bytes)",
                 buf.len()
             )));
@@ -982,7 +1027,7 @@ impl<T: Transport + ?Sized> Transport for GroupTransport<'_, T> {
     fn barrier(&mut self) -> Result<(), TransportError> {
         // A group barrier would have to involve non-members on the lockstep
         // backend; the collectives never need one.
-        Err(TransportError::Protocol(
+        Err(TransportError::protocol(
             "barrier is not supported on a GroupTransport".into(),
         ))
     }

@@ -1,0 +1,860 @@
+//! In-flight recovery: agreed membership and automatic re-execution for
+//! the point-to-point backends.
+//!
+//! The degraded planner ([`crate::sched::DegradedBcastPlan`]) answers
+//! "how do we broadcast around a *known* set of failures?". This module
+//! answers the harder operational question: a collective is running, a
+//! rank dies or a link drops mid-flight, and every survivor observes a
+//! *different* local symptom — one rank sees a structured timeout, its
+//! neighbors see nothing at all. Before anyone can re-plan, the survivors
+//! must first **agree on what failed**, because the degraded plan is a
+//! pure function of the failure set: if two ranks re-plan against
+//! different masks they execute different schedules and deadlock.
+//!
+//! ## The protocol
+//!
+//! [`bcast_resilient`] / [`allreduce_resilient`] run a bounded loop of
+//! *epochs*:
+//!
+//! 1. **Attempt** — run the collective (healthy schedule in epoch 0,
+//!    degraded re-plan afterwards) through an [`Epoched`] wrapper that
+//!    tags every frame with the epoch, so frames from an abandoned
+//!    attempt can never be mistaken for current ones.
+//! 2. **Agree** — every live rank (including the ones whose attempt
+//!    succeeded) joins [`agree_failures`]: an OR-gossip dissemination in
+//!    which each rank repeatedly exchanges its *suspected-failure edge
+//!    set* along the shift edges `rank ± 2^k`. Edge sets only grow
+//!    (monotone OR), timeouts during gossip are themselves recorded as
+//!    suspected edges, and after `SWEEPS` full sweeps every survivor
+//!    holds the same set — pinned by test. A rank is **agreed dead**
+//!    exactly when *all* of its gossip out-edges are suspected; dead
+//!    ranks are excluded from the next plan entirely.
+//! 3. **Retry** — a single agreed bit (the OR of "my attempt failed"
+//!    votes) decides whether the whole group re-runs. Ranks whose
+//!    attempt already delivered re-run too — that is what keeps the
+//!    group in lockstep — and byte-identity of the degraded schedules
+//!    guarantees they deliver the same bytes again.
+//!
+//! The killed rank itself observes [`TransportError::Fault`] and returns
+//! [`Resilient::Dead`]: its endpoint is gone and it cannot even gossip.
+//!
+//! ## Cross-phase frames
+//!
+//! A rank that failed early gossips while its peers are still deep in
+//! the collective, so gossip frames can arrive on a data receive and
+//! vice versa. Three rules keep the phases from corrupting each other:
+//!
+//! * a gossip frame received mid-collective is **stashed** and surfaced
+//!   as a structured timeout ("peer is in recovery") — the attempt
+//!   aborts, and the stashed frame is replayed to the agreement so the
+//!   per-pair FIFO count stays symmetric;
+//! * a data frame from a *newer* epoch is stashed the same way and
+//!   replayed to the next attempt;
+//! * frames from *older* epochs (and stray probe/barrier tokens) are
+//!   drained silently — their attempt was abandoned by agreement.
+//!
+//! Recovery epochs also run with doubled receive patience: detecting a
+//! failure costs one receive timeout, so survivors that already moved on
+//! must wait out their slower peers' detection latency instead of
+//! cascading false suspicions.
+//!
+//! ## Scope
+//!
+//! This machinery targets the point-to-point backends (thread, tcp, shm,
+//! and [`super::fault::FaultTransport`] over any of them). The lockstep
+//! sim/cost backends enforce a global round structure that a per-rank
+//! retry loop deliberately breaks; they fail fast rather than subtly.
+//! Agreement is exact for failures that are in place before the gossip
+//! starts (severed links, ranks dead before or during the attempt — the
+//! deterministic [`super::fault::FaultPlan`] scenarios). A failure that
+//! first manifests in the *final* gossip rounds can leave survivors with
+//! sets that disagree on the newest edge; the suspected sets are monotone
+//! across epochs, so the next attempt surfaces the gap and the following
+//! agreement closes it — at the cost of one more epoch from the budget.
+
+use super::{
+    BufferPool, FaultCtx, Payload, SendSpec, Transport, TransportError, GOSSIP_TAG,
+};
+use crate::collectives::degraded::{allreduce_circulant_degraded, bcast_circulant_degraded_with};
+use crate::collectives::generic::{allreduce_circulant, bcast_circulant_into};
+use crate::sched::{ceil_log2, DegradedBcastPlan, LinkMask};
+use std::collections::BTreeSet;
+
+/// Epoch tag stride: a collective tag `t` sent in epoch `e` travels as
+/// `e * EPOCH_STRIDE + t`. Collective tags are block indices (far below
+/// the stride) and retry budgets are single digits, so epoch-tagged
+/// frames stay far below the reserved control tags near `u64::MAX`.
+pub const EPOCH_STRIDE: u64 = 1 << 40;
+
+/// Full dissemination sweeps per agreement. One sweep discovers every
+/// in-place failure (each rank touches each of its shift edges once);
+/// the remaining sweeps spread the union to every survivor.
+const SWEEPS: usize = 3;
+
+/// Receive attempts per gossip slot: a peer that burned a receive
+/// timeout detecting the failure enters the agreement one timeout late,
+/// so waiting a single timeout for its frame is a coin flip.
+const GOSSIP_PATIENCE: u32 = 2;
+
+/// Default recovery budget for the resilient collectives: how many
+/// *additional* epochs (agree + re-run) may follow the first attempt.
+pub const DEFAULT_RETRY_BUDGET: u64 = 3;
+
+fn norm(a: u64, b: u64) -> (u64, u64) {
+    (a.min(b), a.max(b))
+}
+
+/// Frames that arrived in the wrong phase (gossip during a collective,
+/// next-epoch data during gossip), kept FIFO per sender and replayed to
+/// the phase they belong to. This is what keeps the per-pair frame
+/// counts symmetric when ranks cross phase boundaries at different
+/// times.
+#[derive(Debug, Default)]
+pub struct FrameStash {
+    frames: Vec<(u64, u64, Vec<u8>)>,
+}
+
+impl FrameStash {
+    /// An empty stash.
+    pub fn new() -> FrameStash {
+        FrameStash::default()
+    }
+
+    fn push(&mut self, from: u64, tag: u64, bytes: &[u8]) {
+        self.frames.push((from, tag, bytes.to_vec()));
+    }
+
+    /// Pop the oldest frame from `from` whose tag satisfies `pred`,
+    /// preserving the order of everything else.
+    fn take(&mut self, from: u64, pred: impl Fn(u64) -> bool) -> Option<(u64, Vec<u8>)> {
+        let i = self
+            .frames
+            .iter()
+            .position(|&(f, tag, _)| f == from && pred(tag))?;
+        let (_, tag, bytes) = self.frames.remove(i);
+        Some((tag, bytes))
+    }
+
+    /// Whether any frame from `from` is stashed.
+    fn has_from(&self, from: u64) -> bool {
+        self.frames.iter().any(|&(f, _, _)| f == from)
+    }
+}
+
+/// A transport view for one recovery epoch: outgoing collective tags are
+/// offset by `epoch * EPOCH_STRIDE`, stale frames are drained, and
+/// out-of-phase frames are stashed (see the module docs). Gossip frames
+/// arriving mid-collective abort the attempt with a structured timeout
+/// naming the recovering peer.
+pub struct Epoched<'a, T: ?Sized> {
+    inner: &'a mut T,
+    epoch: u64,
+    stash: &'a mut FrameStash,
+}
+
+impl<'a, T: Transport + ?Sized> Epoched<'a, T> {
+    /// Wrap `inner` for `epoch`, sharing the cross-phase `stash`.
+    pub fn new(inner: &'a mut T, epoch: u64, stash: &'a mut FrameStash) -> Epoched<'a, T> {
+        Epoched {
+            inner,
+            epoch,
+            stash,
+        }
+    }
+}
+
+impl<T: Transport + ?Sized> Transport for Epoched<'_, T> {
+    fn rank(&self) -> u64 {
+        self.inner.rank()
+    }
+
+    fn size(&self) -> u64 {
+        self.inner.size()
+    }
+
+    fn sendrecv_into(
+        &mut self,
+        send: Option<SendSpec<'_>>,
+        recv_from: Option<u64>,
+        recv_buf: &mut Vec<u8>,
+    ) -> Result<Option<u64>, TransportError> {
+        let mut send = send.map(|s| {
+            debug_assert!(
+                s.tag < EPOCH_STRIDE,
+                "collective tag {} collides with the epoch stride",
+                s.tag
+            );
+            SendSpec {
+                to: s.to,
+                tag: self.epoch * EPOCH_STRIDE + s.tag,
+                data: s.data,
+            }
+        });
+        let Some(from) = recv_from else {
+            return self.inner.sendrecv_into(send, None, recv_buf).map(|_| None);
+        };
+        // A frame for this slot may have been stashed while gossip from
+        // another peer was being handled — replay it.
+        let epoch = self.epoch;
+        if let Some((tag, bytes)) = self
+            .stash
+            .take(from, |tag| tag != GOSSIP_TAG && tag / EPOCH_STRIDE == epoch)
+        {
+            self.inner.sendrecv_into(send, None, recv_buf)?;
+            recv_buf.clear();
+            recv_buf.extend_from_slice(&bytes);
+            return Ok(Some(tag % EPOCH_STRIDE));
+        }
+        // Recovery epochs wait out one extra timeout: peers may lag by
+        // the receive timeout they burned detecting the failure.
+        let mut patience: u32 = if self.epoch == 0 { 1 } else { 2 };
+        loop {
+            match self.inner.sendrecv_into(send.take(), Some(from), recv_buf) {
+                Err(e) => {
+                    if patience > 1 && matches!(e, TransportError::Timeout { .. }) {
+                        patience -= 1;
+                        continue;
+                    }
+                    return Err(e);
+                }
+                Ok(None) => return Ok(None),
+                Ok(Some(tag)) if tag == GOSSIP_TAG => {
+                    self.stash.push(from, tag, recv_buf);
+                    return Err(TransportError::timeout_at(
+                        format!(
+                            "rank {}: peer {from} is gossiping a failure set — joining recovery",
+                            self.rank()
+                        ),
+                        FaultCtx::peer(from).with_epoch(self.epoch),
+                    ));
+                }
+                // Stray probe/barrier tokens above the gossip tag.
+                Ok(Some(tag)) if tag > GOSSIP_TAG => continue,
+                Ok(Some(tag)) if tag / EPOCH_STRIDE == self.epoch => {
+                    return Ok(Some(tag % EPOCH_STRIDE));
+                }
+                Ok(Some(tag)) if tag / EPOCH_STRIDE > self.epoch => {
+                    self.stash.push(from, tag, recv_buf);
+                    return Err(TransportError::timeout_at(
+                        format!(
+                            "rank {}: peer {from} already advanced to epoch {} — joining recovery",
+                            self.rank(),
+                            tag / EPOCH_STRIDE
+                        ),
+                        FaultCtx::peer(from).with_epoch(self.epoch),
+                    ));
+                }
+                // A frame from an abandoned earlier epoch — drain it.
+                Ok(Some(_)) => continue,
+            }
+        }
+    }
+
+    fn warm_up(&mut self) -> Result<(), TransportError> {
+        self.inner.warm_up()
+    }
+
+    fn warm_peers(&mut self, peers: &[u64]) -> Result<(), TransportError> {
+        self.inner.warm_peers(peers)
+    }
+
+    fn cost_hint(&self) -> super::CostHint {
+        self.inner.cost_hint()
+    }
+
+    fn barrier(&mut self) -> Result<(), TransportError> {
+        self.inner.barrier()
+    }
+}
+
+/// The outcome of one [`agree_failures`] round: identical on every
+/// survivor (pinned by test for in-place failures).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    /// Agreed severed links among the survivors (edges incident to dead
+    /// ranks are folded into `dead` instead).
+    pub mask: LinkMask,
+    /// Agreed dead ranks, ascending.
+    pub dead: Vec<u64>,
+    /// Whether any live rank's attempt failed this epoch — the group
+    /// re-runs iff this is set.
+    pub retry: bool,
+}
+
+fn encode_gossip(epoch: u64, retry: bool, edges: &BTreeSet<(u64, u64)>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + edges.len() * 16);
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&u64::from(retry).to_le_bytes());
+    out.extend_from_slice(&(edges.len() as u64).to_le_bytes());
+    for &(a, b) in edges {
+        out.extend_from_slice(&a.to_le_bytes());
+        out.extend_from_slice(&b.to_le_bytes());
+    }
+    out
+}
+
+fn decode_gossip(buf: &[u8]) -> Option<(u64, bool, Vec<(u64, u64)>)> {
+    if buf.len() < 24 || (buf.len() - 24) % 16 != 0 {
+        return None;
+    }
+    let u = |i: usize| u64::from_le_bytes(buf[i..i + 8].try_into().expect("8 bytes"));
+    let epoch = u(0);
+    let retry = match u(8) {
+        0 => false,
+        1 => true,
+        _ => return None,
+    };
+    let n = u(16) as usize;
+    if buf.len() != 24 + n * 16 {
+        return None;
+    }
+    let mut edges = Vec::with_capacity(n);
+    for i in 0..n {
+        edges.push((u(24 + i * 16), u(32 + i * 16)));
+    }
+    Some((epoch, retry, edges))
+}
+
+fn absorb_edges(set: &mut BTreeSet<(u64, u64)>, p: u64, edges: &[(u64, u64)]) {
+    for &(a, b) in edges {
+        if a < p && b < p && a != b {
+            set.insert(norm(a, b));
+        }
+    }
+}
+
+/// OR-gossip agreement on the failure set: every live rank calls this
+/// with its locally suspected edges (`observed` plus the accumulated
+/// `known_dead`) and its retry vote, and all of them return the same
+/// [`Membership`].
+///
+/// `SWEEPS` full sweeps of the dissemination shift graph (`rank ± 2^k`,
+/// `k < ⌈log₂ p⌉`): each slot sends the current suspected set tagged
+/// [`GOSSIP_TAG`] and ORs in the set received from the opposite
+/// neighbor. Slots over already-suspected edges are skipped on both
+/// sides (both endpoints suspect the same normalized edge, so the skip
+/// is symmetric once the sets converge); a timeout on a live slot adds
+/// that edge to the set, which is exactly how a dead rank becomes
+/// visible to its in-neighbors in the first sweep. A rank is agreed
+/// dead when all of its gossip out-edges `(x, x + 2^k)` are suspected.
+///
+/// The retry bit is only honored from frames of the *current* epoch;
+/// suspected edges are absorbed from any epoch (they are monotone facts).
+/// [`TransportError::Fault`] propagates — the caller itself is dead.
+pub fn agree_failures<T: Transport + ?Sized>(
+    t: &mut T,
+    epoch: u64,
+    observed: &LinkMask,
+    known_dead: &[u64],
+    want_retry: bool,
+    stash: &mut FrameStash,
+) -> Result<Membership, TransportError> {
+    let p = t.size();
+    let rank = t.rank();
+    if p < 2 {
+        return Ok(Membership {
+            mask: LinkMask::for_mesh(p),
+            dead: Vec::new(),
+            retry: false,
+        });
+    }
+    let q = ceil_log2(p);
+    let mut suspected: BTreeSet<(u64, u64)> = observed
+        .edges()
+        .iter()
+        .filter(|&&(a, b)| a < p && b < p)
+        .copied()
+        .collect();
+    // Re-seed the gossip edges of already-agreed-dead ranks so their
+    // deadness survives re-derivation (and their slots are skipped
+    // instead of timing out again every epoch).
+    for &x in known_dead {
+        if x >= p {
+            continue;
+        }
+        for k in 0..q {
+            let nb = (x + (1u64 << k)) % p;
+            if nb != x {
+                suspected.insert(norm(x, nb));
+            }
+        }
+    }
+    let mut retry = want_retry;
+    let mut buf = Vec::new();
+    for _sweep in 0..SWEEPS {
+        for k in 0..q {
+            let step = 1u64 << k;
+            let to = (rank + step) % p;
+            let from = (rank + p - step) % p;
+            if to == rank {
+                continue;
+            }
+            if !suspected.contains(&norm(rank, to)) {
+                let frame = encode_gossip(epoch, retry, &suspected);
+                match t.sendrecv_into(
+                    Some(SendSpec {
+                        to,
+                        tag: GOSSIP_TAG,
+                        data: Payload::Bytes(&frame),
+                    }),
+                    None,
+                    &mut buf,
+                ) {
+                    Ok(_) => {}
+                    Err(e @ TransportError::Fault { .. }) => return Err(e),
+                    Err(e) => {
+                        let peer = e.ctx().and_then(|c| c.peer).unwrap_or(to);
+                        suspected.insert(norm(rank, peer));
+                    }
+                }
+            }
+            if suspected.contains(&norm(rank, from)) {
+                continue;
+            }
+            // A gossip frame from `from` captured mid-collective?
+            let mut fulfilled = false;
+            while let Some((_, bytes)) = stash.take(from, |tag| tag == GOSSIP_TAG) {
+                match decode_gossip(&bytes) {
+                    None => {
+                        suspected.insert(norm(rank, from));
+                        fulfilled = true;
+                        break;
+                    }
+                    Some((fe, fr, edges)) => {
+                        absorb_edges(&mut suspected, p, &edges);
+                        if fe == epoch {
+                            if fr {
+                                retry = true;
+                            }
+                            fulfilled = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if fulfilled {
+                continue;
+            }
+            let mut patience = GOSSIP_PATIENCE;
+            loop {
+                match t.sendrecv_into(None, Some(from), &mut buf) {
+                    Err(e @ TransportError::Fault { .. }) => return Err(e),
+                    Err(TransportError::Timeout { .. }) if patience > 1 => {
+                        patience -= 1;
+                    }
+                    Err(_) | Ok(None) => {
+                        suspected.insert(norm(rank, from));
+                        break;
+                    }
+                    Ok(Some(tag)) if tag == GOSSIP_TAG => match decode_gossip(&buf) {
+                        None => {
+                            suspected.insert(norm(rank, from));
+                            break;
+                        }
+                        Some((fe, fr, edges)) => {
+                            absorb_edges(&mut suspected, p, &edges);
+                            if fe == epoch {
+                                if fr {
+                                    retry = true;
+                                }
+                                break;
+                            }
+                            // Stale gossip from an earlier epoch: keep
+                            // waiting for the current frame.
+                        }
+                    },
+                    // Stray probe/barrier tokens — drain.
+                    Ok(Some(tag)) if tag > GOSSIP_TAG => {}
+                    Ok(Some(tag)) if tag / EPOCH_STRIDE > epoch => {
+                        // Data for an attempt we have not started yet —
+                        // keep it for the next epoch's collective.
+                        stash.push(from, tag, &buf);
+                    }
+                    // Data from an abandoned attempt — drain.
+                    Ok(Some(_)) => {}
+                }
+            }
+        }
+    }
+    let mut dead: Vec<u64> = Vec::new();
+    for x in 0..p {
+        let gone = (0..q).all(|k| {
+            let nb = (x + (1u64 << k)) % p;
+            nb == x || suspected.contains(&norm(x, nb))
+        });
+        if gone {
+            dead.push(x);
+        }
+    }
+    let mut mask = LinkMask::for_mesh(p);
+    for &(a, b) in &suspected {
+        if dead.binary_search(&a).is_ok() || dead.binary_search(&b).is_ok() {
+            continue;
+        }
+        mask.sever(a, b);
+    }
+    Ok(Membership { mask, dead, retry })
+}
+
+/// What a resilient collective went through to deliver.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Recovery {
+    /// Recovery epochs consumed (0 = first attempt succeeded everywhere).
+    pub epochs: u64,
+    /// The agreed link mask in force at delivery.
+    pub mask: LinkMask,
+    /// The agreed dead ranks at delivery, ascending.
+    pub dead: Vec<u64>,
+}
+
+/// Outcome of a resilient collective on one rank.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Resilient<V> {
+    /// The collective delivered on this rank.
+    Delivered {
+        /// The collective's result.
+        value: V,
+        /// How delivery was reached.
+        recovery: Recovery,
+    },
+    /// This rank is out of the group: either its own endpoint faulted,
+    /// or the surviving majority agreed it was dead (all of its gossip
+    /// edges suspected) and re-planned without it.
+    Dead,
+}
+
+impl<V> Resilient<V> {
+    /// Whether this rank was excluded from the group.
+    pub fn is_dead(&self) -> bool {
+        matches!(self, Resilient::Dead)
+    }
+
+    /// The delivered value, if any.
+    pub fn value(&self) -> Option<&V> {
+        match self {
+            Resilient::Delivered { value, .. } => Some(value),
+            Resilient::Dead => None,
+        }
+    }
+
+    /// The recovery record, if delivery happened.
+    pub fn recovery(&self) -> Option<&Recovery> {
+        match self {
+            Resilient::Delivered { recovery, .. } => Some(recovery),
+            Resilient::Dead => None,
+        }
+    }
+
+    /// The delivered value, by value.
+    pub fn into_value(self) -> Option<V> {
+        match self {
+            Resilient::Delivered { value, .. } => Some(value),
+            Resilient::Dead => None,
+        }
+    }
+}
+
+/// How one attempt failed: `Fail` feeds the retry loop, `Fatal` ends it
+/// (the failure is a deterministic function of the *agreed* membership —
+/// e.g. a dead root — so every survivor raises the identical error at
+/// the identical point).
+enum Attempt {
+    Fail(TransportError),
+    Fatal(TransportError),
+}
+
+impl Attempt {
+    fn fail(e: TransportError) -> Attempt {
+        Attempt::Fail(e)
+    }
+}
+
+fn run_resilient<T, V, F>(t: &mut T, budget: u64, mut attempt: F) -> Result<Resilient<V>, TransportError>
+where
+    T: Transport + ?Sized,
+    F: FnMut(&mut Epoched<'_, T>, &LinkMask, &[u64]) -> Result<V, Attempt>,
+{
+    let p = t.size();
+    let rank = t.rank();
+    let mut mask = LinkMask::for_mesh(p);
+    let mut dead: Vec<u64> = Vec::new();
+    let mut stash = FrameStash::new();
+    let mut epoch: u64 = 0;
+    let mut recoveries: u64 = 0;
+    loop {
+        let outcome = {
+            let mut ep = Epoched::new(&mut *t, epoch, &mut stash);
+            attempt(&mut ep, &mask, dead.as_slice())
+        };
+        let (want_retry, value) = match outcome {
+            Ok(v) => (false, Some(v)),
+            Err(Attempt::Fatal(e)) => return Err(e),
+            Err(Attempt::Fail(e)) => {
+                if matches!(e, TransportError::Fault { .. }) {
+                    // Our own endpoint is gone — we cannot even gossip.
+                    return Ok(Resilient::Dead);
+                }
+                if let Some(peer) = e.ctx().and_then(|c| c.peer) {
+                    // Blame the link — unless the peer merely signalled
+                    // that it is already in recovery (its frame is
+                    // stashed), in which case the link is fine.
+                    if !stash.has_from(peer) {
+                        mask.sever(rank, peer);
+                    }
+                }
+                (true, None)
+            }
+        };
+        let membership = match agree_failures(t, epoch, &mask, &dead, want_retry, &mut stash) {
+            Ok(m) => m,
+            Err(e) if matches!(e, TransportError::Fault { .. }) => return Ok(Resilient::Dead),
+            Err(e) => return Err(e),
+        };
+        mask = membership.mask;
+        dead = membership.dead;
+        if dead.binary_search(&rank).is_ok() {
+            // The survivors agreed we are gone and will re-plan without
+            // us; participating further would corrupt their schedules.
+            return Ok(Resilient::Dead);
+        }
+        if !membership.retry {
+            if let Some(v) = value {
+                return Ok(Resilient::Delivered {
+                    value: v,
+                    recovery: Recovery {
+                        epochs: recoveries,
+                        mask,
+                        dead,
+                    },
+                });
+            }
+            // Our failure vote is ORed into our own retry bit, so a
+            // no-retry agreement without a value cannot happen; recover
+            // by treating it as one more epoch.
+            debug_assert!(false, "agreed no-retry but this rank has no value");
+        }
+        recoveries += 1;
+        if recoveries > budget {
+            return Err(TransportError::Collective(format!(
+                "rank {rank}: retry budget {budget} exhausted after {recoveries} recovery \
+                 epochs (mask {:?}, dead {:?})",
+                mask.edges(),
+                dead
+            )));
+        }
+        eprintln!(
+            "[recover] rank {rank}: epoch {epoch} failed; agreed mask {:?}, dead {:?} — retrying",
+            mask.edges(),
+            dead
+        );
+        epoch += 1;
+    }
+}
+
+/// Self-healing broadcast: run the `n`-block circulant broadcast of `m`
+/// bytes from `root`, and on any structured failure agree on the failure
+/// set with the other survivors, re-plan degraded, and re-run from the
+/// root's original payload — up to `budget` recovery epochs.
+///
+/// Returns [`Resilient::Dead`] on a rank whose own endpoint faulted or
+/// that the survivors agreed dead. Errors terminally when the root is
+/// agreed dead (its payload is unrecoverable), when the survivors are
+/// disconnected, or when the budget runs out.
+pub fn bcast_resilient<T: Transport + ?Sized>(
+    t: &mut T,
+    root: u64,
+    n: usize,
+    m: u64,
+    data: Option<&[u8]>,
+    budget: u64,
+) -> Result<Resilient<Vec<u8>>, TransportError> {
+    let p = t.size();
+    assert!(root < p, "root {root} out of range (p = {p})");
+    let mut pool = BufferPool::default();
+    run_resilient(t, budget, |ep, mask, dead| {
+        let mut out = Vec::new();
+        if mask.is_empty() && dead.is_empty() {
+            bcast_circulant_into(ep, root, n, m, data, &mut pool, &mut out).map_err(Attempt::fail)?;
+        } else {
+            if dead.binary_search(&root).is_ok() {
+                return Err(Attempt::Fatal(TransportError::Collective(format!(
+                    "resilient bcast: root {root} is agreed dead — its payload is unrecoverable"
+                ))));
+            }
+            let deg = DegradedBcastPlan::with_dead(p, root, n, mask.clone(), dead).map_err(|e| {
+                Attempt::Fatal(TransportError::Collective(format!("resilient bcast: {e}")))
+            })?;
+            bcast_circulant_degraded_with(ep, m, data, &deg, &mut pool, &mut out)
+                .map_err(Attempt::fail)?;
+        }
+        Ok(out)
+    })
+}
+
+/// Self-healing f32-sum allreduce: like [`bcast_resilient`], but the
+/// degraded re-run sums over the agreed survivors only (a dead rank's
+/// contribution is gone with it) in ascending rank order, byte-identical
+/// on every survivor.
+pub fn allreduce_resilient<T: Transport + ?Sized>(
+    t: &mut T,
+    n: usize,
+    mine: &[f32],
+    budget: u64,
+) -> Result<Resilient<Vec<f32>>, TransportError> {
+    run_resilient(t, budget, |ep, mask, dead| {
+        if mask.is_empty() && dead.is_empty() {
+            allreduce_circulant(ep, n, mine).map_err(Attempt::fail)
+        } else {
+            allreduce_circulant_degraded(ep, n, mine, mask, dead).map_err(Attempt::fail)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::fault::{FaultPlan, FaultTransport};
+    use crate::transport::thread::run_threads;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn payload(m: u64) -> Vec<u8> {
+        (0..m).map(|i| (i * 7 + 13) as u8).collect()
+    }
+
+    #[test]
+    fn gossip_frames_roundtrip() {
+        let mut edges = BTreeSet::new();
+        edges.insert((0, 1));
+        edges.insert((3, 6));
+        let frame = encode_gossip(4, true, &edges);
+        let (epoch, retry, got) = decode_gossip(&frame).expect("well-formed");
+        assert_eq!(epoch, 4);
+        assert!(retry);
+        assert_eq!(got, vec![(0, 1), (3, 6)]);
+        assert!(decode_gossip(&frame[..frame.len() - 1]).is_none(), "truncated");
+        assert!(decode_gossip(&[]).is_none(), "empty");
+    }
+
+    #[test]
+    fn healthy_bcast_is_delivered_with_no_recovery() {
+        let m = 40u64;
+        let want = payload(m);
+        let outcomes = run_threads(4, Duration::from_secs(2), move |mut t| {
+            let root_data = payload(m);
+            let data = if t.rank() == 0 {
+                Some(root_data.as_slice())
+            } else {
+                None
+            };
+            bcast_resilient(&mut t, 0, 2, m, data, 2)
+        })
+        .unwrap();
+        for (r, out) in outcomes.iter().enumerate() {
+            match out {
+                Resilient::Delivered { value, recovery } => {
+                    assert_eq!(value, &want, "rank {r}");
+                    assert_eq!(recovery.epochs, 0, "rank {r}: no recovery was needed");
+                    assert!(recovery.mask.is_empty(), "rank {r}");
+                    assert!(recovery.dead.is_empty(), "rank {r}");
+                }
+                Resilient::Dead => panic!("rank {r}: healthy run reported dead"),
+            }
+        }
+    }
+
+    #[test]
+    fn severed_link_recovers_in_one_epoch() {
+        let m = 64u64;
+        let want = payload(m);
+        let plan = Arc::new(FaultPlan::new().sever(0, 1));
+        let outcomes = run_threads(8, Duration::from_millis(400), move |t| {
+            let rank = t.rank();
+            let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_millis(80));
+            let root_data = payload(m);
+            let data = if rank == 0 {
+                Some(root_data.as_slice())
+            } else {
+                None
+            };
+            bcast_resilient(&mut ft, 0, 1, m, data, 3)
+        })
+        .unwrap();
+        let first = outcomes[0].recovery().expect("rank 0 delivered").clone();
+        assert!(first.epochs >= 1, "the severed link must force a recovery epoch");
+        assert!(first.mask.is_severed(0, 1), "the agreed mask must name the cut");
+        assert!(first.dead.is_empty(), "no rank died");
+        for (r, out) in outcomes.iter().enumerate() {
+            match out {
+                Resilient::Delivered { value, recovery } => {
+                    assert_eq!(value, &want, "rank {r}: payload must survive the cut");
+                    assert_eq!(recovery, &first, "rank {r}: membership must be agreed");
+                }
+                Resilient::Dead => panic!("rank {r}: no rank died in this scenario"),
+            }
+        }
+    }
+
+    #[test]
+    fn killed_rank_is_agreed_dead_and_survivors_recover() {
+        let m = 50u64;
+        let want = payload(m);
+        let plan = Arc::new(FaultPlan::new().kill(1, 0));
+        let outcomes = run_threads(5, Duration::from_millis(400), move |t| {
+            let rank = t.rank();
+            let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_millis(80));
+            let root_data = payload(m);
+            let data = if rank == 0 {
+                Some(root_data.as_slice())
+            } else {
+                None
+            };
+            bcast_resilient(&mut ft, 0, 2, m, data, 3)
+        })
+        .unwrap();
+        assert!(outcomes[1].is_dead(), "the killed rank must report dead");
+        let first = outcomes[0].recovery().expect("rank 0 delivered").clone();
+        assert!(first.epochs >= 1, "losing a forwarder must force a recovery epoch");
+        assert_eq!(first.dead, vec![1], "rank 1 must be agreed dead");
+        for (r, out) in outcomes.iter().enumerate() {
+            if r == 1 {
+                continue;
+            }
+            match out {
+                Resilient::Delivered { value, recovery } => {
+                    assert_eq!(value, &want, "rank {r}: payload must survive the kill");
+                    assert_eq!(recovery, &first, "rank {r}: membership must be agreed");
+                }
+                Resilient::Dead => panic!("rank {r}: survivor misreported dead"),
+            }
+        }
+    }
+
+    #[test]
+    fn killed_rank_allreduce_sums_the_survivors() {
+        let plan = Arc::new(FaultPlan::new().kill(2, 0));
+        let outcomes = run_threads(5, Duration::from_millis(400), move |t| {
+            let rank = t.rank();
+            let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_millis(80));
+            let mine = vec![(rank + 1) as f32; 3];
+            allreduce_resilient(&mut ft, 2, &mine, 3)
+        })
+        .unwrap();
+        assert!(outcomes[2].is_dead(), "the killed rank must report dead");
+        // Survivors 0, 1, 3, 4 contribute 1 + 2 + 4 + 5 = 12 per element.
+        let first = outcomes[0].recovery().expect("rank 0 delivered").clone();
+        assert_eq!(first.dead, vec![2]);
+        for (r, out) in outcomes.iter().enumerate() {
+            if r == 2 {
+                continue;
+            }
+            match out {
+                Resilient::Delivered { value, recovery } => {
+                    assert_eq!(value, &vec![12.0f32; 3], "rank {r}");
+                    assert_eq!(recovery, &first, "rank {r}: membership must be agreed");
+                }
+                Resilient::Dead => panic!("rank {r}: survivor misreported dead"),
+            }
+        }
+    }
+}

@@ -305,10 +305,10 @@ impl Segment {
     /// returned handle owns the file: dropping it unlinks `path`.
     pub fn create(path: &Path, p: u64, ring_cap: u64) -> Result<Segment, TransportError> {
         if p == 0 {
-            return Err(TransportError::Protocol("need at least one rank".into()));
+            return Err(TransportError::protocol("need at least one rank".into()));
         }
         if ring_cap < 1024 || ring_cap % 64 != 0 {
-            return Err(TransportError::Protocol(format!(
+            return Err(TransportError::protocol(format!(
                 "ring capacity {ring_cap} must be a multiple of 64, at least 1024"
             )));
         }
@@ -382,7 +382,7 @@ impl Segment {
         let magic = seg.hdr().magic.load(Ordering::Acquire);
         if magic != SEG_MAGIC {
             if magic != 0 {
-                return Err(TransportError::Protocol(format!(
+                return Err(TransportError::protocol(format!(
                     "segment {}: bad magic {magic:#x}",
                     path.display()
                 )));
@@ -445,10 +445,13 @@ impl Segment {
             let ring_bytes = RING_HDR_BYTES + self.ring_capacity();
             off = self.hdr().alloc_next.fetch_add(ring_bytes, Ordering::Relaxed);
             if off + ring_bytes > self.len as u64 {
-                return Err(TransportError::Protocol(format!(
-                    "segment {} arena exhausted allocating ring {from}->{to}",
-                    self.path.display()
-                )));
+                return Err(TransportError::protocol_at(
+                    format!(
+                        "segment {} arena exhausted allocating ring {from}->{to}",
+                        self.path.display()
+                    ),
+                    FaultCtx::peer(to),
+                ));
             }
             // Fresh pages of the sparse file are zero, which is exactly a
             // valid empty ring — no initialization pass needed.
@@ -622,6 +625,7 @@ impl RecvProgress {
         recv_buf: &mut Vec<u8>,
         rank: u64,
         from: u64,
+        round: u64,
     ) -> Result<bool, TransportError> {
         let mut progressed = false;
         if !self.parsed {
@@ -638,9 +642,12 @@ impl RecvProgress {
                 self.tag = u64::from_le_bytes(self.hdr[..8].try_into().expect("8 bytes"));
                 let len = u64::from_le_bytes(self.hdr[8..].try_into().expect("8 bytes"));
                 if len > MAX_FRAME {
-                    return Err(TransportError::Protocol(format!(
-                        "rank {rank}: oversized frame from {from}: {len} bytes — corrupt ring"
-                    )));
+                    return Err(TransportError::protocol_at(
+                        format!(
+                            "rank {rank}: oversized frame from {from}: {len} bytes — corrupt ring"
+                        ),
+                        FaultCtx::peer(from).with_round(round),
+                    ));
                 }
                 self.want = len as usize;
                 self.parsed = true;
@@ -698,7 +705,7 @@ impl ShmTransport {
     ) -> Result<ShmTransport, TransportError> {
         let p = seg.ranks();
         if rank >= p {
-            return Err(TransportError::Protocol(format!(
+            return Err(TransportError::protocol(format!(
                 "rank {rank} out of range for a {p}-rank segment"
             )));
         }
@@ -773,12 +780,15 @@ impl ShmTransport {
             let Payload::Bytes(data) = s.data else {
                 // Size-only payloads belong to the cost-model backends;
                 // this backend exists to move real bytes.
-                return Err(TransportError::Protocol(format!(
-                    "rank {}: virtual payload ({} bytes) on the shm backend \
-                     — use the sim/cost backend for size-only sweeps",
-                    self.rank,
-                    s.data.len()
-                )));
+                return Err(TransportError::protocol_at(
+                    format!(
+                        "rank {}: virtual payload ({} bytes) on the shm backend \
+                         — use the sim/cost backend for size-only sweeps",
+                        self.rank,
+                        s.data.len()
+                    ),
+                    FaultCtx::peer(s.to).with_round(round),
+                ));
             };
             tx = Some((s.to, self.tx_ring(s.to)?));
             sp = Some(SendProgress::new(s.tag, data));
@@ -803,7 +813,7 @@ impl ShmTransport {
             }
             if let (Some(st), Some(from)) = (rp.as_mut(), recv_from) {
                 if let Some(ring) = self.rx_ring(from) {
-                    progressed |= st.step(ring, recv_buf, self.rank, from)?;
+                    progressed |= st.step(ring, recv_buf, self.rank, from, round)?;
                     if st.done(recv_buf) {
                         let tag = st.tag;
                         rp = None;
@@ -980,19 +990,26 @@ impl Transport for ShmTransport {
 
     fn warm_up(&mut self) -> Result<(), TransportError> {
         // Pre-allocate the circulant rings this rank produces into, so
-        // first rounds skip the arena bump.
+        // first rounds skip the arena bump. Failures downgrade to a
+        // warning: the rings are allocated lazily on first use anyway.
         if self.p > 1 {
             let skips = crate::sched::Skips::new(self.p);
             for k in 0..skips.q() {
                 let to = skips.to_proc(self.rank, k);
                 let from = skips.from_proc(self.rank, k);
-                self.tx_ring(to)?;
-                self.tx_ring(from)?;
+                if let Err(e) = self.tx_ring(to).and_then(|_| self.tx_ring(from)) {
+                    super::warn_warm_up(self.rank, "ring pre-allocation", &e);
+                    return Ok(());
+                }
             }
         }
         // Measure α/β once (collective: every rank runs the same probe).
+        // A timed-out or faulted probe keeps the static hint.
         if self.measured.is_none() {
-            self.measured = super::measure_link_hint(self)?;
+            match super::measure_link_hint(self) {
+                Ok(h) => self.measured = h,
+                Err(e) => super::warn_warm_up(self.rank, "α/β probe", &e),
+            }
         }
         Ok(())
     }
@@ -1188,7 +1205,7 @@ mod tests {
         })
         .unwrap_err();
         match err {
-            TransportError::Protocol(msg) => {
+            TransportError::Protocol { msg, .. } => {
                 assert!(msg.contains("virtual payload"), "{msg}");
                 assert!(msg.contains("shm backend"), "{msg}");
             }

@@ -370,7 +370,7 @@ impl TcpTransport {
     ) -> Result<TcpTransport, TransportError> {
         assert!(rank < p, "rank must be < p");
         if addrs.len() as u64 != p {
-            return Err(TransportError::Protocol(format!(
+            return Err(TransportError::protocol(format!(
                 "listener map has {} entries, need p = {p}",
                 addrs.len()
             )));
@@ -447,7 +447,7 @@ impl TcpTransport {
                 .ok()
                 .and_then(|r16| base_port.checked_add(r16))
                 .ok_or_else(|| {
-                    TransportError::Protocol(format!(
+                    TransportError::protocol(format!(
                         "port range {base_port}..{base_port}+{p} exceeds 65535"
                     ))
                 })?;
@@ -683,14 +683,14 @@ impl TcpTransport {
                     let mut s = stream;
                     let magic = read_u64(&mut s)?;
                     if magic != MAGIC {
-                        return Err(TransportError::Protocol(format!(
+                        return Err(TransportError::protocol(format!(
                             "rank {}: bad hello magic {magic:#018x}",
                             self.rank
                         )));
                     }
                     let from = read_u64(&mut s)?;
                     if from <= self.rank || from >= self.p {
-                        return Err(TransportError::Protocol(format!(
+                        return Err(TransportError::protocol(format!(
                             "rank {}: hello from unexpected rank {from}",
                             self.rank
                         )));
@@ -703,7 +703,7 @@ impl TcpTransport {
                         // the slot frees up. Two parked hellos from one rank
                         // would mean a genuinely broken peer.
                         if self.pending_redials.iter().any(|&(r, _)| r == from) {
-                            return Err(TransportError::Protocol(format!(
+                            return Err(TransportError::protocol(format!(
                                 "rank {}: duplicate connection from rank {from}",
                                 self.rank
                             )));
@@ -816,7 +816,7 @@ impl TcpTransport {
     /// rejected — cost sweeps belong on the sim/cost backend.
     fn payload_bytes<'a>(&self, data: Payload<'a>) -> Result<&'a [u8], TransportError> {
         data.bytes().ok_or_else(|| {
-            TransportError::Protocol(format!(
+            TransportError::protocol(format!(
                 "rank {}: virtual payload ({} bytes) on the tcp backend \
                  — use the sim/cost backend for size-only sweeps",
                 self.rank,
@@ -860,12 +860,21 @@ impl Transport for TcpTransport {
     }
 
     fn warm_up(&mut self) -> Result<(), TransportError> {
-        self.warm_circulant()?;
+        // Pre-dialing is an optimization — links dial lazily on first use
+        // — so failures downgrade to a warning instead of killing the run.
+        if let Err(e) = self.warm_circulant() {
+            super::warn_warm_up(self.rank(), "pre-dial", &e);
+            return Ok(());
+        }
         // One-time α/β probe over the freshly-warmed ring links; the
         // consensus pass inside makes every rank adopt the same fit, so
-        // hint-driven resolution stays rank-uniform.
+        // hint-driven resolution stays rank-uniform. A timed-out or
+        // faulted probe keeps the static hint.
         if self.measured.is_none() {
-            self.measured = super::measure_link_hint(self)?;
+            match super::measure_link_hint(self) {
+                Ok(h) => self.measured = h,
+                Err(e) => super::warn_warm_up(self.rank(), "α/β probe", &e),
+            }
         }
         Ok(())
     }

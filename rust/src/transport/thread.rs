@@ -183,7 +183,7 @@ impl ThreadTransport {
             let Payload::Bytes(data) = s.data else {
                 // Size-only payloads belong to the cost-model backends;
                 // this backend exists to move real bytes.
-                return Err(TransportError::Protocol(format!(
+                return Err(TransportError::protocol(format!(
                     "rank {}: virtual payload ({} bytes) on the thread backend \
                      — use the sim/cost backend for size-only sweeps",
                     self.rank,

@@ -334,7 +334,7 @@ fn point_to_point_backends_reject_virtual_payloads() {
     })
     .unwrap_err();
     assert!(
-        matches!(err, TransportError::Protocol(ref m) if m.contains("virtual payload")),
+        matches!(err, TransportError::Protocol { ref msg, .. } if msg.contains("virtual payload")),
         "{err}"
     );
 }

@@ -32,6 +32,7 @@ use nblock_bcast::collectives::bcast_circulant_degraded;
 use nblock_bcast::collectives::generic::bcast_circulant;
 use nblock_bcast::sched::{verify_p, DegradedBcastPlan, LinkMask, Skips};
 use nblock_bcast::transport::fault::{FaultPlan, FaultTransport};
+use nblock_bcast::transport::recover::{bcast_resilient, Recovery, Resilient, DEFAULT_RETRY_BUDGET};
 use nblock_bcast::transport::tcp::run_tcp;
 use nblock_bcast::transport::thread::run_threads;
 use nblock_bcast::transport::{Payload, SendSpec, Transport, TransportError};
@@ -504,4 +505,218 @@ fn release_sweep_schedule_invariants_and_masked_reroutes() {
         .unwrap()
         .verify()
         .unwrap();
+}
+
+/// Run one degraded broadcast over the thread backend and assert every
+/// rank's delivery is byte-identical to the healthy payload.
+fn assert_degraded_delivers(p: u64, n: usize, root: u64, mask: &LinkMask, reference: &[u8]) {
+    let out = run_threads(p, Duration::from_secs(30), |mut t| {
+        let rank = t.rank();
+        let data = if rank == root { Some(reference) } else { None };
+        bcast_circulant_degraded(&mut t, root, n, reference.len() as u64, data, mask)
+    })
+    .unwrap_or_else(|e| panic!("p={p} mask={:?}: {e}", mask.edges()));
+    for (r, o) in out.iter().enumerate() {
+        assert_eq!(
+            o.as_slice(),
+            reference,
+            "p={p} mask={:?}: rank {r} not byte-identical to healthy",
+            mask.edges()
+        );
+    }
+}
+
+/// Every 2-edge mask at p ∈ {8, 16} delivers byte-identically — release
+/// tier (190 + 1540 masked meshes). Two cut edges can never disconnect
+/// the ≥ 5-regular circulant, so every plan must build and deliver.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-tier matrix: cargo test --release --test faults"
+)]
+fn release_sweep_all_two_edge_masks_deliver() {
+    let n = 3usize;
+    let root = 1u64;
+    for p in [8u64, 16] {
+        let reference = payload(768, p);
+        let edges = circulant_edges(p);
+        for i in 0..edges.len() {
+            for j in (i + 1)..edges.len() {
+                let mask = LinkMask::from_edges([edges[i], edges[j]]);
+                assert_degraded_delivers(p, n, root, &mask, &reference);
+            }
+        }
+    }
+}
+
+/// 64 seeded random masks of ≤ q−1 edges at p ∈ {33, 64} — release tier.
+/// Up to q−1 cuts leave every rank with live incident links and the
+/// survivor graph connected, so delivery must stay byte-identical; the
+/// seed in the panic message replays any failing mask.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-tier matrix: cargo test --release --test faults"
+)]
+fn release_sweep_random_multi_edge_masks_deliver() {
+    let n = 3usize;
+    let root = 0u64;
+    for p in [33u64, 64] {
+        let q = Skips::new(p).q() as u64;
+        let edges = circulant_edges(p);
+        let reference = payload(900, p);
+        let sweep_seed = 0xFA_117u64 ^ p;
+        let mut rng = XorShift::new(sweep_seed);
+        for case in 0..64u32 {
+            let cuts = rng.range(1, q - 1);
+            let mut mask = LinkMask::for_mesh(p);
+            for _ in 0..cuts {
+                let (a, b) = edges[rng.below(edges.len() as u64) as usize];
+                mask.sever(a, b);
+            }
+            assert!(
+                mask.len() <= (q - 1) as usize,
+                "p={p} case={case} [seed {sweep_seed:#x}]: mask grew past q-1"
+            );
+            assert_degraded_delivers(p, n, root, &mask, &reference);
+        }
+    }
+}
+
+/// Every single non-root kill at p ∈ {7, 16} with `--resilient` retry —
+/// release tier. The victim must come back agreed dead, every survivor
+/// must deliver the root's original payload byte-identically, and the
+/// agreement overlay must yield the *identical* membership record
+/// (epochs, mask, dead set) on every survivor.
+#[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "release-tier matrix: cargo test --release --test faults"
+)]
+fn release_sweep_every_nonroot_kill_recovers_with_agreed_membership() {
+    let n = 2usize;
+    let root = 0u64;
+    for p in [7u64, 16] {
+        let rounds = (n - 1 + Skips::new(p).q()) as u64;
+        let reference = payload(600, p);
+        for victim in 1..p {
+            let round = victim % rounds;
+            let plan = Arc::new(FaultPlan::new().kill(victim, round));
+            let res = run_threads(p, Duration::from_secs(30), |t| {
+                let rank = t.rank();
+                let mut ft = FaultTransport::new(t, plan.clone(), Duration::from_millis(250));
+                let data = if rank == root { Some(&reference[..]) } else { None };
+                bcast_resilient(&mut ft, root, n, reference.len() as u64, data, DEFAULT_RETRY_BUDGET)
+            })
+            .unwrap_or_else(|e| panic!("p={p} kill={victim}@{round}: {e}"));
+            let mut agreed: Option<&Recovery> = None;
+            for (r, out) in res.iter().enumerate() {
+                if r as u64 == victim {
+                    assert!(
+                        out.is_dead(),
+                        "p={p} kill={victim}@{round}: the victim must report itself dead"
+                    );
+                    continue;
+                }
+                match out {
+                    Resilient::Delivered { value, recovery } => {
+                        assert_eq!(
+                            value, &reference,
+                            "p={p} kill={victim}@{round}: rank {r} not byte-identical"
+                        );
+                        assert_eq!(
+                            recovery.dead,
+                            vec![victim],
+                            "p={p} kill={victim}@{round}: rank {r} agreed dead set"
+                        );
+                        assert!(
+                            recovery.epochs >= 1,
+                            "p={p} kill={victim}@{round}: rank {r} claims zero-cost recovery"
+                        );
+                        match agreed {
+                            None => agreed = Some(recovery),
+                            Some(first) => assert_eq!(
+                                first, recovery,
+                                "p={p} kill={victim}@{round}: rank {r} membership diverges \
+                                 from the other survivors"
+                            ),
+                        }
+                    }
+                    Resilient::Dead => {
+                        panic!("p={p} kill={victim}@{round}: survivor {r} wrongly went dead")
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The fault matrix wraps shm too: a severed circulant edge over one
+/// shared-memory segment reroutes byte-identically through the repair
+/// waves, same as thread and TCP.
+#[cfg(unix)]
+#[test]
+fn shm_severed_edge_reroutes() {
+    use nblock_bcast::transport::shm::run_shm;
+    let p = 5u64;
+    let reference = payload(2048, 31);
+    let mask = LinkMask::from_edges([(1u64, 2u64)]);
+    let out = run_shm(p, Duration::from_secs(30), |mut t| {
+        let rank = t.rank();
+        let data = if rank == 0 { Some(&reference[..]) } else { None };
+        bcast_circulant_degraded(&mut t, 0, 3, reference.len() as u64, data, &mask)
+    })
+    .unwrap_or_else(|e| panic!("shm sever=1-2: {e}"));
+    for (r, o) in out.iter().enumerate() {
+        assert_eq!(o, &reference, "shm sever=1-2: rank {r}");
+    }
+}
+
+/// Resilient recovery across shm ranks: a mid-collective kill is agreed
+/// dead by every survivor (identical membership record) and the re-run
+/// delivers the root's original payload. Timeouts are the only failure
+/// signal on shm — a dead peer's ring simply stays empty — so this also
+/// pins the timeout-driven suspicion path end to end.
+#[cfg(unix)]
+#[test]
+fn shm_kill_is_agreed_dead_with_resilient_recovery() {
+    use nblock_bcast::transport::shm::run_shm;
+    let p = 5u64;
+    let victim = 2u64;
+    let reference = payload(512, 41);
+    let plan = Arc::new(FaultPlan::new().kill(victim, 1));
+    // Short per-op deadline: every suspicion on shm costs a full recv
+    // timeout (patience 2), so the deadline bounds the recovery wall time.
+    let deadline = Duration::from_millis(250);
+    let res = run_shm(p, deadline, |t| {
+        let rank = t.rank();
+        let mut ft = FaultTransport::new(t, plan.clone(), deadline);
+        let data = if rank == 0 { Some(&reference[..]) } else { None };
+        bcast_resilient(&mut ft, 0, 2, reference.len() as u64, data, DEFAULT_RETRY_BUDGET)
+    })
+    .unwrap_or_else(|e| panic!("shm kill={victim}@1: {e}"));
+    assert!(
+        res[victim as usize].is_dead(),
+        "shm kill={victim}@1: the victim must report itself dead"
+    );
+    let mut agreed: Option<&Recovery> = None;
+    for (r, out) in res.iter().enumerate() {
+        if r as u64 == victim {
+            continue;
+        }
+        match out {
+            Resilient::Delivered { value, recovery } => {
+                assert_eq!(value, &reference, "shm kill={victim}@1: rank {r}");
+                assert_eq!(recovery.dead, vec![victim], "shm kill={victim}@1: rank {r}");
+                match agreed {
+                    None => agreed = Some(recovery),
+                    Some(first) => assert_eq!(
+                        first, recovery,
+                        "shm kill={victim}@1: rank {r} membership diverges"
+                    ),
+                }
+            }
+            Resilient::Dead => panic!("shm kill={victim}@1: survivor {r} wrongly went dead"),
+        }
+    }
 }

@@ -660,7 +660,7 @@ mod shm_and_hier {
         })
         .unwrap_err();
         match err {
-            TransportError::Protocol(msg) => {
+            TransportError::Protocol { msg, .. } => {
                 assert!(msg.contains("virtual payload"), "{msg}");
                 assert!(msg.contains("shm"), "{msg}");
             }
